@@ -1,0 +1,62 @@
+//! Simulator + application benchmarks — regenerates Fig 13/14/15 and
+//! measures the simulator's own throughput (it must stay cheap enough
+//! to run inside the adaptive controller's decision loop).
+//!
+//!     cargo bench --offline --bench gpusim
+
+use epgraph::apps;
+use epgraph::experiments as exp;
+use epgraph::gpusim::{cache::SetAssocLru, sim_original, sim_task_graph, GpuConfig};
+use epgraph::partition::Method;
+use epgraph::sparse::cpack;
+use epgraph::util::benchkit::bench;
+
+fn main() {
+    let seed = 42;
+    let gpu = GpuConfig::default();
+
+    println!("## simulator throughput\n");
+    {
+        let app = apps::cfd(110, seed);
+        let g = &app.graph;
+        let p = Method::Ep.partition(g, g.m().div_ceil(256), seed);
+        let layout = cpack::cpack_graph(g, &p);
+
+        let s = bench("sim_original (cfd, 36k tasks)", 2, 10, || {
+            sim_original(&gpu, g, 256)
+        });
+        println!("{}", s.row());
+
+        let s = bench("sim_task_graph smem (cfd, 36k tasks)", 2, 10, || {
+            sim_task_graph(&gpu, g, &p, Some(&layout), true)
+        });
+        println!("{}", s.row());
+
+        let s = bench("sim_task_graph tex (cfd, 36k tasks)", 2, 10, || {
+            sim_task_graph(&gpu, g, &p, Some(&layout), false)
+        });
+        println!("{}", s.row());
+
+        let s = bench("texture cache 1M accesses", 1, 5, || {
+            let mut c = SetAssocLru::new(48 * 1024, 32, 4);
+            let mut acc = 0u64;
+            for i in 0..1_000_000u32 {
+                if c.access_elem(i % 40_000, 4) {
+                    acc += 1;
+                }
+            }
+            acc
+        });
+        println!("{}", s.row());
+    }
+
+    println!("\n## Fig 13/14/15: application suite (original vs EP-adapt)\n");
+    let cases = exp::fig13_cases(&gpu, seed);
+    exp::fig13_table(&cases).print();
+    println!();
+    exp::fig14_table(&cases).print();
+    println!();
+    exp::fig15_table(&cases).print();
+
+    println!("\n## headline: {}", exp::redundancy_headline(seed));
+}

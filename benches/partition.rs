@@ -1,0 +1,64 @@
+//! Partitioner benchmarks — regenerates Fig 6 (method comparison),
+//! the partition-time scaling claim ("orders of magnitude faster than
+//! hypergraph"), and the DESIGN.md ablations.
+//!
+//!     cargo bench --offline --bench partition
+//!
+//! criterion is unavailable offline; this uses the in-repo harness
+//! (epgraph::util::benchkit) with warmup + multi-iteration stats.
+
+use epgraph::experiments as exp;
+use epgraph::partition::{ep, hypergraph, Method};
+use epgraph::sparse::gen;
+use epgraph::util::benchkit::bench;
+
+fn main() {
+    let seed = 42;
+
+    println!("## partitioner micro-benchmarks (per-call latency)\n");
+    for (name, a) in [
+        ("mc2depi_s(96)", gen::mc2depi_s(96, seed)),
+        ("scircuit_s(8192)", gen::scircuit_s(8192, seed + 7)),
+        ("cant_s(2048)", gen::cant_s(2048, seed)),
+    ] {
+        let g = a.affinity_graph();
+        let k = g.m().div_ceil(exp::BLOCK_SIZE).max(2);
+        println!("{name}: n={} m={} k={k}", g.n, g.m());
+
+        let s = bench("  ep::task_graph (transform)", 1, 10, || {
+            ep::task_graph(&g, ep::ChainOrder::Index, seed)
+        });
+        println!("{}", s.row());
+
+        let s = bench("  ep::partition_edges (full EP)", 1, 5, || {
+            let mut o = ep::EpOpts::default();
+            o.vp.seed = seed;
+            ep::partition_edges(&g, k, &o)
+        });
+        println!("{}", s.row());
+
+        let s = bench("  powergraph greedy", 1, 5, || {
+            Method::PgGreedy.partition(&g, k, seed)
+        });
+        println!("{}", s.row());
+
+        let s = bench("  hypergraph (baseline)", 0, 2, || {
+            hypergraph::partition_edges(
+                &g,
+                k,
+                &hypergraph::HpOpts { seed, ..Default::default() },
+            )
+        });
+        println!("{}", s.row());
+        println!();
+    }
+
+    println!("## Fig 6: partition model comparison (quality + one-shot time)\n");
+    exp::fig6_table(&exp::fig6_partition(seed)).print();
+
+    println!("\n## partition-time scaling (EP vs HP as graphs grow)\n");
+    exp::partition_scaling_table(seed).print();
+
+    println!("\n## ablations (DESIGN.md §6)\n");
+    exp::ablation_table(seed).print();
+}

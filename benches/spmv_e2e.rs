@@ -1,0 +1,90 @@
+//! End-to-end SPMV/CG benchmarks — regenerates Table 2, Fig 10, Fig 11,
+//! Fig 12 and Table 3, plus PJRT hot-path latencies (the L3 perf-pass
+//! targets of EXPERIMENTS.md §Perf).
+//!
+//!     make artifacts && cargo bench --offline --bench spmv_e2e
+
+use epgraph::coordinator::{run_cg, CgRunConfig};
+use epgraph::experiments as exp;
+use epgraph::gpusim::GpuConfig;
+use epgraph::partition::Method;
+use epgraph::runtime::{default_artifacts_dir, Engine, SpmvExec};
+use epgraph::sparse::{gen, pack_blocked, BlockedShape};
+use epgraph::util::benchkit::bench;
+use epgraph::util::rng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let seed = 42;
+    let gpu = GpuConfig::default();
+
+    println!("## PJRT hot path (request-path latency, CPU PJRT)\n");
+    {
+        let mut engine = Engine::load(&default_artifacts_dir())?;
+        let a = gen::spd_poisson(64); // 4096 unknowns
+        let g = a.affinity_graph();
+        let p = Method::Ep.partition(&g, 40, seed);
+        let blocked = pack_blocked(
+            &a,
+            &p,
+            BlockedShape { n_in: 4096, n_out: 4096, k: 40, e: 1024, c: 1024 },
+        )?;
+        let mut rng = Pcg32::new(seed);
+        let x: Vec<f32> = (0..a.ncols).map(|_| rng.gen_f32()).collect();
+
+        let t0 = std::time::Instant::now();
+        let exec = SpmvExec::prepare(&mut engine, &blocked)?;
+        println!("artifact compile+prepare (config {}): {:?}", exec.config(), t0.elapsed());
+
+        let s = bench("spmv execute (pjrt, 4096x4096 ~20k nnz)", 3, 20, || {
+            exec.run(&x).unwrap()
+        });
+        println!("{}", s.row());
+
+        let s = bench("spmv reference (rust blocked interpreter)", 3, 20, || {
+            blocked.execute_ref(&x)
+        });
+        println!("{}", s.row());
+
+        let s = bench("coo spmv (plain rust loop)", 3, 20, || a.spmv(&x));
+        println!("{}", s.row());
+    }
+
+    println!("\n## full CG solve (EP-adapt, PJRT numerics + simulator)\n");
+    {
+        let mut engine = Engine::load(&default_artifacts_dir())?;
+        let a = gen::spd_poisson(64);
+        let mut rng = Pcg32::new(7);
+        let rhs: Vec<f32> = (0..a.nrows).map(|_| rng.gen_f32() - 0.5).collect();
+        for wait in [false, true] {
+            let cfg = CgRunConfig {
+                block_size: 512,
+                max_iters: 300,
+                wait_for_optimizer: wait,
+                ..Default::default()
+            };
+            let r = run_cg(&mut engine, &a, &rhs, &cfg)?;
+            println!(
+                "{}: {} iters, wall {:?}, sim speedup {:?}, fell_back {}",
+                if wait { "EP-ideal" } else { "EP-adapt" },
+                r.iterations,
+                r.wall_time,
+                r.kernel_speedup().map(|s| format!("{s:.2}x")),
+                r.fell_back
+            );
+        }
+    }
+
+    println!("\n## Table 2 + Fig 10/11/12 (simulated GPU, 8-matrix suite)\n");
+    let cases = exp::table2_cases(&gpu, seed);
+    exp::table2_table(&cases).print();
+    println!();
+    exp::fig10_table(&cases).print();
+    println!();
+    exp::fig11_table(&cases).print();
+    println!();
+    exp::fig12_table(&cases).print();
+
+    println!("\n## Table 3: block-size sweep\n");
+    exp::table3_table(&gpu, seed).print();
+    Ok(())
+}

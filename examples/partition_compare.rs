@@ -1,0 +1,73 @@
+//! Partition-model shoot-out (paper Fig 6) plus the kernel-splitting
+//! path for single-launch kernels (§4.2).
+//!
+//!     cargo run --release --offline --example partition_compare
+//!
+//! Also demonstrates reading a real MatrixMarket file:
+//!     cargo run --release --offline --example partition_compare -- path/to/matrix.mtx
+
+use std::time::Duration;
+
+use epgraph::coordinator::{run_with_splitting_at, OptOptions};
+use epgraph::experiments as exp;
+use epgraph::gpusim::{sim_original, GpuConfig};
+use epgraph::sparse::matrix_market;
+
+fn main() {
+    let seed = 42;
+
+    if let Some(path) = std::env::args().nth(1) {
+        println!("== user matrix: {path} ==");
+        match matrix_market::read_matrix_market_file(&path) {
+            Ok(a) => {
+                let gpu = GpuConfig::default();
+                let case = exp::spmv_case(&gpu, &path, &a, exp::BLOCK_SIZE, seed);
+                exp::fig10_table(&[case]).print();
+            }
+            Err(e) => eprintln!("could not read {path}: {e}"),
+        }
+        return;
+    }
+
+    println!("== Fig 6: partition model comparison (synthetic suite) ==");
+    let rows = exp::fig6_partition(seed);
+    exp::fig6_table(&rows).print();
+
+    println!("\nshape checks vs the paper:");
+    for r in &rows {
+        let ep_ok = r.ep_q <= r.hp_q * 2;
+        let fast = r.ep_time < r.hp_time;
+        let junk = r.random_q > r.default_q;
+        println!(
+            "  {:<12} EP~HP quality: {:<5} EP faster: {:<5} random worse than default: {}",
+            r.name, ep_ok, fast, junk
+        );
+    }
+
+    // kernel splitting: a single-launch kernel still benefits
+    println!("\n== kernel splitting (single-launch kernel, §4.2) ==");
+    let g = epgraph::graph::gen::cfd_mesh(96, 96, 3);
+    let gpu = GpuConfig::default();
+    let block = 256;
+    let base = sim_original(&gpu, &g, block).cycles;
+    println!("unsplit original kernel: {base} cycles");
+    for splits in [2usize, 4, 8, 16] {
+        // model the paper-scale ratio: optimization lands 25% into the kernel
+        let opt_t = Duration::from_nanos(base / 4);
+        let r = run_with_splitting_at(
+            &gpu,
+            &g,
+            block,
+            splits,
+            &OptOptions { k: g.m().div_ceil(block), ..Default::default() },
+            Some(opt_t),
+        );
+        println!(
+            "  {splits:>2} splits: {} orig + {} opt chunks -> {} cycles ({:.2}x vs unsplit)",
+            r.chunks_original,
+            r.chunks_optimized,
+            r.total_cycles,
+            r.speedup()
+        );
+    }
+}

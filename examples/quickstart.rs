@@ -1,0 +1,75 @@
+//! Quickstart: build a data-affinity graph, partition it with the EP
+//! model, and compare the schedule against every baseline.
+//!
+//!     cargo run --release --offline --example quickstart
+//!
+//! This walks the paper's Fig 1/Fig 3 story end to end on a cfd-style
+//! interaction mesh: tasks (particle interactions) are edges; the EP
+//! model clusters them into thread blocks so each particle is loaded
+//! into as few blocks as possible.
+
+use epgraph::graph::{gen, stats};
+use epgraph::gpusim::{sim_original, sim_task_graph, GpuConfig};
+use epgraph::partition::{quality, Method};
+use epgraph::sparse::cpack;
+use epgraph::util::benchkit::Table;
+
+fn main() {
+    // a cfd-like particle-interaction mesh (paper Fig 1)
+    let g = gen::cfd_mesh(64, 64, 7);
+    println!(
+        "cfd-style mesh: {} particles, {} interactions, avg reuse {:.2}",
+        g.n,
+        g.m(),
+        g.avg_degree()
+    );
+
+    // the §1 headline: how many loads are redundant under the default
+    // schedule?
+    let block_size = 256;
+    let k = g.m().div_ceil(block_size);
+    let default = Method::Default.partition(&g, k, 0);
+    println!(
+        "default schedule: {:.1}% of particle loads are redundant\n",
+        stats::redundant_load_fraction(&g, &default.assign, k) * 100.0
+    );
+
+    // compare all schedulers: quality = Σ_v (p_v − 1), the number of
+    // redundant loads (Definition 2)
+    let gpu = GpuConfig::default();
+    let mut table = Table::new(&["method", "vertex-cut cost", "balance", "sim cycles", "read tx"]);
+    for method in Method::ALL {
+        let t0 = std::time::Instant::now();
+        let p = method.partition(&g, k, 42);
+        let dt = t0.elapsed();
+        let layout = cpack::cpack_graph(&g, &p);
+        let sim = sim_task_graph(&gpu, &g, &p, Some(&layout), true);
+        table.row(&[
+            format!("{} ({:.1}ms)", method.name(), dt.as_secs_f64() * 1e3),
+            quality::vertex_cut_cost(&g, &p).to_string(),
+            format!("{:.3}", quality::balance_factor(&p)),
+            sim.cycles.to_string(),
+            sim.read_transactions.to_string(),
+        ]);
+    }
+    // the untransformed kernel (no staging, no relayout)
+    let orig = sim_original(&gpu, &g, block_size);
+    table.row(&[
+        "original kernel".into(),
+        quality::vertex_cut_cost(&g, &default).to_string(),
+        "1.000".into(),
+        orig.cycles.to_string(),
+        orig.read_transactions.to_string(),
+    ]);
+    table.print();
+
+    println!("\nReading the table:");
+    println!(" * EP posts the lowest vertex-cut cost of any partitioner —");
+    println!("   the fewest redundant loads (the paper's Definition 2 claim).");
+    println!(" * every staged/cpacked schedule crushes the original kernel;");
+    println!("   on a row-major mesh even the default chunking stages well");
+    println!("   (the paper sees the same on cant — when default quality is");
+    println!("   close to EP's, adaptive control simply keeps the winner).");
+    println!(" * random/greedy (PowerGraph) are worse than default — the");
+    println!("   paper's argument for a real partitioner.");
+}

@@ -1,0 +1,116 @@
+"""AOT: lower the L2 model to HLO *text* artifacts + manifest.json.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the rust `xla` crate's
+bundled xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`).  The text
+parser reassigns ids, so text round-trips cleanly
+(see /opt/xla-example/gen_hlo.py).
+
+Usage (from python/):  python -m compile.aot --outdir ../artifacts
+Idempotent: skips configs whose artifact already exists unless --force.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def spmv_specs(cfg):
+    f32, i32 = jnp.float32, jnp.int32
+    return (
+        _spec((cfg.n_in,), f32),
+        _spec((cfg.k, cfg.c), i32),
+        _spec((cfg.k, cfg.e), i32),
+        _spec((cfg.k, cfg.e), f32),
+        _spec((cfg.k, cfg.e), i32),
+    )
+
+
+def cg_specs(cfg):
+    f32 = jnp.float32
+    n = cfg.n_out
+    return (
+        _spec((n,), f32), _spec((n,), f32), _spec((n,), f32),
+        _spec((), f32),
+    ) + spmv_specs(cfg)[1:]
+
+
+def lower_config(cfg, outdir, force=False):
+    """Lower spmv + cg_step for one config; returns manifest entries."""
+    entries = []
+    for tag, entry_fn, specs in (
+        ("spmv", model.spmv_entry(cfg), spmv_specs(cfg)),
+        ("cg_step", model.cg_entry(cfg), cg_specs(cfg)),
+    ):
+        fname = f"{tag}_{cfg.name}.hlo.txt"
+        path = os.path.join(outdir, fname)
+        if force or not os.path.exists(path):
+            lowered = jax.jit(entry_fn).lower(*specs)
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"  wrote {fname} ({len(text)} chars)")
+        else:
+            print(f"  kept  {fname}")
+        with open(path) as f:
+            digest = hashlib.sha256(f.read().encode()).hexdigest()[:16]
+        entries.append({
+            "entry": tag,
+            "config": cfg.name,
+            "file": fname,
+            "sha256_16": digest,
+            "n_in": cfg.n_in,
+            "n_out": cfg.n_out,
+            "k": cfg.k,
+            "e": cfg.e,
+            "c": cfg.c,
+            "vmem_bytes_per_block": cfg.vmem_bytes_per_block(),
+        })
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--configs", default="",
+                    help="comma-separated config names (default: all)")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    wanted = [c.strip() for c in args.configs.split(",") if c.strip()]
+    cfgs = [configs.BY_NAME[n] for n in wanted] if wanted else configs.CONFIGS
+
+    entries = []
+    for cfg in cfgs:
+        print(f"config {cfg.name}: n={cfg.n_in} k={cfg.k} e={cfg.e} c={cfg.c}")
+        entries.extend(lower_config(cfg, args.outdir, force=args.force))
+
+    manifest = {"format": "hlo-text", "version": 1, "artifacts": entries}
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(entries)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

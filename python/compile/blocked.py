@@ -1,0 +1,44 @@
+"""Build BlockedSpmv operands from a COO matrix + an edge partition.
+
+This mirrors (in numpy, for the test suite only) what the rust
+coordinator does at runtime in `rust/src/sparse/blocked.rs`: given an
+assignment of each nonzero (task) to a thread block, emit the padded
+gather-list format the AOT kernel consumes.
+
+Never imported on the request path — tests and aot-time sanity only.
+"""
+
+import numpy as np
+
+
+def build_blocked(rows, cols, vals, assign, k, e, c, n_out):
+    """Pack a COO matrix into the blocked gather format.
+
+    rows, cols, vals : np arrays of the nnz tasks
+    assign           : np array, block id per task (0..k-1)
+    k, e, c          : config limits (blocks, tasks/block, staged/block)
+    n_out            : dump slot index for padding tasks
+
+    Returns (x_gather[k,c], cols_local[k,e], vals_p[k,e], rows_global[k,e]).
+    Raises ValueError if any block exceeds e tasks or c unique columns.
+    """
+    x_gather = np.zeros((k, c), dtype=np.int32)
+    cols_local = np.zeros((k, e), dtype=np.int32)
+    vals_p = np.zeros((k, e), dtype=np.float32)
+    rows_global = np.full((k, e), n_out, dtype=np.int32)
+
+    order = np.argsort(assign, kind="stable")
+    bounds = np.searchsorted(assign[order], np.arange(k + 1))
+    for b in range(k):
+        idx = order[bounds[b]:bounds[b + 1]]
+        if len(idx) > e:
+            raise ValueError(f"block {b}: {len(idx)} tasks > e={e}")
+        bcols = cols[idx]
+        uniq, local = np.unique(bcols, return_inverse=True)
+        if len(uniq) > c:
+            raise ValueError(f"block {b}: {len(uniq)} staged > c={c}")
+        x_gather[b, :len(uniq)] = uniq
+        cols_local[b, :len(idx)] = local
+        vals_p[b, :len(idx)] = vals[idx]
+        rows_global[b, :len(idx)] = rows[idx]
+    return x_gather, cols_local, vals_p, rows_global

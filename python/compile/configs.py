@@ -1,0 +1,49 @@
+"""Shape-ladder configurations for AOT-compiled blocked-SPMV artifacts.
+
+Every artifact is lowered for one fixed BlockedSpmv shape config (XLA/PJRT
+requires static shapes).  The rust runtime picks the smallest config that
+fits a given workload and zero-pads up to it; `manifest.json` (emitted by
+aot.py) tells rust which configs exist.
+
+Fields (all counts, not bytes):
+  n_in   padded length of the input vector x
+  n_out  padded length of the output vector y (scatter dump slot is n_out)
+  k      number of thread blocks (grid size of the pallas kernel)
+  e      max tasks (edges / nonzeros) per block
+  c      max unique data objects a block may stage (the "shared memory"
+         budget: 4*c bytes of f32 per block, mirroring the paper's 48 KB)
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class SpmvConfig:
+    name: str
+    n_in: int
+    n_out: int
+    k: int
+    e: int
+    c: int
+
+    @property
+    def max_nnz(self) -> int:
+        return self.k * self.e
+
+    def vmem_bytes_per_block(self) -> int:
+        # staged x copy + (cols_local, vals, partials) per task, f32/i32
+        return 4 * (self.c + 3 * self.e)
+
+
+# The ladder.  c == e throughout: each task stages at most one unique x
+# entry, so e staged slots always suffice (zero-reuse worst case), and
+# 4*e bytes stays far under the 48 KB smem budget the paper mirrors.
+CONFIGS = [
+    SpmvConfig("t0", n_in=1024, n_out=1024, k=8, e=256, c=256),
+    SpmvConfig("s1", n_in=4096, n_out=4096, k=16, e=512, c=512),
+    SpmvConfig("m1", n_in=16384, n_out=16384, k=64, e=512, c=512),
+    SpmvConfig("m2", n_in=65536, n_out=65536, k=128, e=1024, c=1024),
+    SpmvConfig("l1", n_in=131072, n_out=131072, k=256, e=1024, c=1024),
+]
+
+BY_NAME = {c.name: c for c in CONFIGS}

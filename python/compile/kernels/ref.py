@@ -1,0 +1,61 @@
+"""Pure-jnp correctness oracles for the L1 kernel and L2 model.
+
+These are the ground truth the pytest/hypothesis suite checks the pallas
+kernel and the lowered HLO against.  No pallas, no tricks — just the
+mathematical definition.
+"""
+
+import jax.numpy as jnp
+
+
+def blocked_partials_ref(x, x_gather, cols_local, vals):
+    """Reference for kernels.spmv_block.blocked_partials.
+
+    For block b, task t:  out[b, t] = vals[b, t] * x[x_gather[b, cols_local[b, t]]]
+    (with clipped indexing, matching the kernel's mode="clip").
+    """
+    n_in = x.shape[0]
+    c = x_gather.shape[1]
+    g = jnp.clip(x_gather, 0, n_in - 1)
+    cl = jnp.clip(cols_local, 0, c - 1)
+    staged = x[g]  # (k, c)
+    gathered = jnp.take_along_axis(staged, cl, axis=1)  # (k, e)
+    return vals * gathered
+
+
+def scatter_rows_ref(partials, rows_global, n_out):
+    """Reference scatter-add of per-task partials into y.
+
+    Padding tasks carry rows_global == n_out (a dump slot past the end).
+    """
+    y = jnp.zeros(n_out + 1, dtype=partials.dtype)
+    y = y.at[rows_global.reshape(-1)].add(partials.reshape(-1))
+    return y[:n_out]
+
+
+def spmv_coo_ref(rows, cols, vals, x, n_out):
+    """Plain COO spmv: y_i = sum_{(i,j,v)} v * x_j — the semantic oracle."""
+    y = jnp.zeros(n_out, dtype=vals.dtype)
+    return y.at[rows].add(vals * x[cols])
+
+
+def blocked_spmv_ref(x, x_gather, cols_local, vals, rows_global, n_out):
+    """Full blocked spmv oracle (what model.blocked_spmv must equal)."""
+    partials = blocked_partials_ref(x, x_gather, cols_local, vals)
+    return scatter_rows_ref(partials, rows_global, n_out)
+
+
+def cg_step_ref(spmv, x_sol, r, p, rz):
+    """One conjugate-gradient iteration given a black-box spmv(p)->Ap.
+
+    Returns (x', r', p', rz') exactly as model.cg_step must produce.
+    """
+    ap = spmv(p)
+    denom = jnp.dot(p, ap)
+    alpha = rz / jnp.where(denom == 0.0, 1.0, denom)
+    x_sol = x_sol + alpha * p
+    r = r - alpha * ap
+    rz_new = jnp.dot(r, r)
+    beta = rz_new / jnp.where(rz == 0.0, 1.0, rz)
+    p = r + beta * p
+    return x_sol, r, p, rz_new

@@ -1,0 +1,74 @@
+"""L1: Pallas blocked-gather SPMV kernel.
+
+This is the TPU re-thinking of the paper's transformed CUDA kernel
+(Fig 8d).  The CUDA kernel stages each thread block's shared data objects
+into `__shared__ local_arrayA` with a coalesced fill loop, then every
+thread reads its operand from the staged copy.  On TPU the analogue is:
+
+  * one grid step per thread block (`grid=(k,)`),
+  * a single vectorized gather `xc = x[x_gather[b]]` standing in for the
+    coalesced shared-memory fill — `xc` lives in VMEM for the grid step,
+  * a second vectorized gather `xc[cols_local[b]]` standing in for the
+    per-thread `local_arrayA[opt_indexA[i]]` reads,
+  * an elementwise multiply with the per-task matrix values on the VPU.
+
+Cross-block accumulation into y (atomics in CUDA) is deliberately *not*
+done here: each block emits its partial products and L2 performs one
+deterministic XLA scatter-add (see model.py).  That keeps the kernel
+embarrassingly parallel over the grid and the numerics bit-reproducible.
+
+The kernel must be lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls.  Real-TPU efficiency is estimated
+from the VMEM footprint (configs.SpmvConfig.vmem_bytes_per_block) in
+DESIGN.md / EXPERIMENTS.md, not from CPU wallclock.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, gather_ref, cols_ref, vals_ref, out_ref):
+    """One grid step == one thread block.
+
+    x_ref      f32[n_in]   whole input vector (HBM-resident operand)
+    gather_ref i32[1, c]   global indices this block stages ("smem fill")
+    cols_ref   i32[1, e]   per-task index into the staged copy
+    vals_ref   f32[1, e]   per-task matrix value (0 for padding tasks)
+    out_ref    f32[1, e]   per-task partial product
+    """
+    x = x_ref[...]
+    gather = gather_ref[0, :]
+    cols = cols_ref[0, :]
+    vals = vals_ref[0, :]
+    # Stage: the block's unique data objects, gathered once (VMEM copy).
+    xc = jnp.take(x, gather, axis=0, mode="clip")
+    # Compute: every task reads from the staged copy, never from HBM.
+    out_ref[0, :] = vals * jnp.take(xc, cols, axis=0, mode="clip")
+
+
+def blocked_partials(x, x_gather, cols_local, vals, *, interpret=True):
+    """Run the blocked-gather kernel over all k blocks.
+
+    x          f32[n_in]
+    x_gather   i32[k, c]
+    cols_local i32[k, e]
+    vals       f32[k, e]
+    returns    f32[k, e] partial products (padding tasks contribute 0)
+    """
+    k, c = x_gather.shape
+    _, e = cols_local.shape
+    n_in = x.shape[0]
+    return pl.pallas_call(
+        _kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((n_in,), lambda b: (0,)),
+            pl.BlockSpec((1, c), lambda b: (b, 0)),
+            pl.BlockSpec((1, e), lambda b: (b, 0)),
+            pl.BlockSpec((1, e), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, e), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, e), jnp.float32),
+        interpret=interpret,
+    )(x, x_gather, cols_local, vals)

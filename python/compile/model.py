@@ -1,0 +1,75 @@
+"""L2: jax compute graphs lowered to the AOT artifacts.
+
+Two entry points, both built on the L1 pallas kernel:
+
+  blocked_spmv  — the paper's transformed SPMV kernel: per-block gather
+                  partials (L1) + one fused scatter-add into y.
+  cg_step       — one conjugate-gradient iteration (the paper runs SPMV
+                  "in the context of the conjugate gradient application");
+                  spmv plus all the CG vector algebra, so the whole
+                  iteration is a single compiled executable and rust only
+                  orchestrates.
+
+All shapes are static per configs.SpmvConfig; aot.py lowers one artifact
+pair per config.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import spmv_block
+
+
+def blocked_spmv(x, x_gather, cols_local, vals, rows_global, *, n_out,
+                 interpret=True):
+    """Full blocked SPMV:  y = scatter_add(partials, rows_global).
+
+    x           f32[n_in]
+    x_gather    i32[k, c]
+    cols_local  i32[k, e]
+    vals        f32[k, e]
+    rows_global i32[k, e]  (padding tasks -> n_out, the dump slot)
+    returns     f32[n_out]
+    """
+    partials = spmv_block.blocked_partials(
+        x, x_gather, cols_local, vals, interpret=interpret)
+    y = jnp.zeros(n_out + 1, dtype=partials.dtype)
+    y = y.at[rows_global.reshape(-1)].add(partials.reshape(-1))
+    return y[:n_out]
+
+
+def cg_step(x_sol, r, p, rz, x_gather, cols_local, vals, rows_global, *,
+            n_out, interpret=True):
+    """One CG iteration for a (padded) SPD system held in blocked form.
+
+    State: solution x_sol, residual r, direction p, rz = <r, r>.
+    Returns (x_sol', r', p', rz').  Division guards keep padded/converged
+    systems finite (denominators are never exactly 0 mid-solve).
+    """
+    ap = blocked_spmv(p, x_gather, cols_local, vals, rows_global,
+                      n_out=n_out, interpret=interpret)
+    denom = jnp.dot(p, ap)
+    alpha = rz / jnp.where(denom == 0.0, 1.0, denom)
+    x_sol = x_sol + alpha * p
+    r = r - alpha * ap
+    rz_new = jnp.dot(r, r)
+    beta = rz_new / jnp.where(rz == 0.0, 1.0, rz)
+    p = r + beta * p
+    return x_sol, r, p, rz_new
+
+
+def spmv_entry(cfg, interpret=True):
+    """Closure with static n_out for jitting/lowering at config cfg."""
+    def fn(x, x_gather, cols_local, vals, rows_global):
+        return (blocked_spmv(x, x_gather, cols_local, vals, rows_global,
+                             n_out=cfg.n_out, interpret=interpret),)
+    return fn
+
+
+def cg_entry(cfg, interpret=True):
+    """CG-iteration closure for lowering at config cfg (square systems)."""
+    assert cfg.n_in == cfg.n_out, "CG needs a square system"
+
+    def fn(x_sol, r, p, rz, x_gather, cols_local, vals, rows_global):
+        return cg_step(x_sol, r, p, rz, x_gather, cols_local, vals,
+                       rows_global, n_out=cfg.n_out, interpret=interpret)
+    return fn

@@ -1,0 +1,111 @@
+"""L1 kernel correctness: pallas blocked_partials vs the pure-jnp oracle.
+
+This is the core correctness signal for the compile path.  Hypothesis
+sweeps shapes and data; fixed seeds keep the suite deterministic.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref, spmv_block
+
+
+def _rand_case(rng, n_in, k, e, c):
+    x = rng.standard_normal(n_in).astype(np.float32)
+    x_gather = rng.integers(0, n_in, size=(k, c)).astype(np.int32)
+    cols_local = rng.integers(0, c, size=(k, e)).astype(np.int32)
+    vals = rng.standard_normal((k, e)).astype(np.float32)
+    return x, x_gather, cols_local, vals
+
+
+@pytest.mark.parametrize("n_in,k,e,c", [
+    (16, 1, 4, 4),
+    (64, 4, 16, 8),
+    (256, 8, 32, 16),
+    (1024, 8, 256, 128),   # the t0 artifact config
+])
+def test_partials_match_ref(n_in, k, e, c):
+    rng = np.random.default_rng(42 + n_in)
+    x, g, cl, v = _rand_case(rng, n_in, k, e, c)
+    got = spmv_block.blocked_partials(jnp.array(x), jnp.array(g),
+                                      jnp.array(cl), jnp.array(v))
+    want = ref.blocked_partials_ref(jnp.array(x), jnp.array(g),
+                                    jnp.array(cl), jnp.array(v))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_zero_vals_give_zero_partials():
+    rng = np.random.default_rng(0)
+    x, g, cl, _ = _rand_case(rng, 32, 2, 8, 4)
+    v = np.zeros((2, 8), dtype=np.float32)
+    got = spmv_block.blocked_partials(jnp.array(x), jnp.array(g),
+                                      jnp.array(cl), jnp.array(v))
+    assert not np.asarray(got).any()
+
+
+def test_out_of_range_indices_clip_not_crash():
+    # Padding rows use index 0 by convention, but clip-mode must also
+    # survive hostile indices (negative / past-the-end).
+    x = jnp.arange(8, dtype=jnp.float32)
+    g = jnp.array([[-3, 100]], dtype=jnp.int32)
+    cl = jnp.array([[0, 1, -5, 99]], dtype=jnp.int32)
+    v = jnp.ones((1, 4), dtype=jnp.float32)
+    got = np.asarray(spmv_block.blocked_partials(x, g, cl, v))
+    want = np.asarray(ref.blocked_partials_ref(x, g, cl, v))
+    np.testing.assert_allclose(got, want)
+
+
+def test_single_block_is_dense_gather():
+    # One block staging the whole vector == plain x[cols] * vals.
+    n = 32
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal(n).astype(np.float32)
+    g = np.arange(n, dtype=np.int32)[None, :]
+    cl = rng.integers(0, n, size=(1, 64)).astype(np.int32)
+    v = rng.standard_normal((1, 64)).astype(np.float32)
+    got = np.asarray(spmv_block.blocked_partials(
+        jnp.array(x), jnp.array(g), jnp.array(cl), jnp.array(v)))
+    np.testing.assert_allclose(got[0], v[0] * x[cl[0]], rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_in=st.integers(4, 128),
+    k=st.integers(1, 6),
+    e=st.integers(1, 48),
+    c=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shape_sweep(n_in, k, e, c, seed):
+    rng = np.random.default_rng(seed)
+    x, g, cl, v = _rand_case(rng, n_in, k, e, c)
+    got = spmv_block.blocked_partials(jnp.array(x), jnp.array(g),
+                                      jnp.array(cl), jnp.array(v))
+    want = ref.blocked_partials_ref(jnp.array(x), jnp.array(g),
+                                    jnp.array(cl), jnp.array(v))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_values_extremes(seed):
+    # Denormals, zeros, large magnitudes — multiply+gather must be exact
+    # elementwise (no reduction in L1, so no tolerance drama).
+    rng = np.random.default_rng(seed)
+    n_in, k, e, c = 16, 2, 8, 8
+    x = np.array(rng.choice([0.0, 1e-38, -1e30, 3.5, np.pi], size=n_in),
+                 dtype=np.float32)
+    g = rng.integers(0, n_in, size=(k, c)).astype(np.int32)
+    cl = rng.integers(0, c, size=(k, e)).astype(np.int32)
+    v = np.array(rng.choice([0.0, -1.0, 1e20, 2.5], size=(k, e)),
+                 dtype=np.float32)
+    got = spmv_block.blocked_partials(jnp.array(x), jnp.array(g),
+                                      jnp.array(cl), jnp.array(v))
+    want = ref.blocked_partials_ref(jnp.array(x), jnp.array(g),
+                                    jnp.array(cl), jnp.array(v))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,163 @@
+"""L2 model correctness: blocked_spmv vs the COO oracle; cg_step math.
+
+Checks the *semantic* chain: a COO matrix packed into blocked form by any
+valid partition must produce exactly A@x, and cg_step must solve SPD
+systems.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import blocked, model
+from compile.kernels import ref
+
+
+def _rand_coo(rng, nr, nc, nnz):
+    rows = rng.integers(0, nr, size=nnz).astype(np.int32)
+    cols = rng.integers(0, nc, size=nnz).astype(np.int32)
+    vals = rng.standard_normal(nnz).astype(np.float32)
+    return rows, cols, vals
+
+
+def _pack(rng, rows, cols, vals, k, e, c, n_out, assign=None):
+    if assign is None:
+        assign = rng.integers(0, k, size=len(rows)).astype(np.int64)
+    return blocked.build_blocked(rows, cols, vals, assign, k, e, c, n_out)
+
+
+@pytest.mark.parametrize("nr,nc,nnz,k", [
+    (16, 16, 40, 2),
+    (64, 48, 200, 4),
+    (128, 128, 500, 8),
+])
+def test_blocked_spmv_equals_coo(nr, nc, nnz, k):
+    rng = np.random.default_rng(nr * 7 + k)
+    rows, cols, vals = _rand_coo(rng, nr, nc, nnz)
+    e, c = nnz, nnz  # generous limits
+    g, cl, v, rg = _pack(rng, rows, cols, vals, k, e, c, nr)
+    x = rng.standard_normal(nc).astype(np.float32)
+    got = model.blocked_spmv(jnp.array(x), jnp.array(g), jnp.array(cl),
+                             jnp.array(v), jnp.array(rg), n_out=nr)
+    want = ref.spmv_coo_ref(jnp.array(rows), jnp.array(cols),
+                            jnp.array(vals), jnp.array(x), nr)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_partition_invariance():
+    # Any two task->block assignments must give the same y (scatter-add
+    # is order-insensitive up to fp assoc; tolerance covers that).
+    rng = np.random.default_rng(3)
+    rows, cols, vals = _rand_coo(rng, 32, 32, 100)
+    x = rng.standard_normal(32).astype(np.float32)
+    ys = []
+    for seed in (0, 1):
+        r2 = np.random.default_rng(seed)
+        g, cl, v, rg = _pack(r2, rows, cols, vals, 4, 100, 100, 32)
+        ys.append(np.asarray(model.blocked_spmv(
+            jnp.array(x), jnp.array(g), jnp.array(cl), jnp.array(v),
+            jnp.array(rg), n_out=32)))
+    np.testing.assert_allclose(ys[0], ys[1], rtol=1e-4, atol=1e-5)
+
+
+def test_empty_blocks_are_harmless():
+    rng = np.random.default_rng(5)
+    rows, cols, vals = _rand_coo(rng, 16, 16, 20)
+    assign = np.zeros(20, dtype=np.int64)  # everything in block 0 of 4
+    g, cl, v, rg = blocked.build_blocked(rows, cols, vals, assign, 4, 32,
+                                         32, 16)
+    x = rng.standard_normal(16).astype(np.float32)
+    got = model.blocked_spmv(jnp.array(x), jnp.array(g), jnp.array(cl),
+                             jnp.array(v), jnp.array(rg), n_out=16)
+    want = ref.spmv_coo_ref(jnp.array(rows), jnp.array(cols),
+                            jnp.array(vals), jnp.array(x), 16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def _spd_system(rng, n, extra_diag=2.0):
+    """Sparse SPD matrix: tridiagonal + diagonal dominance."""
+    rows, cols, vals = [], [], []
+    for i in range(n):
+        rows.append(i); cols.append(i); vals.append(4.0 + extra_diag)
+        if i + 1 < n:
+            rows.append(i); cols.append(i + 1); vals.append(-1.0)
+            rows.append(i + 1); cols.append(i); vals.append(-1.0)
+    return (np.array(rows, np.int32), np.array(cols, np.int32),
+            np.array(vals, np.float32))
+
+
+def test_cg_converges_on_spd():
+    n, k = 64, 4
+    rng = np.random.default_rng(11)
+    rows, cols, vals = _spd_system(rng, n)
+    g, cl, v, rg = _pack(rng, rows, cols, vals, k, len(rows), len(rows), n)
+    b = rng.standard_normal(n).astype(np.float32)
+
+    x_sol = jnp.zeros(n); r = jnp.array(b); p = jnp.array(b)
+    rz = jnp.dot(r, r)
+    for _ in range(60):
+        x_sol, r, p, rz = model.cg_step(
+            x_sol, r, p, rz, jnp.array(g), jnp.array(cl), jnp.array(v),
+            jnp.array(rg), n_out=n)
+        if float(rz) < 1e-10:
+            break
+    # Verify A @ x ≈ b
+    ax = np.asarray(ref.spmv_coo_ref(jnp.array(rows), jnp.array(cols),
+                                     jnp.array(vals), x_sol, n))
+    np.testing.assert_allclose(ax, b, rtol=1e-3, atol=1e-3)
+
+
+def test_cg_step_matches_ref_once():
+    n, k = 32, 2
+    rng = np.random.default_rng(13)
+    rows, cols, vals = _spd_system(rng, n)
+    g, cl, v, rg = _pack(rng, rows, cols, vals, k, len(rows), len(rows), n)
+    b = rng.standard_normal(n).astype(np.float32)
+
+    def spmv(p):
+        return ref.spmv_coo_ref(jnp.array(rows), jnp.array(cols),
+                                jnp.array(vals), p, n)
+
+    state0 = (jnp.zeros(n), jnp.array(b), jnp.array(b),
+              jnp.dot(jnp.array(b), jnp.array(b)))
+    got = model.cg_step(*state0, jnp.array(g), jnp.array(cl),
+                        jnp.array(v), jnp.array(rg), n_out=n)
+    want = ref.cg_step_ref(spmv, *state0)
+    for a, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(w),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    nr=st.integers(4, 48),
+    nc=st.integers(4, 48),
+    nnz=st.integers(1, 150),
+    k=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_blocked_spmv(nr, nc, nnz, k, seed):
+    rng = np.random.default_rng(seed)
+    rows, cols, vals = _rand_coo(rng, nr, nc, nnz)
+    g, cl, v, rg = _pack(rng, rows, cols, vals, k, nnz, nnz, nr)
+    x = rng.standard_normal(nc).astype(np.float32)
+    got = model.blocked_spmv(jnp.array(x), jnp.array(g), jnp.array(cl),
+                             jnp.array(v), jnp.array(rg), n_out=nr)
+    want = ref.spmv_coo_ref(jnp.array(rows), jnp.array(cols),
+                            jnp.array(vals), jnp.array(x), nr)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_build_blocked_rejects_overflow():
+    rows = np.zeros(10, np.int32); cols = np.arange(10, dtype=np.int32)
+    vals = np.ones(10, np.float32)
+    assign = np.zeros(10, np.int64)
+    with pytest.raises(ValueError):
+        blocked.build_blocked(rows, cols, vals, assign, 2, 4, 16, 8)
+    with pytest.raises(ValueError):
+        blocked.build_blocked(rows, cols, vals, assign, 2, 16, 4, 8)

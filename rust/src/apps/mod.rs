@@ -1,0 +1,231 @@
+//! Rodinia-like application workload generators (paper Table 1, §5.3).
+//!
+//! The paper evaluates six Rodinia applications; it consumes each one
+//! *only through its data-affinity graph* (plus a preferred cache type
+//! and the block sizes swept in Fig 13).  Each generator here emits the
+//! access structure the paper describes for that app — see the per-app
+//! doc comments for the mapping argument.
+
+use crate::graph::{gen, Graph};
+use crate::util::rng::Pcg32;
+
+/// Which first-level cache the paper uses for the app (Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheType {
+    Software,
+    Texture,
+}
+
+/// One application workload: a data-affinity graph plus metadata.
+#[derive(Clone, Debug)]
+pub struct AppWorkload {
+    pub name: &'static str,
+    pub graph: Graph,
+    /// Thread-block sizes swept in Fig 13 for this app.
+    pub block_sizes: Vec<usize>,
+    /// Cache the paper targets for the app (Table 1).
+    pub cache: CacheType,
+    /// Times the kernel is (re-)launched — drives the async-optimization
+    /// overlap in the coordinator (kernels in loops amortize partition
+    /// cost; single-launch kernels need kernel splitting).
+    pub kernel_launches: usize,
+}
+
+/// b+tree: one-million-record database queries.  Data objects are tree
+/// nodes; every query walks root→leaf, so tasks pair consecutive path
+/// nodes.  The root/top levels are shared by *all* queries (massive
+/// reuse), leaves barely shared.
+pub fn btree(queries: usize, fanout: usize, depth: usize, seed: u64) -> AppWorkload {
+    let mut rng = Pcg32::new(seed);
+    // node ids level by level: level l has fanout^l nodes
+    let mut level_base = vec![0usize; depth + 1];
+    let mut total = 0usize;
+    for l in 0..=depth {
+        level_base[l] = total;
+        total += fanout.pow(l as u32);
+    }
+    let mut edges = Vec::with_capacity(queries * depth);
+    for _ in 0..queries {
+        let mut idx = 0usize; // position within level
+        for l in 0..depth {
+            let child = idx * fanout + rng.gen_range(fanout);
+            let a = (level_base[l] + idx) as u32;
+            let b = (level_base[l + 1] + child) as u32;
+            edges.push((a, b));
+            idx = child;
+        }
+    }
+    AppWorkload {
+        name: "b+tree",
+        graph: Graph::from_edges(total, edges),
+        block_sizes: vec![128, 256, 384, 512],
+        cache: CacheType::Software,
+        kernel_launches: 16,
+    }
+}
+
+/// bfs: frontier expansion over a million-node graph — tasks are edge
+/// relaxations (frontier vertex, neighbour).  Texture cache in Table 1.
+pub fn bfs(n: usize, seed: u64) -> AppWorkload {
+    let g = gen::power_law(n, 4, seed);
+    AppWorkload {
+        name: "bfs",
+        graph: g,
+        block_sizes: vec![128, 256, 384, 512],
+        cache: CacheType::Texture,
+        kernel_launches: 24, // one launch per BFS level, typical diameters
+    }
+}
+
+/// cfd: particle-interaction mesh (Fig 1) — tasks are pairwise
+/// interactions on an unstructured mesh with ≤ 4 neighbours.
+pub fn cfd(side: usize, seed: u64) -> AppWorkload {
+    AppWorkload {
+        name: "cfd",
+        graph: gen::cfd_mesh(side, side, seed),
+        block_sizes: vec![128, 256, 384, 512],
+        cache: CacheType::Software,
+        kernel_launches: 2000, // time-stepping solver
+    }
+}
+
+/// gaussian: elimination on a 1024-unknown system.  In step k every
+/// remaining row i is updated against pivot row k: tasks pair (pivot
+/// segment, row segment) — a sequence of stars with shrinking width.
+/// We subsample steps to keep the task count laptop-sized.
+pub fn gaussian(n: usize, steps: usize, seed: u64) -> AppWorkload {
+    let mut rng = Pcg32::new(seed);
+    let mut edges = Vec::new();
+    for s in 0..steps {
+        let pivot = (s * n / steps).min(n - 2);
+        for i in (pivot + 1)..n {
+            // row i reads pivot row; we also sample the paired column
+            // object to keep tasks binary (matrix is segmented by row)
+            edges.push((pivot as u32, i as u32));
+            if rng.gen_f64() < 0.25 {
+                // occasional cross-row reuse via the multiplier column
+                let j = pivot + 1 + rng.gen_range(n - pivot - 1);
+                edges.push((i as u32, j as u32));
+            }
+        }
+    }
+    AppWorkload {
+        name: "gaussian",
+        graph: Graph::from_edges(n, edges),
+        // gaussian only allows square block sizes in the paper
+        block_sizes: vec![16, 64, 256],
+        cache: CacheType::Software,
+        kernel_launches: steps.max(1),
+    }
+}
+
+/// particlefilter: SMC tracking of 1000 particles — resampling pairs
+/// each particle with a sampled ancestor (degree concentrated on a few
+/// heavy ancestors), plus likelihood tasks against a shared template.
+pub fn particlefilter(particles: usize, seed: u64) -> AppWorkload {
+    let mut rng = Pcg32::new(seed);
+    let template = particles as u32; // one shared measurement object
+    let mut edges = Vec::with_capacity(2 * particles);
+    for i in 0..particles {
+        // likelihood: particle vs shared template
+        edges.push((i as u32, template));
+        // resampling: particle vs ancestor (weight-skewed)
+        let anc = rng.gen_pareto(1.3, particles) - 1;
+        if anc != i {
+            edges.push((i as u32, anc as u32));
+        }
+    }
+    AppWorkload {
+        name: "particlefilter",
+        graph: Graph::from_edges(particles + 1, edges),
+        block_sizes: vec![128, 256, 384, 512],
+        cache: CacheType::Software,
+        kernel_launches: 64, // one per tracked frame
+    }
+}
+
+/// streamcluster: 65 536 points, each compared to the current candidate
+/// center — a near-star graph, average degree ≤ 2 (the paper's low-reuse
+/// case where EP gains little).
+pub fn streamcluster(points: usize, centers: usize, seed: u64) -> AppWorkload {
+    let mut rng = Pcg32::new(seed);
+    let mut edges = Vec::with_capacity(points);
+    for i in 0..points {
+        let c = points + rng.gen_range(centers.max(1));
+        edges.push((i as u32, c as u32));
+    }
+    AppWorkload {
+        name: "streamcluster",
+        graph: Graph::from_edges(points + centers, edges),
+        block_sizes: vec![128, 256, 384, 512, 1024],
+        cache: CacheType::Software,
+        kernel_launches: 32,
+    }
+}
+
+/// The six-application suite of Table 1 at laptop scale.
+pub fn rodinia_suite(seed: u64) -> Vec<AppWorkload> {
+    vec![
+        btree(3000, 8, 4, seed),
+        bfs(12000, seed + 1),
+        cfd(110, seed + 2),
+        gaussian(512, 24, seed + 3),
+        particlefilter(4000, seed + 4),
+        streamcluster(16384, 12, seed + 5),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::stats;
+
+    #[test]
+    fn suite_has_six_apps_with_valid_graphs() {
+        let suite = rodinia_suite(42);
+        assert_eq!(suite.len(), 6);
+        for app in &suite {
+            app.graph.validate().unwrap();
+            assert!(app.graph.m() > 1000, "{} too small", app.name);
+            assert!(!app.block_sizes.is_empty());
+        }
+    }
+
+    #[test]
+    fn btree_root_is_hottest() {
+        let app = btree(2000, 8, 4, 1);
+        // the root (node 0) is touched by every query
+        assert_eq!(app.graph.degree(0), 2000);
+    }
+
+    #[test]
+    fn streamcluster_low_reuse() {
+        let app = streamcluster(8192, 8, 2);
+        // paper: average degree ≤ 2 → below the reuse threshold
+        assert!(app.graph.avg_degree() <= 2.01, "{}", app.graph.avg_degree());
+        assert!(!stats::has_enough_reuse(&app.graph, 2.1));
+    }
+
+    #[test]
+    fn cfd_has_reuse() {
+        let app = cfd(60, 3);
+        assert!(stats::has_enough_reuse(&app.graph, 2.1));
+        assert!(app.graph.max_degree() <= 8);
+    }
+
+    #[test]
+    fn gaussian_square_blocks_only() {
+        let app = gaussian(256, 8, 4);
+        for b in &app.block_sizes {
+            let s = (*b as f64).sqrt() as usize;
+            assert_eq!(s * s, *b, "block size {b} not square");
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = bfs(3000, 7);
+        let b = bfs(3000, 7);
+        assert_eq!(a.graph.edges, b.graph.edges);
+    }
+}

@@ -1,0 +1,160 @@
+//! Adaptive overhead control (paper §4.2).
+//!
+//! Before every kernel launch the coordinator asks the controller which
+//! kernel to run.  While the optimizer is still working, the original
+//! kernel runs.  The first time the transformed kernel runs, its cost is
+//! recorded and compared with the original's; if it lost, the controller
+//! permanently falls back ("if the first run of the transformed kernel
+//! is slower, then we fall back to the original kernel in the next
+//! iteration") — guaranteeing no slowdown.
+
+/// Which kernel to launch this iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Choice {
+    Original,
+    Optimized,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum State {
+    /// optimizer still running → original kernel
+    Waiting,
+    /// optimized schedule arrived; next launch is the recorded trial
+    Trial,
+    /// trial won → optimized kernel from now on
+    Committed,
+    /// trial lost → original kernel forever
+    FellBack,
+}
+
+#[derive(Debug)]
+pub struct AdaptiveController {
+    state: State,
+    /// running mean of original-kernel cost (cycles or ns)
+    orig_cost: Option<f64>,
+    orig_samples: u32,
+    trial_cost: Option<f64>,
+}
+
+impl Default for AdaptiveController {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AdaptiveController {
+    pub fn new() -> AdaptiveController {
+        AdaptiveController { state: State::Waiting, orig_cost: None, orig_samples: 0, trial_cost: None }
+    }
+
+    /// Decide the kernel for the next launch. `optimizer_ready` is the
+    /// poll result of the async optimizer.
+    pub fn choose(&mut self, optimizer_ready: bool) -> Choice {
+        if self.state == State::Waiting && optimizer_ready {
+            self.state = State::Trial;
+        }
+        match self.state {
+            State::Waiting | State::FellBack => Choice::Original,
+            State::Trial | State::Committed => Choice::Optimized,
+        }
+    }
+
+    /// Record the measured cost of the launch just executed.
+    pub fn record(&mut self, choice: Choice, cost: f64) {
+        match (self.state, choice) {
+            (State::Waiting | State::FellBack, Choice::Original) => {
+                let n = self.orig_samples as f64;
+                self.orig_cost = Some(match self.orig_cost {
+                    None => cost,
+                    Some(m) => (m * n + cost) / (n + 1.0),
+                });
+                self.orig_samples += 1;
+            }
+            (State::Trial, Choice::Optimized) => {
+                self.trial_cost = Some(cost);
+                // no original sample yet (kernel ran optimized from the
+                // first launch) → trust the optimized version
+                self.state = match self.orig_cost {
+                    Some(orig) if cost > orig => State::FellBack,
+                    _ => State::Committed,
+                };
+            }
+            (State::Committed, Choice::Optimized) => {}
+            // tolerate out-of-protocol records (e.g. warmup runs)
+            _ => {}
+        }
+    }
+
+    pub fn fell_back(&self) -> bool {
+        self.state == State::FellBack
+    }
+
+    pub fn committed(&self) -> bool {
+        self.state == State::Committed
+    }
+
+    pub fn original_cost(&self) -> Option<f64> {
+        self.orig_cost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waits_until_optimizer_ready() {
+        let mut c = AdaptiveController::new();
+        assert_eq!(c.choose(false), Choice::Original);
+        c.record(Choice::Original, 100.0);
+        assert_eq!(c.choose(false), Choice::Original);
+        c.record(Choice::Original, 102.0);
+        assert_eq!(c.choose(true), Choice::Optimized); // trial
+    }
+
+    #[test]
+    fn commits_when_trial_wins() {
+        let mut c = AdaptiveController::new();
+        c.choose(false);
+        c.record(Choice::Original, 100.0);
+        let t = c.choose(true);
+        assert_eq!(t, Choice::Optimized);
+        c.record(Choice::Optimized, 60.0);
+        assert!(c.committed());
+        assert_eq!(c.choose(true), Choice::Optimized);
+    }
+
+    #[test]
+    fn falls_back_when_trial_loses() {
+        let mut c = AdaptiveController::new();
+        c.choose(false);
+        c.record(Choice::Original, 100.0);
+        c.choose(true);
+        c.record(Choice::Optimized, 150.0);
+        assert!(c.fell_back());
+        // permanent: stays original even though optimizer is ready
+        assert_eq!(c.choose(true), Choice::Original);
+        c.record(Choice::Original, 99.0);
+        assert_eq!(c.choose(true), Choice::Original);
+    }
+
+    #[test]
+    fn immediate_ready_trusts_optimized() {
+        // optimizer finished before the first launch: no original sample;
+        // the controller runs optimized and keeps it
+        let mut c = AdaptiveController::new();
+        assert_eq!(c.choose(true), Choice::Optimized);
+        c.record(Choice::Optimized, 50.0);
+        assert!(c.committed());
+    }
+
+    #[test]
+    fn original_cost_averages() {
+        let mut c = AdaptiveController::new();
+        for cost in [100.0, 110.0, 90.0] {
+            c.choose(false);
+            c.record(Choice::Original, cost);
+        }
+        assert!((c.original_cost().unwrap() - 100.0).abs() < 1e-9);
+    }
+}

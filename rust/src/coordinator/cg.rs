@@ -1,0 +1,208 @@
+//! End-to-end CG driver (paper §5.2): iterate SPMV inside conjugate
+//! gradient with asynchronous data-sharing optimization and adaptive
+//! overhead control, numerics executed by the AOT PJRT kernel and GPU
+//! behaviour tracked by the transaction simulator.
+//!
+//! This is the paper's EP-adapt configuration; `wait_for_optimizer`
+//! gives EP-ideal (partition cost paid up front, all iterations
+//! optimized).
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::gpusim::{sim_blocked_launch, sim_rowsplit, GpuConfig, SimResult};
+use crate::partition::{default_sched, quality, EdgePartition, Method};
+use crate::runtime::{CgExec, Engine};
+use crate::sparse::{cpack, pack_blocked, BlockedShape, Coo};
+
+use super::adaptive::{AdaptiveController, Choice};
+use super::optimizer::{AsyncOptimizer, OptOptions};
+
+#[derive(Clone, Debug)]
+pub struct CgRunConfig {
+    /// tasks (nonzeros) per thread block — paper default 1024
+    pub block_size: usize,
+    pub tol: f32,
+    pub max_iters: usize,
+    pub gpu: GpuConfig,
+    pub method: Method,
+    /// EP-ideal: block until the optimizer finishes before iterating
+    pub wait_for_optimizer: bool,
+    pub seed: u64,
+}
+
+impl Default for CgRunConfig {
+    fn default() -> Self {
+        CgRunConfig {
+            block_size: 1024,
+            tol: 1e-4,
+            max_iters: 400,
+            gpu: GpuConfig::default(),
+            method: Method::Ep,
+            wait_for_optimizer: false,
+            seed: 0x5EED,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct CgReport {
+    pub iterations: usize,
+    pub residual: f32,
+    /// iteration index at which the optimized kernel took over
+    pub switched_at: Option<usize>,
+    pub fell_back: bool,
+    pub partition_time: Duration,
+    pub wall_time: Duration,
+    /// simulated per-iteration kernel cost, original schedule
+    pub sim_original: SimResult,
+    /// simulated per-iteration kernel cost, optimized schedule
+    pub sim_optimized: Option<SimResult>,
+    /// total simulated cycles across all iterations actually run
+    pub sim_cycles_total: u64,
+    /// vertex-cut quality: default vs optimized schedule
+    pub quality_default: u64,
+    pub quality_optimized: Option<u64>,
+    pub solution: Vec<f32>,
+}
+
+impl CgReport {
+    /// Simulated speedup of optimized vs original per-iteration kernel.
+    pub fn kernel_speedup(&self) -> Option<f64> {
+        self.sim_optimized
+            .as_ref()
+            .map(|o| self.sim_original.cycles as f64 / o.cycles.max(1) as f64)
+    }
+}
+
+/// Shape big enough for a's packing under partition p.
+fn fitting_shape(a: &Coo, p: &EdgePartition) -> BlockedShape {
+    let mut counts = vec![0usize; p.k];
+    for &b in &p.assign {
+        counts[b as usize] += 1;
+    }
+    let e = counts.iter().copied().max().unwrap_or(1);
+    let n = a.nrows.max(a.ncols);
+    BlockedShape { n_in: n, n_out: n, k: p.k, e, c: e }
+}
+
+/// Run CG with the full pipeline.  `a` must be square SPD.
+pub fn run_cg(engine: &mut Engine, a: &Coo, rhs: &[f32], cfg: &CgRunConfig) -> Result<CgReport> {
+    anyhow::ensure!(a.nrows == a.ncols, "CG needs a square system");
+    let t_start = Instant::now();
+    let k = a.nnz().div_ceil(cfg.block_size).max(1);
+
+    // --- original kernel: default contiguous schedule, no relayout ---
+    let p_default = default_sched::default_partition(a.nnz(), k);
+    let g = a.affinity_graph();
+    let quality_default = quality::vertex_cut_cost(&g, &p_default);
+    let packed_orig = pack_blocked(a, &p_default, fitting_shape(a, &p_default))?;
+    let cg_orig = CgExec::prepare(engine, &packed_orig)?;
+    // simulated baseline: CUSPARSE-like row-split through texture cache
+    let sim_original = {
+        let mut sorted = a.clone();
+        sorted.sort_row_major();
+        sim_rowsplit(&cfg.gpu, &sorted, cfg.block_size, true)
+    };
+
+    // --- spawn the optimizer on its own CPU thread ---
+    let opt_opts = OptOptions {
+        k,
+        seed: cfg.seed,
+        method: cfg.method,
+        block_cap: Some(cfg.block_size),
+        ..Default::default()
+    };
+    let mut optimizer = AsyncOptimizer::spawn(g, opt_opts);
+    if cfg.wait_for_optimizer {
+        optimizer.wait();
+    }
+
+    // --- iterate ---
+    let mut controller = AdaptiveController::new();
+    let mut st = cg_orig.init(rhs);
+    let mut in_permuted_space = false;
+    let mut opt_kernel: Option<(CgExec, cpack::Perm, SimResult, u64)> = None;
+    let mut switched_at = None;
+    let mut partition_time = Duration::ZERO;
+    let mut sim_cycles_total = 0u64;
+    let tol2 = cfg.tol * cfg.tol;
+
+    while st.rz > tol2 && st.iterations < cfg.max_iters {
+        // build the optimized kernel when the schedule arrives
+        if opt_kernel.is_none() {
+            if let Some(sched) = optimizer.poll() {
+                let sched = sched.clone();
+                partition_time = sched.partition_time;
+                let t_pack = Instant::now();
+                let (a_packed, perm) = cpack::cpack_square(a, &sched.partition);
+                let order = cpack::schedule_order(&sched.partition);
+                let p2 = EdgePartition::new(
+                    sched.partition.k,
+                    order.iter().map(|&t| sched.partition.assign[t]).collect(),
+                );
+                let blocked = pack_blocked(&a_packed, &p2, fitting_shape(&a_packed, &p2))?;
+                let exec = CgExec::prepare(engine, &blocked)?;
+                let sim = sim_blocked_launch(&cfg.gpu, &blocked, true, cfg.block_size);
+                partition_time += t_pack.elapsed();
+                opt_kernel = Some((exec, perm, sim, sched.quality));
+            }
+        }
+
+        let choice = controller.choose(opt_kernel.is_some());
+        match choice {
+            Choice::Original => {
+                if in_permuted_space {
+                    // fell back mid-flight: restore original space
+                    let (_, perm, _, _) = opt_kernel.as_ref().unwrap();
+                    st.x = perm.unapply_vec(&st.x);
+                    st.r = perm.unapply_vec(&st.r);
+                    st.p = perm.unapply_vec(&st.p);
+                    in_permuted_space = false;
+                }
+                cg_orig.step(&mut st)?;
+                controller.record(choice, sim_original.cycles as f64);
+                sim_cycles_total += sim_original.cycles;
+            }
+            Choice::Optimized => {
+                let (exec, perm, sim, _) = opt_kernel.as_ref().unwrap();
+                if !in_permuted_space {
+                    st.x = perm.apply_vec(&st.x);
+                    st.r = perm.apply_vec(&st.r);
+                    st.p = perm.apply_vec(&st.p);
+                    in_permuted_space = true;
+                    switched_at = Some(st.iterations);
+                }
+                exec.step(&mut st)?;
+                controller.record(choice, sim.cycles as f64);
+                sim_cycles_total += sim.cycles;
+            }
+        }
+    }
+
+    // land the solution back in original index space
+    let mut solution = st.x.clone();
+    if in_permuted_space {
+        let (_, perm, _, _) = opt_kernel.as_ref().unwrap();
+        solution = perm.unapply_vec(&solution);
+    }
+    if controller.fell_back() {
+        switched_at = None;
+    }
+
+    Ok(CgReport {
+        iterations: st.iterations,
+        residual: st.rz.sqrt(),
+        switched_at,
+        fell_back: controller.fell_back(),
+        partition_time,
+        wall_time: t_start.elapsed(),
+        sim_original,
+        sim_optimized: opt_kernel.as_ref().map(|(_, _, s, _)| s.clone()),
+        sim_cycles_total,
+        quality_default,
+        quality_optimized: opt_kernel.as_ref().map(|(_, _, _, q)| *q),
+        solution,
+    })
+}

@@ -1,0 +1,19 @@
+//! The L3 coordination layer: the paper's runtime system (Section 4).
+//!
+//! * `optimizer` — the §4.1 pipeline (graph → reuse check → special
+//!   patterns → EP partition → cpack) and its asynchronous CPU-thread
+//!   wrapper.
+//! * `adaptive` — §4.2 adaptive overhead control (trial + fallback).
+//! * `cg` — the end-to-end conjugate-gradient driver wiring PJRT
+//!   execution, the optimizer, and the GPU simulator together.
+//! * `splitting` — §4.2 kernel splitting for single-launch kernels.
+
+pub mod adaptive;
+pub mod cg;
+pub mod optimizer;
+pub mod splitting;
+
+pub use adaptive::{AdaptiveController, Choice};
+pub use cg::{run_cg, CgReport, CgRunConfig};
+pub use optimizer::{optimize_graph, AsyncOptimizer, OptOptions, OptimizedSchedule};
+pub use splitting::{auto_splits, run_with_splitting, run_with_splitting_at, SplitReport};

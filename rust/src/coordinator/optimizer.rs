@@ -1,0 +1,240 @@
+//! The data-sharing optimization pipeline (paper §4.1, Fig 9) and its
+//! asynchronous wrapper (§4.2).
+//!
+//! Workflow: extract data-affinity graph → check reuse (degree
+//! frequency) → check special patterns → EP partition → cpack layout.
+//! The async wrapper runs the whole thing on a separate CPU thread — the
+//! paper's exact design ("we use a separate thread for optimization to
+//! prevent it from adversely affecting the performance of the main
+//! program") — and the main loop polls completion before each kernel
+//! launch.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::graph::{stats, Graph};
+use crate::partition::special::{self, Pattern};
+use crate::partition::{ep, quality, EdgePartition, Method};
+use crate::sparse::{cpack, Perm};
+
+/// Tuning knobs of the optimization pipeline.
+#[derive(Clone, Debug)]
+pub struct OptOptions {
+    /// number of thread blocks (clusters)
+    pub k: usize,
+    pub seed: u64,
+    /// skip partitioning when avg degree ≤ threshold (paper: ≈ 2)
+    pub reuse_threshold: f64,
+    /// partitioning method (EP in production; baselines for benches)
+    pub method: Method,
+    /// enable the special-pattern shortcut
+    pub use_special_patterns: bool,
+    /// hard per-block task cap = thread-block size (a block of N threads
+    /// runs at most N tasks); None = no physical cap
+    pub block_cap: Option<usize>,
+}
+
+impl Default for OptOptions {
+    fn default() -> Self {
+        OptOptions {
+            k: 8,
+            seed: 0xE9_5EED,
+            reuse_threshold: 2.0,
+            method: Method::Ep,
+            use_special_patterns: true,
+            block_cap: None,
+        }
+    }
+}
+
+/// The pipeline's product: a schedule + layout + provenance/stats.
+#[derive(Clone, Debug)]
+pub struct OptimizedSchedule {
+    pub partition: EdgePartition,
+    /// first-touch data layout for the new schedule
+    pub layout: Perm,
+    /// vertex-cut cost of the partition (Definition 2)
+    pub quality: u64,
+    pub balance: f64,
+    pub partition_time: Duration,
+    /// Some(pattern) if the special-pattern shortcut fired
+    pub used_special: Option<Pattern>,
+    /// true if the reuse check said "don't bother" (identity schedule)
+    pub skipped_low_reuse: bool,
+}
+
+/// Run the full §4.1 pipeline synchronously.
+pub fn optimize_graph(g: &Graph, opts: &OptOptions) -> OptimizedSchedule {
+    let t0 = Instant::now();
+
+    // 1. reuse check: little sharing → keep the original schedule
+    if !stats::has_enough_reuse(g, opts.reuse_threshold) {
+        let partition = crate::partition::default_sched::default_partition(g.m(), opts.k);
+        let quality = quality::vertex_cut_cost(g, &partition);
+        return OptimizedSchedule {
+            layout: Perm::identity(g.n),
+            balance: quality::balance_factor(&partition),
+            partition,
+            quality,
+            partition_time: t0.elapsed(),
+            used_special: None,
+            skipped_low_reuse: true,
+        };
+    }
+
+    // 2. special-pattern shortcut: preset schedules, no partitioner run
+    if opts.use_special_patterns {
+        if let Some(pat) = special::detect(g) {
+            let mut partition = special::preset_partition(g, pat, opts.k);
+            if let Some(cap) = opts.block_cap {
+                ep::rebalance_to_cap(g, &mut partition, cap);
+            }
+            let layout = cpack::cpack_graph(g, &partition);
+            let quality = quality::vertex_cut_cost(g, &partition);
+            return OptimizedSchedule {
+                layout,
+                balance: quality::balance_factor(&partition),
+                partition,
+                quality,
+                partition_time: t0.elapsed(),
+                used_special: Some(pat),
+                skipped_low_reuse: false,
+            };
+        }
+    }
+
+    // 3. the EP algorithm (or a selected baseline) + cpack relayout
+    let mut partition = match opts.method {
+        Method::Ep => {
+            let mut ep_opts = ep::EpOpts::default();
+            ep_opts.vp.seed = opts.seed;
+            ep::partition_edges(g, opts.k, &ep_opts)
+        }
+        other => other.partition(g, opts.k, opts.seed),
+    };
+    if let Some(cap) = opts.block_cap {
+        ep::rebalance_to_cap(g, &mut partition, cap);
+    }
+    let layout = cpack::cpack_graph(g, &partition);
+    let quality = quality::vertex_cut_cost(g, &partition);
+    OptimizedSchedule {
+        layout,
+        balance: quality::balance_factor(&partition),
+        partition,
+        quality,
+        partition_time: t0.elapsed(),
+        used_special: None,
+        skipped_low_reuse: false,
+    }
+}
+
+/// Asynchronous optimization: the pipeline runs on its own CPU thread;
+/// the GPU main loop polls `poll()` before each kernel launch and
+/// switches kernels when the result arrives (paper Fig 8b).
+pub struct AsyncOptimizer {
+    rx: mpsc::Receiver<OptimizedSchedule>,
+    started: Instant,
+    result: Option<OptimizedSchedule>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl AsyncOptimizer {
+    pub fn spawn(graph: Graph, opts: OptOptions) -> AsyncOptimizer {
+        let (tx, rx) = mpsc::channel();
+        let handle = std::thread::Builder::new()
+            .name("epgraph-optimizer".into())
+            .spawn(move || {
+                let result = optimize_graph(&graph, &opts);
+                let _ = tx.send(result); // receiver may be gone: program ended
+            })
+            .expect("spawn optimizer thread");
+        AsyncOptimizer { rx, started: Instant::now(), result: None, handle: Some(handle) }
+    }
+
+    /// Non-blocking completion check — the "if (optimization finished)"
+    /// test of Fig 8b.
+    pub fn poll(&mut self) -> Option<&OptimizedSchedule> {
+        if self.result.is_none() {
+            if let Ok(r) = self.rx.try_recv() {
+                self.result = Some(r);
+            }
+        }
+        self.result.as_ref()
+    }
+
+    /// Block until the optimizer finishes (benches / EP-ideal mode).
+    pub fn wait(&mut self) -> &OptimizedSchedule {
+        if self.result.is_none() {
+            if let Some(h) = self.handle.take() {
+                let _ = h.join();
+            }
+            if let Ok(r) = self.rx.recv() {
+                self.result = Some(r);
+            }
+        }
+        self.result.as_ref().expect("optimizer thread panicked")
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.started.elapsed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn pipeline_partitions_reusy_graphs() {
+        let g = gen::cfd_mesh(30, 30, 1);
+        let opts = OptOptions { k: 8, ..Default::default() };
+        let r = optimize_graph(&g, &opts);
+        assert!(!r.skipped_low_reuse);
+        assert!(r.used_special.is_none());
+        // must beat the default schedule
+        let def = crate::partition::default_sched::default_partition(g.m(), 8);
+        assert!(r.quality < quality::vertex_cut_cost(&g, &def));
+        assert!(r.layout.is_valid());
+    }
+
+    #[test]
+    fn pipeline_skips_low_reuse() {
+        let g = gen::complete_bipartite(4000, 1); // star: avg degree < 2.1
+        let mut opts = OptOptions { k: 8, reuse_threshold: 2.1, ..Default::default() };
+        opts.use_special_patterns = false;
+        let r = optimize_graph(&g, &opts);
+        assert!(r.skipped_low_reuse);
+        // identity layout — no data transform applied
+        assert_eq!(r.layout.new_of_old[5], 5);
+    }
+
+    #[test]
+    fn pipeline_uses_special_pattern() {
+        let g = gen::grid_mesh(20, 20);
+        let r = optimize_graph(&g, &OptOptions { k: 4, ..Default::default() });
+        assert_eq!(r.used_special, Some(Pattern::Grid));
+        // preset partitioning is near-instant
+        assert!(r.partition_time < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn async_optimizer_delivers() {
+        let g = gen::power_law(3000, 3, 5);
+        let mut opt = AsyncOptimizer::spawn(g.clone(), OptOptions { k: 8, ..Default::default() });
+        let r = opt.wait();
+        assert_eq!(r.partition.assign.len(), g.m());
+        // poll after completion keeps returning the result
+        assert!(opt.poll().is_some());
+    }
+
+    #[test]
+    fn async_optimizer_poll_is_nonblocking() {
+        let g = gen::power_law(20000, 3, 6);
+        let mut opt = AsyncOptimizer::spawn(g, OptOptions { k: 32, ..Default::default() });
+        let t0 = Instant::now();
+        let _ = opt.poll();
+        assert!(t0.elapsed() < Duration::from_millis(50), "poll must not block");
+        let _ = opt.wait();
+    }
+}

@@ -1,0 +1,598 @@
+//! Experiment harnesses — one function per table/figure of the paper's
+//! evaluation (see DESIGN.md §5 for the index).  Each returns printable
+//! rows; `main.rs` exposes them as `epgraph bench <exp>` and the
+//! `benches/` targets re-run them under `cargo bench`.
+//!
+//! Shape expectations (paper → here) are documented per function and
+//! recorded against measurements in EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+use crate::apps::{self, CacheType};
+use crate::gpusim::{sim_blocked_launch, sim_original, sim_rowsplit, sim_task_graph_launch, GpuConfig, SimResult};
+use crate::graph::{stats, Graph};
+use crate::partition::{
+    default_sched, ep, hypergraph, quality, EdgePartition, Method,
+};
+use crate::sparse::{cpack, gen, pack_blocked, BlockedShape, Coo};
+use crate::util::benchkit::Table;
+
+/// Default tasks-per-block used across the SPMV experiments (paper: 1024).
+pub const BLOCK_SIZE: usize = 1024;
+/// Modelled CG iteration count for the adaptive replays (paper's CG runs
+/// "until convergence"; hundreds of iterations is typical).
+pub const CG_ITERS: u64 = 300;
+
+fn k_for(m: usize, block: usize) -> usize {
+    m.div_ceil(block).max(1)
+}
+
+// ---------------------------------------------------------------- fig 4/5
+
+pub fn fig4_degree(seed: u64) -> Table {
+    let mut t = Table::new(&["graph", "n", "m", "avg_deg", "d_max", "top degrees (deg:count)", "loglog_slope"]);
+    for (name, m) in gen::fig6_suite(seed) {
+        let g = m.affinity_graph();
+        let dist = stats::degree_distribution(&g);
+        let mut top: Vec<_> = dist.iter().collect();
+        top.sort_by_key(|p| std::cmp::Reverse(p.count));
+        let tops = top
+            .iter()
+            .take(4)
+            .map(|p| format!("{}:{}", p.degree, p.count))
+            .collect::<Vec<_>>()
+            .join(" ");
+        let slope = stats::log_log_slope(&g)
+            .map(|s| format!("{s:.2}"))
+            .unwrap_or_else(|| "n/a".into());
+        t.row(&[
+            name.to_string(),
+            g.n.to_string(),
+            g.m().to_string(),
+            format!("{:.2}", g.avg_degree()),
+            g.max_degree().to_string(),
+            tops,
+            slope,
+        ]);
+    }
+    t
+}
+
+// ------------------------------------------------------------------ fig 6
+
+pub struct Fig6Row {
+    pub name: String,
+    pub n: usize,
+    pub m: usize,
+    pub default_q: u64,
+    pub hp_time: Duration,
+    pub hp_q: u64,
+    pub random_q: u64,
+    pub greedy_q: u64,
+    pub ep_time: Duration,
+    pub ep_q: u64,
+}
+
+/// Fig 6: EP vs hypergraph vs PowerGraph vs default on five graphs.
+/// Expected shape: EP ≈ HP quality at a fraction of the time; random
+/// and greedy far worse than default.
+pub fn fig6_partition(seed: u64) -> Vec<Fig6Row> {
+    let mut rows = Vec::new();
+    for (name, mat) in gen::fig6_suite(seed) {
+        let g = mat.affinity_graph();
+        let k = k_for(g.m(), BLOCK_SIZE);
+        let q = |p: &EdgePartition| quality::vertex_cut_cost(&g, p);
+
+        let default_q = q(&default_sched::default_partition(g.m(), k));
+        let random_q = q(&Method::PgRandom.partition(&g, k, seed));
+        let greedy_q = q(&Method::PgGreedy.partition(&g, k, seed));
+        let t0 = Instant::now();
+        let hp = hypergraph::partition_edges(&g, k, &hypergraph::HpOpts { seed, ..Default::default() });
+        let hp_time = t0.elapsed();
+        let hp_q = q(&hp);
+        let t1 = Instant::now();
+        let epp = {
+            let mut o = ep::EpOpts::default();
+            o.vp.seed = seed;
+            ep::partition_edges(&g, k, &o)
+        };
+        let ep_time = t1.elapsed();
+        let ep_q = q(&epp);
+        rows.push(Fig6Row {
+            name: name.to_string(),
+            n: g.n,
+            m: g.m(),
+            default_q,
+            hp_time,
+            hp_q,
+            random_q,
+            greedy_q,
+            ep_time,
+            ep_q,
+        });
+    }
+    rows
+}
+
+pub fn fig6_table(rows: &[Fig6Row]) -> Table {
+    let mut t = Table::new(&[
+        "matrix", "#vertices", "#edges", "default q", "HP time", "HP q", "random q", "greedy q",
+        "EP time", "EP q", "EP/HP time",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.name.clone(),
+            r.n.to_string(),
+            r.m.to_string(),
+            r.default_q.to_string(),
+            format!("{:.3}s", r.hp_time.as_secs_f64()),
+            r.hp_q.to_string(),
+            r.random_q.to_string(),
+            r.greedy_q.to_string(),
+            format!("{:.3}s", r.ep_time.as_secs_f64()),
+            r.ep_q.to_string(),
+            format!("{:.1}x", r.hp_time.as_secs_f64() / r.ep_time.as_secs_f64().max(1e-9)),
+        ]);
+    }
+    t
+}
+
+// ----------------------------------------------- SPMV kernels (tbl2, fig10-12)
+
+/// Everything the SPMV experiments need for one matrix.
+pub struct SpmvCase {
+    pub name: String,
+    pub nnz: usize,
+    pub dim: usize,
+    /// simulated per-SPMV results
+    pub cusparse: SimResult,
+    pub cusp: SimResult,
+    pub ep_smem: SimResult,
+    pub ep_tex: SimResult,
+    pub hp_smem: SimResult,
+    pub ep_partition_time: Duration,
+    pub hp_partition_time: Duration,
+    pub ep_quality: u64,
+    pub default_quality: u64,
+}
+
+fn blocked_for(a: &Coo, p: &EdgePartition, block_cap: usize) -> crate::sparse::BlockedSpmv {
+    // enforce the physical thread-block cap, then cpack relayout +
+    // reorder the assignment into schedule order
+    let mut p = p.clone();
+    ep::rebalance_to_cap(&a.affinity_graph(), &mut p, block_cap);
+    let (packed, _, _) = cpack::cpack_spmv(a, &p);
+    let order = cpack::schedule_order(&p);
+    let p2 = EdgePartition::new(p.k, order.iter().map(|&t| p.assign[t]).collect());
+    let n = a.nrows.max(a.ncols);
+    pack_blocked(
+        &packed,
+        &p2,
+        BlockedShape { n_in: n, n_out: n, k: p2.k, e: block_cap, c: block_cap },
+    )
+    .expect("packing under the rebalanced partition always fits")
+}
+
+/// Run the full SPMV kernel matrix for one input, at one block size.
+pub fn spmv_case(gpu: &GpuConfig, name: &str, a: &Coo, block: usize, seed: u64) -> SpmvCase {
+    let mut sorted = a.clone();
+    sorted.sort_row_major();
+    let g = a.affinity_graph();
+    let k = k_for(a.nnz(), block);
+
+    let cusparse = sim_rowsplit(gpu, &sorted, block, true);
+    let cusp = sim_rowsplit(gpu, &sorted, block, false);
+
+    let t0 = Instant::now();
+    let ep_p = {
+        let mut o = ep::EpOpts::default();
+        o.vp.seed = seed;
+        ep::partition_edges(&g, k, &o)
+    };
+    let ep_partition_time = t0.elapsed();
+    let ep_quality = quality::vertex_cut_cost(&g, &ep_p);
+    let default_quality =
+        quality::vertex_cut_cost(&g, &default_sched::default_partition(g.m(), k));
+    let ep_blocked = blocked_for(a, &ep_p, block);
+    let ep_smem = sim_blocked_launch(gpu, &ep_blocked, true, block);
+    let ep_tex = sim_blocked_launch(gpu, &ep_blocked, false, block);
+
+    let t1 = Instant::now();
+    let hp_p = hypergraph::partition_edges(
+        &g,
+        k,
+        &hypergraph::HpOpts { seed, ..Default::default() },
+    );
+    let hp_partition_time = t1.elapsed();
+    let hp_blocked = blocked_for(a, &hp_p, block);
+    let hp_smem = sim_blocked_launch(gpu, &hp_blocked, true, block);
+
+    SpmvCase {
+        name: name.to_string(),
+        nnz: a.nnz(),
+        dim: a.nrows,
+        cusparse,
+        cusp,
+        ep_smem,
+        ep_tex,
+        hp_smem,
+        ep_partition_time,
+        hp_partition_time,
+        ep_quality,
+        default_quality,
+    }
+}
+
+pub fn table2_cases(gpu: &GpuConfig, seed: u64) -> Vec<SpmvCase> {
+    gen::paper_suite(seed)
+        .iter()
+        .map(|(name, a)| spmv_case(gpu, name, a, BLOCK_SIZE, seed))
+        .collect()
+}
+
+/// Table 2: per-matrix kernel + partition costs.  Kernel "time" is
+/// simulated cycles × CG_ITERS (the paper reports whole-CG totals).
+pub fn table2_table(cases: &[SpmvCase]) -> Table {
+    let mut t = Table::new(&[
+        "name", "dim", "nnz", "CUSPARSE cyc", "EP cyc", "EP partition", "HP cyc", "HP partition",
+        "EP part %", "HP part %",
+    ]);
+    for c in cases {
+        // partition overhead as % of total CUSPARSE kernel time, at the
+        // modelled 1 GHz clock (cycles ≙ ns)
+        let total_ns = (c.cusparse.cycles * CG_ITERS) as f64;
+        let ep_pct = c.ep_partition_time.as_nanos() as f64 / total_ns * 100.0;
+        let hp_pct = c.hp_partition_time.as_nanos() as f64 / total_ns * 100.0;
+        t.row(&[
+            c.name.clone(),
+            c.dim.to_string(),
+            c.nnz.to_string(),
+            (c.cusparse.cycles * CG_ITERS).to_string(),
+            (c.ep_smem.cycles * CG_ITERS).to_string(),
+            format!("{:.3}s", c.ep_partition_time.as_secs_f64()),
+            (c.hp_smem.cycles * CG_ITERS).to_string(),
+            format!("{:.3}s", c.hp_partition_time.as_secs_f64()),
+            format!("{ep_pct:.0}%"),
+            format!("{hp_pct:.0}%"),
+        ]);
+    }
+    t
+}
+
+/// EP-adapt replay: CG_ITERS iterations; iterations before the
+/// optimizer's (converted) completion run the original kernel.
+pub fn adapt_cycles(orig: u64, opt: u64, partition: Duration, iters: u64) -> u64 {
+    let part_ns = partition.as_nanos() as u64; // 1 cycle ≙ 1 ns
+    let mut total = 0u64;
+    let mut clock = 0u64;
+    let mut remaining = iters;
+    // original until the optimizer is done
+    while clock < part_ns && remaining > 0 {
+        total += orig;
+        clock += orig;
+        remaining -= 1;
+    }
+    // trial + committed (or fallback if opt loses)
+    if remaining > 0 {
+        if opt > orig {
+            total += opt; // one losing trial
+            remaining -= 1;
+            total += remaining * orig;
+        } else {
+            total += remaining * opt;
+        }
+    }
+    total
+}
+
+/// Fig 10: speedup over CUSPARSE for CUSP, EP-ideal, EP-adapt.
+pub fn fig10_table(cases: &[SpmvCase]) -> Table {
+    let mut t = Table::new(&["name", "CUSP", "EP-ideal", "EP-adapt"]);
+    for c in cases {
+        let base = (c.cusparse.cycles * CG_ITERS) as f64;
+        let cusp = base / (c.cusp.cycles * CG_ITERS) as f64;
+        let ideal = base / (c.ep_smem.cycles * CG_ITERS) as f64;
+        let adapt = base
+            / adapt_cycles(c.cusparse.cycles, c.ep_smem.cycles, c.ep_partition_time, CG_ITERS)
+                as f64;
+        t.row(&[
+            c.name.clone(),
+            format!("{cusp:.2}x"),
+            format!("{ideal:.2}x"),
+            format!("{adapt:.2}x"),
+        ]);
+    }
+    t
+}
+
+/// Fig 11: transactions normalized to CUSPARSE.
+pub fn fig11_table(cases: &[SpmvCase]) -> Table {
+    let mut t = Table::new(&["name", "CUSPARSE", "CUSP", "EP"]);
+    for c in cases {
+        let base = c.cusparse.total_transactions() as f64;
+        t.row(&[
+            c.name.clone(),
+            "1.00".into(),
+            format!("{:.2}", c.cusp.total_transactions() as f64 / base),
+            format!("{:.2}", c.ep_smem.total_transactions() as f64 / base),
+        ]);
+    }
+    t
+}
+
+/// Fig 12: EP-smem vs EP-tex speedups over CUSPARSE.
+pub fn fig12_table(cases: &[SpmvCase]) -> Table {
+    let mut t = Table::new(&["name", "EP-smem", "EP-tex", "smem resident", "tex resident"]);
+    for c in cases {
+        let base = c.cusparse.cycles as f64;
+        t.row(&[
+            c.name.clone(),
+            format!("{:.2}x", base / c.ep_smem.cycles as f64),
+            format!("{:.2}x", base / c.ep_tex.cycles as f64),
+            c.ep_smem.resident_blocks.to_string(),
+            c.ep_tex.resident_blocks.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Table 3: EP-ideal cycles across thread block sizes × cache types.
+pub fn table3_table(gpu: &GpuConfig, seed: u64) -> Table {
+    let blocks = [256usize, 512, 1024];
+    let mut t = Table::new(&[
+        "name", "tex 256", "smem 256", "tex 512", "smem 512", "tex 1024", "smem 1024",
+    ]);
+    for (name, a) in gen::paper_suite(seed) {
+        let mut cells = vec![name.to_string()];
+        for &b in &blocks {
+            let (smem, tex) = spmv_case_light(gpu, &a, b, seed);
+            cells.push((tex.cycles * CG_ITERS).to_string());
+            cells.push((smem.cycles * CG_ITERS).to_string());
+        }
+        t.row(&cells);
+    }
+    t
+}
+
+/// (smem, tex) results for one matrix at one block size (EP only).
+fn spmv_case_light(gpu: &GpuConfig, a: &Coo, block: usize, seed: u64) -> (SimResult, SimResult) {
+    let g = a.affinity_graph();
+    let k = k_for(a.nnz(), block);
+    let mut o = ep::EpOpts::default();
+    o.vp.seed = seed;
+    let p = ep::partition_edges(&g, k, &o);
+    let b = blocked_for(a, &p, block);
+    (sim_blocked_launch(gpu, &b, true, block), sim_blocked_launch(gpu, &b, false, block))
+}
+
+// -------------------------------------------------- applications (fig13-15)
+
+pub struct AppCase {
+    pub name: String,
+    pub block_size: usize,
+    pub original: SimResult,
+    pub optimized: SimResult,
+    pub partition_time: Duration,
+    pub quality_default: u64,
+    pub quality_ep: u64,
+    pub launches: u64,
+}
+
+/// One app at one block size: original vs EP-optimized (cache per
+/// Table 1), partition measured.
+pub fn app_case(gpu: &GpuConfig, app: &apps::AppWorkload, block: usize, seed: u64) -> AppCase {
+    let g = &app.graph;
+    let k = k_for(g.m(), block);
+    let use_smem = app.cache == CacheType::Software;
+
+    let original = sim_original(gpu, g, block);
+    let t0 = Instant::now();
+    let sched = crate::coordinator::optimize_graph(
+        g,
+        &crate::coordinator::OptOptions { k, seed, ..Default::default() },
+    );
+    let partition_time = t0.elapsed();
+    let optimized =
+        sim_task_graph_launch(gpu, g, &sched.partition, Some(&sched.layout), use_smem, block);
+    let quality_default =
+        quality::vertex_cut_cost(g, &default_sched::default_partition(g.m(), k));
+    AppCase {
+        name: app.name.to_string(),
+        block_size: block,
+        original,
+        optimized,
+        partition_time,
+        quality_default,
+        quality_ep: sched.quality,
+        launches: app.kernel_launches as u64,
+    }
+}
+
+/// Fig 13: per-app, per-block-size original vs EP-adapt runtimes.
+pub fn fig13_cases(gpu: &GpuConfig, seed: u64) -> Vec<AppCase> {
+    let mut rows = Vec::new();
+    for app in apps::rodinia_suite(seed) {
+        for &b in &app.block_sizes {
+            rows.push(app_case(gpu, &app, b, seed));
+        }
+    }
+    rows
+}
+
+/// EP-ideal = per-launch kernel speedup (optimization cost amortized);
+/// EP-adapt = with the *measured* partition wall time charged at the
+/// modelled 1 GHz clock.  At laptop workload scale the adaptive column
+/// often stays at 1.00x — the controller honouring its "no slowdown"
+/// guarantee while the optimizer can't amortize — whereas the paper's
+/// second-scale kernels amortize within a few launches; both columns
+/// are reported for that reason (see EXPERIMENTS.md).
+pub fn fig13_table(cases: &[AppCase]) -> Table {
+    let mut t = Table::new(&[
+        "app", "block", "original cyc", "EP-ideal cyc", "ideal", "adapt", "q default", "q EP",
+    ]);
+    for c in cases {
+        let adapt =
+            adapt_cycles(c.original.cycles, c.optimized.cycles, c.partition_time, c.launches);
+        let orig_total = c.original.cycles * c.launches;
+        let ideal_total = c.optimized.cycles * c.launches;
+        t.row(&[
+            c.name.clone(),
+            c.block_size.to_string(),
+            orig_total.to_string(),
+            ideal_total.to_string(),
+            format!("{:.2}x", orig_total as f64 / ideal_total.max(1) as f64),
+            format!("{:.2}x", orig_total as f64 / adapt.max(1) as f64),
+            c.quality_default.to_string(),
+            c.quality_ep.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Fig 14: best EP vs best original per app (normalized runtime).
+pub fn fig14_table(cases: &[AppCase]) -> Table {
+    use std::collections::BTreeMap;
+    let mut best: BTreeMap<&str, (u64, u64, u64)> = BTreeMap::new();
+    for c in cases {
+        let adapt =
+            adapt_cycles(c.original.cycles, c.optimized.cycles, c.partition_time, c.launches);
+        let orig_total = c.original.cycles * c.launches;
+        let ideal_total = c.optimized.cycles * c.launches;
+        let e =
+            best.entry(c.name.as_str() as &str).or_insert((u64::MAX, u64::MAX, u64::MAX));
+        e.0 = e.0.min(orig_total);
+        e.1 = e.1.min(ideal_total);
+        e.2 = e.2.min(adapt);
+    }
+    let mut t = Table::new(&[
+        "app", "best original", "best EP-ideal", "best EP-adapt", "ideal norm", "adapt norm",
+    ]);
+    for (name, (orig, ideal, adapt)) in best {
+        t.row(&[
+            name.to_string(),
+            orig.to_string(),
+            ideal.to_string(),
+            adapt.to_string(),
+            format!("{:.2}", ideal as f64 / orig as f64),
+            format!("{:.2}", adapt as f64 / orig as f64),
+        ]);
+    }
+    t
+}
+
+/// Fig 15: read transactions normalized to original, per app/block.
+pub fn fig15_table(cases: &[AppCase]) -> Table {
+    let mut t = Table::new(&["app", "block", "original rd tx", "EP rd tx", "normalized"]);
+    for c in cases {
+        t.row(&[
+            c.name.clone(),
+            c.block_size.to_string(),
+            c.original.read_transactions.to_string(),
+            c.optimized.read_transactions.to_string(),
+            format!(
+                "{:.2}",
+                c.optimized.read_transactions as f64 / c.original.read_transactions.max(1) as f64
+            ),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------- ablations
+
+/// Ablations over the EP design choices DESIGN.md calls out.
+pub fn ablation_table(seed: u64) -> Table {
+    use crate::partition::vertex::Matching;
+    let mut t = Table::new(&["graph", "variant", "quality", "time"]);
+    for (name, mat) in [
+        ("cant", gen::cant_s(2048, seed)),
+        ("scircuit", gen::scircuit_s(8192, seed + 7)),
+        ("mc2depi", gen::mc2depi_s(96, seed + 6)),
+    ] {
+        let g = mat.affinity_graph();
+        let k = k_for(g.m(), BLOCK_SIZE);
+        let run = |label: &str, o: ep::EpOpts, t: &mut Table| {
+            let t0 = Instant::now();
+            let p = ep::partition_edges(&g, k, &o);
+            let dt = t0.elapsed();
+            t.row(&[
+                name.to_string(),
+                label.to_string(),
+                quality::vertex_cut_cost(&g, &p).to_string(),
+                format!("{:.3}s", dt.as_secs_f64()),
+            ]);
+        };
+        let base = || {
+            let mut o = ep::EpOpts::default();
+            o.vp.seed = seed;
+            o
+        };
+        run("baseline (fast k-way, HEM, index chain)", base(), &mut t);
+        {
+            let mut o = base();
+            o.fast_kway = false;
+            run("recursive bisection (quality mode)", o, &mut t);
+        }
+        {
+            let mut o = base();
+            o.vp.matching = Matching::Random;
+            run("random matching", o, &mut t);
+        }
+        {
+            let mut o = base();
+            o.vp.fm_passes = 0;
+            run("no FM refinement", o, &mut t);
+        }
+        {
+            let mut o = base();
+            o.vp.fm_passes = 4;
+            run("4 FM passes", o, &mut t);
+        }
+        {
+            let mut o = base();
+            o.chain = ep::ChainOrder::Random;
+            run("random clone chain", o, &mut t);
+        }
+    }
+    t
+}
+
+// ------------------------------------------------------------- graph builds
+
+/// Build-cost microbench: affinity graph + transform per matrix.
+pub fn partition_scaling_table(seed: u64) -> Table {
+    let mut t = Table::new(&["graph", "m", "EP time", "HP time", "HP/EP"]);
+    for (name, scale) in [("scircuit-1x", 4096), ("scircuit-2x", 8192), ("scircuit-4x", 16384)] {
+        let a = gen::scircuit_s(scale, seed);
+        let g = a.affinity_graph();
+        let k = k_for(g.m(), BLOCK_SIZE);
+        let t0 = Instant::now();
+        let mut o = ep::EpOpts::default();
+        o.vp.seed = seed;
+        let _ = ep::partition_edges(&g, k, &o);
+        let ept = t0.elapsed();
+        let t1 = Instant::now();
+        let _ = hypergraph::partition_edges(&g, k, &hypergraph::HpOpts { seed, ..Default::default() });
+        let hpt = t1.elapsed();
+        t.row(&[
+            name.to_string(),
+            g.m().to_string(),
+            format!("{:.3}s", ept.as_secs_f64()),
+            format!("{:.3}s", hpt.as_secs_f64()),
+            format!("{:.1}x", hpt.as_secs_f64() / ept.as_secs_f64().max(1e-9)),
+        ]);
+    }
+    t
+}
+
+/// Headline sanity: the §1 claim that ~73% of cfd's loads are redundant
+/// under default scheduling.
+pub fn redundancy_headline(seed: u64) -> String {
+    let g = Graph::from_edges(0, vec![]);
+    let _ = g;
+    let app = apps::cfd(110, seed);
+    let k = k_for(app.graph.m(), 256);
+    let p = default_sched::default_partition(app.graph.m(), k);
+    let f = stats::redundant_load_fraction(&app.graph, &p.assign, k);
+    format!("cfd redundant-load fraction under default schedule: {:.1}%", f * 100.0)
+}

@@ -1,0 +1,76 @@
+//! Memory-coalescing model: a warp's 32 simultaneous accesses are
+//! serviced by one off-chip transaction per distinct `seg_bytes`
+//! segment they touch (Kepler global-memory semantics).
+
+/// Count transactions for a stream of element indices accessed by one
+/// warp *in lockstep order*: consecutive `warp` indices form one memory
+/// instruction; distinct segments per instruction are summed.
+pub fn warp_transactions(indices: &[u32], warp: usize, elem_bytes: usize, seg_bytes: usize) -> u64 {
+    let per_seg = (seg_bytes / elem_bytes).max(1) as u32;
+    let mut total = 0u64;
+    let mut segs: Vec<u32> = Vec::with_capacity(warp);
+    for chunk in indices.chunks(warp) {
+        segs.clear();
+        segs.extend(chunk.iter().map(|&i| i / per_seg));
+        segs.sort_unstable();
+        segs.dedup();
+        total += segs.len() as u64;
+    }
+    total
+}
+
+/// Transactions to fetch a *set* of element indices once (the staged
+/// fill loop of Fig 8d): the loop walks the gather list with coalesced
+/// threads, so the cost is the number of distinct segments in the set.
+pub fn set_transactions(indices: &[u32], elem_bytes: usize, seg_bytes: usize) -> u64 {
+    let per_seg = (seg_bytes / elem_bytes).max(1) as u32;
+    let mut segs: Vec<u32> = indices.iter().map(|&i| i / per_seg).collect();
+    segs.sort_unstable();
+    segs.dedup();
+    segs.len() as u64
+}
+
+/// Transactions to stream a contiguous array of `n` elements (vals/cols
+/// arrays, fully coalesced).
+pub fn stream_transactions(n: usize, elem_bytes: usize, seg_bytes: usize) -> u64 {
+    ((n * elem_bytes) as u64).div_ceil(seg_bytes as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_warp_is_one_transaction() {
+        let idx: Vec<u32> = (0..32).collect();
+        assert_eq!(warp_transactions(&idx, 32, 4, 128), 1);
+    }
+
+    #[test]
+    fn strided_warp_is_fully_diverged() {
+        // stride 32 elements = every lane its own segment
+        let idx: Vec<u32> = (0..32).map(|i| i * 32).collect();
+        assert_eq!(warp_transactions(&idx, 32, 4, 128), 32);
+    }
+
+    #[test]
+    fn set_dedups_within_segment() {
+        // 64 indices all inside two 32-element segments
+        let idx: Vec<u32> = (0..64).map(|i| (i % 2) * 32 + (i / 2) % 16).collect();
+        assert_eq!(set_transactions(&idx, 4, 128), 2);
+    }
+
+    #[test]
+    fn stream_rounds_up() {
+        assert_eq!(stream_transactions(33, 4, 128), 2);
+        assert_eq!(stream_transactions(32, 4, 128), 1);
+        assert_eq!(stream_transactions(0, 4, 128), 0);
+    }
+
+    #[test]
+    fn partial_last_warp() {
+        let idx: Vec<u32> = (0..40).collect();
+        // 32 contiguous → 1, then 8 contiguous (same segment 1) → 1
+        assert_eq!(warp_transactions(&idx, 32, 4, 128), 2);
+    }
+}

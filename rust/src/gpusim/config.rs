@@ -1,0 +1,94 @@
+//! GPU model parameters — defaults mirror the paper's testbed, an
+//! NVIDIA GeForce GTX680 (Kepler GK104): 8 SMs, 48 KB shared memory and
+//! 48 KB texture cache per SM, 128-byte coalesced memory transactions,
+//! 32-byte texture cache lines, up to 2048 resident threads per SM.
+//!
+//! The timing model is a deliberately simple, documented linear model —
+//! the paper's metric chain is partition quality → off-chip transactions
+//! → runtime, and the simulator's job is to reproduce the first two
+//! links exactly and the third qualitatively (who wins, by what factor).
+
+#[derive(Clone, Debug)]
+pub struct GpuConfig {
+    /// streaming multiprocessors
+    pub n_sms: usize,
+    /// shared memory (software cache) per SM, bytes
+    pub smem_bytes: usize,
+    /// texture (hardware) cache per SM, bytes
+    pub tex_bytes: usize,
+    /// texture cache line size, bytes
+    pub tex_line_bytes: usize,
+    /// texture cache associativity
+    pub tex_ways: usize,
+    /// off-chip memory transaction (coalescing segment) size, bytes
+    pub seg_bytes: usize,
+    /// size of one data object (f32 element), bytes
+    pub elem_bytes: usize,
+    /// threads per thread block (tasks per block ≤ this)
+    pub block_threads: usize,
+    /// max resident threads per SM (occupancy ceiling)
+    pub max_threads_per_sm: usize,
+    /// max resident blocks per SM (hardware limit)
+    pub max_blocks_per_sm: usize,
+    /// compute cost per task, cycles
+    pub cycles_per_task: u64,
+    /// latency of one off-chip transaction, cycles
+    pub seg_latency: u64,
+    /// sustained off-chip throughput, bytes per cycle (bandwidth bound)
+    pub bytes_per_cycle: f64,
+}
+
+impl Default for GpuConfig {
+    fn default() -> Self {
+        GpuConfig {
+            n_sms: 8,
+            smem_bytes: 48 * 1024,
+            tex_bytes: 48 * 1024,
+            tex_line_bytes: 32,
+            tex_ways: 4,
+            seg_bytes: 128,
+            elem_bytes: 4,
+            block_threads: 1024,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 16,
+            cycles_per_task: 4,
+            seg_latency: 400,
+            // GTX680: ~192 GB/s at ~1 GHz core ≈ 192 B/cycle across the
+            // chip; per-SM share ≈ 24 B/cycle
+            bytes_per_cycle: 192.0,
+        }
+    }
+}
+
+impl GpuConfig {
+    /// Resident blocks per SM given a block's smem usage and thread
+    /// count — the occupancy calculation of §5.2 (in-2004's large smem
+    /// footprint "degrades thread level parallelism significantly").
+    pub fn resident_blocks(&self, smem_per_block: usize, threads_per_block: usize) -> usize {
+        let by_smem = if smem_per_block == 0 {
+            self.max_blocks_per_sm
+        } else {
+            (self.smem_bytes / smem_per_block).max(1)
+        };
+        let by_threads = (self.max_threads_per_sm / threads_per_block.max(1)).max(1);
+        by_smem.min(by_threads).min(self.max_blocks_per_sm).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_limits() {
+        let c = GpuConfig::default();
+        // 1024-thread blocks: at most 2 resident by thread budget
+        assert_eq!(c.resident_blocks(1024, 1024), 2);
+        // huge smem block: only 1 resident
+        assert_eq!(c.resident_blocks(40 * 1024, 256), 1);
+        // tiny blocks: capped by max_blocks_per_sm
+        assert_eq!(c.resident_blocks(16, 64), 16);
+        // zero smem doesn't divide by zero
+        assert_eq!(c.resident_blocks(0, 2048), 1);
+    }
+}

@@ -1,0 +1,131 @@
+//! GPU cache / memory-transaction simulator — the paper's GTX680
+//! testbed substitute (see DESIGN.md §2).
+//!
+//! Metric chain: a task schedule determines per-block data traffic;
+//! traffic coalesces into 128-byte off-chip transactions; transactions
+//! plus occupancy determine cycles.  Partition quality shows up as
+//! reduced x/y traffic exactly as in the paper's Fig 11/15.
+
+pub mod cache;
+pub mod coalesce;
+pub mod config;
+pub mod kernels;
+pub mod tasks;
+
+pub use config::GpuConfig;
+pub use kernels::{sim_blocked, sim_blocked_launch, sim_rowsplit};
+pub use tasks::{sim_original, sim_task_graph, sim_task_graph_launch};
+
+use kernels::BlockCost;
+
+/// Simulation outcome for one kernel launch.
+#[derive(Clone, Debug, Default)]
+pub struct SimResult {
+    /// off-chip read transactions (matrix streams + x gathers)
+    pub read_transactions: u64,
+    /// off-chip write transactions (y)
+    pub write_transactions: u64,
+    /// modelled kernel duration
+    pub cycles: u64,
+    /// resident blocks per SM under the launch's smem/thread usage
+    pub resident_blocks: usize,
+    /// peak smem bytes per block
+    pub smem_per_block: usize,
+    /// number of scheduled (non-empty) blocks
+    pub n_blocks: usize,
+    /// total tasks executed
+    pub tasks: u64,
+}
+
+impl SimResult {
+    pub fn total_transactions(&self) -> u64 {
+        self.read_transactions + self.write_transactions
+    }
+}
+
+/// Greedy list-scheduling of blocks onto SMs (the hardware assigns a
+/// ready block to the first SM with room) + the linear timing model:
+///
+///   block_time = max(compute, latency / residency, bandwidth)
+///     compute   = tasks · cycles_per_task
+///     latency   = tx · seg_latency  (overlapped across resident blocks)
+///     bandwidth = tx · seg_bytes / (bytes_per_cycle / n_sms)
+///   kernel     = max over SMs of Σ block_time on that SM
+pub(crate) fn schedule_blocks(
+    cfg: &GpuConfig,
+    blocks: &[BlockCost],
+    smem_per_block: usize,
+    threads_per_block: usize,
+) -> SimResult {
+    let resident = cfg.resident_blocks(smem_per_block, threads_per_block);
+    let per_sm_bw = cfg.bytes_per_cycle / cfg.n_sms as f64;
+    let mut sm_load = vec![0u64; cfg.n_sms];
+    let mut read_tx = 0u64;
+    let mut write_tx = 0u64;
+    let mut tasks = 0u64;
+    for b in blocks {
+        let tx = b.read_tx + b.write_tx;
+        let compute = b.tasks * cfg.cycles_per_task;
+        let latency = tx * cfg.seg_latency / resident as u64;
+        let bandwidth = (tx as f64 * cfg.seg_bytes as f64 / per_sm_bw) as u64;
+        let time = compute.max(latency).max(bandwidth);
+        // least-loaded SM gets the block
+        let sm = (0..cfg.n_sms).min_by_key(|&s| sm_load[s]).unwrap();
+        sm_load[sm] += time;
+        read_tx += b.read_tx;
+        write_tx += b.write_tx;
+        tasks += b.tasks;
+    }
+    SimResult {
+        read_transactions: read_tx,
+        write_transactions: write_tx,
+        cycles: sm_load.into_iter().max().unwrap_or(0),
+        resident_blocks: resident,
+        smem_per_block,
+        n_blocks: blocks.len(),
+        tasks,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::kernels::BlockCost;
+    use super::*;
+
+    #[test]
+    fn scheduling_balances_sms() {
+        let cfg = GpuConfig::default();
+        let blocks: Vec<BlockCost> = (0..16)
+            .map(|_| BlockCost { tasks: 1024, read_tx: 100, write_tx: 10 })
+            .collect();
+        let r = schedule_blocks(&cfg, &blocks, 1024, 1024);
+        // 16 equal blocks on 8 SMs → each SM runs exactly 2
+        let one = {
+            let tx = 110u64;
+            let compute = 1024 * cfg.cycles_per_task;
+            let latency = tx * cfg.seg_latency / r.resident_blocks as u64;
+            let bw = (tx as f64 * 128.0 / (cfg.bytes_per_cycle / 8.0)) as u64;
+            compute.max(latency).max(bw)
+        };
+        assert_eq!(r.cycles, 2 * one);
+        assert_eq!(r.read_transactions, 1600);
+    }
+
+    #[test]
+    fn low_occupancy_raises_latency_cost() {
+        let cfg = GpuConfig::default();
+        let blocks =
+            vec![BlockCost { tasks: 64, read_tx: 1000, write_tx: 0 }; 8];
+        let high = schedule_blocks(&cfg, &blocks, 1024, 256); // many resident
+        let low = schedule_blocks(&cfg, &blocks, 40 * 1024, 256); // 1 resident
+        assert!(low.cycles > high.cycles, "{} !> {}", low.cycles, high.cycles);
+    }
+
+    #[test]
+    fn empty_launch() {
+        let cfg = GpuConfig::default();
+        let r = schedule_blocks(&cfg, &[], 0, 256);
+        assert_eq!(r.cycles, 0);
+        assert_eq!(r.total_transactions(), 0);
+    }
+}

@@ -1,0 +1,180 @@
+//! Data-affinity graph (Definition 1 of the paper).
+//!
+//! Vertices are *data objects*, edges are *tasks* that touch exactly two
+//! data objects.  The graph is an undirected multigraph (two tasks may
+//! touch the same pair), stored as an edge list plus a CSR incidence
+//! structure so partitioners can iterate a vertex's incident tasks in
+//! O(degree).
+
+/// Edge id — tasks are identified by their index in `edges`.
+pub type EdgeId = u32;
+/// Vertex id — data objects.
+pub type VertexId = u32;
+
+#[derive(Clone, Debug)]
+pub struct Graph {
+    /// Number of vertices (data objects).
+    pub n: usize,
+    /// Task list: `edges[e] = (u, v)`; self-loops (u == v) are allowed
+    /// and model tasks whose two operands alias one object.
+    pub edges: Vec<(VertexId, VertexId)>,
+    /// CSR offsets into `inc`, length n + 1.
+    inc_ptr: Vec<u32>,
+    /// Incidence: for each vertex, (edge id, other endpoint) pairs.
+    inc: Vec<(EdgeId, VertexId)>,
+}
+
+impl Graph {
+    /// Build from an edge list. Panics if an endpoint is out of range.
+    pub fn from_edges(n: usize, edges: Vec<(VertexId, VertexId)>) -> Self {
+        let mut deg = vec![0u32; n];
+        for &(u, v) in &edges {
+            assert!((u as usize) < n && (v as usize) < n, "endpoint out of range");
+            deg[u as usize] += 1;
+            if u != v {
+                deg[v as usize] += 1;
+            }
+        }
+        let mut inc_ptr = vec![0u32; n + 1];
+        for i in 0..n {
+            inc_ptr[i + 1] = inc_ptr[i] + deg[i];
+        }
+        let mut cursor = inc_ptr[..n].to_vec();
+        let mut inc = vec![(0u32, 0u32); inc_ptr[n] as usize];
+        for (e, &(u, v)) in edges.iter().enumerate() {
+            let e = e as EdgeId;
+            inc[cursor[u as usize] as usize] = (e, v);
+            cursor[u as usize] += 1;
+            if u != v {
+                inc[cursor[v as usize] as usize] = (e, u);
+                cursor[v as usize] += 1;
+            }
+        }
+        Graph { n, edges, inc_ptr, inc }
+    }
+
+    /// Number of tasks (edges).
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Degree of vertex v = number of incident tasks (self-loops count once).
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> usize {
+        (self.inc_ptr[v as usize + 1] - self.inc_ptr[v as usize]) as usize
+    }
+
+    /// Incident (edge id, other endpoint) pairs of v.
+    #[inline]
+    pub fn incident(&self, v: VertexId) -> &[(EdgeId, VertexId)] {
+        &self.inc[self.inc_ptr[v as usize] as usize..self.inc_ptr[v as usize + 1] as usize]
+    }
+
+    /// Maximum vertex degree (d_max in the approximation bound).
+    pub fn max_degree(&self) -> usize {
+        (0..self.n as u32).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    /// Mean degree = 2m/n — the paper's "average data reuse" measure.
+    pub fn avg_degree(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.inc.len() as f64 / self.n as f64
+    }
+
+    /// Histogram of vertex degrees: `hist[d]` = #vertices of degree d.
+    /// This regenerates the paper's Fig 4 / Fig 5 series.
+    pub fn degree_histogram(&self) -> Vec<usize> {
+        let mut hist = vec![0usize; self.max_degree() + 1];
+        for v in 0..self.n as u32 {
+            hist[self.degree(v)] += 1;
+        }
+        hist
+    }
+
+    /// Sanity check of internal invariants (used by property tests).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.inc_ptr.len() != self.n + 1 {
+            return Err("inc_ptr length".into());
+        }
+        let loops = self.edges.iter().filter(|(u, v)| u == v).count();
+        if self.inc.len() != 2 * self.m() - loops {
+            return Err(format!(
+                "incidence size {} != 2m-loops {}",
+                self.inc.len(),
+                2 * self.m() - loops
+            ));
+        }
+        for v in 0..self.n as u32 {
+            for &(e, o) in self.incident(v) {
+                let (a, b) = self.edges[e as usize];
+                let ok = (a == v && b == o) || (b == v && a == o);
+                if !ok {
+                    return Err(format!("incidence mismatch at v={v} e={e}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> Graph {
+        Graph::from_edges(3, vec![(0, 1), (1, 2), (2, 0)])
+    }
+
+    #[test]
+    fn triangle_structure() {
+        let g = triangle();
+        assert_eq!(g.m(), 3);
+        assert_eq!(g.max_degree(), 2);
+        assert_eq!(g.avg_degree(), 2.0);
+        for v in 0..3 {
+            assert_eq!(g.degree(v), 2);
+        }
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn incident_edges_are_correct() {
+        let g = triangle();
+        let inc0: Vec<u32> = g.incident(0).iter().map(|&(e, _)| e).collect();
+        assert_eq!(inc0, vec![0, 2]); // edges (0,1) and (2,0)
+    }
+
+    #[test]
+    fn multigraph_and_self_loops() {
+        let g = Graph::from_edges(2, vec![(0, 1), (0, 1), (1, 1)]);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(1), 3); // two parallel + one self-loop
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn degree_histogram_counts() {
+        // star: center degree 3, leaves degree 1
+        let g = Graph::from_edges(4, vec![(0, 1), (0, 2), (0, 3)]);
+        let h = g.degree_histogram();
+        assert_eq!(h, vec![0, 3, 0, 1]);
+    }
+
+    #[test]
+    fn empty_and_isolated() {
+        let g = Graph::from_edges(3, vec![]);
+        assert_eq!(g.m(), 0);
+        assert_eq!(g.max_degree(), 0);
+        assert_eq!(g.degree_histogram(), vec![3]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "endpoint out of range")]
+    fn rejects_out_of_range() {
+        Graph::from_edges(2, vec![(0, 2)]);
+    }
+}

@@ -1,0 +1,228 @@
+//! Data-affinity graph generators.
+//!
+//! The paper evaluates on UF-collection matrices (cant, circuit5M,
+//! in-2004, mc2depi, scircuit, …) and Rodinia inputs we cannot ship.
+//! These generators synthesize graphs from the same structural families
+//! at laptop scale — what matters for partitioner behaviour is the
+//! *degree distribution and locality structure* (paper Fig 4/5), which
+//! each generator reproduces.  All generators are seeded/deterministic.
+
+use crate::util::rng::Pcg32;
+
+use super::csr::Graph;
+
+/// 2D grid mesh with 4-point stencil edges — the mc2depi / cfd family:
+/// nearly all vertices have degree 4 (interior), borders 2–3.
+pub fn grid_mesh(rows: usize, cols: usize) -> Graph {
+    let n = rows * cols;
+    let at = |r: usize, c: usize| (r * cols + c) as u32;
+    let mut edges = Vec::with_capacity(2 * n);
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                edges.push((at(r, c), at(r, c + 1)));
+            }
+            if r + 1 < rows {
+                edges.push((at(r, c), at(r + 1, c)));
+            }
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+/// Banded FEM-style graph — the cant family: each vertex connects to a
+/// dense clique-ish band of nearby vertices (structural-mechanics
+/// stencils give degrees clustered in the 20–40 range).
+pub fn fem_banded(n: usize, band: usize, fill: f64, seed: u64) -> Graph {
+    let mut rng = Pcg32::new(seed);
+    let mut edges = Vec::new();
+    for u in 0..n {
+        for d in 1..=band {
+            let v = u + d;
+            if v < n && rng.gen_f64() < fill {
+                edges.push((u as u32, v as u32));
+            }
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+/// Preferential-attachment (Barabási–Albert) power-law graph — the
+/// in-2004 / scircuit family (web / circuit graphs with heavy tails).
+pub fn power_law(n: usize, m_per_node: usize, seed: u64) -> Graph {
+    assert!(n > m_per_node && m_per_node >= 1);
+    let mut rng = Pcg32::new(seed);
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(n * m_per_node);
+    // endpoint pool: each vertex appears once per incident edge, so
+    // sampling uniformly from the pool = degree-proportional sampling.
+    let mut pool: Vec<u32> = Vec::with_capacity(2 * n * m_per_node);
+    // seed clique over the first m_per_node+1 vertices
+    for u in 0..=m_per_node {
+        for v in (u + 1)..=m_per_node {
+            edges.push((u as u32, v as u32));
+            pool.push(u as u32);
+            pool.push(v as u32);
+        }
+    }
+    for u in (m_per_node + 1)..n {
+        let mut targets = Vec::with_capacity(m_per_node);
+        let mut guard = 0;
+        while targets.len() < m_per_node && guard < 100 * m_per_node {
+            let t = pool[rng.gen_range(pool.len())];
+            if t as usize != u && !targets.contains(&t) {
+                targets.push(t);
+            }
+            guard += 1;
+        }
+        for &t in &targets {
+            edges.push((u as u32, t));
+            pool.push(u as u32);
+            pool.push(t);
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+/// Uniform random multigraph — the circuit5M family's "more random"
+/// degree spread (Erdős–Rényi G(n, m)).
+pub fn random_uniform(n: usize, m: usize, seed: u64) -> Graph {
+    let mut rng = Pcg32::new(seed);
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        let u = rng.gen_range(n) as u32;
+        let mut v = rng.gen_range(n) as u32;
+        if u == v {
+            v = ((v as usize + 1) % n) as u32;
+        }
+        edges.push((u, v));
+    }
+    Graph::from_edges(n, edges)
+}
+
+/// Unstructured triangular-mesh interaction graph — the cfd benchmark's
+/// particle-interaction pattern (Fig 1): bounded degree ≤ `max_deg`,
+/// mesh-like locality.  Built by jittered-grid triangulation.
+pub fn cfd_mesh(rows: usize, cols: usize, seed: u64) -> Graph {
+    let mut rng = Pcg32::new(seed);
+    let n = rows * cols;
+    let at = |r: usize, c: usize| (r * cols + c) as u32;
+    let mut edges = Vec::new();
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                edges.push((at(r, c), at(r, c + 1)));
+            }
+            if r + 1 < rows {
+                edges.push((at(r, c), at(r + 1, c)));
+            }
+            // one diagonal per cell, orientation random — triangulation
+            if c + 1 < cols && r + 1 < rows {
+                if rng.gen_f64() < 0.5 {
+                    edges.push((at(r, c), at(r + 1, c + 1)));
+                } else {
+                    edges.push((at(r, c + 1), at(r + 1, c)));
+                }
+            }
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+/// Complete graph K_n (special-pattern: clique).
+pub fn clique(n: usize) -> Graph {
+    let mut edges = Vec::with_capacity(n * (n - 1) / 2);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            edges.push((u as u32, v as u32));
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+/// Path graph P_n (special-pattern: path).
+pub fn path(n: usize) -> Graph {
+    Graph::from_edges(n, (0..n.saturating_sub(1)).map(|i| (i as u32, i as u32 + 1)).collect())
+}
+
+/// Complete bipartite K_{a,b} (special-pattern; streamcluster-like
+/// point-to-centers sharing).
+pub fn complete_bipartite(a: usize, b: usize) -> Graph {
+    let mut edges = Vec::with_capacity(a * b);
+    for u in 0..a {
+        for v in 0..b {
+            edges.push((u as u32, (a + v) as u32));
+        }
+    }
+    Graph::from_edges(a + b, edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_mesh_degrees() {
+        let g = grid_mesh(10, 10);
+        assert_eq!(g.n, 100);
+        assert_eq!(g.m(), 2 * 10 * 9);
+        let h = g.degree_histogram();
+        // 4 corners deg 2, 32 border deg 3, 64 interior deg 4
+        assert_eq!(h[2], 4);
+        assert_eq!(h[3], 32);
+        assert_eq!(h[4], 64);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn power_law_has_heavy_tail() {
+        let g = power_law(2000, 3, 42);
+        g.validate().unwrap();
+        let h = g.degree_histogram();
+        let dmax = g.max_degree();
+        // heavy tail: the max degree must far exceed the mean
+        assert!(dmax as f64 > 5.0 * g.avg_degree(), "dmax={dmax} avg={}", g.avg_degree());
+        // most vertices sit at the minimum attachment degree
+        let low: usize = h.iter().take(6).sum();
+        assert!(low > g.n / 2);
+    }
+
+    #[test]
+    fn fem_banded_degree_range() {
+        let g = fem_banded(500, 30, 0.9, 7);
+        g.validate().unwrap();
+        assert!(g.max_degree() <= 60);
+        assert!(g.avg_degree() > 20.0);
+    }
+
+    #[test]
+    fn cfd_mesh_bounded_degree() {
+        let g = cfd_mesh(20, 20, 3);
+        g.validate().unwrap();
+        assert!(g.max_degree() <= 8);
+        assert!((2.0..=8.0).contains(&g.avg_degree()));
+    }
+
+    #[test]
+    fn special_patterns_shapes() {
+        assert_eq!(clique(6).m(), 15);
+        assert_eq!(path(6).m(), 5);
+        let kb = complete_bipartite(3, 4);
+        assert_eq!(kb.m(), 12);
+        assert_eq!(kb.degree(0), 4);
+        assert_eq!(kb.degree(3), 3);
+    }
+
+    #[test]
+    fn random_uniform_counts() {
+        let g = random_uniform(100, 500, 9);
+        assert_eq!(g.m(), 500);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = power_law(300, 2, 5);
+        let b = power_law(300, 2, 5);
+        assert_eq!(a.edges, b.edges);
+    }
+}

@@ -1,0 +1,12 @@
+//! Data-affinity graphs: structure, generators, statistics.
+//!
+//! `csr::Graph` is the edge-centric model's substrate (Definition 1):
+//! vertices = data objects, edges = tasks.  `gen` synthesizes the
+//! structural families the paper evaluates on; `stats` computes the
+//! degree-distribution analyses of Fig 4/5 and the reuse go/no-go check.
+
+pub mod csr;
+pub mod gen;
+pub mod stats;
+
+pub use csr::{EdgeId, Graph, VertexId};

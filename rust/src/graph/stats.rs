@@ -1,0 +1,141 @@
+//! Degree-distribution statistics (paper Fig 4 & Fig 5) and the reuse
+//! check the optimization pipeline performs before partitioning
+//! (Section 4.1: "check if there is enough data reuse by checking the
+//! degree frequency of the data-affinity graph").
+
+use super::csr::Graph;
+
+/// One (degree, frequency) series point, frequency as a fraction of n.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DegreePoint {
+    pub degree: usize,
+    pub count: usize,
+    pub fraction: f64,
+}
+
+/// Full degree-frequency series (Fig 4), skipping empty degrees.
+pub fn degree_distribution(g: &Graph) -> Vec<DegreePoint> {
+    let hist = g.degree_histogram();
+    let n = g.n.max(1) as f64;
+    hist.iter()
+        .enumerate()
+        .filter(|&(_, &c)| c > 0)
+        .map(|(degree, &count)| DegreePoint { degree, count, fraction: count as f64 / n })
+        .collect()
+}
+
+/// Log-log regression slope of the degree distribution tail (Fig 5):
+/// power-law graphs show a clear negative slope; mesh-like graphs don't
+/// have enough distinct degrees to fit (returns None).
+pub fn log_log_slope(g: &Graph) -> Option<f64> {
+    let pts: Vec<(f64, f64)> = degree_distribution(g)
+        .into_iter()
+        .filter(|p| p.degree >= 1 && p.count >= 1)
+        .map(|p| ((p.degree as f64).ln(), (p.count as f64).ln()))
+        .collect();
+    if pts.len() < 4 {
+        return None;
+    }
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return None;
+    }
+    Some((n * sxy - sx * sy) / denom)
+}
+
+/// The pipeline's go/no-go reuse check: average degree ≈ average number
+/// of tasks sharing a data object.  The paper notes streamcluster's
+/// average degree ≤ 2 yields little benefit; we use that as the default
+/// threshold.
+pub fn has_enough_reuse(g: &Graph, threshold: f64) -> bool {
+    g.avg_degree() > threshold
+}
+
+/// Paper §1: fraction of loads that are redundant under a given schedule
+/// upper bound — with perfect intra-block sharing, every appearance of a
+/// vertex beyond its first in a block is redundant. For the *default*
+/// contiguous schedule this reproduces the paper's "73.4% of particle
+/// loads are redundant" style headline for cfd.
+pub fn redundant_load_fraction(g: &Graph, assign: &[u32], k: usize) -> f64 {
+    use std::collections::HashSet;
+    let mut per_block: Vec<HashSet<u32>> = vec![HashSet::new(); k];
+    let mut total_loads = 0usize;
+    let mut unique_loads = 0usize;
+    for (e, &(u, v)) in g.edges.iter().enumerate() {
+        let b = assign[e] as usize;
+        for w in [u, v] {
+            total_loads += 1;
+            if per_block[b].insert(w) {
+                unique_loads += 1;
+            }
+        }
+    }
+    if total_loads == 0 {
+        return 0.0;
+    }
+    (total_loads - unique_loads) as f64 / total_loads as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn distribution_sums_to_n() {
+        let g = gen::grid_mesh(8, 8);
+        let total: usize = degree_distribution(&g).iter().map(|p| p.count).sum();
+        assert_eq!(total, g.n);
+    }
+
+    #[test]
+    fn power_law_slope_is_negative() {
+        let g = gen::power_law(3000, 3, 1);
+        let s = log_log_slope(&g).expect("enough distinct degrees");
+        assert!(s < -0.8, "slope {s} not power-law-ish");
+    }
+
+    #[test]
+    fn mesh_has_no_meaningful_slope() {
+        let g = gen::grid_mesh(30, 30);
+        // only 3 distinct degrees → None
+        assert!(log_log_slope(&g).is_none());
+    }
+
+    #[test]
+    fn reuse_check_matches_paper_examples() {
+        // streamcluster-like: each thread pairs a unique point with the
+        // current candidate center → star-shaped, avg degree ≤ 2
+        let sc = gen::complete_bipartite(2000, 1);
+        assert!(sc.avg_degree() < 2.1);
+        assert!(!has_enough_reuse(&sc, 2.1));
+        // cfd-like mesh: plenty of reuse
+        let cfd = gen::cfd_mesh(30, 30, 2);
+        assert!(has_enough_reuse(&cfd, 2.1));
+    }
+
+    #[test]
+    fn redundant_fraction_bounds() {
+        let g = gen::cfd_mesh(20, 20, 5);
+        let k = 8;
+        let chunk = g.m().div_ceil(k);
+        let assign: Vec<u32> = (0..g.m()).map(|e| (e / chunk) as u32).collect();
+        let f = redundant_load_fraction(&g, &assign, k);
+        assert!((0.0..1.0).contains(&f));
+        // a mesh under contiguous scheduling has substantial redundancy
+        assert!(f > 0.3, "fraction {f}");
+    }
+
+    #[test]
+    fn redundant_fraction_zero_for_disjoint() {
+        // two disjoint edges in separate blocks: no redundancy
+        let g = crate::graph::csr::Graph::from_edges(4, vec![(0, 1), (2, 3)]);
+        let f = redundant_load_fraction(&g, &[0, 1], 2);
+        assert_eq!(f, 0.0);
+    }
+}

@@ -1,0 +1,30 @@
+//! # epgraph — edge-centric graph partitioning for GPU caching
+//!
+//! Production-grade reproduction of *"A Graph-based Model for GPU
+//! Caching Problems"* (Li et al., 2016): the EP (balanced edge
+//! partition) model for scheduling GPU tasks into thread blocks to
+//! maximize shared-cache reuse, together with every substrate the
+//! paper's evaluation needs — a multilevel vertex partitioner, a
+//! hypergraph-partitioner baseline, PowerGraph baselines, a GPU cache /
+//! memory-transaction simulator, sparse-matrix workloads, six
+//! Rodinia-like application generators, and a PJRT runtime that executes
+//! the AOT-compiled blocked-SPMV kernel (JAX/Pallas at build time, rust
+//! on the request path).
+//!
+//! Layering (see DESIGN.md):
+//! * L3 (this crate) — partitioning, simulation, the asynchronous
+//!   optimization pipeline with adaptive overhead control, CLI/benches.
+//! * L2/L1 (python/, build-time only) — the blocked-gather SPMV kernel
+//!   (Pallas) inside a jax model, lowered once to `artifacts/*.hlo.txt`.
+//! * runtime — loads those artifacts via PJRT and executes them from
+//!   rust; python never runs on the request path.
+
+pub mod apps;
+pub mod coordinator;
+pub mod experiments;
+pub mod gpusim;
+pub mod graph;
+pub mod partition;
+pub mod runtime;
+pub mod sparse;
+pub mod util;

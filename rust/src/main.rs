@@ -1,0 +1,271 @@
+//! epgraph CLI — leader entrypoint.
+//!
+//! Subcommands (no clap offline; a small hand parser):
+//!   epgraph partition --matrix <name|file.mtx> [--k N] [--method M] [--seed S]
+//!   epgraph cg        --matrix <name|poisson:side> [--block N] [--iters N] [--wait]
+//!   epgraph simulate  --app <name> [--block N]
+//!   epgraph bench     <fig4|fig6|table2|fig10|fig11|fig12|table3|fig13|fig14|fig15|ablation|scaling|all>
+//!   epgraph info
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use epgraph::coordinator::{run_cg, CgRunConfig};
+use epgraph::experiments as exp;
+use epgraph::gpusim::GpuConfig;
+use epgraph::partition::{quality, Method};
+use epgraph::runtime::{default_artifacts_dir, Engine};
+use epgraph::sparse::{gen, matrix_market, Coo};
+use epgraph::util::rng::Pcg32;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn get_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> usize {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn load_matrix(spec: &str, seed: u64) -> Result<Coo> {
+    if spec.ends_with(".mtx") {
+        return matrix_market::read_matrix_market_file(spec).map_err(|e| anyhow!("{e}"));
+    }
+    let suite = gen::paper_suite(seed);
+    suite
+        .into_iter()
+        .find(|(n, _)| *n == spec)
+        .map(|(_, m)| m)
+        .ok_or_else(|| {
+            anyhow!("unknown matrix '{spec}' — use a .mtx path or one of: cant, circuit5M, cop20k_A, Ga41As41H72, in-2004, mac_econ_fwd500, mc2depi, scircuit")
+        })
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let (pos, flags) = parse_flags(args);
+    let seed = get_usize(&flags, "seed", 42) as u64;
+    match pos.first().map(String::as_str) {
+        Some("partition") => cmd_partition(&flags, seed),
+        Some("cg") => cmd_cg(&flags, seed),
+        Some("simulate") => cmd_simulate(&flags, seed),
+        Some("bench") => cmd_bench(pos.get(1).map(String::as_str).unwrap_or("all"), seed),
+        Some("info") => cmd_info(),
+        _ => {
+            println!(
+                "epgraph — edge-centric graph partitioning for GPU caching\n\n\
+                 usage:\n  epgraph partition --matrix <name|file.mtx> [--k N] [--method ep|hypergraph|pg-random|pg-greedy|default]\n  \
+                 epgraph cg --matrix <name|poisson:side> [--block N] [--iters N] [--wait]\n  \
+                 epgraph simulate --app <b+tree|bfs|cfd|gaussian|particlefilter|streamcluster> [--block N]\n  \
+                 epgraph bench <fig4|fig6|table2|fig10|fig11|fig12|table3|fig13|fig14|fig15|ablation|scaling|headline|all>\n  \
+                 epgraph info"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_partition(flags: &HashMap<String, String>, seed: u64) -> Result<()> {
+    let spec = flags.get("matrix").ok_or_else(|| anyhow!("--matrix required"))?;
+    let a = load_matrix(spec, seed)?;
+    let g = a.affinity_graph();
+    let k = get_usize(flags, "k", g.m().div_ceil(exp::BLOCK_SIZE).max(1));
+    let method = flags
+        .get("method")
+        .map(|m| Method::from_name(m).ok_or_else(|| anyhow!("unknown method {m}")))
+        .transpose()?
+        .unwrap_or(Method::Ep);
+
+    println!("matrix {spec}: {}x{}, nnz={}", a.nrows, a.ncols, a.nnz());
+    println!("affinity graph: n={} m={} avg_deg={:.2}", g.n, g.m(), g.avg_degree());
+    let t0 = std::time::Instant::now();
+    let p = method.partition(&g, k, seed);
+    let dt = t0.elapsed();
+    println!(
+        "{} partition: k={k} quality={} balance={:.3} time={:.3}s",
+        method.name(),
+        quality::vertex_cut_cost(&g, &p),
+        quality::balance_factor(&p),
+        dt.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_cg(flags: &HashMap<String, String>, seed: u64) -> Result<()> {
+    let spec = flags.get("matrix").map(String::as_str).unwrap_or("poisson:64");
+    let a = if let Some(side) = spec.strip_prefix("poisson:") {
+        gen::spd_poisson(side.parse()?)
+    } else {
+        load_matrix(spec, seed)?
+    };
+    anyhow::ensure!(a.nrows == a.ncols, "cg needs a square matrix");
+    let mut engine = Engine::load(&default_artifacts_dir())?;
+    println!("pjrt platform: {}", engine.platform());
+
+    let cfg = CgRunConfig {
+        block_size: get_usize(flags, "block", 1024),
+        max_iters: get_usize(flags, "iters", 400),
+        wait_for_optimizer: flags.contains_key("wait"),
+        seed,
+        ..Default::default()
+    };
+    let mut rng = Pcg32::new(seed);
+    let rhs: Vec<f32> = (0..a.nrows).map(|_| rng.gen_f32() - 0.5).collect();
+    let report = run_cg(&mut engine, &a, &rhs, &cfg)?;
+    println!(
+        "cg: {} iterations, residual {:.3e}, wall {:.3}s",
+        report.iterations, report.residual, report.wall_time.as_secs_f64()
+    );
+    println!(
+        "schedule: default quality {} -> optimized {:?} (partition {:.3}s, switched at {:?}, fell back: {})",
+        report.quality_default,
+        report.quality_optimized,
+        report.partition_time.as_secs_f64(),
+        report.switched_at,
+        report.fell_back
+    );
+    println!(
+        "simulated kernel: original {} cyc/iter, optimized {:?} cyc/iter, speedup {:?}",
+        report.sim_original.cycles,
+        report.sim_optimized.as_ref().map(|s| s.cycles),
+        report.kernel_speedup().map(|s| format!("{s:.2}x"))
+    );
+    Ok(())
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>, seed: u64) -> Result<()> {
+    let name = flags.get("app").map(String::as_str).unwrap_or("cfd");
+    let suite = epgraph::apps::rodinia_suite(seed);
+    let app = suite
+        .iter()
+        .find(|a| a.name == name)
+        .ok_or_else(|| anyhow!("unknown app '{name}'"))?;
+    let gpu = GpuConfig::default();
+    let block = get_usize(flags, "block", app.block_sizes[app.block_sizes.len() - 1]);
+    let case = exp::app_case(&gpu, app, block, seed);
+    println!("{} @ block {}", case.name, case.block_size);
+    println!(
+        "original:  {} cycles, {} read tx",
+        case.original.cycles, case.original.read_transactions
+    );
+    println!(
+        "EP:        {} cycles, {} read tx (partition {:.3}s, quality {} -> {})",
+        case.optimized.cycles,
+        case.optimized.read_transactions,
+        case.partition_time.as_secs_f64(),
+        case.quality_default,
+        case.quality_ep
+    );
+    Ok(())
+}
+
+fn cmd_bench(which: &str, seed: u64) -> Result<()> {
+    let gpu = GpuConfig::default();
+    match which {
+        "fig4" | "fig5" => exp::fig4_degree(seed).print(),
+        "fig6" => exp::fig6_table(&exp::fig6_partition(seed)).print(),
+        "table2" | "fig10" | "fig11" | "fig12" => {
+            println!("== building SPMV suite (8 matrices) ==");
+            let cases = exp::table2_cases(&gpu, seed);
+            match which {
+                "table2" => exp::table2_table(&cases).print(),
+                "fig10" => exp::fig10_table(&cases).print(),
+                "fig11" => exp::fig11_table(&cases).print(),
+                _ => exp::fig12_table(&cases).print(),
+            }
+        }
+        "table3" => exp::table3_table(&gpu, seed).print(),
+        "fig13" | "fig14" | "fig15" => {
+            println!("== building application suite ==");
+            let cases = exp::fig13_cases(&gpu, seed);
+            match which {
+                "fig13" => exp::fig13_table(&cases).print(),
+                "fig14" => exp::fig14_table(&cases).print(),
+                _ => exp::fig15_table(&cases).print(),
+            }
+        }
+        "ablation" => exp::ablation_table(seed).print(),
+        "scaling" => exp::partition_scaling_table(seed).print(),
+        "headline" => println!("{}", exp::redundancy_headline(seed)),
+        "all" => {
+            println!("### Fig 4/5: degree distributions");
+            exp::fig4_degree(seed).print();
+            println!("\n### {}", exp::redundancy_headline(seed));
+            println!("\n### Fig 6: partition model comparison");
+            exp::fig6_table(&exp::fig6_partition(seed)).print();
+            println!("\n### Table 2 / Fig 10 / Fig 11 / Fig 12: SPMV");
+            let cases = exp::table2_cases(&gpu, seed);
+            exp::table2_table(&cases).print();
+            println!();
+            exp::fig10_table(&cases).print();
+            println!();
+            exp::fig11_table(&cases).print();
+            println!();
+            exp::fig12_table(&cases).print();
+            println!("\n### Table 3: thread block sizes");
+            exp::table3_table(&gpu, seed).print();
+            println!("\n### Fig 13/14/15: applications");
+            let apps = exp::fig13_cases(&gpu, seed);
+            exp::fig13_table(&apps).print();
+            println!();
+            exp::fig14_table(&apps).print();
+            println!();
+            exp::fig15_table(&apps).print();
+            println!("\n### Ablations");
+            exp::ablation_table(seed).print();
+            println!("\n### Partition-time scaling");
+            exp::partition_scaling_table(seed).print();
+        }
+        other => return Err(anyhow!("unknown bench target '{other}'")),
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!(
+        "epgraph {} — reproduction of Li et al. 2016 (EP model for GPU caching)",
+        env!("CARGO_PKG_VERSION")
+    );
+    let dir = default_artifacts_dir();
+    match epgraph::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts at {:?}: {} entries", m.dir, m.artifacts.len());
+            for a in &m.artifacts {
+                println!(
+                    "  {}_{}: n_in={} n_out={} k={} e={} c={} ({})",
+                    a.entry, a.config, a.n_in, a.n_out, a.k, a.e, a.c, a.file
+                );
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    match Engine::load(&dir) {
+        Ok(engine) => println!("pjrt: {} OK", engine.platform()),
+        Err(e) => println!("pjrt: unavailable ({e})"),
+    }
+    Ok(())
+}

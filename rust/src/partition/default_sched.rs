@@ -1,0 +1,57 @@
+//! Default task scheduling — the baseline every figure normalizes to.
+//!
+//! On a real GPU the default schedule maps thread t to task t and packs
+//! `block_size` consecutive threads into a thread block; i.e. tasks are
+//! split into contiguous chunks in their input order.  (This is also
+//! what CUSP does after sorting nonzeros by row.)
+
+use crate::graph::Graph;
+
+use super::quality::EdgePartition;
+
+/// Contiguous chunking of tasks in input order into k blocks.
+pub fn default_partition(m: usize, k: usize) -> EdgePartition {
+    assert!(k >= 1);
+    let chunk = m.div_ceil(k).max(1);
+    EdgePartition::new(k, (0..m).map(|e| ((e / chunk) as u32).min(k as u32 - 1)).collect())
+}
+
+/// Default schedule for a graph's tasks with a given block size (tasks
+/// per block), returning (partition, k).
+pub fn default_for_block_size(g: &Graph, block_size: usize) -> EdgePartition {
+    let k = g.m().div_ceil(block_size).max(1);
+    default_partition(g.m(), k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::quality::balance_factor;
+
+    #[test]
+    fn chunks_are_contiguous_and_balanced() {
+        let p = default_partition(10, 3);
+        assert_eq!(p.assign, vec![0, 0, 0, 0, 1, 1, 1, 1, 2, 2]);
+        assert!(balance_factor(&p) <= 4.0 / (10.0 / 3.0) + 1e-9);
+    }
+
+    #[test]
+    fn exact_division() {
+        let p = default_partition(8, 4);
+        assert_eq!(p.loads(), vec![2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn more_blocks_than_tasks() {
+        let p = default_partition(2, 4);
+        assert_eq!(p.assign.len(), 2);
+        assert!(p.assign.iter().all(|&b| b < 4));
+    }
+
+    #[test]
+    fn block_size_rounding() {
+        let g = crate::graph::gen::path(10); // 9 edges
+        let p = default_for_block_size(&g, 4);
+        assert_eq!(p.k, 3);
+    }
+}

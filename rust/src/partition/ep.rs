@@ -1,0 +1,363 @@
+//! The EP model: balanced edge partitioning via clone-and-connect
+//! (paper §3.2–3.4, Definitions 3–4, Theorems 1–2).
+//!
+//! Transformation (Definition 3): every vertex v of degree d is replaced
+//! by d *cloned vertices*, one per incident edge; each original edge
+//! keeps its two clones as endpoints; each vertex's clones are chained
+//! into a path by d−1 *auxiliary edges* (we connect in index order, the
+//! paper's practical choice).  Original edges get a huge weight so a
+//! balanced min-cut vertex partition only ever cuts auxiliary edges;
+//! reconstruction (Definition 4) reads each original edge's block off
+//! its (co-located) clone endpoints.
+//!
+//! Implementation note: heavy-edge matching contracts every original
+//! edge in its first pass — each clone has exactly one heavy incident
+//! edge, whose partner's unique heavy edge points straight back, so the
+//! pair always matches (no conflicts are possible).  We perform that
+//! first contraction *deterministically* during the transform, yielding
+//! the "task graph": one vertex per original edge (weight = tasks = 1),
+//! auxiliary edges between tasks that share a data object.  This is
+//! exactly the clone-and-connect graph after one guaranteed coarsening
+//! level, and makes "no original edge is cut" structural rather than
+//! weight-enforced.  `clone_graph()` still materializes the explicit
+//! transformed graph for the theory-facing tests (Theorem 1).
+
+use crate::graph::Graph;
+use crate::util::rng::Pcg32;
+
+use super::quality::EdgePartition;
+use super::vertex::{self, VpOpts, WGraph};
+
+/// Weight assigned to original edges in the explicit clone graph.
+pub const ORIG_EDGE_WEIGHT: i64 = 1 << 40;
+
+/// Below this many tasks, recursive bisection is used even when
+/// `fast_kway` is set (it is cheap there and noticeably better on small
+/// meshes); above it, the single-coarsening k-way scheme wins on time.
+pub const FAST_KWAY_MIN_TASKS: usize = 200_000;
+
+/// How a vertex's clones are chained (ablation: the paper claims any
+/// order is legal; `Index` is its practical choice).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChainOrder {
+    Index,
+    Random,
+}
+
+#[derive(Clone, Debug)]
+pub struct EpOpts {
+    pub vp: VpOpts,
+    pub chain: ChainOrder,
+    /// true → single-coarsening k-way scheme (3-4x faster, the paper's
+    /// low-overhead requirement); false → recursive bisection with FM at
+    /// every level (higher quality on thin/banded graphs).  See the
+    /// `kway vs RB` ablation in EXPERIMENTS.md.
+    pub fast_kway: bool,
+}
+
+impl Default for EpOpts {
+    fn default() -> Self {
+        EpOpts { vp: VpOpts::default(), chain: ChainOrder::Index, fast_kway: true }
+    }
+}
+
+/// The contracted transform: task graph with one vertex per original
+/// edge and auxiliary unit edges chaining each data object's incident
+/// tasks.  `aux[(a, b)]` may be parallel (two tasks sharing both
+/// endpoints); WGraph merges them by weight.
+pub fn task_graph(g: &Graph, chain: ChainOrder, seed: u64) -> WGraph {
+    let m = g.m();
+    let mut rng = Pcg32::new(seed);
+    let mut aux: Vec<(u32, u32, i64)> = Vec::with_capacity(2 * m);
+    let mut scratch: Vec<u32> = Vec::new();
+    for v in 0..g.n as u32 {
+        let inc = g.incident(v);
+        if inc.len() < 2 {
+            continue;
+        }
+        scratch.clear();
+        scratch.extend(inc.iter().map(|&(e, _)| e));
+        // self-loops contribute the same edge twice in `incident` only
+        // once (csr stores loops once) — but parallel tasks appear; the
+        // chain just needs *some* path over incident tasks.
+        match chain {
+            ChainOrder::Index => scratch.sort_unstable(),
+            ChainOrder::Random => rng.shuffle(&mut scratch),
+        }
+        for w in scratch.windows(2) {
+            if w[0] != w[1] {
+                aux.push((w[0], w[1], 1));
+            }
+        }
+    }
+    WGraph::from_edges(m, vec![1i64; m], &aux)
+}
+
+/// The explicit clone-and-connect graph D' (Definition 3), for tests /
+/// theory.  Returns (graph, clone_owner) where `clone_owner[c] =
+/// (original vertex, original edge)` for each clone vertex c.
+pub fn clone_graph(g: &Graph, chain: ChainOrder, seed: u64) -> (WGraph, Vec<(u32, u32)>) {
+    let mut rng = Pcg32::new(seed);
+    // clone ids: for edge e = (u, v), clone 2e belongs to u, 2e+1 to v.
+    let m = g.m();
+    let n_clones = 2 * m;
+    let mut owner = vec![(0u32, 0u32); n_clones];
+    let mut edges: Vec<(u32, u32, i64)> = Vec::with_capacity(3 * m);
+    for (e, &(u, v)) in g.edges.iter().enumerate() {
+        let e = e as u32;
+        owner[2 * e as usize] = (u, e);
+        owner[2 * e as usize + 1] = (v, e);
+        edges.push((2 * e, 2 * e + 1, ORIG_EDGE_WEIGHT));
+    }
+    // chain each vertex's clones
+    let mut scratch: Vec<u32> = Vec::new();
+    for v in 0..g.n as u32 {
+        scratch.clear();
+        for &(e, _) in g.incident(v) {
+            let (a, b) = g.edges[e as usize];
+            // which side(s) of edge e are v's clones? (both for a loop)
+            if a == v {
+                scratch.push(2 * e);
+            }
+            if b == v {
+                scratch.push(2 * e + 1);
+            }
+        }
+        match chain {
+            ChainOrder::Index => scratch.sort_unstable(),
+            ChainOrder::Random => rng.shuffle(&mut scratch),
+        }
+        for w in scratch.windows(2) {
+            edges.push((w[0], w[1], 1));
+        }
+    }
+    (WGraph::from_edges(n_clones, vec![1i64; n_clones], &edges), owner)
+}
+
+/// The EP algorithm: transform → balanced vertex partition → reconstruct.
+pub fn partition_edges(g: &Graph, k: usize, opts: &EpOpts) -> EdgePartition {
+    if g.m() == 0 {
+        return EdgePartition::new(k.max(1), vec![]);
+    }
+    let tg = task_graph(g, opts.chain, opts.vp.seed);
+    // fast k-way only pays off on large graphs; below the threshold the
+    // recursive-bisection path is both cheap and higher quality
+    let part = if opts.fast_kway && tg.n >= FAST_KWAY_MIN_TASKS {
+        vertex::partition_kway(&tg, k, &opts.vp)
+    } else {
+        vertex::partition_kway_rb(&tg, k, &opts.vp)
+    };
+    EdgePartition::new(k, part)
+}
+
+/// Enforce a hard per-block task cap (the thread-block size: a block of
+/// `cap` threads can run at most `cap` tasks).  Greedily evicts the
+/// cheapest task (by vertex-cut delta) from each overloaded block into
+/// the least-loaded block.  Terminates: every move strictly reduces the
+/// overload mass.
+pub fn rebalance_to_cap(g: &Graph, p: &mut EdgePartition, cap: usize) {
+    let k = p.k;
+    let mut loads = vec![0usize; k];
+    for &b in &p.assign {
+        loads[b as usize] += 1;
+    }
+    if loads.iter().all(|&l| l <= cap) {
+        return;
+    }
+    assert!(cap * k >= g.m(), "cap {cap} x k {k} cannot hold {} tasks", g.m());
+    // per-vertex per-block incidence counts (sparse: vertices touch few blocks)
+    use std::collections::HashMap;
+    let mut cnt: Vec<HashMap<u32, u32>> = vec![HashMap::new(); g.n];
+    for (e, &b) in p.assign.iter().enumerate() {
+        let (u, v) = g.edges[e];
+        *cnt[u as usize].entry(b).or_insert(0) += 1;
+        if u != v {
+            *cnt[v as usize].entry(b).or_insert(0) += 1;
+        }
+    }
+    // tasks per block for scanning
+    let mut tasks_of: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for (e, &b) in p.assign.iter().enumerate() {
+        tasks_of[b as usize].push(e as u32);
+    }
+    loop {
+        let Some(from) = (0..k).filter(|&b| loads[b] > cap).max_by_key(|&b| loads[b]) else {
+            break;
+        };
+        let fallback = (0..k).filter(|&b| loads[b] < cap).min_by_key(|&b| loads[b]).unwrap();
+        // cheapest (task, target) pair: prefer target blocks that already
+        // hold one of the task's endpoints (affinity move, delta ≤ 0)
+        let mut best: Option<(i64, usize, usize)> = None; // (delta, idx, to)
+        for (i, &e) in tasks_of[from].iter().enumerate() {
+            if p.assign[e as usize] != from as u32 {
+                continue; // stale entry
+            }
+            let (u, v) = g.edges[e as usize];
+            let ends = if u == v { vec![u] } else { vec![u, v] };
+            // candidate targets: blocks holding an endpoint, plus fallback
+            let mut targets: Vec<usize> = ends
+                .iter()
+                .flat_map(|&w| cnt[w as usize].keys().copied())
+                .map(|b| b as usize)
+                .filter(|&b| b != from && loads[b] < cap)
+                .collect();
+            targets.push(fallback);
+            targets.sort_unstable();
+            targets.dedup();
+            for to in targets {
+                let mut delta = 0i64;
+                for &w in &ends {
+                    let m = &cnt[w as usize];
+                    if m.get(&(from as u32)).copied().unwrap_or(0) == 1 {
+                        delta -= 1; // w leaves `from` entirely
+                    }
+                    if m.get(&(to as u32)).copied().unwrap_or(0) == 0 {
+                        delta += 1; // w newly appears in `to`
+                    }
+                }
+                if best.map_or(true, |(bd, _, _)| delta < bd) {
+                    best = Some((delta, i, to));
+                }
+            }
+            if best.map_or(false, |(bd, _, _)| bd <= -2) {
+                break; // cannot do better for a binary task
+            }
+        }
+        let (_, idx, to) = best.expect("overloaded block has tasks and a target");
+        let e = tasks_of[from][idx];
+        tasks_of[from].swap_remove(idx);
+        tasks_of[to].push(e);
+        p.assign[e as usize] = to as u32;
+        loads[from] -= 1;
+        loads[to] += 1;
+        let (u, v) = g.edges[e as usize];
+        let ends = if u == v { vec![u] } else { vec![u, v] };
+        for &w in &ends {
+            let m = &mut cnt[w as usize];
+            let c = m.get_mut(&(from as u32)).unwrap();
+            *c -= 1;
+            if *c == 0 {
+                m.remove(&(from as u32));
+            }
+            *m.entry(to as u32).or_insert(0) += 1;
+        }
+    }
+}
+
+/// Auxiliary-edge cut cost of a task-graph partition — the quantity
+/// Theorem 1 upper-bounds the reconstructed vertex-cut cost with.
+pub fn aux_cut_cost(g: &Graph, p: &EdgePartition, chain: ChainOrder, seed: u64) -> u64 {
+    let tg = task_graph(g, chain, seed);
+    tg.edge_cut(&p.assign) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::quality::{balance_factor, vertex_cut_cost};
+    use crate::partition::default_sched::default_partition;
+    use crate::partition::powergraph;
+
+    #[test]
+    fn task_graph_shape() {
+        // triangle: 3 tasks; each vertex of degree 2 adds 1 aux edge
+        let g = gen::clique(3);
+        let tg = task_graph(&g, ChainOrder::Index, 0);
+        assert_eq!(tg.n, 3);
+        let edge_count: usize = (0..tg.n as u32).map(|v| tg.neighbors(v).count()).sum::<usize>() / 2;
+        assert_eq!(edge_count, 3); // 3 vertices × (2−1) aux, all distinct pairs
+    }
+
+    #[test]
+    fn clone_graph_matches_definition() {
+        let g = gen::cfd_mesh(6, 6, 1);
+        let (cg, owner) = clone_graph(&g, ChainOrder::Index, 0);
+        assert_eq!(cg.n, 2 * g.m()); // 2m clones (Definition 3)
+        // every clone owned by a real vertex/edge
+        for &(v, e) in &owner {
+            assert!((v as usize) < g.n && (e as usize) < g.m());
+        }
+        // heavy edges: exactly m of them
+        let heavy: usize = (0..cg.n as u32)
+            .map(|v| cg.neighbors(v).filter(|&(_, w)| w >= ORIG_EDGE_WEIGHT).count())
+            .sum::<usize>()
+            / 2;
+        assert_eq!(heavy, g.m());
+    }
+
+    /// Theorem 1: C_ep(D) ≤ aux-edge cut of the vertex partition of D'.
+    #[test]
+    fn theorem1_invariant_holds() {
+        let g = gen::cfd_mesh(12, 12, 3);
+        let k = 8;
+        let p = partition_edges(&g, k, &EpOpts::default());
+        let cep = vertex_cut_cost(&g, &p);
+        let aux = aux_cut_cost(&g, &p, ChainOrder::Index, 0);
+        assert!(cep <= aux, "C_ep {cep} > aux cut {aux}");
+    }
+
+    #[test]
+    fn fig3_example_reaches_optimal() {
+        // 6-interaction example of Fig 3: EP should find the cost-1 split
+        let g = Graph::from_edges(7, vec![(0, 1), (1, 2), (1, 3), (3, 4), (4, 5), (5, 6)]);
+        let p = partition_edges(&g, 2, &EpOpts::default());
+        assert_eq!(p.loads(), vec![3, 3]);
+        assert_eq!(vertex_cut_cost(&g, &p), 1);
+    }
+
+    use crate::graph::Graph;
+
+    #[test]
+    fn ep_beats_default_and_powergraph_on_mesh() {
+        let g = gen::cfd_mesh(24, 24, 7);
+        let k = 8;
+        let ep = vertex_cut_cost(&g, &partition_edges(&g, k, &EpOpts::default()));
+        let def = vertex_cut_cost(&g, &default_partition(g.m(), k));
+        let rnd = vertex_cut_cost(&g, &powergraph::random_partition(&g, k, 1));
+        let grd = vertex_cut_cost(&g, &powergraph::greedy_partition(&g, k, 1));
+        assert!(ep < def, "ep {ep} !< default {def}");
+        assert!(ep < rnd, "ep {ep} !< random {rnd}");
+        assert!(ep < grd, "ep {ep} !< greedy {grd}");
+    }
+
+    #[test]
+    fn ep_balance_is_metis_grade() {
+        // paper: balance factor typically < 1.03 at UF-collection scale;
+        // recursive bisection compounds eps per level, so at this small
+        // scale we assert the same order of balance (< 1.10)
+        let g = gen::power_law(2000, 3, 11);
+        let p = partition_edges(&g, 16, &EpOpts::default());
+        let bf = balance_factor(&p);
+        assert!(bf < 1.10, "balance factor {bf}");
+    }
+
+    #[test]
+    fn chain_order_random_is_legal() {
+        // the paper: any clone-chaining order is *legal* (correctness);
+        // quality may differ (that's the ablation_chain bench)
+        let g = gen::cfd_mesh(10, 10, 5);
+        let opts = EpOpts { chain: ChainOrder::Random, ..Default::default() };
+        let p = partition_edges(&g, 4, &opts);
+        assert_eq!(p.assign.len(), g.m());
+        assert!(p.assign.iter().all(|&b| b < 4));
+        // Theorem 1 still holds for the random chain order
+        let cep = vertex_cut_cost(&g, &p);
+        let aux = aux_cut_cost(&g, &p, ChainOrder::Random, opts.vp.seed);
+        assert!(cep <= aux, "C_ep {cep} > aux {aux}");
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::from_edges(5, vec![]);
+        let p = partition_edges(&g, 4, &EpOpts::default());
+        assert!(p.assign.is_empty());
+    }
+
+    #[test]
+    fn k1_costs_zero() {
+        let g = gen::power_law(300, 2, 3);
+        let p = partition_edges(&g, 1, &EpOpts::default());
+        assert_eq!(vertex_cut_cost(&g, &p), 0);
+    }
+}

@@ -1,0 +1,493 @@
+//! Multilevel hypergraph partitioner — the hMETIS/PaToH-class baseline
+//! (paper §3.3, Fig 6 / Table 2 comparisons).
+//!
+//! Model: a vertex per *task*, a hyperedge per *data object* covering
+//! every task that touches it.  Minimizing the connectivity metric
+//! Σ_he (λ(he) − 1) under balanced task counts is *exactly* the paper's
+//! vertex-cut cost, so HP quality is directly comparable to EP quality.
+//!
+//! The implementation is a faithful multilevel scheme — first-choice
+//! coarsening on hyperedge-connectivity, balanced greedy initial
+//! assignment, and FM refinement on the (λ−1) metric — run with more
+//! refinement work than the EP path, mirroring the quality/overhead
+//! trade-off the paper measures (HP ≈ EP quality at ≫ cost).
+
+use crate::graph::Graph;
+use crate::util::rng::Pcg32;
+
+use super::quality::EdgePartition;
+
+#[derive(Clone, Debug)]
+pub struct Hypergraph {
+    /// number of vertices (tasks)
+    pub n: usize,
+    /// pins of each hyperedge (tasks covered by one data object)
+    pub pins: Vec<Vec<u32>>,
+    /// vertex weights (coarsened tasks)
+    pub vwgt: Vec<i64>,
+    /// hyperedge weights (merged identical nets)
+    pub hewgt: Vec<i64>,
+}
+
+impl Hypergraph {
+    /// Build the task hypergraph of a data-affinity graph: hyperedge per
+    /// data object with degree ≥ 2 (degree-1 objects can never be cut).
+    pub fn from_affinity(g: &Graph) -> Self {
+        let mut pins = Vec::new();
+        for v in 0..g.n as u32 {
+            let inc = g.incident(v);
+            if inc.len() >= 2 {
+                let mut p: Vec<u32> = inc.iter().map(|&(e, _)| e).collect();
+                p.sort_unstable();
+                p.dedup();
+                if p.len() >= 2 {
+                    pins.push(p);
+                }
+            }
+        }
+        let hewgt = vec![1i64; pins.len()];
+        Hypergraph { n: g.m(), pins, vwgt: vec![1; g.m()], hewgt }
+    }
+
+    /// Connectivity cost Σ w_he (λ(he) − 1) for an assignment.
+    pub fn connectivity_cost(&self, assign: &[u32], k: usize) -> u64 {
+        let mut seen = vec![usize::MAX; k];
+        let mut cost = 0u64;
+        for (h, pins) in self.pins.iter().enumerate() {
+            let mut lambda = 0u64;
+            for &t in pins {
+                let b = assign[t as usize] as usize;
+                if seen[b] != h {
+                    seen[b] = h;
+                    lambda += 1;
+                }
+            }
+            cost += (lambda - 1) * self.hewgt[h] as u64;
+        }
+        cost
+    }
+
+    fn total_vwgt(&self) -> i64 {
+        self.vwgt.iter().sum()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct HpOpts {
+    pub eps: f64,
+    pub seed: u64,
+    pub coarsen_to: usize,
+    /// FM passes per level — HP is deliberately configured heavier than EP.
+    pub fm_passes: usize,
+    /// independent V-cycles; best result kept (hMETIS-style).
+    pub vcycles: usize,
+}
+
+impl Default for HpOpts {
+    fn default() -> Self {
+        HpOpts { eps: 0.03, seed: 0xBEEF, coarsen_to: 120, fm_passes: 4, vcycles: 2 }
+    }
+}
+
+/// k-way balanced hypergraph partition of the tasks of `g`.
+pub fn partition_edges(g: &Graph, k: usize, opts: &HpOpts) -> EdgePartition {
+    let hg = Hypergraph::from_affinity(g);
+    let mut rng = Pcg32::new(opts.seed);
+    let mut best: Option<(u64, Vec<u32>)> = None;
+    for _ in 0..opts.vcycles.max(1) {
+        let mut assign = vcycle(&hg, k, opts, &mut rng);
+        rebalance(&hg, &mut assign, k, opts.eps);
+        let cost = hg.connectivity_cost(&assign, k);
+        if best.as_ref().map_or(true, |(bc, _)| cost < *bc) {
+            best = Some((cost, assign));
+        }
+    }
+    EdgePartition::new(k, best.unwrap().1)
+}
+
+fn vcycle(hg: &Hypergraph, k: usize, opts: &HpOpts, rng: &mut Pcg32) -> Vec<u32> {
+    // --- coarsen ---
+    let mut levels: Vec<(Hypergraph, Vec<u32>)> = Vec::new();
+    let mut cur = hg.clone();
+    while cur.n > opts.coarsen_to.max(4 * k) {
+        let cmap = first_choice_matching(&cur, rng);
+        let coarse = contract(&cur, &cmap);
+        if coarse.n as f64 > cur.n as f64 * 0.95 {
+            break;
+        }
+        levels.push((cur, cmap));
+        cur = coarse;
+    }
+    // --- initial: balanced greedy scan ---
+    let mut assign = initial_greedy(&cur, k, opts, rng);
+    fm_refine(&cur, &mut assign, k, opts);
+    // --- uncoarsen ---
+    while let Some((finer, cmap)) = levels.pop() {
+        let mut fine = vec![0u32; finer.n];
+        for v in 0..finer.n {
+            fine[v] = assign[cmap[v] as usize];
+        }
+        assign = fine;
+        fm_refine(&finer, &mut assign, k, opts);
+        let _ = finer;
+    }
+    assign
+}
+
+/// First-choice coarsening: match each task with the task it shares the
+/// most (weighted) hyperedges with.
+fn first_choice_matching(hg: &Hypergraph, rng: &mut Pcg32) -> Vec<u32> {
+    // build task -> hyperedge incidence once
+    let mut inc: Vec<Vec<u32>> = vec![Vec::new(); hg.n];
+    for (h, pins) in hg.pins.iter().enumerate() {
+        for &t in pins {
+            inc[t as usize].push(h as u32);
+        }
+    }
+    let mut order: Vec<u32> = (0..hg.n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut mate = vec![u32::MAX; hg.n];
+    let mut score: Vec<i64> = vec![0; hg.n];
+    let mut touched: Vec<u32> = Vec::new();
+    for &v in &order {
+        if mate[v as usize] != u32::MAX {
+            continue;
+        }
+        touched.clear();
+        for &h in &inc[v as usize] {
+            let pins = &hg.pins[h as usize];
+            if pins.len() > 64 {
+                continue; // skip huge nets (hMETIS heuristic)
+            }
+            for &t in pins {
+                if t != v && mate[t as usize] == u32::MAX {
+                    if score[t as usize] == 0 {
+                        touched.push(t);
+                    }
+                    score[t as usize] += hg.hewgt[h as usize];
+                }
+            }
+        }
+        let mut best: Option<(i64, u32)> = None;
+        for &t in &touched {
+            if best.map_or(true, |(bs, _)| score[t as usize] > bs) {
+                best = Some((score[t as usize], t));
+            }
+            score[t as usize] = 0;
+        }
+        match best {
+            Some((_, t)) => {
+                mate[v as usize] = t;
+                mate[t as usize] = v;
+            }
+            None => mate[v as usize] = v,
+        }
+    }
+    // cmap
+    let mut cmap = vec![u32::MAX; hg.n];
+    let mut next = 0u32;
+    for v in 0..hg.n {
+        if cmap[v] == u32::MAX {
+            cmap[v] = next;
+            cmap[mate[v] as usize] = next;
+            next += 1;
+        }
+    }
+    cmap
+}
+
+fn contract(hg: &Hypergraph, cmap: &[u32]) -> Hypergraph {
+    let nc = (*cmap.iter().max().unwrap() + 1) as usize;
+    let mut vwgt = vec![0i64; nc];
+    for v in 0..hg.n {
+        vwgt[cmap[v] as usize] += hg.vwgt[v];
+    }
+    // project pins, drop singletons, merge identical nets
+    let mut nets: std::collections::HashMap<Vec<u32>, i64> = Default::default();
+    for (h, pins) in hg.pins.iter().enumerate() {
+        let mut p: Vec<u32> = pins.iter().map(|&t| cmap[t as usize]).collect();
+        p.sort_unstable();
+        p.dedup();
+        if p.len() >= 2 {
+            *nets.entry(p).or_insert(0) += hg.hewgt[h];
+        }
+    }
+    // sort for determinism (HashMap iteration order is seeded per-process)
+    let mut sorted: Vec<(Vec<u32>, i64)> = nets.into_iter().collect();
+    sorted.sort_unstable();
+    let mut pins = Vec::with_capacity(sorted.len());
+    let mut hewgt = Vec::with_capacity(sorted.len());
+    for (p, w) in sorted {
+        pins.push(p);
+        hewgt.push(w);
+    }
+    Hypergraph { n: nc, pins, vwgt, hewgt }
+}
+
+/// Balance-capped greedy: place tasks in random order into the block
+/// currently holding the most of their co-pinned tasks.
+fn initial_greedy(hg: &Hypergraph, k: usize, opts: &HpOpts, rng: &mut Pcg32) -> Vec<u32> {
+    let cap = ((hg.total_vwgt() as f64 / k as f64) * (1.0 + opts.eps)) as i64
+        + hg.vwgt.iter().copied().max().unwrap_or(1);
+    let mut inc: Vec<Vec<u32>> = vec![Vec::new(); hg.n];
+    for (h, pins) in hg.pins.iter().enumerate() {
+        for &t in pins {
+            inc[t as usize].push(h as u32);
+        }
+    }
+    let mut order: Vec<u32> = (0..hg.n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut assign = vec![u32::MAX; hg.n];
+    let mut loads = vec![0i64; k];
+    let mut gain = vec![0i64; k];
+    for &v in &order {
+        for b in gain.iter_mut() {
+            *b = 0;
+        }
+        for &h in &inc[v as usize] {
+            for &t in &hg.pins[h as usize] {
+                if assign[t as usize] != u32::MAX {
+                    gain[assign[t as usize] as usize] += hg.hewgt[h as usize];
+                }
+            }
+        }
+        let mut best = 0usize;
+        let mut best_score = i64::MIN;
+        for b in 0..k {
+            if loads[b] + hg.vwgt[v as usize] > cap {
+                continue;
+            }
+            // prefer affinity, tie-break least load
+            let s = gain[b] * 1024 - loads[b];
+            if s > best_score {
+                best_score = s;
+                best = b;
+            }
+        }
+        assign[v as usize] = best as u32;
+        loads[best] += hg.vwgt[v as usize];
+    }
+    assign
+}
+
+/// k-way FM on the connectivity metric: move boundary tasks to the block
+/// with the best (λ−1) delta, respecting balance; passes with rollback.
+fn fm_refine(hg: &Hypergraph, assign: &mut [u32], k: usize, opts: &HpOpts) {
+    let cap = ((hg.total_vwgt() as f64 / k as f64) * (1.0 + opts.eps)) as i64
+        + hg.vwgt.iter().copied().max().unwrap_or(1);
+    let mut inc: Vec<Vec<u32>> = vec![Vec::new(); hg.n];
+    for (h, pins) in hg.pins.iter().enumerate() {
+        for &t in pins {
+            inc[t as usize].push(h as u32);
+        }
+    }
+    let mut loads = vec![0i64; k];
+    for v in 0..hg.n {
+        loads[assign[v] as usize] += hg.vwgt[v];
+    }
+
+    for _pass in 0..opts.fm_passes {
+        let mut improved = false;
+        for v in 0..hg.n as u32 {
+            let from = assign[v as usize] as usize;
+            // count per-block pins of v's nets to evaluate moving v
+            let mut delta = vec![0i64; k];
+            for &h in &inc[v as usize] {
+                let pins = &hg.pins[h as usize];
+                let w = hg.hewgt[h as usize];
+                // pins in v's current block besides v, and per-target counts
+                let mut here = 0usize;
+                let mut counts_seen: Vec<(usize, usize)> = Vec::new();
+                for &t in pins {
+                    if t == v {
+                        continue;
+                    }
+                    let b = assign[t as usize] as usize;
+                    if b == from {
+                        here += 1;
+                    } else {
+                        match counts_seen.iter_mut().find(|(bb, _)| *bb == b) {
+                            Some((_, c)) => *c += 1,
+                            None => counts_seen.push((b, 1)),
+                        }
+                    }
+                }
+                for b in 0..k {
+                    if b == from {
+                        continue;
+                    }
+                    let there = counts_seen.iter().find(|(bb, _)| *bb == b).map_or(0, |(_, c)| *c);
+                    // moving v from `from` to b: net leaves `from` if v was
+                    // its only pin there (gain w), net enters b if it had no
+                    // pin there (cost w)
+                    if here == 0 {
+                        delta[b] -= w; // λ decreases at from
+                    }
+                    if there == 0 {
+                        delta[b] += w; // λ increases at b
+                    }
+                }
+            }
+            let mut best_b = from;
+            let mut best_d = 0i64;
+            for b in 0..k {
+                if b == from || loads[b] + hg.vwgt[v as usize] > cap {
+                    continue;
+                }
+                if delta[b] < best_d {
+                    best_d = delta[b];
+                    best_b = b;
+                }
+            }
+            if best_b != from {
+                assign[v as usize] = best_b as u32;
+                loads[from] -= hg.vwgt[v as usize];
+                loads[best_b] += hg.vwgt[v as usize];
+                improved = true;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+}
+
+/// Final balance repair on the finest level: while a block exceeds the
+/// cap, evict its cheapest-to-move task to the least-loaded block.
+/// (FM alone only moves for quality; uncoarsening can strand imbalance.)
+fn rebalance(hg: &Hypergraph, assign: &mut [u32], k: usize, eps: f64) {
+    let cap = ((hg.total_vwgt() as f64 / k as f64) * (1.0 + eps)).ceil() as i64;
+    let mut inc: Vec<Vec<u32>> = vec![Vec::new(); hg.n];
+    for (h, pins) in hg.pins.iter().enumerate() {
+        for &t in pins {
+            inc[t as usize].push(h as u32);
+        }
+    }
+    let mut loads = vec![0i64; k];
+    for v in 0..hg.n {
+        loads[assign[v] as usize] += hg.vwgt[v];
+    }
+    let mut guard = 4 * hg.n;
+    loop {
+        let Some(from) = (0..k).filter(|&b| loads[b] > cap).max_by_key(|&b| loads[b]) else {
+            break;
+        };
+        let to = (0..k).min_by_key(|&b| loads[b]).unwrap();
+        if guard == 0 || to == from {
+            break;
+        }
+        guard -= 1;
+        // cheapest vertex in `from` to move to `to` by connectivity delta
+        let mut best: Option<(i64, u32)> = None;
+        for v in 0..hg.n as u32 {
+            if assign[v as usize] != from as u32 {
+                continue;
+            }
+            let mut delta = 0i64;
+            for &h in &inc[v as usize] {
+                let pins = &hg.pins[h as usize];
+                let w = hg.hewgt[h as usize];
+                let mut here = 0usize;
+                let mut there = 0usize;
+                for &t in pins {
+                    if t == v {
+                        continue;
+                    }
+                    let b = assign[t as usize] as usize;
+                    if b == from {
+                        here += 1;
+                    } else if b == to {
+                        there += 1;
+                    }
+                }
+                if here == 0 {
+                    delta -= w;
+                }
+                if there == 0 {
+                    delta += w;
+                }
+            }
+            if best.map_or(true, |(bd, _)| delta < bd) {
+                best = Some((delta, v));
+            }
+        }
+        let Some((_, v)) = best else { break };
+        assign[v as usize] = to as u32;
+        loads[from] -= hg.vwgt[v as usize];
+        loads[to] += hg.vwgt[v as usize];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::quality::{balance_factor, vertex_cut_cost};
+
+    #[test]
+    fn connectivity_equals_vertex_cut() {
+        // the HP connectivity metric must equal the paper's C for any
+        // assignment (they're the same quantity in two formulations)
+        let g = gen::cfd_mesh(10, 10, 1);
+        let hg = Hypergraph::from_affinity(&g);
+        let k = 6;
+        let mut rng = Pcg32::new(3);
+        let assign: Vec<u32> = (0..g.m()).map(|_| rng.gen_range(k) as u32).collect();
+        let p = EdgePartition::new(k, assign.clone());
+        assert_eq!(hg.connectivity_cost(&assign, k), vertex_cut_cost(&g, &p));
+    }
+
+    #[test]
+    fn fig7_example_optimum() {
+        // paper Fig 7: 4 tasks sharing objects; both models reach cost 1.
+        // K4-minus-edge style affinity: objects a..e
+        //   t0=(a,b) t1=(b,c) t2=(c,d) t3=(d,e)
+        let g = Graph::from_edges(5, vec![(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let p = partition_edges(&g, 2, &HpOpts::default());
+        assert_eq!(vertex_cut_cost(&g, &p), 1);
+        assert_eq!(p.loads(), vec![2, 2]);
+    }
+
+    use crate::graph::Graph;
+
+    #[test]
+    fn hp_quality_close_to_ep() {
+        let g = gen::cfd_mesh(20, 20, 9);
+        let k = 8;
+        let hp = vertex_cut_cost(&g, &partition_edges(&g, k, &HpOpts::default()));
+        let ep = vertex_cut_cost(
+            &g,
+            &crate::partition::ep::partition_edges(&g, k, &Default::default()),
+        );
+        // paper: similar quality — within 2x either way at small scale
+        assert!(hp as f64 <= ep as f64 * 2.0 + 8.0, "hp {hp} vs ep {ep}");
+        assert!(ep as f64 <= hp as f64 * 2.0 + 8.0, "hp {hp} vs ep {ep}");
+    }
+
+    #[test]
+    fn hp_is_balanced() {
+        let g = gen::power_law(1000, 3, 17);
+        let p = partition_edges(&g, 8, &HpOpts::default());
+        assert!(balance_factor(&p) < 1.15, "bf {}", balance_factor(&p));
+    }
+
+    #[test]
+    fn degree_one_objects_ignored() {
+        // path graph: end vertices have degree 1 → not hyperedges
+        let g = gen::path(5);
+        let hg = Hypergraph::from_affinity(&g);
+        assert_eq!(hg.n, 4); // 4 tasks
+        assert_eq!(hg.pins.len(), 3); // 3 interior objects
+    }
+
+    #[test]
+    fn contract_preserves_cost_structure() {
+        let g = gen::cfd_mesh(8, 8, 2);
+        let hg = Hypergraph::from_affinity(&g);
+        let mut rng = Pcg32::new(1);
+        let cmap = first_choice_matching(&hg, &mut rng);
+        let c = contract(&hg, &cmap);
+        assert!(c.n < hg.n);
+        assert_eq!(c.vwgt.iter().sum::<i64>(), hg.vwgt.iter().sum::<i64>());
+    }
+}

@@ -1,0 +1,90 @@
+//! Task-partitioning algorithms: the paper's EP model plus every
+//! baseline it compares against.
+//!
+//! * `ep` — the contribution: clone-and-connect edge partitioning.
+//! * `vertex` — the multilevel balanced vertex partitioner EP reduces to.
+//! * `hypergraph` — hMETIS/PaToH-class baseline (quality peer, slow).
+//! * `powergraph` — PowerGraph random/greedy streaming baselines.
+//! * `default_sched` — the GPU's default contiguous schedule.
+//! * `special` — preset schedules for special graph shapes (§4.1).
+//! * `quality` — vertex-cut cost and balance metrics (Definition 2).
+
+pub mod default_sched;
+pub mod ep;
+pub mod hypergraph;
+pub mod powergraph;
+pub mod quality;
+pub mod special;
+pub mod vertex;
+
+pub use quality::{balance_factor, vertex_cut_cost, EdgePartition};
+
+/// Which partitioning method to use — the CLI / bench-facing selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Default,
+    Ep,
+    Hypergraph,
+    PgRandom,
+    PgGreedy,
+}
+
+impl Method {
+    pub const ALL: [Method; 5] =
+        [Method::Default, Method::Ep, Method::Hypergraph, Method::PgRandom, Method::PgGreedy];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Default => "default",
+            Method::Ep => "ep",
+            Method::Hypergraph => "hypergraph",
+            Method::PgRandom => "pg-random",
+            Method::PgGreedy => "pg-greedy",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Method> {
+        Method::ALL.iter().copied().find(|m| m.name() == s)
+    }
+
+    /// Run this method on a data-affinity graph with a fixed seed.
+    pub fn partition(&self, g: &crate::graph::Graph, k: usize, seed: u64) -> EdgePartition {
+        match self {
+            Method::Default => default_sched::default_partition(g.m(), k),
+            Method::Ep => {
+                let mut opts = ep::EpOpts::default();
+                opts.vp.seed = seed;
+                ep::partition_edges(g, k, &opts)
+            }
+            Method::Hypergraph => {
+                let opts = hypergraph::HpOpts { seed, ..Default::default() };
+                hypergraph::partition_edges(g, k, &opts)
+            }
+            Method::PgRandom => powergraph::random_partition(g, k, seed),
+            Method::PgGreedy => powergraph::greedy_partition(g, k, seed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_roundtrip_names() {
+        for m in Method::ALL {
+            assert_eq!(Method::from_name(m.name()), Some(m));
+        }
+        assert_eq!(Method::from_name("nope"), None);
+    }
+
+    #[test]
+    fn all_methods_produce_valid_partitions() {
+        let g = crate::graph::gen::cfd_mesh(10, 10, 1);
+        for m in Method::ALL {
+            let p = m.partition(&g, 4, 42);
+            assert_eq!(p.assign.len(), g.m(), "{}", m.name());
+            assert!(p.assign.iter().all(|&b| b < 4), "{}", m.name());
+        }
+    }
+}

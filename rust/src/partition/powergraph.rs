@@ -1,0 +1,163 @@
+//! PowerGraph-style edge-partition baselines (Gonzalez et al., OSDI'12),
+//! as described in the paper §3.3: both stream over all edges once.
+//!
+//! * `random_partition` — assign each edge to a uniformly random block.
+//! * `greedy_partition` — prefer blocks already holding an endpoint;
+//!   among candidates, pick the least loaded; cap loads for balance.
+//!
+//! The paper shows both produce *worse* quality than even the default
+//! schedule on GPU-style workloads — we must reproduce that result
+//! (Fig 6 "Random quality" / "Greedy quality" columns).
+
+use crate::graph::Graph;
+use crate::util::rng::Pcg32;
+
+use super::quality::EdgePartition;
+
+/// Uniform random assignment.
+pub fn random_partition(g: &Graph, k: usize, seed: u64) -> EdgePartition {
+    let mut rng = Pcg32::new(seed);
+    EdgePartition::new(k, (0..g.m()).map(|_| rng.gen_range(k) as u32).collect())
+}
+
+/// PowerGraph greedy heuristic.  For edge (u, v) with block sets
+/// B(u), B(v) already holding the endpoints:
+///   1. if B(u) ∩ B(v) ≠ ∅ → least-loaded block in the intersection;
+///   2. else if B(u) ∪ B(v) ≠ ∅ → least-loaded block in the union;
+///   3. else → least-loaded block overall.
+/// A block at the hard cap (balance guarantee) is never chosen.
+pub fn greedy_partition(g: &Graph, k: usize, seed: u64) -> EdgePartition {
+    let mut rng = Pcg32::new(seed);
+    let cap = (g.m().div_ceil(k) as f64 * 1.05).ceil() as usize + 1;
+    let mut loads = vec![0usize; k];
+    // block sets per vertex, kept as sorted small vecs (degrees are small
+    // relative to k in GPU workloads; worst case this is Σ p_v memory).
+    let mut vsets: Vec<Vec<u32>> = vec![Vec::new(); g.n];
+    let mut assign = vec![0u32; g.m()];
+
+    let pick_least = |cands: &mut dyn Iterator<Item = u32>,
+                          loads: &[usize],
+                          rng: &mut Pcg32|
+     -> Option<u32> {
+        let mut best: Option<(usize, u32)> = None;
+        let mut ties = 0usize;
+        for b in cands {
+            let l = loads[b as usize];
+            if l >= cap {
+                continue;
+            }
+            match best {
+                None => {
+                    best = Some((l, b));
+                    ties = 1;
+                }
+                Some((bl, _)) if l < bl => {
+                    best = Some((l, b));
+                    ties = 1;
+                }
+                Some((bl, _)) if l == bl => {
+                    // reservoir tie-break for unbiased choice
+                    ties += 1;
+                    if rng.gen_range(ties) == 0 {
+                        best = Some((l, b));
+                    }
+                }
+                _ => {}
+            }
+        }
+        best.map(|(_, b)| b)
+    };
+
+    for (e, &(u, v)) in g.edges.iter().enumerate() {
+        let bu = &vsets[u as usize];
+        let bv = &vsets[v as usize];
+        let inter: Vec<u32> = bu.iter().filter(|b| bv.contains(b)).copied().collect();
+        let chosen = if !inter.is_empty() {
+            pick_least(&mut inter.iter().copied(), &loads, &mut rng)
+        } else {
+            None
+        }
+        .or_else(|| {
+            let union: Vec<u32> = {
+                let mut s = bu.clone();
+                for &b in bv {
+                    if !s.contains(&b) {
+                        s.push(b);
+                    }
+                }
+                s
+            };
+            if union.is_empty() {
+                None
+            } else {
+                pick_least(&mut union.iter().copied(), &loads, &mut rng)
+            }
+        })
+        .or_else(|| pick_least(&mut (0..k as u32), &loads, &mut rng))
+        .unwrap_or_else(|| {
+            // everything at cap (can't happen with cap > m/k, but stay safe)
+            (0..k).min_by_key(|&b| loads[b]).unwrap() as u32
+        });
+
+        assign[e] = chosen;
+        loads[chosen as usize] += 1;
+        for w in [u, v] {
+            let set = &mut vsets[w as usize];
+            if !set.contains(&chosen) {
+                set.push(chosen);
+            }
+        }
+    }
+    EdgePartition::new(k, assign)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::quality::{balance_factor, vertex_cut_cost};
+    use crate::partition::default_sched::default_partition;
+
+    #[test]
+    fn random_is_valid_and_roughly_balanced() {
+        let g = gen::cfd_mesh(20, 20, 1);
+        let p = random_partition(&g, 8, 42);
+        assert_eq!(p.assign.len(), g.m());
+        assert!(balance_factor(&p) < 1.5);
+    }
+
+    #[test]
+    fn greedy_respects_cap() {
+        let g = gen::power_law(1000, 3, 2);
+        let p = greedy_partition(&g, 16, 7);
+        assert!(balance_factor(&p) < 1.12, "bf={}", balance_factor(&p));
+    }
+
+    #[test]
+    fn greedy_beats_random() {
+        let g = gen::cfd_mesh(30, 30, 3);
+        let k = 16;
+        let r = vertex_cut_cost(&g, &random_partition(&g, k, 1));
+        let gr = vertex_cut_cost(&g, &greedy_partition(&g, k, 1));
+        assert!(gr < r, "greedy {gr} !< random {r}");
+    }
+
+    #[test]
+    fn random_is_worse_than_default_on_mesh() {
+        // the paper's Fig 6 observation: random/greedy lose to default
+        // contiguous scheduling on locality-rich inputs
+        let g = gen::grid_mesh(40, 40);
+        let k = 12;
+        let d = vertex_cut_cost(&g, &default_partition(g.m(), k));
+        let r = vertex_cut_cost(&g, &random_partition(&g, k, 3));
+        assert!(r > d, "random {r} !> default {d}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = gen::power_law(500, 2, 9);
+        let a = greedy_partition(&g, 8, 5).assign;
+        let b = greedy_partition(&g, 8, 5).assign;
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,146 @@
+//! Partition-quality metrics (Definition 2).
+//!
+//! * `vertex_cut_cost` — the paper's quality measure C = Σ_v (p_v − 1):
+//!   total number of *redundant* per-block loads of data objects.
+//! * `balance_factor` — max block load / average block load; the paper
+//!   reports METIS-style partitions stay below 1.03.
+
+use crate::graph::Graph;
+
+/// An assignment of every task (edge) to one of k blocks.
+#[derive(Clone, Debug)]
+pub struct EdgePartition {
+    pub k: usize,
+    /// `assign[e]` = block of task e; values in 0..k.
+    pub assign: Vec<u32>,
+}
+
+impl EdgePartition {
+    pub fn new(k: usize, assign: Vec<u32>) -> Self {
+        debug_assert!(assign.iter().all(|&b| (b as usize) < k));
+        EdgePartition { k, assign }
+    }
+
+    /// Tasks per block.
+    pub fn loads(&self) -> Vec<usize> {
+        let mut l = vec![0usize; self.k];
+        for &b in &self.assign {
+            l[b as usize] += 1;
+        }
+        l
+    }
+}
+
+/// C = Σ_v (p_v − 1) where p_v = #distinct blocks among v's incident
+/// tasks (Definition 2).  Equals the number of redundant data loads.
+pub fn vertex_cut_cost(g: &Graph, p: &EdgePartition) -> u64 {
+    assert_eq!(p.assign.len(), g.m(), "assignment arity");
+    let mut cost = 0u64;
+    // epoch-stamped seen-array: O(Σ deg) total, no hashing
+    let mut seen = vec![u32::MAX; p.k];
+    for v in 0..g.n as u32 {
+        let inc = g.incident(v);
+        if inc.is_empty() {
+            continue;
+        }
+        let mut pv = 0u64;
+        for &(e, _) in inc {
+            let b = p.assign[e as usize] as usize;
+            if seen[b] != v {
+                seen[b] = v;
+                pv += 1;
+            }
+        }
+        cost += pv - 1;
+    }
+    cost
+}
+
+/// p_v per vertex — used by the simulator to derive per-block working
+/// sets and by tests.
+pub fn vertex_spread(g: &Graph, p: &EdgePartition) -> Vec<u32> {
+    let mut seen = vec![u32::MAX; p.k];
+    (0..g.n as u32)
+        .map(|v| {
+            let mut pv = 0u32;
+            for &(e, _) in g.incident(v) {
+                let b = p.assign[e as usize] as usize;
+                if seen[b] != v {
+                    seen[b] = v;
+                    pv += 1;
+                }
+            }
+            pv
+        })
+        .collect()
+}
+
+/// max load / mean load (≥ 1.0; 1.0 = perfectly balanced).
+pub fn balance_factor(p: &EdgePartition) -> f64 {
+    let loads = p.loads();
+    let max = *loads.iter().max().unwrap_or(&0) as f64;
+    let mean = p.assign.len() as f64 / p.k as f64;
+    if mean == 0.0 {
+        1.0
+    } else {
+        max / mean
+    }
+}
+
+/// Total unique (vertex, block) pairs = Σ_v p_v — the number of distinct
+/// data-object loads the blocked kernel stages; `vertex_cut_cost` + the
+/// number of touched vertices.
+pub fn total_staged_loads(g: &Graph, p: &EdgePartition) -> u64 {
+    vertex_spread(g, p).iter().map(|&x| x as u64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    /// Paper Fig 3(e): 6-edge graph, k=2, optimal cost 1.
+    #[test]
+    fn fig3_example_cost() {
+        // Vertices 0..=6; edges A..F as in Fig 3(a) (cfd 6-interaction
+        // example): a 7-vertex graph where one central vertex is shared.
+        let g = Graph::from_edges(
+            7,
+            vec![(0, 1), (1, 2), (1, 3), (3, 4), (4, 5), (5, 6)],
+        );
+        // blocks: {e0,e1,e2} and {e3,e4,e5}: only vertex 3 is cut
+        let p = EdgePartition::new(2, vec![0, 0, 0, 1, 1, 1]);
+        assert_eq!(vertex_cut_cost(&g, &p), 1);
+    }
+
+    #[test]
+    fn single_block_costs_zero() {
+        let g = gen::clique(8);
+        let p = EdgePartition::new(1, vec![0; g.m()]);
+        assert_eq!(vertex_cut_cost(&g, &p), 0);
+        assert_eq!(balance_factor(&p), 1.0);
+    }
+
+    #[test]
+    fn worst_case_cost() {
+        // star with 4 leaves, every edge its own block: center p_v = 4
+        let g = Graph::from_edges(5, vec![(0, 1), (0, 2), (0, 3), (0, 4)]);
+        let p = EdgePartition::new(4, vec![0, 1, 2, 3]);
+        assert_eq!(vertex_cut_cost(&g, &p), 3);
+    }
+
+    #[test]
+    fn staged_loads_decomposition() {
+        let g = gen::cfd_mesh(10, 10, 1);
+        let chunk = g.m().div_ceil(4);
+        let p = EdgePartition::new(4, (0..g.m()).map(|e| (e / chunk) as u32).collect());
+        let touched = (0..g.n as u32).filter(|&v| g.degree(v) > 0).count() as u64;
+        assert_eq!(total_staged_loads(&g, &p), vertex_cut_cost(&g, &p) + touched);
+    }
+
+    #[test]
+    fn balance_factor_detects_imbalance() {
+        let p = EdgePartition::new(2, vec![0, 0, 0, 1]);
+        assert_eq!(balance_factor(&p), 1.5);
+    }
+}

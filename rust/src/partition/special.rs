@@ -1,0 +1,249 @@
+//! Special-pattern shortcut (paper §4.1): before running the general EP
+//! algorithm, the pipeline checks whether the data-affinity graph is one
+//! of a few special shapes (clique, path, complete bipartite, grid) for
+//! which an optimal or near-optimal partition is known offline, and uses
+//! the preset schedule instead of partitioning.
+
+use crate::graph::Graph;
+
+use super::quality::EdgePartition;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pattern {
+    Clique,
+    Path,
+    CompleteBipartite { a: usize, b: usize },
+    Grid,
+}
+
+/// Detect whether g is (exactly) one of the special patterns.
+pub fn detect(g: &Graph) -> Option<Pattern> {
+    let n = g.n;
+    let m = g.m();
+    if n == 0 || m == 0 {
+        return None;
+    }
+    // path: degrees are 1,1,2,2,...,2 and m = n-1, connected
+    if m + 1 == n {
+        let h = g.degree_histogram();
+        if h.len() <= 3 && h.get(1) == Some(&2) && h.get(2).copied().unwrap_or(0) == n - 2 {
+            return Some(Pattern::Path);
+        }
+    }
+    // clique: every degree = n-1 and m = n(n-1)/2
+    if m == n * (n - 1) / 2 && (0..n as u32).all(|v| g.degree(v) == n - 1) {
+        return Some(Pattern::Clique);
+    }
+    // complete bipartite: 2-colorable with every cross pair present
+    if let Some((a, b)) = bipartition_sizes(g) {
+        if a * b == m {
+            return Some(Pattern::CompleteBipartite { a, b });
+        }
+    }
+    // grid: degrees only in {2,3,4}, m = 2rc - r - c for some r,c
+    {
+        let h = g.degree_histogram();
+        let only_234 = h.iter().enumerate().all(|(d, &c)| c == 0 || (2..=4).contains(&d));
+        if only_234 && h.get(2).copied().unwrap_or(0) == 4 && n >= 9 {
+            // try factorizations n = r*c consistent with border counts
+            for r in 2..=n {
+                if n % r != 0 {
+                    continue;
+                }
+                let c = n / r;
+                if c < 2 {
+                    break;
+                }
+                if m == 2 * r * c - r - c
+                    && h.get(3).copied().unwrap_or(0) == 2 * (r - 2) + 2 * (c - 2)
+                {
+                    return Some(Pattern::Grid);
+                }
+            }
+        }
+    }
+    None
+}
+
+/// BFS 2-coloring: Some((|class0|, |class1|)) if g is connected-bipartite
+/// (single component covering all non-isolated vertices), None otherwise.
+fn bipartition_sizes(g: &Graph) -> Option<(usize, usize)> {
+    let mut color = vec![u8::MAX; g.n];
+    let start = (0..g.n as u32).find(|&v| g.degree(v) > 0)?;
+    let mut queue = std::collections::VecDeque::from([start]);
+    color[start as usize] = 0;
+    let mut counts = [1usize, 0usize];
+    while let Some(v) = queue.pop_front() {
+        for &(_, u) in g.incident(v) {
+            if color[u as usize] == u8::MAX {
+                color[u as usize] = 1 - color[v as usize];
+                counts[color[u as usize] as usize] += 1;
+                queue.push_back(u);
+            } else if color[u as usize] == color[v as usize] {
+                return None; // odd cycle
+            }
+        }
+    }
+    // all non-isolated vertices must be reached; isolated vertices break
+    // completeness anyway (m != a*b), so just require full coverage.
+    if color.iter().any(|&c| c == u8::MAX) {
+        return None;
+    }
+    Some((counts[0], counts[1]))
+}
+
+/// Preset partitions for detected patterns.  These run in O(m) and are
+/// optimal (path, bipartite tiles) or near-optimal (clique chunking).
+pub fn preset_partition(g: &Graph, pat: Pattern, k: usize) -> EdgePartition {
+    let m = g.m();
+    match pat {
+        // path edges in order: contiguous chunks are optimal (k−1 cuts)
+        Pattern::Path => super::default_sched::default_partition(m, k),
+        // clique: order edges by a blocked triangular traversal so each
+        // chunk touches ~√(2·m/k·2) vertices (near-optimal locality)
+        Pattern::Clique => {
+            let chunk = m.div_ceil(k);
+            let mut assign = vec![0u32; m];
+            // edges were generated in row-major triangular order already;
+            // contiguous chunks of that order share the leading vertex
+            for e in 0..m {
+                assign[e] = ((e / chunk) as u32).min(k as u32 - 1);
+            }
+            EdgePartition::new(k, assign)
+        }
+        // complete bipartite: tile the a×b edge matrix into k rectangles
+        // as square as possible — each tile stages (a/ra + b/rb) objects
+        Pattern::CompleteBipartite { a, b } => {
+            // recover the two classes by 2-coloring, then rank vertices
+            // within each class so tiles index densely
+            let mut color = vec![0u8; g.n];
+            let mut rank = vec![0usize; g.n];
+            {
+                let mut seen = vec![false; g.n];
+                let start = (0..g.n as u32).find(|&v| g.degree(v) > 0).unwrap();
+                let mut q = std::collections::VecDeque::from([start]);
+                seen[start as usize] = true;
+                let mut next_rank = [0usize; 2];
+                rank[start as usize] = 0;
+                next_rank[0] = 1;
+                while let Some(v) = q.pop_front() {
+                    for &(_, u) in g.incident(v) {
+                        if !seen[u as usize] {
+                            seen[u as usize] = true;
+                            color[u as usize] = 1 - color[v as usize];
+                            rank[u as usize] = next_rank[color[u as usize] as usize];
+                            next_rank[color[u as usize] as usize] += 1;
+                            q.push_back(u);
+                        }
+                    }
+                }
+            }
+            // sizes by actual coloring (may be swapped vs (a, b))
+            let sa = color.iter().filter(|&&c| c == 0).count().max(1);
+            let sb = g.n - sa;
+            let _ = (a, b);
+            // choose tile grid ra×rb = k minimizing staged objects/tile
+            let mut best = (1usize, k);
+            let mut best_score = f64::INFINITY;
+            for ra in 1..=k {
+                if k % ra != 0 {
+                    continue;
+                }
+                let rb = k / ra;
+                let score = (sa as f64 / ra as f64) + (sb as f64 / rb as f64);
+                if score < best_score {
+                    best_score = score;
+                    best = (ra, rb);
+                }
+            }
+            let (ra, rb) = best;
+            let tile_a = sa.div_ceil(ra).max(1);
+            let tile_b = sb.div_ceil(rb).max(1);
+            let assign: Vec<u32> = g
+                .edges
+                .iter()
+                .map(|&(u, v)| {
+                    let (ua, vb) = if color[u as usize] == 0 {
+                        (rank[u as usize], rank[v as usize])
+                    } else {
+                        (rank[v as usize], rank[u as usize])
+                    };
+                    let ta = (ua / tile_a).min(ra - 1);
+                    let tb = (vb / tile_b).min(rb - 1);
+                    (ta * rb + tb) as u32
+                })
+                .collect();
+            EdgePartition::new(k, assign)
+        }
+        // grid: row-major contiguous chunks of the generator's edge order
+        // already follow mesh locality
+        Pattern::Grid => super::default_sched::default_partition(m, k),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::quality::vertex_cut_cost;
+
+    #[test]
+    fn detects_path() {
+        assert_eq!(detect(&gen::path(20)), Some(Pattern::Path));
+    }
+
+    #[test]
+    fn detects_clique() {
+        assert_eq!(detect(&gen::clique(8)), Some(Pattern::Clique));
+    }
+
+    #[test]
+    fn detects_complete_bipartite() {
+        match detect(&gen::complete_bipartite(6, 9)) {
+            Some(Pattern::CompleteBipartite { a, b }) => {
+                assert_eq!(a * b, 54);
+            }
+            other => panic!("got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn detects_grid() {
+        assert_eq!(detect(&gen::grid_mesh(5, 7)), Some(Pattern::Grid));
+    }
+
+    #[test]
+    fn rejects_general_graphs() {
+        assert_eq!(detect(&gen::power_law(200, 2, 1)), None);
+        assert_eq!(detect(&gen::cfd_mesh(6, 6, 1)), None); // diagonals break grid
+    }
+
+    #[test]
+    fn path_preset_is_optimal() {
+        let g = gen::path(41); // 40 edges
+        let p = preset_partition(&g, Pattern::Path, 4);
+        assert_eq!(vertex_cut_cost(&g, &p), 3); // k−1 cut vertices
+    }
+
+    #[test]
+    fn bipartite_preset_beats_default() {
+        let g = gen::complete_bipartite(32, 32);
+        let k = 8;
+        let pre = preset_partition(&g, Pattern::CompleteBipartite { a: 32, b: 32 }, k);
+        let def = super::super::default_sched::default_partition(g.m(), k);
+        assert!(vertex_cut_cost(&g, &pre) < vertex_cut_cost(&g, &def));
+        // tiles are balanced
+        let loads = pre.loads();
+        assert!(loads.iter().all(|&l| l == g.m() / k));
+    }
+
+    #[test]
+    fn clique_preset_reasonable() {
+        let g = gen::clique(24);
+        let p = preset_partition(&g, Pattern::Clique, 4);
+        assert_eq!(p.assign.len(), g.m());
+        let c = vertex_cut_cost(&g, &p);
+        // worst case (random) would approach n·(k−1) = 72
+        assert!(c < 60, "clique preset cost {c}");
+    }
+}

@@ -1,0 +1,861 @@
+//! Multilevel k-way balanced vertex partitioner (METIS-family).
+//!
+//! The EP model (ep.rs) reduces balanced edge partitioning to balanced
+//! vertex partitioning; this module supplies that vertex partitioner:
+//!
+//!   * coarsening by heavy-edge matching (HEM),
+//!   * initial bisection by greedy graph growing (GGGP), several tries,
+//!   * uncoarsening with boundary Fiduccia–Mattheyses refinement,
+//!   * k-way by recursive bisection with weight-proportional targets
+//!     (handles non-power-of-two k).
+//!
+//! Weights are i64 throughout: the clone-and-connect transform assigns a
+//! huge weight to original edges, and HEM contracts those first, so the
+//! "never cut an original edge" constraint is honoured structurally
+//! (see ep.rs for the argument).
+
+use crate::util::rng::Pcg32;
+
+/// Weighted undirected graph in CSR form (parallel edges pre-merged).
+#[derive(Clone, Debug)]
+pub struct WGraph {
+    pub n: usize,
+    pub vwgt: Vec<i64>,
+    pub xadj: Vec<u32>,
+    pub adjncy: Vec<u32>,
+    pub adjwgt: Vec<i64>,
+}
+
+impl WGraph {
+    /// Build from an edge list, merging parallel edges by weight sum and
+    /// dropping self-loops (they can't be cut).
+    pub fn from_edges(n: usize, vwgt: Vec<i64>, edges: &[(u32, u32, i64)]) -> Self {
+        assert_eq!(vwgt.len(), n);
+        let mut deg = vec![0u32; n];
+        for &(u, v, _) in edges {
+            assert!((u as usize) < n && (v as usize) < n);
+            if u != v {
+                deg[u as usize] += 1;
+                deg[v as usize] += 1;
+            }
+        }
+        let mut xadj = vec![0u32; n + 1];
+        for i in 0..n {
+            xadj[i + 1] = xadj[i] + deg[i];
+        }
+        let mut cursor: Vec<u32> = xadj[..n].to_vec();
+        let mut adjncy = vec![0u32; xadj[n] as usize];
+        let mut adjwgt = vec![0i64; xadj[n] as usize];
+        for &(u, v, w) in edges {
+            if u == v {
+                continue;
+            }
+            adjncy[cursor[u as usize] as usize] = v;
+            adjwgt[cursor[u as usize] as usize] = w;
+            cursor[u as usize] += 1;
+            adjncy[cursor[v as usize] as usize] = u;
+            adjwgt[cursor[v as usize] as usize] = w;
+            cursor[v as usize] += 1;
+        }
+        let mut g = WGraph { n, vwgt, xadj, adjncy, adjwgt };
+        g.merge_parallel();
+        g
+    }
+
+    /// Merge parallel entries in each adjacency list (sort + fold).
+    fn merge_parallel(&mut self) {
+        let mut new_xadj = vec![0u32; self.n + 1];
+        let mut new_adjncy = Vec::with_capacity(self.adjncy.len());
+        let mut new_adjwgt = Vec::with_capacity(self.adjwgt.len());
+        let mut scratch: Vec<(u32, i64)> = Vec::new();
+        for v in 0..self.n {
+            scratch.clear();
+            for idx in self.xadj[v] as usize..self.xadj[v + 1] as usize {
+                scratch.push((self.adjncy[idx], self.adjwgt[idx]));
+            }
+            scratch.sort_unstable_by_key(|&(u, _)| u);
+            let mut i = 0;
+            while i < scratch.len() {
+                let (u, mut w) = scratch[i];
+                let mut j = i + 1;
+                while j < scratch.len() && scratch[j].0 == u {
+                    w += scratch[j].1;
+                    j += 1;
+                }
+                new_adjncy.push(u);
+                new_adjwgt.push(w);
+                i = j;
+            }
+            new_xadj[v + 1] = new_adjncy.len() as u32;
+        }
+        self.xadj = new_xadj;
+        self.adjncy = new_adjncy;
+        self.adjwgt = new_adjwgt;
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> impl Iterator<Item = (u32, i64)> + '_ {
+        let lo = self.xadj[v as usize] as usize;
+        let hi = self.xadj[v as usize + 1] as usize;
+        self.adjncy[lo..hi].iter().copied().zip(self.adjwgt[lo..hi].iter().copied())
+    }
+
+    pub fn total_vwgt(&self) -> i64 {
+        self.vwgt.iter().sum()
+    }
+
+    /// Sum of weights of edges whose endpoints lie in different parts.
+    pub fn edge_cut(&self, part: &[u32]) -> i64 {
+        let mut cut = 0i64;
+        for v in 0..self.n as u32 {
+            for (u, w) in self.neighbors(v) {
+                if u > v && part[u as usize] != part[v as usize] {
+                    cut += w;
+                }
+            }
+        }
+        cut
+    }
+}
+
+/// Matching scheme for coarsening (ablation target).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Matching {
+    HeavyEdge,
+    Random,
+}
+
+#[derive(Clone, Debug)]
+pub struct VpOpts {
+    /// Allowed imbalance: side weight ≤ target * (1 + eps) + max vwgt.
+    pub eps: f64,
+    pub seed: u64,
+    /// Stop coarsening below this many vertices.
+    pub coarsen_to: usize,
+    /// FM passes per uncoarsening level.
+    pub fm_passes: usize,
+    /// Greedy-graph-growing restarts for the initial bisection.
+    pub init_tries: usize,
+    pub matching: Matching,
+}
+
+impl Default for VpOpts {
+    fn default() -> Self {
+        VpOpts {
+            eps: 0.015,
+            seed: 0x5EED,
+            coarsen_to: 80,
+            fm_passes: 3,
+            init_tries: 4,
+            matching: Matching::HeavyEdge,
+        }
+    }
+}
+
+/// k-way balanced partition — the production path (perf-pass §Perf.L3).
+///
+/// Scheme: coarsen the graph ONCE by repeated heavy-edge matching to
+/// O(k) vertices, run recursive bisection on that small coarse graph,
+/// then project back level by level with greedy k-way boundary
+/// refinement.  Compared to plain recursive bisection (which re-coarsens
+/// every subgraph at every split, ~log k full coarsening chains) this
+/// does one chain — measured ~5-8x faster at equal quality; see
+/// EXPERIMENTS.md §Perf.
+pub fn partition_kway(g: &WGraph, k: usize, opts: &VpOpts) -> Vec<u32> {
+    assert!(k >= 1);
+    if k == 1 || g.n == 0 {
+        return vec![0u32; g.n];
+    }
+    let mut rng = Pcg32::new(opts.seed);
+    // --- single coarsening chain ---
+    let coarse_target = (opts.coarsen_to.max(8) * k / 2).max(128);
+    let mut levels: Vec<(WGraph, Vec<u32>)> = Vec::new();
+    let mut cur = g.clone();
+    while cur.n > coarse_target {
+        let cmap = match opts.matching {
+            Matching::HeavyEdge => heavy_edge_matching(&cur, &mut rng),
+            Matching::Random => random_matching(&cur, &mut rng),
+        };
+        let coarse = contract(&cur, &cmap);
+        if coarse.n as f64 > cur.n as f64 * 0.95 {
+            break;
+        }
+        levels.push((cur, cmap));
+        cur = coarse;
+    }
+    // --- initial k-way partition: recursive bisection on the coarse graph ---
+    let mut part = partition_kway_rb(&cur, k, opts);
+    kway_refine(&cur, &mut part, k, opts);
+    // --- uncoarsen with k-way refinement ---
+    while let Some((finer, cmap)) = levels.pop() {
+        let mut fine = vec![0u32; finer.n];
+        for v in 0..finer.n {
+            fine[v] = part[cmap[v] as usize];
+        }
+        part = fine;
+        kway_refine(&finer, &mut part, k, opts);
+        cur = finer;
+    }
+    // --- final strict balance (coarse-level moves can strand imbalance),
+    // then one more refine pass to recover quality lost to evictions
+    // (refine's cap at the finest level is within one vertex of strict)
+    kway_balance(&cur, &mut part, k, opts.eps);
+    kway_refine(&cur, &mut part, k, &VpOpts { fm_passes: 1, ..opts.clone() });
+    kway_balance(&cur, &mut part, k, opts.eps);
+    part
+}
+
+/// Enforce the balance cap on the finest level: evict the
+/// least-connectivity-loss vertices from overloaded blocks into the
+/// most-affine underloaded block.
+fn kway_balance(g: &WGraph, part: &mut [u32], k: usize, eps: f64) {
+    let total = g.total_vwgt();
+    let cap = ((total as f64 / k as f64) * (1.0 + eps)).ceil() as i64;
+    let mut loads = vec![0i64; k];
+    for v in 0..g.n {
+        loads[part[v] as usize] += g.vwgt[v];
+    }
+    let mut wsum = vec![0i64; k];
+    let mut stamp = vec![u32::MAX; k];
+    // process each overloaded block once: rank its vertices by eviction
+    // cost, evict cheapest-first until the block fits (O(n log n) total)
+    let overloaded: Vec<usize> = (0..k).filter(|&b| loads[b] > cap).collect();
+    for from in overloaded {
+        if loads[from] <= cap {
+            continue;
+        }
+        // (cost, v, preferred target) for every vertex of `from`
+        let mut evictable: Vec<(i64, u32, usize)> = Vec::new();
+        for v in 0..g.n as u32 {
+            if part[v as usize] != from as u32 {
+                continue;
+            }
+            let mut touched: Vec<usize> = Vec::new();
+            for (u, w) in g.neighbors(v) {
+                let b = part[u as usize] as usize;
+                if stamp[b] != v {
+                    stamp[b] = v;
+                    wsum[b] = 0;
+                    touched.push(b);
+                }
+                wsum[b] += w;
+            }
+            let w_int = if stamp[from] == v { wsum[from] } else { 0 };
+            let mut best: Option<(i64, usize)> = None;
+            for &b in &touched {
+                if b == from {
+                    continue;
+                }
+                let delta = w_int - wsum[b]; // cut increase (lower better)
+                if best.map_or(true, |(bd, _)| delta < bd) {
+                    best = Some((delta, b));
+                }
+            }
+            match best {
+                Some((d, b)) => evictable.push((d, v, b)),
+                None => evictable.push((w_int, v, usize::MAX)), // no adjacent block
+            }
+        }
+        evictable.sort_unstable();
+        let mut wsum2 = vec![0i64; k];
+        let mut stamp2 = vec![u32::MAX; k];
+        for (_, v, _) in evictable {
+            if loads[from] <= cap {
+                break;
+            }
+            let vw = g.vwgt[v as usize];
+            // recompute the best adjacent underloaded target now (the
+            // ranking used stale loads; the target must not)
+            let mut touched: Vec<usize> = Vec::new();
+            for (u, w) in g.neighbors(v) {
+                let b = part[u as usize] as usize;
+                if b == from {
+                    continue;
+                }
+                if stamp2[b] != v {
+                    stamp2[b] = v;
+                    wsum2[b] = 0;
+                    touched.push(b);
+                }
+                wsum2[b] += w;
+            }
+            let best = touched
+                .iter()
+                .copied()
+                .filter(|&b| loads[b] + vw <= cap)
+                .max_by_key(|&b| wsum2[b]);
+            let to = match best {
+                Some(b) => b,
+                None => {
+                    let lb = (0..k).min_by_key(|&b| loads[b]).unwrap();
+                    if lb == from || loads[lb] + vw > cap {
+                        continue;
+                    }
+                    lb
+                }
+            };
+            part[v as usize] = to as u32;
+            loads[from] -= vw;
+            loads[to] += vw;
+        }
+    }
+}
+
+/// Greedy k-way boundary refinement: move a vertex to the adjacent
+/// block with the largest positive edge-weight gain, subject to the
+/// balance cap.  A few passes; deterministic order.
+fn kway_refine(g: &WGraph, part: &mut [u32], k: usize, opts: &VpOpts) {
+    let total = g.total_vwgt();
+    let max_vw = g.vwgt.iter().copied().max().unwrap_or(0);
+    let cap = ((total as f64 / k as f64) * (1.0 + opts.eps)) as i64 + max_vw;
+    let mut loads = vec![0i64; k];
+    for v in 0..g.n {
+        loads[part[v] as usize] += g.vwgt[v];
+    }
+    // epoch-stamped per-block connectivity accumulator
+    let mut wsum = vec![0i64; k];
+    let mut stamp = vec![u32::MAX; k];
+    let max_passes = opts.fm_passes.max(1) * 3;
+    for pass in 0..max_passes {
+        let mut moved = 0usize;
+        for v in 0..g.n as u32 {
+            let from = part[v as usize] as usize;
+            let mut touched: Vec<usize> = Vec::new();
+            for (u, w) in g.neighbors(v) {
+                let b = part[u as usize] as usize;
+                if stamp[b] != v {
+                    stamp[b] = v;
+                    wsum[b] = 0;
+                    touched.push(b);
+                }
+                wsum[b] += w;
+            }
+            if touched.len() < 2 && !touched.is_empty() && touched[0] == from {
+                continue; // interior vertex
+            }
+            let w_int = if stamp[from] == v { wsum[from] } else { 0 };
+            let mut best: Option<(i64, usize)> = None;
+            for &b in &touched {
+                if b == from {
+                    continue;
+                }
+                let gain = wsum[b] - w_int;
+                if gain > 0
+                    && loads[b] + g.vwgt[v as usize] <= cap
+                    && best.map_or(true, |(bg, _)| gain > bg)
+                {
+                    best = Some((gain, b));
+                }
+            }
+            if let Some((_, to)) = best {
+                part[v as usize] = to as u32;
+                loads[from] -= g.vwgt[v as usize];
+                loads[to] += g.vwgt[v as usize];
+                moved += 1;
+            }
+        }
+        if moved == 0 || pass + 1 == max_passes {
+            break;
+        }
+    }
+}
+
+/// k-way balanced partition by plain recursive bisection (the ablation
+/// path; re-coarsens every subgraph at every split).
+pub fn partition_kway_rb(g: &WGraph, k: usize, opts: &VpOpts) -> Vec<u32> {
+    assert!(k >= 1);
+    let mut part = vec![0u32; g.n];
+    if k == 1 || g.n == 0 {
+        return part;
+    }
+    let ids: Vec<u32> = (0..g.n as u32).collect();
+    let mut rng = Pcg32::new(opts.seed);
+    recurse(g, &ids, k, 0, opts, &mut rng, &mut part);
+    part
+}
+
+fn recurse(
+    g: &WGraph,
+    global_ids: &[u32],
+    k: usize,
+    label_base: u32,
+    opts: &VpOpts,
+    rng: &mut Pcg32,
+    out: &mut [u32],
+) {
+    if k == 1 {
+        for &gid in global_ids {
+            out[gid as usize] = label_base;
+        }
+        return;
+    }
+    let k_left = k / 2 + (k % 2); // ceil
+    let frac_left = k_left as f64 / k as f64;
+    let side = bisect(g, frac_left, opts, rng);
+    // split into two subgraphs and recurse
+    for s in 0..2u32 {
+        let sub_k = if s == 0 { k_left } else { k - k_left };
+        let sub_base = if s == 0 { label_base } else { label_base + k_left as u32 };
+        let (sub, sub_ids) = extract_side(g, &side, s, global_ids);
+        if sub.n == 0 {
+            continue;
+        }
+        recurse(&sub, &sub_ids, sub_k, sub_base, opts, rng, out);
+    }
+}
+
+fn extract_side(g: &WGraph, side: &[u32], s: u32, global_ids: &[u32]) -> (WGraph, Vec<u32>) {
+    let mut local = vec![u32::MAX; g.n];
+    let mut ids = Vec::new();
+    let mut vwgt = Vec::new();
+    for v in 0..g.n {
+        if side[v] == s {
+            local[v] = ids.len() as u32;
+            ids.push(global_ids[v]);
+            vwgt.push(g.vwgt[v]);
+        }
+    }
+    let mut edges = Vec::new();
+    for v in 0..g.n as u32 {
+        if side[v as usize] != s {
+            continue;
+        }
+        for (u, w) in g.neighbors(v) {
+            if u > v && side[u as usize] == s {
+                edges.push((local[v as usize], local[u as usize], w));
+            }
+        }
+    }
+    (WGraph::from_edges(ids.len(), vwgt, &edges), ids)
+}
+
+/// Multilevel 2-way partition. Returns side (0/1) per vertex; side 0
+/// targets `frac_left` of the total vertex weight.
+pub fn bisect(g: &WGraph, frac_left: f64, opts: &VpOpts, rng: &mut Pcg32) -> Vec<u32> {
+    // --- coarsening phase ---
+    let mut levels: Vec<(WGraph, Vec<u32>)> = Vec::new(); // (finer graph, cmap)
+    let mut cur = g.clone();
+    while cur.n > opts.coarsen_to {
+        let cmap = match opts.matching {
+            Matching::HeavyEdge => heavy_edge_matching(&cur, rng),
+            Matching::Random => random_matching(&cur, rng),
+        };
+        let coarse = contract(&cur, &cmap);
+        if coarse.n as f64 > cur.n as f64 * 0.95 {
+            // matching stalled (e.g. star graphs) — stop coarsening
+            break;
+        }
+        levels.push((cur, cmap));
+        cur = coarse;
+    }
+
+    // --- initial partition on the coarsest graph ---
+    let mut side = initial_bisection(&cur, frac_left, opts, rng);
+    fm_refine(&cur, &mut side, frac_left, opts);
+
+    // --- uncoarsening + refinement ---
+    while let Some((finer, cmap)) = levels.pop() {
+        let mut fine_side = vec![0u32; finer.n];
+        for v in 0..finer.n {
+            fine_side[v] = side[cmap[v] as usize];
+        }
+        side = fine_side;
+        fm_refine(&finer, &mut side, frac_left, opts);
+        drop(finer);
+    }
+    side
+}
+
+/// Heavy-edge matching: visit vertices in random order; match each
+/// unmatched vertex to its heaviest unmatched neighbor.  Returns cmap:
+/// fine vertex -> coarse vertex id.
+fn heavy_edge_matching(g: &WGraph, rng: &mut Pcg32) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..g.n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut mate = vec![u32::MAX; g.n];
+    for &v in &order {
+        if mate[v as usize] != u32::MAX {
+            continue;
+        }
+        let mut best: Option<(i64, u32)> = None;
+        for (u, w) in g.neighbors(v) {
+            if u != v && mate[u as usize] == u32::MAX {
+                if best.map_or(true, |(bw, _)| w > bw) {
+                    best = Some((w, u));
+                }
+            }
+        }
+        match best {
+            Some((_, u)) => {
+                mate[v as usize] = u;
+                mate[u as usize] = v;
+            }
+            None => mate[v as usize] = v,
+        }
+    }
+    build_cmap(&mate)
+}
+
+fn random_matching(g: &WGraph, rng: &mut Pcg32) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..g.n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut mate = vec![u32::MAX; g.n];
+    for &v in &order {
+        if mate[v as usize] != u32::MAX {
+            continue;
+        }
+        let nbrs: Vec<u32> = g
+            .neighbors(v)
+            .map(|(u, _)| u)
+            .filter(|&u| u != v && mate[u as usize] == u32::MAX)
+            .collect();
+        if nbrs.is_empty() {
+            mate[v as usize] = v;
+        } else {
+            let u = nbrs[rng.gen_range(nbrs.len())];
+            mate[v as usize] = u;
+            mate[u as usize] = v;
+        }
+    }
+    build_cmap(&mate)
+}
+
+fn build_cmap(mate: &[u32]) -> Vec<u32> {
+    let n = mate.len();
+    let mut cmap = vec![u32::MAX; n];
+    let mut next = 0u32;
+    for v in 0..n {
+        if cmap[v] == u32::MAX {
+            let m = mate[v] as usize;
+            cmap[v] = next;
+            cmap[m] = next; // m == v for self-matched
+            next += 1;
+        }
+    }
+    cmap
+}
+
+/// Contract a graph along a cmap (coarse vertex count = max(cmap)+1).
+fn contract(g: &WGraph, cmap: &[u32]) -> WGraph {
+    let nc = (*cmap.iter().max().unwrap_or(&0) + 1) as usize;
+    let mut vwgt = vec![0i64; nc];
+    for v in 0..g.n {
+        vwgt[cmap[v] as usize] += g.vwgt[v];
+    }
+    let mut edges = Vec::new();
+    for v in 0..g.n as u32 {
+        let cv = cmap[v as usize];
+        for (u, w) in g.neighbors(v) {
+            let cu = cmap[u as usize];
+            if cv < cu {
+                edges.push((cv, cu, w));
+            }
+        }
+    }
+    WGraph::from_edges(nc, vwgt, &edges)
+}
+
+/// Greedy graph growing (GGGP): BFS-grow side 0 from a random seed,
+/// always absorbing the frontier vertex with the best cut gain, until
+/// side 0 reaches its target weight.  Several restarts; keep best cut.
+fn initial_bisection(g: &WGraph, frac_left: f64, opts: &VpOpts, rng: &mut Pcg32) -> Vec<u32> {
+    let total = g.total_vwgt();
+    let target_left = (total as f64 * frac_left) as i64;
+    let mut best: Option<(i64, Vec<u32>)> = None;
+
+    for _ in 0..opts.init_tries.max(1) {
+        let mut side = vec![1u32; g.n];
+        let mut w_left = 0i64;
+        let mut in_heap = vec![false; g.n];
+        // max-heap on gain (i64). gain(v) = (external) - (internal) edges
+        // relative to the growing region; recomputed lazily.
+        let mut heap: std::collections::BinaryHeap<(i64, u32)> = Default::default();
+
+        let mut remaining: Vec<u32> =
+            (0..g.n as u32).filter(|&v| g.vwgt[v as usize] > 0 || true).collect();
+        rng.shuffle(&mut remaining);
+        let mut seed_iter = remaining.into_iter();
+
+        while w_left < target_left {
+            let v = match heap.pop() {
+                Some((_, v)) if side[v as usize] == 1 => v,
+                Some(_) => continue, // already absorbed; skip stale
+                None => {
+                    // frontier empty (disconnected) — new random seed
+                    match seed_iter.find(|&v| side[v as usize] == 1) {
+                        Some(v) => v,
+                        None => break,
+                    }
+                }
+            };
+            side[v as usize] = 0;
+            w_left += g.vwgt[v as usize];
+            for (u, _) in g.neighbors(v) {
+                if side[u as usize] == 1 && !in_heap[u as usize] {
+                    // gain = weight to region - weight to outside
+                    let mut gain = 0i64;
+                    for (t, w) in g.neighbors(u) {
+                        if side[t as usize] == 0 {
+                            gain += w;
+                        } else {
+                            gain -= w;
+                        }
+                    }
+                    heap.push((gain, u));
+                    in_heap[u as usize] = true;
+                }
+            }
+        }
+        let cut = g.edge_cut(&side);
+        if best.as_ref().map_or(true, |(bc, _)| cut < *bc) {
+            best = Some((cut, side));
+        }
+    }
+    best.unwrap().1
+}
+
+/// Boundary FM refinement for a 2-way partition with balance constraint.
+fn fm_refine(g: &WGraph, side: &mut [u32], frac_left: f64, opts: &VpOpts) {
+    let total = g.total_vwgt();
+    let max_vw = g.vwgt.iter().copied().max().unwrap_or(0);
+    let target = [
+        (total as f64 * frac_left) as i64,
+        (total as f64 * (1.0 - frac_left)) as i64,
+    ];
+    let limit = |s: usize| (target[s] as f64 * (1.0 + opts.eps)) as i64 + max_vw;
+
+    let mut w = [0i64; 2];
+    for v in 0..g.n {
+        w[side[v] as usize] += g.vwgt[v];
+    }
+
+    for _pass in 0..opts.fm_passes {
+        // gains: moving v to the other side changes cut by -(ext - int)
+        let mut gain = vec![0i64; g.n];
+        let mut is_boundary = vec![false; g.n];
+        for v in 0..g.n as u32 {
+            let sv = side[v as usize];
+            let mut ext = 0i64;
+            let mut int = 0i64;
+            for (u, wgt) in g.neighbors(v) {
+                if side[u as usize] == sv {
+                    int += wgt;
+                } else {
+                    ext += wgt;
+                }
+            }
+            gain[v as usize] = ext - int;
+            is_boundary[v as usize] = ext > 0;
+        }
+        let mut heap: std::collections::BinaryHeap<(i64, u32)> = (0..g.n as u32)
+            .filter(|&v| is_boundary[v as usize])
+            .map(|v| (gain[v as usize], v))
+            .collect();
+
+        let mut moved = vec![false; g.n];
+        let mut moves: Vec<u32> = Vec::new();
+        let mut cur_delta = 0i64; // cumulative cut change (negative good)
+        let mut best_delta = 0i64;
+        let mut best_prefix = 0usize;
+        let move_cap = (g.n / 2).max(64);
+
+        while let Some((gn, v)) = heap.pop() {
+            if moved[v as usize] || gn != gain[v as usize] {
+                continue; // stale entry
+            }
+            let from = side[v as usize] as usize;
+            let to = 1 - from;
+            if w[to] + g.vwgt[v as usize] > limit(to) {
+                continue; // would break balance
+            }
+            // never split a contracted heavy pair at fine levels: a huge
+            // negative gain means an original (must-not-cut) edge.
+            if gn < -(1 << 30) {
+                continue;
+            }
+            moved[v as usize] = true;
+            side[v as usize] = to as u32;
+            w[from] -= g.vwgt[v as usize];
+            w[to] += g.vwgt[v as usize];
+            cur_delta -= gn;
+            moves.push(v);
+            if cur_delta < best_delta {
+                best_delta = cur_delta;
+                best_prefix = moves.len();
+            }
+            // update neighbor gains
+            for (u, wgt) in g.neighbors(v) {
+                if moved[u as usize] {
+                    continue;
+                }
+                // v moved from `from` to `to`; neighbor u: if same side as
+                // new v, its gain decreases by 2w; else increases by 2w.
+                if side[u as usize] == to as u32 {
+                    gain[u as usize] -= 2 * wgt;
+                } else {
+                    gain[u as usize] += 2 * wgt;
+                }
+                heap.push((gain[u as usize], u));
+            }
+            if moves.len() >= move_cap {
+                break;
+            }
+        }
+        // roll back past the best prefix
+        for &v in &moves[best_prefix..] {
+            let s = side[v as usize] as usize;
+            side[v as usize] = 1 - side[v as usize];
+            w[s] -= g.vwgt[v as usize];
+            w[1 - s] += g.vwgt[v as usize];
+        }
+        if best_delta == 0 {
+            break; // no improvement this pass
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_cliques(sz: usize) -> WGraph {
+        // two cliques joined by one light edge — the obvious bisection
+        let n = 2 * sz;
+        let mut edges = Vec::new();
+        for base in [0, sz] {
+            for a in 0..sz {
+                for b in (a + 1)..sz {
+                    edges.push(((base + a) as u32, (base + b) as u32, 10));
+                }
+            }
+        }
+        edges.push((0, sz as u32, 1));
+        WGraph::from_edges(n, vec![1; n], &edges)
+    }
+
+    #[test]
+    fn bisects_two_cliques_perfectly() {
+        let g = two_cliques(20);
+        let mut rng = Pcg32::new(1);
+        let side = bisect(&g, 0.5, &VpOpts::default(), &mut rng);
+        assert_eq!(g.edge_cut(&side), 1, "should cut only the bridge");
+        let w0: i64 = (0..g.n).filter(|&v| side[v] == 0).map(|v| g.vwgt[v]).sum();
+        assert_eq!(w0, 20);
+    }
+
+    #[test]
+    fn kway_labels_in_range_and_balanced() {
+        let g = {
+            // ring of 6 cliques
+            let sz = 10;
+            let mut edges = Vec::new();
+            for c in 0..6 {
+                let base = c * sz;
+                for a in 0..sz {
+                    for b in (a + 1)..sz {
+                        edges.push(((base + a) as u32, (base + b) as u32, 5));
+                    }
+                }
+                let next = ((c + 1) % 6) * sz;
+                edges.push((base as u32, next as u32, 1));
+            }
+            WGraph::from_edges(60, vec![1; 60], &edges)
+        };
+        let part = partition_kway(&g, 6, &VpOpts::default());
+        assert!(part.iter().all(|&p| p < 6));
+        let mut loads = [0i64; 6];
+        for v in 0..g.n {
+            loads[part[v] as usize] += 1;
+        }
+        for l in loads {
+            assert!((8..=12).contains(&l), "load {l}");
+        }
+        // near-optimal: 6 bridge edges of weight 1
+        assert!(g.edge_cut(&part) <= 12, "cut {}", g.edge_cut(&part));
+    }
+
+    #[test]
+    fn handles_non_power_of_two_k() {
+        let g = WGraph::from_edges(
+            30,
+            vec![1; 30],
+            &(0..29).map(|i| (i as u32, i as u32 + 1, 1)).collect::<Vec<_>>(),
+        );
+        let part = partition_kway(&g, 3, &VpOpts::default());
+        let mut loads = [0i64; 3];
+        for v in 0..30 {
+            loads[part[v] as usize] += 1;
+        }
+        for l in loads {
+            assert!((8..=12).contains(&l), "loads {loads:?}");
+        }
+        // a path into 3 chunks cuts exactly 2 unit edges when optimal
+        assert!(g.edge_cut(&part) <= 4);
+    }
+
+    #[test]
+    fn respects_heavy_edges() {
+        // pairs connected by huge edges must never be separated
+        let heavy = 1i64 << 40;
+        let mut edges = vec![];
+        for i in 0..10u32 {
+            edges.push((2 * i, 2 * i + 1, heavy));
+        }
+        // light chain across pairs
+        for i in 0..9u32 {
+            edges.push((2 * i + 1, 2 * i + 2, 1));
+        }
+        let g = WGraph::from_edges(20, vec![1; 20], &edges);
+        let part = partition_kway(&g, 2, &VpOpts::default());
+        for i in 0..10 {
+            assert_eq!(part[2 * i], part[2 * i + 1], "heavy pair {i} split");
+        }
+    }
+
+    #[test]
+    fn contract_preserves_total_weight() {
+        let g = two_cliques(8);
+        let mut rng = Pcg32::new(2);
+        let cmap = heavy_edge_matching(&g, &mut rng);
+        let c = contract(&g, &cmap);
+        assert_eq!(c.total_vwgt(), g.total_vwgt());
+        assert!(c.n < g.n);
+    }
+
+    #[test]
+    fn single_part_is_identity() {
+        let g = two_cliques(5);
+        let part = partition_kway(&g, 1, &VpOpts::default());
+        assert!(part.iter().all(|&p| p == 0));
+    }
+
+    #[test]
+    fn disconnected_graph_is_handled() {
+        // 4 isolated cliques, no connections at all
+        let sz = 8;
+        let mut edges = Vec::new();
+        for c in 0..4 {
+            let base = c * sz;
+            for a in 0..sz {
+                for b in (a + 1)..sz {
+                    edges.push(((base + a) as u32, (base + b) as u32, 3));
+                }
+            }
+        }
+        let g = WGraph::from_edges(32, vec![1; 32], &edges);
+        let part = partition_kway(&g, 4, &VpOpts::default());
+        let mut loads = [0i64; 4];
+        for v in 0..32 {
+            loads[part[v] as usize] += 1;
+        }
+        assert_eq!(loads, [8, 8, 8, 8], "perfect split exists: {loads:?}");
+        assert_eq!(g.edge_cut(&part), 0);
+    }
+
+    #[test]
+    fn parallel_edges_merge() {
+        let g = WGraph::from_edges(2, vec![1, 1], &[(0, 1, 3), (1, 0, 4)]);
+        assert_eq!(g.neighbors(0).count(), 1);
+        assert_eq!(g.neighbors(0).next().unwrap().1, 7);
+    }
+}

@@ -1,0 +1,273 @@
+//! PJRT execution engine: load HLO-text artifacts, compile once per
+//! (entry, config), execute from the rust request path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  Executables are cached; python is
+//! never invoked here.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::sparse::BlockedSpmv;
+
+use super::manifest::{ArtifactSpec, Manifest};
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<(String, String), Rc<xla::PjRtLoadedExecutable>>,
+}
+
+impl Engine {
+    /// Connect the PJRT CPU client and read the manifest.
+    pub fn load(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Engine { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the executable for `spec`.
+    pub fn executable(&mut self, spec: &ArtifactSpec) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let key = (spec.entry.clone(), spec.config.clone());
+        if let Some(exe) = self.cache.get(&key) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.hlo_path(spec);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow!("parsing {path:?}: {e}"))
+            .context("artifact HLO text unreadable — re-run `make artifacts`")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}/{}: {e}", spec.entry, spec.config))?;
+        let exe = Rc::new(exe);
+        self.cache.insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Pick the smallest spmv config fitting a packed workload's needs.
+    pub fn pick_spmv(&self, b: &BlockedSpmv) -> Result<ArtifactSpec> {
+        self.pick_entry("spmv", b)
+    }
+
+    pub fn pick_cg(&self, b: &BlockedSpmv) -> Result<ArtifactSpec> {
+        self.pick_entry("cg_step", b)
+    }
+
+    fn pick_entry(&self, entry: &str, b: &BlockedSpmv) -> Result<ArtifactSpec> {
+        let max_tasks = b.task_len.iter().copied().max().unwrap_or(0);
+        let max_staged = b.staged_len.iter().copied().max().unwrap_or(0);
+        self.manifest
+            .pick(entry, b.ncols, b.nrows, b.shape.k, max_tasks, max_staged)
+            .cloned()
+            .ok_or_else(|| {
+                anyhow!(
+                    "no {entry} artifact fits ncols={} nrows={} k={} e={} c={}",
+                    b.ncols,
+                    b.nrows,
+                    b.shape.k,
+                    max_tasks,
+                    max_staged
+                )
+            })
+    }
+}
+
+/// Literal packing helpers for the blocked operand set.  The packed
+/// arrays may be *smaller* than the artifact's config (fewer blocks /
+/// smaller n); `expand` zero-pads into the artifact shape.
+fn expand_i32(src: &[i32], rows: usize, cols: usize, dst_rows: usize, dst_cols: usize, fill: i32) -> Vec<i32> {
+    let mut out = vec![fill; dst_rows * dst_cols];
+    for r in 0..rows {
+        out[r * dst_cols..r * dst_cols + cols].copy_from_slice(&src[r * cols..(r + 1) * cols]);
+    }
+    out
+}
+
+fn expand_f32(src: &[f32], rows: usize, cols: usize, dst_rows: usize, dst_cols: usize) -> Vec<f32> {
+    let mut out = vec![0f32; dst_rows * dst_cols];
+    for r in 0..rows {
+        out[r * dst_cols..r * dst_cols + cols].copy_from_slice(&src[r * cols..(r + 1) * cols]);
+    }
+    out
+}
+
+/// The blocked operands as literals shaped for `spec`.
+pub struct BlockedOperands {
+    pub x_gather: xla::Literal,
+    pub cols_local: xla::Literal,
+    pub vals: xla::Literal,
+    pub rows_global: xla::Literal,
+    spec: ArtifactSpec,
+    nrows: usize,
+    ncols: usize,
+}
+
+impl BlockedOperands {
+    pub fn pack(b: &BlockedSpmv, spec: &ArtifactSpec) -> Result<BlockedOperands> {
+        let (k0, e0, c0) = (b.shape.k, b.shape.e, b.shape.c);
+        let (k1, e1, c1) = (spec.k, spec.e, spec.c);
+        anyhow::ensure!(k0 <= k1 && e0 <= e1 && c0 <= c1, "packed data exceeds artifact config");
+        let lit = |v: &[i32], rows: usize, cols: usize, dr: usize, dc: usize, fill: i32| -> Result<xla::Literal> {
+            let data = expand_i32(v, rows, cols, dr, dc, fill);
+            xla::Literal::vec1(&data)
+                .reshape(&[dr as i64, dc as i64])
+                .map_err(|e| anyhow!("reshape: {e}"))
+        };
+        // padding rows in rows_global must hit the artifact's dump slot
+        let rows_fixed: Vec<i32> = b
+            .rows_global
+            .iter()
+            .map(|&r| if r as usize == b.shape.n_out { spec.n_out as i32 } else { r })
+            .collect();
+        let vals = expand_f32(&b.vals, k0, e0, k1, e1);
+        Ok(BlockedOperands {
+            x_gather: lit(&b.x_gather, k0, c0, k1, c1, 0)?,
+            cols_local: lit(&b.cols_local, k0, e0, k1, e1, 0)?,
+            vals: xla::Literal::vec1(&vals)
+                .reshape(&[k1 as i64, e1 as i64])
+                .map_err(|e| anyhow!("reshape vals: {e}"))?,
+            rows_global: lit(&rows_fixed, k0, e0, k1, e1, spec.n_out as i32)?,
+            spec: spec.clone(),
+            nrows: b.nrows,
+            ncols: b.ncols,
+        })
+    }
+}
+
+/// A compiled SPMV ready to run: y = A·x via the AOT kernel.
+pub struct SpmvExec {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    ops: BlockedOperands,
+}
+
+impl SpmvExec {
+    pub fn prepare(engine: &mut Engine, b: &BlockedSpmv) -> Result<SpmvExec> {
+        let spec = engine.pick_spmv(b)?;
+        let exe = engine.executable(&spec)?;
+        let ops = BlockedOperands::pack(b, &spec)?;
+        Ok(SpmvExec { exe, ops })
+    }
+
+    pub fn config(&self) -> &str {
+        &self.ops.spec.config
+    }
+
+    /// Execute y = A·x.  `x.len()` must equal the packed ncols.
+    pub fn run(&self, x: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(x.len() == self.ops.ncols, "x length mismatch");
+        let mut xp = vec![0f32; self.ops.spec.n_in];
+        xp[..x.len()].copy_from_slice(x);
+        let x_lit = xla::Literal::vec1(&xp);
+        let result = self
+            .exe
+            .execute(&[
+                &x_lit,
+                &self.ops.x_gather,
+                &self.ops.cols_local,
+                &self.ops.vals,
+                &self.ops.rows_global,
+            ])
+            .map_err(|e| anyhow!("execute spmv: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        let tuple = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+        let mut y = tuple.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?;
+        y.truncate(self.ops.nrows);
+        Ok(y)
+    }
+}
+
+/// A compiled CG iteration: state (x, r, p, rz) advances fully on the
+/// PJRT side; rust orchestrates convergence.
+pub struct CgExec {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    ops: BlockedOperands,
+    n: usize,
+}
+
+pub struct CgState {
+    pub x: Vec<f32>,
+    pub r: Vec<f32>,
+    pub p: Vec<f32>,
+    pub rz: f32,
+    pub iterations: usize,
+}
+
+impl CgExec {
+    pub fn prepare(engine: &mut Engine, b: &BlockedSpmv) -> Result<CgExec> {
+        anyhow::ensure!(b.nrows == b.ncols, "CG needs a square system");
+        let spec = engine.pick_cg(b)?;
+        let exe = engine.executable(&spec)?;
+        let ops = BlockedOperands::pack(b, &spec)?;
+        Ok(CgExec { exe, ops, n: b.nrows })
+    }
+
+    pub fn init(&self, bvec: &[f32]) -> CgState {
+        assert_eq!(bvec.len(), self.n);
+        let rz = bvec.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>() as f32;
+        CgState { x: vec![0.0; self.n], r: bvec.to_vec(), p: bvec.to_vec(), rz, iterations: 0 }
+    }
+
+    /// One CG iteration on the device.
+    pub fn step(&self, st: &mut CgState) -> Result<()> {
+        let n_pad = self.ops.spec.n_out;
+        let pad = |v: &[f32]| {
+            let mut p = vec![0f32; n_pad];
+            p[..v.len()].copy_from_slice(v);
+            xla::Literal::vec1(&p)
+        };
+        let result = self
+            .exe
+            .execute(&[
+                &pad(&st.x),
+                &pad(&st.r),
+                &pad(&st.p),
+                &xla::Literal::scalar(st.rz),
+                &self.ops.x_gather,
+                &self.ops.cols_local,
+                &self.ops.vals,
+                &self.ops.rows_global,
+            ])
+            .map_err(|e| anyhow!("execute cg_step: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        anyhow::ensure!(parts.len() == 4, "cg_step must return 4 outputs");
+        let take = |l: &xla::Literal| -> Result<Vec<f32>> {
+            let mut v = l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?;
+            v.truncate(self.n);
+            Ok(v)
+        };
+        st.x = take(&parts[0])?;
+        st.r = take(&parts[1])?;
+        st.p = take(&parts[2])?;
+        st.rz = parts[3].to_vec::<f32>().map_err(|e| anyhow!("rz: {e}"))?[0];
+        st.iterations += 1;
+        Ok(())
+    }
+
+    /// Run until ‖r‖² < tol² or max_iters.
+    pub fn solve(&self, bvec: &[f32], tol: f32, max_iters: usize) -> Result<CgState> {
+        let mut st = self.init(bvec);
+        let tol2 = tol * tol;
+        while st.rz > tol2 && st.iterations < max_iters {
+            self.step(&mut st)?;
+        }
+        Ok(st)
+    }
+}

@@ -1,0 +1,162 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime.  aot.py lowers the L2 model at a ladder of static
+//! shape configs and records them in `artifacts/manifest.json`; this
+//! module parses that file and picks the smallest config that fits a
+//! workload.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One lowered artifact (an entry-point at one shape config).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    /// "spmv" or "cg_step"
+    pub entry: String,
+    /// config name (t0, s1, m1, m2, l1)
+    pub config: String,
+    /// HLO text file, relative to the artifacts dir
+    pub file: String,
+    pub n_in: usize,
+    pub n_out: usize,
+    pub k: usize,
+    pub e: usize,
+    pub c: usize,
+}
+
+impl ArtifactSpec {
+    pub fn shape(&self) -> crate::sparse::BlockedShape {
+        crate::sparse::BlockedShape {
+            n_in: self.n_in,
+            n_out: self.n_out,
+            k: self.k,
+            e: self.e,
+            c: self.c,
+        }
+    }
+
+    /// Total padded task slots — the "size" used to pick minimal configs.
+    fn volume(&self) -> usize {
+        self.n_in + self.k * self.e * 2
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        if json.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            return Err(anyhow!("manifest format must be hlo-text"));
+        }
+        let arts = json
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts[]"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let field = |k: &str| -> Result<usize> {
+                a.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("artifact missing {k}"))
+            };
+            let sfield = |k: &str| -> Result<String> {
+                Ok(a.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact missing {k}"))?
+                    .to_string())
+            };
+            artifacts.push(ArtifactSpec {
+                entry: sfield("entry")?,
+                config: sfield("config")?,
+                file: sfield("file")?,
+                n_in: field("n_in")?,
+                n_out: field("n_out")?,
+                k: field("k")?,
+                e: field("e")?,
+                c: field("c")?,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Smallest config of `entry` that fits the workload requirements.
+    pub fn pick(
+        &self,
+        entry: &str,
+        ncols: usize,
+        nrows: usize,
+        k: usize,
+        max_tasks: usize,
+        max_staged: usize,
+    ) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.entry == entry
+                    && a.n_in >= ncols
+                    && a.n_out >= nrows
+                    && a.k >= k
+                    && a.e >= max_tasks
+                    && a.c >= max_staged
+            })
+            .min_by_key(|a| a.volume())
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+/// Default artifacts directory: `$EPGRAPH_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("EPGRAPH_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format": "hlo-text", "version": 1, "artifacts": [
+                {"entry": "spmv", "config": "t0", "file": "spmv_t0.hlo.txt",
+                 "n_in": 1024, "n_out": 1024, "k": 8, "e": 256, "c": 256},
+                {"entry": "spmv", "config": "m1", "file": "spmv_m1.hlo.txt",
+                 "n_in": 16384, "n_out": 16384, "k": 64, "e": 512, "c": 512}
+            ]}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn loads_and_picks_smallest_fit() {
+        let dir = std::env::temp_dir().join("epgraph_manifest_test");
+        fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let t0 = m.pick("spmv", 800, 800, 8, 200, 200).unwrap();
+        assert_eq!(t0.config, "t0");
+        let m1 = m.pick("spmv", 800, 800, 16, 200, 200).unwrap();
+        assert_eq!(m1.config, "m1"); // k=16 doesn't fit t0
+        assert!(m.pick("spmv", 1 << 20, 8, 8, 8, 8).is_none());
+        assert!(m.pick("cg_step", 8, 8, 1, 1, 1).is_none());
+    }
+
+    #[test]
+    fn missing_dir_is_actionable_error() {
+        let err = Manifest::load(Path::new("/definitely/not/here")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

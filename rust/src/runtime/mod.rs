@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text) produced by
+//! `make artifacts` and executes them on the request path.  Python is
+//! build-time only; after artifacts exist the binary is self-contained.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{BlockedOperands, CgExec, CgState, Engine, SpmvExec};
+pub use manifest::{default_artifacts_dir, ArtifactSpec, Manifest};

@@ -1,0 +1,286 @@
+//! BlockedSpmv: the runtime data format consumed by the AOT kernel.
+//!
+//! Mirrors python/compile/blocked.py — given a COO matrix and an edge
+//! partition, pack each block's tasks into padded gather lists:
+//!
+//!   x_gather[k, c]    global x-indices the block stages ("smem fill")
+//!   cols_local[k, e]  per-task index into the staged copy
+//!   vals[k, e]        per-task matrix value (0 padding)
+//!   rows_global[k, e] output row per task (padding → n_out dump slot)
+//!
+//! The arrays are stored flat row-major, ready to hand to PJRT literals.
+
+use crate::partition::EdgePartition;
+
+use super::coo::Coo;
+
+/// Shape limits of one AOT artifact config (mirrors configs.py).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockedShape {
+    pub n_in: usize,
+    pub n_out: usize,
+    pub k: usize,
+    pub e: usize,
+    pub c: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct BlockedSpmv {
+    pub shape: BlockedShape,
+    pub x_gather: Vec<i32>,
+    pub cols_local: Vec<i32>,
+    pub vals: Vec<f32>,
+    pub rows_global: Vec<i32>,
+    /// real (unpadded) dims, for unpacking results
+    pub nrows: usize,
+    pub ncols: usize,
+    /// per-block count of staged columns (the block's smem footprint)
+    pub staged_len: Vec<usize>,
+    /// per-block task counts
+    pub task_len: Vec<usize>,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum PackError {
+    /// a block holds more tasks than `e`
+    BlockTooLarge { block: usize, tasks: usize, e: usize },
+    /// a block stages more unique columns than `c`
+    StageTooLarge { block: usize, staged: usize, c: usize },
+    /// matrix dims exceed the config
+    DimsTooLarge,
+    /// partition has more blocks than the config
+    TooManyBlocks { k_part: usize, k_cfg: usize },
+}
+
+impl std::fmt::Display for PackError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PackError::BlockTooLarge { block, tasks, e } => {
+                write!(f, "block {block} has {tasks} tasks > e={e}")
+            }
+            PackError::StageTooLarge { block, staged, c } => {
+                write!(f, "block {block} stages {staged} cols > c={c}")
+            }
+            PackError::DimsTooLarge => write!(f, "matrix dims exceed config"),
+            PackError::TooManyBlocks { k_part, k_cfg } => {
+                write!(f, "partition k={k_part} > config k={k_cfg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PackError {}
+
+/// Pack a COO matrix under an edge partition into the blocked format.
+/// Partitions with fewer blocks than the config leave trailing blocks
+/// empty (all-padding); that is harmless at execution time.
+pub fn pack_blocked(
+    a: &Coo,
+    p: &EdgePartition,
+    shape: BlockedShape,
+) -> Result<BlockedSpmv, PackError> {
+    if a.ncols > shape.n_in || a.nrows > shape.n_out {
+        return Err(PackError::DimsTooLarge);
+    }
+    if p.k > shape.k {
+        return Err(PackError::TooManyBlocks { k_part: p.k, k_cfg: shape.k });
+    }
+    let (k, e, c) = (shape.k, shape.e, shape.c);
+    let mut x_gather = vec![0i32; k * c];
+    let mut cols_local = vec![0i32; k * e];
+    let mut vals = vec![0f32; k * e];
+    let mut rows_global = vec![shape.n_out as i32; k * e];
+
+    // bucket tasks per block, preserving task order within blocks
+    let mut counts = vec![0usize; k];
+    for &b in &p.assign {
+        counts[b as usize] += 1;
+    }
+    for (b, &cnt) in counts.iter().enumerate() {
+        if cnt > e {
+            return Err(PackError::BlockTooLarge { block: b, tasks: cnt, e });
+        }
+    }
+    let mut starts = vec![0usize; k + 1];
+    for b in 0..k {
+        starts[b + 1] = starts[b] + counts[b];
+    }
+    let mut order = vec![0usize; a.nnz()];
+    let mut cursor = starts[..k].to_vec();
+    for t in 0..a.nnz() {
+        let b = p.assign[t] as usize;
+        order[cursor[b]] = t;
+        cursor[b] += 1;
+    }
+
+    // per block: local dictionary of staged columns (epoch-stamped)
+    let mut local_of_col = vec![u32::MAX; a.ncols];
+    let mut staged_cols: Vec<u32> = Vec::with_capacity(c);
+    let mut staged_len = vec![0usize; k];
+    for b in 0..k {
+        staged_cols.clear();
+        for (slot, &t) in order[starts[b]..starts[b + 1]].iter().enumerate() {
+            let col = a.cols[t];
+            let local = if local_of_col[col as usize] == u32::MAX {
+                let l = staged_cols.len() as u32;
+                if l as usize >= c {
+                    return Err(PackError::StageTooLarge { block: b, staged: l as usize + 1, c });
+                }
+                local_of_col[col as usize] = l;
+                staged_cols.push(col);
+                l
+            } else {
+                local_of_col[col as usize]
+            };
+            cols_local[b * e + slot] = local as i32;
+            vals[b * e + slot] = a.vals[t];
+            rows_global[b * e + slot] = a.rows[t] as i32;
+        }
+        for (l, &col) in staged_cols.iter().enumerate() {
+            x_gather[b * c + l] = col as i32;
+            local_of_col[col as usize] = u32::MAX; // reset for next block
+        }
+        staged_len[b] = staged_cols.len();
+    }
+
+    Ok(BlockedSpmv {
+        shape,
+        x_gather,
+        cols_local,
+        vals,
+        rows_global,
+        nrows: a.nrows,
+        ncols: a.ncols,
+        staged_len,
+        task_len: counts,
+    })
+}
+
+impl BlockedSpmv {
+    /// Pure-rust reference execution (the oracle the PJRT path is tested
+    /// against, and the no-artifact fallback).
+    pub fn execute_ref(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.ncols);
+        let s = self.shape;
+        let mut y = vec![0f32; s.n_out + 1];
+        let mut staged = vec![0f32; s.c];
+        for b in 0..s.k {
+            for l in 0..s.c {
+                let gi = self.x_gather[b * s.c + l] as usize;
+                staged[l] = if gi < x.len() { x[gi] } else { 0.0 };
+            }
+            for t in 0..s.e {
+                let v = self.vals[b * s.e + t];
+                let xl = staged[self.cols_local[b * s.e + t] as usize];
+                y[self.rows_global[b * s.e + t] as usize] += v * xl;
+            }
+        }
+        y.truncate(self.nrows);
+        y
+    }
+
+    /// Padded x input for the PJRT executable (length n_in).
+    pub fn pad_x(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.ncols);
+        let mut p = vec![0f32; self.shape.n_in];
+        p[..x.len()].copy_from_slice(x);
+        p
+    }
+
+    /// Padding waste: fraction of (k·e) task slots that are padding —
+    /// the L1 kernel's wasted VPU lanes, tracked by the perf pass.
+    pub fn padding_waste(&self) -> f64 {
+        let total = (self.shape.k * self.shape.e) as f64;
+        let used: usize = self.task_len.iter().sum();
+        1.0 - used as f64 / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::default_sched::default_partition;
+    use crate::partition::Method;
+    use crate::sparse::gen;
+    use crate::util::rng::Pcg32;
+
+    fn shape(n: usize, k: usize, e: usize, c: usize) -> BlockedShape {
+        BlockedShape { n_in: n, n_out: n, k, e, c }
+    }
+
+    #[test]
+    fn pack_and_execute_matches_coo() {
+        let a = gen::spd_poisson(16);
+        let p = default_partition(a.nnz(), 8);
+        let b = pack_blocked(&a, &p, shape(1024, 8, 256, 256)).unwrap();
+        let mut rng = Pcg32::new(1);
+        let x: Vec<f32> = (0..a.ncols).map(|_| rng.gen_f32()).collect();
+        let y1 = a.spmv(&x);
+        let y2 = b.execute_ref(&x);
+        for (u, v) in y1.iter().zip(&y2) {
+            assert!((u - v).abs() < 1e-4, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn ep_partition_packs_and_matches() {
+        let a = gen::scircuit_s(900, 4);
+        let g = a.affinity_graph();
+        let p = Method::Ep.partition(&g, 8, 2);
+        let b = pack_blocked(&a, &p, shape(1024, 8, 512, 512)).unwrap();
+        let mut rng = Pcg32::new(2);
+        let x: Vec<f32> = (0..a.ncols).map(|_| rng.gen_f32()).collect();
+        let y1 = a.spmv(&x);
+        let y2 = b.execute_ref(&x);
+        for (u, v) in y1.iter().zip(&y2) {
+            assert!((u - v).abs() < 1e-3, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn overflow_errors() {
+        let a = gen::spd_poisson(16); // 256 rows, ~1216 nnz
+        let p = default_partition(a.nnz(), 2);
+        match pack_blocked(&a, &p, shape(1024, 2, 64, 512)) {
+            Err(PackError::BlockTooLarge { .. }) => {}
+            other => panic!("expected BlockTooLarge, got {other:?}"),
+        }
+        match pack_blocked(&a, &p, shape(128, 2, 1024, 1024)) {
+            Err(PackError::DimsTooLarge) => {}
+            other => panic!("expected DimsTooLarge, got {other:?}"),
+        }
+        let p8 = default_partition(a.nnz(), 8);
+        match pack_blocked(&a, &p8, shape(1024, 2, 1024, 1024)) {
+            Err(PackError::TooManyBlocks { .. }) => {}
+            other => panic!("expected TooManyBlocks, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stage_limit_enforced() {
+        // a block with e tasks all hitting distinct columns needs c >= e
+        let mut a = Coo::new(4, 64);
+        for j in 0..64 {
+            a.push(j % 4, j, 1.0);
+        }
+        let p = default_partition(64, 1);
+        match pack_blocked(&a, &p, shape(64, 1, 64, 16)) {
+            Err(PackError::StageTooLarge { .. }) => {}
+            other => panic!("{other:?}"),
+        }
+        assert!(pack_blocked(&a, &p, shape(64, 1, 64, 64)).is_ok());
+    }
+
+    #[test]
+    fn fewer_blocks_than_config_is_fine() {
+        let a = gen::spd_poisson(8);
+        let p = default_partition(a.nnz(), 2);
+        let b = pack_blocked(&a, &p, shape(256, 8, 256, 256)).unwrap();
+        let x = vec![1f32; a.ncols];
+        let y1 = a.spmv(&x);
+        let y2 = b.execute_ref(&x);
+        for (u, v) in y1.iter().zip(&y2) {
+            assert!((u - v).abs() < 1e-4);
+        }
+    }
+}

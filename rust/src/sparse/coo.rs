@@ -1,0 +1,201 @@
+//! Sparse matrices: COO and CSR forms, reference SPMV, and the bridge
+//! from a matrix to its SPMV data-affinity graph (paper §5.2: vertices
+//! for every x_j and y_i, an edge per nonzero A[i,j] — a bipartite
+//! data-affinity graph).
+
+use crate::graph::Graph;
+
+/// Coordinate-format sparse matrix.  Duplicate (i, j) entries are legal
+/// and are summed by SPMV semantics (as in Matrix Market).
+#[derive(Clone, Debug)]
+pub struct Coo {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Coo {
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Coo { nrows, ncols, rows: vec![], cols: vec![], vals: vec![] }
+    }
+
+    pub fn push(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.nrows && j < self.ncols);
+        self.rows.push(i as u32);
+        self.cols.push(j as u32);
+        self.vals.push(v);
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Reference SPMV: y = A·x (used as the numeric oracle for the
+    /// PJRT-executed kernel and by the CG fallback path).
+    pub fn spmv(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.ncols);
+        let mut y = vec![0f32; self.nrows];
+        for t in 0..self.nnz() {
+            y[self.rows[t] as usize] += self.vals[t] * x[self.cols[t] as usize];
+        }
+        y
+    }
+
+    /// Sort entries row-major (row, then col) — the CUSP-like layout.
+    pub fn sort_row_major(&mut self) {
+        let mut idx: Vec<usize> = (0..self.nnz()).collect();
+        idx.sort_by_key(|&t| (self.rows[t], self.cols[t]));
+        self.permute(&idx);
+    }
+
+    /// Reorder the nonzeros by `perm` (new position t takes old perm[t]).
+    pub fn permute(&mut self, perm: &[usize]) {
+        assert_eq!(perm.len(), self.nnz());
+        self.rows = perm.iter().map(|&t| self.rows[t]).collect();
+        self.cols = perm.iter().map(|&t| self.cols[t]).collect();
+        self.vals = perm.iter().map(|&t| self.vals[t]).collect();
+    }
+
+    /// The SPMV data-affinity graph (paper §5.2): vertex ids 0..ncols are
+    /// the input-vector elements x_j, ids ncols..ncols+nrows the output
+    /// elements y_i; each nonzero is a task-edge (x_j, y_i).  Edge order
+    /// == nonzero order, so an EdgePartition indexes nonzeros directly.
+    pub fn affinity_graph(&self) -> Graph {
+        let n = self.ncols + self.nrows;
+        let edges = (0..self.nnz())
+            .map(|t| (self.cols[t], self.ncols as u32 + self.rows[t]))
+            .collect();
+        Graph::from_edges(n, edges)
+    }
+
+    /// Transpose (used by SPD checks and tests).
+    pub fn transpose(&self) -> Coo {
+        Coo {
+            nrows: self.ncols,
+            ncols: self.nrows,
+            rows: self.cols.clone(),
+            cols: self.rows.clone(),
+            vals: self.vals.clone(),
+        }
+    }
+}
+
+/// CSR form — used by the simulator baselines (row-split schedules).
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub row_ptr: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Csr {
+    pub fn from_coo(coo: &Coo) -> Self {
+        let mut counts = vec![0u32; coo.nrows];
+        for &r in &coo.rows {
+            counts[r as usize] += 1;
+        }
+        let mut row_ptr = vec![0u32; coo.nrows + 1];
+        for i in 0..coo.nrows {
+            row_ptr[i + 1] = row_ptr[i] + counts[i];
+        }
+        let mut cursor = row_ptr[..coo.nrows].to_vec();
+        let mut cols = vec![0u32; coo.nnz()];
+        let mut vals = vec![0f32; coo.nnz()];
+        for t in 0..coo.nnz() {
+            let r = coo.rows[t] as usize;
+            let at = cursor[r] as usize;
+            cols[at] = coo.cols[t];
+            vals[at] = coo.vals[t];
+            cursor[r] += 1;
+        }
+        Csr { nrows: coo.nrows, ncols: coo.ncols, row_ptr, cols, vals }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn spmv(&self, x: &[f32]) -> Vec<f32> {
+        let mut y = vec![0f32; self.nrows];
+        for i in 0..self.nrows {
+            let mut acc = 0f32;
+            for t in self.row_ptr[i] as usize..self.row_ptr[i + 1] as usize {
+                acc += self.vals[t] * x[self.cols[t] as usize];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Coo {
+        // [[1, 0, 2], [0, 3, 0]]
+        let mut a = Coo::new(2, 3);
+        a.push(0, 0, 1.0);
+        a.push(0, 2, 2.0);
+        a.push(1, 1, 3.0);
+        a
+    }
+
+    #[test]
+    fn coo_spmv_correct() {
+        let a = small();
+        assert_eq!(a.spmv(&[1.0, 2.0, 3.0]), vec![7.0, 6.0]);
+    }
+
+    #[test]
+    fn duplicates_sum() {
+        let mut a = Coo::new(1, 1);
+        a.push(0, 0, 1.5);
+        a.push(0, 0, 2.5);
+        assert_eq!(a.spmv(&[2.0]), vec![8.0]);
+    }
+
+    #[test]
+    fn csr_matches_coo() {
+        let a = small();
+        let c = Csr::from_coo(&a);
+        let x = [0.5, -1.0, 4.0];
+        assert_eq!(a.spmv(&x), c.spmv(&x));
+    }
+
+    #[test]
+    fn affinity_graph_is_bipartite_per_nonzero() {
+        let a = small();
+        let g = a.affinity_graph();
+        assert_eq!(g.n, 5);
+        assert_eq!(g.m(), 3);
+        // edge t connects x_{col} and y_{row}+ncols
+        assert_eq!(g.edges[0], (0, 3));
+        assert_eq!(g.edges[1], (2, 3));
+        assert_eq!(g.edges[2], (1, 4));
+    }
+
+    #[test]
+    fn sort_and_permute_preserve_semantics() {
+        let mut a = Coo::new(3, 3);
+        a.push(2, 1, 1.0);
+        a.push(0, 0, 2.0);
+        a.push(1, 2, 3.0);
+        let x = [1.0, 1.0, 1.0];
+        let before = a.spmv(&x);
+        a.sort_row_major();
+        assert_eq!(a.rows, vec![0, 1, 2]);
+        assert_eq!(a.spmv(&x), before);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = small();
+        let t = a.transpose().transpose();
+        assert_eq!(a.spmv(&[1.0, 2.0, 3.0]), t.spmv(&[1.0, 2.0, 3.0]));
+    }
+}

@@ -1,0 +1,213 @@
+//! cpack data-layout transformation (Ding & Kennedy, PLDI'99) — paper
+//! §4.1: after task partitioning, data objects are reordered by *first
+//! touch* in the new schedule so that each thread block's staged loads
+//! hit contiguous memory (coalesced fills, Fig 8d).
+//!
+//! For SPMV this permutes the x vector (columns) and y vector (rows)
+//! independently; square systems (CG) use the unified variant so the
+//! iteration space stays consistent.
+
+use crate::partition::EdgePartition;
+
+use super::coo::Coo;
+
+/// A permutation pair: `new_of_old[i]` = new index of old index i, and
+/// its inverse `old_of_new`.
+#[derive(Clone, Debug)]
+pub struct Perm {
+    pub new_of_old: Vec<u32>,
+    pub old_of_new: Vec<u32>,
+}
+
+impl Perm {
+    pub fn identity(n: usize) -> Self {
+        Perm {
+            new_of_old: (0..n as u32).collect(),
+            old_of_new: (0..n as u32).collect(),
+        }
+    }
+
+    fn from_first_touch(n: usize, touches: impl Iterator<Item = u32>) -> Self {
+        let mut new_of_old = vec![u32::MAX; n];
+        let mut old_of_new = Vec::with_capacity(n);
+        for t in touches {
+            if new_of_old[t as usize] == u32::MAX {
+                new_of_old[t as usize] = old_of_new.len() as u32;
+                old_of_new.push(t);
+            }
+        }
+        // untouched objects keep relative order at the end
+        for i in 0..n as u32 {
+            if new_of_old[i as usize] == u32::MAX {
+                new_of_old[i as usize] = old_of_new.len() as u32;
+                old_of_new.push(i);
+            }
+        }
+        Perm { new_of_old, old_of_new }
+    }
+
+    /// Apply to a dense vector: out[new] = v[old].
+    pub fn apply_vec<T: Copy>(&self, v: &[T]) -> Vec<T> {
+        assert_eq!(v.len(), self.old_of_new.len());
+        self.old_of_new.iter().map(|&o| v[o as usize]).collect()
+    }
+
+    /// Invert the application (scatter back to old order).
+    pub fn unapply_vec<T: Copy>(&self, v: &[T]) -> Vec<T> {
+        assert_eq!(v.len(), self.new_of_old.len());
+        self.new_of_old.iter().map(|&nw| v[nw as usize]).collect()
+    }
+
+    pub fn is_valid(&self) -> bool {
+        let n = self.new_of_old.len();
+        self.old_of_new.len() == n
+            && self
+                .new_of_old
+                .iter()
+                .enumerate()
+                .all(|(old, &nw)| self.old_of_new.get(nw as usize) == Some(&(old as u32)))
+    }
+}
+
+/// Schedule order: tasks sorted by (block, original index) — the order
+/// the transformed kernel walks them.
+pub fn schedule_order(p: &EdgePartition) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..p.assign.len()).collect();
+    order.sort_by_key(|&t| (p.assign[t], t as u32));
+    order
+}
+
+/// cpack for SPMV: first-touch permutations of columns (x) and rows (y)
+/// under the scheduled task order, plus the remapped matrix whose
+/// nonzeros are also reordered into schedule order.
+pub fn cpack_spmv(a: &Coo, p: &EdgePartition) -> (Coo, Perm, Perm) {
+    let order = schedule_order(p);
+    let col_perm =
+        Perm::from_first_touch(a.ncols, order.iter().map(|&t| a.cols[t]));
+    let row_perm =
+        Perm::from_first_touch(a.nrows, order.iter().map(|&t| a.rows[t]));
+    let mut b = Coo::new(a.nrows, a.ncols);
+    for &t in &order {
+        b.push(
+            row_perm.new_of_old[a.rows[t] as usize] as usize,
+            col_perm.new_of_old[a.cols[t] as usize] as usize,
+            a.vals[t],
+        );
+    }
+    (b, row_perm, col_perm)
+}
+
+/// cpack for a general task graph: first-touch permutation of data
+/// objects under the scheduled task order (both endpoints of each task).
+/// Used by the Rodinia-style application path.
+pub fn cpack_graph(g: &crate::graph::Graph, p: &EdgePartition) -> Perm {
+    let order = schedule_order(p);
+    Perm::from_first_touch(
+        g.n,
+        order.iter().flat_map(|&t| {
+            let (u, v) = g.edges[t];
+            [u, v].into_iter()
+        }),
+    )
+}
+
+/// Unified cpack for square systems (CG): one permutation applied to
+/// both rows and columns, built from first touch over (col, row) pairs.
+pub fn cpack_square(a: &Coo, p: &EdgePartition) -> (Coo, Perm) {
+    assert_eq!(a.nrows, a.ncols, "unified cpack needs a square matrix");
+    let order = schedule_order(p);
+    let perm = Perm::from_first_touch(
+        a.ncols,
+        order
+            .iter()
+            .flat_map(|&t| [a.cols[t], a.rows[t]].into_iter()),
+    );
+    let mut b = Coo::new(a.nrows, a.ncols);
+    for &t in &order {
+        b.push(
+            perm.new_of_old[a.rows[t] as usize] as usize,
+            perm.new_of_old[a.cols[t] as usize] as usize,
+            a.vals[t],
+        );
+    }
+    (b, perm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::default_sched::default_partition;
+    use crate::sparse::gen;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn perm_validity_and_roundtrip() {
+        let a = gen::scircuit_s(500, 1);
+        let p = default_partition(a.nnz(), 4);
+        let (_, rp, cp) = cpack_spmv(&a, &p);
+        assert!(rp.is_valid() && cp.is_valid());
+        let v: Vec<f32> = (0..a.ncols).map(|i| i as f32).collect();
+        assert_eq!(cp.unapply_vec(&cp.apply_vec(&v)), v);
+    }
+
+    #[test]
+    fn cpack_preserves_spmv_semantics() {
+        let a = gen::mac_econ_s(800, 2);
+        let p = crate::partition::Method::Ep.partition(&a.affinity_graph(), 8, 3);
+        let (b, rp, cp) = cpack_spmv(&a, &p);
+        let mut rng = Pcg32::new(5);
+        let x: Vec<f32> = (0..a.ncols).map(|_| rng.gen_f32()).collect();
+        let y_direct = a.spmv(&x);
+        // permuted space: x' = apply(x), y' = B x', y = unapply(y')
+        let y_perm = rp.unapply_vec(&b.spmv(&cp.apply_vec(&x)));
+        for (u, v) in y_direct.iter().zip(&y_perm) {
+            assert!((u - v).abs() < 1e-4, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn cpack_square_preserves_semantics() {
+        let a = gen::spd_poisson(20);
+        let p = default_partition(a.nnz(), 4);
+        let (b, perm) = cpack_square(&a, &p);
+        let mut rng = Pcg32::new(9);
+        let x: Vec<f32> = (0..a.ncols).map(|_| rng.gen_f32()).collect();
+        let y1 = a.spmv(&x);
+        let y2 = perm.unapply_vec(&b.spmv(&perm.apply_vec(&x)));
+        for (u, v) in y1.iter().zip(&y2) {
+            assert!((u - v).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn first_touch_makes_block_columns_contiguous() {
+        let a = gen::mc2depi_s(24, 3);
+        let g = a.affinity_graph();
+        let p = crate::partition::Method::Ep.partition(&g, 8, 1);
+        let (b, _, _) = cpack_spmv(&a, &p);
+        // in the packed matrix, block 0's first task touches column 0
+        assert_eq!(b.cols[0], 0);
+        // and block 0's columns form a low, dense range
+        let order = schedule_order(&p);
+        let t0 = order.len() / p.k;
+        let max_col_b0 = (0..t0).map(|t| b.cols[t]).max().unwrap();
+        let uniq: std::collections::HashSet<u32> = (0..t0).map(|t| b.cols[t]).collect();
+        assert!(
+            (max_col_b0 as usize) < uniq.len() * 2 + 8,
+            "block-0 columns not packed: max {max_col_b0}, uniq {}",
+            uniq.len()
+        );
+    }
+
+    #[test]
+    fn untouched_objects_appended() {
+        // matrix with an untouched column
+        let mut a = Coo::new(2, 3);
+        a.push(0, 0, 1.0);
+        a.push(1, 2, 1.0);
+        let p = default_partition(2, 2);
+        let (_, _, cp) = cpack_spmv(&a, &p);
+        assert!(cp.is_valid());
+        assert_eq!(cp.new_of_old.len(), 3); // column 1 untouched but present
+    }
+}

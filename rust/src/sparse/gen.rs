@@ -1,0 +1,308 @@
+//! Synthetic counterparts of the paper's evaluation matrices.
+//!
+//! The paper's Table 2 / Fig 6 matrices come from the UF collection and
+//! Matrix Market; we cannot ship them, so each generator reproduces the
+//! *structural family* (degree distribution + locality pattern, Fig 4/5)
+//! at laptop scale.  Scale factor 1.0 targets the `m2`/`l1` artifact
+//! configs (dims ≤ 131072, nnz ≤ 262144).  All are seeded/deterministic.
+
+use crate::util::rng::Pcg32;
+
+use super::coo::Coo;
+
+/// cant — FEM cantilever: banded block structure, degrees 20–40.
+pub fn cant_s(n: usize, seed: u64) -> Coo {
+    let mut rng = Pcg32::new(seed);
+    let mut a = Coo::new(n, n);
+    let band = 14;
+    for i in 0..n {
+        a.push(i, i, 4.0 + rng.gen_f32());
+        for d in 1..=band {
+            if i + d < n && rng.gen_f64() < 0.85 {
+                let v = rng.gen_f32() - 0.5;
+                a.push(i, i + d, v);
+                a.push(i + d, i, v);
+            }
+        }
+    }
+    a
+}
+
+/// circuit5M — huge circuit: mostly sparse random rows + a few very
+/// dense "power rail" rows/cols.
+pub fn circuit_s(n: usize, seed: u64) -> Coo {
+    let mut rng = Pcg32::new(seed);
+    let mut a = Coo::new(n, n);
+    for i in 0..n {
+        a.push(i, i, 2.0 + rng.gen_f32());
+        let deg = 1 + rng.gen_pareto(1.6, 64);
+        for _ in 0..deg.min(8) {
+            let j = rng.gen_range(n);
+            a.push(i, j, rng.gen_f32() - 0.5);
+        }
+    }
+    // dense rails: a handful of rows touching ~1% of columns
+    for _ in 0..4 {
+        let i = rng.gen_range(n);
+        for _ in 0..n / 100 {
+            a.push(i, rng.gen_range(n), rng.gen_f32());
+        }
+    }
+    a
+}
+
+/// cop20k_A — FEM accelerator cavity: irregular mesh, ~11 nnz/row.
+pub fn cop20k_s(n: usize, seed: u64) -> Coo {
+    let mut rng = Pcg32::new(seed);
+    let mut a = Coo::new(n, n);
+    // tetrahedral-mesh flavour: local band + a few medium-range links
+    for i in 0..n {
+        a.push(i, i, 6.0);
+        for _ in 0..5 {
+            let off = 1 + rng.gen_range(24);
+            if i + off < n {
+                let v = rng.gen_f32() - 0.5;
+                a.push(i, i + off, v);
+                a.push(i + off, i, v);
+            }
+        }
+    }
+    a
+}
+
+/// Ga41As41H72 — quantum chemistry: dense clustered blocks + long-range
+/// fill, ~35 nnz/row (low reuse relative to working set, like the paper).
+pub fn ga41as41h72_s(n: usize, seed: u64) -> Coo {
+    let mut rng = Pcg32::new(seed);
+    let mut a = Coo::new(n, n);
+    let cluster = 16;
+    for i in 0..n {
+        a.push(i, i, 8.0);
+        let base = (i / cluster) * cluster;
+        // dense intra-cluster coupling
+        for j in base..(base + cluster).min(n) {
+            if j != i && rng.gen_f64() < 0.5 {
+                a.push(i, j, rng.gen_f32() - 0.5);
+            }
+        }
+        // scattered long-range entries
+        for _ in 0..6 {
+            a.push(i, rng.gen_range(n), rng.gen_f32() * 0.1);
+        }
+    }
+    a
+}
+
+/// in-2004 — web graph: power-law in/out degrees (hub pages).
+pub fn in2004_s(n: usize, seed: u64) -> Coo {
+    let g = crate::graph::gen::power_law(n, 3, seed);
+    let mut rng = Pcg32::new(seed ^ 0xFEED);
+    let mut a = Coo::new(n, n);
+    for &(u, v) in &g.edges {
+        a.push(u as usize, v as usize, rng.gen_f32());
+        // web links are directed; mirror ~30% to mimic reciprocal links
+        if rng.gen_f64() < 0.3 {
+            a.push(v as usize, u as usize, rng.gen_f32());
+        }
+    }
+    a
+}
+
+/// mac_econ_fwd500 — economic model: narrow irregular band, ~6 nnz/row.
+pub fn mac_econ_s(n: usize, seed: u64) -> Coo {
+    let mut rng = Pcg32::new(seed);
+    let mut a = Coo::new(n, n);
+    for i in 0..n {
+        a.push(i, i, 3.0);
+        for _ in 0..5 {
+            // mixture: mostly near-diagonal, occasionally far
+            let j = if rng.gen_f64() < 0.8 {
+                let off = rng.gen_range(200) + 1;
+                if rng.gen_f64() < 0.5 { i.saturating_sub(off) } else { (i + off).min(n - 1) }
+            } else {
+                rng.gen_range(n)
+            };
+            if j != i {
+                a.push(i, j, rng.gen_f32() - 0.5);
+            }
+        }
+    }
+    a
+}
+
+/// mc2depi — 2D epidemic Markov chain: 4-point grid stencil, degree
+/// almost uniformly 4 (the paper: 99.4% of vertices).
+pub fn mc2depi_s(side: usize, seed: u64) -> Coo {
+    let mut rng = Pcg32::new(seed);
+    let n = side * side;
+    let mut a = Coo::new(n, n);
+    let at = |r: usize, c: usize| r * side + c;
+    for r in 0..side {
+        for c in 0..side {
+            let i = at(r, c);
+            // transitions to 4 neighbours (wrapping at the border keeps
+            // the degree exactly 4, matching mc2depi's near-uniformity)
+            let nbrs = [
+                at((r + 1) % side, c),
+                at((r + side - 1) % side, c),
+                at(r, (c + 1) % side),
+                at(r, (c + side - 1) % side),
+            ];
+            for j in nbrs {
+                a.push(i, j, 0.2 + 0.1 * rng.gen_f32());
+            }
+        }
+    }
+    a
+}
+
+/// scircuit — circuit simulation: power-law-ish with degree-2 chains.
+/// Node labels are scrambled: circuit netlist node numbering carries no
+/// layout locality, so (as in the paper, where default quality is ~35x
+/// worse than EP) the default contiguous schedule must not get mesh-like
+/// locality for free.
+pub fn scircuit_s(n: usize, seed: u64) -> Coo {
+    let mut rng = Pcg32::new(seed);
+    let mut relabel: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut relabel);
+    let mut a = Coo::new(n, n);
+    for i in 0..n {
+        a.push(relabel[i], relabel[i], 2.0);
+        // serial chain (wires)
+        if i + 1 < n {
+            let v = rng.gen_f32() - 0.5;
+            a.push(relabel[i], relabel[i + 1], v);
+            a.push(relabel[i + 1], relabel[i], v);
+        }
+        // occasional fan-out to a power-law hub
+        if rng.gen_f64() < 0.35 {
+            let hub = rng.gen_pareto(1.4, n.max(2) - 1) - 1;
+            if hub != i {
+                a.push(relabel[i], relabel[hub], rng.gen_f32() * 0.3);
+            }
+        }
+    }
+    // ship row-major like a real .mtx: under the scrambled labels this
+    // destroys the chain adjacency in task order, so the default
+    // contiguous schedule gets no free locality (as with real scircuit)
+    a.sort_row_major();
+    a
+}
+
+/// SPD 2D Poisson (5-point Laplacian) — the CG end-to-end system.
+pub fn spd_poisson(side: usize) -> Coo {
+    let n = side * side;
+    let mut a = Coo::new(n, n);
+    let at = |r: usize, c: usize| r * side + c;
+    for r in 0..side {
+        for c in 0..side {
+            let i = at(r, c);
+            a.push(i, i, 4.0);
+            if r > 0 {
+                a.push(i, at(r - 1, c), -1.0);
+            }
+            if r + 1 < side {
+                a.push(i, at(r + 1, c), -1.0);
+            }
+            if c > 0 {
+                a.push(i, at(r, c - 1), -1.0);
+            }
+            if c + 1 < side {
+                a.push(i, at(r, c + 1), -1.0);
+            }
+        }
+    }
+    a
+}
+
+/// The paper's Table-2 suite at laptop scale, in the paper's order.
+pub fn paper_suite(seed: u64) -> Vec<(&'static str, Coo)> {
+    vec![
+        ("cant", cant_s(4096, seed)),
+        ("circuit5M", circuit_s(24576, seed + 1)),
+        ("cop20k_A", cop20k_s(16384, seed + 2)),
+        ("Ga41As41H72", ga41as41h72_s(8192, seed + 3)),
+        ("in-2004", in2004_s(16384, seed + 4)),
+        ("mac_econ_fwd500", mac_econ_s(16384, seed + 5)),
+        ("mc2depi", mc2depi_s(128, seed + 6)),
+        ("scircuit", scircuit_s(16384, seed + 7)),
+    ]
+}
+
+/// The Fig-6 partition-comparison subset (5 graphs, paper's order).
+pub fn fig6_suite(seed: u64) -> Vec<(&'static str, Coo)> {
+    vec![
+        ("cant", cant_s(4096, seed)),
+        ("circuit5M", circuit_s(24576, seed + 1)),
+        ("in-2004", in2004_s(16384, seed + 4)),
+        ("mc2depi", mc2depi_s(128, seed + 6)),
+        ("scircuit", scircuit_s(16384, seed + 7)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::stats;
+
+    #[test]
+    fn suite_fits_artifact_limits() {
+        for (name, m) in paper_suite(42) {
+            assert!(m.nrows.max(m.ncols) <= 131072, "{name} dims");
+            assert!(m.nnz() <= 262144, "{name} nnz {}", m.nnz());
+            assert!(m.nnz() > 10_000, "{name} too small: {}", m.nnz());
+        }
+    }
+
+    #[test]
+    fn mc2depi_degree_is_four() {
+        let m = mc2depi_s(64, 1);
+        let g = m.affinity_graph();
+        // x-side vertices: each column appears exactly 4 times
+        let h = g.degree_histogram();
+        let frac4 = h.get(4).copied().unwrap_or(0) as f64 / g.n as f64;
+        assert!(frac4 > 0.95, "frac4 {frac4}");
+    }
+
+    #[test]
+    fn in2004_is_power_law() {
+        let m = in2004_s(8192, 3);
+        let g = m.affinity_graph();
+        let slope = stats::log_log_slope(&g).expect("power law has many degrees");
+        assert!(slope < -0.7, "slope {slope}");
+    }
+
+    #[test]
+    fn cant_band_structure() {
+        let m = cant_s(2048, 5);
+        // banded: |i - j| ≤ band for all entries
+        for t in 0..m.nnz() {
+            let d = (m.rows[t] as i64 - m.cols[t] as i64).abs();
+            assert!(d <= 14, "bandwidth violated: {d}");
+        }
+        let g = m.affinity_graph();
+        assert!(g.avg_degree() > 10.0, "cant should be dense-ish");
+    }
+
+    #[test]
+    fn spd_poisson_is_symmetric_diag_dominant() {
+        let m = spd_poisson(16);
+        let t = m.transpose();
+        // symmetric: spmv equal on a probe vector
+        let mut rng = Pcg32::new(7);
+        let x: Vec<f32> = (0..m.ncols).map(|_| rng.gen_f32()).collect();
+        let ax = m.spmv(&x);
+        let atx = t.spmv(&x);
+        for (a, b) in ax.iter().zip(&atx) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let a = scircuit_s(1000, 9);
+        let b = scircuit_s(1000, 9);
+        assert_eq!(a.vals, b.vals);
+        assert_eq!(a.cols, b.cols);
+    }
+}

@@ -1,0 +1,14 @@
+//! Sparse-matrix substrate: COO/CSR structures, MatrixMarket IO,
+//! synthetic counterparts of the paper's evaluation matrices, the cpack
+//! data-layout transform (§4.1), and the BlockedSpmv packing consumed by
+//! the AOT kernel.
+
+pub mod blocked;
+pub mod coo;
+pub mod cpack;
+pub mod gen;
+pub mod matrix_market;
+
+pub use blocked::{pack_blocked, BlockedShape, BlockedSpmv, PackError};
+pub use coo::{Coo, Csr};
+pub use cpack::{cpack_spmv, cpack_square, Perm};

@@ -1,0 +1,129 @@
+//! In-repo micro/macro benchmark harness (criterion is unavailable
+//! offline).  Used by the `benches/*.rs` targets (harness = false).
+//!
+//! Methodology: warmup runs, then `iters` timed runs; reports min /
+//! median / mean / p95 wall-clock.  Black-box via `std::hint::black_box`.
+//! Good enough for the paper's comparisons, which span 2x–1000x gaps.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+}
+
+impl Stats {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<42} iters={:<4} min={:>12?} median={:>12?} mean={:>12?} p95={:>12?}",
+            self.name, self.iters, self.min, self.median, self.mean, self.p95
+        )
+    }
+}
+
+/// Time `f` (which should return something to black-box) `iters` times
+/// after `warmup` untimed runs.
+pub fn bench<T, F: FnMut() -> T>(name: &str, warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed());
+    }
+    times.sort_unstable();
+    let n = times.len();
+    let mean = times.iter().sum::<Duration>() / n as u32;
+    Stats {
+        name: name.to_string(),
+        iters: n,
+        min: times[0],
+        median: times[n / 2],
+        mean,
+        p95: times[(n * 95 / 100).min(n - 1)],
+    }
+}
+
+/// Time one run of `f` — for long macro-benchmarks where a single
+/// measurement is the right granularity (the paper reports totals).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Simple fixed-width table printer for paper-style output.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            widths: headers.iter().map(|h| h.len()).collect(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "table row arity");
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!("{:<width$}  ", c, width = w));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers, &self.widths);
+        println!(
+            "{}",
+            self.widths.iter().map(|w| "-".repeat(*w + 2)).collect::<String>()
+        );
+        for r in &self.rows {
+            line(r, &self.widths);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let s = bench("noop", 2, 16, || 1 + 1);
+        assert_eq!(s.iters, 16);
+        assert!(s.min <= s.median && s.median <= s.p95);
+    }
+
+    #[test]
+    fn table_accepts_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print(); // smoke: no panic
+    }
+
+    #[test]
+    #[should_panic(expected = "table row arity")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Dependency-free utilities: PRNG, JSON reader, property-test harness,
+//! bench harness.  These exist because the build environment is fully
+//! offline (see Cargo.toml note).
+
+pub mod benchkit;
+pub mod json;
+pub mod prop;
+pub mod rng;

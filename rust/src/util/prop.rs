@@ -1,0 +1,105 @@
+//! Tiny property-based-testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` seeded inputs; on
+//! failure it retries the failing seed with progressively "smaller"
+//! size hints (a lightweight stand-in for shrinking) and reports the
+//! smallest seed/size that still fails, so failures are reproducible by
+//! pasting the seed into a unit test.
+
+use super::rng::Pcg32;
+
+/// Size hint handed to generators; property runners shrink this on failure.
+#[derive(Clone, Copy, Debug)]
+pub struct Gen {
+    pub seed: u64,
+    pub size: usize,
+}
+
+/// Run `prop` for `cases` random cases. `prop` returns Err(msg) on failure.
+///
+/// Panics with a reproduction line on the first failure (after shrinking
+/// the size hint as far as the failure persists).
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Pcg32, Gen) -> Result<(), String>,
+{
+    let base_seed = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base_seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let size = 2 + (case as usize % 64) * 4;
+        let g = Gen { seed, size };
+        let mut rng = Pcg32::new(seed);
+        if let Err(msg) = prop(&mut rng, g) {
+            // shrink: halve the size hint while the failure persists
+            let mut best = (g, msg);
+            let mut size = g.size;
+            while size > 1 {
+                size /= 2;
+                let g2 = Gen { seed, size };
+                let mut rng2 = Pcg32::new(seed);
+                match prop(&mut rng2, g2) {
+                    Err(m) => best = (g2, m),
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{}' failed (seed={:#x}, size={}): {}",
+                name, best.0.seed, best.0.size, best.1
+            );
+        }
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Assert helper returning Err for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 50, |rng, g| {
+            let a = rng.gen_range(g.size.max(1)) as i64;
+            let b = rng.gen_range(g.size.max(1)) as i64;
+            if a + b == b + a { Ok(()) } else { Err("math broke".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 5, |_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut log1 = Vec::new();
+        check("det", 10, |rng, _| {
+            log1.push(rng.next_u32());
+            Ok(())
+        });
+        let mut log2 = Vec::new();
+        check("det", 10, |rng, _| {
+            log2.push(rng.next_u32());
+            Ok(())
+        });
+        assert_eq!(log1, log2);
+    }
+}

@@ -1,0 +1,174 @@
+//! Deterministic PRNG (PCG32 + SplitMix64 seeding).
+//!
+//! The offline environment has no `rand` crate, so the repo carries its
+//! own small generator.  Everything that needs randomness (graph
+//! generators, PowerGraph-random partitioning, property tests, workload
+//! synthesis) takes an explicit seed so runs are reproducible.
+
+/// PCG-XSH-RR 64/32 — O'Neill's PCG32. Small, fast, decent quality.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+/// SplitMix64 — used to stretch one u64 seed into PCG's (state, inc).
+fn splitmix64(x: &mut u64) -> u64 {
+    *x = x.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Pcg32 {
+    pub fn new(seed: u64) -> Self {
+        let mut s = seed;
+        let init_state = splitmix64(&mut s);
+        let init_inc = splitmix64(&mut s) | 1;
+        let mut rng = Pcg32 { state: 0, inc: init_inc };
+        rng.state = rng.state.wrapping_add(init_state);
+        rng.next_u32();
+        rng
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, bound) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn gen_range(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        let bound = bound as u64;
+        let mut m = (self.next_u32() as u64).wrapping_mul(bound);
+        let mut lo = m as u32;
+        if (lo as u64) < bound {
+            let t = bound.wrapping_neg() % bound;
+            while (lo as u64) < t {
+                m = (self.next_u32() as u64).wrapping_mul(bound);
+                lo = m as u32;
+            }
+        }
+        (m >> 32) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn gen_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple > fast).
+    pub fn gen_normal(&mut self) -> f64 {
+        let u1 = self.gen_f64().max(1e-12);
+        let u2 = self.gen_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, slice: &mut [T]) {
+        for i in (1..slice.len()).rev() {
+            let j = self.gen_range(i + 1);
+            slice.swap(i, j);
+        }
+    }
+
+    /// Pareto-tail sample via inverse CDF; returns values in [1, max].
+    /// Drives the power-law degree generators (in-2004 / scircuit style).
+    pub fn gen_pareto(&mut self, alpha: f64, max: usize) -> usize {
+        let u = self.gen_f64().max(1e-12);
+        let v = (1.0 / u).powf(1.0 / alpha);
+        (v.floor() as usize).clamp(1, max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a: Vec<u32> = { let mut r = Pcg32::new(7); (0..8).map(|_| r.next_u32()).collect() };
+        let b: Vec<u32> = { let mut r = Pcg32::new(7); (0..8).map(|_| r.next_u32()).collect() };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg32::new(1);
+        let mut b = Pcg32::new(2);
+        assert_ne!(
+            (0..4).map(|_| a.next_u32()).collect::<Vec<_>>(),
+            (0..4).map(|_| b.next_u32()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn gen_range_in_bounds_and_covers() {
+        let mut r = Pcg32::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.gen_range(10);
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all buckets hit in 1000 draws");
+    }
+
+    #[test]
+    fn gen_f64_unit_interval_mean() {
+        let mut r = Pcg32::new(11);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.gen_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean} far from 0.5");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::new(5);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pareto_bounds() {
+        let mut r = Pcg32::new(9);
+        for _ in 0..1000 {
+            let v = r.gen_pareto(2.1, 50);
+            assert!((1..=50).contains(&v));
+        }
+    }
+
+    #[test]
+    fn normal_mean_and_var() {
+        let mut r = Pcg32::new(17);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gen_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+}

@@ -1,0 +1,102 @@
+//! Integration: the full coordinator pipeline (async optimizer +
+//! adaptive control + PJRT CG) end to end.  Requires `make artifacts`.
+
+use epgraph::coordinator::{run_cg, CgRunConfig};
+use epgraph::runtime::{default_artifacts_dir, Engine};
+use epgraph::sparse::gen;
+use epgraph::util::rng::Pcg32;
+
+fn rhs_for(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    (0..n).map(|_| rng.gen_f32() - 0.5).collect()
+}
+
+#[test]
+fn cg_adaptive_solves_and_never_slows_down() {
+    let mut engine = Engine::load(&default_artifacts_dir()).unwrap();
+    let a = gen::spd_poisson(32); // 1024 unknowns
+    let rhs = rhs_for(a.nrows, 3);
+    let cfg = CgRunConfig { block_size: 256, max_iters: 400, ..Default::default() };
+    let r = run_cg(&mut engine, &a, &rhs, &cfg).unwrap();
+    assert!(r.residual < 1e-3, "residual {}", r.residual);
+    // verify solution against the matrix
+    let ax = a.spmv(&r.solution);
+    for (u, v) in ax.iter().zip(&rhs) {
+        assert!((u - v).abs() < 5e-3, "{u} vs {v}");
+    }
+    // the adaptive guarantee: simulated total ≤ all-original total (+1
+    // trial iteration of slack)
+    let orig_total = r.sim_original.cycles * r.iterations as u64;
+    let slack = r.sim_optimized.as_ref().map_or(0, |s| s.cycles);
+    assert!(
+        r.sim_cycles_total <= orig_total + slack,
+        "adaptive lost: {} > {orig_total} + {slack}",
+        r.sim_cycles_total
+    );
+}
+
+#[test]
+fn cg_ideal_uses_optimized_kernel_from_start() {
+    let mut engine = Engine::load(&default_artifacts_dir()).unwrap();
+    let a = gen::spd_poisson(24);
+    let rhs = rhs_for(a.nrows, 5);
+    let cfg = CgRunConfig {
+        block_size: 256,
+        max_iters: 300,
+        wait_for_optimizer: true,
+        ..Default::default()
+    };
+    let r = run_cg(&mut engine, &a, &rhs, &cfg).unwrap();
+    assert!(r.residual < 1e-3);
+    assert!(r.quality_optimized.is_some());
+    // EP-ideal either switched at iteration 0 or (if the trial lost)
+    // fell back — both are legal; it must never be half-way
+    if !r.fell_back {
+        assert_eq!(r.switched_at, Some(0));
+    }
+    // the optimized schedule must improve the vertex-cut quality
+    assert!(
+        r.quality_optimized.unwrap() <= r.quality_default,
+        "EP {} !<= default {}",
+        r.quality_optimized.unwrap(),
+        r.quality_default
+    );
+}
+
+#[test]
+fn cg_matches_plain_rust_cg() {
+    // numerics cross-check: PJRT CG == rust-reference CG to fp tolerance
+    let mut engine = Engine::load(&default_artifacts_dir()).unwrap();
+    let a = gen::spd_poisson(16);
+    let rhs = rhs_for(a.nrows, 9);
+    let cfg = CgRunConfig { block_size: 256, max_iters: 200, tol: 1e-5, ..Default::default() };
+    let r = run_cg(&mut engine, &a, &rhs, &cfg).unwrap();
+
+    // plain rust CG
+    let n = a.nrows;
+    let mut x = vec![0f32; n];
+    let mut res: Vec<f32> = rhs.clone();
+    let mut p: Vec<f32> = rhs.clone();
+    let mut rz: f32 = res.iter().map(|v| v * v).sum();
+    for _ in 0..200 {
+        if rz.sqrt() < 1e-5 {
+            break;
+        }
+        let ap = a.spmv(&p);
+        let denom: f32 = p.iter().zip(&ap).map(|(a, b)| a * b).sum();
+        let alpha = rz / denom;
+        for i in 0..n {
+            x[i] += alpha * p[i];
+            res[i] -= alpha * ap[i];
+        }
+        let rz_new: f32 = res.iter().map(|v| v * v).sum();
+        let beta = rz_new / rz;
+        for i in 0..n {
+            p[i] = res[i] + beta * p[i];
+        }
+        rz = rz_new;
+    }
+    for (u, v) in r.solution.iter().zip(&x) {
+        assert!((u - v).abs() < 1e-2, "{u} vs {v}");
+    }
+}

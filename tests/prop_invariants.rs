@@ -1,0 +1,189 @@
+//! Property-based invariants over random graphs/matrices/partitions
+//! (proptest is unavailable offline; epgraph::util::prop supplies the
+//! harness — seeded cases + size-shrinking on failure).
+//!
+//! These are the coordinator-facing invariants: every schedule the
+//! optimizer can emit must be a valid, balanced, semantics-preserving
+//! routing of tasks to blocks.
+
+use epgraph::graph::{gen as ggen, Graph};
+use epgraph::partition::ep::{self, ChainOrder};
+use epgraph::partition::{quality, EdgePartition, Method};
+use epgraph::sparse::{cpack, gen as sgen, pack_blocked, BlockedShape, Coo};
+use epgraph::util::prop::check;
+use epgraph::util::rng::Pcg32;
+
+fn random_graph(rng: &mut Pcg32, size: usize) -> Graph {
+    let n = 8 + rng.gen_range(size * 8 + 8);
+    match rng.gen_range(4) {
+        0 => ggen::cfd_mesh(3 + (n as f64).sqrt() as usize, 3 + (n as f64).sqrt() as usize, rng.next_u64()),
+        1 => ggen::power_law(n.max(8), 2, rng.next_u64()),
+        2 => ggen::random_uniform(n, 3 * n, rng.next_u64()),
+        _ => ggen::grid_mesh(2 + n / 8, 8),
+    }
+}
+
+fn random_coo(rng: &mut Pcg32, size: usize) -> Coo {
+    let nr = 4 + rng.gen_range(size * 4 + 8);
+    let nc = 4 + rng.gen_range(size * 4 + 8);
+    let nnz = 1 + rng.gen_range(size * 16 + 16);
+    let mut a = Coo::new(nr, nc);
+    for _ in 0..nnz {
+        a.push(rng.gen_range(nr), rng.gen_range(nc), rng.gen_f32() - 0.5);
+    }
+    a
+}
+
+#[test]
+fn prop_every_method_yields_valid_partition() {
+    check("valid-partition", 40, |rng, g| {
+        let graph = random_graph(rng, g.size);
+        let k = 1 + rng.gen_range(12);
+        for m in Method::ALL {
+            let p = m.partition(&graph, k, rng.next_u64());
+            if p.assign.len() != graph.m() {
+                return Err(format!("{}: arity {} != {}", m.name(), p.assign.len(), graph.m()));
+            }
+            if p.assign.iter().any(|&b| b as usize >= k) {
+                return Err(format!("{}: block out of range", m.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_theorem1_holds_for_ep() {
+    // C_ep(D) ≤ auxiliary-edge cut of the transformed graph's partition
+    check("theorem-1", 25, |rng, g| {
+        let graph = random_graph(rng, g.size);
+        if graph.m() == 0 {
+            return Ok(());
+        }
+        let k = 2 + rng.gen_range(8);
+        let seed = rng.next_u64();
+        let mut opts = ep::EpOpts::default();
+        opts.vp.seed = seed;
+        let p = ep::partition_edges(&graph, k, &opts);
+        let cep = quality::vertex_cut_cost(&graph, &p);
+        let aux = ep::aux_cut_cost(&graph, &p, ChainOrder::Index, seed);
+        if cep > aux {
+            return Err(format!("C_ep {cep} > aux cut {aux}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_blocked_packing_preserves_spmv() {
+    check("blocked-spmv-semantics", 30, |rng, g| {
+        let a = random_coo(rng, g.size);
+        let graph = a.affinity_graph();
+        let k = 1 + rng.gen_range(6);
+        let p = Method::Ep.partition(&graph, k, rng.next_u64());
+        let shape = BlockedShape {
+            n_in: a.ncols.max(1),
+            n_out: a.nrows.max(1),
+            k,
+            e: a.nnz().max(1),
+            c: a.nnz().max(1),
+        };
+        let b = pack_blocked(&a, &p, shape).map_err(|e| format!("pack: {e}"))?;
+        let x: Vec<f32> = (0..a.ncols).map(|_| rng.gen_f32()).collect();
+        let y1 = a.spmv(&x);
+        let y2 = b.execute_ref(&x);
+        for (i, (u, v)) in y1.iter().zip(&y2).enumerate() {
+            if (u - v).abs() > 1e-2 * (1.0 + u.abs()) {
+                return Err(format!("row {i}: {u} vs {v}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cpack_is_bijective_and_semantic() {
+    check("cpack-bijection", 30, |rng, g| {
+        let a = random_coo(rng, g.size);
+        let k = 1 + rng.gen_range(6);
+        let p = Method::PgGreedy.partition(&a.affinity_graph(), k, rng.next_u64());
+        let (b, rp, cp) = cpack::cpack_spmv(&a, &p);
+        if !rp.is_valid() || !cp.is_valid() {
+            return Err("invalid permutation".into());
+        }
+        let x: Vec<f32> = (0..a.ncols).map(|_| rng.gen_f32()).collect();
+        let y1 = a.spmv(&x);
+        let y2 = rp.unapply_vec(&b.spmv(&cp.apply_vec(&x)));
+        for (u, v) in y1.iter().zip(&y2) {
+            if (u - v).abs() > 1e-2 * (1.0 + u.abs()) {
+                return Err(format!("{u} vs {v}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rebalance_respects_cap_and_semantics() {
+    check("rebalance-cap", 25, |rng, g| {
+        let graph = random_graph(rng, g.size);
+        if graph.m() < 4 {
+            return Ok(());
+        }
+        let k = 2 + rng.gen_range(6);
+        let cap = graph.m().div_ceil(k) + 1 + rng.gen_range(8);
+        let mut p = Method::PgRandom.partition(&graph, k, rng.next_u64());
+        ep::rebalance_to_cap(&graph, &mut p, cap);
+        let loads = p.loads();
+        if let Some(&max) = loads.iter().max() {
+            if max > cap {
+                return Err(format!("load {max} > cap {cap} (loads {loads:?})"));
+            }
+        }
+        if p.assign.len() != graph.m() {
+            return Err("lost tasks".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_balance_factor_of_ep_is_bounded() {
+    check("ep-balance", 15, |rng, g| {
+        let a = sgen::scircuit_s(2048 + g.size * 64, rng.next_u64());
+        let graph = a.affinity_graph();
+        let k = 2 + rng.gen_range(14);
+        let p = Method::Ep.partition(&graph, k, rng.next_u64());
+        let bf = quality::balance_factor(&p);
+        // METIS-grade balance at scale (paper: < 1.03 on million-edge
+        // graphs); recursive bisection compounds eps per level, so the
+        // bound loosens with k relative to the block population
+        let slack = 1.0 + 8.0 * (k * k) as f64 / graph.m() as f64;
+        if bf > 1.12 * slack {
+            return Err(format!("balance {bf} (k={k}, m={})", graph.m()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_vertex_cut_cost_additive_bounds() {
+    // 0 ≤ C ≤ Σ_v (min(deg, k) − 1) and C(k=1) = 0
+    check("cut-bounds", 30, |rng, g| {
+        let graph = random_graph(rng, g.size);
+        let k = 1 + rng.gen_range(10);
+        let p = Method::PgRandom.partition(&graph, k, rng.next_u64());
+        let c = quality::vertex_cut_cost(&graph, &p);
+        let ub: u64 = (0..graph.n as u32)
+            .map(|v| (graph.degree(v).min(k)).saturating_sub(1) as u64)
+            .sum();
+        if c > ub {
+            return Err(format!("C {c} > upper bound {ub}"));
+        }
+        let p1 = EdgePartition::new(1, vec![0; graph.m()]);
+        if quality::vertex_cut_cost(&graph, &p1) != 0 {
+            return Err("k=1 must cost 0".into());
+        }
+        Ok(())
+    });
+}

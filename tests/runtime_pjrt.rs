@@ -1,0 +1,82 @@
+//! Integration: PJRT runtime executes the AOT spmv/cg artifacts and
+//! matches the pure-rust reference.  Requires `make artifacts`.
+
+use std::path::PathBuf;
+
+use epgraph::partition::Method;
+use epgraph::runtime::{CgExec, Engine, SpmvExec};
+use epgraph::sparse::{gen, pack_blocked, BlockedShape};
+use epgraph::util::rng::Pcg32;
+
+fn artifacts_dir() -> PathBuf {
+    // tests run from the crate root
+    let d = epgraph::runtime::default_artifacts_dir();
+    assert!(
+        d.join("manifest.json").exists(),
+        "artifacts missing at {d:?} — run `make artifacts` first"
+    );
+    d
+}
+
+#[test]
+fn spmv_artifact_matches_reference() {
+    let mut engine = Engine::load(&artifacts_dir()).unwrap();
+    let a = gen::scircuit_s(900, 4);
+    let g = a.affinity_graph();
+    let p = Method::Ep.partition(&g, 16, 1);
+    let b = pack_blocked(&a, &p, BlockedShape { n_in: 4096, n_out: 4096, k: 16, e: 512, c: 512 })
+        .unwrap();
+    let exec = SpmvExec::prepare(&mut engine, &b).unwrap();
+    assert_eq!(exec.config(), "s1");
+
+    let mut rng = Pcg32::new(7);
+    let x: Vec<f32> = (0..a.ncols).map(|_| rng.gen_f32() - 0.5).collect();
+    let y_pjrt = exec.run(&x).unwrap();
+    let y_ref = a.spmv(&x);
+    assert_eq!(y_pjrt.len(), y_ref.len());
+    for (i, (u, v)) in y_pjrt.iter().zip(&y_ref).enumerate() {
+        assert!((u - v).abs() < 1e-3, "row {i}: {u} vs {v}");
+    }
+}
+
+#[test]
+fn spmv_executable_is_cached_and_reusable() {
+    let mut engine = Engine::load(&artifacts_dir()).unwrap();
+    let a = gen::spd_poisson(24); // 576 rows
+    let g = a.affinity_graph();
+    let p = Method::Ep.partition(&g, 8, 3);
+    let b = pack_blocked(&a, &p, BlockedShape { n_in: 4096, n_out: 4096, k: 16, e: 512, c: 512 })
+        .unwrap();
+    let exec = SpmvExec::prepare(&mut engine, &b).unwrap();
+    // two different inputs through the same compiled executable
+    for seed in [1u64, 2] {
+        let mut rng = Pcg32::new(seed);
+        let x: Vec<f32> = (0..a.ncols).map(|_| rng.gen_f32()).collect();
+        let y1 = exec.run(&x).unwrap();
+        let y2 = a.spmv(&x);
+        for (u, v) in y1.iter().zip(&y2) {
+            assert!((u - v).abs() < 1e-3);
+        }
+    }
+}
+
+#[test]
+fn cg_artifact_solves_poisson() {
+    let mut engine = Engine::load(&artifacts_dir()).unwrap();
+    let a = gen::spd_poisson(16); // 256x256 SPD
+    let g = a.affinity_graph();
+    let p = Method::Ep.partition(&g, 8, 5);
+    let b = pack_blocked(&a, &p, BlockedShape { n_in: 4096, n_out: 4096, k: 16, e: 512, c: 512 })
+        .unwrap();
+    let cg = CgExec::prepare(&mut engine, &b).unwrap();
+
+    let mut rng = Pcg32::new(11);
+    let rhs: Vec<f32> = (0..a.nrows).map(|_| rng.gen_f32() - 0.5).collect();
+    let st = cg.solve(&rhs, 1e-4, 500).unwrap();
+    assert!(st.rz.sqrt() < 1e-3, "residual {}", st.rz.sqrt());
+    // verify against the matrix directly
+    let ax = a.spmv(&st.x);
+    for (u, v) in ax.iter().zip(&rhs) {
+        assert!((u - v).abs() < 5e-3, "{u} vs {v}");
+    }
+}
