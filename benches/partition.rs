@@ -1,19 +1,91 @@
-//! Partitioner benchmarks — regenerates Fig 6 (method comparison),
-//! the partition-time scaling claim ("orders of magnitude faster than
+//! Partitioner benchmarks — the perf-rewrite headline (optimized vs
+//! retained seed pipeline on a ≥1M-edge graph at k=64, recorded in
+//! BENCH_partition.json), plus Fig 6 (method comparison), the
+//! partition-time scaling claim ("orders of magnitude faster than
 //! hypergraph"), and the DESIGN.md ablations.
 //!
 //!     cargo bench --offline --bench partition
 //!
+//! Set EPGRAPH_BENCH_SMOKE=1 for a fast CI-sized run (the JSON baseline
+//! records the mode, so full and smoke baselines are never confused).
+//!
 //! criterion is unavailable offline; this uses the in-repo harness
 //! (epgraph::util::benchkit) with warmup + multi-iteration stats.
 
+use epgraph::graph::gen as ggen;
 use epgraph::experiments as exp;
-use epgraph::partition::{ep, hypergraph, Method};
+use epgraph::partition::{ep, hypergraph, quality, reference, Method};
 use epgraph::sparse::gen;
-use epgraph::util::benchkit::bench;
+use epgraph::util::benchkit::{bench, time_once, JsonReport};
+
+/// Headline: the rewrite's speedup over the retained seed pipeline on a
+/// power-law task graph, single-threaded (algorithmic gain alone) and
+/// multi-threaded (scaling on top), with cut-quality parity recorded.
+fn perf_headline(seed: u64) {
+    let smoke = std::env::var("EPGRAPH_BENCH_SMOKE").is_ok();
+    // power_law(n, 3) has m ~= 3n tasks; full mode crosses 1M edges
+    let n = if smoke { 60_000 } else { 350_000 };
+    let k = 64;
+    println!("## perf-rewrite headline ({})\n", if smoke { "smoke" } else { "full" });
+    let g = ggen::power_law(n, 3, seed);
+    println!("power_law({n}, 3): n={} m={} k={k}", g.n, g.m());
+
+    let opts_1t = {
+        let mut o = ep::EpOpts::default();
+        o.vp.seed = seed;
+        o.vp.threads = 1;
+        o
+    };
+    let opts_mt = {
+        let mut o = opts_1t.clone();
+        o.vp.threads = 0; // one per core
+        o
+    };
+
+    let (p_ref, t_ref) = time_once(|| reference::partition_edges_naive(&g, k, &opts_1t));
+    let (p_1t, t_1t) = time_once(|| ep::partition_edges(&g, k, &opts_1t));
+    let (p_mt, t_mt) = time_once(|| ep::partition_edges(&g, k, &opts_mt));
+
+    let cut_ref = quality::vertex_cut_cost(&g, &p_ref);
+    let cut_new = quality::vertex_cut_cost(&g, &p_1t);
+    let cut_mt = quality::vertex_cut_cost(&g, &p_mt);
+    assert_eq!(p_1t.assign, p_mt.assign, "thread count must not change the partition");
+
+    let s1 = t_ref.as_secs_f64() / t_1t.as_secs_f64().max(1e-9);
+    let smt = t_ref.as_secs_f64() / t_mt.as_secs_f64().max(1e-9);
+    println!("  seed pipeline (reference): {:>10.3}s  cut={cut_ref}", t_ref.as_secs_f64());
+    println!("  rewrite, 1 thread:         {:>10.3}s  cut={cut_new}  speedup={s1:.2}x", t_1t.as_secs_f64());
+    println!("  rewrite, all cores:        {:>10.3}s  cut={cut_mt}  speedup={smt:.2}x", t_mt.as_secs_f64());
+
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let mut r = JsonReport::new();
+    r.str("bench", "partition")
+        .str("mode", if smoke { "smoke" } else { "full" })
+        .raw(
+            "graph",
+            &format!("{{\"generator\": \"power_law\", \"n\": {}, \"m\": {}}}", g.n, g.m()),
+        )
+        .int("k", k as u64)
+        .int("seed", seed)
+        .int("cores", cores as u64)
+        .num("ref_secs", t_ref.as_secs_f64())
+        .num("new_1t_secs", t_1t.as_secs_f64())
+        .num("new_mt_secs", t_mt.as_secs_f64())
+        .num("speedup_single_thread", s1)
+        .num("speedup_multi_thread", smt)
+        .int("ref_cut", cut_ref)
+        .int("new_cut", cut_new)
+        .num("cut_ratio_new_over_ref", cut_new as f64 / cut_ref.max(1) as f64);
+    match r.write("BENCH_partition.json") {
+        Ok(()) => println!("  baseline written to BENCH_partition.json\n"),
+        Err(e) => println!("  WARNING: could not write BENCH_partition.json: {e}\n"),
+    }
+}
 
 fn main() {
     let seed = 42;
+
+    perf_headline(seed);
 
     println!("## partitioner micro-benchmarks (per-call latency)\n");
     for (name, a) in [

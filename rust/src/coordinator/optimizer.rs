@@ -32,6 +32,11 @@ pub struct OptOptions {
     /// hard per-block task cap = thread-block size (a block of N threads
     /// runs at most N tasks); None = no physical cap
     pub block_cap: Option<usize>,
+    /// worker threads for the partitioner's parallel phases (0 = one per
+    /// core, 1 = sequential).  The optimization pipeline already runs on
+    /// its own CPU thread (paper §4.2); this lets the partitioner fan
+    /// out further.  Results are identical for every value.
+    pub threads: usize,
 }
 
 impl Default for OptOptions {
@@ -43,6 +48,7 @@ impl Default for OptOptions {
             method: Method::Ep,
             use_special_patterns: true,
             block_cap: None,
+            threads: 0,
         }
     }
 }
@@ -108,6 +114,7 @@ pub fn optimize_graph(g: &Graph, opts: &OptOptions) -> OptimizedSchedule {
         Method::Ep => {
             let mut ep_opts = ep::EpOpts::default();
             ep_opts.vp.seed = opts.seed;
+            ep_opts.vp.threads = opts.threads;
             ep::partition_edges(g, opts.k, &ep_opts)
         }
         other => other.partition(g, opts.k, opts.seed),

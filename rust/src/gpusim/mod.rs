@@ -57,9 +57,18 @@ pub(crate) fn schedule_blocks(
     smem_per_block: usize,
     threads_per_block: usize,
 ) -> SimResult {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
     let resident = cfg.resident_blocks(smem_per_block, threads_per_block);
     let per_sm_bw = cfg.bytes_per_cycle / cfg.n_sms as f64;
-    let mut sm_load = vec![0u64; cfg.n_sms];
+    // min-heap of (load, sm index): "least-loaded SM gets the block" in
+    // O(log n_sms) per block instead of an O(n_sms) scan.  Keying by
+    // (load, index) reproduces the scan's lowest-index tie-break, so
+    // results are bit-identical to the previous implementation.
+    let mut sm_heap: BinaryHeap<Reverse<(u64, usize)>> =
+        (0..cfg.n_sms).map(|s| Reverse((0u64, s))).collect();
+    let mut max_load = 0u64;
     let mut read_tx = 0u64;
     let mut write_tx = 0u64;
     let mut tasks = 0u64;
@@ -69,9 +78,10 @@ pub(crate) fn schedule_blocks(
         let latency = tx * cfg.seg_latency / resident as u64;
         let bandwidth = (tx as f64 * cfg.seg_bytes as f64 / per_sm_bw) as u64;
         let time = compute.max(latency).max(bandwidth);
-        // least-loaded SM gets the block
-        let sm = (0..cfg.n_sms).min_by_key(|&s| sm_load[s]).unwrap();
-        sm_load[sm] += time;
+        let Reverse((load, sm)) = sm_heap.pop().expect("n_sms >= 1");
+        let new_load = load + time;
+        max_load = max_load.max(new_load);
+        sm_heap.push(Reverse((new_load, sm)));
         read_tx += b.read_tx;
         write_tx += b.write_tx;
         tasks += b.tasks;
@@ -79,7 +89,7 @@ pub(crate) fn schedule_blocks(
     SimResult {
         read_transactions: read_tx,
         write_transactions: write_tx,
-        cycles: sm_load.into_iter().max().unwrap_or(0),
+        cycles: if blocks.is_empty() { 0 } else { max_load },
         resident_blocks: resident,
         smem_per_block,
         n_blocks: blocks.len(),

@@ -63,34 +63,73 @@ impl Default for EpOpts {
 
 /// The contracted transform: task graph with one vertex per original
 /// edge and auxiliary unit edges chaining each data object's incident
-/// tasks.  `aux[(a, b)]` may be parallel (two tasks sharing both
-/// endpoints); WGraph merges them by weight.
+/// tasks.  Parallel aux edges (two tasks sharing both endpoints) are
+/// merged by weight.
+///
+/// The index-order chain is the production path and is built directly
+/// into CSR: the incidence lists of `Graph` are already in ascending
+/// edge order, so chaining needs no sort, and a two-pass counting build
+/// plus stamp dedup replaces the edge-tuple + sort-merge pipeline
+/// (perf rewrite; see PERF.md).
 pub fn task_graph(g: &Graph, chain: ChainOrder, seed: u64) -> WGraph {
     let m = g.m();
-    let mut rng = Pcg32::new(seed);
-    let mut aux: Vec<(u32, u32, i64)> = Vec::with_capacity(2 * m);
-    let mut scratch: Vec<u32> = Vec::new();
-    for v in 0..g.n as u32 {
-        let inc = g.incident(v);
-        if inc.len() < 2 {
-            continue;
-        }
-        scratch.clear();
-        scratch.extend(inc.iter().map(|&(e, _)| e));
-        // self-loops contribute the same edge twice in `incident` only
-        // once (csr stores loops once) — but parallel tasks appear; the
-        // chain just needs *some* path over incident tasks.
-        match chain {
-            ChainOrder::Index => scratch.sort_unstable(),
-            ChainOrder::Random => rng.shuffle(&mut scratch),
-        }
-        for w in scratch.windows(2) {
-            if w[0] != w[1] {
-                aux.push((w[0], w[1], 1));
+    match chain {
+        ChainOrder::Index => {
+            // pass 1: aux degree per task
+            let mut deg = vec![0u32; m];
+            for v in 0..g.n as u32 {
+                for w in g.incident(v).windows(2) {
+                    let (a, b) = (w[0].0, w[1].0);
+                    if a != b {
+                        deg[a as usize] += 1;
+                        deg[b as usize] += 1;
+                    }
+                }
             }
+            let mut xadj = vec![0u32; m + 1];
+            for t in 0..m {
+                xadj[t + 1] = xadj[t] + deg[t];
+            }
+            // pass 2: scatter (duplicates merged by from_csr_dedup)
+            let mut cursor: Vec<u32> = xadj[..m].to_vec();
+            let total = xadj[m] as usize;
+            let mut adjncy = vec![0u32; total];
+            let adjwgt = vec![1i64; total];
+            for v in 0..g.n as u32 {
+                for w in g.incident(v).windows(2) {
+                    let (a, b) = (w[0].0, w[1].0);
+                    if a != b {
+                        adjncy[cursor[a as usize] as usize] = b;
+                        cursor[a as usize] += 1;
+                        adjncy[cursor[b as usize] as usize] = a;
+                        cursor[b as usize] += 1;
+                    }
+                }
+            }
+            WGraph::from_csr_dedup(m, vec![1i64; m], xadj, adjncy, adjwgt)
+        }
+        ChainOrder::Random => {
+            // ablation path: chain order is randomized per data object
+            let mut rng = Pcg32::new(seed);
+            let mut aux: Vec<(u32, u32, i64)> = Vec::with_capacity(2 * m);
+            let mut scratch: Vec<u32> = Vec::new();
+            for v in 0..g.n as u32 {
+                let inc = g.incident(v);
+                if inc.len() < 2 {
+                    continue;
+                }
+                scratch.clear();
+                scratch.extend(inc.iter().map(|&(e, _)| e));
+                rng.shuffle(&mut scratch);
+                for w in scratch.windows(2) {
+                    if w[0] != w[1] {
+                        aux.push((w[0], w[1], 1));
+                    }
+                }
+            }
+            WGraph::from_edges(m, vec![1i64; m], &aux)
         }
     }
-    WGraph::from_edges(m, vec![1i64; m], &aux)
 }
 
 /// The explicit clone-and-connect graph D' (Definition 3), for tests /

@@ -286,18 +286,25 @@ fn fm_refine(hg: &Hypergraph, assign: &mut [u32], k: usize, opts: &HpOpts) {
         loads[assign[v] as usize] += hg.vwgt[v];
     }
 
+    // per-candidate-block move deltas and per-net pin counts, hoisted out
+    // of the refinement loops (perf rewrite: these were allocated per
+    // vertex per pass, dominating small-k refinement time)
+    let mut delta = vec![0i64; k];
+    let mut counts_seen: Vec<(usize, usize)> = Vec::with_capacity(k);
     for _pass in 0..opts.fm_passes {
         let mut improved = false;
         for v in 0..hg.n as u32 {
             let from = assign[v as usize] as usize;
             // count per-block pins of v's nets to evaluate moving v
-            let mut delta = vec![0i64; k];
+            for d in delta.iter_mut() {
+                *d = 0;
+            }
             for &h in &inc[v as usize] {
                 let pins = &hg.pins[h as usize];
                 let w = hg.hewgt[h as usize];
                 // pins in v's current block besides v, and per-target counts
                 let mut here = 0usize;
-                let mut counts_seen: Vec<(usize, usize)> = Vec::new();
+                counts_seen.clear();
                 for &t in pins {
                     if t == v {
                         continue;

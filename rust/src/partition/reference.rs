@@ -1,0 +1,642 @@
+//! The pre-optimization (seed) partitioning pipeline, retained verbatim
+//! as a quality and performance baseline for the perf rewrite of
+//! `vertex.rs` / `ep.rs` (PERF.md).
+//!
+//! Used by `tests/perf_parity.rs` (the rewrite's vertex-cut cost must
+//! stay within 5% of this reference) and `benches/partition.rs` (the
+//! recorded ≥3x speedup is measured against this code on the same
+//! input).  Do not optimize this module — its value is being the fixed
+//! reference point.
+
+use crate::graph::Graph;
+use crate::util::rng::Pcg32;
+
+use super::ep::{ChainOrder, EpOpts, FAST_KWAY_MIN_TASKS};
+use super::quality::EdgePartition;
+use super::vertex::{Matching, VpOpts, WGraph};
+
+/// Seed `WGraph::from_edges`: counting-sort scatter followed by the
+/// allocation-heavy per-vertex sort + fold dedup.
+pub fn from_edges_naive(n: usize, vwgt: Vec<i64>, edges: &[(u32, u32, i64)]) -> WGraph {
+    assert_eq!(vwgt.len(), n);
+    let mut deg = vec![0u32; n];
+    for &(u, v, _) in edges {
+        assert!((u as usize) < n && (v as usize) < n);
+        if u != v {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+    }
+    let mut xadj = vec![0u32; n + 1];
+    for i in 0..n {
+        xadj[i + 1] = xadj[i] + deg[i];
+    }
+    let mut cursor: Vec<u32> = xadj[..n].to_vec();
+    let mut adjncy = vec![0u32; xadj[n] as usize];
+    let mut adjwgt = vec![0i64; xadj[n] as usize];
+    for &(u, v, w) in edges {
+        if u == v {
+            continue;
+        }
+        adjncy[cursor[u as usize] as usize] = v;
+        adjwgt[cursor[u as usize] as usize] = w;
+        cursor[u as usize] += 1;
+        adjncy[cursor[v as usize] as usize] = u;
+        adjwgt[cursor[v as usize] as usize] = w;
+        cursor[v as usize] += 1;
+    }
+    // merge parallel entries in each adjacency list (sort + fold)
+    let mut new_xadj = vec![0u32; n + 1];
+    let mut new_adjncy = Vec::with_capacity(adjncy.len());
+    let mut new_adjwgt = Vec::with_capacity(adjwgt.len());
+    let mut scratch: Vec<(u32, i64)> = Vec::new();
+    for v in 0..n {
+        scratch.clear();
+        for idx in xadj[v] as usize..xadj[v + 1] as usize {
+            scratch.push((adjncy[idx], adjwgt[idx]));
+        }
+        scratch.sort_unstable_by_key(|&(u, _)| u);
+        let mut i = 0;
+        while i < scratch.len() {
+            let (u, mut w) = scratch[i];
+            let mut j = i + 1;
+            while j < scratch.len() && scratch[j].0 == u {
+                w += scratch[j].1;
+                j += 1;
+            }
+            new_adjncy.push(u);
+            new_adjwgt.push(w);
+            i = j;
+        }
+        new_xadj[v + 1] = new_adjncy.len() as u32;
+    }
+    WGraph { n, vwgt, xadj: new_xadj, adjncy: new_adjncy, adjwgt: new_adjwgt }
+}
+
+/// Seed `ep::task_graph`: edge-tuple construction + naive WGraph build.
+pub fn task_graph_naive(g: &Graph, chain: ChainOrder, seed: u64) -> WGraph {
+    let m = g.m();
+    let mut rng = Pcg32::new(seed);
+    let mut aux: Vec<(u32, u32, i64)> = Vec::with_capacity(2 * m);
+    let mut scratch: Vec<u32> = Vec::new();
+    for v in 0..g.n as u32 {
+        let inc = g.incident(v);
+        if inc.len() < 2 {
+            continue;
+        }
+        scratch.clear();
+        scratch.extend(inc.iter().map(|&(e, _)| e));
+        match chain {
+            ChainOrder::Index => scratch.sort_unstable(),
+            ChainOrder::Random => rng.shuffle(&mut scratch),
+        }
+        for w in scratch.windows(2) {
+            if w[0] != w[1] {
+                aux.push((w[0], w[1], 1));
+            }
+        }
+    }
+    from_edges_naive(m, vec![1i64; m], &aux)
+}
+
+/// Seed `ep::partition_edges`: transform → vertex partition → reconstruct.
+pub fn partition_edges_naive(g: &Graph, k: usize, opts: &EpOpts) -> EdgePartition {
+    if g.m() == 0 {
+        return EdgePartition::new(k.max(1), vec![]);
+    }
+    let tg = task_graph_naive(g, opts.chain, opts.vp.seed);
+    let part = if opts.fast_kway && tg.n >= FAST_KWAY_MIN_TASKS {
+        partition_kway_naive(&tg, k, &opts.vp)
+    } else {
+        partition_kway_rb_naive(&tg, k, &opts.vp)
+    };
+    EdgePartition::new(k, part)
+}
+
+/// Seed `vertex::partition_kway`: one coarsening chain, recursive
+/// bisection on the coarse graph, k-way refinement on the way back up.
+pub fn partition_kway_naive(g: &WGraph, k: usize, opts: &VpOpts) -> Vec<u32> {
+    assert!(k >= 1);
+    if k == 1 || g.n == 0 {
+        return vec![0u32; g.n];
+    }
+    let mut rng = Pcg32::new(opts.seed);
+    let coarse_target = (opts.coarsen_to.max(8) * k / 2).max(128);
+    let mut levels: Vec<(WGraph, Vec<u32>)> = Vec::new();
+    let mut cur = g.clone();
+    while cur.n > coarse_target {
+        let cmap = match opts.matching {
+            Matching::HeavyEdge => heavy_edge_matching(&cur, &mut rng),
+            Matching::Random => random_matching(&cur, &mut rng),
+        };
+        let coarse = contract(&cur, &cmap);
+        if coarse.n as f64 > cur.n as f64 * 0.95 {
+            break;
+        }
+        levels.push((cur, cmap));
+        cur = coarse;
+    }
+    let mut part = partition_kway_rb_naive(&cur, k, opts);
+    kway_refine(&cur, &mut part, k, opts);
+    while let Some((finer, cmap)) = levels.pop() {
+        let mut fine = vec![0u32; finer.n];
+        for v in 0..finer.n {
+            fine[v] = part[cmap[v] as usize];
+        }
+        part = fine;
+        kway_refine(&finer, &mut part, k, opts);
+        cur = finer;
+    }
+    kway_balance(&cur, &mut part, k, opts.eps);
+    kway_refine(&cur, &mut part, k, &VpOpts { fm_passes: 1, ..opts.clone() });
+    kway_balance(&cur, &mut part, k, opts.eps);
+    part
+}
+
+fn kway_balance(g: &WGraph, part: &mut [u32], k: usize, eps: f64) {
+    let total = g.total_vwgt();
+    let cap = ((total as f64 / k as f64) * (1.0 + eps)).ceil() as i64;
+    let mut loads = vec![0i64; k];
+    for v in 0..g.n {
+        loads[part[v] as usize] += g.vwgt[v];
+    }
+    let mut wsum = vec![0i64; k];
+    let mut stamp = vec![u32::MAX; k];
+    let overloaded: Vec<usize> = (0..k).filter(|&b| loads[b] > cap).collect();
+    for from in overloaded {
+        if loads[from] <= cap {
+            continue;
+        }
+        let mut evictable: Vec<(i64, u32, usize)> = Vec::new();
+        for v in 0..g.n as u32 {
+            if part[v as usize] != from as u32 {
+                continue;
+            }
+            let mut touched: Vec<usize> = Vec::new();
+            for (u, w) in g.neighbors(v) {
+                let b = part[u as usize] as usize;
+                if stamp[b] != v {
+                    stamp[b] = v;
+                    wsum[b] = 0;
+                    touched.push(b);
+                }
+                wsum[b] += w;
+            }
+            let w_int = if stamp[from] == v { wsum[from] } else { 0 };
+            let mut best: Option<(i64, usize)> = None;
+            for &b in &touched {
+                if b == from {
+                    continue;
+                }
+                let delta = w_int - wsum[b];
+                if best.map_or(true, |(bd, _)| delta < bd) {
+                    best = Some((delta, b));
+                }
+            }
+            match best {
+                Some((d, b)) => evictable.push((d, v, b)),
+                None => evictable.push((w_int, v, usize::MAX)),
+            }
+        }
+        evictable.sort_unstable();
+        let mut wsum2 = vec![0i64; k];
+        let mut stamp2 = vec![u32::MAX; k];
+        for (_, v, _) in evictable {
+            if loads[from] <= cap {
+                break;
+            }
+            let vw = g.vwgt[v as usize];
+            let mut touched: Vec<usize> = Vec::new();
+            for (u, w) in g.neighbors(v) {
+                let b = part[u as usize] as usize;
+                if b == from {
+                    continue;
+                }
+                if stamp2[b] != v {
+                    stamp2[b] = v;
+                    wsum2[b] = 0;
+                    touched.push(b);
+                }
+                wsum2[b] += w;
+            }
+            let best = touched
+                .iter()
+                .copied()
+                .filter(|&b| loads[b] + vw <= cap)
+                .max_by_key(|&b| wsum2[b]);
+            let to = match best {
+                Some(b) => b,
+                None => {
+                    let lb = (0..k).min_by_key(|&b| loads[b]).unwrap();
+                    if lb == from || loads[lb] + vw > cap {
+                        continue;
+                    }
+                    lb
+                }
+            };
+            part[v as usize] = to as u32;
+            loads[from] -= vw;
+            loads[to] += vw;
+        }
+    }
+}
+
+fn kway_refine(g: &WGraph, part: &mut [u32], k: usize, opts: &VpOpts) {
+    let total = g.total_vwgt();
+    let max_vw = g.vwgt.iter().copied().max().unwrap_or(0);
+    let cap = ((total as f64 / k as f64) * (1.0 + opts.eps)) as i64 + max_vw;
+    let mut loads = vec![0i64; k];
+    for v in 0..g.n {
+        loads[part[v] as usize] += g.vwgt[v];
+    }
+    let mut wsum = vec![0i64; k];
+    let mut stamp = vec![u32::MAX; k];
+    let max_passes = opts.fm_passes.max(1) * 3;
+    for pass in 0..max_passes {
+        let mut moved = 0usize;
+        for v in 0..g.n as u32 {
+            let from = part[v as usize] as usize;
+            let mut touched: Vec<usize> = Vec::new();
+            for (u, w) in g.neighbors(v) {
+                let b = part[u as usize] as usize;
+                if stamp[b] != v {
+                    stamp[b] = v;
+                    wsum[b] = 0;
+                    touched.push(b);
+                }
+                wsum[b] += w;
+            }
+            if touched.len() < 2 && !touched.is_empty() && touched[0] == from {
+                continue;
+            }
+            let w_int = if stamp[from] == v { wsum[from] } else { 0 };
+            let mut best: Option<(i64, usize)> = None;
+            for &b in &touched {
+                if b == from {
+                    continue;
+                }
+                let gain = wsum[b] - w_int;
+                if gain > 0
+                    && loads[b] + g.vwgt[v as usize] <= cap
+                    && best.map_or(true, |(bg, _)| gain > bg)
+                {
+                    best = Some((gain, b));
+                }
+            }
+            if let Some((_, to)) = best {
+                part[v as usize] = to as u32;
+                loads[from] -= g.vwgt[v as usize];
+                loads[to] += g.vwgt[v as usize];
+                moved += 1;
+            }
+        }
+        if moved == 0 || pass + 1 == max_passes {
+            break;
+        }
+    }
+}
+
+/// Seed `vertex::partition_kway_rb` (sequential recursive bisection).
+pub fn partition_kway_rb_naive(g: &WGraph, k: usize, opts: &VpOpts) -> Vec<u32> {
+    assert!(k >= 1);
+    let mut part = vec![0u32; g.n];
+    if k == 1 || g.n == 0 {
+        return part;
+    }
+    let ids: Vec<u32> = (0..g.n as u32).collect();
+    let mut rng = Pcg32::new(opts.seed);
+    recurse(g, &ids, k, 0, opts, &mut rng, &mut part);
+    part
+}
+
+fn recurse(
+    g: &WGraph,
+    global_ids: &[u32],
+    k: usize,
+    label_base: u32,
+    opts: &VpOpts,
+    rng: &mut Pcg32,
+    out: &mut [u32],
+) {
+    if k == 1 {
+        for &gid in global_ids {
+            out[gid as usize] = label_base;
+        }
+        return;
+    }
+    let k_left = k / 2 + (k % 2);
+    let frac_left = k_left as f64 / k as f64;
+    let side = bisect_naive(g, frac_left, opts, rng);
+    for s in 0..2u32 {
+        let sub_k = if s == 0 { k_left } else { k - k_left };
+        let sub_base = if s == 0 { label_base } else { label_base + k_left as u32 };
+        let (sub, sub_ids) = extract_side(g, &side, s, global_ids);
+        if sub.n == 0 {
+            continue;
+        }
+        recurse(&sub, &sub_ids, sub_k, sub_base, opts, rng, out);
+    }
+}
+
+fn extract_side(g: &WGraph, side: &[u32], s: u32, global_ids: &[u32]) -> (WGraph, Vec<u32>) {
+    let mut local = vec![u32::MAX; g.n];
+    let mut ids = Vec::new();
+    let mut vwgt = Vec::new();
+    for v in 0..g.n {
+        if side[v] == s {
+            local[v] = ids.len() as u32;
+            ids.push(global_ids[v]);
+            vwgt.push(g.vwgt[v]);
+        }
+    }
+    let mut edges = Vec::new();
+    for v in 0..g.n as u32 {
+        if side[v as usize] != s {
+            continue;
+        }
+        for (u, w) in g.neighbors(v) {
+            if u > v && side[u as usize] == s {
+                edges.push((local[v as usize], local[u as usize], w));
+            }
+        }
+    }
+    (from_edges_naive(ids.len(), vwgt, &edges), ids)
+}
+
+/// Seed `vertex::bisect` (lazy-deletion BinaryHeap FM).
+pub fn bisect_naive(g: &WGraph, frac_left: f64, opts: &VpOpts, rng: &mut Pcg32) -> Vec<u32> {
+    let mut levels: Vec<(WGraph, Vec<u32>)> = Vec::new();
+    let mut cur = g.clone();
+    while cur.n > opts.coarsen_to {
+        let cmap = match opts.matching {
+            Matching::HeavyEdge => heavy_edge_matching(&cur, rng),
+            Matching::Random => random_matching(&cur, rng),
+        };
+        let coarse = contract(&cur, &cmap);
+        if coarse.n as f64 > cur.n as f64 * 0.95 {
+            break;
+        }
+        levels.push((cur, cmap));
+        cur = coarse;
+    }
+    let mut side = initial_bisection(&cur, frac_left, opts, rng);
+    fm_refine(&cur, &mut side, frac_left, opts);
+    while let Some((finer, cmap)) = levels.pop() {
+        let mut fine_side = vec![0u32; finer.n];
+        for v in 0..finer.n {
+            fine_side[v] = side[cmap[v] as usize];
+        }
+        side = fine_side;
+        fm_refine(&finer, &mut side, frac_left, opts);
+        drop(finer);
+    }
+    side
+}
+
+fn heavy_edge_matching(g: &WGraph, rng: &mut Pcg32) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..g.n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut mate = vec![u32::MAX; g.n];
+    for &v in &order {
+        if mate[v as usize] != u32::MAX {
+            continue;
+        }
+        let mut best: Option<(i64, u32)> = None;
+        for (u, w) in g.neighbors(v) {
+            if u != v && mate[u as usize] == u32::MAX && best.map_or(true, |(bw, _)| w > bw) {
+                best = Some((w, u));
+            }
+        }
+        match best {
+            Some((_, u)) => {
+                mate[v as usize] = u;
+                mate[u as usize] = v;
+            }
+            None => mate[v as usize] = v,
+        }
+    }
+    build_cmap(&mate)
+}
+
+fn random_matching(g: &WGraph, rng: &mut Pcg32) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..g.n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut mate = vec![u32::MAX; g.n];
+    for &v in &order {
+        if mate[v as usize] != u32::MAX {
+            continue;
+        }
+        let nbrs: Vec<u32> = g
+            .neighbors(v)
+            .map(|(u, _)| u)
+            .filter(|&u| u != v && mate[u as usize] == u32::MAX)
+            .collect();
+        if nbrs.is_empty() {
+            mate[v as usize] = v;
+        } else {
+            let u = nbrs[rng.gen_range(nbrs.len())];
+            mate[v as usize] = u;
+            mate[u as usize] = v;
+        }
+    }
+    build_cmap(&mate)
+}
+
+fn build_cmap(mate: &[u32]) -> Vec<u32> {
+    let n = mate.len();
+    let mut cmap = vec![u32::MAX; n];
+    let mut next = 0u32;
+    for v in 0..n {
+        if cmap[v] == u32::MAX {
+            let m = mate[v] as usize;
+            cmap[v] = next;
+            cmap[m] = next;
+            next += 1;
+        }
+    }
+    cmap
+}
+
+fn contract(g: &WGraph, cmap: &[u32]) -> WGraph {
+    let nc = (*cmap.iter().max().unwrap_or(&0) + 1) as usize;
+    let mut vwgt = vec![0i64; nc];
+    for v in 0..g.n {
+        vwgt[cmap[v] as usize] += g.vwgt[v];
+    }
+    let mut edges = Vec::new();
+    for v in 0..g.n as u32 {
+        let cv = cmap[v as usize];
+        for (u, w) in g.neighbors(v) {
+            let cu = cmap[u as usize];
+            if cv < cu {
+                edges.push((cv, cu, w));
+            }
+        }
+    }
+    from_edges_naive(nc, vwgt, &edges)
+}
+
+fn initial_bisection(g: &WGraph, frac_left: f64, opts: &VpOpts, rng: &mut Pcg32) -> Vec<u32> {
+    let total = g.total_vwgt();
+    let target_left = (total as f64 * frac_left) as i64;
+    let mut best: Option<(i64, Vec<u32>)> = None;
+
+    for _ in 0..opts.init_tries.max(1) {
+        let mut side = vec![1u32; g.n];
+        let mut w_left = 0i64;
+        let mut in_heap = vec![false; g.n];
+        let mut heap: std::collections::BinaryHeap<(i64, u32)> = Default::default();
+
+        let mut remaining: Vec<u32> = (0..g.n as u32).collect();
+        rng.shuffle(&mut remaining);
+        let mut seed_iter = remaining.into_iter();
+
+        while w_left < target_left {
+            let v = match heap.pop() {
+                Some((_, v)) if side[v as usize] == 1 => v,
+                Some(_) => continue,
+                None => match seed_iter.find(|&v| side[v as usize] == 1) {
+                    Some(v) => v,
+                    None => break,
+                },
+            };
+            side[v as usize] = 0;
+            w_left += g.vwgt[v as usize];
+            for (u, _) in g.neighbors(v) {
+                if side[u as usize] == 1 && !in_heap[u as usize] {
+                    let mut gain = 0i64;
+                    for (t, w) in g.neighbors(u) {
+                        if side[t as usize] == 0 {
+                            gain += w;
+                        } else {
+                            gain -= w;
+                        }
+                    }
+                    heap.push((gain, u));
+                    in_heap[u as usize] = true;
+                }
+            }
+        }
+        let cut = g.edge_cut(&side);
+        if best.as_ref().map_or(true, |(bc, _)| cut < *bc) {
+            best = Some((cut, side));
+        }
+    }
+    best.unwrap().1
+}
+
+fn fm_refine(g: &WGraph, side: &mut [u32], frac_left: f64, opts: &VpOpts) {
+    let total = g.total_vwgt();
+    let max_vw = g.vwgt.iter().copied().max().unwrap_or(0);
+    let target = [
+        (total as f64 * frac_left) as i64,
+        (total as f64 * (1.0 - frac_left)) as i64,
+    ];
+    let limit = |s: usize| (target[s] as f64 * (1.0 + opts.eps)) as i64 + max_vw;
+
+    let mut w = [0i64; 2];
+    for v in 0..g.n {
+        w[side[v] as usize] += g.vwgt[v];
+    }
+
+    for _pass in 0..opts.fm_passes {
+        let mut gain = vec![0i64; g.n];
+        let mut is_boundary = vec![false; g.n];
+        for v in 0..g.n as u32 {
+            let sv = side[v as usize];
+            let mut ext = 0i64;
+            let mut int = 0i64;
+            for (u, wgt) in g.neighbors(v) {
+                if side[u as usize] == sv {
+                    int += wgt;
+                } else {
+                    ext += wgt;
+                }
+            }
+            gain[v as usize] = ext - int;
+            is_boundary[v as usize] = ext > 0;
+        }
+        let mut heap: std::collections::BinaryHeap<(i64, u32)> = (0..g.n as u32)
+            .filter(|&v| is_boundary[v as usize])
+            .map(|v| (gain[v as usize], v))
+            .collect();
+
+        let mut moved = vec![false; g.n];
+        let mut moves: Vec<u32> = Vec::new();
+        let mut cur_delta = 0i64;
+        let mut best_delta = 0i64;
+        let mut best_prefix = 0usize;
+        let move_cap = (g.n / 2).max(64);
+
+        while let Some((gn, v)) = heap.pop() {
+            if moved[v as usize] || gn != gain[v as usize] {
+                continue;
+            }
+            let from = side[v as usize] as usize;
+            let to = 1 - from;
+            if w[to] + g.vwgt[v as usize] > limit(to) {
+                continue;
+            }
+            if gn < -(1 << 30) {
+                continue;
+            }
+            moved[v as usize] = true;
+            side[v as usize] = to as u32;
+            w[from] -= g.vwgt[v as usize];
+            w[to] += g.vwgt[v as usize];
+            cur_delta -= gn;
+            moves.push(v);
+            if cur_delta < best_delta {
+                best_delta = cur_delta;
+                best_prefix = moves.len();
+            }
+            for (u, wgt) in g.neighbors(v) {
+                if moved[u as usize] {
+                    continue;
+                }
+                if side[u as usize] == to as u32 {
+                    gain[u as usize] -= 2 * wgt;
+                } else {
+                    gain[u as usize] += 2 * wgt;
+                }
+                heap.push((gain[u as usize], u));
+            }
+            if moves.len() >= move_cap {
+                break;
+            }
+        }
+        for &v in &moves[best_prefix..] {
+            let s = side[v as usize] as usize;
+            side[v as usize] = 1 - side[v as usize];
+            w[s] -= g.vwgt[v as usize];
+            w[1 - s] += g.vwgt[v as usize];
+        }
+        if best_delta == 0 {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::quality::vertex_cut_cost;
+
+    #[test]
+    fn naive_pipeline_still_works() {
+        let g = gen::cfd_mesh(12, 12, 3);
+        let p = partition_edges_naive(&g, 4, &EpOpts::default());
+        assert_eq!(p.assign.len(), g.m());
+        assert!(p.assign.iter().all(|&b| b < 4));
+        let c = vertex_cut_cost(&g, &p);
+        assert!(c > 0, "a 4-way mesh split must cut something");
+    }
+
+    #[test]
+    fn naive_from_edges_merges_parallels() {
+        let g = from_edges_naive(2, vec![1, 1], &[(0, 1, 3), (1, 0, 4)]);
+        assert_eq!(g.neighbors(0).count(), 1);
+        assert_eq!(g.neighbors(0).next().unwrap().1, 7);
+    }
+}

@@ -1,19 +1,34 @@
-//! Multilevel k-way balanced vertex partitioner (METIS-family).
+//! Multilevel k-way balanced vertex partitioner (METIS-family) —
+//! throughput-oriented rewrite (see PERF.md).
 //!
 //! The EP model (ep.rs) reduces balanced edge partitioning to balanced
 //! vertex partitioning; this module supplies that vertex partitioner:
 //!
-//!   * coarsening by heavy-edge matching (HEM),
-//!   * initial bisection by greedy graph growing (GGGP), several tries,
-//!   * uncoarsening with boundary Fiduccia–Mattheyses refinement,
-//!   * k-way by recursive bisection with weight-proportional targets
-//!     (handles non-power-of-two k).
+//!   * coarsening by deterministic handshake heavy-edge matching (HEM),
+//!     proposals computed in parallel,
+//!   * fused counting-sort CSR construction and contraction — no
+//!     per-vertex sort, no intermediate edge tuples, scratch buffers
+//!     reused across levels (`VpWorkspace`),
+//!   * initial bisection by greedy graph growing (GGGP) on O(1)
+//!     gain buckets, independent restarts run in parallel,
+//!   * uncoarsening with boundary Fiduccia–Mattheyses refinement on
+//!     doubly-linked gain buckets (O(1) best-move / O(1) gain update),
+//!   * k-way by recursive bisection, the two sides in parallel
+//!     (`par::join`), with weight-proportional targets for any k.
+//!
+//! Determinism: every parallel phase computes each output cell as a pure
+//! function of (graph, seed, index), so a fixed seed yields bit-identical
+//! partitions for every thread count.  `VpOpts::threads = 0` uses all
+//! cores; 1 forces sequential execution.
 //!
 //! Weights are i64 throughout: the clone-and-connect transform assigns a
 //! huge weight to original edges, and HEM contracts those first, so the
 //! "never cut an original edge" constraint is honoured structurally
 //! (see ep.rs for the argument).
 
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use crate::util::par;
 use crate::util::rng::Pcg32;
 
 /// Weighted undirected graph in CSR form (parallel edges pre-merged).
@@ -28,7 +43,8 @@ pub struct WGraph {
 
 impl WGraph {
     /// Build from an edge list, merging parallel edges by weight sum and
-    /// dropping self-loops (they can't be cut).
+    /// dropping self-loops (they can't be cut).  Two-pass counting-sort
+    /// scatter followed by an in-place stamp dedup — O(n + m), no sort.
     pub fn from_edges(n: usize, vwgt: Vec<i64>, edges: &[(u32, u32, i64)]) -> Self {
         assert_eq!(vwgt.len(), n);
         let mut deg = vec![0u32; n];
@@ -58,39 +74,62 @@ impl WGraph {
             cursor[v as usize] += 1;
         }
         let mut g = WGraph { n, vwgt, xadj, adjncy, adjwgt };
-        g.merge_parallel();
+        g.merge_fused();
         g
     }
 
-    /// Merge parallel entries in each adjacency list (sort + fold).
-    fn merge_parallel(&mut self) {
-        let mut new_xadj = vec![0u32; self.n + 1];
-        let mut new_adjncy = Vec::with_capacity(self.adjncy.len());
-        let mut new_adjwgt = Vec::with_capacity(self.adjwgt.len());
-        let mut scratch: Vec<(u32, i64)> = Vec::new();
-        for v in 0..self.n {
-            scratch.clear();
-            for idx in self.xadj[v] as usize..self.xadj[v + 1] as usize {
-                scratch.push((self.adjncy[idx], self.adjwgt[idx]));
-            }
-            scratch.sort_unstable_by_key(|&(u, _)| u);
-            let mut i = 0;
-            while i < scratch.len() {
-                let (u, mut w) = scratch[i];
-                let mut j = i + 1;
-                while j < scratch.len() && scratch[j].0 == u {
-                    w += scratch[j].1;
-                    j += 1;
+    /// Build from raw CSR arrays that may contain duplicate neighbor
+    /// entries (and self-loops, which are dropped).  Used by the fused
+    /// task-graph transform in ep.rs.
+    pub fn from_csr_dedup(
+        n: usize,
+        vwgt: Vec<i64>,
+        xadj: Vec<u32>,
+        adjncy: Vec<u32>,
+        adjwgt: Vec<i64>,
+    ) -> Self {
+        assert_eq!(vwgt.len(), n);
+        assert_eq!(xadj.len(), n + 1);
+        let mut g = WGraph { n, vwgt, xadj, adjncy, adjwgt };
+        g.merge_fused();
+        g
+    }
+
+    /// Merge duplicate entries in each adjacency list in place, dropping
+    /// self-loops.  O(m) via a per-neighbor stamp: for vertex v, the
+    /// stamp array records at which output slot each neighbor landed, so
+    /// a repeat folds its weight there.  `v` itself is the epoch — stamps
+    /// written for earlier vertices can never collide.
+    fn merge_fused(&mut self) {
+        let n = self.n;
+        let mut stamp = vec![u32::MAX; n];
+        let mut pos = vec![0u32; n];
+        let mut w = 0usize;
+        let mut new_xadj = vec![0u32; n + 1];
+        for v in 0..n {
+            let lo = self.xadj[v] as usize;
+            let hi = self.xadj[v + 1] as usize;
+            for idx in lo..hi {
+                let u = self.adjncy[idx];
+                if u as usize == v {
+                    continue;
                 }
-                new_adjncy.push(u);
-                new_adjwgt.push(w);
-                i = j;
+                let wt = self.adjwgt[idx];
+                if stamp[u as usize] == v as u32 {
+                    self.adjwgt[pos[u as usize] as usize] += wt;
+                } else {
+                    stamp[u as usize] = v as u32;
+                    pos[u as usize] = w as u32;
+                    self.adjncy[w] = u;
+                    self.adjwgt[w] = wt;
+                    w += 1;
+                }
             }
-            new_xadj[v + 1] = new_adjncy.len() as u32;
+            new_xadj[v + 1] = w as u32;
         }
+        self.adjncy.truncate(w);
+        self.adjwgt.truncate(w);
         self.xadj = new_xadj;
-        self.adjncy = new_adjncy;
-        self.adjwgt = new_adjwgt;
     }
 
     #[inline]
@@ -137,6 +176,9 @@ pub struct VpOpts {
     /// Greedy-graph-growing restarts for the initial bisection.
     pub init_tries: usize,
     pub matching: Matching,
+    /// Worker threads for the parallel phases: 0 = one per core,
+    /// 1 = sequential.  Results are identical for every value.
+    pub threads: usize,
 }
 
 impl Default for VpOpts {
@@ -148,49 +190,475 @@ impl Default for VpOpts {
             fm_passes: 3,
             init_tries: 4,
             matching: Matching::HeavyEdge,
+            threads: 0,
         }
     }
 }
 
-/// k-way balanced partition — the production path (perf-pass §Perf.L3).
+// ------------------------------------------------------------------ seeds
+
+/// SplitMix64 finalizer — stretches one seed into independent per-phase
+/// streams so parallel work never shares RNG state.
+#[inline]
+fn mix64(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+#[inline]
+fn derive_seed(seed: u64, salt: u64) -> u64 {
+    mix64(seed ^ salt.wrapping_mul(0x9E3779B97F4A7C15))
+}
+
+// -------------------------------------------------------------- workspace
+
+/// Arena of scratch buffers reused across multilevel phases so the
+/// coarsening chain allocates nothing per level beyond its outputs.
+#[derive(Default)]
+pub struct VpWorkspace {
+    // matching
+    mate: Vec<u32>,
+    cand: Vec<u32>,
+    mate_next: Vec<u32>,
+    order: Vec<u32>,
+    // contraction
+    mptr: Vec<u32>,
+    members: Vec<u32>,
+    cursor: Vec<u32>,
+    stamp: Vec<u32>,
+    pos: Vec<u32>,
+}
+
+impl VpWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Reset `buf` to `len` copies of `fill` without shrinking capacity.
+fn reset(buf: &mut Vec<u32>, len: usize, fill: u32) {
+    buf.clear();
+    buf.resize(len, fill);
+}
+
+// ---------------------------------------------------------------- matching
+
+/// Handshake rounds for parallel heavy-edge matching.  Each round is a
+/// pure map (propose heaviest unmatched neighbor, deterministic
+/// tie-break by seeded hash then smaller id) plus a pure commit (mutual
+/// proposals match), so the matching is identical for every thread
+/// count.  Mutually-heaviest pairs — in particular the clone pairs of
+/// the EP transform — always match in round one.
+const MATCH_ROUNDS: usize = 4;
+
+/// Returns (cmap, nc): fine vertex -> coarse id, and the coarse count.
+fn heavy_edge_matching(
+    g: &WGraph,
+    seed: u64,
+    threads: usize,
+    ws: &mut VpWorkspace,
+) -> (Vec<u32>, usize) {
+    let n = g.n;
+    reset(&mut ws.mate, n, u32::MAX);
+    reset(&mut ws.cand, n, u32::MAX);
+    reset(&mut ws.mate_next, n, u32::MAX);
+    for round in 0..MATCH_ROUNDS {
+        let rs = derive_seed(seed, 0xA0 + round as u64);
+        // propose: best unmatched neighbor by (weight, hash, smaller id)
+        {
+            let mate = &ws.mate;
+            par::fill_indexed(threads, &mut ws.cand[..n], |v| {
+                if mate[v] != u32::MAX {
+                    return u32::MAX;
+                }
+                let mut best_u = u32::MAX;
+                let mut best_w = i64::MIN;
+                let mut best_p = 0u64;
+                for (u, w) in g.neighbors(v as u32) {
+                    if u as usize == v || mate[u as usize] != u32::MAX {
+                        continue;
+                    }
+                    let p = mix64(rs ^ u as u64);
+                    if w > best_w
+                        || (w == best_w && (p > best_p || (p == best_p && u < best_u)))
+                    {
+                        best_w = w;
+                        best_p = p;
+                        best_u = u;
+                    }
+                }
+                best_u
+            });
+        }
+        // commit: v matches u iff the proposals are mutual
+        {
+            let (mate, cand) = (&ws.mate, &ws.cand);
+            par::fill_indexed(threads, &mut ws.mate_next[..n], |v| {
+                let m = mate[v];
+                if m != u32::MAX {
+                    return m;
+                }
+                let c = cand[v];
+                if c != u32::MAX && cand[c as usize] == v as u32 {
+                    c
+                } else {
+                    u32::MAX
+                }
+            });
+        }
+        let changed = ws.mate != ws.mate_next;
+        std::mem::swap(&mut ws.mate, &mut ws.mate_next);
+        if !changed {
+            break;
+        }
+    }
+    for v in 0..n {
+        if ws.mate[v] == u32::MAX {
+            ws.mate[v] = v as u32;
+        }
+    }
+    build_cmap(&ws.mate)
+}
+
+/// Random matching (ablation path) — sequential, seed-driven.
+fn random_matching(g: &WGraph, seed: u64, ws: &mut VpWorkspace) -> (Vec<u32>, usize) {
+    let n = g.n;
+    let mut rng = Pcg32::new(seed);
+    reset(&mut ws.order, n, 0);
+    for (i, o) in ws.order.iter_mut().enumerate() {
+        *o = i as u32;
+    }
+    rng.shuffle(&mut ws.order[..n]);
+    reset(&mut ws.mate, n, u32::MAX);
+    let mut nbrs: Vec<u32> = Vec::new();
+    for i in 0..n {
+        let v = ws.order[i];
+        if ws.mate[v as usize] != u32::MAX {
+            continue;
+        }
+        nbrs.clear();
+        nbrs.extend(
+            g.neighbors(v)
+                .map(|(u, _)| u)
+                .filter(|&u| u != v && ws.mate[u as usize] == u32::MAX),
+        );
+        if nbrs.is_empty() {
+            ws.mate[v as usize] = v;
+        } else {
+            let u = nbrs[rng.gen_range(nbrs.len())];
+            ws.mate[v as usize] = u;
+            ws.mate[u as usize] = v;
+        }
+    }
+    build_cmap(&ws.mate)
+}
+
+fn build_cmap(mate: &[u32]) -> (Vec<u32>, usize) {
+    let n = mate.len();
+    let mut cmap = vec![u32::MAX; n];
+    let mut next = 0u32;
+    for v in 0..n {
+        if cmap[v] == u32::MAX {
+            let m = mate[v] as usize;
+            cmap[v] = next;
+            cmap[m] = next; // m == v for self-matched
+            next += 1;
+        }
+    }
+    (cmap, next as usize)
+}
+
+// ------------------------------------------------------------- contraction
+
+/// Contract a graph along a cmap — fused CSR construction: members by
+/// counting sort, merged coarse degrees by stamp, then a scatter pass
+/// writing each coarse vertex's merged adjacency directly into its final
+/// slot.  Parallel over disjoint coarse-vertex ranges; the output is a
+/// pure function of (g, cmap), so thread count never changes it.
+fn contract(g: &WGraph, cmap: &[u32], nc: usize, threads: usize, ws: &mut VpWorkspace) -> WGraph {
+    let n = g.n;
+    let mut vwgt = vec![0i64; nc];
+    for v in 0..n {
+        vwgt[cmap[v] as usize] += g.vwgt[v];
+    }
+    // group fine vertices by coarse id (counting sort; stable => members
+    // of each coarse vertex are in ascending fine order)
+    reset(&mut ws.mptr, nc + 1, 0);
+    for v in 0..n {
+        ws.mptr[cmap[v] as usize + 1] += 1;
+    }
+    for c in 0..nc {
+        ws.mptr[c + 1] += ws.mptr[c];
+    }
+    reset(&mut ws.cursor, nc, 0);
+    ws.cursor[..nc].copy_from_slice(&ws.mptr[..nc]);
+    reset(&mut ws.members, n, 0);
+    for v in 0..n {
+        let c = cmap[v] as usize;
+        ws.members[ws.cursor[c] as usize] = v as u32;
+        ws.cursor[c] += 1;
+    }
+
+    let t = par::resolve_threads(threads);
+    let parallel = t > 1 && nc >= par::PAR_MIN_LEN;
+
+    // pass 1: merged coarse degree per coarse vertex
+    let mut cdeg = vec![0u32; nc];
+    let count_range = |cdeg_chunk: &mut [u32], lo: usize, stamp: &mut [u32]| {
+        for (ci, d) in cdeg_chunk.iter_mut().enumerate() {
+            let c = (lo + ci) as u32;
+            let mut cnt = 0u32;
+            for &v in &ws.members[ws.mptr[c as usize] as usize..ws.mptr[c as usize + 1] as usize] {
+                for (u, _) in g.neighbors(v) {
+                    let cu = cmap[u as usize];
+                    if cu != c && stamp[cu as usize] != c {
+                        stamp[cu as usize] = c;
+                        cnt += 1;
+                    }
+                }
+            }
+            *d = cnt;
+        }
+    };
+    if parallel {
+        let ranges = par::chunk_ranges(nc, t);
+        std::thread::scope(|s| {
+            let mut rest: &mut [u32] = &mut cdeg;
+            for &(lo, hi) in &ranges {
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(hi - lo);
+                rest = tail;
+                let count_range = &count_range;
+                s.spawn(move || {
+                    let mut stamp = vec![u32::MAX; nc];
+                    count_range(chunk, lo, &mut stamp);
+                });
+            }
+        });
+    } else {
+        reset(&mut ws.stamp, nc, u32::MAX);
+        // borrow dance: count_range captured ws.members/mptr immutably,
+        // so reuse a local stamp buffer here instead of ws.stamp
+        let mut stamp = std::mem::take(&mut ws.stamp);
+        count_range(&mut cdeg, 0, &mut stamp);
+        ws.stamp = stamp;
+    }
+
+    // prefix-sum into the coarse xadj
+    let mut cxadj = vec![0u32; nc + 1];
+    for c in 0..nc {
+        cxadj[c + 1] = cxadj[c] + cdeg[c];
+    }
+    let total = cxadj[nc] as usize;
+
+    // pass 2: scatter merged adjacency into final slots
+    let mut adjncy = vec![0u32; total];
+    let mut adjwgt = vec![0i64; total];
+    let fill_range =
+        |an: &mut [u32], aw: &mut [i64], lo: usize, hi: usize, base: usize, stamp: &mut [u32], pos: &mut [u32]| {
+            let mut w = 0usize;
+            for c in lo as u32..hi as u32 {
+                debug_assert_eq!(w, cxadj[c as usize] as usize - base);
+                for &v in
+                    &ws.members[ws.mptr[c as usize] as usize..ws.mptr[c as usize + 1] as usize]
+                {
+                    for (u, wt) in g.neighbors(v) {
+                        let cu = cmap[u as usize];
+                        if cu == c {
+                            continue;
+                        }
+                        if stamp[cu as usize] == c {
+                            aw[pos[cu as usize] as usize] += wt;
+                        } else {
+                            stamp[cu as usize] = c;
+                            pos[cu as usize] = w as u32;
+                            an[w] = cu;
+                            aw[w] = wt;
+                            w += 1;
+                        }
+                    }
+                }
+            }
+        };
+    if parallel {
+        let ranges = par::chunk_ranges(nc, t);
+        std::thread::scope(|s| {
+            let mut rest_n: &mut [u32] = &mut adjncy;
+            let mut rest_w: &mut [i64] = &mut adjwgt;
+            let mut off = 0usize;
+            for &(lo, hi) in &ranges {
+                let end = cxadj[hi] as usize;
+                let (an, tn) = std::mem::take(&mut rest_n).split_at_mut(end - off);
+                let (aw, tw) = std::mem::take(&mut rest_w).split_at_mut(end - off);
+                rest_n = tn;
+                rest_w = tw;
+                let base = off;
+                off = end;
+                let fill_range = &fill_range;
+                s.spawn(move || {
+                    let mut stamp = vec![u32::MAX; nc];
+                    let mut pos = vec![0u32; nc];
+                    fill_range(an, aw, lo, hi, base, &mut stamp, &mut pos);
+                });
+            }
+        });
+    } else {
+        reset(&mut ws.stamp, nc, u32::MAX);
+        reset(&mut ws.pos, nc, 0);
+        let mut stamp = std::mem::take(&mut ws.stamp);
+        let mut pos = std::mem::take(&mut ws.pos);
+        fill_range(&mut adjncy, &mut adjwgt, 0, nc, 0, &mut stamp, &mut pos);
+        ws.stamp = stamp;
+        ws.pos = pos;
+    }
+
+    WGraph { n: nc, vwgt, xadj: cxadj, adjncy, adjwgt }
+}
+
+// ------------------------------------------------------------ gain buckets
+
+/// Gains beyond ±GAIN_CLAMP share the boundary bucket; the true gain is
+/// kept separately (`gain[]`), so clamping only affects extraction order
+/// among extreme-gain vertices, never cut accounting.
+const GAIN_CLAMP: i64 = 4096;
+
+const NONE: u32 = u32::MAX;
+
+/// Doubly-linked gain buckets — the classic Fiduccia–Mattheyses
+/// structure: O(1) insert/remove/update, O(1) amortized best-move pop.
+struct GainBuckets {
+    head: Vec<u32>,
+    next: Vec<u32>,
+    prev: Vec<u32>,
+    bucket: Vec<u32>,
+    cur_max: usize,
+    len: usize,
+}
+
+impl GainBuckets {
+    fn new(n: usize) -> Self {
+        let nb = (2 * GAIN_CLAMP + 1) as usize;
+        GainBuckets {
+            head: vec![NONE; nb],
+            next: vec![NONE; n],
+            prev: vec![NONE; n],
+            bucket: vec![NONE; n],
+            cur_max: 0,
+            len: 0,
+        }
+    }
+
+    fn clear(&mut self) {
+        for h in &mut self.head {
+            *h = NONE;
+        }
+        for b in &mut self.bucket {
+            *b = NONE;
+        }
+        self.cur_max = 0;
+        self.len = 0;
+    }
+
+    #[inline]
+    fn idx(&self, gain: i64) -> usize {
+        (gain.clamp(-GAIN_CLAMP, GAIN_CLAMP) + GAIN_CLAMP) as usize
+    }
+
+    #[inline]
+    fn contains(&self, v: u32) -> bool {
+        self.bucket[v as usize] != NONE
+    }
+
+    fn insert(&mut self, v: u32, gain: i64) {
+        debug_assert!(!self.contains(v));
+        let b = self.idx(gain);
+        let h = self.head[b];
+        self.next[v as usize] = h;
+        self.prev[v as usize] = NONE;
+        if h != NONE {
+            self.prev[h as usize] = v;
+        }
+        self.head[b] = v;
+        self.bucket[v as usize] = b as u32;
+        if b > self.cur_max {
+            self.cur_max = b;
+        }
+        self.len += 1;
+    }
+
+    fn remove(&mut self, v: u32) {
+        let b = self.bucket[v as usize];
+        debug_assert!(b != NONE);
+        let (p, n) = (self.prev[v as usize], self.next[v as usize]);
+        if p != NONE {
+            self.next[p as usize] = n;
+        } else {
+            self.head[b as usize] = n;
+        }
+        if n != NONE {
+            self.prev[n as usize] = p;
+        }
+        self.bucket[v as usize] = NONE;
+        self.len -= 1;
+    }
+
+    /// Re-bucket `v` under a new gain (no-op if the bucket is unchanged).
+    fn update(&mut self, v: u32, gain: i64) {
+        let b = self.idx(gain) as u32;
+        if self.bucket[v as usize] == b {
+            return;
+        }
+        self.remove(v);
+        self.insert(v, gain);
+    }
+
+    /// Highest-gain vertex without removing it (LIFO within a bucket).
+    fn peek_max(&mut self) -> Option<u32> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            let h = self.head[self.cur_max];
+            if h != NONE {
+                return Some(h);
+            }
+            if self.cur_max == 0 {
+                return None;
+            }
+            self.cur_max -= 1;
+        }
+    }
+}
+
+// ------------------------------------------------------------ k-way driver
+
+/// k-way balanced partition — the production path.
 ///
-/// Scheme: coarsen the graph ONCE by repeated heavy-edge matching to
-/// O(k) vertices, run recursive bisection on that small coarse graph,
-/// then project back level by level with greedy k-way boundary
-/// refinement.  Compared to plain recursive bisection (which re-coarsens
-/// every subgraph at every split, ~log k full coarsening chains) this
-/// does one chain — measured ~5-8x faster at equal quality; see
-/// EXPERIMENTS.md §Perf.
+/// Scheme: coarsen the graph ONCE by repeated handshake heavy-edge
+/// matching to O(k) vertices, run recursive bisection on that small
+/// coarse graph, then project back level by level with greedy k-way
+/// boundary refinement.  Compared to plain recursive bisection (which
+/// re-coarsens every subgraph at every split) this does one chain.
 pub fn partition_kway(g: &WGraph, k: usize, opts: &VpOpts) -> Vec<u32> {
     assert!(k >= 1);
     if k == 1 || g.n == 0 {
         return vec![0u32; g.n];
     }
-    let mut rng = Pcg32::new(opts.seed);
-    // --- single coarsening chain ---
+    let threads = par::resolve_threads(opts.threads);
     let coarse_target = (opts.coarsen_to.max(8) * k / 2).max(128);
-    let mut levels: Vec<(WGraph, Vec<u32>)> = Vec::new();
-    let mut cur = g.clone();
-    while cur.n > coarse_target {
-        let cmap = match opts.matching {
-            Matching::HeavyEdge => heavy_edge_matching(&cur, &mut rng),
-            Matching::Random => random_matching(&cur, &mut rng),
-        };
-        let coarse = contract(&cur, &cmap);
-        if coarse.n as f64 > cur.n as f64 * 0.95 {
-            break;
-        }
-        levels.push((cur, cmap));
-        cur = coarse;
-    }
+    let mut ws = VpWorkspace::new();
+    let (mut levels, cur) =
+        coarsen_chain(g, coarse_target, opts, derive_seed(opts.seed, 0xC0A55E), threads, &mut ws);
     // --- initial k-way partition: recursive bisection on the coarse graph ---
     let mut part = partition_kway_rb(&cur, k, opts);
     kway_refine(&cur, &mut part, k, opts);
     // --- uncoarsen with k-way refinement ---
+    let mut cur = cur;
     while let Some((finer, cmap)) = levels.pop() {
         let mut fine = vec![0u32; finer.n];
-        for v in 0..finer.n {
-            fine[v] = part[cmap[v] as usize];
+        {
+            let part_ref = &part;
+            par::fill_indexed(threads, &mut fine, |v| part_ref[cmap[v] as usize]);
         }
         part = fine;
         kway_refine(&finer, &mut part, k, opts);
@@ -198,11 +666,41 @@ pub fn partition_kway(g: &WGraph, k: usize, opts: &VpOpts) -> Vec<u32> {
     }
     // --- final strict balance (coarse-level moves can strand imbalance),
     // then one more refine pass to recover quality lost to evictions
-    // (refine's cap at the finest level is within one vertex of strict)
     kway_balance(&cur, &mut part, k, opts.eps);
     kway_refine(&cur, &mut part, k, &VpOpts { fm_passes: 1, ..opts.clone() });
     kway_balance(&cur, &mut part, k, opts.eps);
     part
+}
+
+/// Coarsen `g` down to ~`target` vertices.  Returns the chain of
+/// (finer graph, cmap) pairs plus the coarsest graph.  All scratch
+/// lives in `ws`; per level only the output graph + cmap allocate.
+fn coarsen_chain(
+    g: &WGraph,
+    target: usize,
+    opts: &VpOpts,
+    seed: u64,
+    threads: usize,
+    ws: &mut VpWorkspace,
+) -> (Vec<(WGraph, Vec<u32>)>, WGraph) {
+    let mut levels: Vec<(WGraph, Vec<u32>)> = Vec::new();
+    let mut cur = g.clone();
+    let mut level = 0u64;
+    while cur.n > target {
+        let lseed = derive_seed(seed, level + 1);
+        let (cmap, nc) = match opts.matching {
+            Matching::HeavyEdge => heavy_edge_matching(&cur, lseed, threads, ws),
+            Matching::Random => random_matching(&cur, lseed, ws),
+        };
+        let coarse = contract(&cur, &cmap, nc, threads, ws);
+        if coarse.n as f64 > cur.n as f64 * 0.95 {
+            break; // matching stalled (e.g. star graphs) — stop coarsening
+        }
+        levels.push((cur, cmap));
+        cur = coarse;
+        level += 1;
+    }
+    (levels, cur)
 }
 
 /// Enforce the balance cap on the finest level: evict the
@@ -215,8 +713,13 @@ fn kway_balance(g: &WGraph, part: &mut [u32], k: usize, eps: f64) {
     for v in 0..g.n {
         loads[part[v] as usize] += g.vwgt[v];
     }
+    // visit-counter epochs, NOT vertex ids: id-epochs collide when the
+    // ranking loop below runs again for a second overloaded block,
+    // leaving stale wsum values in the cost computation.
     let mut wsum = vec![0i64; k];
-    let mut stamp = vec![u32::MAX; k];
+    let mut stamp = vec![0u64; k];
+    let mut epoch = 0u64;
+    let mut touched: Vec<usize> = Vec::with_capacity(k);
     // process each overloaded block once: rank its vertices by eviction
     // cost, evict cheapest-first until the block fits (O(n log n) total)
     let overloaded: Vec<usize> = (0..k).filter(|&b| loads[b] > cap).collect();
@@ -230,17 +733,18 @@ fn kway_balance(g: &WGraph, part: &mut [u32], k: usize, eps: f64) {
             if part[v as usize] != from as u32 {
                 continue;
             }
-            let mut touched: Vec<usize> = Vec::new();
+            epoch += 1;
+            touched.clear();
             for (u, w) in g.neighbors(v) {
                 let b = part[u as usize] as usize;
-                if stamp[b] != v {
-                    stamp[b] = v;
+                if stamp[b] != epoch {
+                    stamp[b] = epoch;
                     wsum[b] = 0;
                     touched.push(b);
                 }
                 wsum[b] += w;
             }
-            let w_int = if stamp[from] == v { wsum[from] } else { 0 };
+            let w_int = if stamp[from] == epoch { wsum[from] } else { 0 };
             let mut best: Option<(i64, usize)> = None;
             for &b in &touched {
                 if b == from {
@@ -266,7 +770,7 @@ fn kway_balance(g: &WGraph, part: &mut [u32], k: usize, eps: f64) {
             let vw = g.vwgt[v as usize];
             // recompute the best adjacent underloaded target now (the
             // ranking used stale loads; the target must not)
-            let mut touched: Vec<usize> = Vec::new();
+            touched.clear();
             for (u, w) in g.neighbors(v) {
                 let b = part[u as usize] as usize;
                 if b == from {
@@ -312,19 +816,25 @@ fn kway_refine(g: &WGraph, part: &mut [u32], k: usize, opts: &VpOpts) {
     for v in 0..g.n {
         loads[part[v] as usize] += g.vwgt[v];
     }
-    // epoch-stamped per-block connectivity accumulator
+    // epoch-stamped per-block connectivity accumulator.  The epoch is a
+    // counter bumped per vertex VISIT, not the vertex id: id-epochs
+    // collide across passes (stamp[b] left at v by pass p makes pass
+    // p+1 treat stale wsum[b] as fresh), silently corrupting gains.
     let mut wsum = vec![0i64; k];
-    let mut stamp = vec![u32::MAX; k];
+    let mut stamp = vec![0u64; k];
+    let mut epoch = 0u64;
+    let mut touched: Vec<usize> = Vec::with_capacity(k);
     let max_passes = opts.fm_passes.max(1) * 3;
     for pass in 0..max_passes {
         let mut moved = 0usize;
         for v in 0..g.n as u32 {
+            epoch += 1;
             let from = part[v as usize] as usize;
-            let mut touched: Vec<usize> = Vec::new();
+            touched.clear();
             for (u, w) in g.neighbors(v) {
                 let b = part[u as usize] as usize;
-                if stamp[b] != v {
-                    stamp[b] = v;
+                if stamp[b] != epoch {
+                    stamp[b] = epoch;
                     wsum[b] = 0;
                     touched.push(b);
                 }
@@ -333,7 +843,7 @@ fn kway_refine(g: &WGraph, part: &mut [u32], k: usize, opts: &VpOpts) {
             if touched.len() < 2 && !touched.is_empty() && touched[0] == from {
                 continue; // interior vertex
             }
-            let w_int = if stamp[from] == v { wsum[from] } else { 0 };
+            let w_int = if stamp[from] == epoch { wsum[from] } else { 0 };
             let mut best: Option<(i64, usize)> = None;
             for &b in &touched {
                 if b == from {
@@ -360,50 +870,70 @@ fn kway_refine(g: &WGraph, part: &mut [u32], k: usize, opts: &VpOpts) {
     }
 }
 
-/// k-way balanced partition by plain recursive bisection (the ablation
-/// path; re-coarsens every subgraph at every split).
+// ------------------------------------------------------ recursive bisection
+
+/// Subgraphs below this size aren't worth a second thread.
+const RB_PAR_MIN: usize = 8192;
+
+/// k-way balanced partition by plain recursive bisection (re-coarsens
+/// every subgraph at every split; the two sides run in parallel).
 pub fn partition_kway_rb(g: &WGraph, k: usize, opts: &VpOpts) -> Vec<u32> {
     assert!(k >= 1);
-    let mut part = vec![0u32; g.n];
     if k == 1 || g.n == 0 {
-        return part;
+        return vec![0u32; g.n];
     }
+    let threads = par::resolve_threads(opts.threads);
     let ids: Vec<u32> = (0..g.n as u32).collect();
-    let mut rng = Pcg32::new(opts.seed);
-    recurse(g, &ids, k, 0, opts, &mut rng, &mut part);
-    part
+    let out: Vec<AtomicU32> = (0..g.n).map(|_| AtomicU32::new(0)).collect();
+    recurse(g, &ids, k, 0, opts, derive_seed(opts.seed, 0x5B15EC7), threads, &out);
+    out.into_iter().map(|a| a.into_inner()).collect()
 }
 
+#[allow(clippy::too_many_arguments)]
 fn recurse(
     g: &WGraph,
     global_ids: &[u32],
     k: usize,
     label_base: u32,
     opts: &VpOpts,
-    rng: &mut Pcg32,
-    out: &mut [u32],
+    seed: u64,
+    threads: usize,
+    out: &[AtomicU32],
 ) {
     if k == 1 {
         for &gid in global_ids {
-            out[gid as usize] = label_base;
+            out[gid as usize].store(label_base, Ordering::Relaxed);
         }
         return;
     }
     let k_left = k / 2 + (k % 2); // ceil
     let frac_left = k_left as f64 / k as f64;
-    let side = bisect(g, frac_left, opts, rng);
-    // split into two subgraphs and recurse
-    for s in 0..2u32 {
-        let sub_k = if s == 0 { k_left } else { k - k_left };
-        let sub_base = if s == 0 { label_base } else { label_base + k_left as u32 };
-        let (sub, sub_ids) = extract_side(g, &side, s, global_ids);
-        if sub.n == 0 {
-            continue;
+    let side = bisect_with(g, frac_left, opts, derive_seed(seed, 0xB5), threads);
+    let (sub0, ids0) = extract_side(g, &side, 0, global_ids);
+    let (sub1, ids1) = extract_side(g, &side, 1, global_ids);
+    let s0 = derive_seed(seed, 1);
+    let s1 = derive_seed(seed, 2);
+    let run0 = |t: usize| {
+        if sub0.n > 0 {
+            recurse(&sub0, &ids0, k_left, label_base, opts, s0, t, out);
         }
-        recurse(&sub, &sub_ids, sub_k, sub_base, opts, rng, out);
+    };
+    let run1 = |t: usize| {
+        if sub1.n > 0 {
+            recurse(&sub1, &ids1, k - k_left, label_base + k_left as u32, opts, s1, t, out);
+        }
+    };
+    if threads > 1 && sub0.n.min(sub1.n) >= RB_PAR_MIN {
+        let half = threads.div_ceil(2);
+        par::join(threads, || run0(half), || run1(half));
+    } else {
+        run0(threads);
+        run1(threads);
     }
 }
 
+/// Extract the side-`s` induced subgraph directly in CSR form (the
+/// parent adjacency is already merged, so no dedup pass is needed).
 fn extract_side(g: &WGraph, side: &[u32], s: u32, global_ids: &[u32]) -> (WGraph, Vec<u32>) {
     let mut local = vec![u32::MAX; g.n];
     let mut ids = Vec::new();
@@ -415,207 +945,166 @@ fn extract_side(g: &WGraph, side: &[u32], s: u32, global_ids: &[u32]) -> (WGraph
             vwgt.push(g.vwgt[v]);
         }
     }
-    let mut edges = Vec::new();
+    let ns = ids.len();
+    let mut xadj = vec![0u32; ns + 1];
+    let mut li = 0usize;
     for v in 0..g.n as u32 {
         if side[v as usize] != s {
             continue;
         }
-        for (u, w) in g.neighbors(v) {
-            if u > v && side[u as usize] == s {
-                edges.push((local[v as usize], local[u as usize], w));
+        let mut d = 0u32;
+        for (u, _) in g.neighbors(v) {
+            if side[u as usize] == s {
+                d += 1;
+            }
+        }
+        xadj[li + 1] = xadj[li] + d;
+        li += 1;
+    }
+    let mut adjncy = vec![0u32; xadj[ns] as usize];
+    let mut adjwgt = vec![0i64; xadj[ns] as usize];
+    let mut w = 0usize;
+    for v in 0..g.n as u32 {
+        if side[v as usize] != s {
+            continue;
+        }
+        for (u, wt) in g.neighbors(v) {
+            if side[u as usize] == s {
+                adjncy[w] = local[u as usize];
+                adjwgt[w] = wt;
+                w += 1;
             }
         }
     }
-    (WGraph::from_edges(ids.len(), vwgt, &edges), ids)
+    (WGraph { n: ns, vwgt, xadj, adjncy, adjwgt }, ids)
 }
 
 /// Multilevel 2-way partition. Returns side (0/1) per vertex; side 0
-/// targets `frac_left` of the total vertex weight.
-pub fn bisect(g: &WGraph, frac_left: f64, opts: &VpOpts, rng: &mut Pcg32) -> Vec<u32> {
-    // --- coarsening phase ---
-    let mut levels: Vec<(WGraph, Vec<u32>)> = Vec::new(); // (finer graph, cmap)
-    let mut cur = g.clone();
-    while cur.n > opts.coarsen_to {
-        let cmap = match opts.matching {
-            Matching::HeavyEdge => heavy_edge_matching(&cur, rng),
-            Matching::Random => random_matching(&cur, rng),
-        };
-        let coarse = contract(&cur, &cmap);
-        if coarse.n as f64 > cur.n as f64 * 0.95 {
-            // matching stalled (e.g. star graphs) — stop coarsening
-            break;
-        }
-        levels.push((cur, cmap));
-        cur = coarse;
-    }
+/// targets `frac_left` of the total vertex weight.  Deterministic in
+/// `opts.seed`; thread count never changes the result.
+pub fn bisect(g: &WGraph, frac_left: f64, opts: &VpOpts) -> Vec<u32> {
+    bisect_with(g, frac_left, opts, derive_seed(opts.seed, 0xB15EC7), par::resolve_threads(opts.threads))
+}
 
-    // --- initial partition on the coarsest graph ---
-    let mut side = initial_bisection(&cur, frac_left, opts, rng);
-    fm_refine(&cur, &mut side, frac_left, opts);
+fn bisect_with(g: &WGraph, frac_left: f64, opts: &VpOpts, seed: u64, threads: usize) -> Vec<u32> {
+    let mut ws = VpWorkspace::new();
+    let (mut levels, cur) = coarsen_chain(g, opts.coarsen_to, opts, seed, threads, &mut ws);
+
+    // --- initial partition on the coarsest graph: parallel GGGP tries ---
+    let mut side = initial_bisection(&cur, frac_left, opts, derive_seed(seed, 0x66), threads);
+    fm_refine(&cur, &mut side, frac_left, opts, threads);
 
     // --- uncoarsening + refinement ---
     while let Some((finer, cmap)) = levels.pop() {
         let mut fine_side = vec![0u32; finer.n];
-        for v in 0..finer.n {
-            fine_side[v] = side[cmap[v] as usize];
+        {
+            let side_ref = &side;
+            par::fill_indexed(threads, &mut fine_side, |v| side_ref[cmap[v] as usize]);
         }
         side = fine_side;
-        fm_refine(&finer, &mut side, frac_left, opts);
-        drop(finer);
+        fm_refine(&finer, &mut side, frac_left, opts, threads);
     }
     side
 }
 
-/// Heavy-edge matching: visit vertices in random order; match each
-/// unmatched vertex to its heaviest unmatched neighbor.  Returns cmap:
-/// fine vertex -> coarse vertex id.
-fn heavy_edge_matching(g: &WGraph, rng: &mut Pcg32) -> Vec<u32> {
-    let mut order: Vec<u32> = (0..g.n as u32).collect();
-    rng.shuffle(&mut order);
-    let mut mate = vec![u32::MAX; g.n];
-    for &v in &order {
-        if mate[v as usize] != u32::MAX {
-            continue;
-        }
-        let mut best: Option<(i64, u32)> = None;
-        for (u, w) in g.neighbors(v) {
-            if u != v && mate[u as usize] == u32::MAX {
-                if best.map_or(true, |(bw, _)| w > bw) {
-                    best = Some((w, u));
-                }
-            }
-        }
-        match best {
-            Some((_, u)) => {
-                mate[v as usize] = u;
-                mate[u as usize] = v;
-            }
-            None => mate[v as usize] = v,
+// ----------------------------------------------------------------- GGGP
+
+/// Greedy graph growing (GGGP): grow side 0 from a random seed, always
+/// absorbing the frontier vertex with the best exact cut gain (gain
+/// buckets make each absorption O(deg)), until side 0 reaches its
+/// target weight.  Independent restarts run in parallel; the best cut
+/// wins, ties broken by restart index so the result is deterministic.
+fn initial_bisection(
+    g: &WGraph,
+    frac_left: f64,
+    opts: &VpOpts,
+    seed: u64,
+    threads: usize,
+) -> Vec<u32> {
+    let tries = opts.init_tries.max(1);
+    let results = par::run_tasks(threads, tries, |t| {
+        gggp_try(g, frac_left, derive_seed(seed, t as u64))
+    });
+    let mut best = 0usize;
+    for t in 1..tries {
+        if results[t].0 < results[best].0 {
+            best = t;
         }
     }
-    build_cmap(&mate)
+    let mut results = results;
+    std::mem::take(&mut results[best].1)
 }
 
-fn random_matching(g: &WGraph, rng: &mut Pcg32) -> Vec<u32> {
-    let mut order: Vec<u32> = (0..g.n as u32).collect();
-    rng.shuffle(&mut order);
-    let mut mate = vec![u32::MAX; g.n];
-    for &v in &order {
-        if mate[v as usize] != u32::MAX {
-            continue;
-        }
-        let nbrs: Vec<u32> = g
-            .neighbors(v)
-            .map(|(u, _)| u)
-            .filter(|&u| u != v && mate[u as usize] == u32::MAX)
-            .collect();
-        if nbrs.is_empty() {
-            mate[v as usize] = v;
-        } else {
-            let u = nbrs[rng.gen_range(nbrs.len())];
-            mate[v as usize] = u;
-            mate[u as usize] = v;
-        }
-    }
-    build_cmap(&mate)
-}
-
-fn build_cmap(mate: &[u32]) -> Vec<u32> {
-    let n = mate.len();
-    let mut cmap = vec![u32::MAX; n];
-    let mut next = 0u32;
-    for v in 0..n {
-        if cmap[v] == u32::MAX {
-            let m = mate[v] as usize;
-            cmap[v] = next;
-            cmap[m] = next; // m == v for self-matched
-            next += 1;
-        }
-    }
-    cmap
-}
-
-/// Contract a graph along a cmap (coarse vertex count = max(cmap)+1).
-fn contract(g: &WGraph, cmap: &[u32]) -> WGraph {
-    let nc = (*cmap.iter().max().unwrap_or(&0) + 1) as usize;
-    let mut vwgt = vec![0i64; nc];
-    for v in 0..g.n {
-        vwgt[cmap[v] as usize] += g.vwgt[v];
-    }
-    let mut edges = Vec::new();
-    for v in 0..g.n as u32 {
-        let cv = cmap[v as usize];
-        for (u, w) in g.neighbors(v) {
-            let cu = cmap[u as usize];
-            if cv < cu {
-                edges.push((cv, cu, w));
-            }
-        }
-    }
-    WGraph::from_edges(nc, vwgt, &edges)
-}
-
-/// Greedy graph growing (GGGP): BFS-grow side 0 from a random seed,
-/// always absorbing the frontier vertex with the best cut gain, until
-/// side 0 reaches its target weight.  Several restarts; keep best cut.
-fn initial_bisection(g: &WGraph, frac_left: f64, opts: &VpOpts, rng: &mut Pcg32) -> Vec<u32> {
+/// One GGGP restart: returns (cut, side).
+fn gggp_try(g: &WGraph, frac_left: f64, try_seed: u64) -> (i64, Vec<u32>) {
+    let n = g.n;
     let total = g.total_vwgt();
     let target_left = (total as f64 * frac_left) as i64;
-    let mut best: Option<(i64, Vec<u32>)> = None;
+    let mut rng = Pcg32::new(try_seed);
 
-    for _ in 0..opts.init_tries.max(1) {
-        let mut side = vec![1u32; g.n];
-        let mut w_left = 0i64;
-        let mut in_heap = vec![false; g.n];
-        // max-heap on gain (i64). gain(v) = (external) - (internal) edges
-        // relative to the growing region; recomputed lazily.
-        let mut heap: std::collections::BinaryHeap<(i64, u32)> = Default::default();
+    let mut side = vec![1u32; n];
+    let mut w_left = 0i64;
+    let mut gain = vec![0i64; n];
+    let mut frontier = GainBuckets::new(n);
 
-        let mut remaining: Vec<u32> =
-            (0..g.n as u32).filter(|&v| g.vwgt[v as usize] > 0 || true).collect();
-        rng.shuffle(&mut remaining);
-        let mut seed_iter = remaining.into_iter();
+    let mut seeds: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut seeds);
+    let mut seed_iter = seeds.into_iter();
 
-        while w_left < target_left {
-            let v = match heap.pop() {
-                Some((_, v)) if side[v as usize] == 1 => v,
-                Some(_) => continue, // already absorbed; skip stale
-                None => {
-                    // frontier empty (disconnected) — new random seed
-                    match seed_iter.find(|&v| side[v as usize] == 1) {
-                        Some(v) => v,
-                        None => break,
-                    }
-                }
-            };
-            side[v as usize] = 0;
-            w_left += g.vwgt[v as usize];
-            for (u, _) in g.neighbors(v) {
-                if side[u as usize] == 1 && !in_heap[u as usize] {
-                    // gain = weight to region - weight to outside
-                    let mut gain = 0i64;
-                    for (t, w) in g.neighbors(u) {
-                        if side[t as usize] == 0 {
-                            gain += w;
-                        } else {
-                            gain -= w;
-                        }
-                    }
-                    heap.push((gain, u));
-                    in_heap[u as usize] = true;
+    while w_left < target_left {
+        let v = match frontier.peek_max() {
+            Some(v) => {
+                frontier.remove(v);
+                v
+            }
+            None => {
+                // frontier empty (disconnected) — new random seed vertex
+                match seed_iter.find(|&v| side[v as usize] == 1) {
+                    Some(v) => v,
+                    None => break,
                 }
             }
-        }
-        let cut = g.edge_cut(&side);
-        if best.as_ref().map_or(true, |(bc, _)| cut < *bc) {
-            best = Some((cut, side));
+        };
+        side[v as usize] = 0;
+        w_left += g.vwgt[v as usize];
+        for (u, w) in g.neighbors(v) {
+            if side[u as usize] != 1 {
+                continue;
+            }
+            if frontier.contains(u) {
+                // v joined the region: u's gain improves by 2w
+                gain[u as usize] += 2 * w;
+                frontier.update(u, gain[u as usize]);
+            } else {
+                // first contact: exact gain = w(to region) − w(to outside)
+                let mut gn = 0i64;
+                for (t, tw) in g.neighbors(u) {
+                    if side[t as usize] == 0 {
+                        gn += tw;
+                    } else {
+                        gn -= tw;
+                    }
+                }
+                gain[u as usize] = gn;
+                frontier.insert(u, gn);
+            }
         }
     }
-    best.unwrap().1
+    (g.edge_cut(&side), side)
 }
 
-/// Boundary FM refinement for a 2-way partition with balance constraint.
-fn fm_refine(g: &WGraph, side: &mut [u32], frac_left: f64, opts: &VpOpts) {
+// -------------------------------------------------------------- 2-way FM
+
+/// Boundary FM refinement for a 2-way partition with balance constraint,
+/// on gain buckets: one structure per side, O(1) best-move extraction
+/// and O(1) neighbor gain updates, with the classic best-prefix
+/// rollback.  Gain recomputation at the start of each pass is a pure
+/// parallel fill.
+fn fm_refine(g: &WGraph, side: &mut [u32], frac_left: f64, opts: &VpOpts, threads: usize) {
+    if opts.fm_passes == 0 || g.n == 0 {
+        return;
+    }
+    let n = g.n;
     let total = g.total_vwgt();
     let max_vw = g.vwgt.iter().copied().max().unwrap_or(0);
     let target = [
@@ -625,54 +1114,84 @@ fn fm_refine(g: &WGraph, side: &mut [u32], frac_left: f64, opts: &VpOpts) {
     let limit = |s: usize| (target[s] as f64 * (1.0 + opts.eps)) as i64 + max_vw;
 
     let mut w = [0i64; 2];
-    for v in 0..g.n {
+    for v in 0..n {
         w[side[v] as usize] += g.vwgt[v];
     }
 
+    let mut gain = vec![0i64; n];
+    let mut buckets = [GainBuckets::new(n), GainBuckets::new(n)];
+    let mut moved = vec![false; n];
+
     for _pass in 0..opts.fm_passes {
         // gains: moving v to the other side changes cut by -(ext - int)
-        let mut gain = vec![0i64; g.n];
-        let mut is_boundary = vec![false; g.n];
-        for v in 0..g.n as u32 {
-            let sv = side[v as usize];
-            let mut ext = 0i64;
-            let mut int = 0i64;
-            for (u, wgt) in g.neighbors(v) {
-                if side[u as usize] == sv {
-                    int += wgt;
-                } else {
-                    ext += wgt;
+        {
+            let side_ref: &[u32] = side;
+            par::fill_indexed(threads, &mut gain, |v| {
+                let sv = side_ref[v];
+                let mut ext = 0i64;
+                let mut int = 0i64;
+                for (u, wgt) in g.neighbors(v as u32) {
+                    if side_ref[u as usize] == sv {
+                        int += wgt;
+                    } else {
+                        ext += wgt;
+                    }
+                }
+                ext - int
+            });
+        }
+        buckets[0].clear();
+        buckets[1].clear();
+        for v in 0..n as u32 {
+            // boundary = some external edge; gain > -wdeg exactly then,
+            // but recompute cheaply: external weight > 0
+            let sv = side[v as usize] as usize;
+            let mut is_boundary = false;
+            for (u, _) in g.neighbors(v) {
+                if side[u as usize] != sv as u32 {
+                    is_boundary = true;
+                    break;
                 }
             }
-            gain[v as usize] = ext - int;
-            is_boundary[v as usize] = ext > 0;
+            if is_boundary {
+                buckets[sv].insert(v, gain[v as usize]);
+            }
         }
-        let mut heap: std::collections::BinaryHeap<(i64, u32)> = (0..g.n as u32)
-            .filter(|&v| is_boundary[v as usize])
-            .map(|v| (gain[v as usize], v))
-            .collect();
 
-        let mut moved = vec![false; g.n];
+        for m in moved.iter_mut() {
+            *m = false;
+        }
         let mut moves: Vec<u32> = Vec::new();
         let mut cur_delta = 0i64; // cumulative cut change (negative good)
         let mut best_delta = 0i64;
         let mut best_prefix = 0usize;
-        let move_cap = (g.n / 2).max(64);
+        let move_cap = (n / 2).max(64);
 
-        while let Some((gn, v)) = heap.pop() {
-            if moved[v as usize] || gn != gain[v as usize] {
-                continue; // stale entry
-            }
-            let from = side[v as usize] as usize;
+        loop {
+            // candidate = higher-gain top across the two sides
+            let c0 = buckets[0].peek_max();
+            let c1 = buckets[1].peek_max();
+            let (from, v) = match (c0, c1) {
+                (None, None) => break,
+                (Some(v), None) => (0usize, v),
+                (None, Some(v)) => (1usize, v),
+                (Some(v0), Some(v1)) => {
+                    if gain[v0 as usize] >= gain[v1 as usize] {
+                        (0usize, v0)
+                    } else {
+                        (1usize, v1)
+                    }
+                }
+            };
+            let gn = gain[v as usize];
             let to = 1 - from;
-            if w[to] + g.vwgt[v as usize] > limit(to) {
-                continue; // would break balance
-            }
             // never split a contracted heavy pair at fine levels: a huge
             // negative gain means an original (must-not-cut) edge.
-            if gn < -(1 << 30) {
-                continue;
+            if gn < -(1 << 30) || w[to] + g.vwgt[v as usize] > limit(to) {
+                buckets[from].remove(v); // drop for this pass (a later
+                continue; // neighbor update may re-insert it)
             }
+            buckets[from].remove(v);
             moved[v as usize] = true;
             side[v as usize] = to as u32;
             w[from] -= g.vwgt[v as usize];
@@ -683,19 +1202,22 @@ fn fm_refine(g: &WGraph, side: &mut [u32], frac_left: f64, opts: &VpOpts) {
                 best_delta = cur_delta;
                 best_prefix = moves.len();
             }
-            // update neighbor gains
+            // update neighbor gains: v moved from `from` to `to`
             for (u, wgt) in g.neighbors(v) {
                 if moved[u as usize] {
                     continue;
                 }
-                // v moved from `from` to `to`; neighbor u: if same side as
-                // new v, its gain decreases by 2w; else increases by 2w.
                 if side[u as usize] == to as u32 {
                     gain[u as usize] -= 2 * wgt;
                 } else {
                     gain[u as usize] += 2 * wgt;
                 }
-                heap.push((gain[u as usize], u));
+                let su = side[u as usize] as usize;
+                if buckets[su].contains(u) {
+                    buckets[su].update(u, gain[u as usize]);
+                } else {
+                    buckets[su].insert(u, gain[u as usize]);
+                }
             }
             if moves.len() >= move_cap {
                 break;
@@ -736,8 +1258,7 @@ mod tests {
     #[test]
     fn bisects_two_cliques_perfectly() {
         let g = two_cliques(20);
-        let mut rng = Pcg32::new(1);
-        let side = bisect(&g, 0.5, &VpOpts::default(), &mut rng);
+        let side = bisect(&g, 0.5, &VpOpts { seed: 1, ..Default::default() });
         assert_eq!(g.edge_cut(&side), 1, "should cut only the bridge");
         let w0: i64 = (0..g.n).filter(|&v| side[v] == 0).map(|v| g.vwgt[v]).sum();
         assert_eq!(w0, 20);
@@ -815,11 +1336,50 @@ mod tests {
     #[test]
     fn contract_preserves_total_weight() {
         let g = two_cliques(8);
-        let mut rng = Pcg32::new(2);
-        let cmap = heavy_edge_matching(&g, &mut rng);
-        let c = contract(&g, &cmap);
+        let mut ws = VpWorkspace::new();
+        let (cmap, nc) = heavy_edge_matching(&g, 2, 1, &mut ws);
+        let c = contract(&g, &cmap, nc, 1, &mut ws);
         assert_eq!(c.total_vwgt(), g.total_vwgt());
         assert!(c.n < g.n);
+    }
+
+    #[test]
+    fn contract_is_thread_count_invariant() {
+        // force the parallel path by exceeding PAR_MIN_LEN coarse vertices
+        let n = 3 * par::PAR_MIN_LEN;
+        let edges: Vec<(u32, u32, i64)> =
+            (0..n as u32 - 1).map(|i| (i, i + 1, 1 + (i % 7) as i64)).collect();
+        let g = WGraph::from_edges(n, vec![1; n], &edges);
+        let mut ws = VpWorkspace::new();
+        let (cmap, nc) = heavy_edge_matching(&g, 9, 1, &mut ws);
+        let seq = contract(&g, &cmap, nc, 1, &mut ws);
+        let par4 = contract(&g, &cmap, nc, 4, &mut ws);
+        assert_eq!(seq.xadj, par4.xadj);
+        assert_eq!(seq.adjncy, par4.adjncy);
+        assert_eq!(seq.adjwgt, par4.adjwgt);
+        assert_eq!(seq.vwgt, par4.vwgt);
+    }
+
+    #[test]
+    fn matching_is_thread_count_invariant() {
+        let g = two_cliques(100);
+        let mut ws1 = VpWorkspace::new();
+        let mut ws4 = VpWorkspace::new();
+        let (c1, n1) = heavy_edge_matching(&g, 42, 1, &mut ws1);
+        let (c4, n4) = heavy_edge_matching(&g, 42, 4, &mut ws4);
+        assert_eq!(c1, c4);
+        assert_eq!(n1, n4);
+    }
+
+    #[test]
+    fn kway_is_deterministic_across_threads_and_runs() {
+        let g = two_cliques(150);
+        let mk = |threads| {
+            partition_kway(&g, 4, &VpOpts { seed: 7, threads, ..Default::default() })
+        };
+        let p1 = mk(1);
+        assert_eq!(p1, mk(1), "same seed, same thread count");
+        assert_eq!(p1, mk(4), "same seed, different thread count");
     }
 
     #[test]
@@ -857,5 +1417,43 @@ mod tests {
         let g = WGraph::from_edges(2, vec![1, 1], &[(0, 1, 3), (1, 0, 4)]);
         assert_eq!(g.neighbors(0).count(), 1);
         assert_eq!(g.neighbors(0).next().unwrap().1, 7);
+    }
+
+    #[test]
+    fn from_csr_dedup_merges_and_drops_loops() {
+        // raw CSR for 3 vertices: v0 -> [1, 1, 0(loop), 2], v1 -> [0, 0], v2 -> [0]
+        let g = WGraph::from_csr_dedup(
+            3,
+            vec![1, 1, 1],
+            vec![0, 4, 6, 7],
+            vec![1, 1, 0, 2, 0, 0, 0],
+            vec![2, 3, 9, 4, 2, 3, 4],
+        );
+        assert_eq!(g.neighbors(0).count(), 2);
+        let w01: i64 = g.neighbors(0).filter(|&(u, _)| u == 1).map(|(_, w)| w).sum();
+        assert_eq!(w01, 5);
+        assert_eq!(g.neighbors(1).count(), 1);
+        assert_eq!(g.neighbors(1).next().unwrap().1, 5);
+    }
+
+    #[test]
+    fn gain_buckets_order_and_update() {
+        let mut b = GainBuckets::new(8);
+        b.insert(0, 5);
+        b.insert(1, -3);
+        b.insert(2, 100);
+        assert_eq!(b.peek_max(), Some(2));
+        b.update(2, -50);
+        assert_eq!(b.peek_max(), Some(0));
+        b.remove(0);
+        assert_eq!(b.peek_max(), Some(1));
+        b.remove(1);
+        assert_eq!(b.peek_max(), Some(2));
+        b.remove(2);
+        assert_eq!(b.peek_max(), None);
+        // clamped gains still order against in-range gains
+        b.insert(3, GAIN_CLAMP + 1_000_000);
+        b.insert(4, 0);
+        assert_eq!(b.peek_max(), Some(3));
     }
 }

@@ -102,9 +102,97 @@ impl Table {
     }
 }
 
+/// Tiny JSON object writer for machine-readable bench baselines
+/// (serde is unavailable offline; values are flat key/value pairs plus
+/// optional pre-encoded nested objects via `raw`).  Keys are emitted in
+/// insertion order so baselines diff cleanly across runs.
+#[derive(Debug, Default)]
+pub struct JsonReport {
+    fields: Vec<(String, String)>,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl JsonReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn str(&mut self, key: &str, v: &str) -> &mut Self {
+        self.fields.push((key.to_string(), format!("\"{}\"", json_escape(v))));
+        self
+    }
+
+    pub fn int(&mut self, key: &str, v: u64) -> &mut Self {
+        self.fields.push((key.to_string(), v.to_string()));
+        self
+    }
+
+    pub fn num(&mut self, key: &str, v: f64) -> &mut Self {
+        // JSON has no NaN/Inf; clamp to null for robustness
+        let enc = if v.is_finite() { format!("{v:.6}") } else { "null".to_string() };
+        self.fields.push((key.to_string(), enc));
+        self
+    }
+
+    /// Insert a pre-encoded JSON value (nested object/array).
+    pub fn raw(&mut self, key: &str, v: &str) -> &mut Self {
+        self.fields.push((key.to_string(), v.to_string()));
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::from("{\n");
+        for (i, (k, v)) in self.fields.iter().enumerate() {
+            s.push_str(&format!("  \"{}\": {}", json_escape(k), v));
+            if i + 1 < self.fields.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push('}');
+        s.push('\n');
+        s
+    }
+
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.render())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_report_renders_and_parses() {
+        let mut r = JsonReport::new();
+        r.str("bench", "partition").int("m", 1000000).num("speedup", 3.25);
+        r.raw("graph", "{\"n\": 5}");
+        let text = r.render();
+        let parsed = crate::util::json::Json::parse(&text).expect("valid json");
+        assert_eq!(parsed.get("bench").and_then(|j| j.as_str()), Some("partition"));
+        assert!(parsed.get("graph").is_some());
+    }
+
+    #[test]
+    fn json_escape_control_chars() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
 
     #[test]
     fn bench_returns_sane_stats() {

@@ -1,0 +1,228 @@
+//! Structured parallelism on `std::thread::scope` — the offline stand-in
+//! for rayon (the registry is unreachable, so rayon cannot be added; see
+//! Cargo.toml).  The API mirrors the rayon shapes the partitioner needs:
+//! `join` (= rayon::join), `fill_indexed` / `map_indexed` (= parallel
+//! iterator collect), and `chunk_ranges` for manual range splitting.
+//!
+//! Determinism contract: every helper computes each output cell as a
+//! pure function of the inputs and the cell index, so results are
+//! bit-identical for every thread count (including 1).  Callers must
+//! uphold the same purity in their closures; the partitioner's
+//! determinism tests (tests/perf_parity.rs) enforce it end to end.
+
+/// Resolve a thread-count knob: 0 means "one per available core".
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Below this many items, parallel fills fall back to the sequential
+/// loop — thread spawn/synchronization costs more than the work.
+pub const PAR_MIN_LEN: usize = 4096;
+
+/// Run two closures, on two threads when `threads > 1` (rayon::join).
+pub fn join<A, B, RA, RB>(threads: usize, a: A, b: B) -> (RA, RB)
+where
+    A: FnOnce() -> RA + Send,
+    B: FnOnce() -> RB + Send,
+    RA: Send,
+    RB: Send,
+{
+    if threads <= 1 {
+        let ra = a();
+        let rb = b();
+        (ra, rb)
+    } else {
+        std::thread::scope(|s| {
+            let hb = s.spawn(b);
+            let ra = a();
+            let rb = hb.join().expect("par::join worker panicked");
+            (ra, rb)
+        })
+    }
+}
+
+/// Split `0..len` into at most `parts` contiguous, non-empty ranges.
+pub fn chunk_ranges(len: usize, parts: usize) -> Vec<(usize, usize)> {
+    if len == 0 {
+        return Vec::new();
+    }
+    let parts = parts.max(1).min(len);
+    let chunk = len.div_ceil(parts);
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    while lo < len {
+        let hi = (lo + chunk).min(len);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+/// Overwrite `out[i] = f(i)` for all i, splitting the slice across up to
+/// `threads` workers.  `f` must be pure in `i`.
+pub fn fill_indexed<T, F>(threads: usize, out: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let t = resolve_threads(threads);
+    if t <= 1 || out.len() < PAR_MIN_LEN {
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = f(i);
+        }
+        return;
+    }
+    let chunk = out.len().div_ceil(t);
+    std::thread::scope(|s| {
+        for (ci, slice) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                let base = ci * chunk;
+                for (i, o) in slice.iter_mut().enumerate() {
+                    *o = f(base + i);
+                }
+            });
+        }
+    });
+}
+
+/// Collect `(0..n).map(f)` into a Vec, in parallel.  `f` must be pure.
+pub fn map_indexed<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send + Clone + Default,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    fill_indexed(threads, &mut out, f);
+    out
+}
+
+/// Run `n` heavyweight independent tasks on at most `threads` workers
+/// and collect their results in task order.  Unlike `fill_indexed` this
+/// has no sequential-fallback size threshold — use it for a handful of
+/// expensive jobs (GGGP restarts, bisection sides), not for per-element
+/// work.  The worker count honors the `threads` budget, so nested use
+/// (e.g. under `join`) never oversubscribes the knob.
+pub fn run_tasks<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let t = resolve_threads(threads).min(n.max(1));
+    if t <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let ranges = chunk_ranges(n, t);
+    let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let mut rest: &mut [Option<T>] = &mut results;
+        for &(lo, hi) in &ranges {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(hi - lo);
+            rest = tail;
+            let f = &f;
+            s.spawn(move || {
+                for (i, slot) in chunk.iter_mut().enumerate() {
+                    *slot = Some(f(lo + i));
+                }
+            });
+        }
+    });
+    results.into_iter().map(|o| o.expect("par::run_tasks worker panicked")).collect()
+}
+
+/// Run `f(lo, hi, worker_index)` over a fixed partition of `0..len`
+/// into `parts` ranges, using up to `threads` worker threads.  The
+/// partition depends only on `(len, parts)`, so a caller that derives
+/// per-range state deterministically gets thread-count-independent
+/// results.  `f` must only touch state owned by its range.
+pub fn for_ranges<F>(threads: usize, len: usize, parts: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    let ranges = chunk_ranges(len, parts);
+    let t = resolve_threads(threads);
+    if t <= 1 || ranges.len() <= 1 {
+        for (wi, &(lo, hi)) in ranges.iter().enumerate() {
+            f(lo, hi, wi);
+        }
+        return;
+    }
+    // ranges.len() <= parts is small (callers pass parts ~ threads), so
+    // one thread per range is fine.
+    std::thread::scope(|s| {
+        for (wi, &(lo, hi)) in ranges.iter().enumerate() {
+            let f = &f;
+            s.spawn(move || f(lo, hi, wi));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn join_returns_both() {
+        for t in [1, 4] {
+            let (a, b) = join(t, || 1 + 1, || "x".to_string());
+            assert_eq!(a, 2);
+            assert_eq!(b, "x");
+        }
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for (len, parts) in [(0, 4), (1, 4), (10, 3), (4096, 8), (7, 100)] {
+            let r = chunk_ranges(len, parts);
+            let mut expect = 0;
+            for &(lo, hi) in &r {
+                assert_eq!(lo, expect);
+                assert!(hi > lo);
+                expect = hi;
+            }
+            assert_eq!(expect, len);
+        }
+    }
+
+    #[test]
+    fn fill_indexed_matches_sequential_for_all_thread_counts() {
+        let n = 10_000;
+        let mut seq = vec![0u64; n];
+        fill_indexed(1, &mut seq, |i| (i as u64).wrapping_mul(0x9E37));
+        for t in [2, 3, 8] {
+            let mut par = vec![0u64; n];
+            fill_indexed(t, &mut par, |i| (i as u64).wrapping_mul(0x9E37));
+            assert_eq!(seq, par, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn map_indexed_small_input() {
+        assert_eq!(map_indexed(4, 3, |i| i * 2), vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn run_tasks_ordered_results() {
+        for t in [1, 4] {
+            let r = run_tasks(t, 5, |i| i * i);
+            assert_eq!(r, vec![0, 1, 4, 9, 16], "threads={t}");
+        }
+    }
+
+    #[test]
+    fn for_ranges_visits_every_index_once() {
+        use std::sync::Mutex;
+        let hits = Mutex::new(vec![0u8; 1000]);
+        for_ranges(4, 1000, 4, |lo, hi, _w| {
+            let mut h = hits.lock().unwrap();
+            for i in lo..hi {
+                h[i] += 1;
+            }
+        });
+        assert!(hits.into_inner().unwrap().iter().all(|&c| c == 1));
+    }
+}

@@ -1,0 +1,23 @@
+//! Shared helpers for the integration-test crates (this directory is
+//! not itself compiled as a test crate; each test file does
+//! `mod common;`).
+
+use epgraph::runtime::Engine;
+
+/// Load the PJRT engine, or `None` to skip: artifacts may be missing
+/// (`make artifacts` not run) or the backend unavailable (the offline
+/// `vendor/xla` stub always reports unavailable).
+pub fn engine_or_skip() -> Option<Engine> {
+    let d = epgraph::runtime::default_artifacts_dir();
+    if !d.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts missing at {d:?} — run `make artifacts` first");
+        return None;
+    }
+    match Engine::load(&d) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("skipping: PJRT backend unavailable: {e:#}");
+            None
+        }
+    }
+}

@@ -1,8 +1,12 @@
 //! Integration: the full coordinator pipeline (async optimizer +
-//! adaptive control + PJRT CG) end to end.  Requires `make artifacts`.
+//! adaptive control + PJRT CG) end to end.  Requires `make artifacts`
+//! AND a real PJRT backend; with missing artifacts or the offline `xla`
+//! stub (vendor/xla) these tests skip rather than fail.
 
+mod common;
+
+use common::engine_or_skip;
 use epgraph::coordinator::{run_cg, CgRunConfig};
-use epgraph::runtime::{default_artifacts_dir, Engine};
 use epgraph::sparse::gen;
 use epgraph::util::rng::Pcg32;
 
@@ -13,7 +17,7 @@ fn rhs_for(n: usize, seed: u64) -> Vec<f32> {
 
 #[test]
 fn cg_adaptive_solves_and_never_slows_down() {
-    let mut engine = Engine::load(&default_artifacts_dir()).unwrap();
+    let Some(mut engine) = engine_or_skip() else { return };
     let a = gen::spd_poisson(32); // 1024 unknowns
     let rhs = rhs_for(a.nrows, 3);
     let cfg = CgRunConfig { block_size: 256, max_iters: 400, ..Default::default() };
@@ -37,7 +41,7 @@ fn cg_adaptive_solves_and_never_slows_down() {
 
 #[test]
 fn cg_ideal_uses_optimized_kernel_from_start() {
-    let mut engine = Engine::load(&default_artifacts_dir()).unwrap();
+    let Some(mut engine) = engine_or_skip() else { return };
     let a = gen::spd_poisson(24);
     let rhs = rhs_for(a.nrows, 5);
     let cfg = CgRunConfig {
@@ -66,7 +70,7 @@ fn cg_ideal_uses_optimized_kernel_from_start() {
 #[test]
 fn cg_matches_plain_rust_cg() {
     // numerics cross-check: PJRT CG == rust-reference CG to fp tolerance
-    let mut engine = Engine::load(&default_artifacts_dir()).unwrap();
+    let Some(mut engine) = engine_or_skip() else { return };
     let a = gen::spd_poisson(16);
     let rhs = rhs_for(a.nrows, 9);
     let cfg = CgRunConfig { block_size: 256, max_iters: 200, tol: 1e-5, ..Default::default() };

@@ -1,0 +1,153 @@
+//! Minimal, API-compatible subset of the `anyhow` crate for the offline
+//! build environment.  Implements the surface this repo uses: `Error`,
+//! `Result`, `anyhow!`, `bail!`, `ensure!`, and the `Context` trait.
+//!
+//! Like real anyhow, `Error` deliberately does NOT implement
+//! `std::error::Error`, which is what makes the blanket
+//! `From<E: std::error::Error>` impl coherent.
+
+use std::fmt;
+
+/// An error message plus the context frames wrapped around it
+/// (innermost cause first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context frame (`Context::context` does this).
+    pub fn context<M: fmt::Display>(mut self, m: M) -> Error {
+        self.chain.push(m.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn root(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` prints the whole chain, outermost first
+            for (i, m) in self.chain.iter().rev().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{m}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.root())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, m) in self.chain.iter().rev().enumerate() {
+            if i == 0 {
+                writeln!(f, "{m}")?;
+            } else {
+                if i == 1 {
+                    writeln!(f, "\nCaused by:")?;
+                }
+                writeln!(f, "    {m}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a `Result` or `Option` error path.
+pub trait Context<T> {
+    fn context<M: fmt::Display>(self, msg: M) -> Result<T, Error>;
+    fn with_context<M: fmt::Display, F: FnOnce() -> M>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<M: fmt::Display>(self, msg: M) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(e).context(msg))
+    }
+
+    fn with_context<M: fmt::Display, F: FnOnce() -> M>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<M: fmt::Display>(self, msg: M) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<M: fmt::Display, F: FnOnce() -> M>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_chain() {
+        let e = anyhow!("inner {}", 7).context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner 7");
+    }
+
+    #[test]
+    fn from_std_error() {
+        fn f() -> Result<()> {
+            let _ = std::fs::read_to_string("/definitely/missing/file")?;
+            Ok(())
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn ensure_bails() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert!(f(1).is_ok());
+        assert!(f(-1).is_err());
+    }
+}
