@@ -1,6 +1,9 @@
 //! Partitioner benchmarks — the perf-rewrite headline (optimized vs
-//! retained seed pipeline on a ≥1M-edge graph at k=64, recorded in
-//! BENCH_partition.json), plus Fig 6 (method comparison), the
+//! retained seed pipeline on a ≥1M-edge graph at k=64) and the k-way
+//! refinement headline (gain-bucket `kway_refine` vs the seed full-scan
+//! refinement on the same input), both recorded in BENCH_partition.json
+//! — the baseline the CI regression gate (`epgraph bench-compare`)
+//! checks ratio metrics against.  Plus Fig 6 (method comparison), the
 //! partition-time scaling claim ("orders of magnitude faster than
 //! hypergraph"), and the DESIGN.md ablations.
 //!
@@ -14,14 +17,40 @@
 
 use epgraph::graph::gen as ggen;
 use epgraph::experiments as exp;
+use epgraph::partition::vertex::{self, VpOpts};
 use epgraph::partition::{ep, hypergraph, quality, reference, Method};
 use epgraph::sparse::gen;
 use epgraph::util::benchkit::{bench, time_once, JsonReport};
 
+/// Best-of-`reps` wall clock (min is the standard noise-robust pick) —
+/// the smoke-mode ratios feed the CI regression gate, where a single
+/// sample on a shared runner would make the 25% tolerance flaky.
+fn timed_min<T, F: FnMut() -> T>(reps: usize, mut f: F) -> (T, std::time::Duration) {
+    let (mut out, mut best) = time_once(&mut f);
+    for _ in 1..reps.max(1) {
+        let (o, t) = time_once(&mut f);
+        if t < best {
+            best = t;
+            out = o;
+        }
+    }
+    (out, best)
+}
+
+/// Repetitions for the headline timings: smoke runs are cheap (and
+/// gated), full runs are minutes-long single shots.
+fn headline_reps(smoke: bool) -> usize {
+    if smoke {
+        3
+    } else {
+        1
+    }
+}
+
 /// Headline: the rewrite's speedup over the retained seed pipeline on a
 /// power-law task graph, single-threaded (algorithmic gain alone) and
 /// multi-threaded (scaling on top), with cut-quality parity recorded.
-fn perf_headline(seed: u64) {
+fn perf_headline(seed: u64, r: &mut JsonReport) {
     let smoke = std::env::var("EPGRAPH_BENCH_SMOKE").is_ok();
     // power_law(n, 3) has m ~= 3n tasks; full mode crosses 1M edges
     let n = if smoke { 60_000 } else { 350_000 };
@@ -42,13 +71,15 @@ fn perf_headline(seed: u64) {
         o
     };
 
-    let (p_ref, t_ref) = time_once(|| reference::partition_edges_naive(&g, k, &opts_1t));
-    let (p_1t, t_1t) = time_once(|| ep::partition_edges(&g, k, &opts_1t));
-    let (p_mt, t_mt) = time_once(|| ep::partition_edges(&g, k, &opts_mt));
+    let reps = headline_reps(smoke);
+    let (p_ref, t_ref) = timed_min(reps, || reference::partition_edges_naive(&g, k, &opts_1t));
+    let (p_1t, t_1t) = timed_min(reps, || ep::partition_edges(&g, k, &opts_1t));
+    let (p_mt, t_mt) = timed_min(reps, || ep::partition_edges(&g, k, &opts_mt));
 
-    let cut_ref = quality::vertex_cut_cost(&g, &p_ref);
-    let cut_new = quality::vertex_cut_cost(&g, &p_1t);
-    let cut_mt = quality::vertex_cut_cost(&g, &p_mt);
+    // cut accounting on the parallel deterministic reduction (PERF.md)
+    let cut_ref = quality::vertex_cut_cost_par(&g, &p_ref, 0);
+    let cut_new = quality::vertex_cut_cost_par(&g, &p_1t, 0);
+    let cut_mt = quality::vertex_cut_cost_par(&g, &p_mt, 0);
     assert_eq!(p_1t.assign, p_mt.assign, "thread count must not change the partition");
 
     let s1 = t_ref.as_secs_f64() / t_1t.as_secs_f64().max(1e-9);
@@ -58,7 +89,6 @@ fn perf_headline(seed: u64) {
     println!("  rewrite, all cores:        {:>10.3}s  cut={cut_mt}  speedup={smt:.2}x", t_mt.as_secs_f64());
 
     let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
-    let mut r = JsonReport::new();
     r.str("bench", "partition")
         .str("mode", if smoke { "smoke" } else { "full" })
         .raw(
@@ -76,16 +106,79 @@ fn perf_headline(seed: u64) {
         .int("ref_cut", cut_ref)
         .int("new_cut", cut_new)
         .num("cut_ratio_new_over_ref", cut_new as f64 / cut_ref.max(1) as f64);
-    match r.write("BENCH_partition.json") {
-        Ok(()) => println!("  baseline written to BENCH_partition.json\n"),
-        Err(e) => println!("  WARNING: could not write BENCH_partition.json: {e}\n"),
-    }
+}
+
+/// k = 64 refinement-heavy headline: the k-way gain-bucket rewrite
+/// (`vertex::kway_refine`) vs the retained seed full-scan refinement
+/// (`reference::kway_refine`) on the SAME task graph from the SAME
+/// deliberately-unrefined starting partition (contiguous task slabs —
+/// plenty of boundary, so refinement dominates the wall clock).
+fn kway_refine_headline(seed: u64, r: &mut JsonReport) {
+    let smoke = std::env::var("EPGRAPH_BENCH_SMOKE").is_ok();
+    // tasks m ≈ 3n: full mode crosses 1M tasks in the refined graph
+    let n = if smoke { 60_000 } else { 350_000 };
+    let k = 64usize;
+    println!("## k-way refinement headline ({}, k={k})\n", if smoke { "smoke" } else { "full" });
+    let g = ggen::power_law(n, 3, seed ^ 0x6B77);
+    let tg = ep::task_graph(&g, ep::ChainOrder::Index, seed);
+    println!("task graph: n={} (tasks) k={k}", tg.n);
+
+    // contiguous slabs: balanced by construction, maximal boundary
+    let part0: Vec<u32> = (0..tg.n).map(|v| (v * k / tg.n) as u32).collect();
+    let cut0 = tg.edge_cut_par(&part0, 0);
+
+    let vp_1t = VpOpts { seed, threads: 1, ..Default::default() };
+    let vp_mt = VpOpts { seed, threads: 0, ..Default::default() };
+
+    let reps = headline_reps(smoke);
+    let (p_ref, t_ref) = timed_min(reps, || {
+        let mut p = part0.clone();
+        reference::kway_refine(&tg, &mut p, k, &vp_1t);
+        p
+    });
+    let (p_1t, t_1t) = timed_min(reps, || {
+        let mut p = part0.clone();
+        vertex::kway_refine(&tg, &mut p, k, &vp_1t);
+        p
+    });
+    let (p_mt, t_mt) = timed_min(reps, || {
+        let mut p = part0.clone();
+        vertex::kway_refine(&tg, &mut p, k, &vp_mt);
+        p
+    });
+    assert_eq!(p_1t, p_mt, "thread count must not change kway_refine");
+
+    let cut_ref = tg.edge_cut_par(&p_ref, 0);
+    let cut_new = tg.edge_cut_par(&p_1t, 0);
+    let s1 = t_ref.as_secs_f64() / t_1t.as_secs_f64().max(1e-9);
+    let smt = t_ref.as_secs_f64() / t_mt.as_secs_f64().max(1e-9);
+    println!("  start cut: {cut0}");
+    println!("  seed full-scan refine:   {:>10.3}s  cut={cut_ref}", t_ref.as_secs_f64());
+    println!("  gain buckets, 1 thread:  {:>10.3}s  cut={cut_new}  speedup={s1:.2}x", t_1t.as_secs_f64());
+    println!("  gain buckets, all cores: {:>10.3}s  speedup={smt:.2}x", t_mt.as_secs_f64());
+
+    r.int("kway_tasks", tg.n as u64)
+        .int("kway_start_cut", cut0 as u64)
+        .num("kway_refine_ref_secs", t_ref.as_secs_f64())
+        .num("kway_refine_new_secs", t_1t.as_secs_f64())
+        .num("kway_refine_new_mt_secs", t_mt.as_secs_f64())
+        .num("kway_refine_speedup", s1)
+        .num("kway_refine_mt_speedup", smt)
+        .int("kway_ref_cut", cut_ref as u64)
+        .int("kway_new_cut", cut_new as u64)
+        .num("kway_cut_ratio_new_over_ref", cut_new as f64 / (cut_ref.max(1)) as f64);
 }
 
 fn main() {
     let seed = 42;
 
-    perf_headline(seed);
+    let mut report = JsonReport::new();
+    perf_headline(seed, &mut report);
+    kway_refine_headline(seed, &mut report);
+    match report.write("BENCH_partition.json") {
+        Ok(()) => println!("\n  baseline written to BENCH_partition.json\n"),
+        Err(e) => println!("\n  WARNING: could not write BENCH_partition.json: {e}\n"),
+    }
 
     println!("## partitioner micro-benchmarks (per-call latency)\n");
     for (name, a) in [

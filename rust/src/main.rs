@@ -74,6 +74,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("cg") => cmd_cg(&flags, seed),
         Some("simulate") => cmd_simulate(&flags, seed),
         Some("bench") => cmd_bench(pos.get(1).map(String::as_str).unwrap_or("all"), seed),
+        Some("bench-compare") => cmd_bench_compare(&pos, &flags),
         Some("info") => cmd_info(),
         _ => {
             println!(
@@ -82,6 +83,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                  epgraph cg --matrix <name|poisson:side> [--block N] [--iters N] [--wait]\n  \
                  epgraph simulate --app <b+tree|bfs|cfd|gaussian|particlefilter|streamcluster> [--block N]\n  \
                  epgraph bench <fig4|fig6|table2|fig10|fig11|fig12|table3|fig13|fig14|fig15|ablation|scaling|headline|all>\n  \
+                 epgraph bench-compare <baseline.json> <current.json> [--tol 0.25]\n  \
                  epgraph info"
             );
             Ok(())
@@ -243,6 +245,39 @@ fn cmd_bench(which: &str, seed: u64) -> Result<()> {
         other => return Err(anyhow!("unknown bench target '{other}'")),
     }
     Ok(())
+}
+
+/// CI bench-regression gate: compare a fresh BENCH_partition.json
+/// against the committed baseline; exit non-zero on a >tol regression
+/// of any ratio-style headline metric (see benchkit::compare_baselines).
+fn cmd_bench_compare(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    let usage = "usage: epgraph bench-compare <baseline.json> <current.json> [--tol 0.25]";
+    let base_path = pos.get(1).ok_or_else(|| anyhow!("{usage}"))?;
+    let cur_path = pos.get(2).ok_or_else(|| anyhow!("{usage}"))?;
+    let tol = flags
+        .get("tol")
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(0.25);
+    if !std::path::Path::new(base_path.as_str()).exists() {
+        println!(
+            "bench-compare: no committed baseline at {base_path} — bootstrap run, gate skipped \
+             (commit the bench artifact as the baseline to arm it)"
+        );
+        return Ok(());
+    }
+    let base = std::fs::read_to_string(base_path)
+        .map_err(|e| anyhow!("read {base_path}: {e}"))?;
+    let cur = std::fs::read_to_string(cur_path).map_err(|e| anyhow!("read {cur_path}: {e}"))?;
+    match epgraph::util::benchkit::compare_baselines(&base, &cur, tol) {
+        Ok(lines) => {
+            println!("bench-compare: {base_path} vs {cur_path} (tol {:.0}%)", tol * 100.0);
+            for l in lines {
+                println!("  {l}");
+            }
+            Ok(())
+        }
+        Err(msg) => Err(anyhow!("{msg}")),
+    }
 }
 
 fn cmd_info() -> Result<()> {

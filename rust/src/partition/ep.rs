@@ -33,7 +33,9 @@ pub const ORIG_EDGE_WEIGHT: i64 = 1 << 40;
 
 /// Below this many tasks, recursive bisection is used even when
 /// `fast_kway` is set (it is cheap there and noticeably better on small
-/// meshes); above it, the single-coarsening k-way scheme wins on time.
+/// meshes); above it, the single-coarsening k-way scheme — whose
+/// uncoarsening now runs the gain-bucket k-way FM refinement
+/// (`vertex::kway_refine_ws`, PERF.md §3) — wins on time.
 pub const FAST_KWAY_MIN_TASKS: usize = 200_000;
 
 /// How a vertex's clones are chained (ablation: the paper claims any
@@ -285,9 +287,11 @@ pub fn rebalance_to_cap(g: &Graph, p: &mut EdgePartition, cap: usize) {
 
 /// Auxiliary-edge cut cost of a task-graph partition — the quantity
 /// Theorem 1 upper-bounds the reconstructed vertex-cut cost with.
+/// Cut accounting runs on the deterministic parallel reduction
+/// (`edge_cut_par`), bit-identical to the sequential sum.
 pub fn aux_cut_cost(g: &Graph, p: &EdgePartition, chain: ChainOrder, seed: u64) -> u64 {
     let tg = task_graph(g, chain, seed);
-    tg.edge_cut(&p.assign) as u64
+    tg.edge_cut_par(&p.assign, 0) as u64
 }
 
 #[cfg(test)]

@@ -20,7 +20,7 @@ pub mod reference;
 pub mod special;
 pub mod vertex;
 
-pub use quality::{balance_factor, vertex_cut_cost, EdgePartition};
+pub use quality::{balance_factor, vertex_cut_cost, vertex_cut_cost_par, EdgePartition};
 
 /// Which partitioning method to use — the CLI / bench-facing selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -6,6 +6,7 @@
 //!   reports METIS-style partitions stay below 1.03.
 
 use crate::graph::Graph;
+use crate::util::par;
 
 /// An assignment of every task (edge) to one of k blocks.
 #[derive(Clone, Debug)]
@@ -35,10 +36,32 @@ impl EdgePartition {
 /// tasks (Definition 2).  Equals the number of redundant data loads.
 pub fn vertex_cut_cost(g: &Graph, p: &EdgePartition) -> u64 {
     assert_eq!(p.assign.len(), g.m(), "assignment arity");
+    cut_cost_range(g, p, 0, g.n)
+}
+
+/// Parallel `vertex_cut_cost`: the per-vertex sum is split over fixed
+/// vertex ranges (a pure function of `(n, threads)`), each worker owns a
+/// private seen-stamp array, and the partials are added in range order —
+/// bit-identical to the sequential sum for every thread count.
+pub fn vertex_cut_cost_par(g: &Graph, p: &EdgePartition, threads: usize) -> u64 {
+    assert_eq!(p.assign.len(), g.m(), "assignment arity");
+    let t = par::resolve_threads(threads);
+    if t <= 1 || g.n < par::PAR_MIN_LEN {
+        return cut_cost_range(g, p, 0, g.n);
+    }
+    let ranges = par::chunk_ranges(g.n, t);
+    let partials = par::run_tasks(t, ranges.len(), |i| {
+        let (lo, hi) = ranges[i];
+        cut_cost_range(g, p, lo, hi)
+    });
+    partials.iter().sum()
+}
+
+fn cut_cost_range(g: &Graph, p: &EdgePartition, lo: usize, hi: usize) -> u64 {
     let mut cost = 0u64;
     // epoch-stamped seen-array: O(Σ deg) total, no hashing
     let mut seen = vec![u32::MAX; p.k];
-    for v in 0..g.n as u32 {
+    for v in lo as u32..hi as u32 {
         let inc = g.incident(v);
         if inc.is_empty() {
             continue;
@@ -142,5 +165,17 @@ mod tests {
     fn balance_factor_detects_imbalance() {
         let p = EdgePartition::new(2, vec![0, 0, 0, 1]);
         assert_eq!(balance_factor(&p), 1.5);
+    }
+
+    #[test]
+    fn parallel_cut_cost_matches_sequential() {
+        // large enough to cross PAR_MIN_LEN so the parallel path runs
+        let g = gen::cfd_mesh(80, 80, 9);
+        let k = 16;
+        let p = EdgePartition::new(k, (0..g.m()).map(|e| (e % k) as u32).collect());
+        let seq = vertex_cut_cost(&g, &p);
+        for t in [1, 2, 4, 8] {
+            assert_eq!(vertex_cut_cost_par(&g, &p, t), seq, "threads={t}");
+        }
     }
 }

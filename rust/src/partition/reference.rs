@@ -153,7 +153,10 @@ pub fn partition_kway_naive(g: &WGraph, k: usize, opts: &VpOpts) -> Vec<u32> {
     part
 }
 
-fn kway_balance(g: &WGraph, part: &mut [u32], k: usize, eps: f64) {
+/// Seed k-way balance (full-vertex rescan per call) — public only so
+/// `benches/partition.rs` can time it against the gain-bucket rewrite;
+/// the algorithm is frozen.
+pub fn kway_balance(g: &WGraph, part: &mut [u32], k: usize, eps: f64) {
     let total = g.total_vwgt();
     let cap = ((total as f64 / k as f64) * (1.0 + eps)).ceil() as i64;
     let mut loads = vec![0i64; k];
@@ -241,7 +244,10 @@ fn kway_balance(g: &WGraph, part: &mut [u32], k: usize, eps: f64) {
     }
 }
 
-fn kway_refine(g: &WGraph, part: &mut [u32], k: usize, opts: &VpOpts) {
+/// Seed k-way refinement (sequential O(n·passes) full-vertex sweeps) —
+/// public only so `benches/partition.rs` and `tests/perf_parity.rs` can
+/// compare it against the gain-bucket rewrite; the algorithm is frozen.
+pub fn kway_refine(g: &WGraph, part: &mut [u32], k: usize, opts: &VpOpts) {
     let total = g.total_vwgt();
     let max_vw = g.vwgt.iter().copied().max().unwrap_or(0);
     let cap = ((total as f64 / k as f64) * (1.0 + opts.eps)) as i64 + max_vw;

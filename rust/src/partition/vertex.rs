@@ -145,8 +145,30 @@ impl WGraph {
 
     /// Sum of weights of edges whose endpoints lie in different parts.
     pub fn edge_cut(&self, part: &[u32]) -> i64 {
+        self.cut_range(part, 0, self.n)
+    }
+
+    /// Parallel `edge_cut`: deterministic chunked reduction — the vertex
+    /// range is split into fixed chunks (a pure function of `(n,
+    /// threads)`), each worker sums its chunk, and the partials are added
+    /// in chunk order, so the result is bit-identical to the sequential
+    /// sum for every thread count.
+    pub fn edge_cut_par(&self, part: &[u32], threads: usize) -> i64 {
+        let t = par::resolve_threads(threads);
+        if t <= 1 || self.n < par::PAR_MIN_LEN {
+            return self.edge_cut(part);
+        }
+        let ranges = par::chunk_ranges(self.n, t);
+        let partials = par::run_tasks(t, ranges.len(), |i| {
+            let (lo, hi) = ranges[i];
+            self.cut_range(part, lo, hi)
+        });
+        partials.iter().sum()
+    }
+
+    fn cut_range(&self, part: &[u32], lo: usize, hi: usize) -> i64 {
         let mut cut = 0i64;
-        for v in 0..self.n as u32 {
+        for v in lo as u32..hi as u32 {
             for (u, w) in self.neighbors(v) {
                 if u > v && part[u as usize] != part[v as usize] {
                     cut += w;
@@ -154,6 +176,37 @@ impl WGraph {
             }
         }
         cut
+    }
+
+    /// Per-block vertex-weight sums (k-way load accounting), parallel by
+    /// the same deterministic chunked reduction as `edge_cut_par`
+    /// (per-chunk k-vectors merged in chunk order; i64 addition is
+    /// associative, so the result never depends on the thread count).
+    pub fn block_weights(&self, part: &[u32], k: usize, threads: usize) -> Vec<i64> {
+        let t = par::resolve_threads(threads);
+        if t <= 1 || self.n < par::PAR_MIN_LEN {
+            let mut loads = vec![0i64; k];
+            for v in 0..self.n {
+                loads[part[v] as usize] += self.vwgt[v];
+            }
+            return loads;
+        }
+        let ranges = par::chunk_ranges(self.n, t);
+        let partials = par::run_tasks(t, ranges.len(), |i| {
+            let (lo, hi) = ranges[i];
+            let mut loads = vec![0i64; k];
+            for v in lo..hi {
+                loads[part[v] as usize] += self.vwgt[v];
+            }
+            loads
+        });
+        let mut loads = vec![0i64; k];
+        for p in &partials {
+            for (l, x) in loads.iter_mut().zip(p) {
+                *l += x;
+            }
+        }
+        loads
     }
 }
 
@@ -214,7 +267,9 @@ fn derive_seed(seed: u64, salt: u64) -> u64 {
 // -------------------------------------------------------------- workspace
 
 /// Arena of scratch buffers reused across multilevel phases so the
-/// coarsening chain allocates nothing per level beyond its outputs.
+/// coarsening chain and every refinement pass allocate nothing per
+/// level beyond their outputs.  Buffers grow once (to the finest
+/// level's size) and are reused cleared at every coarser level.
 #[derive(Default)]
 pub struct VpWorkspace {
     // matching
@@ -228,6 +283,28 @@ pub struct VpWorkspace {
     cursor: Vec<u32>,
     stamp: Vec<u32>,
     pos: Vec<u32>,
+    // k-way refinement: sparse per-vertex block-connectivity arena
+    // (CSR layout, capacity min(deg, k) per vertex), per-block gain
+    // buckets, and the hill-climb bookkeeping
+    conn_ptr: Vec<u32>,
+    conn_blk: Vec<u32>,
+    conn_wgt: Vec<i64>,
+    conn_len: Vec<u32>,
+    kgain: Vec<i64>,
+    kbuckets: KwayBuckets,
+    klocked: Vec<u32>,
+    ktouch: Vec<u32>,
+    ktouched: Vec<u32>,
+    kdropped: Vec<u32>,
+    kmoves: Vec<(u32, u32)>,
+    // 2-way FM refinement
+    fm_gain: Vec<i64>,
+    fm_moved: Vec<bool>,
+    fm_moves: Vec<u32>,
+    fm_buckets: [GainBuckets; 2],
+    // GGGP scratch for the sequential path (parallel restarts carry
+    // per-worker scratch instead; see initial_bisection)
+    gggp: GggpScratch,
 }
 
 impl VpWorkspace {
@@ -237,7 +314,7 @@ impl VpWorkspace {
 }
 
 /// Reset `buf` to `len` copies of `fill` without shrinking capacity.
-fn reset(buf: &mut Vec<u32>, len: usize, fill: u32) {
+fn reset<T: Clone>(buf: &mut Vec<T>, len: usize, fill: T) {
     buf.clear();
     buf.resize(len, fill);
 }
@@ -526,6 +603,10 @@ const NONE: u32 = u32::MAX;
 
 /// Doubly-linked gain buckets — the classic Fiduccia–Mattheyses
 /// structure: O(1) insert/remove/update, O(1) amortized best-move pop.
+/// `Default` + `ensure` allow pooling inside `VpWorkspace`: buffers grow
+/// to the finest level once and are reused (cleared, never reallocated)
+/// at every coarser level.
+#[derive(Default)]
 struct GainBuckets {
     head: Vec<u32>,
     next: Vec<u32>,
@@ -537,15 +618,23 @@ struct GainBuckets {
 
 impl GainBuckets {
     fn new(n: usize) -> Self {
+        let mut b = GainBuckets::default();
+        b.ensure(n);
+        b
+    }
+
+    /// Grow (never shrink) to hold vertices `0..n`, cleared.
+    fn ensure(&mut self, n: usize) {
         let nb = (2 * GAIN_CLAMP + 1) as usize;
-        GainBuckets {
-            head: vec![NONE; nb],
-            next: vec![NONE; n],
-            prev: vec![NONE; n],
-            bucket: vec![NONE; n],
-            cur_max: 0,
-            len: 0,
+        reset(&mut self.head, nb, NONE);
+        if self.next.len() < n {
+            self.next.resize(n, NONE);
+            self.prev.resize(n, NONE);
         }
+        let cap = self.bucket.len().max(n);
+        reset(&mut self.bucket, cap, NONE);
+        self.cur_max = 0;
+        self.len = 0;
     }
 
     fn clear(&mut self) {
@@ -630,6 +719,148 @@ impl GainBuckets {
     }
 }
 
+// ----------------------------------------------------- k-way gain buckets
+
+/// Bucket span for the k-way structure.  Smaller than the 2-way clamp:
+/// task-graph gains are tiny (unit aux weights), and the per-block head
+/// arrays cost O(k · span).  Clamping only coarsens extraction order
+/// among extreme gains — the true i64 gain lives in `VpWorkspace::kgain`
+/// (and is recomputed exactly at pop time), so cut accounting stays
+/// exact (same scheme as `GainBuckets`).
+const KWAY_GAIN_CLAMP: i64 = 1024;
+const KWAY_NB: usize = (2 * KWAY_GAIN_CLAMP + 1) as usize;
+
+/// Per-block Fiduccia–Mattheyses gain buckets — `GainBuckets`
+/// generalized to k target blocks.  Each block owns its own bucket-head
+/// array (so "best move out of block b" is O(1) amortized), while the
+/// doubly-linked node storage (`next`/`prev`/`slot`) is shared across
+/// blocks: a vertex sits in at most one block's structure at a time, so
+/// memory is O(n + k · span) instead of O(k · n).  Pooled in
+/// `VpWorkspace`; `ensure` grows once for the finest level.
+#[derive(Default)]
+struct KwayBuckets {
+    k: usize,
+    /// `head[b * KWAY_NB + s]` = first vertex in block b's bucket s.
+    head: Vec<u32>,
+    /// Per block: highest possibly-non-empty bucket (decays on peek).
+    cur_max: Vec<u32>,
+    /// Per block: number of vertices currently in its structure.
+    len: Vec<u32>,
+    next: Vec<u32>,
+    prev: Vec<u32>,
+    /// Global slot `b * KWAY_NB + s`, or NONE when absent.
+    slot: Vec<u32>,
+}
+
+impl KwayBuckets {
+    #[inline]
+    fn idx(gain: i64) -> usize {
+        (gain.clamp(-KWAY_GAIN_CLAMP, KWAY_GAIN_CLAMP) + KWAY_GAIN_CLAMP) as usize
+    }
+
+    /// Grow (never shrink) to k blocks over vertices `0..n`, cleared.
+    fn ensure(&mut self, k: usize, n: usize) {
+        self.k = k;
+        let hn = self.head.len().max(k * KWAY_NB);
+        reset(&mut self.head, hn, NONE);
+        let ck = self.cur_max.len().max(k);
+        reset(&mut self.cur_max, ck, 0);
+        let lk = self.len.len().max(k);
+        reset(&mut self.len, lk, 0);
+        if self.next.len() < n {
+            self.next.resize(n, NONE);
+            self.prev.resize(n, NONE);
+        }
+        let sn = self.slot.len().max(n);
+        reset(&mut self.slot, sn, NONE);
+    }
+
+    #[inline]
+    fn contains(&self, v: u32) -> bool {
+        self.slot[v as usize] != NONE
+    }
+
+    fn insert(&mut self, b: usize, v: u32, gain: i64) {
+        debug_assert!(!self.contains(v));
+        let s = Self::idx(gain);
+        let slot = b * KWAY_NB + s;
+        let h = self.head[slot];
+        self.next[v as usize] = h;
+        self.prev[v as usize] = NONE;
+        if h != NONE {
+            self.prev[h as usize] = v;
+        }
+        self.head[slot] = v;
+        self.slot[v as usize] = slot as u32;
+        if s as u32 > self.cur_max[b] {
+            self.cur_max[b] = s as u32;
+        }
+        self.len[b] += 1;
+    }
+
+    fn remove(&mut self, v: u32) {
+        let slot = self.slot[v as usize];
+        debug_assert!(slot != NONE);
+        let b = slot as usize / KWAY_NB;
+        let (p, n) = (self.prev[v as usize], self.next[v as usize]);
+        if p != NONE {
+            self.next[p as usize] = n;
+        } else {
+            self.head[slot as usize] = n;
+        }
+        if n != NONE {
+            self.prev[n as usize] = p;
+        }
+        self.slot[v as usize] = NONE;
+        self.len[b] -= 1;
+    }
+
+    /// Re-bucket `v` (which must be present, in block `b`) under a new
+    /// gain; no-op when the bucket is unchanged.
+    fn update(&mut self, b: usize, v: u32, gain: i64) {
+        let slot = (b * KWAY_NB + Self::idx(gain)) as u32;
+        if self.slot[v as usize] == slot {
+            return;
+        }
+        self.remove(v);
+        self.insert(b, v, gain);
+    }
+
+    /// Highest-gain vertex of block `b` plus its bucket index, without
+    /// removing it (LIFO within a bucket).
+    fn peek_max(&mut self, b: usize) -> Option<(u32, u32)> {
+        if self.len[b] == 0 {
+            return None;
+        }
+        loop {
+            let s = self.cur_max[b];
+            let h = self.head[b * KWAY_NB + s as usize];
+            if h != NONE {
+                return Some((h, s));
+            }
+            if s == 0 {
+                return None;
+            }
+            self.cur_max[b] -= 1;
+        }
+    }
+
+    /// Best (vertex, block) across all blocks, ordered by bucket index
+    /// with ties to the smaller block id — a fixed rule, so extraction
+    /// order (and hence the whole refinement) is deterministic.
+    fn peek_best(&mut self) -> Option<(u32, usize)> {
+        let mut best: Option<(u32, u32, usize)> = None; // (bucket, v, b)
+        for b in 0..self.k {
+            if let Some((v, s)) = self.peek_max(b) {
+                if best.map_or(true, |(bs, _, _)| s > bs) {
+                    best = Some((s, v, b));
+                }
+            }
+        }
+        best.map(|(_, v, b)| (v, b))
+    }
+}
+
 // ------------------------------------------------------------ k-way driver
 
 /// k-way balanced partition — the production path.
@@ -647,11 +878,19 @@ pub fn partition_kway(g: &WGraph, k: usize, opts: &VpOpts) -> Vec<u32> {
     let threads = par::resolve_threads(opts.threads);
     let coarse_target = (opts.coarsen_to.max(8) * k / 2).max(128);
     let mut ws = VpWorkspace::new();
+    // size the refinement arenas for the finest level up front: the
+    // uncoarsening chain then reuses capacity instead of growing per level
+    ws.reserve_kway(g, k);
     let (mut levels, cur) =
         coarsen_chain(g, coarse_target, opts, derive_seed(opts.seed, 0xC0A55E), threads, &mut ws);
     // --- initial k-way partition: recursive bisection on the coarse graph ---
     let mut part = partition_kway_rb(&cur, k, opts);
-    kway_refine(&cur, &mut part, k, opts);
+    // Block weights are computed exactly once, here, and carried
+    // incrementally through every refine/balance move below.  Projection
+    // preserves them (a coarse vertex's weight is the sum of its fine
+    // vertices'), so no level ever rescans the partition for loads.
+    let mut loads = cur.block_weights(&part, k, threads);
+    kway_refine_ws(&cur, &mut part, k, opts, threads, &mut loads, &mut ws);
     // --- uncoarsen with k-way refinement ---
     let mut cur = cur;
     while let Some((finer, cmap)) = levels.pop() {
@@ -661,14 +900,15 @@ pub fn partition_kway(g: &WGraph, k: usize, opts: &VpOpts) -> Vec<u32> {
             par::fill_indexed(threads, &mut fine, |v| part_ref[cmap[v] as usize]);
         }
         part = fine;
-        kway_refine(&finer, &mut part, k, opts);
+        kway_refine_ws(&finer, &mut part, k, opts, threads, &mut loads, &mut ws);
         cur = finer;
     }
     // --- final strict balance (coarse-level moves can strand imbalance),
     // then one more refine pass to recover quality lost to evictions
-    kway_balance(&cur, &mut part, k, opts.eps);
-    kway_refine(&cur, &mut part, k, &VpOpts { fm_passes: 1, ..opts.clone() });
-    kway_balance(&cur, &mut part, k, opts.eps);
+    kway_balance_ws(&cur, &mut part, k, opts.eps, threads, &mut loads, &mut ws);
+    let recover = VpOpts { fm_passes: 1, ..opts.clone() };
+    kway_refine_ws(&cur, &mut part, k, &recover, threads, &mut loads, &mut ws);
+    kway_balance_ws(&cur, &mut part, k, opts.eps, threads, &mut loads, &mut ws);
     part
 }
 
@@ -703,171 +943,531 @@ fn coarsen_chain(
     (levels, cur)
 }
 
-/// Enforce the balance cap on the finest level: evict the
-/// least-connectivity-loss vertices from overloaded blocks into the
-/// most-affine underloaded block.
-fn kway_balance(g: &WGraph, part: &mut [u32], k: usize, eps: f64) {
-    let total = g.total_vwgt();
-    let cap = ((total as f64 / k as f64) * (1.0 + eps)).ceil() as i64;
-    let mut loads = vec![0i64; k];
-    for v in 0..g.n {
-        loads[part[v] as usize] += g.vwgt[v];
-    }
-    // visit-counter epochs, NOT vertex ids: id-epochs collide when the
-    // ranking loop below runs again for a second overloaded block,
-    // leaving stale wsum values in the cost computation.
-    let mut wsum = vec![0i64; k];
-    let mut stamp = vec![0u64; k];
-    let mut epoch = 0u64;
-    let mut touched: Vec<usize> = Vec::with_capacity(k);
-    // process each overloaded block once: rank its vertices by eviction
-    // cost, evict cheapest-first until the block fits (O(n log n) total)
-    let overloaded: Vec<usize> = (0..k).filter(|&b| loads[b] > cap).collect();
-    for from in overloaded {
-        if loads[from] <= cap {
-            continue;
+// ------------------------------------------------- k-way FM refinement
+//
+// The k-way half of the FM story (PERF.md "k-way gain-bucket
+// refinement").  Replaces the seed's O(n · passes) full-vertex greedy
+// sweeps with boundary-only hill-climbing on per-block gain buckets:
+//
+//   * a sparse per-vertex block-connectivity arena (CSR layout, capacity
+//     min(deg, k) per vertex) is built ONCE per level by a parallel
+//     pure fill, then maintained *exactly* through every committed move
+//     and every rollback — no rescan, ever;
+//   * `KwayBuckets` orders boundary vertices by best-move gain per
+//     source block with O(1) update and O(k) best-move extraction;
+//   * each pass hill-climbs (negative-gain moves allowed, each vertex
+//     moved at most once per pass) and rolls back to the best prefix,
+//     so the cut never increases across a pass;
+//   * block weights are carried incrementally through the whole
+//     refine/balance/refine sequence (and across levels — projection
+//     preserves them), replacing the seed's per-call O(n) load scans.
+//
+// The climb itself is sequential (moves are order-dependent); every
+// parallel piece is a pure fill or a deterministic chunked reduction,
+// so results are bit-identical for every thread count.
+
+impl VpWorkspace {
+    /// Pre-size the k-way refinement arenas for graph `g` so coarser
+    /// levels (which are strictly smaller) reuse capacity.
+    fn reserve_kway(&mut self, g: &WGraph, k: usize) {
+        let n = g.n;
+        let mut cap = 0usize;
+        for v in 0..n {
+            cap += ((g.xadj[v + 1] - g.xadj[v]) as usize).min(k);
         }
-        // (cost, v, preferred target) for every vertex of `from`
-        let mut evictable: Vec<(i64, u32, usize)> = Vec::new();
-        for v in 0..g.n as u32 {
-            if part[v as usize] != from as u32 {
+        self.conn_ptr.reserve(n + 1);
+        self.conn_blk.reserve(cap);
+        self.conn_wgt.reserve(cap);
+        self.conn_len.reserve(n);
+        self.kgain.reserve(n);
+        self.klocked.reserve(n);
+        self.ktouch.reserve(n);
+        self.kbuckets.ensure(k, n);
+    }
+
+    /// Pre-size the 2-way FM buffers for the finest level of a bisection.
+    fn reserve_fm(&mut self, n: usize) {
+        self.fm_gain.reserve(n);
+        self.fm_moved.reserve(n);
+        self.fm_buckets[0].ensure(n);
+        self.fm_buckets[1].ensure(n);
+    }
+}
+
+/// Build the block-connectivity arena for `part`: for every vertex, the
+/// list of (block, summed edge weight to that block) over its neighbors,
+/// own block included.  List capacity is min(deg, k) — an upper bound on
+/// the distinct blocks a vertex can ever see — which also bounds every
+/// later incremental update.  Parallel over disjoint vertex ranges
+/// (each range owns a disjoint arena slice); pure in `(g, part)`.
+fn build_conn(g: &WGraph, part: &[u32], k: usize, threads: usize, ws: &mut VpWorkspace) {
+    let n = g.n;
+    reset(&mut ws.conn_ptr, n + 1, 0);
+    for v in 0..n {
+        let deg = ((g.xadj[v + 1] - g.xadj[v]) as usize).min(k) as u32;
+        ws.conn_ptr[v + 1] = ws.conn_ptr[v] + deg;
+    }
+    let total = ws.conn_ptr[n] as usize;
+    reset(&mut ws.conn_blk, total, 0);
+    reset(&mut ws.conn_wgt, total, 0);
+    reset(&mut ws.conn_len, n, 0);
+
+    let conn_ptr = &ws.conn_ptr;
+    let fill = |blk: &mut [u32], wgt: &mut [i64], len: &mut [u32], lo: usize, hi: usize| {
+        let base = conn_ptr[lo] as usize;
+        for v in lo..hi {
+            let off = conn_ptr[v] as usize - base;
+            let mut l = 0usize;
+            for (u, w) in g.neighbors(v as u32) {
+                let b = part[u as usize];
+                // linear probe — lists hold at most min(deg, k) entries
+                let mut i = 0;
+                while i < l && blk[off + i] != b {
+                    i += 1;
+                }
+                if i < l {
+                    wgt[off + i] += w;
+                } else {
+                    blk[off + l] = b;
+                    wgt[off + l] = w;
+                    l += 1;
+                }
+            }
+            len[v - lo] = l as u32;
+        }
+    };
+    let t = par::resolve_threads(threads);
+    if t <= 1 || n < par::PAR_MIN_LEN {
+        fill(&mut ws.conn_blk, &mut ws.conn_wgt, &mut ws.conn_len, 0, n);
+    } else {
+        // split the vertex range and the arena at the same boundaries
+        // (conn_ptr is monotone), so workers own disjoint slices
+        let ranges = par::chunk_ranges(n, t);
+        std::thread::scope(|s| {
+            let mut rest_b: &mut [u32] = &mut ws.conn_blk;
+            let mut rest_w: &mut [i64] = &mut ws.conn_wgt;
+            let mut rest_l: &mut [u32] = &mut ws.conn_len;
+            let mut off = 0usize;
+            for &(lo, hi) in &ranges {
+                let end = conn_ptr[hi] as usize;
+                let (cb, tb) = std::mem::take(&mut rest_b).split_at_mut(end - off);
+                let (cw, tw) = std::mem::take(&mut rest_w).split_at_mut(end - off);
+                let (cl, tl) = std::mem::take(&mut rest_l).split_at_mut(hi - lo);
+                rest_b = tb;
+                rest_w = tw;
+                rest_l = tl;
+                off = end;
+                let fill = &fill;
+                s.spawn(move || fill(cb, cw, cl, lo, hi));
+            }
+        });
+    }
+}
+
+/// Best-move gain of `v` given its conn list: heaviest external
+/// connectivity minus own-block connectivity, or `i64::MIN` when the
+/// vertex has no external neighbor (interior — not a move candidate).
+fn best_gain(blk: &[u32], wgt: &[i64], from: u32) -> i64 {
+    let mut own = 0i64;
+    let mut ext = i64::MIN;
+    for (&b, &w) in blk.iter().zip(wgt) {
+        if b == from {
+            own = w;
+        } else if w > ext {
+            ext = w;
+        }
+    }
+    if ext == i64::MIN {
+        i64::MIN
+    } else {
+        ext - own
+    }
+}
+
+/// Like `best_gain`, but interior vertices get `-own` instead of MIN —
+/// eviction during balancing must rank vertices with no external
+/// neighbor too (their cost is their whole internal connectivity).
+fn evict_gain(blk: &[u32], wgt: &[i64], from: u32) -> i64 {
+    let bg = best_gain(blk, wgt, from);
+    if bg != i64::MIN {
+        return bg;
+    }
+    let mut own = 0i64;
+    for (&b, &w) in blk.iter().zip(wgt) {
+        if b == from {
+            own = w;
+        }
+    }
+    -own
+}
+
+/// Shift weight `w` of one incident edge from block `f` to block `t` in
+/// vertex `u`'s conn list (u's *neighbor* moved; u did not).
+/// Decrement-before-append keeps the list within its capacity: the list
+/// length always equals the number of distinct adjacent blocks.
+fn conn_shift_one(ws: &mut VpWorkspace, u: usize, f: u32, t: u32, w: i64) {
+    let off = ws.conn_ptr[u] as usize;
+    let mut l = ws.conn_len[u] as usize;
+    let mut i = 0;
+    while i < l {
+        if ws.conn_blk[off + i] == f {
+            ws.conn_wgt[off + i] -= w;
+            if ws.conn_wgt[off + i] == 0 {
+                l -= 1;
+                ws.conn_blk.swap(off + i, off + l);
+                ws.conn_wgt.swap(off + i, off + l);
+            }
+            break;
+        }
+        i += 1;
+    }
+    let mut j = 0;
+    while j < l && ws.conn_blk[off + j] != t {
+        j += 1;
+    }
+    if j < l {
+        ws.conn_wgt[off + j] += w;
+    } else {
+        ws.conn_blk[off + l] = t;
+        ws.conn_wgt[off + l] = w;
+        l += 1;
+    }
+    ws.conn_len[u] = l as u32;
+}
+
+/// Recompute `v`'s gain from its (exact) conn list and fix its bucket
+/// membership — insert if it became boundary, re-bucket if its gain or
+/// block changed, remove if it became interior.
+fn refresh_vertex(ws: &mut VpWorkspace, v: u32, part: &[u32]) {
+    let vi = v as usize;
+    let off = ws.conn_ptr[vi] as usize;
+    let l = ws.conn_len[vi] as usize;
+    let gn = best_gain(&ws.conn_blk[off..off + l], &ws.conn_wgt[off..off + l], part[vi]);
+    ws.kgain[vi] = gn;
+    let b = part[vi] as usize;
+    if ws.kbuckets.contains(v) {
+        if gn == i64::MIN {
+            ws.kbuckets.remove(v);
+        } else {
+            ws.kbuckets.update(b, v, gn);
+        }
+    } else if gn != i64::MIN {
+        ws.kbuckets.insert(b, v, gn);
+    }
+}
+
+#[inline]
+fn touch(ws: &mut VpWorkspace, v: u32, pass: u32) {
+    if ws.ktouch[v as usize] != pass {
+        ws.ktouch[v as usize] = pass;
+        ws.ktouched.push(v);
+    }
+}
+
+/// k-way FM refinement on per-block gain buckets: hill-climbing with
+/// best-prefix rollback per pass, exact incremental gain maintenance on
+/// every committed (and rolled-back) move.  `loads` carries the block
+/// weights in and out.  Deterministic for every thread count.
+fn kway_refine_ws(
+    g: &WGraph,
+    part: &mut [u32],
+    k: usize,
+    opts: &VpOpts,
+    threads: usize,
+    loads: &mut [i64],
+    ws: &mut VpWorkspace,
+) {
+    let n = g.n;
+    if n == 0 || k <= 1 || opts.fm_passes == 0 {
+        return;
+    }
+    let total: i64 = loads.iter().sum();
+    let max_vw = g.vwgt.iter().copied().max().unwrap_or(0);
+    let cap = ((total as f64 / k as f64) * (1.0 + opts.eps)) as i64 + max_vw;
+
+    build_conn(g, part, k, threads, ws);
+    // gains: parallel pure fill off the freshly built conn arena
+    reset(&mut ws.kgain, n, 0);
+    {
+        let (cp, cb, cw, cl) = (&ws.conn_ptr, &ws.conn_blk, &ws.conn_wgt, &ws.conn_len);
+        let part_ref: &[u32] = part;
+        par::fill_indexed(threads, &mut ws.kgain[..n], |v| {
+            let off = cp[v] as usize;
+            let l = cl[v] as usize;
+            best_gain(&cb[off..off + l], &cw[off..off + l], part_ref[v])
+        });
+    }
+    ws.kbuckets.ensure(k, n);
+    for v in 0..n as u32 {
+        let gn = ws.kgain[v as usize];
+        if gn != i64::MIN {
+            ws.kbuckets.insert(part[v as usize] as usize, v, gn);
+        }
+    }
+    reset(&mut ws.klocked, n, 0);
+    reset(&mut ws.ktouch, n, 0);
+    ws.kdropped.clear();
+
+    let move_cap = (n / 2).max(64);
+    let passes = opts.fm_passes as u32;
+    for pass in 1..=passes {
+        ws.kmoves.clear();
+        ws.ktouched.clear();
+        let mut cur_delta = 0i64;
+        let mut best_delta = 0i64;
+        let mut best_prefix = 0usize;
+        loop {
+            let Some((v, from)) = ws.kbuckets.peek_best() else {
+                break;
+            };
+            let vi = v as usize;
+            debug_assert_eq!(from as u32, part[vi]);
+            let vw = g.vwgt[vi];
+            // best *feasible* target from the conn list (the bucket key
+            // is the unconstrained best; balance may force another)
+            let off = ws.conn_ptr[vi] as usize;
+            let l = ws.conn_len[vi] as usize;
+            let mut own = 0i64;
+            let mut best: Option<(i64, usize)> = None;
+            for i in off..off + l {
+                let b = ws.conn_blk[i] as usize;
+                if b == from {
+                    own = ws.conn_wgt[i];
+                } else if loads[b] + vw <= cap {
+                    let w = ws.conn_wgt[i];
+                    if best.map_or(true, |(bw, bb)| w > bw || (w == bw && b < bb)) {
+                        best = Some((w, b));
+                    }
+                }
+            }
+            let Some((wext, to)) = best else {
+                // no feasible target right now — drop for this pass, but
+                // remember it: loads shift as the pass proceeds, so it is
+                // re-examined at the pass boundary (and may be re-inserted
+                // sooner by a neighbor update)
+                ws.kbuckets.remove(v);
+                ws.kdropped.push(v);
+                continue;
+            };
+            let gain = wext - own;
+            if gain < -(1 << 30) {
+                ws.kbuckets.remove(v); // never split a contracted heavy pair
+                ws.kdropped.push(v);
                 continue;
             }
-            epoch += 1;
-            touched.clear();
-            for (u, w) in g.neighbors(v) {
-                let b = part[u as usize] as usize;
-                if stamp[b] != epoch {
-                    stamp[b] = epoch;
-                    wsum[b] = 0;
-                    touched.push(b);
-                }
-                wsum[b] += w;
-            }
-            let w_int = if stamp[from] == epoch { wsum[from] } else { 0 };
-            let mut best: Option<(i64, usize)> = None;
-            for &b in &touched {
-                if b == from {
-                    continue;
-                }
-                let delta = w_int - wsum[b]; // cut increase (lower better)
-                if best.map_or(true, |(bd, _)| delta < bd) {
-                    best = Some((delta, b));
-                }
-            }
-            match best {
-                Some((d, b)) => evictable.push((d, v, b)),
-                None => evictable.push((w_int, v, usize::MAX)), // no adjacent block
-            }
-        }
-        evictable.sort_unstable();
-        let mut wsum2 = vec![0i64; k];
-        let mut stamp2 = vec![u32::MAX; k];
-        for (_, v, _) in evictable {
-            if loads[from] <= cap {
-                break;
-            }
-            let vw = g.vwgt[v as usize];
-            // recompute the best adjacent underloaded target now (the
-            // ranking used stale loads; the target must not)
-            touched.clear();
-            for (u, w) in g.neighbors(v) {
-                let b = part[u as usize] as usize;
-                if b == from {
-                    continue;
-                }
-                if stamp2[b] != v {
-                    stamp2[b] = v;
-                    wsum2[b] = 0;
-                    touched.push(b);
-                }
-                wsum2[b] += w;
-            }
-            let best = touched
-                .iter()
-                .copied()
-                .filter(|&b| loads[b] + vw <= cap)
-                .max_by_key(|&b| wsum2[b]);
-            let to = match best {
-                Some(b) => b,
-                None => {
-                    let lb = (0..k).min_by_key(|&b| loads[b]).unwrap();
-                    if lb == from || loads[lb] + vw > cap {
-                        continue;
-                    }
-                    lb
-                }
-            };
-            part[v as usize] = to as u32;
+            // commit the move
+            ws.kbuckets.remove(v);
+            ws.klocked[vi] = pass;
+            touch(ws, v, pass);
+            part[vi] = to as u32;
             loads[from] -= vw;
             loads[to] += vw;
+            cur_delta -= gain;
+            ws.kmoves.push((v, from as u32));
+            if cur_delta < best_delta {
+                best_delta = cur_delta;
+                best_prefix = ws.kmoves.len();
+            }
+            // exact incremental maintenance at every neighbor
+            for (u, w) in g.neighbors(v) {
+                let ui = u as usize;
+                conn_shift_one(ws, ui, from as u32, to as u32, w);
+                touch(ws, u, pass);
+                if ws.klocked[ui] != pass {
+                    refresh_vertex(ws, u, part);
+                }
+            }
+            if ws.kmoves.len() >= move_cap {
+                break;
+            }
+        }
+        // roll back past the best prefix, in reverse, with the same
+        // incremental conn updates — the arena stays exact
+        for i in (best_prefix..ws.kmoves.len()).rev() {
+            let (v, orig) = ws.kmoves[i];
+            let vi = v as usize;
+            let cur = part[vi];
+            part[vi] = orig;
+            let vw = g.vwgt[vi];
+            loads[cur as usize] -= vw;
+            loads[orig as usize] += vw;
+            for (u, w) in g.neighbors(v) {
+                conn_shift_one(ws, u as usize, cur, orig, w);
+            }
+        }
+        // refresh everything the pass touched or dropped: unlock, exact
+        // gain, correct bucket membership (everything else is already
+        // exact — no full-vertex scan between passes)
+        let touched = std::mem::take(&mut ws.ktouched);
+        for &v in &touched {
+            refresh_vertex(ws, v, part);
+        }
+        ws.ktouched = touched;
+        let dropped = std::mem::take(&mut ws.kdropped);
+        for &v in &dropped {
+            if !ws.kbuckets.contains(v) {
+                refresh_vertex(ws, v, part);
+            }
+        }
+        ws.kdropped = dropped;
+        ws.kdropped.clear();
+        if best_delta == 0 {
+            break;
         }
     }
 }
 
-/// Greedy k-way boundary refinement: move a vertex to the adjacent
-/// block with the largest positive edge-weight gain, subject to the
-/// balance cap.  A few passes; deterministic order.
-fn kway_refine(g: &WGraph, part: &mut [u32], k: usize, opts: &VpOpts) {
-    let total = g.total_vwgt();
-    let max_vw = g.vwgt.iter().copied().max().unwrap_or(0);
-    let cap = ((total as f64 / k as f64) * (1.0 + opts.eps)) as i64 + max_vw;
-    let mut loads = vec![0i64; k];
-    for v in 0..g.n {
-        loads[part[v] as usize] += g.vwgt[v];
+/// Enforce the balance cap: drain each overloaded block through its
+/// gain bucket (cheapest eviction first — the bucket generalizes the
+/// seed's sort-by-cost ranking), moving into the most-affine feasible
+/// block, with exact incremental gain/connectivity maintenance.
+/// `loads` carries the block weights in and out.
+fn kway_balance_ws(
+    g: &WGraph,
+    part: &mut [u32],
+    k: usize,
+    eps: f64,
+    threads: usize,
+    loads: &mut [i64],
+    ws: &mut VpWorkspace,
+) {
+    let n = g.n;
+    if n == 0 || k <= 1 {
+        return;
     }
-    // epoch-stamped per-block connectivity accumulator.  The epoch is a
-    // counter bumped per vertex VISIT, not the vertex id: id-epochs
-    // collide across passes (stamp[b] left at v by pass p makes pass
-    // p+1 treat stale wsum[b] as fresh), silently corrupting gains.
-    let mut wsum = vec![0i64; k];
-    let mut stamp = vec![0u64; k];
-    let mut epoch = 0u64;
-    let mut touched: Vec<usize> = Vec::with_capacity(k);
-    let max_passes = opts.fm_passes.max(1) * 3;
-    for pass in 0..max_passes {
-        let mut moved = 0usize;
-        for v in 0..g.n as u32 {
-            epoch += 1;
-            let from = part[v as usize] as usize;
-            touched.clear();
-            for (u, w) in g.neighbors(v) {
-                let b = part[u as usize] as usize;
-                if stamp[b] != epoch {
-                    stamp[b] = epoch;
-                    wsum[b] = 0;
-                    touched.push(b);
+    let total: i64 = loads.iter().sum();
+    let cap = ((total as f64 / k as f64) * (1.0 + eps)).ceil() as i64;
+    if loads.iter().all(|&l| l <= cap) {
+        return; // O(k) thanks to the carried loads — no O(n) rescan
+    }
+    build_conn(g, part, k, threads, ws);
+    ws.kbuckets.ensure(k, n);
+    let overloaded: Vec<bool> = loads.iter().map(|&l| l > cap).collect();
+    // only vertices of overloaded blocks are eviction candidates;
+    // interior ones included (a block must drain even if none of its
+    // vertices touch another block)
+    for v in 0..n as u32 {
+        let b = part[v as usize] as usize;
+        if overloaded[b] {
+            let off = ws.conn_ptr[v as usize] as usize;
+            let l = ws.conn_len[v as usize] as usize;
+            let gn =
+                evict_gain(&ws.conn_blk[off..off + l], &ws.conn_wgt[off..off + l], b as u32);
+            ws.kbuckets.insert(b, v, gn);
+        }
+    }
+    for from in 0..k {
+        if !overloaded[from] {
+            continue;
+        }
+        // heavy-pair vertices (eviction would cut an ORIG_EDGE_WEIGHT
+        // edge) are deferred behind every ordinary candidate — the
+        // bucket key is clamped, so without this an extreme-cost vertex
+        // could pop before merely-expensive ones (the seed's exact sort
+        // ranked them last; this preserves that)
+        let mut deferred: Vec<u32> = Vec::new();
+        let mut di = 0usize;
+        while loads[from] > cap {
+            let v = match ws.kbuckets.peek_max(from) {
+                Some((v, _)) => {
+                    ws.kbuckets.remove(v);
+                    let off = ws.conn_ptr[v as usize] as usize;
+                    let l = ws.conn_len[v as usize] as usize;
+                    let gn = evict_gain(
+                        &ws.conn_blk[off..off + l],
+                        &ws.conn_wgt[off..off + l],
+                        from as u32,
+                    );
+                    if gn < -(1 << 30) {
+                        deferred.push(v);
+                        continue;
+                    }
+                    v
                 }
-                wsum[b] += w;
-            }
-            if touched.len() < 2 && !touched.is_empty() && touched[0] == from {
-                continue; // interior vertex
-            }
-            let w_int = if stamp[from] == epoch { wsum[from] } else { 0 };
+                None => {
+                    if di < deferred.len() {
+                        di += 1;
+                        deferred[di - 1]
+                    } else {
+                        break; // nothing left to evict
+                    }
+                }
+            };
+            let vi = v as usize;
+            let vw = g.vwgt[vi];
+            // most-affine feasible target, else the least-loaded block
+            let off = ws.conn_ptr[vi] as usize;
+            let l = ws.conn_len[vi] as usize;
             let mut best: Option<(i64, usize)> = None;
-            for &b in &touched {
-                if b == from {
-                    continue;
-                }
-                let gain = wsum[b] - w_int;
-                if gain > 0
-                    && loads[b] + g.vwgt[v as usize] <= cap
-                    && best.map_or(true, |(bg, _)| gain > bg)
-                {
-                    best = Some((gain, b));
+            for i in off..off + l {
+                let b = ws.conn_blk[i] as usize;
+                if b != from && loads[b] + vw <= cap {
+                    let w = ws.conn_wgt[i];
+                    if best.map_or(true, |(bw, bb)| w > bw || (w == bw && b < bb)) {
+                        best = Some((w, b));
+                    }
                 }
             }
-            if let Some((_, to)) = best {
-                part[v as usize] = to as u32;
-                loads[from] -= g.vwgt[v as usize];
-                loads[to] += g.vwgt[v as usize];
-                moved += 1;
+            let to = match best {
+                Some((_, b)) => b,
+                None => {
+                    let lb = (0..k).min_by_key(|&b| loads[b]).unwrap();
+                    if lb == from || loads[lb] + vw > cap {
+                        continue; // v stays evicted from the candidate set
+                    }
+                    lb
+                }
+            };
+            part[vi] = to as u32;
+            loads[from] -= vw;
+            loads[to] += vw;
+            for (u, w) in g.neighbors(v) {
+                let ui = u as usize;
+                conn_shift_one(ws, ui, from as u32, to as u32, w);
+                // candidates in (still-draining) overloaded blocks get
+                // their eviction rank corrected in place
+                if ws.kbuckets.contains(u) {
+                    let uo = ws.conn_ptr[ui] as usize;
+                    let ul = ws.conn_len[ui] as usize;
+                    let ub = part[ui];
+                    let gn = evict_gain(
+                        &ws.conn_blk[uo..uo + ul],
+                        &ws.conn_wgt[uo..uo + ul],
+                        ub,
+                    );
+                    ws.kbuckets.update(ub as usize, u, gn);
+                }
             }
         }
-        if moved == 0 || pass + 1 == max_passes {
-            break;
+        // drop any leftover candidates of this block from the buckets so
+        // later blocks' peeks never see them
+        while let Some((v, _)) = ws.kbuckets.peek_max(from) {
+            ws.kbuckets.remove(v);
         }
     }
+}
+
+/// k-way boundary refinement (public driver): per-block gain buckets,
+/// hill-climbing with rollback — see `kway_refine_ws`.  Computes block
+/// weights once; `opts.threads` controls the parallel phases.
+pub fn kway_refine(g: &WGraph, part: &mut [u32], k: usize, opts: &VpOpts) {
+    assert_eq!(part.len(), g.n);
+    let threads = par::resolve_threads(opts.threads);
+    let mut ws = VpWorkspace::new();
+    ws.reserve_kway(g, k);
+    let mut loads = g.block_weights(part, k, threads);
+    kway_refine_ws(g, part, k, opts, threads, &mut loads, &mut ws);
+}
+
+/// Enforce the `eps` balance cap on a k-way partition (public driver) —
+/// see `kway_balance_ws`.
+pub fn kway_balance(g: &WGraph, part: &mut [u32], k: usize, eps: f64, threads: usize) {
+    assert_eq!(part.len(), g.n);
+    let threads = par::resolve_threads(threads);
+    let mut ws = VpWorkspace::new();
+    ws.reserve_kway(g, k);
+    let mut loads = g.block_weights(part, k, threads);
+    kway_balance_ws(g, part, k, eps, threads, &mut loads, &mut ws);
 }
 
 // ------------------------------------------------------ recursive bisection
@@ -988,11 +1588,14 @@ pub fn bisect(g: &WGraph, frac_left: f64, opts: &VpOpts) -> Vec<u32> {
 
 fn bisect_with(g: &WGraph, frac_left: f64, opts: &VpOpts, seed: u64, threads: usize) -> Vec<u32> {
     let mut ws = VpWorkspace::new();
+    // size the FM pools for the finest level so the uncoarsening chain
+    // reuses capacity instead of growing per level
+    ws.reserve_fm(g.n);
     let (mut levels, cur) = coarsen_chain(g, opts.coarsen_to, opts, seed, threads, &mut ws);
 
     // --- initial partition on the coarsest graph: parallel GGGP tries ---
-    let mut side = initial_bisection(&cur, frac_left, opts, derive_seed(seed, 0x66), threads);
-    fm_refine(&cur, &mut side, frac_left, opts, threads);
+    let mut side = initial_bisection(&cur, frac_left, opts, derive_seed(seed, 0x66), threads, &mut ws);
+    fm_refine(&cur, &mut side, frac_left, opts, threads, &mut ws);
 
     // --- uncoarsening + refinement ---
     while let Some((finer, cmap)) = levels.pop() {
@@ -1002,12 +1605,24 @@ fn bisect_with(g: &WGraph, frac_left: f64, opts: &VpOpts, seed: u64, threads: us
             par::fill_indexed(threads, &mut fine_side, |v| side_ref[cmap[v] as usize]);
         }
         side = fine_side;
-        fm_refine(&finer, &mut side, frac_left, opts, threads);
+        fm_refine(&finer, &mut side, frac_left, opts, threads, &mut ws);
     }
     side
 }
 
 // ----------------------------------------------------------------- GGGP
+
+/// Reusable GGGP restart scratch — the frontier buckets, exact-gain
+/// array, and shuffled seed order.  Pooled in `VpWorkspace` for the
+/// sequential path; parallel restarts create one per *worker* (not per
+/// restart) via `par::run_tasks_with`.  Every buffer is reset on entry
+/// to `gggp_try`, so results never depend on scratch history.
+#[derive(Default)]
+struct GggpScratch {
+    gain: Vec<i64>,
+    frontier: GainBuckets,
+    seeds: Vec<u32>,
+}
 
 /// Greedy graph growing (GGGP): grow side 0 from a random seed, always
 /// absorbing the frontier vertex with the best exact cut gain (gain
@@ -1020,11 +1635,20 @@ fn initial_bisection(
     opts: &VpOpts,
     seed: u64,
     threads: usize,
+    ws: &mut VpWorkspace,
 ) -> Vec<u32> {
     let tries = opts.init_tries.max(1);
-    let results = par::run_tasks(threads, tries, |t| {
-        gggp_try(g, frac_left, derive_seed(seed, t as u64))
-    });
+    let results = if par::resolve_threads(threads) <= 1 || tries <= 1 {
+        // sequential: restarts share the workspace-pooled scratch
+        let sc = &mut ws.gggp;
+        (0..tries)
+            .map(|t| gggp_try(g, frac_left, derive_seed(seed, t as u64), sc))
+            .collect::<Vec<_>>()
+    } else {
+        par::run_tasks_with(threads, tries, GggpScratch::default, |sc, t| {
+            gggp_try(g, frac_left, derive_seed(seed, t as u64), sc)
+        })
+    };
     let mut best = 0usize;
     for t in 1..tries {
         if results[t].0 < results[best].0 {
@@ -1035,8 +1659,9 @@ fn initial_bisection(
     std::mem::take(&mut results[best].1)
 }
 
-/// One GGGP restart: returns (cut, side).
-fn gggp_try(g: &WGraph, frac_left: f64, try_seed: u64) -> (i64, Vec<u32>) {
+/// One GGGP restart: returns (cut, side).  Pure in `(g, frac_left,
+/// try_seed)` — the scratch is fully reset on entry.
+fn gggp_try(g: &WGraph, frac_left: f64, try_seed: u64, sc: &mut GggpScratch) -> (i64, Vec<u32>) {
     let n = g.n;
     let total = g.total_vwgt();
     let target_left = (total as f64 * frac_left) as i64;
@@ -1044,12 +1669,17 @@ fn gggp_try(g: &WGraph, frac_left: f64, try_seed: u64) -> (i64, Vec<u32>) {
 
     let mut side = vec![1u32; n];
     let mut w_left = 0i64;
-    let mut gain = vec![0i64; n];
-    let mut frontier = GainBuckets::new(n);
+    reset(&mut sc.gain, n, 0);
+    sc.frontier.ensure(n);
+    let gain = &mut sc.gain;
+    let frontier = &mut sc.frontier;
 
-    let mut seeds: Vec<u32> = (0..n as u32).collect();
-    rng.shuffle(&mut seeds);
-    let mut seed_iter = seeds.into_iter();
+    reset(&mut sc.seeds, n, 0);
+    for (i, o) in sc.seeds.iter_mut().enumerate() {
+        *o = i as u32;
+    }
+    rng.shuffle(&mut sc.seeds[..n]);
+    let mut seed_pos = 0usize;
 
     while w_left < target_left {
         let v = match frontier.peek_max() {
@@ -1059,7 +1689,16 @@ fn gggp_try(g: &WGraph, frac_left: f64, try_seed: u64) -> (i64, Vec<u32>) {
             }
             None => {
                 // frontier empty (disconnected) — new random seed vertex
-                match seed_iter.find(|&v| side[v as usize] == 1) {
+                let mut next = None;
+                while seed_pos < n {
+                    let s = sc.seeds[seed_pos];
+                    seed_pos += 1;
+                    if side[s as usize] == 1 {
+                        next = Some(s);
+                        break;
+                    }
+                }
+                match next {
                     Some(v) => v,
                     None => break,
                 }
@@ -1099,8 +1738,16 @@ fn gggp_try(g: &WGraph, frac_left: f64, try_seed: u64) -> (i64, Vec<u32>) {
 /// on gain buckets: one structure per side, O(1) best-move extraction
 /// and O(1) neighbor gain updates, with the classic best-prefix
 /// rollback.  Gain recomputation at the start of each pass is a pure
-/// parallel fill.
-fn fm_refine(g: &WGraph, side: &mut [u32], frac_left: f64, opts: &VpOpts, threads: usize) {
+/// parallel fill.  All scratch (the bucket pair, gain array, move log)
+/// is pooled in `VpWorkspace` — zero per-level allocation.
+fn fm_refine(
+    g: &WGraph,
+    side: &mut [u32],
+    frac_left: f64,
+    opts: &VpOpts,
+    threads: usize,
+    ws: &mut VpWorkspace,
+) {
     if opts.fm_passes == 0 || g.n == 0 {
         return;
     }
@@ -1118,15 +1765,19 @@ fn fm_refine(g: &WGraph, side: &mut [u32], frac_left: f64, opts: &VpOpts, thread
         w[side[v] as usize] += g.vwgt[v];
     }
 
-    let mut gain = vec![0i64; n];
-    let mut buckets = [GainBuckets::new(n), GainBuckets::new(n)];
-    let mut moved = vec![false; n];
+    reset(&mut ws.fm_gain, n, 0);
+    reset(&mut ws.fm_moved, n, false);
+    ws.fm_buckets[0].ensure(n);
+    ws.fm_buckets[1].ensure(n);
+    ws.fm_moves.clear();
+    let VpWorkspace { fm_gain: gain, fm_buckets: buckets, fm_moved: moved, fm_moves: moves, .. } =
+        ws;
 
     for _pass in 0..opts.fm_passes {
         // gains: moving v to the other side changes cut by -(ext - int)
         {
             let side_ref: &[u32] = side;
-            par::fill_indexed(threads, &mut gain, |v| {
+            par::fill_indexed(threads, gain, |v| {
                 let sv = side_ref[v];
                 let mut ext = 0i64;
                 let mut int = 0i64;
@@ -1161,7 +1812,7 @@ fn fm_refine(g: &WGraph, side: &mut [u32], frac_left: f64, opts: &VpOpts, thread
         for m in moved.iter_mut() {
             *m = false;
         }
-        let mut moves: Vec<u32> = Vec::new();
+        moves.clear();
         let mut cur_delta = 0i64; // cumulative cut change (negative good)
         let mut best_delta = 0i64;
         let mut best_prefix = 0usize;
@@ -1434,6 +2085,108 @@ mod tests {
         assert_eq!(w01, 5);
         assert_eq!(g.neighbors(1).count(), 1);
         assert_eq!(g.neighbors(1).next().unwrap().1, 5);
+    }
+
+    #[test]
+    fn kway_buckets_order_update_and_peek_best() {
+        let mut b = KwayBuckets::default();
+        b.ensure(3, 8);
+        b.insert(0, 0, 5);
+        b.insert(1, 1, -3);
+        b.insert(2, 2, 100);
+        assert_eq!(b.peek_max(0), Some((0, KwayBuckets::idx(5) as u32)));
+        assert_eq!(b.peek_best(), Some((2, 2)));
+        b.update(2, 2, -50);
+        assert_eq!(b.peek_best(), Some((0, 0)));
+        // re-bucketing under a different block moves the vertex's home
+        b.update(1, 0, 7);
+        assert_eq!(b.peek_best(), Some((0, 1)));
+        b.remove(0);
+        b.remove(1);
+        assert_eq!(b.peek_best(), Some((2, 2)));
+        b.remove(2);
+        assert_eq!(b.peek_best(), None);
+        // clamped gains still order against in-range gains
+        b.insert(0, 3, KWAY_GAIN_CLAMP + 1_000_000);
+        b.insert(1, 4, 0);
+        assert_eq!(b.peek_best(), Some((3, 0)));
+        // equal buckets tie-break to the smaller block id
+        b.update(1, 4, KWAY_GAIN_CLAMP + 999);
+        assert_eq!(b.peek_best(), Some((3, 0)));
+    }
+
+    #[test]
+    fn kway_refine_recovers_ring_of_cliques() {
+        // ring of 6 cliques with a scrambled start: refinement should
+        // drive the cut down to (near) the 6 weight-1 bridges
+        let sz = 10;
+        let mut edges = Vec::new();
+        for c in 0..6 {
+            let base = c * sz;
+            for a in 0..sz {
+                for b in (a + 1)..sz {
+                    edges.push(((base + a) as u32, (base + b) as u32, 5));
+                }
+            }
+            let next = ((c + 1) % 6) * sz;
+            edges.push((base as u32, next as u32, 1));
+        }
+        let g = WGraph::from_edges(60, vec![1; 60], &edges);
+        // interleaved labels — maximally wrong start, perfectly balanced
+        let mut part: Vec<u32> = (0..60).map(|v| (v % 6) as u32).collect();
+        let before = g.edge_cut(&part);
+        kway_refine(&g, &mut part, 6, &VpOpts { seed: 3, threads: 1, ..Default::default() });
+        let after = g.edge_cut(&part);
+        assert!(after <= before, "cut must not rise: {before} -> {after}");
+        assert!(after < before / 2, "refinement barely moved: {before} -> {after}");
+        let loads = g.block_weights(&part, 6, 1);
+        assert_eq!(loads.iter().sum::<i64>(), 60);
+    }
+
+    #[test]
+    fn kway_balance_caps_overloaded_blocks() {
+        // everything starts in block 0; balance must spread it under cap
+        let g = two_cliques(40);
+        let k = 4;
+        let mut part = vec![0u32; g.n];
+        kway_balance(&g, &mut part, k, 0.05, 1);
+        let loads = g.block_weights(&part, k, 1);
+        let cap = ((g.n as f64 / k as f64) * 1.05).ceil() as i64;
+        for (b, &l) in loads.iter().enumerate() {
+            assert!(l <= cap, "block {b} load {l} > cap {cap}");
+        }
+        assert_eq!(loads.iter().sum::<i64>() as usize, g.n);
+    }
+
+    #[test]
+    fn carried_loads_stay_exact_through_refine_and_balance() {
+        // the incremental load accounting must equal a fresh recount
+        // after an arbitrary refine/balance/refine sequence
+        let g = two_cliques(60);
+        let k = 5;
+        let mut part: Vec<u32> = (0..g.n).map(|v| (v % k) as u32).collect();
+        let mut ws = VpWorkspace::new();
+        ws.reserve_kway(&g, k);
+        let mut loads = g.block_weights(&part, k, 1);
+        let opts = VpOpts { seed: 11, threads: 1, ..Default::default() };
+        kway_refine_ws(&g, &mut part, k, &opts, 1, &mut loads, &mut ws);
+        kway_balance_ws(&g, &mut part, k, 0.05, 1, &mut loads, &mut ws);
+        kway_refine_ws(&g, &mut part, k, &opts, 1, &mut loads, &mut ws);
+        assert_eq!(loads, g.block_weights(&part, k, 1), "carried loads drifted");
+    }
+
+    #[test]
+    fn edge_cut_par_matches_sequential() {
+        let n = 3 * par::PAR_MIN_LEN;
+        let edges: Vec<(u32, u32, i64)> =
+            (0..n as u32 - 1).map(|i| (i, i + 1, 1 + (i % 5) as i64)).collect();
+        let g = WGraph::from_edges(n, vec![1; n], &edges);
+        let part: Vec<u32> = (0..n).map(|v| (v % 7) as u32).collect();
+        let seq = g.edge_cut(&part);
+        for t in [1, 2, 4, 8] {
+            assert_eq!(g.edge_cut_par(&part, t), seq, "threads={t}");
+        }
+        assert_eq!(g.block_weights(&part, 7, 4), g.block_weights(&part, 7, 1));
     }
 
     #[test]

@@ -174,6 +174,74 @@ impl JsonReport {
     }
 }
 
+// ---------------------------------------------------------- regression gate
+
+/// Ratio-style headline metrics tracked by the CI bench-regression gate.
+/// Wall-clock seconds are machine-dependent, so only relative measures
+/// (speedups over the in-run reference pipeline, cut-quality ratios)
+/// are gated — they are stable across runner hardware.
+const GATED_METRICS: &[(&str, bool)] = &[
+    // (key, higher_is_better)
+    ("speedup_single_thread", true),
+    ("speedup_multi_thread", true),
+    ("cut_ratio_new_over_ref", false),
+    ("kway_refine_speedup", true),
+    ("kway_cut_ratio_new_over_ref", false),
+];
+
+/// Compare a freshly produced bench baseline (`current`, JSON text)
+/// against a committed one (`baseline`).  A metric regresses when it is
+/// worse than the baseline by more than `tol` (relative, e.g. 0.25 =
+/// 25%).  Metrics absent from either side are reported but never fail
+/// (so baselines roll forward cleanly when fields are added), and
+/// mismatched `mode` fields (smoke vs full) skip gating entirely —
+/// the numbers would not be comparable.
+///
+/// Returns the per-metric report lines, or Err with the regression
+/// summary (also containing the report) when the gate fails.
+pub fn compare_baselines(baseline: &str, current: &str, tol: f64) -> Result<Vec<String>, String> {
+    use crate::util::json::Json;
+    let base = Json::parse(baseline).map_err(|e| format!("baseline JSON: {e}"))?;
+    let cur = Json::parse(current).map_err(|e| format!("current JSON: {e}"))?;
+    let mode = |j: &Json| j.get("mode").and_then(|m| m.as_str().map(str::to_string));
+    let (bm, cm) = (mode(&base), mode(&cur));
+    if bm != cm {
+        return Ok(vec![format!(
+            "mode mismatch (baseline {bm:?}, current {cm:?}) — gate skipped",
+        )]);
+    }
+    let mut lines = Vec::new();
+    let mut failures = Vec::new();
+    for &(key, higher_better) in GATED_METRICS {
+        let b = base.get(key).and_then(|j| j.as_f64());
+        let c = cur.get(key).and_then(|j| j.as_f64());
+        let (b, c) = match (b, c) {
+            (Some(b), Some(c)) => (b, c),
+            _ => {
+                lines.push(format!("{key}: missing on one side (base {b:?}, cur {c:?}) — skipped"));
+                continue;
+            }
+        };
+        let ok = if higher_better { c >= b * (1.0 - tol) } else { c <= b * (1.0 + tol) };
+        let delta = if b != 0.0 { (c - b) / b * 100.0 } else { 0.0 };
+        let verdict = if ok { "ok" } else { "REGRESSED" };
+        lines.push(format!("{key}: base {b:.4} cur {c:.4} ({delta:+.1}%) {verdict}"));
+        if !ok {
+            failures.push(key);
+        }
+    }
+    if failures.is_empty() {
+        Ok(lines)
+    } else {
+        Err(format!(
+            "bench regression beyond {:.0}% tolerance in: {}\n{}",
+            tol * 100.0,
+            failures.join(", "),
+            lines.join("\n")
+        ))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -213,5 +281,54 @@ mod tests {
     fn table_rejects_bad_arity() {
         let mut t = Table::new(&["a"]);
         t.row(&["1".into(), "2".into()]);
+    }
+
+    fn baseline_json(s1: f64, cut_ratio: f64) -> String {
+        let mut r = JsonReport::new();
+        r.str("bench", "partition")
+            .str("mode", "smoke")
+            .num("speedup_single_thread", s1)
+            .num("cut_ratio_new_over_ref", cut_ratio);
+        r.render()
+    }
+
+    #[test]
+    fn compare_passes_within_tolerance() {
+        let base = baseline_json(3.0, 1.00);
+        let cur = baseline_json(2.6, 1.05); // −13% speedup, +5% cut
+        let lines = compare_baselines(&base, &cur, 0.25).expect("within 25%");
+        assert!(lines.iter().any(|l| l.contains("speedup_single_thread") && l.ends_with("ok")));
+    }
+
+    #[test]
+    fn compare_fails_beyond_tolerance() {
+        let base = baseline_json(3.0, 1.00);
+        let cur = baseline_json(2.0, 1.00); // −33% speedup
+        let err = compare_baselines(&base, &cur, 0.25).unwrap_err();
+        assert!(err.contains("speedup_single_thread"), "{err}");
+    }
+
+    #[test]
+    fn compare_fails_on_quality_regression() {
+        // lower-is-better metric: cut ratio growing 30% must fail
+        let base = baseline_json(3.0, 1.00);
+        let cur = baseline_json(3.0, 1.30);
+        let err = compare_baselines(&base, &cur, 0.25).unwrap_err();
+        assert!(err.contains("cut_ratio_new_over_ref"), "{err}");
+    }
+
+    #[test]
+    fn compare_skips_missing_metrics_and_mode_mismatch() {
+        let base = baseline_json(3.0, 1.00);
+        let mut r = JsonReport::new();
+        r.str("mode", "smoke").num("speedup_single_thread", 3.1);
+        let lines = compare_baselines(&base, &r.render(), 0.25).expect("missing keys skip");
+        assert!(lines.iter().any(|l| l.contains("cut_ratio_new_over_ref") && l.contains("skipped")));
+
+        let mut full = JsonReport::new();
+        full.str("mode", "full").num("speedup_single_thread", 0.1);
+        let lines = compare_baselines(&base, &full.render(), 0.25).expect("mode mismatch skips");
+        assert_eq!(lines.len(), 1);
+        assert!(lines[0].contains("gate skipped"));
     }
 }

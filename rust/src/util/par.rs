@@ -134,6 +134,45 @@ where
     results.into_iter().map(|o| o.expect("par::run_tasks worker panicked")).collect()
 }
 
+/// Like `run_tasks`, but hands each worker a private scratch value
+/// created once per worker (not per task) — for task batches that want
+/// reusable buffers without allocating per task (e.g. GGGP restarts).
+/// Determinism contract: `f` must produce the same output for a given
+/// task index regardless of scratch history (reset scratch on entry).
+pub fn run_tasks_with<T, S, I, F>(threads: usize, n: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
+    let t = resolve_threads(threads).min(n.max(1));
+    if t <= 1 || n <= 1 {
+        let mut scratch = init();
+        return (0..n).map(|i| f(&mut scratch, i)).collect();
+    }
+    let ranges = chunk_ranges(n, t);
+    let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let mut rest: &mut [Option<T>] = &mut results;
+        for &(lo, hi) in &ranges {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(hi - lo);
+            rest = tail;
+            let init = &init;
+            let f = &f;
+            s.spawn(move || {
+                let mut scratch = init();
+                for (i, slot) in chunk.iter_mut().enumerate() {
+                    *slot = Some(f(&mut scratch, lo + i));
+                }
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|o| o.expect("par::run_tasks_with worker panicked"))
+        .collect()
+}
+
 /// Run `f(lo, hi, worker_index)` over a fixed partition of `0..len`
 /// into `parts` ranges, using up to `threads` worker threads.  The
 /// partition depends only on `(len, parts)`, so a caller that derives
@@ -210,6 +249,25 @@ mod tests {
         for t in [1, 4] {
             let r = run_tasks(t, 5, |i| i * i);
             assert_eq!(r, vec![0, 1, 4, 9, 16], "threads={t}");
+        }
+    }
+
+    #[test]
+    fn run_tasks_with_matches_plain_run_tasks() {
+        // scratch is reset on entry, so results must be identical to the
+        // scratch-free path for every thread count
+        for t in [1, 3, 8] {
+            let r = run_tasks_with(
+                t,
+                7,
+                Vec::<u64>::new,
+                |buf, i| {
+                    buf.clear();
+                    buf.extend(0..=i as u64);
+                    buf.iter().sum::<u64>()
+                },
+            );
+            assert_eq!(r, run_tasks(1, 7, |i| (0..=i as u64).sum()), "threads={t}");
         }
     }
 

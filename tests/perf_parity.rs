@@ -132,6 +132,32 @@ fn kway_chain_is_identical_for_every_thread_count() {
 }
 
 #[test]
+fn kway_refine_cut_parity_with_seed_reference() {
+    // The gain-bucket k-way refinement (hill-climbing, exact incremental
+    // gains) must match or beat the seed's greedy full-scan refinement
+    // from the same starting partition, and must never worsen the start.
+    let g = ggen::power_law(5000, 3, 55);
+    let tg = ep::task_graph(&g, ep::ChainOrder::Index, 9);
+    for k in [8usize, 64] {
+        let start: Vec<u32> = (0..tg.n).map(|v| (v * k / tg.n) as u32).collect();
+        let cut_start = tg.edge_cut(&start);
+        let opts = VpOpts { seed: 0xFEED, threads: 1, ..Default::default() };
+        let mut p_new = start.clone();
+        vertex::kway_refine(&tg, &mut p_new, k, &opts);
+        let mut p_ref = start.clone();
+        reference::kway_refine(&tg, &mut p_ref, k, &opts);
+        let cut_new = tg.edge_cut(&p_new);
+        let cut_ref = tg.edge_cut(&p_ref);
+        eprintln!("kway refine parity k={k}: start={cut_start} ref={cut_ref} new={cut_new}");
+        assert!(cut_new <= cut_start, "k={k}: refine worsened the cut");
+        assert!(
+            cut_new as f64 <= cut_ref as f64 * 1.05 + 16.0,
+            "k={k}: gain-bucket refine {cut_new} vs seed refine {cut_ref} (>5%)"
+        );
+    }
+}
+
+#[test]
 fn fused_task_graph_matches_naive_transform() {
     // The fused CSR transform must encode exactly the same multigraph as
     // the seed's edge-list path: same merged degree and same weighted

@@ -8,6 +8,7 @@
 
 use epgraph::graph::{gen as ggen, Graph};
 use epgraph::partition::ep::{self, ChainOrder};
+use epgraph::partition::vertex::{self, VpOpts, WGraph};
 use epgraph::partition::{quality, EdgePartition, Method};
 use epgraph::sparse::{cpack, gen as sgen, pack_blocked, BlockedShape, Coo};
 use epgraph::util::prop::check;
@@ -164,6 +165,117 @@ fn prop_balance_factor_of_ep_is_bounded() {
         }
         Ok(())
     });
+}
+
+fn random_wgraph(rng: &mut Pcg32, size: usize) -> WGraph {
+    let n = 8 + rng.gen_range(size * 8 + 24);
+    let m = n + rng.gen_range(3 * n);
+    let edges: Vec<(u32, u32, i64)> = (0..m)
+        .map(|_| {
+            (
+                rng.gen_range(n) as u32,
+                rng.gen_range(n) as u32,
+                1 + rng.gen_range(8) as i64,
+            )
+        })
+        .collect();
+    WGraph::from_edges(n, vec![1i64; n], &edges)
+}
+
+#[test]
+fn prop_kway_refine_never_increases_cut() {
+    // hill-climbing with best-prefix rollback: a refine call must never
+    // leave the cut worse than it found it, from ANY starting partition
+    check("kway-refine-monotone", 30, |rng, g| {
+        let wg = random_wgraph(rng, g.size);
+        let k = 2 + rng.gen_range(12);
+        let mut part: Vec<u32> = (0..wg.n).map(|_| rng.gen_range(k) as u32).collect();
+        let before = wg.edge_cut(&part);
+        let opts = VpOpts { seed: rng.next_u64(), threads: 1, ..Default::default() };
+        vertex::kway_refine(&wg, &mut part, k, &opts);
+        let after = wg.edge_cut(&part);
+        if after > before {
+            return Err(format!("cut rose {before} -> {after} (k={k}, n={})", wg.n));
+        }
+        if part.iter().any(|&b| b as usize >= k) {
+            return Err("label out of range".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kway_balance_enforces_eps_cap() {
+    // unit vertex weights: a feasible target always exists, so after
+    // kway_balance every block must sit at or below the eps cap
+    check("kway-balance-cap", 30, |rng, g| {
+        let wg = random_wgraph(rng, g.size);
+        let k = 2 + rng.gen_range(10);
+        // bias assignments toward low block ids to force overloads
+        let mut part: Vec<u32> = (0..wg.n)
+            .map(|_| rng.gen_range(k).min(rng.gen_range(k)) as u32)
+            .collect();
+        let eps = if rng.gen_range(2) == 0 { 0.015 } else { 0.10 };
+        vertex::kway_balance(&wg, &mut part, k, eps, 1);
+        let loads = wg.block_weights(&part, k, 1);
+        let total: i64 = loads.iter().sum();
+        let cap = ((total as f64 / k as f64) * (1.0 + eps)).ceil() as i64;
+        if let Some((b, &l)) = loads.iter().enumerate().find(|&(_, &l)| l > cap) {
+            return Err(format!("block {b} load {l} > cap {cap} (k={k}, n={})", wg.n));
+        }
+        if part.iter().any(|&b| b as usize >= k) {
+            return Err("label out of range".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kway_refine_and_balance_thread_invariant() {
+    // same seed, threads ∈ {1, 2, 4} → bit-identical partitions
+    check("kway-threads", 12, |rng, g| {
+        let wg = random_wgraph(rng, g.size);
+        let k = 2 + rng.gen_range(12);
+        let seed = rng.next_u64();
+        let base: Vec<u32> = (0..wg.n).map(|_| rng.gen_range(k) as u32).collect();
+        let run = |threads: usize| {
+            let mut p = base.clone();
+            let opts = VpOpts { seed, threads, ..Default::default() };
+            vertex::kway_refine(&wg, &mut p, k, &opts);
+            vertex::kway_balance(&wg, &mut p, k, 0.05, threads);
+            p
+        };
+        let p1 = run(1);
+        for t in [2, 4] {
+            if run(t) != p1 {
+                return Err(format!("threads={t} changed the partition (k={k})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn kway_thread_invariance_at_parallel_scale() {
+    // cross par::PAR_MIN_LEN so the parallel conn build, gain fill, and
+    // load reductions actually run (the property test above stays below
+    // the threshold and would pass vacuously)
+    let g = ggen::power_law(6000, 3, 77);
+    let tg = ep::task_graph(&g, ChainOrder::Index, 7);
+    assert!(tg.n > 4096, "test graph must cross the parallel threshold");
+    let k = 48;
+    let base: Vec<u32> = (0..tg.n).map(|v| (v * k / tg.n) as u32).collect();
+    let run = |threads: usize| {
+        let mut p = base.clone();
+        let opts = VpOpts { seed: 0xBEEF, threads, ..Default::default() };
+        vertex::kway_refine(&tg, &mut p, k, &opts);
+        vertex::kway_balance(&tg, &mut p, k, 0.015, threads);
+        p
+    };
+    let p1 = run(1);
+    for t in [2, 4] {
+        assert_eq!(p1, run(t), "threads={t} changed the partition");
+    }
 }
 
 #[test]
