@@ -59,11 +59,9 @@ fn perf_headline(seed: u64, r: &mut JsonReport) {
     let g = ggen::power_law(n, 3, seed);
     println!("power_law({n}, 3): n={} m={} k={k}", g.n, g.m());
 
-    let opts_1t = {
-        let mut o = ep::EpOpts::default();
-        o.vp.seed = seed;
-        o.vp.threads = 1;
-        o
+    let opts_1t = ep::EpOpts {
+        vp: VpOpts { seed, threads: 1, ..Default::default() },
+        ..Default::default()
     };
     let opts_mt = {
         let mut o = opts_1t.clone();
@@ -196,8 +194,10 @@ fn main() {
         println!("{}", s.row());
 
         let s = bench("  ep::partition_edges (full EP)", 1, 5, || {
-            let mut o = ep::EpOpts::default();
-            o.vp.seed = seed;
+            let o = ep::EpOpts {
+                vp: VpOpts { seed, ..Default::default() },
+                ..Default::default()
+            };
             ep::partition_edges(&g, k, &o)
         });
         println!("{}", s.row());

@@ -112,9 +112,14 @@ pub fn optimize_graph(g: &Graph, opts: &OptOptions) -> OptimizedSchedule {
     // 3. the EP algorithm (or a selected baseline) + cpack relayout
     let mut partition = match opts.method {
         Method::Ep => {
-            let mut ep_opts = ep::EpOpts::default();
-            ep_opts.vp.seed = opts.seed;
-            ep_opts.vp.threads = opts.threads;
+            let ep_opts = ep::EpOpts {
+                vp: crate::partition::vertex::VpOpts {
+                    seed: opts.seed,
+                    threads: opts.threads,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
             ep::partition_edges(g, opts.k, &ep_opts)
         }
         other => other.partition(g, opts.k, opts.seed),

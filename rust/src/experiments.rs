@@ -12,7 +12,7 @@ use crate::apps::{self, CacheType};
 use crate::gpusim::{sim_blocked_launch, sim_original, sim_rowsplit, sim_task_graph_launch, GpuConfig, SimResult};
 use crate::graph::{stats, Graph};
 use crate::partition::{
-    default_sched, ep, hypergraph, quality, EdgePartition, Method,
+    default_sched, ep, hypergraph, quality, vertex::VpOpts, EdgePartition, Method,
 };
 use crate::sparse::{cpack, gen, pack_blocked, BlockedShape, Coo};
 use crate::util::benchkit::Table;
@@ -92,8 +92,7 @@ pub fn fig6_partition(seed: u64) -> Vec<Fig6Row> {
         let hp_q = q(&hp);
         let t1 = Instant::now();
         let epp = {
-            let mut o = ep::EpOpts::default();
-            o.vp.seed = seed;
+            let o = ep::EpOpts { vp: VpOpts { seed, ..Default::default() }, ..Default::default() };
             ep::partition_edges(&g, k, &o)
         };
         let ep_time = t1.elapsed();
@@ -185,8 +184,7 @@ pub fn spmv_case(gpu: &GpuConfig, name: &str, a: &Coo, block: usize, seed: u64) 
 
     let t0 = Instant::now();
     let ep_p = {
-        let mut o = ep::EpOpts::default();
-        o.vp.seed = seed;
+        let o = ep::EpOpts { vp: VpOpts { seed, ..Default::default() }, ..Default::default() };
         ep::partition_edges(&g, k, &o)
     };
     let ep_partition_time = t0.elapsed();
@@ -358,8 +356,7 @@ pub fn table3_table(gpu: &GpuConfig, seed: u64) -> Table {
 fn spmv_case_light(gpu: &GpuConfig, a: &Coo, block: usize, seed: u64) -> (SimResult, SimResult) {
     let g = a.affinity_graph();
     let k = k_for(a.nnz(), block);
-    let mut o = ep::EpOpts::default();
-    o.vp.seed = seed;
+    let o = ep::EpOpts { vp: VpOpts { seed, ..Default::default() }, ..Default::default() };
     let p = ep::partition_edges(&g, k, &o);
     let b = blocked_for(a, &p, block);
     (sim_blocked_launch(gpu, &b, true, block), sim_blocked_launch(gpu, &b, false, block))
@@ -522,11 +519,8 @@ pub fn ablation_table(seed: u64) -> Table {
                 format!("{:.3}s", dt.as_secs_f64()),
             ]);
         };
-        let base = || {
-            let mut o = ep::EpOpts::default();
-            o.vp.seed = seed;
-            o
-        };
+        let base =
+            || ep::EpOpts { vp: VpOpts { seed, ..Default::default() }, ..Default::default() };
         run("baseline (fast k-way, HEM, index chain)", base(), &mut t);
         {
             let mut o = base();
@@ -567,8 +561,7 @@ pub fn partition_scaling_table(seed: u64) -> Table {
         let g = a.affinity_graph();
         let k = k_for(g.m(), BLOCK_SIZE);
         let t0 = Instant::now();
-        let mut o = ep::EpOpts::default();
-        o.vp.seed = seed;
+        let o = ep::EpOpts { vp: VpOpts { seed, ..Default::default() }, ..Default::default() };
         let _ = ep::partition_edges(&g, k, &o);
         let ept = t0.elapsed();
         let t1 = Instant::now();

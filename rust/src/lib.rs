@@ -15,9 +15,13 @@
 //! * L3 (this crate) — partitioning, simulation, the asynchronous
 //!   optimization pipeline with adaptive overhead control, CLI/benches.
 //! * L2/L1 (python/, build-time only) — the blocked-gather SPMV kernel
-//!   (Pallas) inside a jax model, lowered once to `artifacts/*.hlo.txt`.
-//! * runtime — loads those artifacts via PJRT and executes them from
-//!   rust; python never runs on the request path.
+//!   (Pallas) inside a jax model, lowered once to `artifacts/*.hlo.txt`;
+//!   `runtime::aot` emits the same artifacts directly from rust when no
+//!   Python toolchain exists (`epgraph artifacts`).
+//! * runtime — loads those artifacts via the PJRT surface and executes
+//!   them from rust; offline the backend is the `vendor/xla` HLO-text
+//!   interpreter, so the full pipeline runs (and is CI-gated) with no
+//!   external dependencies.  Python never runs on the request path.
 
 pub mod apps;
 pub mod coordinator;

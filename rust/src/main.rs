@@ -5,6 +5,7 @@
 //!   epgraph cg        --matrix <name|poisson:side> [--block N] [--iters N] [--wait]
 //!   epgraph simulate  --app <name> [--block N]
 //!   epgraph bench     <fig4|fig6|table2|fig10|fig11|fig12|table3|fig13|fig14|fig15|ablation|scaling|all>
+//!   epgraph artifacts [--outdir DIR] [--configs t0,s1,m1]
 //!   epgraph info
 
 use std::collections::HashMap;
@@ -75,6 +76,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("simulate") => cmd_simulate(&flags, seed),
         Some("bench") => cmd_bench(pos.get(1).map(String::as_str).unwrap_or("all"), seed),
         Some("bench-compare") => cmd_bench_compare(&pos, &flags),
+        Some("artifacts") => cmd_artifacts(&flags),
         Some("info") => cmd_info(),
         _ => {
             println!(
@@ -84,6 +86,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                  epgraph simulate --app <b+tree|bfs|cfd|gaussian|particlefilter|streamcluster> [--block N]\n  \
                  epgraph bench <fig4|fig6|table2|fig10|fig11|fig12|table3|fig13|fig14|fig15|ablation|scaling|headline|all>\n  \
                  epgraph bench-compare <baseline.json> <current.json> [--tol 0.25]\n  \
+                 epgraph artifacts [--outdir DIR] [--configs t0,s1,m1]\n  \
                  epgraph info"
             );
             Ok(())
@@ -244,6 +247,27 @@ fn cmd_bench(which: &str, seed: u64) -> Result<()> {
         }
         other => return Err(anyhow!("unknown bench target '{other}'")),
     }
+    Ok(())
+}
+
+/// Emit the AOT artifacts (HLO text + manifest.json) with the rust
+/// emitter — the offline replacement for `make artifacts` (which needs
+/// Python+JAX; see runtime::aot for when each path is preferred).
+fn cmd_artifacts(flags: &HashMap<String, String>) -> Result<()> {
+    let outdir = flags
+        .get("outdir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    let names: Vec<String> = flags
+        .get("configs")
+        .map(|s| s.split(',').map(|c| c.trim().to_string()).filter(|c| !c.is_empty()).collect())
+        .unwrap_or_else(|| {
+            epgraph::runtime::aot::DEFAULT_CONFIGS.iter().map(|s| s.to_string()).collect()
+        });
+    let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+    let n = epgraph::runtime::aot::emit(&outdir, &name_refs)?;
+    println!("wrote {n} artifacts ({}) to {outdir:?}", names.join(", "));
+    println!("verify with `epgraph info`; tests pick them up via EPGRAPH_ARTIFACTS={outdir:?}");
     Ok(())
 }
 

@@ -256,11 +256,11 @@ pub fn rebalance_to_cap(g: &Graph, p: &mut EdgePartition, cap: usize) {
                         delta += 1; // w newly appears in `to`
                     }
                 }
-                if best.map_or(true, |(bd, _, _)| delta < bd) {
+                if best.is_none_or(|(bd, _, _)| delta < bd) {
                     best = Some((delta, i, to));
                 }
             }
-            if best.map_or(false, |(bd, _, _)| bd <= -2) {
+            if best.is_some_and(|(bd, _, _)| bd <= -2) {
                 break; // cannot do better for a binary task
             }
         }

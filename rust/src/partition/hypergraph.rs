@@ -98,7 +98,7 @@ pub fn partition_edges(g: &Graph, k: usize, opts: &HpOpts) -> EdgePartition {
         let mut assign = vcycle(&hg, k, opts, &mut rng);
         rebalance(&hg, &mut assign, k, opts.eps);
         let cost = hg.connectivity_cost(&assign, k);
-        if best.as_ref().map_or(true, |(bc, _)| cost < *bc) {
+        if best.as_ref().is_none_or(|(bc, _)| cost < *bc) {
             best = Some((cost, assign));
         }
     }
@@ -170,7 +170,7 @@ fn first_choice_matching(hg: &Hypergraph, rng: &mut Pcg32) -> Vec<u32> {
         }
         let mut best: Option<(i64, u32)> = None;
         for &t in &touched {
-            if best.map_or(true, |(bs, _)| score[t as usize] > bs) {
+            if best.is_none_or(|(bs, _)| score[t as usize] > bs) {
                 best = Some((score[t as usize], t));
             }
             score[t as usize] = 0;
@@ -414,7 +414,7 @@ fn rebalance(hg: &Hypergraph, assign: &mut [u32], k: usize, eps: f64) {
                     delta += w;
                 }
             }
-            if best.map_or(true, |(bd, _)| delta < bd) {
+            if best.is_none_or(|(bd, _)| delta < bd) {
                 best = Some((delta, v));
             }
         }

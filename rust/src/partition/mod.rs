@@ -55,8 +55,10 @@ impl Method {
         match self {
             Method::Default => default_sched::default_partition(g.m(), k),
             Method::Ep => {
-                let mut opts = ep::EpOpts::default();
-                opts.vp.seed = seed;
+                let opts = ep::EpOpts {
+                    vp: vertex::VpOpts { seed, ..Default::default() },
+                    ..Default::default()
+                };
                 ep::partition_edges(g, k, &opts)
             }
             Method::Hypergraph => {

@@ -192,7 +192,7 @@ pub fn kway_balance(g: &WGraph, part: &mut [u32], k: usize, eps: f64) {
                     continue;
                 }
                 let delta = w_int - wsum[b];
-                if best.map_or(true, |(bd, _)| delta < bd) {
+                if best.is_none_or(|(bd, _)| delta < bd) {
                     best = Some((delta, b));
                 }
             }
@@ -284,7 +284,7 @@ pub fn kway_refine(g: &WGraph, part: &mut [u32], k: usize, opts: &VpOpts) {
                 let gain = wsum[b] - w_int;
                 if gain > 0
                     && loads[b] + g.vwgt[v as usize] <= cap
-                    && best.map_or(true, |(bg, _)| gain > bg)
+                    && best.is_none_or(|(bg, _)| gain > bg)
                 {
                     best = Some((gain, b));
                 }
@@ -409,7 +409,7 @@ fn heavy_edge_matching(g: &WGraph, rng: &mut Pcg32) -> Vec<u32> {
         }
         let mut best: Option<(i64, u32)> = None;
         for (u, w) in g.neighbors(v) {
-            if u != v && mate[u as usize] == u32::MAX && best.map_or(true, |(bw, _)| w > bw) {
+            if u != v && mate[u as usize] == u32::MAX && best.is_none_or(|(bw, _)| w > bw) {
                 best = Some((w, u));
             }
         }
@@ -524,7 +524,7 @@ fn initial_bisection(g: &WGraph, frac_left: f64, opts: &VpOpts, rng: &mut Pcg32)
             }
         }
         let cut = g.edge_cut(&side);
-        if best.as_ref().map_or(true, |(bc, _)| cut < *bc) {
+        if best.as_ref().is_none_or(|(bc, _)| cut < *bc) {
             best = Some((cut, side));
         }
     }

@@ -852,7 +852,7 @@ impl KwayBuckets {
         let mut best: Option<(u32, u32, usize)> = None; // (bucket, v, b)
         for b in 0..self.k {
             if let Some((v, s)) = self.peek_max(b) {
-                if best.map_or(true, |(bs, _, _)| s > bs) {
+                if best.is_none_or(|(bs, _, _)| s > bs) {
                     best = Some((s, v, b));
                 }
             }
@@ -1235,7 +1235,7 @@ fn kway_refine_ws(
                     own = ws.conn_wgt[i];
                 } else if loads[b] + vw <= cap {
                     let w = ws.conn_wgt[i];
-                    if best.map_or(true, |(bw, bb)| w > bw || (w == bw && b < bb)) {
+                    if best.is_none_or(|(bw, bb)| w > bw || (w == bw && b < bb)) {
                         best = Some((w, b));
                     }
                 }
@@ -1403,7 +1403,7 @@ fn kway_balance_ws(
                 let b = ws.conn_blk[i] as usize;
                 if b != from && loads[b] + vw <= cap {
                     let w = ws.conn_wgt[i];
-                    if best.map_or(true, |(bw, bb)| w > bw || (w == bw && b < bb)) {
+                    if best.is_none_or(|(bw, bb)| w > bw || (w == bw && b < bb)) {
                         best = Some((w, b));
                     }
                 }

@@ -1,0 +1,391 @@
+//! Rust-side AOT emitter: lower the blocked-SPMV model to HLO text +
+//! `manifest.json` without Python.
+//!
+//! `python/compile/aot.py` (JAX → StableHLO → HLO text) is the
+//! preferred lowering when a Python+JAX toolchain exists — it lowers
+//! the *actual* Pallas kernel and stays the ground truth for real-TPU
+//! runs.  Offline (and in CI) that toolchain is absent, so this module
+//! emits the same computation directly: the blocked-gather SPMV
+//! (stage via gather, per-task read from the staged copy, multiply,
+//! one scatter-add into y) and the fused CG iteration, at the same
+//! static shape-config ladder (`configs.py`), writing the same
+//! `manifest.json` contract `runtime::Manifest` parses.
+//!
+//! Emit-then-interpret is self-validating: the artifacts produced here
+//! are executed by the `vendor/xla` HLO interpreter and checked
+//! against the pure-rust `BlockedSpmv::execute_ref` / `Coo::spmv`
+//! oracles in `tests/runtime_pjrt.rs` and `tests/coordinator_e2e.rs`.
+//!
+//! Padding contract (mirrors the Pallas model):
+//! * `x_gather` padding slots are 0 → they stage `x[0]`, harmless
+//!   because the corresponding `vals` are 0.
+//! * `rows_global` padding tasks point at `n_out`, one past the output
+//!   — XLA scatter semantics *drop* out-of-bounds updates, which is
+//!   exactly the dump-slot behaviour of the reference.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// One rung of the static shape ladder (mirrors
+/// `python/compile/configs.py::CONFIGS`).
+#[derive(Clone, Copy, Debug)]
+pub struct AotConfig {
+    pub name: &'static str,
+    pub n_in: usize,
+    pub n_out: usize,
+    pub k: usize,
+    pub e: usize,
+    pub c: usize,
+}
+
+impl AotConfig {
+    /// Staged x copy + (cols_local, vals, partials) per task, f32/i32 —
+    /// the "shared memory" footprint reported in the manifest.
+    pub fn vmem_bytes_per_block(&self) -> usize {
+        4 * (self.c + 3 * self.e)
+    }
+}
+
+/// The ladder, identical to configs.py.
+pub const LADDER: &[AotConfig] = &[
+    AotConfig { name: "t0", n_in: 1024, n_out: 1024, k: 8, e: 256, c: 256 },
+    AotConfig { name: "s1", n_in: 4096, n_out: 4096, k: 16, e: 512, c: 512 },
+    AotConfig { name: "m1", n_in: 16384, n_out: 16384, k: 64, e: 512, c: 512 },
+    AotConfig { name: "m2", n_in: 65536, n_out: 65536, k: 128, e: 1024, c: 1024 },
+    AotConfig { name: "l1", n_in: 131072, n_out: 131072, k: 256, e: 1024, c: 1024 },
+];
+
+/// Configs the self-provisioned (test/CI) artifact set covers: the
+/// small rungs the integration suites exercise.
+pub const DEFAULT_CONFIGS: &[&str] = &["t0", "s1", "m1"];
+
+pub fn config(name: &str) -> Option<&'static AotConfig> {
+    LADDER.iter().find(|c| c.name == name)
+}
+
+/// `{0, c, 2c, ...}` — flat base offset of each block's staged slab.
+fn block_bases(k: usize, c: usize) -> String {
+    let mut s = String::with_capacity(k * 8);
+    for b in 0..k {
+        if b > 0 {
+            s.push_str(", ");
+        }
+        s.push_str(&(b * c).to_string());
+    }
+    s
+}
+
+/// The shared scalar-add combiner region (scatter/reduce `to_apply`).
+fn add_region() -> &'static str {
+    "%add_f32.1 (lhs.2: f32[], rhs.3: f32[]) -> f32[] {\n\
+     \x20 %lhs.2 = f32[] parameter(0)\n\
+     \x20 %rhs.3 = f32[] parameter(1)\n\
+     \x20 ROOT %add.4 = f32[] add(f32[] %lhs.2, f32[] %rhs.3)\n\
+     }\n"
+}
+
+/// The blocked-SPMV body shared by both entry points: stages each
+/// block's unique x entries with one gather, reads per-task operands
+/// from the staged copy with a second (flattened, block-offset) gather,
+/// multiplies by the task values, and scatter-adds into y.
+///
+/// `x` is the %name of the input vector; instruction ids start at
+/// `id0`; returns (text, %name of y, %name of the f32[] zero constant
+/// — reused by cg_step as compare/reduce operand — and the next free
+/// id).
+fn spmv_body(
+    cfg: &AotConfig,
+    x: &str,
+    x_gather: &str,
+    cols_local: &str,
+    vals: &str,
+    rows_global: &str,
+    id0: usize,
+) -> (String, String, String, usize) {
+    let (n_in, n_out, k, e, c) = (cfg.n_in, cfg.n_out, cfg.k, cfg.e, cfg.c);
+    let (kc, ke) = (k * c, k * e);
+    let id = |i: usize| id0 + i;
+    let text = format!(
+        "  %gidx.{i0} = s32[{k},{c},1]{{2,1,0}} reshape(s32[{k},{c}]{{1,0}} %{x_gather})\n\
+         \x20 %staged.{i1} = f32[{k},{c}]{{1,0}} gather(f32[{n_in}]{{0}} %{x}, s32[{k},{c},1]{{2,1,0}} %gidx.{i0}), offset_dims={{}}, collapsed_slice_dims={{0}}, start_index_map={{0}}, index_vector_dim=2, slice_sizes={{1}}\n\
+         \x20 %staged_flat.{i2} = f32[{kc}]{{0}} reshape(f32[{k},{c}]{{1,0}} %staged.{i1})\n\
+         \x20 %block_base.{i3} = s32[{k}]{{0}} constant({{{bases}}})\n\
+         \x20 %block_base_b.{i4} = s32[{k},{e}]{{1,0}} broadcast(s32[{k}]{{0}} %block_base.{i3}), dimensions={{0}}\n\
+         \x20 %cols_flat.{i5} = s32[{k},{e}]{{1,0}} add(s32[{k},{e}]{{1,0}} %{cols_local}, s32[{k},{e}]{{1,0}} %block_base_b.{i4})\n\
+         \x20 %cidx.{i6} = s32[{k},{e},1]{{2,1,0}} reshape(s32[{k},{e}]{{1,0}} %cols_flat.{i5})\n\
+         \x20 %xval.{i7} = f32[{k},{e}]{{1,0}} gather(f32[{kc}]{{0}} %staged_flat.{i2}, s32[{k},{e},1]{{2,1,0}} %cidx.{i6}), offset_dims={{}}, collapsed_slice_dims={{0}}, start_index_map={{0}}, index_vector_dim=2, slice_sizes={{1}}\n\
+         \x20 %partials.{i8} = f32[{k},{e}]{{1,0}} multiply(f32[{k},{e}]{{1,0}} %{vals}, f32[{k},{e}]{{1,0}} %xval.{i7})\n\
+         \x20 %zero.{i9} = f32[] constant(0)\n\
+         \x20 %y0.{i10} = f32[{n_out}]{{0}} broadcast(f32[] %zero.{i9}), dimensions={{}}\n\
+         \x20 %ridx.{i11} = s32[{ke},1]{{1,0}} reshape(s32[{k},{e}]{{1,0}} %{rows_global})\n\
+         \x20 %upd.{i12} = f32[{ke}]{{0}} reshape(f32[{k},{e}]{{1,0}} %partials.{i8})\n\
+         \x20 %y.{i13} = f32[{n_out}]{{0}} scatter(f32[{n_out}]{{0}} %y0.{i10}, s32[{ke},1]{{1,0}} %ridx.{i11}, f32[{ke}]{{0}} %upd.{i12}), update_window_dims={{}}, inserted_window_dims={{0}}, scatter_dims_to_operand_dims={{0}}, index_vector_dim=1, to_apply=%add_f32.1\n",
+        bases = block_bases(k, c),
+        i0 = id(0),
+        i1 = id(1),
+        i2 = id(2),
+        i3 = id(3),
+        i4 = id(4),
+        i5 = id(5),
+        i6 = id(6),
+        i7 = id(7),
+        i8 = id(8),
+        i9 = id(9),
+        i10 = id(10),
+        i11 = id(11),
+        i12 = id(12),
+        i13 = id(13),
+    );
+    (text, format!("y.{}", id(13)), format!("zero.{}", id(9)), id0 + 14)
+}
+
+/// Full SPMV module: `(x, x_gather, cols_local, vals, rows_global) ->
+/// (y,)` at config `cfg`.
+pub fn spmv_hlo(cfg: &AotConfig) -> String {
+    let (n_in, n_out, k, e, c) = (cfg.n_in, cfg.n_out, cfg.k, cfg.e, cfg.c);
+    let mut out = format!(
+        "HloModule spmv_{name}, entry_computation_layout={{(f32[{n_in}]{{0}}, s32[{k},{c}]{{1,0}}, s32[{k},{e}]{{1,0}}, f32[{k},{e}]{{1,0}}, s32[{k},{e}]{{1,0}})->(f32[{n_out}]{{0}})}}\n\n",
+        name = cfg.name,
+    );
+    out.push_str(add_region());
+    out.push_str(&format!(
+        "\nENTRY %main.5 (x.6: f32[{n_in}], x_gather.7: s32[{k},{c}], cols_local.8: s32[{k},{e}], vals.9: f32[{k},{e}], rows_global.10: s32[{k},{e}]) -> (f32[{n_out}]) {{\n\
+         \x20 %x.6 = f32[{n_in}]{{0}} parameter(0)\n\
+         \x20 %x_gather.7 = s32[{k},{c}]{{1,0}} parameter(1)\n\
+         \x20 %cols_local.8 = s32[{k},{e}]{{1,0}} parameter(2)\n\
+         \x20 %vals.9 = f32[{k},{e}]{{1,0}} parameter(3)\n\
+         \x20 %rows_global.10 = s32[{k},{e}]{{1,0}} parameter(4)\n",
+    ));
+    let (body, y, _zero, next) =
+        spmv_body(cfg, "x.6", "x_gather.7", "cols_local.8", "vals.9", "rows_global.10", 11);
+    out.push_str(&body);
+    out.push_str(&format!(
+        "  ROOT %out.{next} = (f32[{n_out}]{{0}}) tuple(f32[{n_out}]{{0}} %{y})\n}}\n"
+    ));
+    out
+}
+
+/// Full CG-iteration module: `(x, r, p, rz, x_gather, cols_local,
+/// vals, rows_global) -> (x', r', p', rz')` at config `cfg` (square).
+///
+/// Matches `python/compile/model.py::cg_step`: `ap = A·p`, `alpha =
+/// rz / <p, ap>`, state update, `rz' = <r', r'>`, `beta = rz' / rz`,
+/// with the same `==0 → 1` division guards so padded/converged systems
+/// stay finite.
+pub fn cg_step_hlo(cfg: &AotConfig) -> String {
+    assert_eq!(cfg.n_in, cfg.n_out, "CG needs a square system");
+    let (n, k, e, c) = (cfg.n_out, cfg.k, cfg.e, cfg.c);
+    let mut out = format!(
+        "HloModule cg_step_{name}, entry_computation_layout={{(f32[{n}]{{0}}, f32[{n}]{{0}}, f32[{n}]{{0}}, f32[], s32[{k},{c}]{{1,0}}, s32[{k},{e}]{{1,0}}, f32[{k},{e}]{{1,0}}, s32[{k},{e}]{{1,0}})->(f32[{n}]{{0}}, f32[{n}]{{0}}, f32[{n}]{{0}}, f32[])}}\n\n",
+        name = cfg.name,
+    );
+    out.push_str(add_region());
+    out.push_str(&format!(
+        "\nENTRY %main.5 (x.6: f32[{n}], r.7: f32[{n}], p.8: f32[{n}], rz.9: f32[], x_gather.10: s32[{k},{c}], cols_local.11: s32[{k},{e}], vals.12: f32[{k},{e}], rows_global.13: s32[{k},{e}]) -> (f32[{n}], f32[{n}], f32[{n}], f32[]) {{\n\
+         \x20 %x.6 = f32[{n}]{{0}} parameter(0)\n\
+         \x20 %r.7 = f32[{n}]{{0}} parameter(1)\n\
+         \x20 %p.8 = f32[{n}]{{0}} parameter(2)\n\
+         \x20 %rz.9 = f32[] parameter(3)\n\
+         \x20 %x_gather.10 = s32[{k},{c}]{{1,0}} parameter(4)\n\
+         \x20 %cols_local.11 = s32[{k},{e}]{{1,0}} parameter(5)\n\
+         \x20 %vals.12 = f32[{k},{e}]{{1,0}} parameter(6)\n\
+         \x20 %rows_global.13 = s32[{k},{e}]{{1,0}} parameter(7)\n",
+    ));
+    // ap = A·p; the spmv body's f32[] zero constant is reused below
+    let (body, ap, zero, next) =
+        spmv_body(cfg, "p.8", "x_gather.10", "cols_local.11", "vals.12", "rows_global.13", 14);
+    out.push_str(&body);
+    let id = |i: usize| next + i;
+    out.push_str(&format!(
+        "  %denom.{i0} = f32[] dot(f32[{n}]{{0}} %p.8, f32[{n}]{{0}} %{ap}), lhs_contracting_dims={{0}}, rhs_contracting_dims={{0}}\n\
+         \x20 %one.{i1} = f32[] constant(1)\n\
+         \x20 %denom_zero.{i2} = pred[] compare(f32[] %denom.{i0}, f32[] %{zero}), direction=EQ\n\
+         \x20 %safe_denom.{i3} = f32[] select(pred[] %denom_zero.{i2}, f32[] %one.{i1}, f32[] %denom.{i0})\n\
+         \x20 %alpha.{i4} = f32[] divide(f32[] %rz.9, f32[] %safe_denom.{i3})\n\
+         \x20 %alpha_b.{i5} = f32[{n}]{{0}} broadcast(f32[] %alpha.{i4}), dimensions={{}}\n\
+         \x20 %alpha_p.{i6} = f32[{n}]{{0}} multiply(f32[{n}]{{0}} %alpha_b.{i5}, f32[{n}]{{0}} %p.8)\n\
+         \x20 %x_new.{i7} = f32[{n}]{{0}} add(f32[{n}]{{0}} %x.6, f32[{n}]{{0}} %alpha_p.{i6})\n\
+         \x20 %alpha_ap.{i8} = f32[{n}]{{0}} multiply(f32[{n}]{{0}} %alpha_b.{i5}, f32[{n}]{{0}} %{ap})\n\
+         \x20 %r_new.{i9} = f32[{n}]{{0}} subtract(f32[{n}]{{0}} %r.7, f32[{n}]{{0}} %alpha_ap.{i8})\n\
+         \x20 %rr.{i10} = f32[{n}]{{0}} multiply(f32[{n}]{{0}} %r_new.{i9}, f32[{n}]{{0}} %r_new.{i9})\n\
+         \x20 %rz_new.{i11} = f32[] reduce(f32[{n}]{{0}} %rr.{i10}, f32[] %{zero}), dimensions={{0}}, to_apply=%add_f32.1\n\
+         \x20 %rz_zero.{i12} = pred[] compare(f32[] %rz.9, f32[] %{zero}), direction=EQ\n\
+         \x20 %safe_rz.{i13} = f32[] select(pred[] %rz_zero.{i12}, f32[] %one.{i1}, f32[] %rz.9)\n\
+         \x20 %beta.{i14} = f32[] divide(f32[] %rz_new.{i11}, f32[] %safe_rz.{i13})\n\
+         \x20 %beta_b.{i15} = f32[{n}]{{0}} broadcast(f32[] %beta.{i14}), dimensions={{}}\n\
+         \x20 %beta_p.{i16} = f32[{n}]{{0}} multiply(f32[{n}]{{0}} %beta_b.{i15}, f32[{n}]{{0}} %p.8)\n\
+         \x20 %p_new.{i17} = f32[{n}]{{0}} add(f32[{n}]{{0}} %r_new.{i9}, f32[{n}]{{0}} %beta_p.{i16})\n\
+         \x20 ROOT %out.{i18} = (f32[{n}]{{0}}, f32[{n}]{{0}}, f32[{n}]{{0}}, f32[]) tuple(f32[{n}]{{0}} %x_new.{i7}, f32[{n}]{{0}} %r_new.{i9}, f32[{n}]{{0}} %p_new.{i17}, f32[] %rz_new.{i11})\n}}\n",
+        i0 = id(0),
+        i1 = id(1),
+        i2 = id(2),
+        i3 = id(3),
+        i4 = id(4),
+        i5 = id(5),
+        i6 = id(6),
+        i7 = id(7),
+        i8 = id(8),
+        i9 = id(9),
+        i10 = id(10),
+        i11 = id(11),
+        i12 = id(12),
+        i13 = id(13),
+        i14 = id(14),
+        i15 = id(15),
+        i16 = id(16),
+        i17 = id(17),
+        i18 = id(18),
+    ));
+    out
+}
+
+fn manifest_entry(entry: &str, cfg: &AotConfig, file: &str) -> String {
+    format!(
+        "    {{\"entry\": \"{entry}\", \"config\": \"{name}\", \"file\": \"{file}\", \
+         \"n_in\": {n_in}, \"n_out\": {n_out}, \"k\": {k}, \"e\": {e}, \"c\": {c}, \
+         \"vmem_bytes_per_block\": {vmem}}}",
+        name = cfg.name,
+        n_in = cfg.n_in,
+        n_out = cfg.n_out,
+        k = cfg.k,
+        e = cfg.e,
+        c = cfg.c,
+        vmem = cfg.vmem_bytes_per_block(),
+    )
+}
+
+/// Emit HLO text + manifest for `names` into `outdir`.  Returns the
+/// number of artifacts written.  Overwrites existing files (emission
+/// is deterministic, so this is idempotent).
+pub fn emit(outdir: &Path, names: &[&str]) -> Result<usize> {
+    // resolve every name before touching the filesystem, so a typo'd
+    // --configs doesn't leave an empty artifacts dir behind
+    let cfgs: Vec<&AotConfig> = names
+        .iter()
+        .map(|name| {
+            config(name).ok_or_else(|| {
+                anyhow!(
+                    "unknown artifact config '{name}' — ladder: {}",
+                    LADDER.iter().map(|c| c.name).collect::<Vec<_>>().join(", ")
+                )
+            })
+        })
+        .collect::<Result<_>>()?;
+    std::fs::create_dir_all(outdir)
+        .with_context(|| format!("creating artifacts dir {outdir:?}"))?;
+    let mut entries = Vec::new();
+    for cfg in cfgs {
+        for (entry, text) in
+            [("spmv", spmv_hlo(cfg)), ("cg_step", cg_step_hlo(cfg))]
+        {
+            let file = format!("{entry}_{}.hlo.txt", cfg.name);
+            let path = outdir.join(&file);
+            std::fs::write(&path, &text).with_context(|| format!("writing {path:?}"))?;
+            entries.push(manifest_entry(entry, cfg, &file));
+        }
+    }
+    let manifest = format!(
+        "{{\n  \"format\": \"hlo-text\",\n  \"version\": 1,\n  \"generator\": \"rust-aot\",\n  \"artifacts\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    );
+    let count = entries.len();
+    let path = outdir.join("manifest.json");
+    std::fs::write(&path, manifest).with_context(|| format!("writing {path:?}"))?;
+    Ok(count)
+}
+
+/// Emit the default (test/CI) artifact set.
+pub fn emit_default(outdir: &Path) -> Result<usize> {
+    emit(outdir, DEFAULT_CONFIGS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn compile(text: &str) {
+        let proto = xla::HloModuleProto::from_text(text).expect("emitted HLO must parse");
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let client = xla::PjRtClient::cpu().expect("interpreter available");
+        client.compile(&comp).expect("emitted HLO must validate");
+    }
+
+    #[test]
+    fn every_ladder_config_parses_and_compiles() {
+        for cfg in LADDER {
+            compile(&spmv_hlo(cfg));
+            compile(&cg_step_hlo(cfg));
+        }
+    }
+
+    #[test]
+    fn emit_writes_loadable_manifest() {
+        let dir = std::env::temp_dir().join(format!("epgraph-aot-test-{}", std::process::id()));
+        let n = emit(&dir, &["t0"]).unwrap();
+        assert_eq!(n, 2);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let t0 = m.pick("spmv", 512, 512, 4, 128, 128).expect("t0 fits");
+        assert_eq!(t0.config, "t0");
+        assert!(m.hlo_path(t0).exists());
+        let cg = m.pick("cg_step", 512, 512, 4, 128, 128).expect("cg_step t0 fits");
+        assert_eq!(cg.entry, "cg_step");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unknown_config_is_actionable() {
+        let dir = std::env::temp_dir().join("epgraph-aot-test-unknown");
+        let err = emit(&dir, &["nope"]).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown artifact config"));
+    }
+
+    #[test]
+    fn emitted_spmv_executes_tiny_identity() {
+        // 4x4 identity packed into block 0 of the t0 shape: y == x.
+        let cfg = config("t0").unwrap();
+        let proto = xla::HloModuleProto::from_text(&spmv_hlo(cfg)).unwrap();
+        let client = xla::PjRtClient::cpu().unwrap();
+        let exe = client.compile(&xla::XlaComputation::from_proto(&proto)).unwrap();
+
+        let mut x = vec![0f32; cfg.n_in];
+        x[0] = 2.0;
+        x[1] = -3.0;
+        x[2] = 5.0;
+        x[3] = 7.0;
+        let mut x_gather = vec![0i32; cfg.k * cfg.c];
+        let mut cols_local = vec![0i32; cfg.k * cfg.e];
+        let mut vals = vec![0f32; cfg.k * cfg.e];
+        let mut rows_global = vec![cfg.n_out as i32; cfg.k * cfg.e];
+        for i in 0..4 {
+            x_gather[i] = i as i32; // block 0 stages x[0..4]
+            cols_local[i] = i as i32;
+            vals[i] = 1.0;
+            rows_global[i] = i as i32;
+        }
+        let lit2 = |v: &[i32], rows: usize, cols: usize| {
+            xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64]).unwrap()
+        };
+        let args = [
+            xla::Literal::vec1(&x),
+            lit2(&x_gather, cfg.k, cfg.c),
+            lit2(&cols_local, cfg.k, cfg.e),
+            xla::Literal::vec1(&vals).reshape(&[cfg.k as i64, cfg.e as i64]).unwrap(),
+            lit2(&rows_global, cfg.k, cfg.e),
+        ];
+        let arg_refs: Vec<&xla::Literal> = args.iter().collect();
+        let out = exe.execute(&arg_refs).unwrap();
+        let y = out[0][0]
+            .to_literal_sync()
+            .unwrap()
+            .to_tuple1()
+            .unwrap()
+            .to_vec::<f32>()
+            .unwrap();
+        assert_eq!(y.len(), cfg.n_out);
+        assert_eq!(&y[..4], &[2.0, -3.0, 5.0, 7.0]);
+        assert!(y[4..].iter().all(|&v| v == 0.0));
+    }
+}

@@ -4,7 +4,10 @@
 //! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `client.compile` → `execute`.  Executables are cached; python is
-//! never invoked here.
+//! never invoked here.  Offline, the `xla` crate is the `vendor/xla`
+//! HLO interpreter, so this engine works everywhere; `compile` errors
+//! mean the artifact uses ops outside the interpreter's supported set
+//! (re-lower, or swap in a real PJRT binding).
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -46,7 +49,7 @@ impl Engine {
             .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
         let proto = xla::HloModuleProto::from_text_file(path_str)
             .map_err(|e| anyhow!("parsing {path:?}: {e}"))
-            .context("artifact HLO text unreadable — re-run `make artifacts`")?;
+            .context("artifact HLO text unreadable — re-run `epgraph artifacts` (or `make artifacts`)")?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client

@@ -52,8 +52,9 @@ pub struct Manifest {
 impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {path:?} — run `epgraph artifacts` (or `make artifacts`) first")
+        })?;
         let json = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
         if json.get("format").and_then(Json::as_str) != Some("hlo-text") {
             return Err(anyhow!("manifest format must be hlo-text"));

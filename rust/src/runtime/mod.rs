@@ -1,7 +1,25 @@
-//! PJRT runtime: loads the AOT artifacts (HLO text) produced by
-//! `make artifacts` and executes them on the request path.  Python is
-//! build-time only; after artifacts exist the binary is self-contained.
+//! PJRT runtime: load blocked-SPMV/CG artifacts (HLO text), compile
+//! once per (entry, config), execute from the rust request path.
+//!
+//! Two lowering paths produce the artifacts this module consumes:
+//!
+//! * `python/compile/aot.py` (`make artifacts`) — JAX/Pallas lowered to
+//!   HLO text.  Preferred when a Python+JAX toolchain exists: it lowers
+//!   the actual Pallas kernel and is the ground truth for real-TPU
+//!   runs.
+//! * [`aot`] (`epgraph artifacts`) — the rust-side emitter that
+//!   generates the same computation and the same `manifest.json`
+//!   contract directly from the blocked model.  Always available:
+//!   no Python on the build host, none at runtime.
+//!
+//! Execution goes through the `xla` crate surface
+//! (`PjRtClient::cpu → compile → execute`).  Offline that crate is
+//! `vendor/xla`, a native HLO-text interpreter, so the whole
+//! partition→pack→execute pipeline runs (and is CI-gated end to end)
+//! with no external backend; against a real PJRT binding the same code
+//! drives real hardware.  Python is never invoked on the request path.
 
+pub mod aot;
 pub mod engine;
 pub mod manifest;
 

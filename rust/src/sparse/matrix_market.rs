@@ -45,7 +45,7 @@ pub fn read_matrix_market<R: Read>(r: R) -> Result<Coo, MmError> {
         return Err(MmError::Parse(format!("unsupported kind: {} {}", h[1], h[2])));
     }
     let field = h[3]; // real | integer | pattern
-    let symmetric = h.get(4).map_or(false, |&s| s == "symmetric");
+    let symmetric = h.get(4).is_some_and(|&s| s == "symmetric");
     if !matches!(field, "real" | "integer" | "pattern") {
         return Err(MmError::Parse(format!("unsupported field: {field}")));
     }

@@ -2,21 +2,69 @@
 //! not itself compiled as a test crate; each test file does
 //! `mod common;`).
 
-use epgraph::runtime::Engine;
+use std::path::PathBuf;
+use std::sync::OnceLock;
 
-/// Load the PJRT engine, or `None` to skip: artifacts may be missing
-/// (`make artifacts` not run) or the backend unavailable (the offline
-/// `vendor/xla` stub always reports unavailable).
+use epgraph::runtime::{aot, Engine};
+
+/// `EPGRAPH_REQUIRE_RUNTIME=1` turns runtime skips into hard failures —
+/// the CI `e2e` job sets it so the interpreter backend can never
+/// silently regress back to "skipped".
+fn require_runtime() -> bool {
+    std::env::var("EPGRAPH_REQUIRE_RUNTIME").is_ok_and(|v| v == "1")
+}
+
+/// Artifacts for the runtime tests.  An explicitly set
+/// `EPGRAPH_ARTIFACTS` dir (e.g. real `make artifacts` output) is used
+/// as-is — and is an *error* when unusable, never silently replaced,
+/// so a typo can't make the suites pass against the wrong artifact
+/// set.  A pre-built local `./artifacts` dir is picked up next.
+/// Otherwise the rust AOT emitter self-provisions the default config
+/// set into a per-process temp dir, so the suites run everywhere —
+/// no Python, no network, no prior setup.
+fn artifacts_dir() -> &'static Result<PathBuf, String> {
+    static DIR: OnceLock<Result<PathBuf, String>> = OnceLock::new();
+    DIR.get_or_init(|| {
+        if let Some(explicit) = std::env::var_os("EPGRAPH_ARTIFACTS").map(PathBuf::from) {
+            if explicit.join("manifest.json").exists() {
+                return Ok(explicit);
+            }
+            return Err(format!(
+                "EPGRAPH_ARTIFACTS={explicit:?} is set but has no manifest.json — \
+                 fix the path or unset it to use self-provisioned artifacts"
+            ));
+        }
+        let local = PathBuf::from("artifacts");
+        if local.join("manifest.json").exists() {
+            return Ok(local);
+        }
+        // stable name: emission is deterministic and idempotent, so
+        // re-runs overwrite in place instead of accumulating pid-keyed
+        // litter under the temp dir
+        let dir = std::env::temp_dir().join("epgraph-artifacts-selfprov");
+        match aot::emit_default(&dir) {
+            Ok(_) => Ok(dir),
+            Err(e) => Err(format!("self-provisioning AOT artifacts into {dir:?}: {e:#}")),
+        }
+    })
+}
+
+/// Load the runtime engine, or `None` to skip the test.  With the
+/// `vendor/xla` interpreter and the self-provisioning emitter this
+/// only skips on real environment breakage (e.g. unwritable temp dir);
+/// under `EPGRAPH_REQUIRE_RUNTIME=1` any skip becomes a failure.
 pub fn engine_or_skip() -> Option<Engine> {
-    let d = epgraph::runtime::default_artifacts_dir();
-    if !d.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts missing at {d:?} — run `make artifacts` first");
-        return None;
-    }
-    match Engine::load(&d) {
-        Ok(e) => Some(e),
-        Err(e) => {
-            eprintln!("skipping: PJRT backend unavailable: {e:#}");
+    let attempt = match artifacts_dir() {
+        Ok(dir) => Engine::load(dir).map_err(|e| format!("{e:#}")),
+        Err(e) => Err(e.clone()),
+    };
+    match attempt {
+        Ok(engine) => Some(engine),
+        Err(msg) => {
+            if require_runtime() {
+                panic!("EPGRAPH_REQUIRE_RUNTIME=1 but the runtime is unavailable: {msg}");
+            }
+            eprintln!("skipping: runtime unavailable: {msg}");
             None
         }
     }

@@ -1,7 +1,10 @@
 //! Integration: the full coordinator pipeline (async optimizer +
-//! adaptive control + PJRT CG) end to end.  Requires `make artifacts`
-//! AND a real PJRT backend; with missing artifacts or the offline `xla`
-//! stub (vendor/xla) these tests skip rather than fail.
+//! adaptive control + PJRT CG) end to end.  Artifacts self-provision
+//! through the rust AOT emitter and execute on the `vendor/xla` HLO
+//! interpreter, so the whole partition→pack→execute pipeline runs
+//! everywhere; a real `EPGRAPH_ARTIFACTS` set / PJRT backend is used
+//! when present.  `EPGRAPH_REQUIRE_RUNTIME=1` (the CI e2e job) turns
+//! any skip into a failure.
 
 mod common;
 

@@ -33,8 +33,10 @@ fn prop_new_pipeline_is_valid_and_balanced() {
             return Ok(());
         }
         let k = 2 + rng.gen_range(14);
-        let mut opts = EpOpts::default();
-        opts.vp.seed = rng.next_u64();
+        let opts = EpOpts {
+            vp: VpOpts { seed: rng.next_u64(), ..Default::default() },
+            ..Default::default()
+        };
         let p = ep::partition_edges(&graph, k, &opts);
         if p.assign.len() != graph.m() {
             return Err(format!("arity {} != {}", p.assign.len(), graph.m()));
@@ -68,8 +70,10 @@ fn cut_cost_parity_with_seed_reference() {
     let mut new_total = 0u64;
     let mut ref_total = 0u64;
     for (name, g, k) in &cases {
-        let mut opts = EpOpts::default();
-        opts.vp.seed = 0xFEED;
+        let opts = EpOpts {
+            vp: VpOpts { seed: 0xFEED, ..Default::default() },
+            ..Default::default()
+        };
         let new_cut = quality::vertex_cut_cost(g, &ep::partition_edges(g, *k, &opts));
         let ref_cut = quality::vertex_cut_cost(g, &reference::partition_edges_naive(g, *k, &opts));
         eprintln!("parity {name}: new={new_cut} ref={ref_cut}");
@@ -89,8 +93,10 @@ fn cut_cost_parity_with_seed_reference() {
 #[test]
 fn same_seed_same_partition_across_runs() {
     let g = ggen::power_law(8000, 3, 21);
-    let mut opts = EpOpts::default();
-    opts.vp.seed = 0xD15EA5E;
+    let opts = EpOpts {
+        vp: VpOpts { seed: 0xD15EA5E, ..Default::default() },
+        ..Default::default()
+    };
     let a = ep::partition_edges(&g, 24, &opts);
     let b = ep::partition_edges(&g, 24, &opts);
     assert_eq!(a.assign, b.assign, "same seed must give identical partitions");
@@ -103,9 +109,10 @@ fn partition_is_identical_for_every_thread_count() {
     // and parallel projection — all must be pure in (graph, seed).
     let g = ggen::power_law(12000, 3, 33);
     let run = |threads: usize| {
-        let mut opts = EpOpts::default();
-        opts.vp.seed = 0xAB5EED;
-        opts.vp.threads = threads;
+        let opts = EpOpts {
+            vp: VpOpts { seed: 0xAB5EED, threads, ..Default::default() },
+            ..Default::default()
+        };
         ep::partition_edges(&g, 32, &opts).assign
     };
     let seq = run(1);

@@ -63,8 +63,8 @@ fn prop_theorem1_holds_for_ep() {
         }
         let k = 2 + rng.gen_range(8);
         let seed = rng.next_u64();
-        let mut opts = ep::EpOpts::default();
-        opts.vp.seed = seed;
+        let opts =
+            ep::EpOpts { vp: VpOpts { seed, ..Default::default() }, ..Default::default() };
         let p = ep::partition_edges(&graph, k, &opts);
         let cep = quality::vertex_cut_cost(&graph, &p);
         let aux = ep::aux_cut_cost(&graph, &p, ChainOrder::Index, seed);

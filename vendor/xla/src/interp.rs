@@ -1,0 +1,945 @@
+//! HLO evaluator: executes a parsed module on host buffers.
+//!
+//! Covers the op set the blocked-SPMV/CG artifacts use — parameter,
+//! constant, broadcast, reshape, gather, scatter (add combiner), dot,
+//! elementwise add/subtract/multiply/divide, reduce (add combiner),
+//! select, compare, tuple, get-tuple-element — for every supported
+//! element type.  Gather and scatter implement the element-indexing
+//! form the artifacts are emitted in (all-1 slice sizes, no window
+//! dims): gather clamps out-of-range indices like XLA does, scatter
+//! *drops* out-of-range updates like XLA does (the artifacts route
+//! padding tasks to the out-of-range `n_out` dump slot on purpose).
+//!
+//! `validate` runs the structural checks once at compile time so
+//! `execute` can assume a well-formed module; anything outside the
+//! supported subset fails at compile with an actionable message, never
+//! silently mis-executes.
+
+use crate::literal::{Buffer, Literal};
+use crate::parser::{BinKind, CmpDir, Computation, HloModule, Instr, Op};
+use crate::{XlaError, XlaResult};
+
+/// Row-major strides for `dims`.
+fn strides(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+fn product(dims: &[usize]) -> usize {
+    dims.iter().product()
+}
+
+/// Is `comp` the canonical scalar-add combiner (`add(param0, param1)`)?
+fn is_scalar_add(comp: &Computation) -> bool {
+    if comp.params.len() != 2 {
+        return false;
+    }
+    match comp.instrs[comp.root].op {
+        Op::Binary { kind: BinKind::Add, lhs, rhs } => {
+            let is_param = |i: usize| matches!(comp.instrs[i].op, Op::Parameter(_));
+            is_param(lhs) && is_param(rhs) && lhs != rhs
+        }
+        _ => false,
+    }
+}
+
+/// Gather/scatter restricted-form check: index-vector over the full
+/// operand rank selecting single elements.
+fn check_element_indexing(
+    name: &str,
+    what: &str,
+    operand_rank: usize,
+    window_dims: &[usize],
+    full_rank_dims: &[usize],
+    dim_map: &[usize],
+    index_vector_dim: usize,
+    indices_shape: &[usize],
+) -> XlaResult<()> {
+    let identity: Vec<usize> = (0..operand_rank).collect();
+    if !window_dims.is_empty() || full_rank_dims != identity.as_slice() || dim_map != identity.as_slice() {
+        return Err(XlaError::new(format!(
+            "{name}: only element-indexing {what} is supported \
+             (no window dims, slice over all operand dims)"
+        )));
+    }
+    if index_vector_dim != indices_shape.len().saturating_sub(1)
+        || indices_shape.last().copied() != Some(operand_rank)
+    {
+        return Err(XlaError::new(format!(
+            "{name}: {what} index_vector_dim must be the trailing indices dim \
+             of size = operand rank"
+        )));
+    }
+    Ok(())
+}
+
+/// Structural validation at compile time: def-before-use, add-combiner
+/// regions, and the restricted gather/scatter/dot/reduce forms — all
+/// checked against the *declared* instruction shapes, so an artifact
+/// outside the supported subset is rejected by `compile`, never
+/// mid-`execute` on the request path.
+pub fn validate(module: &HloModule) -> XlaResult<()> {
+    for comp in &module.computations {
+        for (i, inst) in comp.instrs.iter().enumerate() {
+            let check = |o: usize| -> XlaResult<()> {
+                if o >= i {
+                    return Err(XlaError::new(format!(
+                        "{}: operand defined after use",
+                        inst.name
+                    )));
+                }
+                Ok(())
+            };
+            // declared array shape of operand `o` (defined earlier)
+            let decl = |o: usize| comp.instrs[o].shape.array();
+            match &inst.op {
+                Op::Parameter(_) | Op::Constant(_) => {}
+                Op::Broadcast { operand, .. } => check(*operand)?,
+                Op::Reshape { operand } => {
+                    check(*operand)?;
+                    let (_, odims) = decl(*operand)?;
+                    let (_, ndims) = inst.shape.array()?;
+                    let (a, b): (usize, usize) =
+                        (odims.iter().product(), ndims.iter().product());
+                    if a != b {
+                        return Err(XlaError::new(format!(
+                            "{}: reshape element count mismatch {odims:?} -> {ndims:?}",
+                            inst.name
+                        )));
+                    }
+                }
+                Op::Gather {
+                    operand,
+                    indices,
+                    offset_dims,
+                    collapsed_slice_dims,
+                    start_index_map,
+                    index_vector_dim,
+                    slice_sizes,
+                } => {
+                    check(*operand)?;
+                    check(*indices)?;
+                    if slice_sizes.iter().any(|&s| s != 1) {
+                        return Err(XlaError::new(format!(
+                            "{}: only all-1 slice_sizes gather is supported",
+                            inst.name
+                        )));
+                    }
+                    let (_, odims) = decl(*operand)?;
+                    let (_, idims) = decl(*indices)?;
+                    check_element_indexing(
+                        &inst.name,
+                        "gather",
+                        odims.len(),
+                        offset_dims,
+                        collapsed_slice_dims,
+                        start_index_map,
+                        *index_vector_dim,
+                        idims,
+                    )?;
+                }
+                Op::Scatter {
+                    operand,
+                    indices,
+                    updates,
+                    update_window_dims,
+                    inserted_window_dims,
+                    scatter_dims_to_operand_dims,
+                    index_vector_dim,
+                    to_apply,
+                } => {
+                    check(*operand)?;
+                    check(*indices)?;
+                    check(*updates)?;
+                    let (_, odims) = decl(*operand)?;
+                    let (_, idims) = decl(*indices)?;
+                    check_element_indexing(
+                        &inst.name,
+                        "scatter",
+                        odims.len(),
+                        update_window_dims,
+                        inserted_window_dims,
+                        scatter_dims_to_operand_dims,
+                        *index_vector_dim,
+                        idims,
+                    )?;
+                    if !is_scalar_add(&module.computations[*to_apply]) {
+                        return Err(XlaError::new(format!(
+                            "{}: only add-combiner scatter is supported",
+                            inst.name
+                        )));
+                    }
+                }
+                Op::Dot { lhs, rhs, lhs_contracting, rhs_contracting } => {
+                    check(*lhs)?;
+                    check(*rhs)?;
+                    let (_, ld) = decl(*lhs)?;
+                    let (_, rd) = decl(*rhs)?;
+                    if ld.len() != 1
+                        || rd.len() != 1
+                        || lhs_contracting != &[0]
+                        || rhs_contracting != &[0]
+                    {
+                        return Err(XlaError::new(format!(
+                            "{}: only vector·vector {{0}}x{{0}}-contracting dot is supported",
+                            inst.name
+                        )));
+                    }
+                }
+                Op::Binary { lhs, rhs, .. } | Op::Compare { lhs, rhs, .. } => {
+                    check(*lhs)?;
+                    check(*rhs)?;
+                }
+                Op::Reduce { operand, init, to_apply, .. } => {
+                    check(*operand)?;
+                    check(*init)?;
+                    let (_, init_dims) = decl(*init)?;
+                    if !init_dims.is_empty() {
+                        return Err(XlaError::new(format!(
+                            "{}: reduce init must be scalar",
+                            inst.name
+                        )));
+                    }
+                    if !is_scalar_add(&module.computations[*to_apply]) {
+                        return Err(XlaError::new(format!(
+                            "{}: only add-combiner reduce is supported",
+                            inst.name
+                        )));
+                    }
+                }
+                Op::Select { pred, on_true, on_false } => {
+                    check(*pred)?;
+                    check(*on_true)?;
+                    check(*on_false)?;
+                }
+                Op::Tuple(elems) => {
+                    for &e in elems {
+                        check(e)?;
+                    }
+                }
+                Op::GetTupleElement { operand, .. } => check(*operand)?,
+            }
+        }
+    }
+    let entry = &module.computations[module.entry];
+    if entry.instrs.is_empty() {
+        return Err(XlaError::new("entry computation is empty"));
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- elementwise
+
+fn binary(name: &str, kind: BinKind, a: &Buffer, b: &Buffer) -> XlaResult<Buffer> {
+    if a.len() != b.len() {
+        return Err(XlaError::new(format!("{name}: elementwise operand length mismatch")));
+    }
+    macro_rules! float_ew {
+        ($x:expr, $y:expr, $ctor:path) => {{
+            let x = $x;
+            let y = $y;
+            $ctor(match kind {
+                BinKind::Add => x.iter().zip(y).map(|(a, b)| a + b).collect(),
+                BinKind::Subtract => x.iter().zip(y).map(|(a, b)| a - b).collect(),
+                BinKind::Multiply => x.iter().zip(y).map(|(a, b)| a * b).collect(),
+                BinKind::Divide => x.iter().zip(y).map(|(a, b)| a / b).collect(),
+            })
+        }};
+    }
+    macro_rules! int_ew {
+        ($x:expr, $y:expr, $ctor:path) => {{
+            let x = $x;
+            let y = $y;
+            $ctor(match kind {
+                BinKind::Add => x.iter().zip(y).map(|(a, b)| a.wrapping_add(*b)).collect(),
+                BinKind::Subtract => x.iter().zip(y).map(|(a, b)| a.wrapping_sub(*b)).collect(),
+                BinKind::Multiply => x.iter().zip(y).map(|(a, b)| a.wrapping_mul(*b)).collect(),
+                BinKind::Divide => {
+                    let mut out = Vec::with_capacity(x.len());
+                    for (a, b) in x.iter().zip(y) {
+                        if *b == 0 {
+                            return Err(XlaError::new(format!(
+                                "{name}: integer division by zero"
+                            )));
+                        }
+                        out.push(a.wrapping_div(*b));
+                    }
+                    out
+                }
+            })
+        }};
+    }
+    Ok(match (a, b) {
+        (Buffer::F32(x), Buffer::F32(y)) => float_ew!(x, y, Buffer::F32),
+        (Buffer::F64(x), Buffer::F64(y)) => float_ew!(x, y, Buffer::F64),
+        (Buffer::I32(x), Buffer::I32(y)) => int_ew!(x, y, Buffer::I32),
+        (Buffer::I64(x), Buffer::I64(y)) => int_ew!(x, y, Buffer::I64),
+        (Buffer::U32(x), Buffer::U32(y)) => int_ew!(x, y, Buffer::U32),
+        (Buffer::U64(x), Buffer::U64(y)) => int_ew!(x, y, Buffer::U64),
+        _ => {
+            return Err(XlaError::new(format!(
+                "{name}: mismatched or non-numeric operand types ({} vs {})",
+                a.element_type().name(),
+                b.element_type().name()
+            )))
+        }
+    })
+}
+
+fn compare(name: &str, dir: CmpDir, a: &Buffer, b: &Buffer) -> XlaResult<Buffer> {
+    if a.len() != b.len() {
+        return Err(XlaError::new(format!("{name}: compare operand length mismatch")));
+    }
+    macro_rules! cmp {
+        ($x:expr, $y:expr) => {{
+            let x = $x;
+            let y = $y;
+            match dir {
+                CmpDir::Eq => x.iter().zip(y).map(|(a, b)| a == b).collect(),
+                CmpDir::Ne => x.iter().zip(y).map(|(a, b)| a != b).collect(),
+                CmpDir::Lt => x.iter().zip(y).map(|(a, b)| a < b).collect(),
+                CmpDir::Le => x.iter().zip(y).map(|(a, b)| a <= b).collect(),
+                CmpDir::Gt => x.iter().zip(y).map(|(a, b)| a > b).collect(),
+                CmpDir::Ge => x.iter().zip(y).map(|(a, b)| a >= b).collect(),
+            }
+        }};
+    }
+    let v: Vec<bool> = match (a, b) {
+        (Buffer::F32(x), Buffer::F32(y)) => cmp!(x, y),
+        (Buffer::F64(x), Buffer::F64(y)) => cmp!(x, y),
+        (Buffer::I32(x), Buffer::I32(y)) => cmp!(x, y),
+        (Buffer::I64(x), Buffer::I64(y)) => cmp!(x, y),
+        (Buffer::U32(x), Buffer::U32(y)) => cmp!(x, y),
+        (Buffer::U64(x), Buffer::U64(y)) => cmp!(x, y),
+        (Buffer::Pred(x), Buffer::Pred(y)) => cmp!(x, y),
+        _ => return Err(XlaError::new(format!("{name}: compare type mismatch"))),
+    };
+    Ok(Buffer::Pred(v))
+}
+
+fn select(name: &str, pred: &Buffer, t: &Buffer, f: &Buffer) -> XlaResult<Buffer> {
+    let Buffer::Pred(p) = pred else {
+        return Err(XlaError::new(format!("{name}: select predicate must be pred")));
+    };
+    if p.len() != t.len() || t.len() != f.len() {
+        return Err(XlaError::new(format!("{name}: select operand length mismatch")));
+    }
+    macro_rules! sel {
+        ($x:expr, $y:expr, $ctor:path) => {
+            $ctor(
+                p.iter()
+                    .zip($x.iter().zip($y))
+                    .map(|(&c, (a, b))| if c { *a } else { *b })
+                    .collect(),
+            )
+        };
+    }
+    Ok(match (t, f) {
+        (Buffer::F32(x), Buffer::F32(y)) => sel!(x, y, Buffer::F32),
+        (Buffer::F64(x), Buffer::F64(y)) => sel!(x, y, Buffer::F64),
+        (Buffer::I32(x), Buffer::I32(y)) => sel!(x, y, Buffer::I32),
+        (Buffer::I64(x), Buffer::I64(y)) => sel!(x, y, Buffer::I64),
+        (Buffer::U32(x), Buffer::U32(y)) => sel!(x, y, Buffer::U32),
+        (Buffer::U64(x), Buffer::U64(y)) => sel!(x, y, Buffer::U64),
+        (Buffer::Pred(x), Buffer::Pred(y)) => sel!(x, y, Buffer::Pred),
+        _ => return Err(XlaError::new(format!("{name}: select branch type mismatch"))),
+    })
+}
+
+fn dot(name: &str, a: (&[usize], &Buffer), b: (&[usize], &Buffer)) -> XlaResult<Buffer> {
+    // rank-1 · rank-1 contraction — the only form the artifacts use
+    if a.0.len() != 1 || b.0.len() != 1 || a.0 != b.0 {
+        return Err(XlaError::new(format!(
+            "{name}: only vector·vector dot is supported ({:?} vs {:?})",
+            a.0, b.0
+        )));
+    }
+    Ok(match (a.1, b.1) {
+        (Buffer::F32(x), Buffer::F32(y)) => {
+            Buffer::F32(vec![x.iter().zip(y).map(|(a, b)| a * b).sum()])
+        }
+        (Buffer::F64(x), Buffer::F64(y)) => {
+            Buffer::F64(vec![x.iter().zip(y).map(|(a, b)| a * b).sum()])
+        }
+        (Buffer::I32(x), Buffer::I32(y)) => Buffer::I32(vec![x
+            .iter()
+            .zip(y)
+            .fold(0i32, |acc, (a, b)| acc.wrapping_add(a.wrapping_mul(*b)))]),
+        (Buffer::I64(x), Buffer::I64(y)) => Buffer::I64(vec![x
+            .iter()
+            .zip(y)
+            .fold(0i64, |acc, (a, b)| acc.wrapping_add(a.wrapping_mul(*b)))]),
+        _ => return Err(XlaError::new(format!("{name}: unsupported dot operand types"))),
+    })
+}
+
+// ------------------------------------------------------------- evaluation
+
+struct Env {
+    values: Vec<Option<Literal>>,
+}
+
+impl Env {
+    fn get(&self, i: usize) -> &Literal {
+        self.values[i].as_ref().expect("validated: defined before use")
+    }
+
+    fn array(&self, i: usize) -> XlaResult<(&[usize], &Buffer)> {
+        self.get(i).array()
+    }
+}
+
+fn out_shape(inst: &Instr) -> XlaResult<(crate::literal::ElementType, Vec<usize>)> {
+    let (ty, dims) = inst.shape.array()?;
+    Ok((ty, dims.to_vec()))
+}
+
+/// Decoded index vectors of an element-indexing gather/scatter:
+/// one operand flat index per index row, or None when out of bounds.
+fn decode_index_rows(
+    idims: &[usize],
+    ibuf: &Buffer,
+    odims: &[usize],
+    clamp: bool,
+) -> XlaResult<Vec<Option<usize>>> {
+    let r = odims.len();
+    let rows = product(&idims[..idims.len() - 1]);
+    let vals = ibuf.as_indices()?;
+    let ostr = strides(odims);
+    let mut out = Vec::with_capacity(rows);
+    for g in 0..rows {
+        let mut flat = 0usize;
+        let mut oob = false;
+        for (j, (&dim, &stride)) in odims.iter().zip(&ostr).enumerate() {
+            let mut v = vals[g * r + j];
+            let max = dim as i64 - 1;
+            if v < 0 || v > max {
+                if clamp {
+                    v = v.clamp(0, max.max(0));
+                } else {
+                    oob = true;
+                    break;
+                }
+            }
+            flat += v as usize * stride;
+        }
+        out.push(if oob { None } else { Some(flat) });
+    }
+    Ok(out)
+}
+
+fn eval_instr(env: &Env, inst: &Instr) -> XlaResult<Literal> {
+    match &inst.op {
+        // parameters are pre-seeded in eval_computation
+        Op::Parameter(i) => Err(XlaError::new(format!("unbound parameter {i}"))),
+        Op::Constant(l) => Ok(l.clone()),
+
+        Op::Reshape { operand } => {
+            let (_, dims) = out_shape(inst)?;
+            let (_, data) = env.array(*operand)?;
+            if product(&dims) != data.len() {
+                return Err(XlaError::new(format!(
+                    "{}: reshape to {dims:?} does not match buffer of {} elements",
+                    inst.name,
+                    data.len()
+                )));
+            }
+            Ok(Literal::Array { dims, data: data.clone() })
+        }
+
+        Op::Broadcast { operand, dims: map } => {
+            let (_, out_dims) = out_shape(inst)?;
+            let (odims, obuf) = env.array(*operand)?;
+            if map.len() != odims.len() {
+                return Err(XlaError::new(format!(
+                    "{}: broadcast dimensions arity mismatch",
+                    inst.name
+                )));
+            }
+            for (j, &m) in map.iter().enumerate() {
+                if m >= out_dims.len() || out_dims[m] != odims[j] {
+                    return Err(XlaError::new(format!(
+                        "{}: broadcast dim {j} does not line up with output",
+                        inst.name
+                    )));
+                }
+            }
+            let ostr_out = strides(&out_dims);
+            let ostr_op = strides(odims);
+            let total = product(&out_dims);
+            let mut idx = Vec::with_capacity(total);
+            for f in 0..total {
+                let mut of = 0usize;
+                for (j, &m) in map.iter().enumerate() {
+                    of += ((f / ostr_out[m]) % out_dims[m]) * ostr_op[j];
+                }
+                idx.push(of);
+            }
+            Ok(Literal::Array { dims: out_dims, data: obuf.take_flat(&idx) })
+        }
+
+        Op::Gather {
+            operand,
+            indices,
+            offset_dims,
+            collapsed_slice_dims,
+            start_index_map,
+            index_vector_dim,
+            slice_sizes,
+        } => {
+            let (odims, obuf) = env.array(*operand)?;
+            let (idims, ibuf) = env.array(*indices)?;
+            if slice_sizes.iter().any(|&s| s != 1) {
+                return Err(XlaError::new(format!(
+                    "{}: only all-1 slice_sizes gather is supported",
+                    inst.name
+                )));
+            }
+            check_element_indexing(
+                &inst.name,
+                "gather",
+                odims.len(),
+                offset_dims,
+                collapsed_slice_dims,
+                start_index_map,
+                *index_vector_dim,
+                idims,
+            )?;
+            if odims.contains(&0) && product(idims) > 0 {
+                // clamping has no in-range target to clamp to
+                return Err(XlaError::new(format!(
+                    "{}: gather from zero-sized operand dimension",
+                    inst.name
+                )));
+            }
+            let rows = decode_index_rows(idims, ibuf, odims, true)?;
+            let idx: Vec<usize> = rows.into_iter().map(|r| r.expect("clamped")).collect();
+            let (_, out_dims) = out_shape(inst)?;
+            Ok(Literal::Array { dims: out_dims, data: obuf.take_flat(&idx) })
+        }
+
+        Op::Scatter {
+            operand,
+            indices,
+            updates,
+            update_window_dims,
+            inserted_window_dims,
+            scatter_dims_to_operand_dims,
+            index_vector_dim,
+            ..
+        } => {
+            let (odims, obuf) = env.array(*operand)?;
+            let (idims, ibuf) = env.array(*indices)?;
+            let (_, ubuf) = env.array(*updates)?;
+            check_element_indexing(
+                &inst.name,
+                "scatter",
+                odims.len(),
+                update_window_dims,
+                inserted_window_dims,
+                scatter_dims_to_operand_dims,
+                *index_vector_dim,
+                idims,
+            )?;
+            let rows = decode_index_rows(idims, ibuf, odims, false)?;
+            if rows.len() != ubuf.len() {
+                return Err(XlaError::new(format!(
+                    "{}: scatter updates count != index rows",
+                    inst.name
+                )));
+            }
+            let mut out = obuf.clone();
+            macro_rules! scat {
+                ($dst:expr, $upd:expr, float) => {
+                    for (row, u) in rows.iter().zip($upd) {
+                        if let Some(f) = row {
+                            $dst[*f] += *u;
+                        }
+                    }
+                };
+                ($dst:expr, $upd:expr, int) => {
+                    for (row, u) in rows.iter().zip($upd) {
+                        if let Some(f) = row {
+                            $dst[*f] = $dst[*f].wrapping_add(*u);
+                        }
+                    }
+                };
+            }
+            match (&mut out, ubuf) {
+                (Buffer::F32(d), Buffer::F32(u)) => scat!(d, u, float),
+                (Buffer::F64(d), Buffer::F64(u)) => scat!(d, u, float),
+                (Buffer::I32(d), Buffer::I32(u)) => scat!(d, u, int),
+                (Buffer::I64(d), Buffer::I64(u)) => scat!(d, u, int),
+                (Buffer::U32(d), Buffer::U32(u)) => scat!(d, u, int),
+                (Buffer::U64(d), Buffer::U64(u)) => scat!(d, u, int),
+                _ => {
+                    return Err(XlaError::new(format!(
+                        "{}: scatter operand/updates type mismatch",
+                        inst.name
+                    )))
+                }
+            }
+            Ok(Literal::Array { dims: odims.to_vec(), data: out })
+        }
+
+        Op::Dot { lhs, rhs, lhs_contracting, rhs_contracting } => {
+            if lhs_contracting != &[0] || rhs_contracting != &[0] {
+                return Err(XlaError::new(format!(
+                    "{}: only {{0}}x{{0}}-contracting dot is supported",
+                    inst.name
+                )));
+            }
+            let data = dot(&inst.name, env.array(*lhs)?, env.array(*rhs)?)?;
+            Ok(Literal::Array { dims: Vec::new(), data })
+        }
+
+        Op::Binary { kind, lhs, rhs } => {
+            let (ldims, lbuf) = env.array(*lhs)?;
+            let (rdims, rbuf) = env.array(*rhs)?;
+            if ldims != rdims {
+                return Err(XlaError::new(format!(
+                    "{}: elementwise shape mismatch {ldims:?} vs {rdims:?}",
+                    inst.name
+                )));
+            }
+            let data = binary(&inst.name, *kind, lbuf, rbuf)?;
+            Ok(Literal::Array { dims: ldims.to_vec(), data })
+        }
+
+        Op::Reduce { operand, init, dims: rdims, .. } => {
+            let (odims, obuf) = env.array(*operand)?;
+            let (idims, ibuf) = env.array(*init)?;
+            if !idims.is_empty() {
+                return Err(XlaError::new(format!("{}: reduce init must be scalar", inst.name)));
+            }
+            if rdims.iter().any(|&d| d >= odims.len()) {
+                return Err(XlaError::new(format!(
+                    "{}: reduce dimension out of range for rank {}",
+                    inst.name,
+                    odims.len()
+                )));
+            }
+            let keep: Vec<usize> = (0..odims.len()).filter(|d| !rdims.contains(d)).collect();
+            let out_dims: Vec<usize> = keep.iter().map(|&d| odims[d]).collect();
+            let out_str = strides(&out_dims);
+            let in_str = strides(odims);
+            let total = product(odims);
+            let out_total = product(&out_dims);
+            macro_rules! red {
+                ($src:expr, $iv:expr, $ctor:path, $add:expr) => {{
+                    let iv = $iv[0];
+                    let mut acc = vec![iv; out_total];
+                    for f in 0..total {
+                        let mut of = 0usize;
+                        for (pos, &d) in keep.iter().enumerate() {
+                            of += ((f / in_str[d]) % odims[d]) * out_str[pos];
+                        }
+                        acc[of] = $add(acc[of], $src[f]);
+                    }
+                    $ctor(acc)
+                }};
+            }
+            let data = match (obuf, ibuf) {
+                (Buffer::F32(v), Buffer::F32(i)) => red!(v, i, Buffer::F32, |a: f32, b| a + b),
+                (Buffer::F64(v), Buffer::F64(i)) => red!(v, i, Buffer::F64, |a: f64, b| a + b),
+                (Buffer::I32(v), Buffer::I32(i)) => {
+                    red!(v, i, Buffer::I32, |a: i32, b| a.wrapping_add(b))
+                }
+                (Buffer::I64(v), Buffer::I64(i)) => {
+                    red!(v, i, Buffer::I64, |a: i64, b| a.wrapping_add(b))
+                }
+                (Buffer::U32(v), Buffer::U32(i)) => {
+                    red!(v, i, Buffer::U32, |a: u32, b| a.wrapping_add(b))
+                }
+                (Buffer::U64(v), Buffer::U64(i)) => {
+                    red!(v, i, Buffer::U64, |a: u64, b| a.wrapping_add(b))
+                }
+                _ => {
+                    return Err(XlaError::new(format!(
+                        "{}: reduce operand/init type mismatch",
+                        inst.name
+                    )))
+                }
+            };
+            Ok(Literal::Array { dims: out_dims, data })
+        }
+
+        Op::Select { pred, on_true, on_false } => {
+            let (pdims, pbuf) = env.array(*pred)?;
+            let (tdims, tbuf) = env.array(*on_true)?;
+            let (_, fbuf) = env.array(*on_false)?;
+            if pdims != tdims {
+                return Err(XlaError::new(format!("{}: select shape mismatch", inst.name)));
+            }
+            let data = select(&inst.name, pbuf, tbuf, fbuf)?;
+            Ok(Literal::Array { dims: tdims.to_vec(), data })
+        }
+
+        Op::Compare { lhs, rhs, dir } => {
+            let (ldims, lbuf) = env.array(*lhs)?;
+            let (rdims, rbuf) = env.array(*rhs)?;
+            if ldims != rdims {
+                return Err(XlaError::new(format!(
+                    "{}: compare shape mismatch {ldims:?} vs {rdims:?}",
+                    inst.name
+                )));
+            }
+            let data = compare(&inst.name, *dir, lbuf, rbuf)?;
+            Ok(Literal::Array { dims: ldims.to_vec(), data })
+        }
+
+        Op::Tuple(elems) => Ok(Literal::Tuple(elems.iter().map(|&e| env.get(e).clone()).collect())),
+
+        Op::GetTupleElement { operand, index } => {
+            let parts = env.get(*operand).to_tuple()?;
+            parts.into_iter().nth(*index).ok_or_else(|| {
+                XlaError::new(format!("{}: tuple index {index} out of range", inst.name))
+            })
+        }
+    }
+}
+
+fn check_param_shape(inst: &Instr, arg: &Literal) -> XlaResult<()> {
+    let (want_ty, want_dims) = inst.shape.array()?;
+    let (dims, data) = arg.array()?;
+    if dims != want_dims || data.element_type() != want_ty {
+        return Err(XlaError::new(format!(
+            "argument for {} has shape {}[{dims:?}], executable wants {}[{want_dims:?}]",
+            inst.name,
+            data.element_type().name(),
+            want_ty.name()
+        )));
+    }
+    Ok(())
+}
+
+/// Execute the entry computation on `args`; returns the root literal.
+pub fn execute(module: &HloModule, args: &[&Literal]) -> XlaResult<Literal> {
+    let comp = &module.computations[module.entry];
+    if args.len() != comp.params.len() {
+        return Err(XlaError::new(format!(
+            "executable takes {} arguments, got {}",
+            comp.params.len(),
+            args.len()
+        )));
+    }
+    let mut env = Env { values: vec![None; comp.instrs.len()] };
+    for (p, &arg) in comp.params.iter().zip(args) {
+        check_param_shape(&comp.instrs[*p], arg)?;
+        env.values[*p] = Some(arg.clone());
+    }
+    for (i, inst) in comp.instrs.iter().enumerate() {
+        if env.values[i].is_none() {
+            let v = eval_instr(&env, inst)?;
+            env.values[i] = Some(v);
+        }
+    }
+    Ok(env.values[comp.root].take().expect("root evaluated"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parser::parse_module;
+
+    fn run(text: &str, args: &[&Literal]) -> Literal {
+        let m = parse_module(text).unwrap();
+        validate(&m).unwrap();
+        execute(&m, args).unwrap()
+    }
+
+    #[test]
+    fn elementwise_ops_match_hand_values() {
+        let text = "\
+HloModule ew
+
+ENTRY %main (a.1: f32[3], b.2: f32[3]) -> (f32[3], f32[3], f32[3], f32[3]) {
+  %a.1 = f32[3]{0} parameter(0)
+  %b.2 = f32[3]{0} parameter(1)
+  %add.3 = f32[3]{0} add(f32[3]{0} %a.1, f32[3]{0} %b.2)
+  %sub.4 = f32[3]{0} subtract(f32[3]{0} %a.1, f32[3]{0} %b.2)
+  %mul.5 = f32[3]{0} multiply(f32[3]{0} %a.1, f32[3]{0} %b.2)
+  %div.6 = f32[3]{0} divide(f32[3]{0} %a.1, f32[3]{0} %b.2)
+  ROOT %t.7 = (f32[3]{0}, f32[3]{0}, f32[3]{0}, f32[3]{0}) tuple(f32[3]{0} %add.3, f32[3]{0} %sub.4, f32[3]{0} %mul.5, f32[3]{0} %div.6)
+}
+";
+        let a = Literal::vec1(&[6.0f32, 8.0, -2.0]);
+        let b = Literal::vec1(&[2.0f32, 4.0, 0.5]);
+        let parts = run(text, &[&a, &b]).to_tuple().unwrap();
+        assert_eq!(parts[0].to_vec::<f32>().unwrap(), vec![8.0, 12.0, -1.5]);
+        assert_eq!(parts[1].to_vec::<f32>().unwrap(), vec![4.0, 4.0, -2.5]);
+        assert_eq!(parts[2].to_vec::<f32>().unwrap(), vec![12.0, 32.0, -1.0]);
+        assert_eq!(parts[3].to_vec::<f32>().unwrap(), vec![3.0, 2.0, -4.0]);
+    }
+
+    #[test]
+    fn broadcast_scalar_and_vector() {
+        let text = "\
+HloModule bc
+
+ENTRY %main (s.1: f32[], v.2: s32[2]) -> (f32[4], s32[2,3]) {
+  %s.1 = f32[] parameter(0)
+  %v.2 = s32[2]{0} parameter(1)
+  %b1.3 = f32[4]{0} broadcast(f32[] %s.1), dimensions={}
+  %b2.4 = s32[2,3]{1,0} broadcast(s32[2]{0} %v.2), dimensions={0}
+  ROOT %t.5 = (f32[4]{0}, s32[2,3]{1,0}) tuple(f32[4]{0} %b1.3, s32[2,3]{1,0} %b2.4)
+}
+";
+        let s = Literal::scalar(2.5);
+        let v = Literal::vec1(&[7i32, 9]);
+        let parts = run(text, &[&s, &v]).to_tuple().unwrap();
+        assert_eq!(parts[0].to_vec::<f32>().unwrap(), vec![2.5; 4]);
+        assert_eq!(parts[1].to_vec::<i32>().unwrap(), vec![7, 7, 7, 9, 9, 9]);
+    }
+
+    #[test]
+    fn gather_clamps_oob_like_xla() {
+        let text = "\
+HloModule g
+
+ENTRY %main (x.1: f32[4], i.2: s32[3,1]) -> f32[3] {
+  %x.1 = f32[4]{0} parameter(0)
+  %i.2 = s32[3,1]{1,0} parameter(1)
+  ROOT %g.3 = f32[3]{0} gather(f32[4]{0} %x.1, s32[3,1]{1,0} %i.2), offset_dims={}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1}
+}
+";
+        let x = Literal::vec1(&[10.0f32, 11.0, 12.0, 13.0]);
+        let i = Literal::vec1(&[2i32, 9, -1]).reshape(&[3, 1]).unwrap();
+        let y = run(text, &[&x, &i]);
+        assert_eq!(y.to_vec::<f32>().unwrap(), vec![12.0, 13.0, 10.0]);
+    }
+
+    #[test]
+    fn scatter_adds_and_drops_oob_like_xla() {
+        let text = "\
+HloModule s
+
+%add_f32.1 (a.2: f32[], b.3: f32[]) -> f32[] {
+  %a.2 = f32[] parameter(0)
+  %b.3 = f32[] parameter(1)
+  ROOT %add.4 = f32[] add(f32[] %a.2, f32[] %b.3)
+}
+
+ENTRY %main (y.5: f32[4], i.6: s32[4,1], u.7: f32[4]) -> f32[4] {
+  %y.5 = f32[4]{0} parameter(0)
+  %i.6 = s32[4,1]{1,0} parameter(1)
+  %u.7 = f32[4]{0} parameter(2)
+  ROOT %sc.8 = f32[4]{0} scatter(f32[4]{0} %y.5, s32[4,1]{1,0} %i.6, f32[4]{0} %u.7), update_window_dims={}, inserted_window_dims={0}, scatter_dims_to_operand_dims={0}, index_vector_dim=1, to_apply=%add_f32.1
+}
+";
+        let y = Literal::vec1(&[0.0f32; 4]);
+        let i = Literal::vec1(&[1i32, 1, 4, 3]).reshape(&[4, 1]).unwrap();
+        let u = Literal::vec1(&[5.0f32, 2.0, 100.0, 7.0]);
+        let out = run(text, &[&y, &i, &u]);
+        // index 4 is out of bounds for f32[4] -> dropped (the dump slot)
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![0.0, 7.0, 0.0, 7.0]);
+    }
+
+    #[test]
+    fn dot_reduce_select_compare_match_hand_values() {
+        let text = "\
+HloModule misc
+
+%add_f32.1 (a.2: f32[], b.3: f32[]) -> f32[] {
+  %a.2 = f32[] parameter(0)
+  %b.3 = f32[] parameter(1)
+  ROOT %add.4 = f32[] add(f32[] %a.2, f32[] %b.3)
+}
+
+ENTRY %main (p.5: f32[3], q.6: f32[3], m.7: f32[2,3]) -> (f32[], f32[2], f32[]) {
+  %p.5 = f32[3]{0} parameter(0)
+  %q.6 = f32[3]{0} parameter(1)
+  %m.7 = f32[2,3]{1,0} parameter(2)
+  %dot.8 = f32[] dot(f32[3]{0} %p.5, f32[3]{0} %q.6), lhs_contracting_dims={0}, rhs_contracting_dims={0}
+  %zero.9 = f32[] constant(0)
+  %red.10 = f32[2]{0} reduce(f32[2,3]{1,0} %m.7, f32[] %zero.9), dimensions={1}, to_apply=%add_f32.1
+  %one.11 = f32[] constant(1)
+  %isz.12 = pred[] compare(f32[] %dot.8, f32[] %zero.9), direction=EQ
+  %safe.13 = f32[] select(pred[] %isz.12, f32[] %one.11, f32[] %dot.8)
+  ROOT %t.14 = (f32[], f32[2]{0}, f32[]) tuple(f32[] %dot.8, f32[2]{0} %red.10, f32[] %safe.13)
+}
+";
+        let p = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        let q = Literal::vec1(&[4.0f32, 5.0, 6.0]);
+        let m = Literal::vec1(&[1.0f32, 2.0, 3.0, 10.0, 20.0, 30.0]).reshape(&[2, 3]).unwrap();
+        let parts = run(text, &[&p, &q, &m]).to_tuple().unwrap();
+        assert_eq!(parts[0].to_vec::<f32>().unwrap(), vec![32.0]);
+        assert_eq!(parts[1].to_vec::<f32>().unwrap(), vec![6.0, 60.0]);
+        assert_eq!(parts[2].to_vec::<f32>().unwrap(), vec![32.0]); // dot != 0 -> unchanged
+    }
+
+    #[test]
+    fn select_picks_guard_when_denominator_zero() {
+        let text = "\
+HloModule guard
+
+ENTRY %main (d.1: f32[]) -> f32[] {
+  %d.1 = f32[] parameter(0)
+  %zero.2 = f32[] constant(0)
+  %one.3 = f32[] constant(1)
+  %isz.4 = pred[] compare(f32[] %d.1, f32[] %zero.2), direction=EQ
+  ROOT %safe.5 = f32[] select(pred[] %isz.4, f32[] %one.3, f32[] %d.1)
+}
+";
+        assert_eq!(run(text, &[&Literal::scalar(0.0)]).to_vec::<f32>().unwrap(), vec![1.0]);
+        assert_eq!(run(text, &[&Literal::scalar(3.0)]).to_vec::<f32>().unwrap(), vec![3.0]);
+    }
+
+    #[test]
+    fn get_tuple_element_works() {
+        let text = "\
+HloModule gte
+
+ENTRY %main (a.1: f32[2], b.2: s32[1]) -> s32[1] {
+  %a.1 = f32[2]{0} parameter(0)
+  %b.2 = s32[1]{0} parameter(1)
+  %t.3 = (f32[2]{0}, s32[1]{0}) tuple(f32[2]{0} %a.1, s32[1]{0} %b.2)
+  ROOT %g.4 = s32[1]{0} get-tuple-element((f32[2]{0}, s32[1]{0}) %t.3), index=1
+}
+";
+        let a = Literal::vec1(&[1.0f32, 2.0]);
+        let b = Literal::vec1(&[42i32]);
+        assert_eq!(run(text, &[&a, &b]).to_vec::<i32>().unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn non_add_combiner_is_rejected_at_compile() {
+        let text = "\
+HloModule badcomb
+
+%mul_f32.1 (a.2: f32[], b.3: f32[]) -> f32[] {
+  %a.2 = f32[] parameter(0)
+  %b.3 = f32[] parameter(1)
+  ROOT %mul.4 = f32[] multiply(f32[] %a.2, f32[] %b.3)
+}
+
+ENTRY %main (y.5: f32[4], i.6: s32[1,1], u.7: f32[1]) -> f32[4] {
+  %y.5 = f32[4]{0} parameter(0)
+  %i.6 = s32[1,1]{1,0} parameter(1)
+  %u.7 = f32[1]{0} parameter(2)
+  ROOT %sc.8 = f32[4]{0} scatter(f32[4]{0} %y.5, s32[1,1]{1,0} %i.6, f32[1]{0} %u.7), update_window_dims={}, inserted_window_dims={0}, scatter_dims_to_operand_dims={0}, index_vector_dim=1, to_apply=%mul_f32.1
+}
+";
+        let m = parse_module(text).unwrap();
+        let err = validate(&m).unwrap_err().to_string();
+        assert!(err.contains("add-combiner"), "{err}");
+    }
+
+    #[test]
+    fn wrong_arg_shape_is_actionable() {
+        let text = "\
+HloModule shp
+
+ENTRY %main (a.1: f32[4]) -> f32[4] {
+  ROOT %a.1 = f32[4]{0} parameter(0)
+}
+";
+        let m = parse_module(text).unwrap();
+        let bad = Literal::vec1(&[1.0f32; 3]);
+        let err = execute(&m, &[&bad]).unwrap_err().to_string();
+        assert!(err.contains("executable wants"), "{err}");
+    }
+}

@@ -1,22 +1,48 @@
-//! Stub of the `xla` PJRT binding surface used by `epgraph::runtime`.
+//! Native HLO-text interpreter behind the `xla` PJRT binding surface
+//! used by `epgraph::runtime`.
 //!
 //! The offline build environment has no XLA/PJRT shared libraries, so
-//! this crate provides the exact types and signatures the runtime is
-//! written against and reports the backend as unavailable at the first
-//! call (`PjRtClient::cpu()` returns `Err`).  The runtime module and its
-//! consumers degrade gracefully: tests skip, the CLI prints a clear
-//! message, and everything that doesn't touch PJRT is unaffected.
+//! this crate — which started life as a dead stub that reported the
+//! backend unavailable — now implements the backend itself: an HLO
+//! text parser (module → computations → instructions, `parser`), typed
+//! host literals (`literal`), and an evaluator (`interp`) covering the
+//! op set the blocked-SPMV/CG artifacts use (parameter, constant,
+//! broadcast, reshape, gather, scatter with add combiner, dot,
+//! elementwise add/subtract/multiply/divide, reduce, select, compare,
+//! tuple, get-tuple-element).
 //!
-//! When a real `xla` crate is available, delete this stub and point the
-//! `xla` path dependency at it — no call-site changes are needed.
+//! The exported types and signatures mirror the real `xla` crate's
+//! PJRT surface exactly — `PjRtClient::cpu()` → `HloModuleProto::
+//! from_text_file` → `XlaComputation::from_proto` → `compile` →
+//! `execute` — so `epgraph::runtime` needs zero call-site changes, and
+//! a real PJRT binding can be swapped back in by pointing the `xla`
+//! path dependency elsewhere.  Unsupported ops or gather/scatter forms
+//! fail at `compile` with an actionable message; nothing silently
+//! mis-executes.
+//!
+//! This is an interpreter, not a compiler: it executes op-by-op on
+//! host buffers.  It exists to make the partition→pack→execute
+//! pipeline runnable (and CI-gateable) everywhere; for real hardware
+//! runs, lower the artifacts with `python/compile/aot.py` and use a
+//! real PJRT plugin.
+
+mod interp;
+mod literal;
+mod parser;
+
+pub use literal::{ArrayElement, Buffer, ElementType, Literal};
+pub use parser::{HloModule, Shape};
 
 use std::fmt;
 
-const UNAVAILABLE: &str =
-    "XLA/PJRT backend unavailable: built offline against the stub `xla` crate";
-
 #[derive(Debug, Clone)]
 pub struct XlaError(String);
+
+impl XlaError {
+    pub(crate) fn new(msg: impl Into<String>) -> XlaError {
+        XlaError(msg.into())
+    }
+}
 
 impl fmt::Display for XlaError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
@@ -26,93 +52,64 @@ impl fmt::Display for XlaError {
 
 impl std::error::Error for XlaError {}
 
-fn unavailable<T>() -> Result<T, XlaError> {
-    Err(XlaError(UNAVAILABLE.to_string()))
-}
+pub(crate) type XlaResult<T> = Result<T, XlaError>;
 
-/// Element types a `Literal` can carry.
-pub trait ArrayElement: Copy + Default + 'static {}
-impl ArrayElement for f32 {}
-impl ArrayElement for f64 {}
-impl ArrayElement for i32 {}
-impl ArrayElement for i64 {}
-impl ArrayElement for u32 {}
-impl ArrayElement for u64 {}
-
-/// Host-side literal. The stub stores nothing: with no client, no
-/// executable can ever consume one.
-#[derive(Debug, Clone, Default)]
-pub struct Literal {
-    _priv: (),
-}
-
-impl Literal {
-    pub fn vec1<T: ArrayElement>(_v: &[T]) -> Literal {
-        Literal { _priv: () }
-    }
-
-    pub fn scalar(_v: f32) -> Literal {
-        Literal { _priv: () }
-    }
-
-    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
-        unavailable()
-    }
-
-    pub fn to_tuple(&self) -> Result<Vec<Literal>, XlaError> {
-        unavailable()
-    }
-
-    pub fn to_tuple1(&self) -> Result<Literal, XlaError> {
-        unavailable()
-    }
-
-    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>, XlaError> {
-        unavailable()
-    }
-}
-
+/// A parsed HLO module (the text analogue of a serialized
+/// `HloModuleProto`).
 #[derive(Debug)]
 pub struct HloModuleProto {
-    _priv: (),
+    module: HloModule,
 }
 
 impl HloModuleProto {
-    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
-        unavailable()
+    /// Parse HLO text from a file.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, XlaError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| XlaError::new(format!("reading {path}: {e}")))?;
+        Self::from_text(&text)
+    }
+
+    /// Parse HLO text from a string.
+    pub fn from_text(text: &str) -> Result<HloModuleProto, XlaError> {
+        Ok(HloModuleProto { module: parser::parse_module(text)? })
     }
 }
 
 #[derive(Debug)]
 pub struct XlaComputation {
-    _priv: (),
+    module: HloModule,
 }
 
 impl XlaComputation {
-    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
-        XlaComputation { _priv: () }
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { module: proto.module.clone() }
     }
 }
 
+/// A device-side buffer — for the interpreter, a host literal.
 #[derive(Debug)]
 pub struct PjRtBuffer {
-    _priv: (),
+    literal: Literal,
 }
 
 impl PjRtBuffer {
     pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
-        unavailable()
+        Ok(self.literal.clone())
     }
 }
 
+/// A validated module, ready to execute.
 #[derive(Debug)]
 pub struct PjRtLoadedExecutable {
-    _priv: (),
+    module: HloModule,
 }
 
 impl PjRtLoadedExecutable {
-    pub fn execute(&self, _args: &[&Literal]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
-        unavailable()
+    /// Execute on `args`; the result mirrors PJRT's
+    /// per-device/per-output nesting (one device, one root output).
+    pub fn execute(&self, args: &[&Literal]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        let root = interp::execute(&self.module, args)?;
+        Ok(vec![vec![PjRtBuffer { literal: root }]])
     }
 }
 
@@ -122,17 +119,20 @@ pub struct PjRtClient {
 }
 
 impl PjRtClient {
-    /// Always fails in the stub — callers must treat PJRT as optional.
+    /// The interpreter "device" is always available.
     pub fn cpu() -> Result<PjRtClient, XlaError> {
-        unavailable()
+        Ok(PjRtClient { _priv: () })
     }
 
     pub fn platform_name(&self) -> String {
-        "stub".to_string()
+        "interpreter".to_string()
     }
 
-    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
-        unavailable()
+    /// Validate the module (op set, combiners, def-before-use); returns
+    /// an executable that evaluates it.
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        interp::validate(&comp.module)?;
+        Ok(PjRtLoadedExecutable { module: comp.module.clone() })
     }
 }
 
@@ -140,9 +140,49 @@ impl PjRtClient {
 mod tests {
     use super::*;
 
+    const ADD_MODULE: &str = "\
+HloModule lib_smoke
+
+ENTRY %main (a.1: f32[2], b.2: f32[2]) -> (f32[2]) {
+  %a.1 = f32[2]{0} parameter(0)
+  %b.2 = f32[2]{0} parameter(1)
+  %add.3 = f32[2]{0} add(f32[2]{0} %a.1, f32[2]{0} %b.2)
+  ROOT %t.4 = (f32[2]{0}) tuple(f32[2]{0} %add.3)
+}
+";
+
     #[test]
-    fn client_reports_unavailable() {
-        let err = PjRtClient::cpu().err().expect("stub must fail");
-        assert!(err.to_string().contains("unavailable"));
+    fn client_is_available_and_runs_end_to_end() {
+        let client = PjRtClient::cpu().expect("interpreter backend always available");
+        assert_eq!(client.platform_name(), "interpreter");
+        let proto = HloModuleProto::from_text(ADD_MODULE).unwrap();
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).unwrap();
+        let a = Literal::vec1(&[1.0f32, 2.0]);
+        let b = Literal::vec1(&[10.0f32, 20.0]);
+        let out = exe.execute(&[&a, &b]).unwrap();
+        let lit = out[0][0].to_literal_sync().unwrap().to_tuple1().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn from_text_file_reports_missing_file() {
+        let err = HloModuleProto::from_text_file("/definitely/not/here.hlo.txt").unwrap_err();
+        assert!(err.to_string().contains("reading"));
+    }
+
+    #[test]
+    fn compile_rejects_unsupported_modules_actionably() {
+        // parse-level rejection carries the opcode name
+        let bad = "\
+HloModule bad
+
+ENTRY %main (a.1: f32[2]) -> f32[2] {
+  %a.1 = f32[2]{0} parameter(0)
+  ROOT %c.2 = f32[2]{0} cosine(f32[2]{0} %a.1)
+}
+";
+        let err = HloModuleProto::from_text(bad).unwrap_err();
+        assert!(err.to_string().contains("cosine"), "{err}");
     }
 }

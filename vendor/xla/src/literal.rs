@@ -1,0 +1,298 @@
+//! Host-side literals: typed, shaped buffers.
+//!
+//! A `Literal` is either an array (element type + dims + flat row-major
+//! buffer) or a tuple of literals (what a `(f32[n], ...)`-rooted HLO
+//! computation returns).  The public surface mirrors the real `xla`
+//! crate's `Literal` closely enough that `epgraph::runtime` needs no
+//! call-site changes: `vec1`, `scalar`, `reshape`, `to_vec`,
+//! `to_tuple`, `to_tuple1`.
+
+use crate::{XlaError, XlaResult};
+
+/// Array element types the interpreter supports.  HLO text spells the
+/// signed integer types `s32`/`s64`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    F32,
+    F64,
+    I32,
+    I64,
+    U32,
+    U64,
+}
+
+impl ElementType {
+    pub fn name(self) -> &'static str {
+        match self {
+            ElementType::Pred => "pred",
+            ElementType::F32 => "f32",
+            ElementType::F64 => "f64",
+            ElementType::I32 => "s32",
+            ElementType::I64 => "s64",
+            ElementType::U32 => "u32",
+            ElementType::U64 => "u64",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ElementType> {
+        Some(match s {
+            "pred" => ElementType::Pred,
+            "f32" => ElementType::F32,
+            "f64" => ElementType::F64,
+            "s32" => ElementType::I32,
+            "s64" => ElementType::I64,
+            "u32" => ElementType::U32,
+            "u64" => ElementType::U64,
+            _ => return None,
+        })
+    }
+}
+
+/// Flat row-major storage for one array literal.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Buffer {
+    Pred(Vec<bool>),
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    U32(Vec<u32>),
+    U64(Vec<u64>),
+}
+
+impl Buffer {
+    pub fn len(&self) -> usize {
+        match self {
+            Buffer::Pred(v) => v.len(),
+            Buffer::F32(v) => v.len(),
+            Buffer::F64(v) => v.len(),
+            Buffer::I32(v) => v.len(),
+            Buffer::I64(v) => v.len(),
+            Buffer::U32(v) => v.len(),
+            Buffer::U64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        match self {
+            Buffer::Pred(_) => ElementType::Pred,
+            Buffer::F32(_) => ElementType::F32,
+            Buffer::F64(_) => ElementType::F64,
+            Buffer::I32(_) => ElementType::I32,
+            Buffer::I64(_) => ElementType::I64,
+            Buffer::U32(_) => ElementType::U32,
+            Buffer::U64(_) => ElementType::U64,
+        }
+    }
+
+    /// All-default buffer (0 / false) of `n` elements.
+    pub fn zeros(ty: ElementType, n: usize) -> Buffer {
+        match ty {
+            ElementType::Pred => Buffer::Pred(vec![false; n]),
+            ElementType::F32 => Buffer::F32(vec![0.0; n]),
+            ElementType::F64 => Buffer::F64(vec![0.0; n]),
+            ElementType::I32 => Buffer::I32(vec![0; n]),
+            ElementType::I64 => Buffer::I64(vec![0; n]),
+            ElementType::U32 => Buffer::U32(vec![0; n]),
+            ElementType::U64 => Buffer::U64(vec![0; n]),
+        }
+    }
+
+    /// Clone the elements at `idx` (flat indices) into a new buffer —
+    /// the shared kernel of gather / broadcast.
+    pub(crate) fn take_flat(&self, idx: &[usize]) -> Buffer {
+        macro_rules! take {
+            ($v:expr, $ctor:path) => {
+                $ctor(idx.iter().map(|&i| $v[i]).collect())
+            };
+        }
+        match self {
+            Buffer::Pred(v) => take!(v, Buffer::Pred),
+            Buffer::F32(v) => take!(v, Buffer::F32),
+            Buffer::F64(v) => take!(v, Buffer::F64),
+            Buffer::I32(v) => take!(v, Buffer::I32),
+            Buffer::I64(v) => take!(v, Buffer::I64),
+            Buffer::U32(v) => take!(v, Buffer::U32),
+            Buffer::U64(v) => take!(v, Buffer::U64),
+        }
+    }
+
+    /// Integer view of an index buffer (gather/scatter indices).
+    pub(crate) fn as_indices(&self) -> XlaResult<Vec<i64>> {
+        Ok(match self {
+            Buffer::I32(v) => v.iter().map(|&x| x as i64).collect(),
+            Buffer::I64(v) => v.clone(),
+            Buffer::U32(v) => v.iter().map(|&x| x as i64).collect(),
+            Buffer::U64(v) => v.iter().map(|&x| x as i64).collect(),
+            other => {
+                return Err(XlaError::new(format!(
+                    "index operand must be integer, got {}",
+                    other.element_type().name()
+                )))
+            }
+        })
+    }
+}
+
+/// Marker trait for element types usable with `Literal::vec1` /
+/// `Literal::to_vec` (the surface the runtime packs operands through).
+pub trait ArrayElement: Copy + Default + 'static {
+    const TY: ElementType;
+    #[doc(hidden)]
+    fn to_buffer(v: &[Self]) -> Buffer;
+    #[doc(hidden)]
+    fn from_buffer(b: &Buffer) -> Option<Vec<Self>>;
+}
+
+macro_rules! array_element {
+    ($t:ty, $ty:expr, $ctor:path) => {
+        impl ArrayElement for $t {
+            const TY: ElementType = $ty;
+            fn to_buffer(v: &[Self]) -> Buffer {
+                $ctor(v.to_vec())
+            }
+            fn from_buffer(b: &Buffer) -> Option<Vec<Self>> {
+                match b {
+                    $ctor(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+array_element!(f32, ElementType::F32, Buffer::F32);
+array_element!(f64, ElementType::F64, Buffer::F64);
+array_element!(i32, ElementType::I32, Buffer::I32);
+array_element!(i64, ElementType::I64, Buffer::I64);
+array_element!(u32, ElementType::U32, Buffer::U32);
+array_element!(u64, ElementType::U64, Buffer::U64);
+
+/// Host-side literal: a shaped array or a tuple of literals.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Literal {
+    Array { dims: Vec<usize>, data: Buffer },
+    Tuple(Vec<Literal>),
+}
+
+impl Default for Literal {
+    fn default() -> Self {
+        Literal::Array { dims: vec![0], data: Buffer::F32(Vec::new()) }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: ArrayElement>(v: &[T]) -> Literal {
+        Literal::Array { dims: vec![v.len()], data: T::to_buffer(v) }
+    }
+
+    /// f32 scalar literal (shape `f32[]`).
+    pub fn scalar(v: f32) -> Literal {
+        Literal::Array { dims: Vec::new(), data: Buffer::F32(vec![v]) }
+    }
+
+    pub fn dims(&self) -> XlaResult<&[usize]> {
+        match self {
+            Literal::Array { dims, .. } => Ok(dims),
+            Literal::Tuple(_) => Err(XlaError::new("tuple literal has no array dims")),
+        }
+    }
+
+    pub fn element_type(&self) -> XlaResult<ElementType> {
+        match self {
+            Literal::Array { data, .. } => Ok(data.element_type()),
+            Literal::Tuple(_) => Err(XlaError::new("tuple literal has no element type")),
+        }
+    }
+
+    pub(crate) fn array(&self) -> XlaResult<(&[usize], &Buffer)> {
+        match self {
+            Literal::Array { dims, data } => Ok((dims, data)),
+            Literal::Tuple(_) => Err(XlaError::new("expected array literal, got tuple")),
+        }
+    }
+
+    /// Same data, new dims (element counts must agree).
+    pub fn reshape(&self, dims: &[i64]) -> XlaResult<Literal> {
+        let (old, data) = self.array()?;
+        if dims.iter().any(|&d| d < 0) {
+            return Err(XlaError::new("reshape dims must be non-negative"));
+        }
+        let new: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+        let n_old: usize = old.iter().product();
+        let n_new: usize = new.iter().product();
+        if n_old != n_new {
+            return Err(XlaError::new(format!(
+                "reshape element count mismatch: {old:?} -> {dims:?}"
+            )));
+        }
+        Ok(Literal::Array { dims: new, data: data.clone() })
+    }
+
+    /// The tuple's elements (errors on array literals).
+    pub fn to_tuple(&self) -> XlaResult<Vec<Literal>> {
+        match self {
+            Literal::Tuple(parts) => Ok(parts.clone()),
+            Literal::Array { .. } => Err(XlaError::new("expected tuple literal, got array")),
+        }
+    }
+
+    /// The single element of a 1-tuple.
+    pub fn to_tuple1(&self) -> XlaResult<Literal> {
+        let parts = self.to_tuple()?;
+        if parts.len() != 1 {
+            return Err(XlaError::new(format!("expected 1-tuple, got {} elements", parts.len())));
+        }
+        Ok(parts.into_iter().next().unwrap())
+    }
+
+    /// Copy out the flat data of an array literal of element type `T`.
+    pub fn to_vec<T: ArrayElement>(&self) -> XlaResult<Vec<T>> {
+        let (_, data) = self.array()?;
+        T::from_buffer(data).ok_or_else(|| {
+            XlaError::new(format!(
+                "literal element type is {}, not {}",
+                data.element_type().name(),
+                T::TY.name()
+            ))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec1_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.dims().unwrap(), &[4]);
+        let m = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.dims().unwrap(), &[2, 2]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn type_mismatch_is_error() {
+        let l = Literal::vec1(&[1i32, 2]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn tuple_access() {
+        let t = Literal::Tuple(vec![Literal::scalar(1.0)]);
+        assert_eq!(t.to_tuple().unwrap().len(), 1);
+        assert_eq!(t.to_tuple1().unwrap().to_vec::<f32>().unwrap(), vec![1.0]);
+        assert!(Literal::scalar(0.0).to_tuple().is_err());
+        let t2 = Literal::Tuple(vec![Literal::scalar(1.0), Literal::scalar(2.0)]);
+        assert!(t2.to_tuple1().is_err());
+    }
+}

@@ -1,0 +1,792 @@
+//! HLO-text parser: module → computations → instructions.
+//!
+//! Parses the textual HLO emitted by XLA (`as_hlo_text()`, what
+//! `python/compile/aot.py` writes) and by the rust AOT emitter
+//! (`epgraph::runtime::aot`) into a small op graph the interpreter
+//! evaluates.  The grammar handled here is the instruction-per-line
+//! form:
+//!
+//! ```text
+//! HloModule name, attr=...
+//!
+//! %region_0.7 (Arg_0.8: f32[], Arg_1.9: f32[]) -> f32[] {
+//!   %Arg_0.8 = f32[] parameter(0)
+//!   %Arg_1.9 = f32[] parameter(1)
+//!   ROOT %add.10 = f32[] add(f32[] %Arg_0.8, f32[] %Arg_1.9)
+//! }
+//!
+//! ENTRY %main.20 (p0: f32[8]) -> (f32[8]) {
+//!   ...
+//!   ROOT %tuple.19 = (f32[8]{0}) tuple(f32[8]{0} %y.18)
+//! }
+//! ```
+//!
+//! Layout annotations (`{1,0}`) and per-instruction metadata are
+//! accepted and ignored.  Operand references are resolved to
+//! instruction indices within the computation; `to_apply=` references
+//! are resolved to computation indices within the module.
+
+use crate::literal::{Buffer, ElementType, Literal};
+use crate::{XlaError, XlaResult};
+
+/// Result shape of one instruction.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Shape {
+    Array { ty: ElementType, dims: Vec<usize> },
+    Tuple(Vec<Shape>),
+}
+
+impl Shape {
+    pub fn array(&self) -> XlaResult<(ElementType, &[usize])> {
+        match self {
+            Shape::Array { ty, dims } => Ok((*ty, dims)),
+            Shape::Tuple(_) => Err(XlaError::new("expected array shape, got tuple")),
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            Shape::Array { dims, .. } => dims.iter().product(),
+            Shape::Tuple(parts) => parts.iter().map(Shape::element_count).sum(),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinKind {
+    Add,
+    Subtract,
+    Multiply,
+    Divide,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CmpDir {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+/// One resolved HLO instruction.  Operand fields are indices into the
+/// owning computation's `instrs`; `to_apply` fields are indices into
+/// the module's `computations`.
+#[derive(Clone, Debug)]
+pub enum Op {
+    Parameter(usize),
+    Constant(Literal),
+    Broadcast {
+        operand: usize,
+        dims: Vec<usize>,
+    },
+    Reshape {
+        operand: usize,
+    },
+    Gather {
+        operand: usize,
+        indices: usize,
+        offset_dims: Vec<usize>,
+        collapsed_slice_dims: Vec<usize>,
+        start_index_map: Vec<usize>,
+        index_vector_dim: usize,
+        slice_sizes: Vec<usize>,
+    },
+    Scatter {
+        operand: usize,
+        indices: usize,
+        updates: usize,
+        update_window_dims: Vec<usize>,
+        inserted_window_dims: Vec<usize>,
+        scatter_dims_to_operand_dims: Vec<usize>,
+        index_vector_dim: usize,
+        to_apply: usize,
+    },
+    Dot {
+        lhs: usize,
+        rhs: usize,
+        lhs_contracting: Vec<usize>,
+        rhs_contracting: Vec<usize>,
+    },
+    Binary {
+        kind: BinKind,
+        lhs: usize,
+        rhs: usize,
+    },
+    Reduce {
+        operand: usize,
+        init: usize,
+        dims: Vec<usize>,
+        to_apply: usize,
+    },
+    Select {
+        pred: usize,
+        on_true: usize,
+        on_false: usize,
+    },
+    Compare {
+        lhs: usize,
+        rhs: usize,
+        dir: CmpDir,
+    },
+    Tuple(Vec<usize>),
+    GetTupleElement {
+        operand: usize,
+        index: usize,
+    },
+}
+
+#[derive(Clone, Debug)]
+pub struct Instr {
+    pub name: String,
+    pub shape: Shape,
+    pub op: Op,
+}
+
+#[derive(Clone, Debug)]
+pub struct Computation {
+    pub name: String,
+    pub instrs: Vec<Instr>,
+    pub root: usize,
+    /// instruction index of parameter i
+    pub params: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct HloModule {
+    pub name: String,
+    pub computations: Vec<Computation>,
+    pub entry: usize,
+}
+
+// ------------------------------------------------------------- raw parse
+
+struct RawInstr {
+    is_root: bool,
+    name: String,
+    shape: Shape,
+    opcode: String,
+    /// raw operand strings (inside the opcode parens), top-level split
+    args: Vec<String>,
+    /// raw `key=value` attributes after the closing paren
+    attrs: Vec<(String, String)>,
+}
+
+struct RawComp {
+    name: String,
+    is_entry: bool,
+    instrs: Vec<RawInstr>,
+}
+
+fn err_at(line: &str, msg: &str) -> XlaError {
+    XlaError::new(format!("HLO parse error: {msg} in line: {line}"))
+}
+
+/// Split `s` on `sep` at nesting depth 0 of `()[]{}`.
+fn split_top(s: &str, sep: char) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut cur = String::new();
+    for ch in s.chars() {
+        match ch {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' | '}' => depth -= 1,
+            c if c == sep && depth == 0 => {
+                out.push(cur.trim().to_string());
+                cur.clear();
+                continue;
+            }
+            _ => {}
+        }
+        cur.push(ch);
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    out
+}
+
+/// Parse one shape at the front of `s`; returns the shape and the rest.
+fn parse_shape(s: &str) -> XlaResult<(Shape, &str)> {
+    let s = s.trim_start();
+    if let Some(inner_start) = s.strip_prefix('(') {
+        // tuple shape: scan to the matching ')'
+        let mut depth = 1i32;
+        for (i, ch) in inner_start.char_indices() {
+            match ch {
+                '(' => depth += 1,
+                ')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        let inner = &inner_start[..i];
+                        let mut parts = Vec::new();
+                        for p in split_top(inner, ',') {
+                            let (shape, rest) = parse_shape(&p)?;
+                            if !rest.trim().is_empty() {
+                                return Err(err_at(&p, "trailing data after tuple member shape"));
+                            }
+                            parts.push(shape);
+                        }
+                        return Ok((Shape::Tuple(parts), &inner_start[i + 1..]));
+                    }
+                }
+                _ => {}
+            }
+        }
+        return Err(err_at(s, "unterminated tuple shape"));
+    }
+    let open = s.find('[').ok_or_else(|| err_at(s, "shape missing '['"))?;
+    let ty = ElementType::from_name(&s[..open])
+        .ok_or_else(|| err_at(s, "unknown element type"))?;
+    let close = s.find(']').ok_or_else(|| err_at(s, "shape missing ']'"))?;
+    let dims_str = &s[open + 1..close];
+    let mut dims = Vec::new();
+    if !dims_str.trim().is_empty() {
+        for d in dims_str.split(',') {
+            dims.push(
+                d.trim()
+                    .parse::<usize>()
+                    .map_err(|_| err_at(s, "bad dimension"))?,
+            );
+        }
+    }
+    let mut rest = &s[close + 1..];
+    // optional layout annotation {1,0}
+    if let Some(stripped) = rest.strip_prefix('{') {
+        let end = stripped.find('}').ok_or_else(|| err_at(s, "unterminated layout"))?;
+        rest = &stripped[end + 1..];
+    }
+    Ok((Shape::Array { ty, dims }, rest))
+}
+
+fn parse_instr_line(line: &str) -> XlaResult<RawInstr> {
+    let mut s = line.trim();
+    let is_root = s.starts_with("ROOT ");
+    if is_root {
+        s = s[5..].trim_start();
+    }
+    let s = s.strip_prefix('%').unwrap_or(s);
+    let eq = s.find(" = ").ok_or_else(|| err_at(line, "missing ' = '"))?;
+    let name = s[..eq].trim().to_string();
+    let rest = &s[eq + 3..];
+    let (shape, rest) = parse_shape(rest)?;
+    let rest = rest.trim_start();
+    let paren = rest.find('(').ok_or_else(|| err_at(line, "missing '(' after opcode"))?;
+    let opcode = rest[..paren].trim().to_string();
+    // find the matching close paren (byte offsets; HLO text is ASCII)
+    let mut depth = 0i32;
+    let mut close = None;
+    for (off, ch) in rest[paren..].char_indices() {
+        let i = paren + off;
+        match ch {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' | '}' => {
+                depth -= 1;
+                if depth == 0 {
+                    close = Some(i);
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    let close = close.ok_or_else(|| err_at(line, "unbalanced parens"))?;
+    let args_str = &rest[paren + 1..close];
+    let args = split_top(args_str, ',');
+    let mut attrs = Vec::new();
+    let tail = rest[close + 1..].trim_start().trim_start_matches(',').trim();
+    if !tail.is_empty() {
+        for kv in split_top(tail, ',') {
+            if let Some(eq) = kv.find('=') {
+                attrs.push((kv[..eq].trim().to_string(), kv[eq + 1..].trim().to_string()));
+            }
+            // key-less metadata fragments are ignored
+        }
+    }
+    Ok(RawInstr { is_root, name, shape, opcode, args, attrs })
+}
+
+// --------------------------------------------------------- resolution
+
+impl RawInstr {
+    /// `%name`-style operand reference at argument position `i`.
+    fn operand(&self, i: usize) -> XlaResult<&str> {
+        let arg = self
+            .args
+            .get(i)
+            .ok_or_else(|| XlaError::new(format!("{}: missing operand {i}", self.name)))?;
+        let pct = arg
+            .rfind('%')
+            .ok_or_else(|| XlaError::new(format!("{}: operand '{arg}' has no %name", self.name)))?;
+        Ok(arg[pct + 1..].trim())
+    }
+
+    fn want_args(&self, n: usize) -> XlaResult<()> {
+        if self.args.len() != n {
+            return Err(XlaError::new(format!(
+                "{}: {} expects {n} operands, got {}",
+                self.name,
+                self.opcode,
+                self.args.len()
+            )));
+        }
+        Ok(())
+    }
+
+    fn attr(&self, key: &str) -> Option<&str> {
+        self.attrs
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// `{1, 2, 3}`-style integer-list attribute; missing key → empty.
+    fn attr_list(&self, key: &str) -> XlaResult<Vec<usize>> {
+        let Some(v) = self.attr(key) else { return Ok(Vec::new()) };
+        let inner = v.trim().trim_start_matches('{').trim_end_matches('}');
+        let mut out = Vec::new();
+        for tok in inner.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            out.push(
+                tok.parse::<usize>()
+                    .map_err(|_| XlaError::new(format!("{}: bad {key} entry '{tok}'", self.name)))?,
+            );
+        }
+        Ok(out)
+    }
+
+    fn attr_int(&self, key: &str) -> XlaResult<usize> {
+        self.attr(key)
+            .ok_or_else(|| XlaError::new(format!("{}: missing {key}", self.name)))?
+            .parse::<usize>()
+            .map_err(|_| XlaError::new(format!("{}: bad {key}", self.name)))
+    }
+}
+
+/// Parse a constant payload (`0`, `{0, 1, 2}`, `{{...}, {...}}`) into a
+/// literal of the declared shape.
+fn parse_constant(shape: &Shape, payload: &str) -> XlaResult<Literal> {
+    let (ty, dims) = shape.array()?;
+    let flat: String = payload
+        .chars()
+        .map(|c| if c == '{' || c == '}' { ' ' } else { c })
+        .collect();
+    let toks: Vec<&str> = flat
+        .split(|c: char| c == ',' || c.is_whitespace())
+        .filter(|t| !t.is_empty())
+        .collect();
+    let want: usize = dims.iter().product();
+    if toks.len() != want {
+        return Err(XlaError::new(format!(
+            "constant payload has {} elements, shape {:?} wants {want}",
+            toks.len(),
+            dims
+        )));
+    }
+    macro_rules! parse_all {
+        ($t:ty, $ctor:path) => {{
+            let mut v: Vec<$t> = Vec::with_capacity(toks.len());
+            for t in &toks {
+                v.push(t.parse::<$t>().map_err(|_| {
+                    XlaError::new(format!("bad {} constant element '{t}'", ty.name()))
+                })?);
+            }
+            $ctor(v)
+        }};
+    }
+    let data = match ty {
+        ElementType::Pred => {
+            let mut v = Vec::with_capacity(toks.len());
+            for t in &toks {
+                v.push(match *t {
+                    "true" | "1" => true,
+                    "false" | "0" => false,
+                    other => return Err(XlaError::new(format!("bad pred constant '{other}'"))),
+                });
+            }
+            Buffer::Pred(v)
+        }
+        ElementType::F32 => parse_all!(f32, Buffer::F32),
+        ElementType::F64 => parse_all!(f64, Buffer::F64),
+        ElementType::I32 => parse_all!(i32, Buffer::I32),
+        ElementType::I64 => parse_all!(i64, Buffer::I64),
+        ElementType::U32 => parse_all!(u32, Buffer::U32),
+        ElementType::U64 => parse_all!(u64, Buffer::U64),
+    };
+    Ok(Literal::Array { dims: dims.to_vec(), data })
+}
+
+fn resolve_comp_ref(name: &str, comp_names: &[String]) -> XlaResult<usize> {
+    let name = name.trim().trim_start_matches('%');
+    comp_names
+        .iter()
+        .position(|n| n == name)
+        .ok_or_else(|| XlaError::new(format!("to_apply references unknown computation '{name}'")))
+}
+
+fn build_computation(raw: &RawComp, comp_names: &[String]) -> XlaResult<Computation> {
+    let mut name_to_idx: std::collections::HashMap<&str, usize> = std::collections::HashMap::new();
+    let mut instrs = Vec::with_capacity(raw.instrs.len());
+    let mut root = None;
+    let mut params: Vec<(usize, usize)> = Vec::new();
+
+    for (i, ri) in raw.instrs.iter().enumerate() {
+        let opn = |j: usize| -> XlaResult<usize> {
+            let name = ri.operand(j)?;
+            name_to_idx.get(name).copied().ok_or_else(|| {
+                XlaError::new(format!(
+                    "{}: operand %{name} is undefined (HLO must define before use)",
+                    ri.name
+                ))
+            })
+        };
+        let op = match ri.opcode.as_str() {
+            "parameter" => {
+                ri.want_args(1)?;
+                let idx = ri.args[0]
+                    .trim()
+                    .parse::<usize>()
+                    .map_err(|_| XlaError::new(format!("{}: bad parameter index", ri.name)))?;
+                params.push((idx, i));
+                Op::Parameter(idx)
+            }
+            "constant" => {
+                let payload = ri.args.join(", ");
+                Op::Constant(parse_constant(&ri.shape, &payload)?)
+            }
+            "broadcast" => {
+                ri.want_args(1)?;
+                Op::Broadcast { operand: opn(0)?, dims: ri.attr_list("dimensions")? }
+            }
+            "reshape" => {
+                ri.want_args(1)?;
+                Op::Reshape { operand: opn(0)? }
+            }
+            "gather" => {
+                ri.want_args(2)?;
+                Op::Gather {
+                    operand: opn(0)?,
+                    indices: opn(1)?,
+                    offset_dims: ri.attr_list("offset_dims")?,
+                    collapsed_slice_dims: ri.attr_list("collapsed_slice_dims")?,
+                    start_index_map: ri.attr_list("start_index_map")?,
+                    index_vector_dim: ri.attr_int("index_vector_dim")?,
+                    slice_sizes: ri.attr_list("slice_sizes")?,
+                }
+            }
+            "scatter" => {
+                ri.want_args(3)?;
+                let to_apply = ri
+                    .attr("to_apply")
+                    .ok_or_else(|| XlaError::new(format!("{}: scatter missing to_apply", ri.name)))?;
+                Op::Scatter {
+                    operand: opn(0)?,
+                    indices: opn(1)?,
+                    updates: opn(2)?,
+                    update_window_dims: ri.attr_list("update_window_dims")?,
+                    inserted_window_dims: ri.attr_list("inserted_window_dims")?,
+                    scatter_dims_to_operand_dims: ri.attr_list("scatter_dims_to_operand_dims")?,
+                    index_vector_dim: ri.attr_int("index_vector_dim")?,
+                    to_apply: resolve_comp_ref(to_apply, comp_names)?,
+                }
+            }
+            "dot" => {
+                ri.want_args(2)?;
+                Op::Dot {
+                    lhs: opn(0)?,
+                    rhs: opn(1)?,
+                    lhs_contracting: ri.attr_list("lhs_contracting_dims")?,
+                    rhs_contracting: ri.attr_list("rhs_contracting_dims")?,
+                }
+            }
+            "add" | "subtract" | "multiply" | "divide" => {
+                ri.want_args(2)?;
+                let kind = match ri.opcode.as_str() {
+                    "add" => BinKind::Add,
+                    "subtract" => BinKind::Subtract,
+                    "multiply" => BinKind::Multiply,
+                    _ => BinKind::Divide,
+                };
+                Op::Binary { kind, lhs: opn(0)?, rhs: opn(1)? }
+            }
+            "reduce" => {
+                ri.want_args(2)?;
+                let to_apply = ri
+                    .attr("to_apply")
+                    .ok_or_else(|| XlaError::new(format!("{}: reduce missing to_apply", ri.name)))?;
+                Op::Reduce {
+                    operand: opn(0)?,
+                    init: opn(1)?,
+                    dims: ri.attr_list("dimensions")?,
+                    to_apply: resolve_comp_ref(to_apply, comp_names)?,
+                }
+            }
+            "select" => {
+                ri.want_args(3)?;
+                Op::Select { pred: opn(0)?, on_true: opn(1)?, on_false: opn(2)? }
+            }
+            "compare" => {
+                ri.want_args(2)?;
+                let dir = match ri.attr("direction") {
+                    Some("EQ") => CmpDir::Eq,
+                    Some("NE") => CmpDir::Ne,
+                    Some("LT") => CmpDir::Lt,
+                    Some("LE") => CmpDir::Le,
+                    Some("GT") => CmpDir::Gt,
+                    Some("GE") => CmpDir::Ge,
+                    other => {
+                        return Err(XlaError::new(format!(
+                            "{}: bad compare direction {other:?}",
+                            ri.name
+                        )))
+                    }
+                };
+                Op::Compare { lhs: opn(0)?, rhs: opn(1)?, dir }
+            }
+            "tuple" => {
+                let mut elems = Vec::with_capacity(ri.args.len());
+                for j in 0..ri.args.len() {
+                    elems.push(opn(j)?);
+                }
+                Op::Tuple(elems)
+            }
+            "get-tuple-element" => {
+                ri.want_args(1)?;
+                Op::GetTupleElement { operand: opn(0)?, index: ri.attr_int("index")? }
+            }
+            other => {
+                return Err(XlaError::new(format!(
+                    "unsupported HLO opcode '{other}' (instruction {}) — the interpreter \
+                     covers the op set the blocked-SPMV/CG artifacts use",
+                    ri.name
+                )))
+            }
+        };
+        if ri.is_root {
+            root = Some(i);
+        }
+        name_to_idx.insert(ri.name.as_str(), i);
+        instrs.push(Instr { name: ri.name.clone(), shape: ri.shape.clone(), op });
+    }
+
+    // ROOT is optional in fragments: default to the last instruction
+    let root = root.unwrap_or(instrs.len().saturating_sub(1));
+    if instrs.is_empty() {
+        return Err(XlaError::new(format!("computation {} has no instructions", raw.name)));
+    }
+
+    params.sort_unstable();
+    for (want, &(idx, _)) in params.iter().enumerate() {
+        if idx != want {
+            return Err(XlaError::new(format!(
+                "computation {}: parameter indices must be contiguous from 0",
+                raw.name
+            )));
+        }
+    }
+    let params: Vec<usize> = params.into_iter().map(|(_, i)| i).collect();
+
+    Ok(Computation { name: raw.name.clone(), instrs, root, params })
+}
+
+/// Parse a full HLO-text module.
+pub fn parse_module(text: &str) -> XlaResult<HloModule> {
+    let mut module_name = String::from("module");
+    let mut raw_comps: Vec<RawComp> = Vec::new();
+    let mut cur: Option<RawComp> = None;
+
+    for line in text.lines() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with("//") {
+            continue;
+        }
+        if let Some(rest) = t.strip_prefix("HloModule") {
+            let rest = rest.trim();
+            let end = rest.find([',', ' ']).unwrap_or(rest.len());
+            module_name = rest[..end].to_string();
+            continue;
+        }
+        if cur.is_some() {
+            if t == "}" {
+                raw_comps.push(cur.take().unwrap());
+            } else {
+                cur.as_mut().unwrap().instrs.push(parse_instr_line(t)?);
+            }
+        } else {
+            if !t.ends_with('{') {
+                return Err(err_at(t, "expected computation header"));
+            }
+            let is_entry = t.starts_with("ENTRY");
+            let h = t.strip_prefix("ENTRY").unwrap_or(t).trim_start();
+            let h = h.strip_prefix('%').unwrap_or(h);
+            let end = h.find(['(', ' ']).unwrap_or(h.len());
+            cur = Some(RawComp { name: h[..end].to_string(), is_entry, instrs: Vec::new() });
+        }
+    }
+    if cur.is_some() {
+        return Err(XlaError::new("HLO parse error: unterminated computation"));
+    }
+
+    let comp_names: Vec<String> = raw_comps.iter().map(|c| c.name.clone()).collect();
+    let mut computations = Vec::with_capacity(raw_comps.len());
+    let mut entry = None;
+    for (i, rc) in raw_comps.iter().enumerate() {
+        if rc.is_entry {
+            if entry.is_some() {
+                return Err(XlaError::new("HLO module has multiple ENTRY computations"));
+            }
+            entry = Some(i);
+        }
+        computations.push(build_computation(rc, &comp_names)?);
+    }
+    let entry = entry.ok_or_else(|| XlaError::new("HLO module has no ENTRY computation"))?;
+    Ok(HloModule { name: module_name, computations, entry })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOLDEN_ADD: &str = "\
+HloModule tiny_add, entry_computation_layout={(f32[4]{0}, f32[4]{0})->(f32[4]{0})}
+
+ENTRY %main.5 (a.1: f32[4], b.2: f32[4]) -> (f32[4]) {
+  %a.1 = f32[4]{0} parameter(0)
+  %b.2 = f32[4]{0} parameter(1)
+  %add.3 = f32[4]{0} add(f32[4]{0} %a.1, f32[4]{0} %b.2)
+  ROOT %tuple.4 = (f32[4]{0}) tuple(f32[4]{0} %add.3)
+}
+";
+
+    #[test]
+    fn golden_module_parses() {
+        let m = parse_module(GOLDEN_ADD).unwrap();
+        assert_eq!(m.name, "tiny_add");
+        assert_eq!(m.computations.len(), 1);
+        let c = &m.computations[m.entry];
+        assert_eq!(c.name, "main.5");
+        assert_eq!(c.instrs.len(), 4);
+        assert_eq!(c.params.len(), 2);
+        assert_eq!(c.root, 3);
+        assert!(matches!(c.instrs[2].op, Op::Binary { kind: BinKind::Add, lhs: 0, rhs: 1 }));
+        assert!(matches!(&c.instrs[3].shape, Shape::Tuple(parts) if parts.len() == 1));
+    }
+
+    #[test]
+    fn golden_region_and_scatter_parse() {
+        let text = "\
+HloModule scat
+
+%add_f32.1 (lhs.2: f32[], rhs.3: f32[]) -> f32[] {
+  %lhs.2 = f32[] parameter(0)
+  %rhs.3 = f32[] parameter(1)
+  ROOT %add.4 = f32[] add(f32[] %lhs.2, f32[] %rhs.3)
+}
+
+ENTRY %main.9 (y0.5: f32[8], idx.6: s32[3,1], upd.7: f32[3]) -> f32[8] {
+  %y0.5 = f32[8]{0} parameter(0)
+  %idx.6 = s32[3,1]{1,0} parameter(1)
+  %upd.7 = f32[3]{0} parameter(2)
+  ROOT %scatter.8 = f32[8]{0} scatter(f32[8]{0} %y0.5, s32[3,1]{1,0} %idx.6, f32[3]{0} %upd.7), update_window_dims={}, inserted_window_dims={0}, scatter_dims_to_operand_dims={0}, index_vector_dim=1, to_apply=%add_f32.1
+}
+";
+        let m = parse_module(text).unwrap();
+        assert_eq!(m.computations.len(), 2);
+        assert_eq!(m.entry, 1);
+        let c = &m.computations[1];
+        match &c.instrs[3].op {
+            Op::Scatter { inserted_window_dims, index_vector_dim, to_apply, .. } => {
+                assert_eq!(inserted_window_dims, &[0]);
+                assert_eq!(*index_vector_dim, 1);
+                assert_eq!(*to_apply, 0);
+            }
+            other => panic!("expected scatter, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn golden_constants_parse() {
+        let text = "\
+HloModule consts
+
+ENTRY %main (p.1: f32[2]) -> f32[2] {
+  %p.1 = f32[2]{0} parameter(0)
+  %c0.2 = f32[] constant(0)
+  %c1.3 = s32[4]{0} constant({0, 256, 512, 768})
+  %c2.4 = f32[2,2]{1,0} constant({{1, 2}, {3.5, -4e2}})
+  %b.5 = f32[2]{0} broadcast(f32[] %c0.2), dimensions={}
+  ROOT %add.6 = f32[2]{0} add(f32[2]{0} %p.1, f32[2]{0} %b.5)
+}
+";
+        let m = parse_module(text).unwrap();
+        let c = &m.computations[0];
+        match &c.instrs[2].op {
+            Op::Constant(l) => assert_eq!(l.to_vec::<i32>().unwrap(), vec![0, 256, 512, 768]),
+            other => panic!("{other:?}"),
+        }
+        match &c.instrs[3].op {
+            Op::Constant(l) => {
+                assert_eq!(l.dims().unwrap(), &[2, 2]);
+                assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.5, -400.0]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn golden_gather_attrs_parse() {
+        let text = "\
+HloModule g
+
+ENTRY %main (x.1: f32[16], i.2: s32[5,1]) -> f32[5] {
+  %x.1 = f32[16]{0} parameter(0)
+  %i.2 = s32[5,1]{1,0} parameter(1)
+  ROOT %g.3 = f32[5]{0} gather(f32[16]{0} %x.1, s32[5,1]{1,0} %i.2), offset_dims={}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1}
+}
+";
+        let m = parse_module(text).unwrap();
+        match &m.computations[0].instrs[2].op {
+            Op::Gather { offset_dims, collapsed_slice_dims, slice_sizes, index_vector_dim, .. } => {
+                assert!(offset_dims.is_empty());
+                assert_eq!(collapsed_slice_dims, &[0]);
+                assert_eq!(slice_sizes, &[1]);
+                assert_eq!(*index_vector_dim, 1);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn errors_are_actionable() {
+        // unknown opcode
+        let text = "\
+HloModule bad
+
+ENTRY %main (p.1: f32[2]) -> f32[2] {
+  %p.1 = f32[2]{0} parameter(0)
+  ROOT %t.2 = f32[2]{0} tanh(f32[2]{0} %p.1)
+}
+";
+        let err = parse_module(text).unwrap_err().to_string();
+        assert!(err.contains("unsupported HLO opcode 'tanh'"), "{err}");
+
+        // use before def
+        let text2 = "\
+HloModule bad2
+
+ENTRY %main (p.1: f32[2]) -> f32[2] {
+  %p.1 = f32[2]{0} parameter(0)
+  ROOT %a.2 = f32[2]{0} add(f32[2]{0} %p.1, f32[2]{0} %later.3)
+}
+";
+        let err2 = parse_module(text2).unwrap_err().to_string();
+        assert!(err2.contains("define before use"), "{err2}");
+
+        // no entry
+        assert!(parse_module("HloModule empty\n").unwrap_err().to_string().contains("no ENTRY"));
+    }
+}
