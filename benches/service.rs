@@ -1,0 +1,80 @@
+//! Serving-layer benchmarks: cache hit-path latency over real loopback
+//! TCP, singleflight fan-in, and the raw cache/fingerprint costs.
+//!
+//!     cargo bench --offline --bench service
+//!
+//! Set EPGRAPH_BENCH_SMOKE=1 for a fast CI-sized run.  Results are
+//! printed (not written to BENCH_partition.json — the serving numbers
+//! are latency distributions, not the ratio metrics the regression gate
+//! consumes; PERF.md records representative figures).
+//!
+//! criterion is unavailable offline; this uses the in-repo harness
+//! (epgraph::util::benchkit).
+
+use std::sync::Arc;
+
+use epgraph::coordinator::{optimize_graph_with_breakdown, OptOptions};
+use epgraph::service::{
+    fingerprint, proto, CachedSchedule, Client, GraphSpec, ScheduleCache, ServeOpts, Server,
+};
+use epgraph::util::benchkit::bench;
+
+fn main() {
+    let smoke = std::env::var("EPGRAPH_BENCH_SMOKE").is_ok();
+    let iters = if smoke { 200 } else { 2000 };
+
+    let spec = GraphSpec::Gen { name: "cfd_mesh".into(), args: vec![24, 24, 1] };
+    let opts = OptOptions { k: 8, seed: 7, ..Default::default() };
+    let g = spec.resolve().expect("resolve bench graph");
+    println!(
+        "## service benchmarks ({}) — workload cfd_mesh:24,24,1 (n={} m={} k={})\n",
+        if smoke { "smoke" } else { "full" },
+        g.n,
+        g.m(),
+        opts.k
+    );
+
+    // --- raw building blocks -------------------------------------------
+    println!("{}", bench("fingerprint (graph+opts)", 10, iters, || fingerprint(&g, &opts)).row());
+
+    let (sched, bd) = optimize_graph_with_breakdown(&g, &opts);
+    let entry = Arc::new(CachedSchedule::new(sched, bd));
+    let cache = ScheduleCache::new(64 << 20, 8);
+    let fp = fingerprint(&g, &opts);
+    cache.insert(fp, entry);
+    println!("{}", bench("cache get (hit, in-process)", 10, iters, || cache.get(fp)).row());
+
+    // --- end-to-end hit path over loopback TCP -------------------------
+    let server = Arc::new(
+        Server::bind(ServeOpts { port: 0, threads: 2, ..Default::default() })
+            .expect("bind loopback"),
+    );
+    let addr = server.local_addr();
+    let run = {
+        let server = server.clone();
+        std::thread::spawn(move || server.run().expect("server run"))
+    };
+
+    let mut client = Client::connect(addr).expect("connect");
+    let line = proto::optimize_request(&spec, &opts).dump();
+    // warm the cache (the one and only optimizer run)
+    let first = client.roundtrip_line(&line).expect("first request");
+    assert_eq!(
+        first.get("cached").and_then(|v| v.as_str()),
+        Some("miss"),
+        "first request must be a miss"
+    );
+
+    println!(
+        "{}",
+        bench("serve hit path (TCP roundtrip)", 10, iters, || {
+            client.roundtrip_line(&line).expect("hit request")
+        })
+        .row()
+    );
+
+    let stats = client.roundtrip_line(&proto::simple_request("stats").dump()).expect("stats");
+    println!("\nstats after run: {}", stats.dump());
+    client.roundtrip_line(&proto::simple_request("shutdown").dump()).expect("shutdown");
+    run.join().expect("server thread");
+}

@@ -69,47 +69,97 @@ pub struct OptimizedSchedule {
     pub skipped_low_reuse: bool,
 }
 
+/// Per-stage wall-clock breakdown of one pipeline run.  The serving
+/// layer (`service`) stores this next to each cached schedule so its
+/// `stats` endpoint can report where optimization time went without
+/// re-running anything; `total` always equals the schedule's
+/// `partition_time`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OptBreakdown {
+    pub reuse_check: Duration,
+    pub special_detect: Duration,
+    /// Partitioner proper (EP/baseline run, or the preset-pattern build).
+    pub partition: Duration,
+    /// cpack first-touch relayout.
+    pub layout: Duration,
+    /// Vertex-cut cost accounting.
+    pub quality: Duration,
+    pub total: Duration,
+}
+
 /// Run the full §4.1 pipeline synchronously.
 pub fn optimize_graph(g: &Graph, opts: &OptOptions) -> OptimizedSchedule {
+    optimize_graph_with_breakdown(g, opts).0
+}
+
+/// `optimize_graph` plus its per-stage cost breakdown — the
+/// cache-reusable entry point of the serving layer.  Deterministic in
+/// `(g, opts)` up to `opts.threads` (results are bit-identical for every
+/// thread count), which is what makes the schedule cacheable by content
+/// fingerprint (`service::fingerprint`).
+pub fn optimize_graph_with_breakdown(
+    g: &Graph,
+    opts: &OptOptions,
+) -> (OptimizedSchedule, OptBreakdown) {
     let t0 = Instant::now();
+    let mut bd = OptBreakdown::default();
 
     // 1. reuse check: little sharing → keep the original schedule
-    if !stats::has_enough_reuse(g, opts.reuse_threshold) {
+    let t = Instant::now();
+    let enough_reuse = stats::has_enough_reuse(g, opts.reuse_threshold);
+    bd.reuse_check = t.elapsed();
+    if !enough_reuse {
         let partition = crate::partition::default_sched::default_partition(g.m(), opts.k);
+        let t = Instant::now();
         let quality = quality::vertex_cut_cost(g, &partition);
-        return OptimizedSchedule {
+        bd.quality = t.elapsed();
+        bd.total = t0.elapsed();
+        let sched = OptimizedSchedule {
             layout: Perm::identity(g.n),
             balance: quality::balance_factor(&partition),
             partition,
             quality,
-            partition_time: t0.elapsed(),
+            partition_time: bd.total,
             used_special: None,
             skipped_low_reuse: true,
         };
+        return (sched, bd);
     }
 
     // 2. special-pattern shortcut: preset schedules, no partitioner run
     if opts.use_special_patterns {
-        if let Some(pat) = special::detect(g) {
+        let t = Instant::now();
+        let detected = special::detect(g);
+        bd.special_detect = t.elapsed();
+        if let Some(pat) = detected {
+            let t = Instant::now();
             let mut partition = special::preset_partition(g, pat, opts.k);
             if let Some(cap) = opts.block_cap {
                 ep::rebalance_to_cap(g, &mut partition, cap);
             }
+            bd.partition = t.elapsed();
+            let t = Instant::now();
             let layout = cpack::cpack_graph(g, &partition);
+            bd.layout = t.elapsed();
+            let t = Instant::now();
             let quality = quality::vertex_cut_cost(g, &partition);
-            return OptimizedSchedule {
+            bd.quality = t.elapsed();
+            bd.total = t0.elapsed();
+            let sched = OptimizedSchedule {
                 layout,
                 balance: quality::balance_factor(&partition),
                 partition,
                 quality,
-                partition_time: t0.elapsed(),
+                partition_time: bd.total,
                 used_special: Some(pat),
                 skipped_low_reuse: false,
             };
+            return (sched, bd);
         }
     }
 
     // 3. the EP algorithm (or a selected baseline) + cpack relayout
+    let t = Instant::now();
     let mut partition = match opts.method {
         Method::Ep => {
             let ep_opts = ep::EpOpts {
@@ -127,17 +177,24 @@ pub fn optimize_graph(g: &Graph, opts: &OptOptions) -> OptimizedSchedule {
     if let Some(cap) = opts.block_cap {
         ep::rebalance_to_cap(g, &mut partition, cap);
     }
+    bd.partition = t.elapsed();
+    let t = Instant::now();
     let layout = cpack::cpack_graph(g, &partition);
+    bd.layout = t.elapsed();
+    let t = Instant::now();
     let quality = quality::vertex_cut_cost(g, &partition);
-    OptimizedSchedule {
+    bd.quality = t.elapsed();
+    bd.total = t0.elapsed();
+    let sched = OptimizedSchedule {
         layout,
         balance: quality::balance_factor(&partition),
         partition,
         quality,
-        partition_time: t0.elapsed(),
+        partition_time: bd.total,
         used_special: None,
         skipped_low_reuse: false,
-    }
+    };
+    (sched, bd)
 }
 
 /// Asynchronous optimization: the pipeline runs on its own CPU thread;
@@ -228,6 +285,22 @@ mod tests {
         assert_eq!(r.used_special, Some(Pattern::Grid));
         // preset partitioning is near-instant
         assert!(r.partition_time < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn breakdown_totals_match_schedule() {
+        let g = gen::cfd_mesh(20, 20, 1);
+        let opts = OptOptions { k: 8, ..Default::default() };
+        let (sched, bd) = optimize_graph_with_breakdown(&g, &opts);
+        assert_eq!(bd.total, sched.partition_time);
+        // stage sum can't exceed the total (stages are disjoint slices)
+        let stages = bd.reuse_check + bd.special_detect + bd.partition + bd.layout + bd.quality;
+        assert!(stages <= bd.total, "stages {stages:?} > total {:?}", bd.total);
+        // and the run is deterministic: a second run yields the same schedule
+        let again = optimize_graph(&g, &opts);
+        assert_eq!(again.partition.assign, sched.partition.assign);
+        assert_eq!(again.layout.new_of_old, sched.layout.new_of_old);
+        assert_eq!(again.quality, sched.quality);
     }
 
     #[test]

@@ -22,6 +22,10 @@
 //!   them from rust; offline the backend is the `vendor/xla` HLO-text
 //!   interpreter, so the full pipeline runs (and is CI-gated) with no
 //!   external dependencies.  Python never runs on the request path.
+//! * service — the `epgraph serve` daemon: a content-addressed schedule
+//!   cache, singleflight job queue, and worker pool that amortize
+//!   optimization cost across processes and users (JSON-lines over
+//!   loopback TCP; see `service::server`).
 
 pub mod apps;
 pub mod coordinator;
@@ -30,5 +34,6 @@ pub mod gpusim;
 pub mod graph;
 pub mod partition;
 pub mod runtime;
+pub mod service;
 pub mod sparse;
 pub mod util;

@@ -6,6 +6,9 @@
 //!   epgraph simulate  --app <name> [--block N]
 //!   epgraph bench     <fig4|fig6|table2|fig10|fig11|fig12|table3|fig13|fig14|fig15|ablation|scaling|all>
 //!   epgraph artifacts [--outdir DIR] [--configs t0,s1,m1]
+//!   epgraph serve     [--port N] [--threads N] [--queue-cap N] [--cache-mb N] [--shards N]
+//!   epgraph client    [--addr HOST:PORT] [--op optimize|stats|health|shutdown] [--gen SPEC]
+//!                     [--k N] [--seed S] [--repeat N] [--concurrency N] [--verify]
 //!   epgraph info
 
 use std::collections::HashMap;
@@ -77,6 +80,8 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("bench") => cmd_bench(pos.get(1).map(String::as_str).unwrap_or("all"), seed),
         Some("bench-compare") => cmd_bench_compare(&pos, &flags),
         Some("artifacts") => cmd_artifacts(&flags),
+        Some("serve") => cmd_serve(&flags),
+        Some("client") => cmd_client(&flags),
         Some("info") => cmd_info(),
         _ => {
             println!(
@@ -87,6 +92,8 @@ fn dispatch(args: &[String]) -> Result<()> {
                  epgraph bench <fig4|fig6|table2|fig10|fig11|fig12|table3|fig13|fig14|fig15|ablation|scaling|headline|all>\n  \
                  epgraph bench-compare <baseline.json> <current.json> [--tol 0.25]\n  \
                  epgraph artifacts [--outdir DIR] [--configs t0,s1,m1]\n  \
+                 epgraph serve [--port 7878] [--threads 0] [--partition-threads 1] [--queue-cap 64] [--cache-mb 64] [--shards 8]\n  \
+                 epgraph client [--addr 127.0.0.1:7878] [--op optimize|stats|health|shutdown] [--gen cfd_mesh:24,24,1]\n                 [--k N] [--seed S] [--method M] [--repeat 1] [--concurrency 1] [--verify]\n  \
                  epgraph info"
             );
             Ok(())
@@ -302,6 +309,196 @@ fn cmd_bench_compare(pos: &[String], flags: &HashMap<String, String>) -> Result<
         }
         Err(msg) => Err(anyhow!("{msg}")),
     }
+}
+
+/// Start the schedule-serving daemon (service::server).  Blocks until a
+/// client sends `{"op":"shutdown"}`; exits 0 on a clean drain.
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let opts = epgraph::service::ServeOpts {
+        port: get_usize(flags, "port", 7878) as u16,
+        threads: get_usize(flags, "threads", 0),
+        partition_threads: get_usize(flags, "partition-threads", 1),
+        queue_cap: get_usize(flags, "queue-cap", 64),
+        cache_bytes: get_usize(flags, "cache-mb", 64) << 20,
+        shards: get_usize(flags, "shards", 8),
+    };
+    let server = epgraph::service::Server::bind(opts.clone())?;
+    println!(
+        "epgraph serve: listening on {} (workers={}, queue_cap={}, cache={}MiB/{} shards)",
+        server.local_addr(),
+        server.workers(),
+        opts.queue_cap,
+        opts.cache_bytes >> 20,
+        opts.shards
+    );
+    server.run()?;
+    println!("epgraph serve: clean shutdown");
+    Ok(())
+}
+
+/// Drive a running `epgraph serve`: fire optimize requests (optionally
+/// concurrent and repeated, with verification against a direct
+/// `optimize_graph` run), or hit the stats/health/shutdown endpoints.
+fn cmd_client(flags: &HashMap<String, String>) -> Result<()> {
+    use epgraph::coordinator::{optimize_graph, OptOptions};
+    use epgraph::service::proto;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Mutex;
+
+    let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7878".to_string());
+    let op = flags.get("op").map(String::as_str).unwrap_or("optimize");
+
+    if matches!(op, "stats" | "health" | "shutdown") {
+        let mut client = epgraph::service::Client::connect(addr.as_str())?;
+        let resp = client.request(&proto::simple_request(op))?;
+        println!("{}", resp.dump());
+        anyhow::ensure!(
+            resp.get("ok").and_then(epgraph::util::json::Json::as_bool) == Some(true),
+            "server reported failure"
+        );
+        return Ok(());
+    }
+    anyhow::ensure!(op == "optimize", "unknown --op '{op}'");
+
+    let spec_str = flags.get("gen").map(String::as_str).unwrap_or("cfd_mesh:24,24,1");
+    let spec = proto::GraphSpec::parse_cli(spec_str).map_err(|e| anyhow!("--gen: {e}"))?;
+    let mut opts = OptOptions { k: get_usize(flags, "k", 8), ..Default::default() };
+    if let Some(s) = flags.get("seed") {
+        opts.seed = s.parse().map_err(|_| anyhow!("bad --seed"))?;
+    }
+    if let Some(m) = flags.get("method") {
+        opts.method = epgraph::partition::Method::from_name(m)
+            .ok_or_else(|| anyhow!("unknown method {m}"))?;
+    }
+    let repeat = get_usize(flags, "repeat", 1).max(1);
+    let concurrency = get_usize(flags, "concurrency", 1).clamp(1, repeat);
+    let verify = flags.contains_key("verify");
+
+    // one request line shared by every connection; the expected schedule
+    // (for --verify) comes from the same resolution path the server uses
+    let line = proto::optimize_request(&spec, &opts).dump();
+    let expected = if verify {
+        let g = spec.resolve().map_err(|e| anyhow!("--gen: {e}"))?;
+        Some(optimize_graph(&g, &opts))
+    } else {
+        None
+    };
+
+    let hits = AtomicU64::new(0);
+    let joins = AtomicU64::new(0);
+    let misses = AtomicU64::new(0);
+    let retries = AtomicU64::new(0);
+    let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(repeat));
+    let t0 = std::time::Instant::now();
+
+    let ranges = epgraph::util::par::chunk_ranges(repeat, concurrency);
+    let results: Vec<Result<()>> = std::thread::scope(|s| {
+        let handles: Vec<_> = ranges
+            .iter()
+            .map(|&(lo, hi)| {
+                let (line, addr) = (&line, &addr);
+                let (hits, joins, misses, retries) = (&hits, &joins, &misses, &retries);
+                let (latencies, expected) = (&latencies, &expected);
+                s.spawn(move || -> Result<()> {
+                    let mut client = epgraph::service::Client::connect(addr.as_str())?;
+                    for _ in lo..hi {
+                        let resp = loop {
+                            let t = std::time::Instant::now();
+                            let resp = client.roundtrip_line(line)?;
+                            let ok = resp.get("ok").and_then(|v| v.as_bool()) == Some(true);
+                            if ok {
+                                latencies
+                                    .lock()
+                                    .unwrap()
+                                    .push(t.elapsed().as_secs_f64() * 1e3);
+                                break resp;
+                            }
+                            // backpressure: honor the retry-after hint
+                            let Some(ms) =
+                                resp.get("retry_after_ms").and_then(|v| v.as_u64())
+                            else {
+                                anyhow::bail!(
+                                    "request failed: {}",
+                                    resp.get("error")
+                                        .and_then(|v| v.as_str())
+                                        .unwrap_or("unknown error")
+                                );
+                            };
+                            retries.fetch_add(1, Ordering::Relaxed);
+                            anyhow::ensure!(
+                                retries.load(Ordering::Relaxed) < 10_000,
+                                "giving up after excessive backpressure retries"
+                            );
+                            std::thread::sleep(std::time::Duration::from_millis(ms.max(1)));
+                        };
+                        match resp.get("cached").and_then(|v| v.as_str()) {
+                            Some("hit") => hits.fetch_add(1, Ordering::Relaxed),
+                            Some("joined") => joins.fetch_add(1, Ordering::Relaxed),
+                            _ => misses.fetch_add(1, Ordering::Relaxed),
+                        };
+                        if let Some(exp) = expected {
+                            let assign = resp
+                                .get("assign")
+                                .and_then(|v| v.as_arr())
+                                .ok_or_else(|| anyhow!("response missing assign"))?;
+                            let same_assign = assign.len() == exp.partition.assign.len()
+                                && assign
+                                    .iter()
+                                    .zip(&exp.partition.assign)
+                                    .all(|(a, &b)| a.as_u64() == Some(b as u64));
+                            let layout = resp
+                                .get("layout")
+                                .and_then(|v| v.as_arr())
+                                .ok_or_else(|| anyhow!("response missing layout"))?;
+                            let same_layout = layout.len() == exp.layout.new_of_old.len()
+                                && layout
+                                    .iter()
+                                    .zip(&exp.layout.new_of_old)
+                                    .all(|(a, &b)| a.as_u64() == Some(b as u64));
+                            anyhow::ensure!(
+                                same_assign && same_layout,
+                                "served schedule differs from direct optimize_graph"
+                            );
+                        }
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("client thread panicked"))))
+            .collect()
+    });
+    for r in results {
+        r?;
+    }
+
+    let wall = t0.elapsed();
+    let mut lat = latencies.into_inner().unwrap();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| lat[((p * lat.len() as f64) as usize).min(lat.len() - 1)];
+    println!(
+        "client: {} ok (hit {}, joined {}, miss {}), backpressure retries {}, wall {:.3}s",
+        lat.len(),
+        hits.load(Ordering::Relaxed),
+        joins.load(Ordering::Relaxed),
+        misses.load(Ordering::Relaxed),
+        retries.load(Ordering::Relaxed),
+        wall.as_secs_f64()
+    );
+    println!(
+        "latency ms: p50 {:.3} p95 {:.3} max {:.3} (over {} requests, {} connections)",
+        pct(0.50),
+        pct(0.95),
+        lat.last().copied().unwrap_or(0.0),
+        lat.len(),
+        ranges.len()
+    );
+    if verify {
+        println!("verify: every response bit-identical to direct optimize_graph");
+    }
+    Ok(())
 }
 
 fn cmd_info() -> Result<()> {

@@ -153,10 +153,11 @@ pub fn partition_kway_naive(g: &WGraph, k: usize, opts: &VpOpts) -> Vec<u32> {
     part
 }
 
-/// Seed k-way balance (full-vertex rescan per call) — public only so
-/// `benches/partition.rs` can time it against the gain-bucket rewrite;
-/// the algorithm is frozen.
-pub fn kway_balance(g: &WGraph, part: &mut [u32], k: usize, eps: f64) {
+/// Seed k-way balance (full-vertex rescan per call) — internal to the
+/// frozen seed driver.  Unlike `kway_refine` it has no bench/test
+/// consumer, so it is private; the refinement bench exercises it
+/// indirectly through `partition_kway_naive`.
+fn kway_balance(g: &WGraph, part: &mut [u32], k: usize, eps: f64) {
     let total = g.total_vwgt();
     let cap = ((total as f64 / k as f64) * (1.0 + eps)).ceil() as i64;
     let mut loads = vec![0i64; k];

@@ -290,6 +290,16 @@ pub struct VpWorkspace {
     conn_blk: Vec<u32>,
     conn_wgt: Vec<i64>,
     conn_len: Vec<u32>,
+    // arena validity tag: refine/balance maintain the arena exactly
+    // through every committed move and rollback, so consecutive calls on
+    // the same (graph, part, k) skip the O(n + m) rebuild.  `conn_valid`
+    // asserts "the arena matches the partition as last maintained";
+    // `conn_sig` pins the graph/k it was built for (levels of one
+    // multilevel chain always differ in n, so the signature can't alias
+    // across projections).  Anything that mutates `part` outside
+    // refine/balance must call `invalidate_conn`.
+    conn_valid: bool,
+    conn_sig: (usize, usize, usize),
     kgain: Vec<i64>,
     kbuckets: KwayBuckets,
     klocked: Vec<u32>,
@@ -900,11 +910,19 @@ pub fn partition_kway(g: &WGraph, k: usize, opts: &VpOpts) -> Vec<u32> {
             par::fill_indexed(threads, &mut fine, |v| part_ref[cmap[v] as usize]);
         }
         part = fine;
+        // the projected partition lives on a different graph — the
+        // pooled arena is stale (the signature check would catch this
+        // too, since level sizes differ; the explicit call is the
+        // contract, not an optimization)
+        ws.invalidate_conn();
         kway_refine_ws(&finer, &mut part, k, opts, threads, &mut loads, &mut ws);
         cur = finer;
     }
     // --- final strict balance (coarse-level moves can strand imbalance),
-    // then one more refine pass to recover quality lost to evictions
+    // then one more refine pass to recover quality lost to evictions.
+    // The finest-level arena built by the last refine is maintained
+    // exactly through every move, so this whole sequence reuses it —
+    // level entry work here is O(boundary), not 3 × O(n + m) rebuilds.
     kway_balance_ws(&cur, &mut part, k, opts.eps, threads, &mut loads, &mut ws);
     let recover = VpOpts { fm_passes: 1, ..opts.clone() };
     kway_refine_ws(&cur, &mut part, k, &recover, threads, &mut loads, &mut ws);
@@ -985,6 +1003,13 @@ impl VpWorkspace {
         self.kbuckets.ensure(k, n);
     }
 
+    /// Mark the pooled connectivity arena stale — call after any `part`
+    /// mutation that bypasses refine/balance maintenance (e.g. projecting
+    /// a partition to a finer level).
+    fn invalidate_conn(&mut self) {
+        self.conn_valid = false;
+    }
+
     /// Pre-size the 2-way FM buffers for the finest level of a bisection.
     fn reserve_fm(&mut self, n: usize) {
         self.fm_gain.reserve(n);
@@ -992,6 +1017,22 @@ impl VpWorkspace {
         self.fm_buckets[0].ensure(n);
         self.fm_buckets[1].ensure(n);
     }
+}
+
+/// Arena entry point for refine/balance: rebuild only when the pooled
+/// arena isn't already exact for `(g, part, k)`.  Correctness does not
+/// depend on arena entry ORDER (gain and target selection reduce over
+/// the list with order-independent max/tie rules), so a maintained arena
+/// and a fresh build yield bit-identical refinement — the
+/// `conn_arena_reuse_matches_fresh_build` test pins this.
+fn ensure_conn(g: &WGraph, part: &[u32], k: usize, threads: usize, ws: &mut VpWorkspace) {
+    let sig = (g.n, g.adjncy.len(), k);
+    if ws.conn_valid && ws.conn_sig == sig {
+        return;
+    }
+    build_conn(g, part, k, threads, ws);
+    ws.conn_sig = sig;
+    ws.conn_valid = true;
 }
 
 /// Build the block-connectivity arena for `part`: for every vertex, the
@@ -1137,13 +1178,15 @@ fn conn_shift_one(ws: &mut VpWorkspace, u: usize, f: u32, t: u32, w: i64) {
 
 /// Recompute `v`'s gain from its (exact) conn list and fix its bucket
 /// membership — insert if it became boundary, re-bucket if its gain or
-/// block changed, remove if it became interior.
+/// block changed, remove if it became interior.  (`ws.kgain` is NOT
+/// updated here: it is only the bulk-fill staging buffer for the
+/// initial bucket build; after that the exact gain is recomputed from
+/// the conn arena wherever it is needed.)
 fn refresh_vertex(ws: &mut VpWorkspace, v: u32, part: &[u32]) {
     let vi = v as usize;
     let off = ws.conn_ptr[vi] as usize;
     let l = ws.conn_len[vi] as usize;
     let gn = best_gain(&ws.conn_blk[off..off + l], &ws.conn_wgt[off..off + l], part[vi]);
-    ws.kgain[vi] = gn;
     let b = part[vi] as usize;
     if ws.kbuckets.contains(v) {
         if gn == i64::MIN {
@@ -1185,7 +1228,7 @@ fn kway_refine_ws(
     let max_vw = g.vwgt.iter().copied().max().unwrap_or(0);
     let cap = ((total as f64 / k as f64) * (1.0 + opts.eps)) as i64 + max_vw;
 
-    build_conn(g, part, k, threads, ws);
+    ensure_conn(g, part, k, threads, ws);
     // gains: parallel pure fill off the freshly built conn arena
     reset(&mut ws.kgain, n, 0);
     {
@@ -1340,7 +1383,7 @@ fn kway_balance_ws(
     if loads.iter().all(|&l| l <= cap) {
         return; // O(k) thanks to the carried loads — no O(n) rescan
     }
-    build_conn(g, part, k, threads, ws);
+    ensure_conn(g, part, k, threads, ws);
     ws.kbuckets.ensure(k, n);
     let overloaded: Vec<bool> = loads.iter().map(|&l| l > cap).collect();
     // only vertices of overloaded blocks are eviction candidates;
@@ -2173,6 +2216,65 @@ mod tests {
         kway_balance_ws(&g, &mut part, k, 0.05, 1, &mut loads, &mut ws);
         kway_refine_ws(&g, &mut part, k, &opts, 1, &mut loads, &mut ws);
         assert_eq!(loads, g.block_weights(&part, k, 1), "carried loads drifted");
+    }
+
+    #[test]
+    fn conn_arena_reuse_matches_fresh_build() {
+        // the pooled run reuses the maintained arena across the whole
+        // balance/refine/balance sequence (validity tag); the control
+        // run rebuilds it from scratch before every call.  Results must
+        // be bit-identical — reuse is a pure work saving.
+        let g = two_cliques(60);
+        let k = 5;
+        let opts = VpOpts { seed: 11, threads: 1, ..Default::default() };
+        let mut part: Vec<u32> = (0..g.n).map(|v| (v % k) as u32).collect();
+        let mut part_fresh = part.clone();
+
+        let mut ws = VpWorkspace::new();
+        ws.reserve_kway(&g, k);
+        let mut loads = g.block_weights(&part, k, 1);
+        kway_refine_ws(&g, &mut part, k, &opts, 1, &mut loads, &mut ws);
+        assert!(ws.conn_valid, "refine must leave a valid arena behind");
+        kway_balance_ws(&g, &mut part, k, 0.05, 1, &mut loads, &mut ws);
+        kway_refine_ws(&g, &mut part, k, &opts, 1, &mut loads, &mut ws);
+
+        let mut loads_fresh = g.block_weights(&part_fresh, k, 1);
+        let mut ws_f = VpWorkspace::new();
+        ws_f.reserve_kway(&g, k);
+        kway_refine_ws(&g, &mut part_fresh, k, &opts, 1, &mut loads_fresh, &mut ws_f);
+        ws_f.invalidate_conn(); // force the rebuild the tag would skip
+        kway_balance_ws(&g, &mut part_fresh, k, 0.05, 1, &mut loads_fresh, &mut ws_f);
+        ws_f.invalidate_conn();
+        kway_refine_ws(&g, &mut part_fresh, k, &opts, 1, &mut loads_fresh, &mut ws_f);
+
+        assert_eq!(part, part_fresh, "arena reuse changed the refinement result");
+        assert_eq!(loads, loads_fresh);
+        assert_eq!(loads, g.block_weights(&part, k, 1));
+    }
+
+    #[test]
+    fn conn_tag_invalidates_across_graphs() {
+        // same ws driven over two different graphs: the signature check
+        // must force a rebuild, not reuse the first graph's arena
+        let g1 = two_cliques(40);
+        let g2 = two_cliques(50);
+        let k = 4;
+        let opts = VpOpts { seed: 3, threads: 1, ..Default::default() };
+        let mut ws = VpWorkspace::new();
+        ws.reserve_kway(&g2, k);
+        let mut p1: Vec<u32> = (0..g1.n).map(|v| (v % k) as u32).collect();
+        let mut l1 = g1.block_weights(&p1, k, 1);
+        kway_refine_ws(&g1, &mut p1, k, &opts, 1, &mut l1, &mut ws);
+        let mut p2: Vec<u32> = (0..g2.n).map(|v| (v % k) as u32).collect();
+        let mut l2 = g2.block_weights(&p2, k, 1);
+        kway_refine_ws(&g2, &mut p2, k, &opts, 1, &mut l2, &mut ws);
+        // must equal a run with a private workspace
+        let mut p2_ref: Vec<u32> = (0..g2.n).map(|v| (v % k) as u32).collect();
+        let mut l2_ref = g2.block_weights(&p2_ref, k, 1);
+        let mut ws_ref = VpWorkspace::new();
+        ws_ref.reserve_kway(&g2, k);
+        kway_refine_ws(&g2, &mut p2_ref, k, &opts, 1, &mut l2_ref, &mut ws_ref);
+        assert_eq!(p2, p2_ref, "stale arena leaked across graphs");
     }
 
     #[test]

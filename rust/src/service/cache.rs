@@ -1,0 +1,340 @@
+//! Content-addressed schedule cache: sharded LRU with a byte budget.
+//!
+//! The service-level mirror of the paper's caching thesis — keep the
+//! expensive-to-recompute thing (here: an optimized schedule, seconds of
+//! partitioner work) resident because it will be reused.  Keys are
+//! `fingerprint::Fingerprint`s of `(graph, options)`; values are the
+//! full pipeline product (schedule + layout + cost breakdown) behind an
+//! `Arc`, so a hit is a pointer clone and concurrent waiters of one
+//! in-flight job share the same allocation the cache holds.
+//!
+//! Sharding: the key space is split over N independently-locked shards
+//! (default 8) so concurrent handler threads don't serialize on one
+//! mutex.  Each shard runs a classic intrusive doubly-linked LRU over a
+//! slab, with O(1) get/insert/promote and LRU-first eviction until the
+//! shard is back under its byte budget (total budget / shards).  The
+//! invariant `shard bytes ≤ shard budget` always holds — an entry larger
+//! than the whole shard budget is evicted straight away rather than
+//! pinning the shard over budget.
+//!
+//! Counters (hits/misses/insertions/evictions/bytes) are cache-global
+//! atomics, snapshotted loosely by `stats()` — they are monitoring data,
+//! not synchronization.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::{OptBreakdown, OptimizedSchedule};
+
+use super::fingerprint::Fingerprint;
+
+/// One cached pipeline product, sized for budget accounting.
+#[derive(Clone, Debug)]
+pub struct CachedSchedule {
+    pub schedule: OptimizedSchedule,
+    pub breakdown: OptBreakdown,
+    /// Approximate resident size (assignment + layout arrays + headers).
+    pub bytes: usize,
+}
+
+impl CachedSchedule {
+    pub fn new(schedule: OptimizedSchedule, breakdown: OptBreakdown) -> Self {
+        let bytes = std::mem::size_of::<OptimizedSchedule>()
+            + schedule.partition.assign.len() * std::mem::size_of::<u32>()
+            + (schedule.layout.new_of_old.len() + schedule.layout.old_of_new.len())
+                * std::mem::size_of::<u32>()
+            + 64; // map/slab entry overhead
+        CachedSchedule { schedule, breakdown, bytes }
+    }
+}
+
+/// Loose point-in-time counter snapshot.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub entries: usize,
+    pub bytes: usize,
+    pub byte_budget: usize,
+    pub shards: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+const NIL: usize = usize::MAX;
+
+struct Entry {
+    fp: Fingerprint,
+    val: Arc<CachedSchedule>,
+    prev: usize,
+    next: usize,
+}
+
+/// One LRU shard: slab-backed intrusive list, head = MRU, tail = LRU.
+#[derive(Default)]
+struct Shard {
+    map: HashMap<Fingerprint, usize>,
+    slots: Vec<Option<Entry>>,
+    free: Vec<usize>,
+    head: usize,
+    tail: usize,
+    bytes: usize,
+}
+
+impl Shard {
+    fn new() -> Self {
+        Shard { head: NIL, tail: NIL, ..Default::default() }
+    }
+
+    fn unlink(&mut self, slot: usize) {
+        let (prev, next) = {
+            let e = self.slots[slot].as_ref().unwrap();
+            (e.prev, e.next)
+        };
+        if prev != NIL {
+            self.slots[prev].as_mut().unwrap().next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slots[next].as_mut().unwrap().prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    fn push_front(&mut self, slot: usize) {
+        {
+            let e = self.slots[slot].as_mut().unwrap();
+            e.prev = NIL;
+            e.next = self.head;
+        }
+        if self.head != NIL {
+            self.slots[self.head].as_mut().unwrap().prev = slot;
+        }
+        self.head = slot;
+        if self.tail == NIL {
+            self.tail = slot;
+        }
+    }
+
+    fn get_promote(&mut self, fp: Fingerprint) -> Option<Arc<CachedSchedule>> {
+        let slot = *self.map.get(&fp)?;
+        self.unlink(slot);
+        self.push_front(slot);
+        Some(self.slots[slot].as_ref().unwrap().val.clone())
+    }
+
+    /// Remove the LRU entry; returns false when the shard is empty.
+    fn evict_lru(&mut self) -> bool {
+        let slot = self.tail;
+        if slot == NIL {
+            return false;
+        }
+        self.unlink(slot);
+        let e = self.slots[slot].take().unwrap();
+        self.map.remove(&e.fp);
+        self.bytes -= e.val.bytes;
+        self.free.push(slot);
+        true
+    }
+
+    /// Insert or refresh; evicts LRU-first until `bytes ≤ budget`.
+    /// Returns the number of evictions performed.
+    fn insert(&mut self, fp: Fingerprint, val: Arc<CachedSchedule>, budget: usize) -> u64 {
+        if let Some(&slot) = self.map.get(&fp) {
+            // same content re-inserted (e.g. post-singleflight race):
+            // refresh recency, swap the value (byte size may differ only
+            // if the estimate changed — keep accounting exact)
+            let old_bytes = self.slots[slot].as_ref().unwrap().val.bytes;
+            self.bytes = self.bytes - old_bytes + val.bytes;
+            self.slots[slot].as_mut().unwrap().val = val;
+            self.unlink(slot);
+            self.push_front(slot);
+        } else {
+            let slot = match self.free.pop() {
+                Some(s) => {
+                    self.slots[s] = Some(Entry { fp, val: val.clone(), prev: NIL, next: NIL });
+                    s
+                }
+                None => {
+                    self.slots.push(Some(Entry { fp, val: val.clone(), prev: NIL, next: NIL }));
+                    self.slots.len() - 1
+                }
+            };
+            self.bytes += val.bytes;
+            self.map.insert(fp, slot);
+            self.push_front(slot);
+        }
+        let mut evictions = 0u64;
+        while self.bytes > budget && self.evict_lru() {
+            evictions += 1;
+        }
+        evictions
+    }
+}
+
+/// The sharded cache.  All methods take `&self`; locking is per shard.
+pub struct ScheduleCache {
+    shards: Vec<Mutex<Shard>>,
+    shard_budget: usize,
+    byte_budget: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ScheduleCache {
+    /// `byte_budget` is the total across all shards; each shard gets an
+    /// equal slice.  `shards` is clamped to ≥ 1.
+    pub fn new(byte_budget: usize, shards: usize) -> Self {
+        let shards = shards.max(1);
+        ScheduleCache {
+            shards: (0..shards).map(|_| Mutex::new(Shard::new())).collect(),
+            shard_budget: byte_budget / shards,
+            byte_budget,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn shard_of(&self, fp: Fingerprint) -> &Mutex<Shard> {
+        // the fingerprint is already mixed; fold both lanes for the index
+        let i = (fp.0 ^ fp.1.rotate_left(17)) as usize % self.shards.len();
+        &self.shards[i]
+    }
+
+    pub fn get(&self, fp: Fingerprint) -> Option<Arc<CachedSchedule>> {
+        let found = self.shard_of(fp).lock().unwrap().get_promote(fp);
+        match &found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// Like `get` but without touching the hit/miss counters — used by
+    /// the queue's submit-time race re-check so one logical request
+    /// never counts twice against the cache.
+    pub fn probe(&self, fp: Fingerprint) -> Option<Arc<CachedSchedule>> {
+        self.shard_of(fp).lock().unwrap().get_promote(fp)
+    }
+
+    pub fn insert(&self, fp: Fingerprint, val: Arc<CachedSchedule>) {
+        let evicted = self.shard_of(fp).lock().unwrap().insert(fp, val, self.shard_budget);
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+        self.evictions.fetch_add(evicted, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let mut entries = 0;
+        let mut bytes = 0;
+        for s in &self.shards {
+            let s = s.lock().unwrap();
+            entries += s.map.len();
+            bytes += s.bytes;
+        }
+        CacheStats {
+            entries,
+            bytes,
+            byte_budget: self.byte_budget,
+            shards: self.shards.len(),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            insertions: self.insertions.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{optimize_graph_with_breakdown, OptOptions};
+    use crate::graph::gen;
+    use crate::service::fingerprint::fingerprint;
+
+    fn entry_for(seed: u64) -> (Fingerprint, Arc<CachedSchedule>) {
+        let g = gen::path(50);
+        let opts = OptOptions { k: 4, seed, use_special_patterns: false, ..Default::default() };
+        let (sched, bd) = optimize_graph_with_breakdown(&g, &opts);
+        (fingerprint(&g, &opts), Arc::new(CachedSchedule::new(sched, bd)))
+    }
+
+    #[test]
+    fn get_after_insert_returns_same_arc() {
+        let cache = ScheduleCache::new(1 << 20, 4);
+        let (fp, val) = entry_for(1);
+        assert!(cache.get(fp).is_none());
+        cache.insert(fp, val.clone());
+        let got = cache.get(fp).expect("hit");
+        assert!(Arc::ptr_eq(&got, &val));
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.insertions, st.entries), (1, 1, 1, 1));
+    }
+
+    #[test]
+    fn lru_eviction_under_byte_budget() {
+        // single shard so recency order is global; budget fits ~3 entries
+        let (_, probe) = entry_for(0);
+        let budget = probe.bytes * 3 + probe.bytes / 2;
+        let cache = ScheduleCache::new(budget, 1);
+        let items: Vec<_> = (1..=4).map(entry_for).collect();
+        for (fp, v) in &items[..3] {
+            cache.insert(*fp, v.clone());
+        }
+        assert_eq!(cache.stats().entries, 3);
+        // touch item 0 so item 1 becomes LRU, then overflow with item 3
+        assert!(cache.get(items[0].0).is_some());
+        cache.insert(items[3].0, items[3].1.clone());
+        let st = cache.stats();
+        assert_eq!(st.evictions, 1, "exactly one eviction expected");
+        assert!(st.bytes <= st.byte_budget, "over budget: {st:?}");
+        assert!(cache.get(items[1].0).is_none(), "LRU item should be gone");
+        assert!(cache.get(items[0].0).is_some(), "recently-used item must survive");
+        assert!(cache.get(items[2].0).is_some());
+        assert!(cache.get(items[3].0).is_some());
+    }
+
+    #[test]
+    fn oversized_entry_never_pins_the_shard_over_budget() {
+        let (fp, val) = entry_for(7);
+        let cache = ScheduleCache::new(val.bytes / 2, 1); // budget < one entry
+        cache.insert(fp, val);
+        let st = cache.stats();
+        assert_eq!(st.entries, 0, "oversized entry must be evicted immediately");
+        assert_eq!(st.evictions, 1);
+        assert_eq!(st.bytes, 0);
+    }
+
+    #[test]
+    fn reinsert_same_key_refreshes_without_growth() {
+        let cache = ScheduleCache::new(1 << 20, 2);
+        let (fp, val) = entry_for(9);
+        cache.insert(fp, val.clone());
+        cache.insert(fp, val.clone());
+        let st = cache.stats();
+        assert_eq!(st.entries, 1);
+        assert_eq!(st.bytes, val.bytes);
+        assert_eq!(st.insertions, 2);
+    }
+
+    #[test]
+    fn shards_partition_the_key_space() {
+        let cache = ScheduleCache::new(1 << 22, 8);
+        let items: Vec<_> = (1..=32).map(entry_for).collect();
+        for (fp, v) in &items {
+            cache.insert(*fp, v.clone());
+        }
+        assert_eq!(cache.stats().entries, 32);
+        for (fp, _) in &items {
+            assert!(cache.get(*fp).is_some());
+        }
+        assert_eq!(cache.stats().hits, 32);
+    }
+}

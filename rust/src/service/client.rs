@@ -1,0 +1,42 @@
+//! Minimal blocking client for the JSON-lines protocol — the one place
+//! the wire framing (connect, one request line out, one response line
+//! in) is implemented.  The `epgraph client` CLI, the e2e suite, and
+//! the service bench all drive the daemon through this type, so a
+//! protocol change can never leave one of those surfaces behind.
+
+use std::io::{BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::{Json, JsonLines};
+
+pub struct Client {
+    lines: JsonLines<BufReader<TcpStream>>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs + std::fmt::Display>(addr: A) -> Result<Client> {
+        let writer = TcpStream::connect(&addr).map_err(|e| anyhow!("connect {addr}: {e}"))?;
+        writer.set_nodelay(true).ok();
+        let reader =
+            BufReader::new(writer.try_clone().map_err(|e| anyhow!("clone stream: {e}"))?);
+        Ok(Client { lines: JsonLines::new(reader), writer })
+    }
+
+    /// Send one request, block for its response.
+    pub fn request(&mut self, req: &Json) -> Result<Json> {
+        self.roundtrip_line(&req.dump())
+    }
+
+    /// Same, for a pre-serialized request line (hot loops serialize once).
+    pub fn roundtrip_line(&mut self, line: &str) -> Result<Json> {
+        writeln!(self.writer, "{line}").map_err(|e| anyhow!("send: {e}"))?;
+        self.writer.flush().map_err(|e| anyhow!("send: {e}"))?;
+        self.lines
+            .next_value()
+            .map_err(|e| anyhow!("recv: {e}"))?
+            .ok_or_else(|| anyhow!("server closed the connection"))
+    }
+}

@@ -1,0 +1,227 @@
+//! Content fingerprints for the schedule cache.
+//!
+//! A served schedule is a pure function of `(graph, options)` — the
+//! optimizer is deterministic and bit-identical for every thread count —
+//! so a deterministic fingerprint of that pair is a sound cache key.
+//! The fingerprint is two independent 64-bit FNV-1a lanes (128 bits
+//! total, finalized through a SplitMix64 mix), hashed over:
+//!
+//!   * a domain/version tag (bump it if the schedule semantics change),
+//!   * the exact CSR content: `n`, `m`, and every `(u, v)` task pair in
+//!     edge-id order (edge ids are schedule slots, so order is
+//!     semantic — two graphs with permuted edge lists are different
+//!     workloads even when isomorphic),
+//!   * the canonicalized `OptOptions`: every field that can change the
+//!     output, in a fixed order.  `threads` is deliberately EXCLUDED —
+//!     the partitioner's determinism contract (PERF.md) makes results
+//!     thread-count-invariant, so requests that differ only in thread
+//!     count must share one cache entry.
+//!
+//! Canonicalization also makes the fingerprint insertion-order-invariant
+//! at the protocol layer: JSON request fields parse into the same
+//! `OptOptions` regardless of key order, and the hash never sees the
+//! wire order.
+
+use std::fmt;
+
+use crate::coordinator::OptOptions;
+use crate::graph::Graph;
+
+/// 128-bit content fingerprint (two independent FNV-1a lanes).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint(pub u64, pub u64);
+
+impl Fingerprint {
+    /// 32 lowercase hex chars — the wire/display form.
+    pub fn to_hex(&self) -> String {
+        format!("{:016x}{:016x}", self.0, self.1)
+    }
+}
+
+impl fmt::Debug for Fingerprint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Fingerprint({})", self.to_hex())
+    }
+}
+
+impl fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_hex())
+    }
+}
+
+const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+/// Second-lane offset: any constant different from the first lane works;
+/// the finalizer decorrelates the lanes further.
+const FNV_OFFSET_B: u64 = 0x6C62_272E_07BB_0142;
+
+/// SplitMix64 finalizer (same constants as the partitioner's seed
+/// stretcher) — avalanches the weak low-bit diffusion of raw FNV.
+#[inline]
+fn mix64(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Streaming two-lane FNV-1a hasher.  Every write method frames its
+/// input unambiguously (fixed-width little-endian for scalars,
+/// length-prefix for strings), so field concatenation can never collide
+/// across boundaries.
+pub struct Hasher {
+    a: u64,
+    b: u64,
+}
+
+impl Default for Hasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hasher {
+    pub fn new() -> Self {
+        Hasher { a: FNV_OFFSET, b: FNV_OFFSET_B }
+    }
+
+    #[inline]
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for &byte in bytes {
+            self.a = (self.a ^ byte as u64).wrapping_mul(FNV_PRIME);
+            self.b = (self.b ^ byte as u64).wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    #[inline]
+    pub fn write_u32(&mut self, v: u32) {
+        self.write_bytes(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn write_u64(&mut self, v: u64) {
+        self.write_bytes(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn write_f64(&mut self, v: f64) {
+        self.write_bytes(&v.to_bits().to_le_bytes());
+    }
+
+    #[inline]
+    pub fn write_bool(&mut self, v: bool) {
+        self.write_bytes(&[v as u8]);
+    }
+
+    /// Length-prefixed, so `("ab", "c")` never collides with `("a", "bc")`.
+    pub fn write_str(&mut self, s: &str) {
+        self.write_u64(s.len() as u64);
+        self.write_bytes(s.as_bytes());
+    }
+
+    pub fn finish(self) -> Fingerprint {
+        Fingerprint(mix64(self.a), mix64(self.b ^ 0x9E37_79B9_7F4A_7C15))
+    }
+}
+
+/// Domain tag — bump the version when the schedule semantics change so
+/// stale cache entries can never be served across an upgrade.
+const DOMAIN: &str = "epgraph-schedule-v1";
+
+/// Fingerprint of one optimization request: graph content + canonical
+/// options.  See the module doc for exactly what is (and isn't) hashed.
+pub fn fingerprint(g: &Graph, opts: &OptOptions) -> Fingerprint {
+    let mut h = Hasher::new();
+    h.write_str(DOMAIN);
+    // graph content, in CSR/edge-id order
+    h.write_u64(g.n as u64);
+    h.write_u64(g.m() as u64);
+    for &(u, v) in &g.edges {
+        h.write_u32(u);
+        h.write_u32(v);
+    }
+    // canonical options, fixed field order; `threads` excluded (results
+    // are thread-count-invariant)
+    h.write_u64(opts.k as u64);
+    h.write_u64(opts.seed);
+    h.write_f64(opts.reuse_threshold);
+    h.write_str(opts.method.name());
+    h.write_bool(opts.use_special_patterns);
+    match opts.block_cap {
+        Some(cap) => {
+            h.write_bool(true);
+            h.write_u64(cap as u64);
+        }
+        None => h.write_bool(false),
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::Method;
+
+    fn opts() -> OptOptions {
+        OptOptions { k: 8, seed: 42, ..Default::default() }
+    }
+
+    #[test]
+    fn stable_across_calls_and_thread_counts() {
+        let g = gen::cfd_mesh(12, 12, 3);
+        let base = fingerprint(&g, &opts());
+        assert_eq!(base, fingerprint(&g, &opts()), "not deterministic");
+        for threads in [0, 1, 2, 8] {
+            let o = OptOptions { threads, ..opts() };
+            assert_eq!(base, fingerprint(&g, &o), "threads={threads} changed the fingerprint");
+        }
+    }
+
+    #[test]
+    fn every_semantic_field_is_significant() {
+        let g = gen::cfd_mesh(12, 12, 3);
+        let base = fingerprint(&g, &opts());
+        let variants = [
+            OptOptions { k: 9, ..opts() },
+            OptOptions { seed: 43, ..opts() },
+            OptOptions { reuse_threshold: 2.5, ..opts() },
+            OptOptions { method: Method::PgGreedy, ..opts() },
+            OptOptions { use_special_patterns: false, ..opts() },
+            OptOptions { block_cap: Some(256), ..opts() },
+        ];
+        for (i, v) in variants.iter().enumerate() {
+            assert_ne!(base, fingerprint(&g, v), "variant {i} collided");
+        }
+    }
+
+    #[test]
+    fn graph_content_is_significant() {
+        let g1 = gen::cfd_mesh(12, 12, 3);
+        let g2 = gen::cfd_mesh(12, 12, 4); // different seed → different edges
+        assert_ne!(fingerprint(&g1, &opts()), fingerprint(&g2, &opts()));
+        // edge ORDER is semantic: edge ids are schedule slots
+        let ga = Graph::from_edges(3, vec![(0, 1), (1, 2)]);
+        let gb = Graph::from_edges(3, vec![(1, 2), (0, 1)]);
+        assert_ne!(fingerprint(&ga, &opts()), fingerprint(&gb, &opts()));
+    }
+
+    #[test]
+    fn framing_prevents_boundary_collisions() {
+        let mut h1 = Hasher::new();
+        h1.write_str("ab");
+        h1.write_str("c");
+        let mut h2 = Hasher::new();
+        h2.write_str("a");
+        h2.write_str("bc");
+        assert_ne!(h1.finish(), h2.finish());
+    }
+
+    #[test]
+    fn lanes_are_independent() {
+        let g = gen::path(100);
+        let fp = fingerprint(&g, &opts());
+        assert_ne!(fp.0, fp.1);
+        assert_eq!(fp.to_hex().len(), 32);
+    }
+}

@@ -1,0 +1,224 @@
+//! Lock-free service metrics: request counters plus log₂-bucketed
+//! latency histograms, snapshotted into the `stats` response.
+//!
+//! Recording sits on the hot path of every request, so everything is a
+//! relaxed atomic — no locks, no allocation.  Percentiles come from a
+//! power-of-two histogram over nanoseconds: bucket `i` covers
+//! `[2^i, 2^(i+1))` ns, 42 buckets ≈ 73 minutes of range, and a reported
+//! pXX is the upper bound of the bucket holding that rank (≤ 2x
+//! overestimate by construction — fine for monitoring; the bench
+//! measures exact hit-path latency separately).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+const BUCKETS: usize = 42;
+
+/// Histogram of durations on log₂ nanosecond buckets.
+pub struct LatencyHisto {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for LatencyHisto {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Point-in-time histogram summary (milliseconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencySnapshot {
+    pub count: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+}
+
+impl LatencyHisto {
+    pub fn new() -> Self {
+        LatencyHisto {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn bucket_of(ns: u64) -> usize {
+        (ns.max(1).ilog2() as usize).min(BUCKETS - 1)
+    }
+
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        self.buckets[Self::bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> LatencySnapshot {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let count: u64 = counts.iter().sum();
+        if count == 0 {
+            return LatencySnapshot::default();
+        }
+        let sum_ns = self.sum_ns.load(Ordering::Relaxed);
+        let percentile = |p: f64| -> f64 {
+            // rank is 1-based: the p-quantile is the smallest bucket whose
+            // cumulative count reaches ceil(p * count)
+            let rank = ((p * count as f64).ceil() as u64).max(1);
+            let mut cum = 0u64;
+            for (i, &c) in counts.iter().enumerate() {
+                cum += c;
+                if cum >= rank {
+                    // upper bound of bucket i = 2^(i+1) ns
+                    return (1u64 << (i + 1).min(63)) as f64 / 1e6;
+                }
+            }
+            (1u64 << 63) as f64 / 1e6
+        };
+        LatencySnapshot {
+            count,
+            mean_ms: sum_ns as f64 / count as f64 / 1e6,
+            p50_ms: percentile(0.50),
+            p95_ms: percentile(0.95),
+        }
+    }
+}
+
+/// Service-level request accounting.  The identity
+/// `requests == served_hit + served_miss + served_joined + rejected + errors`
+/// holds at any quiescent point (each optimize request ends in exactly
+/// one outcome); the e2e suite asserts it against a live server.
+#[derive(Default)]
+pub struct ServiceMetrics {
+    /// optimize requests received
+    pub requests: AtomicU64,
+    /// served straight from the schedule cache
+    pub served_hit: AtomicU64,
+    /// computed fresh (one optimizer run each)
+    pub served_miss: AtomicU64,
+    /// deduped onto an already-in-flight identical job (singleflight)
+    pub served_joined: AtomicU64,
+    /// rejected with retry-after (queue full / shutting down)
+    pub rejected: AtomicU64,
+    /// well-formed optimize requests that failed (bad graph, failed job)
+    pub errors: AtomicU64,
+    /// lines that never parsed into a request (not counted in `requests`)
+    pub bad_requests: AtomicU64,
+    /// time a job spent queued before a worker picked it up
+    pub queue_wait: LatencyHisto,
+    /// optimizer wall time per computed job
+    pub optimize: LatencyHisto,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub served_hit: u64,
+    pub served_miss: u64,
+    pub served_joined: u64,
+    pub rejected: u64,
+    pub errors: u64,
+    pub bad_requests: u64,
+    pub hit_rate: f64,
+    pub queue_wait: LatencySnapshot,
+    pub optimize: LatencySnapshot,
+}
+
+impl ServiceMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let requests = self.requests.load(Ordering::Relaxed);
+        let hit = self.served_hit.load(Ordering::Relaxed);
+        let joined = self.served_joined.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            requests,
+            served_hit: hit,
+            served_miss: self.served_miss.load(Ordering::Relaxed),
+            served_joined: joined,
+            rejected: self.rejected.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            bad_requests: self.bad_requests.load(Ordering::Relaxed),
+            // a join reused an in-flight computation, so it counts as a
+            // cache-effectiveness win alongside plain hits
+            hit_rate: if requests == 0 { 0.0 } else { (hit + joined) as f64 / requests as f64 },
+            queue_wait: self.queue_wait.snapshot(),
+            optimize: self.optimize.snapshot(),
+        }
+    }
+}
+
+/// Shared uptime clock for health/stats responses.
+pub struct Uptime(Instant);
+
+impl Default for Uptime {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Uptime {
+    pub fn new() -> Self {
+        Uptime(Instant::now())
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_bound_the_data() {
+        let h = LatencyHisto::new();
+        for ms in [1u64, 1, 1, 1, 1, 1, 1, 1, 1, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 10);
+        // p50 sits in the 1ms bucket (upper bound ≤ 2.1ms), p95 in the
+        // 100ms bucket (upper bound ≤ 135ms, i.e. 2^27 ns)
+        assert!(s.p50_ms >= 1.0 && s.p50_ms <= 2.2, "p50 {}", s.p50_ms);
+        assert!(s.p95_ms >= 100.0 && s.p95_ms <= 140.0, "p95 {}", s.p95_ms);
+        assert!(s.mean_ms > 10.0 && s.mean_ms < 12.0, "mean {}", s.mean_ms);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let s = LatencyHisto::new().snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p95_ms, 0.0);
+    }
+
+    #[test]
+    fn snapshot_consistency_identity() {
+        let m = ServiceMetrics::new();
+        for _ in 0..5 {
+            ServiceMetrics::bump(&m.requests);
+        }
+        ServiceMetrics::bump(&m.served_hit);
+        ServiceMetrics::bump(&m.served_hit);
+        ServiceMetrics::bump(&m.served_miss);
+        ServiceMetrics::bump(&m.served_joined);
+        ServiceMetrics::bump(&m.rejected);
+        let s = m.snapshot();
+        assert_eq!(
+            s.requests,
+            s.served_hit + s.served_miss + s.served_joined + s.rejected + s.errors
+        );
+        assert!((s.hit_rate - 0.6).abs() < 1e-9);
+    }
+}

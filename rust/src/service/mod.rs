@@ -1,0 +1,45 @@
+//! The schedule-serving layer: `epgraph serve`.
+//!
+//! The paper's §4.2 runtime amortizes partitioning cost across repeated
+//! kernel launches inside one process; this subsystem amortizes it
+//! across *processes and users* — the ROADMAP's serving story.  A
+//! long-running daemon keeps the optimizer pipeline hot and its products
+//! resident:
+//!
+//! * [`fingerprint`] — deterministic content fingerprints of
+//!   `(graph, options)`; the cache key.  Thread-count- and wire-order-
+//!   invariant by construction.
+//! * [`cache`] — sharded LRU over fingerprints with a byte budget;
+//!   the service-level mirror of the paper's caching thesis (keep the
+//!   expensive-to-recompute thing resident because it will be reused).
+//! * [`queue`] — bounded job queue with singleflight dedup: concurrent
+//!   identical requests share ONE optimizer run; overload is rejected
+//!   with a retry-after hint instead of queued without bound.
+//! * [`metrics`] — lock-free counters + latency histograms behind the
+//!   `stats` endpoint.
+//! * [`proto`] — the JSON-lines request/response protocol (std-only,
+//!   over `util::json`).
+//! * [`server`] — the loopback TCP daemon tying it together; the
+//!   `epgraph serve` / `epgraph client` subcommands front it.
+//! * [`client`] — the blocking protocol client shared by the CLI, the
+//!   e2e suite, and the bench (one implementation of the framing).
+//!
+//! Served schedules are bit-identical to a direct
+//! `coordinator::optimize_graph` call with the same options — the e2e
+//! suite (`tests/service_e2e.rs`) and the CI serve-smoke assert it.
+
+pub mod cache;
+pub mod client;
+pub mod fingerprint;
+pub mod metrics;
+pub mod proto;
+pub mod queue;
+pub mod server;
+
+pub use cache::{CacheStats, CachedSchedule, ScheduleCache};
+pub use client::Client;
+pub use fingerprint::{fingerprint, Fingerprint};
+pub use metrics::{MetricsSnapshot, ServiceMetrics};
+pub use proto::GraphSpec;
+pub use queue::{JobQueue, Submit};
+pub use server::{ServeOpts, Server};

@@ -1,0 +1,544 @@
+//! The `epgraph serve` wire protocol: JSON-lines over TCP.
+//!
+//! Every request and response is exactly one JSON object on one
+//! newline-terminated line (decode with `util::json::JsonLines`).
+//! Requests:
+//!
+//! ```text
+//! {"op":"optimize","graph":<spec>,"opts":{...}}   → schedule response
+//! {"op":"stats"}                                  → counter snapshot
+//! {"op":"health"}                                 → liveness probe
+//! {"op":"shutdown"}                               → ack, then the server drains and exits
+//! ```
+//!
+//! A graph spec is either inline CSR content —
+//! `{"n":4,"edges":[0,1,1,2,2,3]}` with a FLAT `[u0,v0,u1,v1,…]` pair
+//! array in edge-id order — or a named deterministic generator,
+//! `{"gen":"cfd_mesh","args":[24,24,1]}` (the generators of
+//! `graph::gen`; args are the generator's integer parameters in
+//! signature order).  Both forms are resolved to the same `Graph` before
+//! fingerprinting, so a generator spec and its expanded edge list are
+//! the *same* cache entry — content-addressing happens after resolution.
+//!
+//! `opts` keys (all optional, defaults = `OptOptions::default()`):
+//! `k`, `seed`, `reuse_threshold`, `method`, `use_special_patterns`,
+//! `block_cap`.  `seed` is a decimal STRING on the wire (JSON numbers
+//! only carry 53 integer bits; numbers are still accepted in the safe
+//! range).  A `threads` key is accepted and ignored — the worker pool
+//! owns parallelism, and results are thread-count-invariant anyway.
+//!
+//! Responses always carry `"ok"`; failures are
+//! `{"ok":false,"error":"…"}` plus `"retry_after_ms"` when the queue
+//! pushed back and the client should retry.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::OptOptions;
+use crate::graph::{gen, Graph};
+use crate::partition::Method;
+use crate::util::json::Json;
+
+use super::cache::{CachedSchedule, CacheStats};
+use super::fingerprint::Fingerprint;
+use super::metrics::{LatencySnapshot, MetricsSnapshot};
+
+/// Sanity bounds on inline/generated graphs — this is a loopback
+/// service, but a malformed request must fail cleanly, not OOM.
+pub const MAX_VERTICES: usize = 1 << 26;
+pub const MAX_EDGES: usize = 1 << 26;
+
+/// A request's graph, before resolution.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GraphSpec {
+    /// Explicit content: vertex count + flat `[u0,v0,u1,v1,…]` pairs.
+    Inline { n: usize, edges: Vec<(u32, u32)> },
+    /// Named deterministic generator from `graph::gen`.
+    Gen { name: String, args: Vec<u64> },
+}
+
+impl GraphSpec {
+    /// Parse the CLI shorthand `name:arg,arg,…` (e.g. `cfd_mesh:24,24,1`).
+    pub fn parse_cli(s: &str) -> Result<GraphSpec, String> {
+        let (name, rest) = s.split_once(':').unwrap_or((s, ""));
+        if name.is_empty() {
+            return Err("empty generator name".into());
+        }
+        let mut args = Vec::new();
+        for a in rest.split(',').filter(|a| !a.is_empty()) {
+            args.push(a.trim().parse::<u64>().map_err(|_| format!("bad generator arg '{a}'"))?);
+        }
+        Ok(GraphSpec::Gen { name: name.to_string(), args })
+    }
+
+    pub fn from_json(j: &Json) -> Result<GraphSpec, String> {
+        if let Some(name) = j.get("gen").and_then(Json::as_str) {
+            let args = match j.get("args") {
+                None => Vec::new(),
+                Some(a) => a
+                    .as_arr()
+                    .ok_or("graph.args must be an array")?
+                    .iter()
+                    .map(|v| v.as_u64().ok_or("graph.args entries must be non-negative integers"))
+                    .collect::<Result<Vec<u64>, _>>()?,
+            };
+            return Ok(GraphSpec::Gen { name: name.to_string(), args });
+        }
+        let n = j
+            .get("n")
+            .and_then(Json::as_u64)
+            .ok_or("graph needs either {gen,args} or {n,edges}")? as usize;
+        let flat = j.get("edges").and_then(Json::as_arr).ok_or("graph.edges must be an array")?;
+        if flat.len() % 2 != 0 {
+            return Err("graph.edges must hold an even number of endpoints (flat pairs)".into());
+        }
+        if n > MAX_VERTICES || flat.len() / 2 > MAX_EDGES {
+            return Err(format!(
+                "graph too large for the service (n ≤ {MAX_VERTICES}, m ≤ {MAX_EDGES})"
+            ));
+        }
+        let mut edges = Vec::with_capacity(flat.len() / 2);
+        for pair in flat.chunks_exact(2) {
+            let u = pair[0].as_u64().ok_or("graph.edges entries must be integers")?;
+            let v = pair[1].as_u64().ok_or("graph.edges entries must be integers")?;
+            if u >= n as u64 || v >= n as u64 {
+                return Err(format!("edge endpoint out of range: ({u},{v}) with n={n}"));
+            }
+            edges.push((u as u32, v as u32));
+        }
+        Ok(GraphSpec::Inline { n, edges })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        match self {
+            GraphSpec::Inline { n, edges } => {
+                m.insert("n".to_string(), Json::Num(*n as f64));
+                let mut flat = Vec::with_capacity(edges.len() * 2);
+                for &(u, v) in edges {
+                    flat.push(Json::Num(u as f64));
+                    flat.push(Json::Num(v as f64));
+                }
+                m.insert("edges".to_string(), Json::Arr(flat));
+            }
+            GraphSpec::Gen { name, args } => {
+                m.insert("gen".to_string(), Json::Str(name.clone()));
+                m.insert(
+                    "args".to_string(),
+                    Json::Arr(args.iter().map(|&a| Json::Num(a as f64)).collect()),
+                );
+            }
+        }
+        Json::Obj(m)
+    }
+
+    /// Resolve to a concrete graph.  Generator output is a pure function
+    /// of `(name, args)`, so client and server always agree on content.
+    /// The size guard runs on the *predicted* vertex/edge counts BEFORE
+    /// any generation — a hostile `clique:65536` request must fail in
+    /// O(1), not after a multi-gigabyte allocation.
+    pub fn resolve(&self) -> Result<Graph, String> {
+        match self {
+            GraphSpec::Inline { n, edges } => Ok(Graph::from_edges(*n, edges.clone())),
+            GraphSpec::Gen { name, args } => {
+                let arg = |i: usize| -> Result<usize, String> {
+                    args.get(i)
+                        .map(|&a| a as usize)
+                        .ok_or_else(|| format!("generator '{name}' needs ≥ {} args", i + 1))
+                };
+                let seed = |i: usize| -> Result<u64, String> {
+                    args.get(i).copied().ok_or_else(|| format!("generator '{name}' needs ≥ {} args", i + 1))
+                };
+                // predicted (n, m) upper estimates, in u128 so huge args
+                // can't overflow the guard itself
+                let (est_n, est_m): (u128, u128) = match name.as_str() {
+                    "grid_mesh" | "cfd_mesh" => {
+                        let (r, c) = (arg(0)? as u128, arg(1)? as u128);
+                        (r * c, 3 * r * c)
+                    }
+                    "power_law" => (arg(0)? as u128, arg(0)? as u128 * arg(1)? as u128),
+                    "random_uniform" => (arg(0)? as u128, arg(1)? as u128),
+                    "clique" => {
+                        let n = arg(0)? as u128;
+                        (n, n * n.saturating_sub(1) / 2)
+                    }
+                    "path" => (arg(0)? as u128, arg(0)? as u128),
+                    "complete_bipartite" => {
+                        let (a, b) = (arg(0)? as u128, arg(1)? as u128);
+                        (a + b, a * b)
+                    }
+                    other => {
+                        return Err(format!(
+                            "unknown generator '{other}' (try grid_mesh, cfd_mesh, power_law, \
+                             random_uniform, clique, path, complete_bipartite)"
+                        ))
+                    }
+                };
+                if est_n > MAX_VERTICES as u128 || est_m > MAX_EDGES as u128 {
+                    return Err(format!(
+                        "generated graph too large for the service \
+                         (≈{est_n} vertices / ≈{est_m} edges; n ≤ {MAX_VERTICES}, m ≤ {MAX_EDGES})"
+                    ));
+                }
+                let g = match name.as_str() {
+                    "grid_mesh" => gen::grid_mesh(arg(0)?, arg(1)?),
+                    "cfd_mesh" => gen::cfd_mesh(arg(0)?, arg(1)?, seed(2)?),
+                    "power_law" => gen::power_law(arg(0)?, arg(1)?, seed(2)?),
+                    "random_uniform" => gen::random_uniform(arg(0)?, arg(1)?, seed(2)?),
+                    "clique" => gen::clique(arg(0)?),
+                    "path" => gen::path(arg(0)?),
+                    "complete_bipartite" => gen::complete_bipartite(arg(0)?, arg(1)?),
+                    _ => unreachable!("estimator and dispatcher cover the same names"),
+                };
+                // belt and braces: the estimate must bound the real size
+                if g.n > MAX_VERTICES || g.m() > MAX_EDGES {
+                    return Err("generated graph too large for the service".into());
+                }
+                Ok(g)
+            }
+        }
+    }
+}
+
+/// A decoded request line.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Optimize { graph: GraphSpec, opts: OptOptions },
+    Stats,
+    Health,
+    Shutdown,
+}
+
+pub fn parse_request(j: &Json) -> Result<Request, String> {
+    let op = j.get("op").and_then(Json::as_str).ok_or("request needs a string 'op'")?;
+    match op {
+        "optimize" => {
+            let graph =
+                GraphSpec::from_json(j.get("graph").ok_or("optimize needs a 'graph'")?)?;
+            let opts = opts_from_json(j.get("opts"))?;
+            Ok(Request::Optimize { graph, opts })
+        }
+        "stats" => Ok(Request::Stats),
+        "health" => Ok(Request::Health),
+        "shutdown" => Ok(Request::Shutdown),
+        other => Err(format!("unknown op '{other}'")),
+    }
+}
+
+/// Build `OptOptions` from the wire form: defaults plus overrides.
+/// Field order on the wire is irrelevant (objects parse into a BTreeMap
+/// and each key is read by name), which is what makes the downstream
+/// fingerprint insertion-order-invariant.
+pub fn opts_from_json(j: Option<&Json>) -> Result<OptOptions, String> {
+    let mut opts = OptOptions::default();
+    let Some(j) = j else { return Ok(opts) };
+    if matches!(j, Json::Null) {
+        return Ok(opts);
+    }
+    if !matches!(j, Json::Obj(_)) {
+        return Err("'opts' must be an object".into());
+    }
+    if let Some(v) = j.get("k") {
+        opts.k = v.as_u64().ok_or("opts.k must be a positive integer")?.max(1) as usize;
+    }
+    if let Some(v) = j.get("seed") {
+        // seeds are u64; JSON numbers only carry 53 integer bits, so the
+        // wire form is a decimal string (numbers are accepted for
+        // hand-written requests in the safe range)
+        opts.seed = match v {
+            Json::Str(s) => s
+                .parse::<u64>()
+                .map_err(|_| format!("opts.seed must be a u64 decimal string, got '{s}'"))?,
+            _ => v.as_u64().ok_or("opts.seed must be a non-negative integer or string")?,
+        };
+    }
+    if let Some(v) = j.get("reuse_threshold") {
+        opts.reuse_threshold = v.as_f64().ok_or("opts.reuse_threshold must be a number")?;
+    }
+    if let Some(v) = j.get("method") {
+        let name = v.as_str().ok_or("opts.method must be a string")?;
+        opts.method =
+            Method::from_name(name).ok_or_else(|| format!("unknown method '{name}'"))?;
+    }
+    if let Some(v) = j.get("use_special_patterns") {
+        opts.use_special_patterns =
+            v.as_bool().ok_or("opts.use_special_patterns must be a bool")?;
+    }
+    if let Some(v) = j.get("block_cap") {
+        opts.block_cap = match v {
+            Json::Null => None,
+            _ => Some(v.as_u64().ok_or("opts.block_cap must be an integer or null")? as usize),
+        };
+    }
+    // 'threads' intentionally ignored — see module doc
+    Ok(opts)
+}
+
+pub fn opts_to_json(opts: &OptOptions) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("k".to_string(), Json::Num(opts.k as f64));
+    // string, not number: f64 would silently round seeds above 2^53
+    m.insert("seed".to_string(), Json::Str(opts.seed.to_string()));
+    m.insert("reuse_threshold".to_string(), Json::Num(opts.reuse_threshold));
+    m.insert("method".to_string(), Json::Str(opts.method.name().to_string()));
+    m.insert("use_special_patterns".to_string(), Json::Bool(opts.use_special_patterns));
+    if let Some(cap) = opts.block_cap {
+        m.insert("block_cap".to_string(), Json::Num(cap as f64));
+    }
+    Json::Obj(m)
+}
+
+/// Build one optimize request line (client side).
+pub fn optimize_request(graph: &GraphSpec, opts: &OptOptions) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("op".to_string(), Json::Str("optimize".to_string()));
+    m.insert("graph".to_string(), graph.to_json());
+    m.insert("opts".to_string(), opts_to_json(opts));
+    Json::Obj(m)
+}
+
+pub fn simple_request(op: &str) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("op".to_string(), Json::Str(op.to_string()));
+    Json::Obj(m)
+}
+
+// ---------------------------------------------------------------- responses
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+/// `{"ok":false,…}` with an optional backpressure hint.
+pub fn error_response(msg: &str, retry_after_ms: Option<u64>) -> Json {
+    let mut fields = vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.to_string()))];
+    if let Some(ms) = retry_after_ms {
+        fields.push(("retry_after_ms", num(ms as f64)));
+    }
+    obj(fields)
+}
+
+/// The schedule response.  `cached` is `"hit"`, `"miss"` or `"joined"`;
+/// `assign`/`layout` carry the full arrays so clients can verify
+/// bit-identity against a direct `optimize_graph` run.
+pub fn optimize_response(
+    fp: Fingerprint,
+    cached: &str,
+    entry: &CachedSchedule,
+    queue_ms: Option<f64>,
+    optimize_ms: Option<f64>,
+) -> Json {
+    let s = &entry.schedule;
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("fingerprint", Json::Str(fp.to_hex())),
+        ("cached", Json::Str(cached.to_string())),
+        ("k", num(s.partition.k as f64)),
+        ("quality", num(s.quality as f64)),
+        ("balance", num(s.balance)),
+        ("skipped_low_reuse", Json::Bool(s.skipped_low_reuse)),
+        (
+            "used_special",
+            match s.used_special {
+                Some(p) => Json::Str(format!("{p:?}")),
+                None => Json::Null,
+            },
+        ),
+        ("partition_ms", num(s.partition_time.as_secs_f64() * 1e3)),
+        ("queue_ms", queue_ms.map(num).unwrap_or(Json::Null)),
+        ("optimize_ms", optimize_ms.map(num).unwrap_or(Json::Null)),
+        ("assign", Json::Arr(s.partition.assign.iter().map(|&b| num(b as f64)).collect())),
+        (
+            "layout",
+            Json::Arr(s.layout.new_of_old.iter().map(|&x| num(x as f64)).collect()),
+        ),
+    ])
+}
+
+fn latency_json(l: &LatencySnapshot) -> Json {
+    obj(vec![
+        ("count", num(l.count as f64)),
+        ("mean", num(l.mean_ms)),
+        ("p50", num(l.p50_ms)),
+        ("p95", num(l.p95_ms)),
+    ])
+}
+
+/// The `stats` response: service counters + raw cache counters +
+/// latency summaries + pool shape.
+pub fn stats_response(
+    m: &MetricsSnapshot,
+    c: &CacheStats,
+    uptime_ms: f64,
+    workers: usize,
+    queue_cap: usize,
+    queue_pending: usize,
+) -> Json {
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("requests", num(m.requests as f64)),
+        ("served_hit", num(m.served_hit as f64)),
+        ("served_miss", num(m.served_miss as f64)),
+        ("served_joined", num(m.served_joined as f64)),
+        ("rejected", num(m.rejected as f64)),
+        ("errors", num(m.errors as f64)),
+        ("bad_requests", num(m.bad_requests as f64)),
+        ("hit_rate", num(m.hit_rate)),
+        (
+            "cache",
+            obj(vec![
+                ("entries", num(c.entries as f64)),
+                ("bytes", num(c.bytes as f64)),
+                ("byte_budget", num(c.byte_budget as f64)),
+                ("shards", num(c.shards as f64)),
+                ("hits", num(c.hits as f64)),
+                ("misses", num(c.misses as f64)),
+                ("insertions", num(c.insertions as f64)),
+                ("evictions", num(c.evictions as f64)),
+            ]),
+        ),
+        ("queue_wait_ms", latency_json(&m.queue_wait)),
+        ("optimize_ms", latency_json(&m.optimize)),
+        ("uptime_ms", num(uptime_ms)),
+        ("workers", num(workers as f64)),
+        ("queue_cap", num(queue_cap as f64)),
+        ("queue_pending", num(queue_pending as f64)),
+    ])
+}
+
+pub fn health_response(uptime_ms: f64) -> Json {
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("status", Json::Str("serving".to_string())),
+        ("uptime_ms", num(uptime_ms)),
+    ])
+}
+
+pub fn shutdown_response() -> Json {
+    obj(vec![("ok", Json::Bool(true)), ("status", Json::Str("shutting-down".to_string()))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::fingerprint::fingerprint;
+
+    #[test]
+    fn parses_optimize_request_roundtrip() {
+        let spec = GraphSpec::Gen { name: "cfd_mesh".into(), args: vec![8, 8, 1] };
+        let opts = OptOptions { k: 4, seed: 7, ..Default::default() };
+        let line = optimize_request(&spec, &opts).dump();
+        let parsed = parse_request(&Json::parse(&line).unwrap()).unwrap();
+        match parsed {
+            Request::Optimize { graph, opts: o } => {
+                assert_eq!(graph, spec);
+                assert_eq!(o.k, 4);
+                assert_eq!(o.seed, 7);
+                assert_eq!(o.method.name(), "ep");
+            }
+            _ => panic!("wrong request kind"),
+        }
+    }
+
+    #[test]
+    fn inline_and_gen_specs_share_one_fingerprint() {
+        let spec = GraphSpec::Gen { name: "path".into(), args: vec![6] };
+        let g = spec.resolve().unwrap();
+        let inline = GraphSpec::Inline { n: g.n, edges: g.edges.clone() };
+        let opts = OptOptions::default();
+        assert_eq!(
+            fingerprint(&spec.resolve().unwrap(), &opts),
+            fingerprint(&inline.resolve().unwrap(), &opts),
+            "content-addressing must see through the spec form"
+        );
+    }
+
+    #[test]
+    fn wire_key_order_does_not_change_the_fingerprint() {
+        let a = r#"{"op":"optimize","graph":{"n":3,"edges":[0,1,1,2]},"opts":{"k":4,"seed":9}}"#;
+        let b = r#"{"opts":{"seed":9,"k":4},"graph":{"edges":[0,1,1,2],"n":3},"op":"optimize"}"#;
+        let fp = |text: &str| match parse_request(&Json::parse(text).unwrap()).unwrap() {
+            Request::Optimize { graph, opts } => fingerprint(&graph.resolve().unwrap(), &opts),
+            _ => panic!("wrong kind"),
+        };
+        assert_eq!(fp(a), fp(b), "insertion order leaked into the fingerprint");
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        for bad in [
+            r#"{"no_op":1}"#,
+            r#"{"op":"optimize"}"#,
+            r#"{"op":"optimize","graph":{"n":2,"edges":[0,1,1]}}"#,
+            r#"{"op":"optimize","graph":{"n":2,"edges":[0,5]}}"#,
+            r#"{"op":"optimize","graph":{"gen":"nope"},"opts":{}}"#,
+            r#"{"op":"optimize","graph":{"n":3,"edges":[]},"opts":{"method":"magic"}}"#,
+            r#"{"op":"frobnicate"}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            let r = parse_request(&j).and_then(|r| match r {
+                Request::Optimize { graph, .. } => graph.resolve().map(|_| ()),
+                _ => Ok(()),
+            });
+            assert!(r.is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn oversized_generator_is_rejected_before_generation() {
+        // must fail from the predicted size in O(1); if the guard
+        // regressed to post-generation this test would allocate ~17 GB
+        for spec in [
+            GraphSpec::Gen { name: "clique".into(), args: vec![1 << 16] },
+            GraphSpec::Gen { name: "complete_bipartite".into(), args: vec![1 << 14, 1 << 14] },
+            GraphSpec::Gen { name: "power_law".into(), args: vec![1 << 30, 8, 1] },
+            GraphSpec::Gen { name: "cfd_mesh".into(), args: vec![1 << 20, 1 << 20, 1] },
+        ] {
+            let err = spec.resolve().unwrap_err();
+            assert!(err.contains("too large"), "{err}");
+        }
+    }
+
+    #[test]
+    fn full_u64_seed_survives_the_wire() {
+        let spec = GraphSpec::Gen { name: "path".into(), args: vec![4] };
+        let opts = OptOptions { seed: u64::MAX, ..Default::default() };
+        let line = optimize_request(&spec, &opts).dump();
+        match parse_request(&Json::parse(&line).unwrap()).unwrap() {
+            Request::Optimize { opts: parsed, .. } => assert_eq!(parsed.seed, u64::MAX),
+            _ => panic!("wrong request kind"),
+        }
+        // numeric seeds in the f64-safe range still work (hand-written)
+        let j = Json::parse(r#"{"op":"optimize","graph":{"gen":"path","args":[4]},"opts":{"seed":9}}"#)
+            .unwrap();
+        match parse_request(&j).unwrap() {
+            Request::Optimize { opts: parsed, .. } => assert_eq!(parsed.seed, 9),
+            _ => panic!("wrong request kind"),
+        }
+    }
+
+    #[test]
+    fn cli_spec_shorthand_parses() {
+        assert_eq!(
+            GraphSpec::parse_cli("cfd_mesh:24,24,1").unwrap(),
+            GraphSpec::Gen { name: "cfd_mesh".into(), args: vec![24, 24, 1] }
+        );
+        assert_eq!(
+            GraphSpec::parse_cli("path:100").unwrap(),
+            GraphSpec::Gen { name: "path".into(), args: vec![100] }
+        );
+        assert!(GraphSpec::parse_cli(":1,2").is_err());
+        assert!(GraphSpec::parse_cli("cfd_mesh:x").is_err());
+    }
+
+    #[test]
+    fn error_response_carries_retry_hint() {
+        let j = error_response("queue full", Some(150));
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("retry_after_ms").unwrap().as_u64(), Some(150));
+        assert!(error_response("x", None).get("retry_after_ms").is_none());
+    }
+}

@@ -1,0 +1,335 @@
+//! Bounded job queue with in-flight dedup (singleflight) feeding the
+//! worker pool.
+//!
+//! Every optimize request resolves to a content fingerprint; the queue
+//! guarantees that at most ONE optimization per fingerprint is pending
+//! or running at any moment.  Concurrent requests for the same
+//! fingerprint join the existing job and all receive the same
+//! `Arc<CachedSchedule>` the worker produced — under a thundering herd
+//! of identical requests the optimizer runs exactly once.
+//!
+//! Backpressure: the pending queue is bounded (`capacity`); a submit
+//! that can neither join nor enqueue is rejected immediately with a
+//! retry-after hint instead of blocking the handler — the client owns
+//! the retry policy, the server never builds unbounded backlog.
+//!
+//! The close-the-race protocol with the cache: workers insert the
+//! finished schedule into the cache BEFORE removing the job from the
+//! in-flight map, and `submit` re-checks the cache under the queue lock.
+//! A request therefore always lands on one of: cache hit, joined
+//! in-flight job, or fresh enqueue — the only residual race (finish
+//! between the handler's first cache probe and `submit`) resolves to a
+//! cheap second cache probe, never a hung waiter.
+
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{optimize_graph_with_breakdown, OptOptions};
+use crate::graph::Graph;
+
+use super::cache::{CachedSchedule, ScheduleCache};
+use super::fingerprint::Fingerprint;
+use super::metrics::ServiceMetrics;
+
+/// One in-flight optimization; shared by the worker and every waiter.
+pub struct Job {
+    pub fp: Fingerprint,
+    graph: Graph,
+    opts: OptOptions,
+    enqueued: Instant,
+    state: Mutex<JobState>,
+    done: Condvar,
+}
+
+#[derive(Default)]
+struct JobState {
+    result: Option<Result<Arc<CachedSchedule>, String>>,
+    queue_wait: Duration,
+    run_time: Duration,
+}
+
+impl Job {
+    /// Block until the worker finishes; returns the shared result plus
+    /// (queue wait, optimize time) for the response.
+    pub fn wait(&self) -> (Result<Arc<CachedSchedule>, String>, Duration, Duration) {
+        let mut st = self.state.lock().unwrap();
+        while st.result.is_none() {
+            st = self.done.wait(st).unwrap();
+        }
+        (st.result.clone().unwrap(), st.queue_wait, st.run_time)
+    }
+}
+
+/// Outcome of a submit.
+pub enum Submit {
+    /// The cache filled in between the caller's probe and the enqueue.
+    Hit(Arc<CachedSchedule>),
+    /// Newly enqueued — the caller's request is the one that computes.
+    New(Arc<Job>),
+    /// Deduped onto an identical in-flight job.
+    Joined(Arc<Job>),
+    /// Queue full (or shutting down): retry after the hinted delay.
+    Rejected { retry_after_ms: u64, reason: String },
+}
+
+struct QueueInner {
+    pending: VecDeque<Arc<Job>>,
+    /// fingerprint → job, covering PENDING and RUNNING jobs.
+    inflight: HashMap<Fingerprint, Arc<Job>>,
+    shutdown: bool,
+}
+
+/// The bounded singleflight queue.
+pub struct JobQueue {
+    inner: Mutex<QueueInner>,
+    work: Condvar,
+    capacity: usize,
+}
+
+impl JobQueue {
+    pub fn new(capacity: usize) -> Self {
+        JobQueue {
+            inner: Mutex::new(QueueInner {
+                pending: VecDeque::new(),
+                inflight: HashMap::new(),
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Submit a request.  `cache` is re-checked under the queue lock to
+    /// close the probe/enqueue race (see module doc).
+    pub fn submit(
+        &self,
+        fp: Fingerprint,
+        graph: Graph,
+        opts: OptOptions,
+        cache: &ScheduleCache,
+    ) -> Submit {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.shutdown {
+            return Submit::Rejected {
+                retry_after_ms: 0,
+                reason: "server is shutting down".into(),
+            };
+        }
+        if let Some(job) = inner.inflight.get(&fp) {
+            return Submit::Joined(job.clone());
+        }
+        if let Some(entry) = cache.probe(fp) {
+            return Submit::Hit(entry);
+        }
+        if inner.pending.len() >= self.capacity {
+            // retry hint scales with the backlog: clients back off harder
+            // the deeper the queue, without the server tracking any state
+            let retry_after_ms = (50 * (inner.pending.len() as u64 + 1)).min(1_000);
+            return Submit::Rejected { retry_after_ms, reason: "queue full".into() };
+        }
+        let job = Arc::new(Job {
+            fp,
+            graph,
+            opts,
+            enqueued: Instant::now(),
+            state: Mutex::new(JobState::default()),
+            done: Condvar::new(),
+        });
+        inner.pending.push_back(job.clone());
+        inner.inflight.insert(fp, job.clone());
+        drop(inner);
+        self.work.notify_one();
+        Submit::New(job)
+    }
+
+    /// Worker side: next pending job, blocking.  After `shutdown()` the
+    /// remaining backlog is drained (in-flight requests still complete),
+    /// then workers get `None` and exit.
+    fn pop(&self) -> Option<Arc<Job>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(job) = inner.pending.pop_front() {
+                return Some(job);
+            }
+            if inner.shutdown {
+                return None;
+            }
+            inner = self.work.wait(inner).unwrap();
+        }
+    }
+
+    /// Publish a finished job: cache first, then drop it from the
+    /// in-flight map, then wake the waiters (the order is the
+    /// singleflight-race contract — see module doc).
+    fn finish(
+        &self,
+        job: &Arc<Job>,
+        result: Result<Arc<CachedSchedule>, String>,
+        queue_wait: Duration,
+        run_time: Duration,
+        cache: &ScheduleCache,
+    ) {
+        if let Ok(entry) = &result {
+            cache.insert(job.fp, entry.clone());
+        }
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.inflight.remove(&job.fp);
+        }
+        let mut st = job.state.lock().unwrap();
+        st.result = Some(result);
+        st.queue_wait = queue_wait;
+        st.run_time = run_time;
+        drop(st);
+        job.done.notify_all();
+    }
+
+    /// Begin shutdown: no new submits, backlog drains, workers exit.
+    pub fn shutdown(&self) {
+        self.inner.lock().unwrap().shutdown = true;
+        self.work.notify_all();
+    }
+
+    /// Current backlog (monitoring only).
+    pub fn pending_len(&self) -> usize {
+        self.inner.lock().unwrap().pending.len()
+    }
+
+    /// One worker: pop → optimize → publish, until shutdown.  Run it on
+    /// a dedicated thread; a pool is N threads running this same loop.
+    /// A panicking optimizer run fails that one job (every waiter gets
+    /// the error) instead of hanging the queue.
+    pub fn run_worker(&self, cache: &ScheduleCache, metrics: &ServiceMetrics) {
+        while let Some(job) = self.pop() {
+            let queue_wait = job.enqueued.elapsed();
+            metrics.queue_wait.record(queue_wait);
+            let t0 = Instant::now();
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                optimize_graph_with_breakdown(&job.graph, &job.opts)
+            }));
+            let run_time = t0.elapsed();
+            metrics.optimize.record(run_time);
+            let result = match outcome {
+                Ok((sched, bd)) => Ok(Arc::new(CachedSchedule::new(sched, bd))),
+                Err(_) => Err("optimizer panicked".to_string()),
+            };
+            self.finish(&job, result, queue_wait, run_time, cache);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::service::fingerprint::fingerprint;
+
+    fn workload(seed: u64) -> (Fingerprint, Graph, OptOptions) {
+        let g = gen::cfd_mesh(12, 12, seed);
+        let opts = OptOptions { k: 4, seed, ..Default::default() };
+        (fingerprint(&g, &opts), g, opts)
+    }
+
+    #[test]
+    fn backpressure_rejects_when_queue_is_full() {
+        // no workers running → pending fills deterministically
+        let q = JobQueue::new(2);
+        let cache = ScheduleCache::new(1 << 20, 2);
+        for seed in [1, 2] {
+            let (fp, g, o) = workload(seed);
+            assert!(matches!(q.submit(fp, g, o, &cache), Submit::New(_)));
+        }
+        let (fp, g, o) = workload(3);
+        match q.submit(fp, g, o, &cache) {
+            Submit::Rejected { retry_after_ms, reason } => {
+                assert!(retry_after_ms > 0);
+                assert_eq!(reason, "queue full");
+            }
+            _ => panic!("expected rejection at capacity"),
+        }
+        // identical fingerprints still join — dedup needs no capacity
+        let (fp, g, o) = workload(1);
+        assert!(matches!(q.submit(fp, g, o, &cache), Submit::Joined(_)));
+        assert_eq!(q.pending_len(), 2);
+    }
+
+    #[test]
+    fn singleflight_shares_one_computation() {
+        let q = Arc::new(JobQueue::new(16));
+        let cache = Arc::new(ScheduleCache::new(1 << 22, 2));
+        let metrics = Arc::new(ServiceMetrics::new());
+        let (fp, g, o) = workload(5);
+        // submit the same workload from many threads before any worker runs
+        let mut jobs = Vec::new();
+        let mut news = 0;
+        for _ in 0..8 {
+            match q.submit(fp, g.clone(), o.clone(), &cache) {
+                Submit::New(j) => {
+                    news += 1;
+                    jobs.push(j);
+                }
+                Submit::Joined(j) => jobs.push(j),
+                _ => panic!("unexpected submit outcome"),
+            }
+        }
+        assert_eq!(news, 1, "exactly one computation may be enqueued");
+        // all eight handles are literally the same job
+        for j in &jobs[1..] {
+            assert!(Arc::ptr_eq(j, &jobs[0]));
+        }
+        // run one worker until the backlog drains
+        let (qq, cc, mm) = (q.clone(), cache.clone(), metrics.clone());
+        let worker = std::thread::spawn(move || {
+            qq.run_worker(&cc, &mm);
+        });
+        let (first, _, _) = jobs[0].wait();
+        let first = first.expect("job should succeed");
+        for j in &jobs {
+            let (r, _, _) = j.wait();
+            assert!(Arc::ptr_eq(&r.unwrap(), &first), "waiters must share one result");
+        }
+        // the result landed in the cache before the job left the
+        // in-flight map, so a follow-up submit is a Hit
+        match q.submit(fp, g, o, &cache) {
+            Submit::Hit(entry) => assert!(Arc::ptr_eq(&entry, &first)),
+            _ => panic!("expected a cache hit after completion"),
+        }
+        assert_eq!(metrics.optimize.snapshot().count, 1, "optimizer must run once");
+        q.shutdown();
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_drains_backlog_then_stops_workers() {
+        let q = Arc::new(JobQueue::new(8));
+        let cache = Arc::new(ScheduleCache::new(1 << 22, 2));
+        let metrics = Arc::new(ServiceMetrics::new());
+        let mut jobs = Vec::new();
+        for seed in 10..14 {
+            let (fp, g, o) = workload(seed);
+            match q.submit(fp, g, o, &cache) {
+                Submit::New(j) => jobs.push(j),
+                _ => panic!("fresh workloads must enqueue"),
+            }
+        }
+        q.shutdown();
+        // workers started after shutdown still drain all pending jobs
+        let (qq, cc, mm) = (q.clone(), cache.clone(), metrics.clone());
+        let worker = std::thread::spawn(move || {
+            qq.run_worker(&cc, &mm);
+        });
+        for j in &jobs {
+            let (r, _, _) = j.wait();
+            assert!(r.is_ok());
+        }
+        worker.join().unwrap();
+        // and post-shutdown submits are rejected
+        let (fp, g, o) = workload(99);
+        assert!(matches!(
+            q.submit(fp, g, o, &cache),
+            Submit::Rejected { retry_after_ms: 0, .. }
+        ));
+    }
+}

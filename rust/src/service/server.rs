@@ -1,0 +1,312 @@
+//! The serving daemon: a loopback `TcpListener` speaking the JSON-lines
+//! protocol, one handler thread per connection, a worker pool running
+//! the optimizer, all wired through the schedule cache and singleflight
+//! queue.
+//!
+//! Threading model (everything inside one `std::thread::scope`, the same
+//! structured-concurrency idiom as `util::par`):
+//!
+//!   * N workers (`ServeOpts::threads`, 0 = one per core) loop on
+//!     `JobQueue::run_worker` — they are the only threads that run the
+//!     optimizer, so a flood of connections can never oversubscribe the
+//!     partitioner;
+//!   * the acceptor turns each connection into a handler thread;
+//!   * handlers parse one request line at a time, probe the cache,
+//!     submit misses to the queue, block on the job, and write one
+//!     response line.  Reads carry a short timeout so every handler
+//!     notices shutdown within ~250 ms even under an idle client.
+//!
+//! Shutdown: the `shutdown` op acks, raises the flag, and nudges the
+//! acceptor with a self-connection.  The queue then drains its backlog
+//! (in-flight requests still answer), workers exit, handlers drop their
+//! connections, and `run()` returns — a clean exit the CI smoke asserts
+//! via the process exit code.
+//!
+//! Request-path parallelism policy: the per-job partitioner runs with
+//! `partition_threads` (default 1) — with many concurrent jobs the pool
+//! IS the parallelism; cranking per-job threads as well would thrash.
+//! Results are unaffected either way (thread-count invariance).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+use crate::util::par;
+
+use super::cache::ScheduleCache;
+use super::fingerprint::fingerprint;
+use super::metrics::{ServiceMetrics, Uptime};
+use super::proto::{self, Request};
+use super::queue::{JobQueue, Submit};
+
+/// How often a blocked handler read re-checks the shutdown flag.
+const READ_TICK: Duration = Duration::from_millis(250);
+
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Loopback port; 0 = OS-assigned (read it back via `local_addr`).
+    pub port: u16,
+    /// Worker pool size: 0 = one per core, 1 = a single worker.
+    pub threads: usize,
+    /// Partitioner threads per job (see module doc).
+    pub partition_threads: usize,
+    /// Pending-queue bound; beyond it submits are rejected.
+    pub queue_cap: usize,
+    /// Schedule-cache byte budget (total across shards).
+    pub cache_bytes: usize,
+    /// Cache shard count.
+    pub shards: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            port: 7878,
+            threads: 0,
+            partition_threads: 1,
+            queue_cap: 64,
+            cache_bytes: 64 << 20,
+            shards: 8,
+        }
+    }
+}
+
+pub struct Server {
+    listener: TcpListener,
+    queue: JobQueue,
+    cache: ScheduleCache,
+    metrics: ServiceMetrics,
+    uptime: Uptime,
+    shutdown: AtomicBool,
+    opts: ServeOpts,
+}
+
+impl Server {
+    /// Bind on loopback.  Non-loopback binds are refused — the protocol
+    /// is unauthenticated by design and must stay host-local.
+    pub fn bind(opts: ServeOpts) -> Result<Server> {
+        let addr = SocketAddr::from(([127, 0, 0, 1], opts.port));
+        let listener = TcpListener::bind(addr).map_err(|e| anyhow!("bind {addr}: {e}"))?;
+        Ok(Server {
+            listener,
+            queue: JobQueue::new(opts.queue_cap),
+            cache: ScheduleCache::new(opts.cache_bytes, opts.shards),
+            metrics: ServiceMetrics::new(),
+            uptime: Uptime::new(),
+            shutdown: AtomicBool::new(false),
+            opts,
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("listener has a local addr")
+    }
+
+    pub fn workers(&self) -> usize {
+        par::resolve_threads(self.opts.threads)
+    }
+
+    /// Serve until a `shutdown` request arrives.  Blocks; run it on a
+    /// dedicated thread if the caller needs to keep going (tests do).
+    pub fn run(&self) -> Result<()> {
+        let workers = self.workers();
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| self.queue.run_worker(&self.cache, &self.metrics));
+            }
+            loop {
+                match self.listener.accept() {
+                    Ok((stream, _peer)) => {
+                        if self.shutdown.load(Ordering::Acquire) {
+                            break; // the nudge connection, or a straggler
+                        }
+                        s.spawn(move || self.handle_conn(stream));
+                    }
+                    Err(_) if self.shutdown.load(Ordering::Acquire) => break,
+                    Err(_) => {
+                        // transient accept failure (e.g. EMFILE under
+                        // load) — back off briefly instead of spinning
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                }
+            }
+            // no new requests can arrive; drain the backlog and stop
+            self.queue.shutdown();
+        });
+        Ok(())
+    }
+
+    /// Raise the shutdown flag and unblock the acceptor.
+    fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        // self-connect so the blocking accept() wakes and sees the flag
+        let _ = TcpStream::connect(self.local_addr());
+    }
+
+    fn handle_conn(&self, stream: TcpStream) {
+        let _ = stream.set_read_timeout(Some(READ_TICK));
+        let _ = stream.set_nodelay(true);
+        let Ok(read_half) = stream.try_clone() else { return };
+        let mut reader = BufReader::new(read_half);
+        let mut writer = stream;
+        // read_line preserves partially-read bytes in `line` on a
+        // timeout, so the buffer is only cleared after a full line
+        let mut line = String::new();
+        loop {
+            match reader.read_line(&mut line) {
+                Ok(0) => break, // client closed
+                Ok(_) => {
+                    let text = line.trim();
+                    let mut stop = false;
+                    if !text.is_empty() {
+                        let resp = self.dispatch_line(text, &mut stop);
+                        if writeln!(writer, "{}", resp.dump()).and_then(|_| writer.flush()).is_err()
+                        {
+                            break;
+                        }
+                    }
+                    line.clear();
+                    if stop {
+                        self.begin_shutdown();
+                        break;
+                    }
+                    if self.shutdown.load(Ordering::Acquire) {
+                        break;
+                    }
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                            | std::io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    if self.shutdown.load(Ordering::Acquire) {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// One request line → one response value.  `stop` is set when the
+    /// connection asked for shutdown (the caller acks first, then
+    /// raises the flag, so the client always sees the ack).
+    fn dispatch_line(&self, text: &str, stop: &mut bool) -> Json {
+        let parsed = Json::parse(text)
+            .map_err(|e| e.to_string())
+            .and_then(|j| proto::parse_request(&j));
+        let req = match parsed {
+            Ok(r) => r,
+            Err(e) => {
+                // never became a request — tracked apart from `errors` so
+                // the optimize-mix identity stays exact (metrics.rs)
+                ServiceMetrics::bump(&self.metrics.bad_requests);
+                return proto::error_response(&format!("bad request: {e}"), None);
+            }
+        };
+        match req {
+            Request::Health => proto::health_response(self.uptime.elapsed_ms()),
+            Request::Stats => proto::stats_response(
+                &self.metrics.snapshot(),
+                &self.cache.stats(),
+                self.uptime.elapsed_ms(),
+                self.workers(),
+                self.opts.queue_cap,
+                self.queue.pending_len(),
+            ),
+            Request::Shutdown => {
+                *stop = true;
+                proto::shutdown_response()
+            }
+            Request::Optimize { graph, opts } => self.serve_optimize(graph, opts),
+        }
+    }
+
+    fn serve_optimize(&self, graph: proto::GraphSpec, mut opts: crate::coordinator::OptOptions) -> Json {
+        ServiceMetrics::bump(&self.metrics.requests);
+        // the pool owns parallelism; per-job partitioner threads are a
+        // server policy, never a client knob (results are invariant)
+        opts.threads = self.opts.partition_threads;
+        let g = match graph.resolve() {
+            Ok(g) => g,
+            Err(e) => {
+                ServiceMetrics::bump(&self.metrics.errors);
+                return proto::error_response(&format!("bad graph: {e}"), None);
+            }
+        };
+        let fp = fingerprint(&g, &opts);
+        if let Some(entry) = self.cache.get(fp) {
+            ServiceMetrics::bump(&self.metrics.served_hit);
+            return proto::optimize_response(fp, "hit", &entry, None, None);
+        }
+        match self.queue.submit(fp, g, opts, &self.cache) {
+            Submit::Hit(entry) => {
+                // the job finished between the probe above and the
+                // enqueue — still a cache hit from the client's view
+                ServiceMetrics::bump(&self.metrics.served_hit);
+                proto::optimize_response(fp, "hit", &entry, None, None)
+            }
+            Submit::Rejected { retry_after_ms, reason } => {
+                ServiceMetrics::bump(&self.metrics.rejected);
+                proto::error_response(&reason, Some(retry_after_ms))
+            }
+            outcome @ (Submit::New(_) | Submit::Joined(_)) => {
+                let (job, cached) = match &outcome {
+                    Submit::New(j) => (j, "miss"),
+                    Submit::Joined(j) => (j, "joined"),
+                    _ => unreachable!(),
+                };
+                let (result, queue_wait, run_time) = job.wait();
+                match result {
+                    Ok(entry) => {
+                        ServiceMetrics::bump(if cached == "miss" {
+                            &self.metrics.served_miss
+                        } else {
+                            &self.metrics.served_joined
+                        });
+                        proto::optimize_response(
+                            fp,
+                            cached,
+                            &entry,
+                            Some(queue_wait.as_secs_f64() * 1e3),
+                            Some(run_time.as_secs_f64() * 1e3),
+                        )
+                    }
+                    Err(e) => {
+                        ServiceMetrics::bump(&self.metrics.errors);
+                        proto::error_response(&format!("optimization failed: {e}"), None)
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binds_loopback_with_os_assigned_port() {
+        let server = Server::bind(ServeOpts { port: 0, ..Default::default() }).unwrap();
+        let addr = server.local_addr();
+        assert!(addr.ip().is_loopback());
+        assert_ne!(addr.port(), 0);
+    }
+
+    #[test]
+    fn default_opts_are_sane() {
+        let o = ServeOpts::default();
+        assert_eq!(o.partition_threads, 1);
+        assert!(o.queue_cap >= 1);
+        assert!(o.cache_bytes >= 1 << 20);
+        assert!(o.shards >= 1);
+    }
+}

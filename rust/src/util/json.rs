@@ -1,12 +1,16 @@
-//! Minimal JSON reader for `artifacts/manifest.json`.
+//! Minimal JSON reader/writer for `artifacts/manifest.json` and the
+//! `epgraph serve` line protocol.
 //!
-//! serde is not available offline, and the manifest is machine-generated
-//! by our own aot.py, so a small recursive-descent parser covering the
-//! full JSON grammar (objects, arrays, strings with escapes, numbers,
-//! bools, null) is sufficient and keeps the runtime dependency-free.
+//! serde is not available offline, and every consumer is one of our own
+//! machine-generated formats (aot.py's manifest, the service protocol),
+//! so a small recursive-descent parser covering the full JSON grammar
+//! (objects, arrays, strings with escapes, numbers, bools, null) plus a
+//! matching writer (`Json::dump`) and a streaming line decoder
+//! (`JsonLines`) are sufficient and keep the runtime dependency-free.
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::io::BufRead;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
@@ -73,6 +77,128 @@ impl Json {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Non-negative integral numbers only (the service protocol's ids and
+    /// sizes); anything fractional or negative is None, not truncated.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= (1u64 << 53) as f64 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    /// Serialize to compact JSON (no whitespace).  Object keys come out
+    /// in BTreeMap order, so equal values serialize identically —
+    /// protocol responses diff cleanly.  Non-finite numbers become null
+    /// (JSON has no NaN/Inf).
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() <= (1u64 << 53) as f64 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Streaming JSON-lines decoder: one JSON value per newline-terminated
+/// line, blank lines skipped.  The service protocol (`service::proto`)
+/// frames every request and response this way, so a reader never needs
+/// more lookahead than one line.
+pub struct JsonLines<R: BufRead> {
+    reader: R,
+    buf: String,
+    line_no: usize,
+}
+
+impl<R: BufRead> JsonLines<R> {
+    pub fn new(reader: R) -> Self {
+        JsonLines { reader, buf: String::new(), line_no: 0 }
+    }
+
+    /// Next value, `Ok(None)` at EOF.  Parse failures surface as
+    /// `InvalidData` io errors tagged with the line number.
+    pub fn next_value(&mut self) -> std::io::Result<Option<Json>> {
+        loop {
+            self.buf.clear();
+            if self.reader.read_line(&mut self.buf)? == 0 {
+                return Ok(None);
+            }
+            self.line_no += 1;
+            let text = self.buf.trim();
+            if text.is_empty() {
+                continue;
+            }
+            return match Json::parse(text) {
+                Ok(v) => Ok(Some(v)),
+                Err(e) => Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("json-lines input, line {}: {e}", self.line_no),
+                )),
+            };
         }
     }
 }
@@ -289,5 +415,48 @@ mod tests {
     fn unicode_escapes() {
         let j = Json::parse(r#""Aé""#).unwrap();
         assert_eq!(j.as_str(), Some("Aé"));
+    }
+
+    #[test]
+    fn dump_roundtrips() {
+        let text = r#"{"a":[1,2.5,true,null],"b":"x\ny","c":{"k":-3}}"#;
+        let j = Json::parse(text).unwrap();
+        assert_eq!(j.dump(), text);
+        assert_eq!(Json::parse(&j.dump()).unwrap(), j);
+    }
+
+    #[test]
+    fn dump_is_key_order_canonical() {
+        let a = Json::parse(r#"{"x":1,"y":2}"#).unwrap();
+        let b = Json::parse(r#"{"y":2,"x":1}"#).unwrap();
+        assert_eq!(a.dump(), b.dump());
+    }
+
+    #[test]
+    fn as_u64_rejects_fractional_and_negative() {
+        assert_eq!(Json::Num(3.0).as_u64(), Some(3));
+        assert_eq!(Json::Num(3.5).as_u64(), None);
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Bool(true).as_u64(), None);
+        assert_eq!(Json::Bool(true).as_bool(), Some(true));
+    }
+
+    #[test]
+    fn json_lines_streams_values_and_skips_blanks() {
+        let input = "{\"a\":1}\n\n[1,2]\n{\"b\":2}";
+        let mut lines = JsonLines::new(std::io::BufReader::new(input.as_bytes()));
+        assert_eq!(lines.next_value().unwrap().unwrap().get("a").unwrap().as_u64(), Some(1));
+        assert_eq!(lines.next_value().unwrap().unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(lines.next_value().unwrap().unwrap().get("b").unwrap().as_u64(), Some(2));
+        assert!(lines.next_value().unwrap().is_none());
+    }
+
+    #[test]
+    fn json_lines_reports_bad_line() {
+        let mut lines = JsonLines::new(std::io::BufReader::new("{}\nnot json\n".as_bytes()));
+        assert!(lines.next_value().unwrap().is_some());
+        let err = lines.next_value().unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("line 2"));
     }
 }

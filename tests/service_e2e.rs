@@ -1,0 +1,213 @@
+//! Loopback end-to-end tests for `epgraph serve` (the service layer).
+//!
+//! These run a real `Server` on 127.0.0.1:0 and drive it with real TCP
+//! clients speaking the JSON-lines protocol — the same path the CI
+//! serve-smoke exercises through the CLI.  The core contract under
+//! test:
+//!
+//!   * served schedules are BIT-IDENTICAL to a direct
+//!     `coordinator::optimize_graph` call with the same options;
+//!   * a repeated workload under ≥ 32 concurrent clients reaches a
+//!     ≥ 90% cache hit rate after warmup (singleflight makes the miss
+//!     count exactly the number of distinct workloads);
+//!   * the `stats` counters are consistent with the request mix
+//!     (requests = hit + miss + joined + rejected + errors, one
+//!     optimizer run per distinct workload);
+//!   * shutdown drains cleanly and `run()` returns.
+
+use std::sync::Arc;
+
+use epgraph::coordinator::{optimize_graph, OptOptions};
+use epgraph::service::{proto, Client, GraphSpec, ServeOpts, Server};
+use epgraph::util::json::Json;
+
+fn connect(addr: std::net::SocketAddr) -> Client {
+    Client::connect(addr).expect("connect")
+}
+
+fn roundtrip(client: &mut Client, line: &str) -> Json {
+    client.roundtrip_line(line).expect("roundtrip")
+}
+
+fn start_server(opts: ServeOpts) -> (Arc<Server>, std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let server = Arc::new(Server::bind(opts).expect("bind loopback"));
+    let addr = server.local_addr();
+    let handle = {
+        let server = server.clone();
+        std::thread::spawn(move || server.run().expect("server run"))
+    };
+    (server, addr, handle)
+}
+
+fn get_u64(j: &Json, key: &str) -> u64 {
+    j.get(key).and_then(Json::as_u64).unwrap_or_else(|| panic!("stats field {key}: {j:?}"))
+}
+
+/// Assert a served optimize response matches the direct pipeline run.
+fn assert_bit_identical(resp: &Json, expected: &epgraph::coordinator::OptimizedSchedule) {
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "failed: {resp:?}");
+    let assign = resp.get("assign").and_then(Json::as_arr).expect("assign array");
+    assert_eq!(assign.len(), expected.partition.assign.len());
+    for (got, &want) in assign.iter().zip(&expected.partition.assign) {
+        assert_eq!(got.as_u64(), Some(want as u64), "assign diverged");
+    }
+    let layout = resp.get("layout").and_then(Json::as_arr).expect("layout array");
+    assert_eq!(layout.len(), expected.layout.new_of_old.len());
+    for (got, &want) in layout.iter().zip(&expected.layout.new_of_old) {
+        assert_eq!(got.as_u64(), Some(want as u64), "layout diverged");
+    }
+    assert_eq!(get_u64(resp, "quality"), expected.quality);
+}
+
+#[test]
+fn concurrent_repeated_workload_hits_cache_and_matches_direct() {
+    let (_server, addr, handle) = start_server(ServeOpts {
+        port: 0,
+        threads: 4,
+        queue_cap: 64,
+        ..Default::default()
+    });
+
+    // two distinct workloads, both repeated heavily (cfd meshes don't
+    // trip the special-pattern shortcut, so the full EP pipeline runs)
+    let workloads: Vec<(GraphSpec, OptOptions)> = vec![
+        (
+            GraphSpec::Gen { name: "cfd_mesh".into(), args: vec![16, 16, 1] },
+            OptOptions { k: 8, seed: 7, ..Default::default() },
+        ),
+        (
+            GraphSpec::Gen { name: "cfd_mesh".into(), args: vec![16, 16, 2] },
+            OptOptions { k: 4, seed: 9, ..Default::default() },
+        ),
+    ];
+    let expected: Vec<_> = workloads
+        .iter()
+        .map(|(spec, opts)| optimize_graph(&spec.resolve().unwrap(), opts))
+        .collect();
+    let lines: Vec<String> = workloads
+        .iter()
+        .map(|(spec, opts)| proto::optimize_request(spec, opts).dump())
+        .collect();
+
+    // 32 concurrent connections × 4 requests each, alternating workloads
+    const CLIENTS: usize = 32;
+    const PER_CLIENT: usize = 4;
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let (lines, expected) = (&lines, &expected);
+            s.spawn(move || {
+                let mut client = connect(addr);
+                for r in 0..PER_CLIENT {
+                    let w = (c + r) % lines.len();
+                    let resp = roundtrip(&mut client, &lines[w]);
+                    assert_bit_identical(&resp, &expected[w]);
+                    let cached = resp.get("cached").and_then(Json::as_str).unwrap();
+                    assert!(
+                        matches!(cached, "hit" | "miss" | "joined"),
+                        "unexpected cached tag {cached}"
+                    );
+                }
+            });
+        }
+    });
+
+    // stats: the mix must reconcile exactly
+    let mut client = connect(addr);
+    let stats = roundtrip(&mut client, &proto::simple_request("stats").dump());
+    let total = (CLIENTS * PER_CLIENT) as u64;
+    let (hit, miss, joined) = (
+        get_u64(&stats, "served_hit"),
+        get_u64(&stats, "served_miss"),
+        get_u64(&stats, "served_joined"),
+    );
+    assert_eq!(get_u64(&stats, "requests"), total);
+    assert_eq!(get_u64(&stats, "rejected"), 0);
+    assert_eq!(get_u64(&stats, "errors"), 0);
+    assert_eq!(hit + miss + joined, total, "mix must reconcile: {stats:?}");
+    // singleflight: exactly one optimizer run per distinct workload
+    assert_eq!(miss, workloads.len() as u64, "one miss per workload expected");
+    let hit_rate = stats.get("hit_rate").and_then(Json::as_f64).unwrap();
+    assert!(hit_rate >= 0.9, "hit rate {hit_rate} < 0.9");
+    // latency counters line up with the mix: one optimize per miss
+    let optimize_count =
+        get_u64(stats.get("optimize_ms").expect("optimize_ms"), "count");
+    assert_eq!(optimize_count, miss, "optimizer runs != misses");
+    let cache = stats.get("cache").expect("cache stats");
+    assert_eq!(get_u64(cache, "insertions"), miss);
+    assert_eq!(get_u64(cache, "entries"), workloads.len() as u64);
+    assert_eq!(get_u64(cache, "evictions"), 0);
+
+    // clean shutdown: ack, then run() returns
+    let ack = roundtrip(&mut client, &proto::simple_request("shutdown").dump());
+    assert_eq!(ack.get("status").and_then(Json::as_str), Some("shutting-down"));
+    handle.join().expect("server thread");
+}
+
+#[test]
+fn health_and_malformed_requests_do_not_disturb_serving() {
+    let (_server, addr, handle) =
+        start_server(ServeOpts { port: 0, threads: 1, ..Default::default() });
+    let mut client = connect(addr);
+
+    let health = roundtrip(&mut client, &proto::simple_request("health").dump());
+    assert_eq!(health.get("status").and_then(Json::as_str), Some("serving"));
+
+    // garbage JSON and bad requests get error responses on the same
+    // connection, which then keeps working
+    let err = roundtrip(&mut client, r#"{"op":"optimize"}"#);
+    assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false));
+    let err = roundtrip(&mut client, r#"{"op":"optimize","graph":{"gen":"nope"}}"#);
+    assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false));
+
+    let spec = GraphSpec::Gen { name: "path".into(), args: vec![64] };
+    let opts = OptOptions { k: 2, ..Default::default() };
+    let resp = roundtrip(&mut client, &proto::optimize_request(&spec, &opts).dump());
+    let direct = optimize_graph(&spec.resolve().unwrap(), &opts);
+    assert_bit_identical(&resp, &direct);
+
+    let stats = roundtrip(&mut client, &proto::simple_request("stats").dump());
+    // first bad line never parsed into a request; the second parsed but
+    // failed graph resolution — the identity must reconcile exactly
+    assert_eq!(get_u64(&stats, "bad_requests"), 1);
+    assert_eq!(get_u64(&stats, "errors"), 1);
+    assert_eq!(get_u64(&stats, "requests"), 2);
+    assert_eq!(
+        get_u64(&stats, "served_hit")
+            + get_u64(&stats, "served_miss")
+            + get_u64(&stats, "served_joined")
+            + get_u64(&stats, "rejected")
+            + get_u64(&stats, "errors"),
+        get_u64(&stats, "requests"),
+        "optimize mix identity broke: {stats:?}"
+    );
+
+    roundtrip(&mut client, &proto::simple_request("shutdown").dump());
+    handle.join().expect("server thread");
+}
+
+#[test]
+fn inline_and_generator_specs_share_one_cache_entry() {
+    let (_server, addr, handle) =
+        start_server(ServeOpts { port: 0, threads: 2, ..Default::default() });
+    let mut client = connect(addr);
+
+    let spec = GraphSpec::Gen { name: "cfd_mesh".into(), args: vec![10, 10, 5] };
+    let opts = OptOptions { k: 4, seed: 1, ..Default::default() };
+    let g = spec.resolve().unwrap();
+    let inline = GraphSpec::Inline { n: g.n, edges: g.edges.clone() };
+
+    let r1 = roundtrip(&mut client, &proto::optimize_request(&spec, &opts).dump());
+    let r2 = roundtrip(&mut client, &proto::optimize_request(&inline, &opts).dump());
+    assert_eq!(
+        r1.get("fingerprint").and_then(Json::as_str),
+        r2.get("fingerprint").and_then(Json::as_str),
+        "content-addressing must see through the spec form"
+    );
+    assert_eq!(r2.get("cached").and_then(Json::as_str), Some("hit"));
+    let direct = optimize_graph(&g, &opts);
+    assert_bit_identical(&r1, &direct);
+    assert_bit_identical(&r2, &direct);
+
+    roundtrip(&mut client, &proto::simple_request("shutdown").dump());
+    handle.join().expect("server thread");
+}
