@@ -73,7 +73,10 @@ pub struct OptimizedSchedule {
 /// layer (`service`) stores this next to each cached schedule so its
 /// `stats` endpoint can report where optimization time went without
 /// re-running anything; `total` always equals the schedule's
-/// `partition_time`.
+/// `partition_time`.  `total` is also the entry's recompute cost in
+/// the cache's eviction-aware admission policy (`service::cache`) and
+/// is persisted with the schedule (`service::persist`), so the policy
+/// keeps working across daemon restarts.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct OptBreakdown {
     pub reuse_check: Duration,

@@ -7,7 +7,9 @@
 //!   epgraph bench     <fig4|fig6|table2|fig10|fig11|fig12|table3|fig13|fig14|fig15|ablation|scaling|all>
 //!   epgraph artifacts [--outdir DIR] [--configs t0,s1,m1]
 //!   epgraph serve     [--port N] [--threads N] [--queue-cap N] [--cache-mb N] [--shards N]
-//!   epgraph client    [--addr HOST:PORT] [--op optimize|stats|health|shutdown] [--gen SPEC]
+//!                     [--snapshot PATH] [--snapshot-every N] [--matrix-dir DIR]
+//!   epgraph client    [--addr HOST:PORT] [--op optimize|stats|health|shutdown]
+//!                     [--gen SPEC | --matrix NAME]
 //!                     [--k N] [--seed S] [--repeat N] [--concurrency N] [--verify]
 //!   epgraph info
 
@@ -92,8 +94,8 @@ fn dispatch(args: &[String]) -> Result<()> {
                  epgraph bench <fig4|fig6|table2|fig10|fig11|fig12|table3|fig13|fig14|fig15|ablation|scaling|headline|all>\n  \
                  epgraph bench-compare <baseline.json> <current.json> [--tol 0.25]\n  \
                  epgraph artifacts [--outdir DIR] [--configs t0,s1,m1]\n  \
-                 epgraph serve [--port 7878] [--threads 0] [--partition-threads 1] [--queue-cap 64] [--cache-mb 64] [--shards 8]\n  \
-                 epgraph client [--addr 127.0.0.1:7878] [--op optimize|stats|health|shutdown] [--gen cfd_mesh:24,24,1]\n                 [--k N] [--seed S] [--method M] [--repeat 1] [--concurrency 1] [--verify]\n  \
+                 epgraph serve [--port 7878] [--threads 0] [--partition-threads 1] [--queue-cap 64] [--cache-mb 64] [--shards 8]\n                [--snapshot cache.snap] [--snapshot-every 64] [--matrix-dir DIR]\n  \
+                 epgraph client [--addr 127.0.0.1:7878] [--op optimize|stats|health|shutdown] [--gen cfd_mesh:24,24,1 | --matrix NAME]\n                 [--k N] [--seed S] [--method M] [--repeat 1] [--concurrency 1] [--verify]\n  \
                  epgraph info"
             );
             Ok(())
@@ -312,7 +314,10 @@ fn cmd_bench_compare(pos: &[String], flags: &HashMap<String, String>) -> Result<
 }
 
 /// Start the schedule-serving daemon (service::server).  Blocks until a
-/// client sends `{"op":"shutdown"}`; exits 0 on a clean drain.
+/// client sends `{"op":"shutdown"}`; exits 0 on a clean drain.  With
+/// `--snapshot PATH` the schedule cache is warm-loaded at startup and
+/// snapshotted periodically and at shutdown; `--matrix-dir DIR` enables
+/// server-side `{"matrix":"name"}` specs (`<DIR>/<name>.mtx`).
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let opts = epgraph::service::ServeOpts {
         port: get_usize(flags, "port", 7878) as u16,
@@ -321,6 +326,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         queue_cap: get_usize(flags, "queue-cap", 64),
         cache_bytes: get_usize(flags, "cache-mb", 64) << 20,
         shards: get_usize(flags, "shards", 8),
+        snapshot: flags.get("snapshot").map(std::path::PathBuf::from),
+        snapshot_every: get_usize(flags, "snapshot-every", 64) as u64,
+        matrix_dir: flags.get("matrix-dir").map(std::path::PathBuf::from),
     };
     let server = epgraph::service::Server::bind(opts.clone())?;
     println!(
@@ -331,6 +339,25 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         opts.cache_bytes >> 20,
         opts.shards
     );
+    if let Some(warm) = server.warm_report() {
+        println!(
+            "epgraph serve: warm-start from {:?}: loaded {} entries (skipped: {} corrupt, {} over budget{})",
+            opts.snapshot.as_ref().unwrap(),
+            warm.loaded,
+            warm.skipped_corrupt,
+            warm.skipped_budget,
+            if warm.version_mismatch {
+                ", snapshot version mismatch — whole file skipped"
+            } else if warm.oversize_file {
+                ", snapshot larger than the loader cap — whole file skipped"
+            } else {
+                ""
+            }
+        );
+    }
+    if let Some(dir) = &opts.matrix_dir {
+        println!("epgraph serve: matrix specs resolve from {dir:?}");
+    }
     server.run()?;
     println!("epgraph serve: clean shutdown");
     Ok(())
@@ -360,8 +387,16 @@ fn cmd_client(flags: &HashMap<String, String>) -> Result<()> {
     }
     anyhow::ensure!(op == "optimize", "unknown --op '{op}'");
 
-    let spec_str = flags.get("gen").map(String::as_str).unwrap_or("cfd_mesh:24,24,1");
-    let spec = proto::GraphSpec::parse_cli(spec_str).map_err(|e| anyhow!("--gen: {e}"))?;
+    let spec = if let Some(name) = flags.get("matrix") {
+        anyhow::ensure!(
+            !flags.contains_key("gen"),
+            "--matrix and --gen are mutually exclusive"
+        );
+        proto::GraphSpec::Matrix { name: name.clone() }
+    } else {
+        let spec_str = flags.get("gen").map(String::as_str).unwrap_or("cfd_mesh:24,24,1");
+        proto::GraphSpec::parse_cli(spec_str).map_err(|e| anyhow!("--gen: {e}"))?
+    };
     let mut opts = OptOptions { k: get_usize(flags, "k", 8), ..Default::default() };
     if let Some(s) = flags.get("seed") {
         opts.seed = s.parse().map_err(|_| anyhow!("bad --seed"))?;
@@ -378,6 +413,11 @@ fn cmd_client(flags: &HashMap<String, String>) -> Result<()> {
     // (for --verify) comes from the same resolution path the server uses
     let line = proto::optimize_request(&spec, &opts).dump();
     let expected = if verify {
+        anyhow::ensure!(
+            !matches!(spec, proto::GraphSpec::Matrix { .. }),
+            "--verify resolves the workload client-side, but matrix specs resolve on the \
+             server — use a --gen workload to verify"
+        );
         let g = spec.resolve().map_err(|e| anyhow!("--gen: {e}"))?;
         Some(optimize_graph(&g, &opts))
     } else {

@@ -1,4 +1,5 @@
-//! Content-addressed schedule cache: sharded LRU with a byte budget.
+//! Content-addressed schedule cache: sharded LRU with a byte budget and
+//! a cost-aware admission policy.
 //!
 //! The service-level mirror of the paper's caching thesis — keep the
 //! expensive-to-recompute thing (here: an optimized schedule, seconds of
@@ -12,14 +13,35 @@
 //! (default 8) so concurrent handler threads don't serialize on one
 //! mutex.  Each shard runs a classic intrusive doubly-linked LRU over a
 //! slab, with O(1) get/insert/promote and LRU-first eviction until the
-//! shard is back under its byte budget (total budget / shards).  The
-//! invariant `shard bytes ≤ shard budget` always holds — an entry larger
-//! than the whole shard budget is evicted straight away rather than
-//! pinning the shard over budget.
+//! shard is back under its byte budget.  The total budget is split
+//! across shards with the remainder distributed one byte at a time, so
+//! `sum(shard budgets) == byte_budget` exactly — floor division used to
+//! zero every shard when budget < shards.  The invariant
+//! `shard bytes ≤ shard budget` always holds.
 //!
-//! Counters (hits/misses/insertions/evictions/bytes) are cache-global
-//! atomics, snapshotted loosely by `stats()` — they are monitoring data,
-//! not synchronization.
+//! Admission (the eviction-aware policy): every entry carries its
+//! recompute cost in nanoseconds (`OptBreakdown::total` from the run
+//! that produced it).  An insert that would evict resident entries is
+//! refused when the newcomer is cheaper to recompute than the combined
+//! victims — caching it would trade cheap future work for expensive
+//! future work.  An entry larger than its whole shard budget is refused
+//! up front instead of being admitted and immediately self-evicted
+//! (which used to poison the insertion/eviction counters).  Rejections
+//! are counted per reason (`rejected_oversize` / `rejected_cheap`) and
+//! surface in `stats`.
+//!
+//! Aging keeps the policy from starving the cache after a workload
+//! shift: each time a resident entry "defends" its slot by getting a
+//! newcomer rejected, its *effective* cost halves (`cost_ns >> age`),
+//! and a hit resets the age (a hit is proof of value).  A stale
+//! expensive entry that nobody requests therefore loses a rejection
+//! contest after at most `log2(cost ratio)` attempts — without aging, a
+//! cache full of heavyweight schedules from yesterday's traffic would
+//! reject today's cheaper workload forever and pin the hit rate at 0.
+//!
+//! Counters (hits/misses/insertions/evictions/rejections/bytes) are
+//! cache-global atomics, snapshotted loosely by `stats()` — they are
+//! monitoring data, not synchronization.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -36,6 +58,10 @@ pub struct CachedSchedule {
     pub breakdown: OptBreakdown,
     /// Approximate resident size (assignment + layout arrays + headers).
     pub bytes: usize,
+    /// Recompute cost in nanoseconds (`breakdown.total`) — the currency
+    /// of the admission policy: entries are worth keeping in proportion
+    /// to the optimizer time a future hit saves.
+    pub cost_ns: u64,
 }
 
 impl CachedSchedule {
@@ -45,8 +71,26 @@ impl CachedSchedule {
             + (schedule.layout.new_of_old.len() + schedule.layout.old_of_new.len())
                 * std::mem::size_of::<u32>()
             + 64; // map/slab entry overhead
-        CachedSchedule { schedule, breakdown, bytes }
+        let cost_ns = breakdown.total.as_nanos().min(u64::MAX as u128) as u64;
+        CachedSchedule { schedule, breakdown, bytes, cost_ns }
     }
+}
+
+/// Outcome of one insert under the admission policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// New entry admitted (possibly after evictions).
+    Inserted,
+    /// Key already resident: value swapped, recency refreshed.
+    Refreshed,
+    /// Entry larger than its whole shard budget — never admitted.
+    RejectedOversize,
+    /// Entry cheaper to recompute than the LRU entries it would evict.
+    RejectedCheap,
+    /// Warm-load only: the shard is full and warm inserts never evict
+    /// (snapshot records arrive MRU-first, so under a shrunk budget the
+    /// hottest entries are exactly the ones already admitted).
+    RejectedFull,
 }
 
 /// Loose point-in-time counter snapshot.
@@ -60,6 +104,10 @@ pub struct CacheStats {
     pub misses: u64,
     pub insertions: u64,
     pub evictions: u64,
+    /// Admission refusals: entry larger than its shard budget.
+    pub rejected_oversize: u64,
+    /// Admission refusals: cheaper to recompute than its victims.
+    pub rejected_cheap: u64,
 }
 
 const NIL: usize = usize::MAX;
@@ -69,6 +117,16 @@ struct Entry {
     val: Arc<CachedSchedule>,
     prev: usize,
     next: usize,
+    /// Rejection-contest wins since the last hit; halves the entry's
+    /// effective cost in admission comparisons (see module doc).
+    age: u32,
+}
+
+impl Entry {
+    /// Admission-comparison cost: the recompute cost decayed by age.
+    fn effective_cost(&self) -> u64 {
+        self.val.cost_ns >> self.age.min(63)
+    }
 }
 
 /// One LRU shard: slab-backed intrusive list, head = MRU, tail = LRU.
@@ -123,7 +181,9 @@ impl Shard {
         let slot = *self.map.get(&fp)?;
         self.unlink(slot);
         self.push_front(slot);
-        Some(self.slots[slot].as_ref().unwrap().val.clone())
+        let e = self.slots[slot].as_mut().unwrap();
+        e.age = 0; // a hit is proof of value: full cost restored
+        Some(e.val.clone())
     }
 
     /// Remove the LRU entry; returns false when the shard is empty.
@@ -135,82 +195,174 @@ impl Shard {
         self.unlink(slot);
         let e = self.slots[slot].take().unwrap();
         self.map.remove(&e.fp);
-        self.bytes -= e.val.bytes;
+        debug_assert!(self.bytes >= e.val.bytes, "shard byte accounting drifted low");
+        self.bytes = self.bytes.saturating_sub(e.val.bytes);
         self.free.push(slot);
         true
     }
 
-    /// Insert or refresh; evicts LRU-first until `bytes ≤ budget`.
-    /// Returns the number of evictions performed.
-    fn insert(&mut self, fp: Fingerprint, val: Arc<CachedSchedule>, budget: usize) -> u64 {
+    /// Insert or refresh under the admission policy (module doc).
+    /// `allow_evict: false` is the warm-load mode: a full shard refuses
+    /// the entry (`RejectedFull`) instead of displacing anything.
+    /// Returns the outcome and the number of evictions performed.
+    fn insert(
+        &mut self,
+        fp: Fingerprint,
+        val: Arc<CachedSchedule>,
+        budget: usize,
+        allow_evict: bool,
+    ) -> (Admission, u64) {
         if let Some(&slot) = self.map.get(&fp) {
             // same content re-inserted (e.g. post-singleflight race):
-            // refresh recency, swap the value (byte size may differ only
-            // if the estimate changed — keep accounting exact)
+            // refresh recency and swap the value.  Byte sizes only differ
+            // if the estimate changed; keep the accounting exact with
+            // saturating arithmetic (a drift must not underflow-panic in
+            // debug builds — the debug_assert above flags it instead).
+            if val.bytes > budget {
+                // a re-estimate that no longer fits: keep the resident
+                // value (same fingerprint ⇒ same content), refresh recency
+                self.unlink(slot);
+                self.push_front(slot);
+                return (Admission::RejectedOversize, 0);
+            }
             let old_bytes = self.slots[slot].as_ref().unwrap().val.bytes;
-            self.bytes = self.bytes - old_bytes + val.bytes;
-            self.slots[slot].as_mut().unwrap().val = val;
+            debug_assert!(self.bytes >= old_bytes, "shard byte accounting drifted low");
+            if !allow_evict && self.bytes.saturating_sub(old_bytes) + val.bytes > budget {
+                // warm mode: a grown re-estimate may not displace others;
+                // keep the resident value (same fingerprint ⇒ same content)
+                self.unlink(slot);
+                self.push_front(slot);
+                return (Admission::RejectedFull, 0);
+            }
+            self.bytes = self.bytes.saturating_sub(old_bytes) + val.bytes;
+            {
+                let e = self.slots[slot].as_mut().unwrap();
+                e.val = val;
+                e.age = 0; // a fresh recompute is proof of value too
+            }
             self.unlink(slot);
             self.push_front(slot);
-        } else {
-            let slot = match self.free.pop() {
-                Some(s) => {
-                    self.slots[s] = Some(Entry { fp, val: val.clone(), prev: NIL, next: NIL });
-                    s
-                }
-                None => {
-                    self.slots.push(Some(Entry { fp, val: val.clone(), prev: NIL, next: NIL }));
-                    self.slots.len() - 1
-                }
-            };
-            self.bytes += val.bytes;
-            self.map.insert(fp, slot);
-            self.push_front(slot);
+            // a grown estimate can push the shard over budget; the
+            // refreshed entry sits at MRU so colder entries go first, and
+            // it fits alone (checked above), so the loop terminates early
+            let mut evictions = 0u64;
+            while self.bytes > budget && self.evict_lru() {
+                evictions += 1;
+            }
+            return (Admission::Refreshed, evictions);
         }
+        if val.bytes > budget {
+            return (Admission::RejectedOversize, 0);
+        }
+        // eviction-aware admission: find the would-be victims (LRU-first)
+        // and refuse entries cheaper to recompute than what they displace
+        // (at their age-decayed effective cost — see module doc)
+        let need = (self.bytes + val.bytes).saturating_sub(budget);
+        if need > 0 && !allow_evict {
+            return (Admission::RejectedFull, 0);
+        }
+        if need > 0 {
+            let mut freed = 0usize;
+            let mut victims_cost = 0u64;
+            let mut victims = Vec::new();
+            let mut cur = self.tail;
+            while freed < need && cur != NIL {
+                let e = self.slots[cur].as_ref().unwrap();
+                freed += e.val.bytes;
+                victims_cost = victims_cost.saturating_add(e.effective_cost());
+                victims.push(cur);
+                cur = e.prev;
+            }
+            if val.cost_ns < victims_cost {
+                // the residents won this contest — but each win ages
+                // them, so an unrequested entry cannot defend its slot
+                // forever (a hit resets the age)
+                for slot in victims {
+                    let e = self.slots[slot].as_mut().unwrap();
+                    e.age = e.age.saturating_add(1);
+                }
+                return (Admission::RejectedCheap, 0);
+            }
+        }
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slots[s] =
+                    Some(Entry { fp, val: val.clone(), prev: NIL, next: NIL, age: 0 });
+                s
+            }
+            None => {
+                self.slots
+                    .push(Some(Entry { fp, val: val.clone(), prev: NIL, next: NIL, age: 0 }));
+                self.slots.len() - 1
+            }
+        };
+        self.bytes += val.bytes;
+        self.map.insert(fp, slot);
+        self.push_front(slot);
         let mut evictions = 0u64;
         while self.bytes > budget && self.evict_lru() {
             evictions += 1;
         }
-        evictions
+        (Admission::Inserted, evictions)
+    }
+
+    /// Entries from LRU (tail) to MRU (head) — snapshot order, so a
+    /// warm-load replaying the sequence reconstructs the recency order.
+    fn export(&self, out: &mut Vec<(Fingerprint, Arc<CachedSchedule>)>) {
+        let mut cur = self.tail;
+        while cur != NIL {
+            let e = self.slots[cur].as_ref().unwrap();
+            out.push((e.fp, e.val.clone()));
+            cur = e.prev;
+        }
     }
 }
 
 /// The sharded cache.  All methods take `&self`; locking is per shard.
 pub struct ScheduleCache {
     shards: Vec<Mutex<Shard>>,
-    shard_budget: usize,
+    /// Per-shard byte budgets; sums to `byte_budget` exactly.
+    shard_budgets: Vec<usize>,
     byte_budget: usize,
     hits: AtomicU64,
     misses: AtomicU64,
     insertions: AtomicU64,
     evictions: AtomicU64,
+    rejected_oversize: AtomicU64,
+    rejected_cheap: AtomicU64,
 }
 
 impl ScheduleCache {
-    /// `byte_budget` is the total across all shards; each shard gets an
-    /// equal slice.  `shards` is clamped to ≥ 1.
+    /// `byte_budget` is the total across all shards.  Each shard gets
+    /// `byte_budget / shards`, and the remainder is distributed one byte
+    /// per shard so no budget is lost to floor division (at budget=7,
+    /// shards=8 the old division zeroed every shard).  `shards` is
+    /// clamped to ≥ 1.
     pub fn new(byte_budget: usize, shards: usize) -> Self {
         let shards = shards.max(1);
+        let base = byte_budget / shards;
+        let rem = byte_budget % shards;
         ScheduleCache {
             shards: (0..shards).map(|_| Mutex::new(Shard::new())).collect(),
-            shard_budget: byte_budget / shards,
+            shard_budgets: (0..shards).map(|i| base + usize::from(i < rem)).collect(),
             byte_budget,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             insertions: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            rejected_oversize: AtomicU64::new(0),
+            rejected_cheap: AtomicU64::new(0),
         }
     }
 
     #[inline]
-    fn shard_of(&self, fp: Fingerprint) -> &Mutex<Shard> {
+    fn shard_of(&self, fp: Fingerprint) -> usize {
         // the fingerprint is already mixed; fold both lanes for the index
-        let i = (fp.0 ^ fp.1.rotate_left(17)) as usize % self.shards.len();
-        &self.shards[i]
+        (fp.0 ^ fp.1.rotate_left(17)) as usize % self.shards.len()
     }
 
     pub fn get(&self, fp: Fingerprint) -> Option<Arc<CachedSchedule>> {
-        let found = self.shard_of(fp).lock().unwrap().get_promote(fp);
+        let found = self.shards[self.shard_of(fp)].lock().unwrap().get_promote(fp);
         match &found {
             Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
             None => self.misses.fetch_add(1, Ordering::Relaxed),
@@ -222,13 +374,75 @@ impl ScheduleCache {
     /// the queue's submit-time race re-check so one logical request
     /// never counts twice against the cache.
     pub fn probe(&self, fp: Fingerprint) -> Option<Arc<CachedSchedule>> {
-        self.shard_of(fp).lock().unwrap().get_promote(fp)
+        self.shards[self.shard_of(fp)].lock().unwrap().get_promote(fp)
     }
 
-    pub fn insert(&self, fp: Fingerprint, val: Arc<CachedSchedule>) {
-        let evicted = self.shard_of(fp).lock().unwrap().insert(fp, val, self.shard_budget);
-        self.insertions.fetch_add(1, Ordering::Relaxed);
+    pub fn insert(&self, fp: Fingerprint, val: Arc<CachedSchedule>) -> Admission {
+        self.insert_counted(fp, val, &self.insertions, true)
+    }
+
+    /// Warm-load path (`service::persist`): never evicts — snapshot
+    /// records arrive MRU-first, so under a shrunk budget the hottest
+    /// entries are admitted and the cold tail is refused
+    /// (`RejectedFull`), not the other way round — and counted apart
+    /// from live insertions so the serving identity
+    /// `insertions == served misses` survives a restart.
+    pub fn insert_warm(&self, fp: Fingerprint, val: Arc<CachedSchedule>) -> Admission {
+        static NOOP: AtomicU64 = AtomicU64::new(0);
+        self.insert_counted(fp, val, &NOOP, false)
+    }
+
+    fn insert_counted(
+        &self,
+        fp: Fingerprint,
+        val: Arc<CachedSchedule>,
+        insertions: &AtomicU64,
+        allow_evict: bool,
+    ) -> Admission {
+        let i = self.shard_of(fp);
+        let (outcome, evicted) = self.shards[i].lock().unwrap().insert(
+            fp,
+            val,
+            self.shard_budgets[i],
+            allow_evict,
+        );
+        // warm-load refusals (allow_evict = false, any Rejected*
+        // variant) surface through persist::LoadReport; the live
+        // rejection counters describe serving traffic only
+        match outcome {
+            Admission::Inserted | Admission::Refreshed => {
+                insertions.fetch_add(1, Ordering::Relaxed);
+            }
+            Admission::RejectedOversize if allow_evict => {
+                self.rejected_oversize.fetch_add(1, Ordering::Relaxed);
+            }
+            Admission::RejectedCheap if allow_evict => {
+                self.rejected_cheap.fetch_add(1, Ordering::Relaxed);
+            }
+            Admission::RejectedOversize
+            | Admission::RejectedCheap
+            | Admission::RejectedFull => {}
+        }
         self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        outcome
+    }
+
+    /// Live insertion count (cheap: one atomic load, no shard locks) —
+    /// the persistence flusher polls this on its tick.
+    pub fn insertion_count(&self) -> u64 {
+        self.insertions.load(Ordering::Relaxed)
+    }
+
+    /// Every resident entry, per shard from LRU to MRU.
+    /// `service::persist` writes the snapshot in the REVERSE of this
+    /// order (MRU-first) so warm admission prioritizes the hottest
+    /// entries, then rebuilds recency with a promote pass.
+    pub fn export(&self) -> Vec<(Fingerprint, Arc<CachedSchedule>)> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            s.lock().unwrap().export(&mut out);
+        }
+        out
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -248,6 +462,8 @@ impl ScheduleCache {
             misses: self.misses.load(Ordering::Relaxed),
             insertions: self.insertions.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
+            rejected_oversize: self.rejected_oversize.load(Ordering::Relaxed),
+            rejected_cheap: self.rejected_cheap.load(Ordering::Relaxed),
         }
     }
 }
@@ -266,6 +482,12 @@ mod tests {
         (fingerprint(&g, &opts), Arc::new(CachedSchedule::new(sched, bd)))
     }
 
+    /// Same entry with a crafted recompute cost (admission tests).
+    fn entry_with_cost(seed: u64, cost_ns: u64) -> (Fingerprint, Arc<CachedSchedule>) {
+        let (fp, e) = entry_for(seed);
+        (fp, Arc::new(CachedSchedule { cost_ns, ..(*e).clone() }))
+    }
+
     #[test]
     fn get_after_insert_returns_same_arc() {
         let cache = ScheduleCache::new(1 << 20, 4);
@@ -280,11 +502,14 @@ mod tests {
 
     #[test]
     fn lru_eviction_under_byte_budget() {
-        // single shard so recency order is global; budget fits ~3 entries
+        // single shard so recency order is global; budget fits ~3 entries.
+        // Costs are pinned equal so the admission policy is neutral here
+        // (equal cost admits — recency breaks the tie) and the test
+        // exercises pure LRU behaviour deterministically.
         let (_, probe) = entry_for(0);
         let budget = probe.bytes * 3 + probe.bytes / 2;
         let cache = ScheduleCache::new(budget, 1);
-        let items: Vec<_> = (1..=4).map(entry_for).collect();
+        let items: Vec<_> = (1..=4).map(|s| entry_with_cost(s, 1_000)).collect();
         for (fp, v) in &items[..3] {
             cache.insert(*fp, v.clone());
         }
@@ -302,26 +527,190 @@ mod tests {
     }
 
     #[test]
-    fn oversized_entry_never_pins_the_shard_over_budget() {
+    fn oversized_entry_is_rejected_up_front() {
         let (fp, val) = entry_for(7);
         let cache = ScheduleCache::new(val.bytes / 2, 1); // budget < one entry
-        cache.insert(fp, val);
+        assert_eq!(cache.insert(fp, val), Admission::RejectedOversize);
         let st = cache.stats();
-        assert_eq!(st.entries, 0, "oversized entry must be evicted immediately");
-        assert_eq!(st.evictions, 1);
+        assert_eq!(st.entries, 0, "oversized entry must never be admitted");
+        assert_eq!(st.evictions, 0, "no self-eviction churn");
+        assert_eq!(st.insertions, 0, "a rejection is not an insertion");
+        assert_eq!(st.rejected_oversize, 1);
         assert_eq!(st.bytes, 0);
+    }
+
+    #[test]
+    fn shard_budgets_distribute_the_remainder_exactly() {
+        // regression: budget=7 over 8 shards used to floor-divide to 0
+        // per shard, silently turning the whole cache off
+        let cache = ScheduleCache::new(7, 8);
+        assert_eq!(cache.shard_budgets.iter().sum::<usize>(), 7, "no budget may be lost");
+        assert_eq!(cache.shard_budgets.iter().filter(|&&b| b == 1).count(), 7);
+        assert_eq!(cache.shard_budgets.iter().filter(|&&b| b == 0).count(), 1);
+        // and a divisible budget still splits evenly
+        let even = ScheduleCache::new(64, 8);
+        assert!(even.shard_budgets.iter().all(|&b| b == 8));
+        // general invariant: max - min ≤ 1 and the sum is exact
+        for (budget, shards) in [(0, 3), (1, 4), (1023, 7), (1 << 20, 6)] {
+            let c = ScheduleCache::new(budget, shards);
+            assert_eq!(c.shard_budgets.iter().sum::<usize>(), budget);
+            let (mn, mx) = (
+                *c.shard_budgets.iter().min().unwrap(),
+                *c.shard_budgets.iter().max().unwrap(),
+            );
+            assert!(mx - mn <= 1, "budget {budget} over {shards} shards: {mn}..{mx}");
+        }
+    }
+
+    #[test]
+    fn admission_refuses_cheap_schedules() {
+        // single shard, budget fits exactly 2 entries
+        let (_, probe) = entry_for(0);
+        let budget = probe.bytes * 2;
+        let cache = ScheduleCache::new(budget, 1);
+        let expensive: Vec<_> =
+            [1u64, 2].iter().map(|&s| entry_with_cost(s, 1_000_000_000)).collect();
+        for (fp, v) in &expensive {
+            assert_eq!(cache.insert(*fp, v.clone()), Admission::Inserted);
+        }
+        // a near-free schedule would have to evict a 1s-to-recompute one:
+        // caching it is a net loss, so admission must refuse it
+        let (cheap_fp, cheap) = entry_with_cost(3, 10);
+        assert_eq!(cache.insert(cheap_fp, cheap), Admission::RejectedCheap);
+        let st = cache.stats();
+        assert_eq!(st.rejected_cheap, 1);
+        assert_eq!(st.entries, 2, "victims must survive");
+        assert!(cache.probe(cheap_fp).is_none());
+        assert!(cache.probe(expensive[0].0).is_some());
+        assert!(cache.probe(expensive[1].0).is_some());
+        // a MORE expensive newcomer still displaces the LRU entry
+        let (rich_fp, rich) = entry_with_cost(4, 10_000_000_000);
+        assert_eq!(cache.insert(rich_fp, rich), Admission::Inserted);
+        assert!(cache.probe(rich_fp).is_some());
+        assert!(cache.probe(expensive[0].0).is_none(), "LRU victim evicted");
+    }
+
+    #[test]
+    fn admission_aging_prevents_permanent_starvation() {
+        // workload shift: the cache is full of heavyweight schedules
+        // nobody requests anymore, and every new request is cheap.  The
+        // first attempts must be refused (that's the policy), but each
+        // rejection ages the victims, so the newcomer wins after
+        // ~log2(cost ratio) attempts instead of never.
+        let (_, probe) = entry_for(0);
+        let budget = probe.bytes * 2;
+        let cache = ScheduleCache::new(budget, 1);
+        for (fp, v) in [1u64, 2].iter().map(|&s| entry_with_cost(s, 1 << 30)) {
+            assert_eq!(cache.insert(fp, v), Admission::Inserted);
+        }
+        let (new_fp, newcomer) = entry_with_cost(3, 1 << 10);
+        let mut attempts = 0u32;
+        loop {
+            attempts += 1;
+            match cache.insert(new_fp, newcomer.clone()) {
+                Admission::Inserted => break,
+                Admission::RejectedCheap => {
+                    assert!(attempts < 64, "admission starved the cache permanently")
+                }
+                other => panic!("unexpected outcome {other:?}"),
+            }
+        }
+        // cost ratio 2^20, one halving per rejection, admission at
+        // equality (not-strictly-cheaper) → exactly 20 rejections
+        assert_eq!(attempts, 21, "aging must decay one halving per rejection");
+        assert!(cache.probe(new_fp).is_some(), "newcomer resident after the shift");
+        assert_eq!(cache.stats().rejected_cheap, 20);
+    }
+
+    #[test]
+    fn a_hit_resets_admission_aging() {
+        // an entry that keeps being REQUESTED keeps its full cost: the
+        // decay only kills entries nobody asks for
+        let (_, probe) = entry_for(0);
+        let cache = ScheduleCache::new(probe.bytes, 1); // fits exactly 1
+        let (hot_fp, hot) = entry_with_cost(1, 1 << 30);
+        assert_eq!(cache.insert(hot_fp, hot), Admission::Inserted);
+        let (cheap_fp, cheap) = entry_with_cost(2, 1 << 10);
+        for _ in 0..100 {
+            assert_eq!(cache.insert(cheap_fp, cheap.clone()), Admission::RejectedCheap);
+            assert!(cache.get(hot_fp).is_some(), "hit resets the age");
+        }
+        assert!(cache.probe(hot_fp).is_some(), "a requested entry is never starved out");
+    }
+
+    #[test]
+    fn admission_is_free_while_the_shard_has_room() {
+        // no eviction needed → even a zero-cost entry is admitted
+        let cache = ScheduleCache::new(1 << 20, 1);
+        let (fp, cheap) = entry_with_cost(11, 0);
+        assert_eq!(cache.insert(fp, cheap), Admission::Inserted);
+        assert!(cache.probe(fp).is_some());
     }
 
     #[test]
     fn reinsert_same_key_refreshes_without_growth() {
         let cache = ScheduleCache::new(1 << 20, 2);
         let (fp, val) = entry_for(9);
-        cache.insert(fp, val.clone());
-        cache.insert(fp, val.clone());
+        assert_eq!(cache.insert(fp, val.clone()), Admission::Inserted);
+        assert_eq!(cache.insert(fp, val.clone()), Admission::Refreshed);
         let st = cache.stats();
         assert_eq!(st.entries, 1);
         assert_eq!(st.bytes, val.bytes);
         assert_eq!(st.insertions, 2);
+    }
+
+    #[test]
+    fn warm_insert_does_not_count_as_live_insertion() {
+        let cache = ScheduleCache::new(1 << 20, 2);
+        let (fp, val) = entry_for(21);
+        assert_eq!(cache.insert_warm(fp, val), Admission::Inserted);
+        let st = cache.stats();
+        assert_eq!(st.entries, 1);
+        assert_eq!(st.insertions, 0, "warm loads are not live insertions");
+        assert_eq!(cache.insertion_count(), 0);
+    }
+
+    #[test]
+    fn warm_insert_never_evicts_a_warmer_record() {
+        // snapshots replay MRU-first; once the shard is full the colder
+        // tail must be refused, never displace the hotter prefix
+        let (_, probe) = entry_for(0);
+        let cache = ScheduleCache::new(probe.bytes * 2, 1);
+        let items: Vec<_> = (1..=3).map(entry_for).collect();
+        assert_eq!(cache.insert_warm(items[0].0, items[0].1.clone()), Admission::Inserted);
+        assert_eq!(cache.insert_warm(items[1].0, items[1].1.clone()), Admission::Inserted);
+        assert_eq!(
+            cache.insert_warm(items[2].0, items[2].1.clone()),
+            Admission::RejectedFull,
+            "a full shard refuses warm records instead of evicting"
+        );
+        let st = cache.stats();
+        assert_eq!(st.entries, 2);
+        assert_eq!(st.evictions, 0);
+        assert_eq!(st.rejected_cheap + st.rejected_oversize, 0, "not a live rejection");
+        assert!(cache.probe(items[0].0).is_some());
+        assert!(cache.probe(items[1].0).is_some());
+        assert!(cache.probe(items[2].0).is_none());
+        // oversize warm records are likewise invisible to live counters
+        let tiny = ScheduleCache::new(probe.bytes / 2, 1);
+        assert_eq!(
+            tiny.insert_warm(items[0].0, items[0].1.clone()),
+            Admission::RejectedOversize
+        );
+        assert_eq!(tiny.stats().rejected_oversize, 0, "warm refusal must not count live");
+    }
+
+    #[test]
+    fn export_preserves_per_shard_recency_order() {
+        let cache = ScheduleCache::new(1 << 20, 1);
+        let items: Vec<_> = (1..=3).map(entry_for).collect();
+        for (fp, v) in &items {
+            cache.insert(*fp, v.clone());
+        }
+        // touch item 0: order (LRU→MRU) becomes 1, 2, 0
+        cache.get(items[0].0);
+        let exported: Vec<Fingerprint> = cache.export().iter().map(|(fp, _)| *fp).collect();
+        assert_eq!(exported, vec![items[1].0, items[2].0, items[0].0]);
     }
 
     #[test]

@@ -91,6 +91,18 @@ impl LatencyHisto {
 /// `requests == served_hit + served_miss + served_joined + rejected + errors`
 /// holds at any quiescent point (each optimize request ends in exactly
 /// one outcome); the e2e suite asserts it against a live server.
+///
+/// Cache-side accounting (insertions, evictions, admission rejections)
+/// lives in `cache::CacheStats`, and persistence accounting (warm
+/// loads, snapshots) in `proto::PersistInfo` — all three surface in one
+/// `stats` response.  Warm-loaded entries deliberately bypass the
+/// insertion counter, so `cache.insertions` keeps meaning "computed
+/// schedules admitted live".  The secondary identity
+/// `cache.insertions == served_miss` therefore survives a snapshot
+/// restart, but it only holds while the admission policy admits every
+/// computed schedule — each RejectedCheap/RejectedOversize outcome
+/// leaves `insertions` one short of `served_miss` (the e2e suites
+/// assert the identity on workloads with zero rejections).
 #[derive(Default)]
 pub struct ServiceMetrics {
     /// optimize requests received

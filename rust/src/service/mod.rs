@@ -15,6 +15,10 @@
 //! * [`queue`] — bounded job queue with singleflight dedup: concurrent
 //!   identical requests share ONE optimizer run; overload is rejected
 //!   with a retry-after hint instead of queued without bound.
+//! * [`persist`] — cache snapshots (length-prefixed, checksummed,
+//!   atomically renamed): the cache survives restarts, so a redeploy
+//!   doesn't re-pay every optimizer run.  Warm-loaded at bind, flushed
+//!   periodically and at shutdown.
 //! * [`metrics`] — lock-free counters + latency histograms behind the
 //!   `stats` endpoint.
 //! * [`proto`] — the JSON-lines request/response protocol (std-only,
@@ -32,14 +36,16 @@ pub mod cache;
 pub mod client;
 pub mod fingerprint;
 pub mod metrics;
+pub mod persist;
 pub mod proto;
 pub mod queue;
 pub mod server;
 
-pub use cache::{CacheStats, CachedSchedule, ScheduleCache};
+pub use cache::{Admission, CacheStats, CachedSchedule, ScheduleCache};
 pub use client::Client;
 pub use fingerprint::{fingerprint, Fingerprint};
 pub use metrics::{MetricsSnapshot, ServiceMetrics};
+pub use persist::{LoadReport, SaveReport};
 pub use proto::GraphSpec;
 pub use queue::{JobQueue, Submit};
 pub use server::{ServeOpts, Server};

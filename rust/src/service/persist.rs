@@ -1,0 +1,700 @@
+//! Schedule-cache persistence: snapshot `fingerprint → CachedSchedule`
+//! to disk so `epgraph serve` restarts warm.
+//!
+//! The cache is the product of real optimizer seconds; losing it on
+//! every restart re-pays that cost for traffic the serving layer exists
+//! to amortize.  This module writes the resident entries to a single
+//! snapshot file and loads them back on startup.
+//!
+//! ## Format (version 1)
+//!
+//! ```text
+//! header:  magic "EPGSNAP1" (8 bytes) · format version u32 LE
+//! record:  payload_len u32 LE · checksum u64 LE · payload bytes
+//! ...      (records until EOF)
+//! ```
+//!
+//! The checksum is the first lane of the service fingerprint hasher run
+//! over the payload.  Every scalar is fixed-width little-endian; arrays
+//! are length-prefixed.  The payload carries the fingerprint and the
+//! complete `CachedSchedule` (schedule, layout, breakdown, bytes, cost),
+//! so a warm hit is bit-identical to the pre-restart hit — including
+//! the reported `partition_ms` and admission cost.
+//!
+//! ## Robustness contract
+//!
+//! * `save` writes to a sibling `.tmp` file, fsyncs, and renames — a
+//!   crash mid-write can never clobber the previous good snapshot.
+//! * `load` never panics on hostile input: a magic/version mismatch
+//!   skips the whole file; a bad checksum or undecodable payload skips
+//!   that record and keeps going (the length prefix preserves framing);
+//!   a truncated tail stops the scan.  Records that the cache refuses
+//!   (e.g. snapshot written under a larger byte budget) are counted,
+//!   not fatal.  All skip counts surface in the [`LoadReport`] the
+//!   server logs.
+//! * Records are written per shard from MRU to LRU and replayed through
+//!   `ScheduleCache::insert_warm`, which never evicts — so when the
+//!   budget shrank across the restart, the HOTTEST entries win the
+//!   space and the cold tail is refused (admitting LRU-first would keep
+//!   exactly the wrong subset).  A final promote pass in reverse order
+//!   then rebuilds the true recency, and the live-insertion counter
+//!   identity survives the restart.
+
+use std::io::Write;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::{OptBreakdown, OptimizedSchedule};
+use crate::partition::special::Pattern;
+use crate::partition::EdgePartition;
+use crate::sparse::Perm;
+
+use super::cache::{CachedSchedule, ScheduleCache};
+use super::fingerprint::{Fingerprint, Hasher};
+
+const MAGIC: &[u8; 8] = b"EPGSNAP1";
+const VERSION: u32 = 1;
+/// Per-record sanity bound: no legitimate schedule record approaches
+/// this (a 2^26-edge assignment is ~256 MiB); anything larger is a
+/// corrupt length prefix, and trusting it would let one flipped bit
+/// turn the loader into an allocation bomb.
+const MAX_RECORD_BYTES: usize = 1 << 30;
+/// Whole-file bound for the same reason.
+const MAX_SNAPSHOT_BYTES: u64 = 8 << 30;
+
+/// What `save` wrote.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SaveReport {
+    pub entries: usize,
+    pub bytes: usize,
+    /// Cold-tail records dropped because the snapshot reached
+    /// MAX_SNAPSHOT_BYTES — records go out MRU-first, so everything
+    /// dropped is colder than everything written.  Without this cap a
+    /// huge cache would write a snapshot the next startup's own size
+    /// guard rejects wholesale.
+    pub skipped: usize,
+}
+
+/// What `load` did — the server logs this at startup and exposes it
+/// through `stats`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LoadReport {
+    /// Records admitted into the cache.
+    pub loaded: u64,
+    /// Records skipped: bad checksum, undecodable payload, truncated
+    /// tail, or an insane length prefix (scan stops on the last two).
+    pub skipped_corrupt: u64,
+    /// Records the cache refused (over budget / warm shard full).
+    pub skipped_budget: u64,
+    /// Whole file skipped: magic or format-version mismatch.
+    pub version_mismatch: bool,
+    /// Whole file skipped: larger than MAX_SNAPSHOT_BYTES (distinct
+    /// from `skipped_corrupt` so "one bad record" and "entire file
+    /// discarded" can't be confused in the logs/stats).
+    pub oversize_file: bool,
+}
+
+// ------------------------------------------------------------ byte codec
+
+#[derive(Default)]
+struct W {
+    buf: Vec<u8>,
+}
+
+impl W {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32v(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64v(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64v(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    fn dur(&mut self, d: Duration) {
+        self.u64v(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    fn u32s(&mut self, v: &[u32]) {
+        self.u64v(v.len() as u64);
+        for &x in v {
+            self.u32v(x);
+        }
+    }
+}
+
+struct R<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> R<'a> {
+    fn new(b: &'a [u8]) -> R<'a> {
+        R { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.i.checked_add(n)?;
+        if end > self.b.len() {
+            return None;
+        }
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Some(s)
+    }
+
+    fn u8(&mut self) -> Option<u8> {
+        self.take(1).map(|s| s[0])
+    }
+
+    fn u32v(&mut self) -> Option<u32> {
+        self.take(4).map(|s| u32::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    fn u64v(&mut self) -> Option<u64> {
+        self.take(8).map(|s| u64::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    fn f64v(&mut self) -> Option<f64> {
+        self.u64v().map(f64::from_bits)
+    }
+
+    fn dur(&mut self) -> Option<Duration> {
+        self.u64v().map(Duration::from_nanos)
+    }
+
+    fn u32s(&mut self) -> Option<Vec<u32>> {
+        let n = self.u64v()?;
+        // a hostile length can't exceed the remaining payload
+        if n > (self.b.len() - self.i) as u64 / 4 {
+            return None;
+        }
+        let mut v = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            v.push(self.u32v()?);
+        }
+        Some(v)
+    }
+
+    fn done(&self) -> bool {
+        self.i == self.b.len()
+    }
+}
+
+// ------------------------------------------------------- record payload
+
+fn encode_record(fp: Fingerprint, e: &CachedSchedule) -> Vec<u8> {
+    let mut w = W::default();
+    w.u64v(fp.0);
+    w.u64v(fp.1);
+    let s = &e.schedule;
+    w.u64v(s.partition.k as u64);
+    w.u32s(&s.partition.assign);
+    w.u32s(&s.layout.new_of_old);
+    w.u32s(&s.layout.old_of_new);
+    w.u64v(s.quality);
+    w.f64v(s.balance);
+    w.dur(s.partition_time);
+    match s.used_special {
+        None => w.u8(0),
+        Some(Pattern::Clique) => w.u8(1),
+        Some(Pattern::Path) => w.u8(2),
+        Some(Pattern::CompleteBipartite { a, b }) => {
+            w.u8(3);
+            w.u64v(a as u64);
+            w.u64v(b as u64);
+        }
+        Some(Pattern::Grid) => w.u8(4),
+    }
+    w.u8(s.skipped_low_reuse as u8);
+    let bd = &e.breakdown;
+    for d in [bd.reuse_check, bd.special_detect, bd.partition, bd.layout, bd.quality, bd.total] {
+        w.dur(d);
+    }
+    w.u64v(e.bytes as u64);
+    w.u64v(e.cost_ns);
+    w.buf
+}
+
+fn decode_record(payload: &[u8]) -> Option<(Fingerprint, CachedSchedule)> {
+    let mut r = R::new(payload);
+    let fp = Fingerprint(r.u64v()?, r.u64v()?);
+    let k = r.u64v()? as usize;
+    if k == 0 {
+        return None;
+    }
+    let assign = r.u32s()?;
+    if assign.iter().any(|&b| b as usize >= k) {
+        return None;
+    }
+    let new_of_old = r.u32s()?;
+    let old_of_new = r.u32s()?;
+    if new_of_old.len() != old_of_new.len() {
+        return None;
+    }
+    let quality = r.u64v()?;
+    let balance = r.f64v()?;
+    let partition_time = r.dur()?;
+    let used_special = match r.u8()? {
+        0 => None,
+        1 => Some(Pattern::Clique),
+        2 => Some(Pattern::Path),
+        3 => {
+            let a = r.u64v()? as usize;
+            let b = r.u64v()? as usize;
+            Some(Pattern::CompleteBipartite { a, b })
+        }
+        4 => Some(Pattern::Grid),
+        _ => return None,
+    };
+    let skipped_low_reuse = match r.u8()? {
+        0 => false,
+        1 => true,
+        _ => return None,
+    };
+    let breakdown = OptBreakdown {
+        reuse_check: r.dur()?,
+        special_detect: r.dur()?,
+        partition: r.dur()?,
+        layout: r.dur()?,
+        quality: r.dur()?,
+        total: r.dur()?,
+    };
+    let bytes = r.u64v()? as usize;
+    let cost_ns = r.u64v()?;
+    if !r.done() {
+        return None; // trailing bytes: framing drift, don't trust it
+    }
+    let schedule = OptimizedSchedule {
+        partition: EdgePartition { k, assign },
+        layout: Perm { new_of_old, old_of_new },
+        quality,
+        balance,
+        partition_time,
+        used_special,
+        skipped_low_reuse,
+    };
+    Some((fp, CachedSchedule { schedule, breakdown, bytes, cost_ns }))
+}
+
+fn checksum(payload: &[u8]) -> u64 {
+    let mut h = Hasher::new();
+    h.write_bytes(payload);
+    h.finish().0
+}
+
+// ------------------------------------------------------------ save/load
+
+/// Snapshot every resident entry to `path` (atomic: tmp + fsync +
+/// rename).  The parent directory must exist.  Records go out MRU-first
+/// (the reverse of `export`'s LRU→MRU order) so a warm load under a
+/// smaller budget admits the most valuable entries — see the module doc.
+/// Writing streams record by record through a `BufWriter` (the format
+/// is record-framed; nothing needs the whole image in memory), and
+/// stops at MAX_SNAPSHOT_BYTES dropping only the cold tail, so `load`'s
+/// whole-file size guard can never reject what `save` produced.
+pub fn save(cache: &ScheduleCache, path: &Path) -> std::io::Result<SaveReport> {
+    let entries = cache.export();
+    let tmp = tmp_path(path);
+    let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    let mut written = (MAGIC.len() + 4) as u64;
+    let mut report = SaveReport::default();
+    for (fp, e) in entries.iter().rev() {
+        let payload = encode_record(*fp, e);
+        let record_len = 4 + 8 + payload.len() as u64;
+        if written + record_len > MAX_SNAPSHOT_BYTES {
+            report.skipped = entries.len() - report.entries;
+            break;
+        }
+        w.write_all(&(payload.len() as u32).to_le_bytes())?;
+        w.write_all(&checksum(&payload).to_le_bytes())?;
+        w.write_all(&payload)?;
+        written += record_len;
+        report.entries += 1;
+    }
+    report.bytes = written as usize;
+    let f = w.into_inner().map_err(|e| e.into_error())?;
+    f.sync_all()?;
+    std::fs::rename(&tmp, path)?;
+    Ok(report)
+}
+
+fn tmp_path(path: &Path) -> std::path::PathBuf {
+    let mut name = path.file_name().unwrap_or_default().to_os_string();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Read into `buf` until it is full or EOF; returns the bytes read.
+/// (`read_exact` folds truncation into an error; the loader needs to
+/// tell "clean EOF at a record boundary" from "truncated mid-record".)
+fn read_full<R: std::io::Read>(r: &mut R, buf: &mut [u8]) -> std::io::Result<usize> {
+    let mut n = 0;
+    while n < buf.len() {
+        let k = r.read(&mut buf[n..])?;
+        if k == 0 {
+            break;
+        }
+        n += k;
+    }
+    Ok(n)
+}
+
+/// Warm-load a snapshot into `cache`.  A missing file is a fresh start
+/// (empty report); anything else is handled per the robustness contract
+/// (module doc) — this function only errors on I/O failures reading an
+/// existing file, never on malformed content.  The file is streamed
+/// record by record (peak extra memory = one record), mirroring `save`.
+pub fn load(cache: &ScheduleCache, path: &Path) -> std::io::Result<LoadReport> {
+    let mut report = LoadReport::default();
+    let file = match std::fs::File::open(path) {
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(report),
+        Err(e) => return Err(e),
+        Ok(f) => f,
+    };
+    if file.metadata()?.len() > MAX_SNAPSHOT_BYTES {
+        report.oversize_file = true;
+        return Ok(report);
+    }
+    let mut r = std::io::BufReader::new(file);
+    let mut header = [0u8; 12];
+    let n = read_full(&mut r, &mut header)?;
+    if n < header.len()
+        || &header[..MAGIC.len()] != MAGIC
+        || u32::from_le_bytes(header[MAGIC.len()..].try_into().unwrap()) != VERSION
+    {
+        report.version_mismatch = true;
+        return Ok(report);
+    }
+    let mut admitted: Vec<Fingerprint> = Vec::new();
+    loop {
+        let mut len4 = [0u8; 4];
+        let n = read_full(&mut r, &mut len4)?;
+        if n == 0 {
+            break; // clean EOF at a record boundary
+        }
+        if n < len4.len() {
+            report.skipped_corrupt += 1; // truncated inside a length prefix
+            break;
+        }
+        let len = u32::from_le_bytes(len4) as usize;
+        if len > MAX_RECORD_BYTES {
+            report.skipped_corrupt += 1; // insane length: framing is gone
+            break;
+        }
+        let mut sum8 = [0u8; 8];
+        if read_full(&mut r, &mut sum8)? < sum8.len() {
+            report.skipped_corrupt += 1;
+            break;
+        }
+        let sum = u64::from_le_bytes(sum8);
+        let mut payload = vec![0u8; len];
+        if read_full(&mut r, &mut payload)? < len {
+            report.skipped_corrupt += 1; // truncated tail
+            break;
+        }
+        if checksum(&payload) != sum {
+            report.skipped_corrupt += 1;
+            continue; // framing intact: keep scanning
+        }
+        let Some((fp, entry)) = decode_record(&payload) else {
+            report.skipped_corrupt += 1;
+            continue;
+        };
+        use super::cache::Admission;
+        match cache.insert_warm(fp, Arc::new(entry)) {
+            Admission::Inserted | Admission::Refreshed => {
+                report.loaded += 1;
+                admitted.push(fp);
+            }
+            Admission::RejectedOversize | Admission::RejectedCheap | Admission::RejectedFull => {
+                report.skipped_budget += 1;
+            }
+        }
+    }
+    // records were admitted MRU-first, which leaves recency inverted;
+    // promote in reverse admission order (LRU→MRU) to rebuild it
+    for fp in admitted.iter().rev() {
+        cache.probe(*fp);
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{optimize_graph_with_breakdown, OptOptions};
+    use crate::graph::gen;
+    use crate::service::fingerprint::fingerprint;
+
+    fn tmp_file(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("epgraph-persist-{tag}-{}.snap", std::process::id()))
+    }
+
+    /// Entries exercising every schedule shape: the full EP pipeline, a
+    /// special-pattern shortcut, and a low-reuse skip.
+    fn varied_entries() -> Vec<(Fingerprint, Arc<CachedSchedule>)> {
+        let workloads: Vec<(crate::graph::Graph, OptOptions)> = vec![
+            (gen::cfd_mesh(12, 12, 1), OptOptions { k: 4, seed: 1, ..Default::default() }),
+            (gen::cfd_mesh(10, 14, 2), OptOptions { k: 8, seed: 2, ..Default::default() }),
+            // grid trips the special-pattern shortcut (used_special = Grid)
+            (gen::grid_mesh(12, 12), OptOptions { k: 4, ..Default::default() }),
+            // star graph trips the low-reuse skip
+            (
+                gen::complete_bipartite(400, 1),
+                OptOptions { k: 4, reuse_threshold: 2.1, use_special_patterns: false, ..Default::default() },
+            ),
+            (gen::path(64), OptOptions { k: 2, block_cap: Some(16), ..Default::default() }),
+        ];
+        workloads
+            .into_iter()
+            .map(|(g, o)| {
+                let (sched, bd) = optimize_graph_with_breakdown(&g, &o);
+                (fingerprint(&g, &o), Arc::new(CachedSchedule::new(sched, bd)))
+            })
+            .collect()
+    }
+
+    fn assert_entry_bit_identical(a: &CachedSchedule, b: &CachedSchedule) {
+        assert_eq!(a.schedule.partition.k, b.schedule.partition.k);
+        assert_eq!(a.schedule.partition.assign, b.schedule.partition.assign);
+        assert_eq!(a.schedule.layout.new_of_old, b.schedule.layout.new_of_old);
+        assert_eq!(a.schedule.layout.old_of_new, b.schedule.layout.old_of_new);
+        assert_eq!(a.schedule.quality, b.schedule.quality);
+        assert_eq!(a.schedule.balance.to_bits(), b.schedule.balance.to_bits());
+        assert_eq!(a.schedule.partition_time, b.schedule.partition_time);
+        assert_eq!(a.schedule.used_special, b.schedule.used_special);
+        assert_eq!(a.schedule.skipped_low_reuse, b.schedule.skipped_low_reuse);
+        assert_eq!(a.breakdown.reuse_check, b.breakdown.reuse_check);
+        assert_eq!(a.breakdown.special_detect, b.breakdown.special_detect);
+        assert_eq!(a.breakdown.partition, b.breakdown.partition);
+        assert_eq!(a.breakdown.layout, b.breakdown.layout);
+        assert_eq!(a.breakdown.quality, b.breakdown.quality);
+        assert_eq!(a.breakdown.total, b.breakdown.total);
+        assert_eq!(a.bytes, b.bytes);
+        assert_eq!(a.cost_ns, b.cost_ns);
+    }
+
+    #[test]
+    fn roundtrip_is_bit_identical_across_schedule_shapes() {
+        // property: snapshot → load reproduces every entry bit for bit,
+        // across all schedule variants (EP, special-pattern, low-reuse,
+        // block-capped) — the restart warm-start contract
+        let path = tmp_file("roundtrip");
+        let src = ScheduleCache::new(1 << 22, 4);
+        let entries = varied_entries();
+        for (fp, e) in &entries {
+            src.insert(*fp, e.clone());
+        }
+        let saved = save(&src, &path).unwrap();
+        assert_eq!(saved.entries, entries.len());
+
+        let dst = ScheduleCache::new(1 << 22, 4);
+        let report = load(&dst, &path).unwrap();
+        assert_eq!(
+            report,
+            LoadReport { loaded: entries.len() as u64, ..Default::default() }
+        );
+        for (fp, e) in &entries {
+            let got = dst.probe(*fp).expect("warm-loaded entry");
+            assert_entry_bit_identical(&got, e);
+        }
+        let st = dst.stats();
+        assert_eq!(st.entries, entries.len());
+        assert_eq!(st.insertions, 0, "warm loads must not count as live insertions");
+        // a second save of the loaded cache is byte-stable modulo shard
+        // interleave: same record count, same total size
+        let path2 = tmp_file("roundtrip2");
+        let saved2 = save(&dst, &path2).unwrap();
+        assert_eq!((saved2.entries, saved2.bytes), (saved.entries, saved.bytes));
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&path2).ok();
+    }
+
+    #[test]
+    fn export_order_restores_recency_across_restart() {
+        let path = tmp_file("recency");
+        let src = ScheduleCache::new(1 << 22, 1);
+        let entries = varied_entries();
+        for (fp, e) in &entries {
+            src.insert(*fp, e.clone());
+        }
+        src.get(entries[0].0); // promote entry 0 to MRU
+        save(&src, &path).unwrap();
+        let dst = ScheduleCache::new(1 << 22, 1);
+        load(&dst, &path).unwrap();
+        let order: Vec<Fingerprint> = dst.export().iter().map(|(fp, _)| *fp).collect();
+        let want: Vec<Fingerprint> = src.export().iter().map(|(fp, _)| *fp).collect();
+        assert_eq!(order, want, "LRU→MRU replay must reconstruct recency");
+        assert_eq!(*order.last().unwrap(), entries[0].0, "promoted entry stays MRU");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_snapshot_is_a_fresh_start() {
+        let cache = ScheduleCache::new(1 << 20, 2);
+        let report = load(&cache, Path::new("/definitely/not/here.snap")).unwrap();
+        assert_eq!(report, LoadReport::default());
+        assert_eq!(cache.stats().entries, 0);
+    }
+
+    #[test]
+    fn truncated_snapshot_loads_the_intact_prefix() {
+        let path = tmp_file("trunc");
+        let src = ScheduleCache::new(1 << 22, 1);
+        let entries = varied_entries();
+        for (fp, e) in &entries {
+            src.insert(*fp, e.clone());
+        }
+        save(&src, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // cut at several points: mid-header, mid-length, mid-payload
+        for cut in [3, MAGIC.len() + 2, MAGIC.len() + 4 + 2, full.len() - 7, full.len() - 1] {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let dst = ScheduleCache::new(1 << 22, 1);
+            let report = load(&dst, &path).unwrap(); // must not panic
+            if cut < MAGIC.len() + 4 {
+                assert!(report.version_mismatch, "cut {cut}: header gone");
+            } else {
+                assert!(!report.version_mismatch);
+                assert_eq!(report.skipped_corrupt, 1, "cut {cut}: one truncated tail");
+                assert!(report.loaded < entries.len() as u64, "cut {cut}");
+                assert_eq!(report.loaded as usize, dst.stats().entries);
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_checksum_skips_that_record_and_keeps_going() {
+        let path = tmp_file("checksum");
+        let src = ScheduleCache::new(1 << 22, 1);
+        let entries = varied_entries();
+        for (fp, e) in &entries {
+            src.insert(*fp, e.clone());
+        }
+        save(&src, &path).unwrap();
+        let mut data = std::fs::read(&path).unwrap();
+        // flip one byte inside the FIRST record's payload (after header,
+        // length prefix, and checksum); framing stays intact
+        let first_payload = MAGIC.len() + 4 + 4 + 8;
+        data[first_payload + 10] ^= 0xFF;
+        std::fs::write(&path, &data).unwrap();
+        let dst = ScheduleCache::new(1 << 22, 1);
+        let report = load(&dst, &path).unwrap();
+        assert_eq!(report.skipped_corrupt, 1);
+        assert_eq!(report.loaded, entries.len() as u64 - 1, "later records survive");
+        assert_eq!(dst.stats().entries, entries.len() - 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn version_mismatch_skips_the_whole_file() {
+        let path = tmp_file("version");
+        let src = ScheduleCache::new(1 << 22, 1);
+        for (fp, e) in varied_entries() {
+            src.insert(fp, e);
+        }
+        save(&src, &path).unwrap();
+        let mut data = std::fs::read(&path).unwrap();
+        data[MAGIC.len()] = 0xFE; // bump the version field
+        std::fs::write(&path, &data).unwrap();
+        let dst = ScheduleCache::new(1 << 22, 1);
+        let report = load(&dst, &path).unwrap();
+        assert!(report.version_mismatch);
+        assert_eq!(report.loaded, 0);
+        assert_eq!(dst.stats().entries, 0);
+        // bad magic too
+        data[0] = b'X';
+        std::fs::write(&path, &data).unwrap();
+        assert!(load(&dst, &path).unwrap().version_mismatch);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn snapshot_larger_than_budget_warm_loads_gracefully() {
+        let path = tmp_file("budget");
+        let src = ScheduleCache::new(1 << 22, 1);
+        let entries = varied_entries();
+        for (fp, e) in &entries {
+            src.insert(*fp, e.clone());
+        }
+        save(&src, &path).unwrap();
+        // a cache whose whole budget is smaller than one entry: every
+        // record is refused by admission, none are fatal
+        let tiny = ScheduleCache::new(8, 1);
+        let report = load(&tiny, &path).unwrap();
+        assert_eq!(report.loaded, 0);
+        assert_eq!(report.skipped_budget, entries.len() as u64);
+        assert_eq!(tiny.stats().entries, 0);
+        // a budget fitting ~2 entries keeps the MRU-priority subset and
+        // stays under it: records replay MRU-first and warm inserts
+        // never evict, so the most recently used entries win the space
+        let max_bytes = entries.iter().map(|(_, e)| e.bytes).max().unwrap();
+        let small = ScheduleCache::new(max_bytes * 2, 1);
+        let report = load(&small, &path).unwrap();
+        assert!(report.loaded >= 1, "{report:?}");
+        assert_eq!(report.loaded + report.skipped_budget, entries.len() as u64);
+        let st = small.stats();
+        assert!(st.bytes <= st.byte_budget);
+        assert!(st.evictions == 0, "warm loading must never evict");
+        assert!(
+            small.probe(entries.last().unwrap().0).is_some(),
+            "the MRU entry must be among the survivors"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn garbage_and_empty_files_never_panic() {
+        let path = tmp_file("garbage");
+        for content in [&b""[..], b"short", b"EPGSNAP1", b"not a snapshot at all, just text"] {
+            std::fs::write(&path, content).unwrap();
+            let cache = ScheduleCache::new(1 << 20, 2);
+            let report = load(&cache, &path).unwrap();
+            assert!(report.version_mismatch || report.skipped_corrupt > 0 || report.loaded == 0);
+            assert_eq!(cache.stats().entries, 0);
+        }
+        // valid header, garbage body with an insane length prefix
+        let mut data = Vec::new();
+        data.extend_from_slice(MAGIC);
+        data.extend_from_slice(&VERSION.to_le_bytes());
+        data.extend_from_slice(&u32::MAX.to_le_bytes());
+        data.extend_from_slice(&[0u8; 32]);
+        std::fs::write(&path, &data).unwrap();
+        let cache = ScheduleCache::new(1 << 20, 2);
+        let report = load(&cache, &path).unwrap();
+        assert_eq!(report.skipped_corrupt, 1, "insane length must stop the scan");
+        assert_eq!(report.loaded, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn save_is_atomic_over_an_existing_snapshot() {
+        let path = tmp_file("atomic");
+        let a = ScheduleCache::new(1 << 22, 1);
+        let entries = varied_entries();
+        a.insert(entries[0].0, entries[0].1.clone());
+        save(&a, &path).unwrap();
+        let b = ScheduleCache::new(1 << 22, 1);
+        for (fp, e) in &entries {
+            b.insert(*fp, e.clone());
+        }
+        save(&b, &path).unwrap(); // overwrite via rename
+        let dst = ScheduleCache::new(1 << 22, 1);
+        let report = load(&dst, &path).unwrap();
+        assert_eq!(report.loaded, entries.len() as u64);
+        assert!(!tmp_path(&path).exists(), "tmp file must not linger");
+        std::fs::remove_file(&path).ok();
+    }
+}

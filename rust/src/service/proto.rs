@@ -11,14 +11,18 @@
 //! {"op":"shutdown"}                               → ack, then the server drains and exits
 //! ```
 //!
-//! A graph spec is either inline CSR content —
+//! A graph spec is inline CSR content —
 //! `{"n":4,"edges":[0,1,1,2,2,3]}` with a FLAT `[u0,v0,u1,v1,…]` pair
 //! array in edge-id order — or a named deterministic generator,
 //! `{"gen":"cfd_mesh","args":[24,24,1]}` (the generators of
 //! `graph::gen`; args are the generator's integer parameters in
-//! signature order).  Both forms are resolved to the same `Graph` before
-//! fingerprinting, so a generator spec and its expanded edge list are
-//! the *same* cache entry — content-addressing happens after resolution.
+//! signature order) — or a named server-side matrix,
+//! `{"matrix":"cant"}`, resolved from the daemon's `--matrix-dir` as
+//! `<dir>/<name>.mtx` (MatrixMarket) and turned into its data-affinity
+//! graph, so SPMV clients send a name instead of megabytes of edges.
+//! All forms are resolved to a concrete `Graph` BEFORE fingerprinting,
+//! so a generator/matrix spec and its expanded edge list are the *same*
+//! cache entry — content-addressing happens after resolution.
 //!
 //! `opts` keys (all optional, defaults = `OptOptions::default()`):
 //! `k`, `seed`, `reuse_threshold`, `method`, `use_special_patterns`,
@@ -32,15 +36,18 @@
 //! pushed back and the client should retry.
 
 use std::collections::BTreeMap;
+use std::path::Path;
 
 use crate::coordinator::OptOptions;
 use crate::graph::{gen, Graph};
 use crate::partition::Method;
+use crate::sparse::matrix_market;
 use crate::util::json::Json;
 
 use super::cache::{CachedSchedule, CacheStats};
 use super::fingerprint::Fingerprint;
 use super::metrics::{LatencySnapshot, MetricsSnapshot};
+use super::persist::LoadReport;
 
 /// Sanity bounds on inline/generated graphs — this is a loopback
 /// service, but a malformed request must fail cleanly, not OOM.
@@ -54,6 +61,9 @@ pub enum GraphSpec {
     Inline { n: usize, edges: Vec<(u32, u32)> },
     /// Named deterministic generator from `graph::gen`.
     Gen { name: String, args: Vec<u64> },
+    /// Named MatrixMarket file resolved server-side from `--matrix-dir`
+    /// (`<dir>/<name>.mtx` → its data-affinity graph).
+    Matrix { name: String },
 }
 
 impl GraphSpec {
@@ -71,6 +81,9 @@ impl GraphSpec {
     }
 
     pub fn from_json(j: &Json) -> Result<GraphSpec, String> {
+        if let Some(name) = j.get("matrix").and_then(Json::as_str) {
+            return Ok(GraphSpec::Matrix { name: name.to_string() });
+        }
         if let Some(name) = j.get("gen").and_then(Json::as_str) {
             let args = match j.get("args") {
                 None => Vec::new(),
@@ -86,7 +99,7 @@ impl GraphSpec {
         let n = j
             .get("n")
             .and_then(Json::as_u64)
-            .ok_or("graph needs either {gen,args} or {n,edges}")? as usize;
+            .ok_or("graph needs one of {matrix}, {gen,args} or {n,edges}")? as usize;
         let flat = j.get("edges").and_then(Json::as_arr).ok_or("graph.edges must be an array")?;
         if flat.len() % 2 != 0 {
             return Err("graph.edges must hold an even number of endpoints (flat pairs)".into());
@@ -127,18 +140,66 @@ impl GraphSpec {
                     Json::Arr(args.iter().map(|&a| Json::Num(a as f64)).collect()),
                 );
             }
+            GraphSpec::Matrix { name } => {
+                m.insert("matrix".to_string(), Json::Str(name.clone()));
+            }
         }
         Json::Obj(m)
+    }
+
+    /// Resolve without server-side context: inline and generator specs
+    /// only.  `Matrix` specs need a matrix directory — use
+    /// [`GraphSpec::resolve_with`] (the server does).
+    pub fn resolve(&self) -> Result<Graph, String> {
+        self.resolve_with(None)
     }
 
     /// Resolve to a concrete graph.  Generator output is a pure function
     /// of `(name, args)`, so client and server always agree on content.
     /// The size guard runs on the *predicted* vertex/edge counts BEFORE
     /// any generation — a hostile `clique:65536` request must fail in
-    /// O(1), not after a multi-gigabyte allocation.
-    pub fn resolve(&self) -> Result<Graph, String> {
+    /// O(1), not after a multi-gigabyte allocation.  Matrix specs load
+    /// `<matrix_dir>/<name>.mtx` and take its data-affinity graph; the
+    /// name charset is restricted (no path traversal) by the loader.
+    pub fn resolve_with(&self, matrix_dir: Option<&Path>) -> Result<Graph, String> {
         match self {
             GraphSpec::Inline { n, edges } => Ok(Graph::from_edges(*n, edges.clone())),
+            GraphSpec::Matrix { name } => {
+                let Some(dir) = matrix_dir else {
+                    return Err(format!(
+                        "matrix spec '{name}' needs a server-side matrix directory \
+                         (start the daemon with --matrix-dir)"
+                    ));
+                };
+                // size guard on the DECLARED dims, before the body is
+                // parsed — same O(1)-fail principle as the generator
+                // estimates below.  The affinity graph has
+                // n = nrows + ncols and m ≥ nnz (symmetric mirroring
+                // only adds), so these bounds are necessary conditions.
+                let coo = matrix_market::read_named(dir, name, |nrows, ncols, nnz| {
+                    if nrows.saturating_add(ncols) > MAX_VERTICES || nnz > MAX_EDGES {
+                        return Err(format!(
+                            "declared size too large for the service \
+                             ({nrows}x{ncols}, nnz={nnz}; \
+                             n ≤ {MAX_VERTICES}, m ≤ {MAX_EDGES})"
+                        ));
+                    }
+                    Ok(())
+                })
+                .map_err(|e| format!("matrix '{name}': {e}"))?;
+                let g = coo.affinity_graph();
+                // belt and braces: mirrored symmetric entries can still
+                // push m past the declared nnz
+                if g.n > MAX_VERTICES || g.m() > MAX_EDGES {
+                    return Err(format!(
+                        "matrix '{name}' too large for the service \
+                         (n={} m={}; n ≤ {MAX_VERTICES}, m ≤ {MAX_EDGES})",
+                        g.n,
+                        g.m()
+                    ));
+                }
+                Ok(g)
+            }
             GraphSpec::Gen { name, args } => {
                 let arg = |i: usize| -> Result<usize, String> {
                     args.get(i)
@@ -367,8 +428,20 @@ fn latency_json(l: &LatencySnapshot) -> Json {
     ])
 }
 
+/// Persistence counters for the stats response (`None` when the daemon
+/// runs without `--snapshot`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PersistInfo {
+    /// What the startup warm-load did.
+    pub warm: LoadReport,
+    /// Snapshots written so far (periodic flushes + final).
+    pub snapshots_written: u64,
+    /// Entry count of the most recent snapshot.
+    pub last_snapshot_entries: u64,
+}
+
 /// The `stats` response: service counters + raw cache counters +
-/// latency summaries + pool shape.
+/// latency summaries + pool shape + persistence counters.
 pub fn stats_response(
     m: &MetricsSnapshot,
     c: &CacheStats,
@@ -376,7 +449,20 @@ pub fn stats_response(
     workers: usize,
     queue_cap: usize,
     queue_pending: usize,
+    persist: Option<PersistInfo>,
 ) -> Json {
+    let persist_json = match persist {
+        None => Json::Null,
+        Some(p) => obj(vec![
+            ("warm_loaded", num(p.warm.loaded as f64)),
+            ("warm_skipped_corrupt", num(p.warm.skipped_corrupt as f64)),
+            ("warm_skipped_budget", num(p.warm.skipped_budget as f64)),
+            ("warm_version_mismatch", Json::Bool(p.warm.version_mismatch)),
+            ("warm_oversize_file", Json::Bool(p.warm.oversize_file)),
+            ("snapshots_written", num(p.snapshots_written as f64)),
+            ("last_snapshot_entries", num(p.last_snapshot_entries as f64)),
+        ]),
+    };
     obj(vec![
         ("ok", Json::Bool(true)),
         ("requests", num(m.requests as f64)),
@@ -398,8 +484,11 @@ pub fn stats_response(
                 ("misses", num(c.misses as f64)),
                 ("insertions", num(c.insertions as f64)),
                 ("evictions", num(c.evictions as f64)),
+                ("rejected_oversize", num(c.rejected_oversize as f64)),
+                ("rejected_cheap", num(c.rejected_cheap as f64)),
             ]),
         ),
+        ("persist", persist_json),
         ("queue_wait_ms", latency_json(&m.queue_wait)),
         ("optimize_ms", latency_json(&m.optimize)),
         ("uptime_ms", num(uptime_ms)),
@@ -518,6 +607,55 @@ mod tests {
             Request::Optimize { opts: parsed, .. } => assert_eq!(parsed.seed, 9),
             _ => panic!("wrong request kind"),
         }
+    }
+
+    #[test]
+    fn matrix_spec_roundtrips_and_requires_a_dir() {
+        let spec = GraphSpec::Matrix { name: "cant".into() };
+        let opts = OptOptions::default();
+        let line = optimize_request(&spec, &opts).dump();
+        match parse_request(&Json::parse(&line).unwrap()).unwrap() {
+            Request::Optimize { graph, .. } => assert_eq!(graph, spec),
+            _ => panic!("wrong request kind"),
+        }
+        // without a server-side matrix dir the spec cannot resolve
+        let err = spec.resolve().unwrap_err();
+        assert!(err.contains("--matrix-dir"), "{err}");
+    }
+
+    #[test]
+    fn matrix_spec_resolves_and_shares_the_inline_fingerprint() {
+        let dir = std::env::temp_dir().join(format!("epgraph-mtx-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("tiny.mtx"),
+            "%%MatrixMarket matrix coordinate real general\n3 3 4\n1 1 1.0\n2 2 1.0\n3 3 1.0\n1 3 2.0\n",
+        )
+        .unwrap();
+        let spec = GraphSpec::Matrix { name: "tiny".into() };
+        let g = spec.resolve_with(Some(&dir)).unwrap();
+        // the affinity graph of a 3x3 matrix with 4 nonzeros: 6 vertices
+        // (cols + rows), one task per nonzero
+        assert_eq!((g.n, g.m()), (6, 4));
+        // a matrix spec and its expanded edge list are one cache entry
+        let inline = GraphSpec::Inline { n: g.n, edges: g.edges.clone() };
+        let opts = OptOptions::default();
+        assert_eq!(
+            fingerprint(&g, &opts),
+            fingerprint(&inline.resolve().unwrap(), &opts),
+            "content-addressing must see through the matrix form"
+        );
+        // unknown and traversal-shaped names fail cleanly
+        assert!(GraphSpec::Matrix { name: "missing".into() }
+            .resolve_with(Some(&dir))
+            .is_err());
+        for bad in ["../tiny", "a/b", "", "x\\y"] {
+            let err = GraphSpec::Matrix { name: bad.into() }
+                .resolve_with(Some(&dir))
+                .unwrap_err();
+            assert!(err.contains("matrix"), "{bad}: {err}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -36,7 +36,7 @@ use super::metrics::ServiceMetrics;
 /// One in-flight optimization; shared by the worker and every waiter.
 pub struct Job {
     pub fp: Fingerprint,
-    graph: Graph,
+    graph: Arc<Graph>,
     opts: OptOptions,
     enqueued: Instant,
     state: Mutex<JobState>,
@@ -102,11 +102,14 @@ impl JobQueue {
     }
 
     /// Submit a request.  `cache` is re-checked under the queue lock to
-    /// close the probe/enqueue race (see module doc).
+    /// close the probe/enqueue race (see module doc).  The graph rides
+    /// in an `Arc` end to end (the server's resolver already produces
+    /// one): no outcome — hit, join, rejection, or fresh enqueue — ever
+    /// copies the edge list.
     pub fn submit(
         &self,
         fp: Fingerprint,
-        graph: Graph,
+        graph: &Arc<Graph>,
         opts: OptOptions,
         cache: &ScheduleCache,
     ) -> Submit {
@@ -131,7 +134,7 @@ impl JobQueue {
         }
         let job = Arc::new(Job {
             fp,
-            graph,
+            graph: graph.clone(),
             opts,
             enqueued: Instant::now(),
             state: Mutex::new(JobState::default()),
@@ -163,6 +166,12 @@ impl JobQueue {
     /// Publish a finished job: cache first, then drop it from the
     /// in-flight map, then wake the waiters (the order is the
     /// singleflight-race contract — see module doc).
+    ///
+    /// The cache applies its admission policy here: a schedule cheaper
+    /// to recompute than the entries it would evict is refused.  The
+    /// waiters are unaffected either way — they hold the `Arc` — so a
+    /// rejection only means the next identical request recomputes, which
+    /// is by construction cheaper than what eviction would have cost.
     fn finish(
         &self,
         job: &Arc<Job>,
@@ -226,10 +235,10 @@ mod tests {
     use crate::graph::gen;
     use crate::service::fingerprint::fingerprint;
 
-    fn workload(seed: u64) -> (Fingerprint, Graph, OptOptions) {
+    fn workload(seed: u64) -> (Fingerprint, Arc<Graph>, OptOptions) {
         let g = gen::cfd_mesh(12, 12, seed);
         let opts = OptOptions { k: 4, seed, ..Default::default() };
-        (fingerprint(&g, &opts), g, opts)
+        (fingerprint(&g, &opts), Arc::new(g), opts)
     }
 
     #[test]
@@ -239,10 +248,10 @@ mod tests {
         let cache = ScheduleCache::new(1 << 20, 2);
         for seed in [1, 2] {
             let (fp, g, o) = workload(seed);
-            assert!(matches!(q.submit(fp, g, o, &cache), Submit::New(_)));
+            assert!(matches!(q.submit(fp, &g, o, &cache), Submit::New(_)));
         }
         let (fp, g, o) = workload(3);
-        match q.submit(fp, g, o, &cache) {
+        match q.submit(fp, &g, o, &cache) {
             Submit::Rejected { retry_after_ms, reason } => {
                 assert!(retry_after_ms > 0);
                 assert_eq!(reason, "queue full");
@@ -251,7 +260,7 @@ mod tests {
         }
         // identical fingerprints still join — dedup needs no capacity
         let (fp, g, o) = workload(1);
-        assert!(matches!(q.submit(fp, g, o, &cache), Submit::Joined(_)));
+        assert!(matches!(q.submit(fp, &g, o, &cache), Submit::Joined(_)));
         assert_eq!(q.pending_len(), 2);
     }
 
@@ -265,7 +274,7 @@ mod tests {
         let mut jobs = Vec::new();
         let mut news = 0;
         for _ in 0..8 {
-            match q.submit(fp, g.clone(), o.clone(), &cache) {
+            match q.submit(fp, &g, o.clone(), &cache) {
                 Submit::New(j) => {
                     news += 1;
                     jobs.push(j);
@@ -292,7 +301,7 @@ mod tests {
         }
         // the result landed in the cache before the job left the
         // in-flight map, so a follow-up submit is a Hit
-        match q.submit(fp, g, o, &cache) {
+        match q.submit(fp, &g, o, &cache) {
             Submit::Hit(entry) => assert!(Arc::ptr_eq(&entry, &first)),
             _ => panic!("expected a cache hit after completion"),
         }
@@ -309,7 +318,7 @@ mod tests {
         let mut jobs = Vec::new();
         for seed in 10..14 {
             let (fp, g, o) = workload(seed);
-            match q.submit(fp, g, o, &cache) {
+            match q.submit(fp, &g, o, &cache) {
                 Submit::New(j) => jobs.push(j),
                 _ => panic!("fresh workloads must enqueue"),
             }
@@ -328,7 +337,7 @@ mod tests {
         // and post-shutdown submits are rejected
         let (fp, g, o) = workload(99);
         assert!(matches!(
-            q.submit(fp, g, o, &cache),
+            q.submit(fp, &g, o, &cache),
             Submit::Rejected { retry_after_ms: 0, .. }
         ));
     }

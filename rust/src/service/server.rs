@@ -27,24 +27,97 @@
 //! IS the parallelism; cranking per-job threads as well would thrash.
 //! Results are unaffected either way (thread-count invariance).
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
+use crate::graph::Graph;
 use crate::util::json::Json;
 use crate::util::par;
 
 use super::cache::ScheduleCache;
 use super::fingerprint::fingerprint;
 use super::metrics::{ServiceMetrics, Uptime};
-use super::proto::{self, Request};
+use super::persist::{self, LoadReport};
+use super::proto::{self, PersistInfo, Request};
 use super::queue::{JobQueue, Submit};
 
 /// How often a blocked handler read re-checks the shutdown flag.
 const READ_TICK: Duration = Duration::from_millis(250);
+
+/// Hard cap on one request line.  Sized above the worst protocol-legal
+/// request — an inline spec at MAX_EDGES is 2·2²⁶ endpoint numbers of
+/// ≤ 8 digits plus separators ≈ 1.3 GiB of JSON — but bounded: a
+/// newline-less byte flood must close the connection, not grow the
+/// per-connection buffer until the OOM killer takes the daemon (and the
+/// unflushed cache) down.
+const MAX_LINE_BYTES: usize = 2 << 30;
+
+/// After a failed snapshot write, skip this many flusher ticks before
+/// retrying (~30 s at the 250 ms tick).  Bounds the cost of a full
+/// disk to one re-export per backoff window instead of one per tick,
+/// while still guaranteeing an eventual retry even on a low-churn
+/// server that never accumulates `snapshot_every` new insertions again.
+const SNAPSHOT_FAILURE_BACKOFF_TICKS: u64 = 120;
+
+/// Byte budget for the resolved-matrix memo.  Graphs that fit are
+/// pinned for the process lifetime (repeat requests skip the disk);
+/// once the budget is spent, further matrices are re-resolved per
+/// request instead of pinned — a directory of huge matrices must not
+/// grow an unbounded shadow of the byte-budgeted schedule cache.
+const MATRIX_MEMO_MAX_BYTES: usize = 2 << 30;
+
+/// Rough resident size of a resolved graph (edge list + CSR incidence).
+fn graph_bytes(g: &Graph) -> usize {
+    g.m() * (8 + 8) + g.n * 4 + 64
+}
+
+enum LineRead {
+    /// A complete newline-terminated line landed in the buffer.
+    Line,
+    /// Clean EOF (a final unterminated line may still be buffered).
+    Eof,
+    /// The line exceeded MAX_LINE_BYTES — framing is unrecoverable.
+    TooLong,
+}
+
+/// Bounded line framing over `fill_buf`/`consume`.  Unlike
+/// `read_until`, this returns control (with everything so far kept in
+/// `buf`) on every read timeout, and enforces the line cap *while*
+/// accumulating — `read_until` only returns at the delimiter, so a
+/// newline-less flood could grow the buffer without bound.
+fn read_line_bounded(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+) -> std::io::Result<LineRead> {
+    loop {
+        let available = reader.fill_buf()?;
+        if available.is_empty() {
+            return Ok(LineRead::Eof);
+        }
+        match available.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                buf.extend_from_slice(&available[..=pos]);
+                reader.consume(pos + 1);
+                return Ok(LineRead::Line);
+            }
+            None => {
+                let n = available.len();
+                buf.extend_from_slice(available);
+                reader.consume(n);
+                if buf.len() > MAX_LINE_BYTES {
+                    return Ok(LineRead::TooLong);
+                }
+            }
+        }
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct ServeOpts {
@@ -60,6 +133,17 @@ pub struct ServeOpts {
     pub cache_bytes: usize,
     /// Cache shard count.
     pub shards: usize,
+    /// Snapshot file for cache persistence: warm-loaded at bind, flushed
+    /// periodically and on shutdown.  None = in-memory only (the old
+    /// behaviour).
+    pub snapshot: Option<PathBuf>,
+    /// Periodic-flush trigger: snapshot after this many new insertions
+    /// since the last write (checked on a 250 ms tick).  0 disables the
+    /// periodic flush (shutdown still snapshots).
+    pub snapshot_every: u64,
+    /// Directory of `<name>.mtx` files backing `{"matrix":…}` specs.
+    /// None = matrix specs are rejected.
+    pub matrix_dir: Option<PathBuf>,
 }
 
 impl Default for ServeOpts {
@@ -71,8 +155,25 @@ impl Default for ServeOpts {
             queue_cap: 64,
             cache_bytes: 64 << 20,
             shards: 8,
+            snapshot: None,
+            snapshot_every: 64,
+            matrix_dir: None,
         }
     }
+}
+
+/// Persistence wiring of one server (present iff `--snapshot` is set).
+struct Persistence {
+    path: PathBuf,
+    warm: LoadReport,
+    snapshots_written: AtomicU64,
+    last_snapshot_entries: AtomicU64,
+    /// `cache.insertion_count()` at the last snapshot — the periodic
+    /// flusher compares against it on every tick.
+    flushed_insertions: AtomicU64,
+    /// Remaining flusher ticks to skip after a failed save (only the
+    /// flusher thread touches it; see SNAPSHOT_FAILURE_BACKOFF_TICKS).
+    backoff_ticks: AtomicU64,
 }
 
 pub struct Server {
@@ -82,24 +183,55 @@ pub struct Server {
     metrics: ServiceMetrics,
     uptime: Uptime,
     shutdown: AtomicBool,
+    persistence: Option<Persistence>,
+    /// Resolved matrix graphs, keyed by name — a repeat `{"matrix":…}`
+    /// request must not re-read and re-parse the `.mtx` on the hit path.
+    /// Byte-bounded (MATRIX_MEMO_MAX_BYTES); content is pinned at
+    /// first load (edit the file → restart the daemon).
+    matrix_memo: Mutex<HashMap<String, Arc<Graph>>>,
     opts: ServeOpts,
 }
 
 impl Server {
     /// Bind on loopback.  Non-loopback binds are refused — the protocol
-    /// is unauthenticated by design and must stay host-local.
+    /// is unauthenticated by design and must stay host-local.  With
+    /// `opts.snapshot` set, the schedule cache is warm-loaded here, so
+    /// the first request after a restart can already hit.
     pub fn bind(opts: ServeOpts) -> Result<Server> {
         let addr = SocketAddr::from(([127, 0, 0, 1], opts.port));
         let listener = TcpListener::bind(addr).map_err(|e| anyhow!("bind {addr}: {e}"))?;
+        let cache = ScheduleCache::new(opts.cache_bytes, opts.shards);
+        let persistence = match &opts.snapshot {
+            None => None,
+            Some(path) => {
+                let warm = persist::load(&cache, path)
+                    .map_err(|e| anyhow!("warm-loading snapshot {path:?}: {e}"))?;
+                Some(Persistence {
+                    path: path.clone(),
+                    warm,
+                    snapshots_written: AtomicU64::new(0),
+                    last_snapshot_entries: AtomicU64::new(0),
+                    flushed_insertions: AtomicU64::new(0),
+                    backoff_ticks: AtomicU64::new(0),
+                })
+            }
+        };
         Ok(Server {
             listener,
             queue: JobQueue::new(opts.queue_cap),
-            cache: ScheduleCache::new(opts.cache_bytes, opts.shards),
+            cache,
             metrics: ServiceMetrics::new(),
             uptime: Uptime::new(),
             shutdown: AtomicBool::new(false),
+            persistence,
+            matrix_memo: Mutex::new(HashMap::new()),
             opts,
         })
+    }
+
+    /// What the startup warm-load did (None without `--snapshot`).
+    pub fn warm_report(&self) -> Option<LoadReport> {
+        self.persistence.as_ref().map(|p| p.warm)
     }
 
     pub fn local_addr(&self) -> SocketAddr {
@@ -112,11 +244,18 @@ impl Server {
 
     /// Serve until a `shutdown` request arrives.  Blocks; run it on a
     /// dedicated thread if the caller needs to keep going (tests do).
+    /// With persistence configured, a flusher thread snapshots the cache
+    /// whenever `snapshot_every` new schedules accumulated, and a final
+    /// snapshot is written after the drain — so the very last computed
+    /// schedule survives the restart too.
     pub fn run(&self) -> Result<()> {
         let workers = self.workers();
         std::thread::scope(|s| {
             for _ in 0..workers {
                 s.spawn(|| self.queue.run_worker(&self.cache, &self.metrics));
+            }
+            if self.persistence.is_some() {
+                s.spawn(|| self.flush_loop());
             }
             loop {
                 match self.listener.accept() {
@@ -137,7 +276,85 @@ impl Server {
             // no new requests can arrive; drain the backlog and stop
             self.queue.shutdown();
         });
+        // workers have drained and published every finished job — the
+        // final snapshot sees the complete cache
+        self.snapshot_now();
         Ok(())
+    }
+
+    /// Periodic flusher: on a shutdown-aware tick, snapshot once
+    /// `snapshot_every` insertions accumulated since the last write.
+    fn flush_loop(&self) {
+        let every = self.opts.snapshot_every;
+        while !self.shutdown.load(Ordering::Acquire) {
+            std::thread::sleep(READ_TICK);
+            if every == 0 {
+                continue; // periodic flush disabled; shutdown still saves
+            }
+            let p = self.persistence.as_ref().expect("flush_loop requires persistence");
+            let backoff = p.backoff_ticks.load(Ordering::Relaxed);
+            if backoff > 0 {
+                p.backoff_ticks.store(backoff - 1, Ordering::Relaxed);
+                continue;
+            }
+            let since = self
+                .cache
+                .insertion_count()
+                .saturating_sub(p.flushed_insertions.load(Ordering::Relaxed));
+            if since >= every {
+                self.snapshot_now();
+            }
+        }
+    }
+
+    /// Write one snapshot (best effort: a full disk must not take the
+    /// serving path down — the failure is logged and counters stay put).
+    fn snapshot_now(&self) {
+        let Some(p) = &self.persistence else { return };
+        let insertions = self.cache.insertion_count();
+        match persist::save(&self.cache, &p.path) {
+            Ok(report) => {
+                p.snapshots_written.fetch_add(1, Ordering::Relaxed);
+                p.last_snapshot_entries.store(report.entries as u64, Ordering::Relaxed);
+                p.flushed_insertions.store(insertions, Ordering::Relaxed);
+                p.backoff_ticks.store(0, Ordering::Relaxed);
+            }
+            Err(e) => {
+                // keep the watermark where it was — the data is NOT on
+                // disk — but back the flusher off so a full disk costs
+                // one re-export per backoff window, not one per 250 ms
+                // tick.  The retry fires after the backoff even if no
+                // new insertions arrive (low-churn servers would never
+                // reach the insertion trigger again); the shutdown path
+                // always makes a final attempt and logs its own failure.
+                eprintln!("epgraph serve: snapshot {:?} failed: {e}", p.path);
+                p.backoff_ticks.store(SNAPSHOT_FAILURE_BACKOFF_TICKS, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn persist_info(&self) -> Option<PersistInfo> {
+        self.persistence.as_ref().map(|p| PersistInfo {
+            warm: p.warm,
+            snapshots_written: p.snapshots_written.load(Ordering::Relaxed),
+            last_snapshot_entries: p.last_snapshot_entries.load(Ordering::Relaxed),
+        })
+    }
+
+    /// Decode and serve one buffered request line (shared by the
+    /// newline-terminated and EOF-final paths of `handle_conn`).
+    /// Returns `(stop, write_ok)`.
+    fn serve_buffered_line(&self, buf: &[u8], writer: &mut TcpStream) -> (bool, bool) {
+        let mut stop = false;
+        let mut write_ok = true;
+        let text = String::from_utf8_lossy(buf);
+        let text = text.trim();
+        if !text.is_empty() {
+            let resp = self.dispatch_line(text, &mut stop);
+            write_ok =
+                writeln!(writer, "{}", resp.dump()).and_then(|_| writer.flush()).is_ok();
+        }
+        (stop, write_ok)
     }
 
     /// Raise the shutdown flag and unblock the acceptor.
@@ -153,28 +370,46 @@ impl Server {
         let Ok(read_half) = stream.try_clone() else { return };
         let mut reader = BufReader::new(read_half);
         let mut writer = stream;
-        // read_line preserves partially-read bytes in `line` on a
-        // timeout, so the buffer is only cleared after a full line
-        let mut line = String::new();
+        // raw byte framing: `read_line_bounded` accumulates into `buf`
+        // across timeout ticks with no loss.  (`read_line` would
+        // discard the whole partial read whenever a timeout split a
+        // multi-byte UTF-8 character — its internal guard truncates on
+        // invalid UTF-8 even for transient errors.)  Decoding happens
+        // once per complete line.
+        let mut buf: Vec<u8> = Vec::new();
         loop {
-            match reader.read_line(&mut line) {
-                Ok(0) => break, // client closed
-                Ok(_) => {
-                    let text = line.trim();
-                    let mut stop = false;
-                    if !text.is_empty() {
-                        let resp = self.dispatch_line(text, &mut stop);
-                        if writeln!(writer, "{}", resp.dump()).and_then(|_| writer.flush()).is_err()
-                        {
-                            break;
-                        }
-                    }
-                    line.clear();
+            match read_line_bounded(&mut reader, &mut buf) {
+                Ok(LineRead::Eof) => {
+                    // client closed.  A timeout tick may have buffered a
+                    // final unterminated request before the close; serve
+                    // it (and honor a shutdown) instead of dropping it.
+                    let (stop, _) = self.serve_buffered_line(&buf, &mut writer);
                     if stop {
+                        self.begin_shutdown();
+                    }
+                    break;
+                }
+                Ok(LineRead::TooLong) => {
+                    ServiceMetrics::bump(&self.metrics.bad_requests);
+                    let resp = proto::error_response(
+                        &format!("request line exceeds {MAX_LINE_BYTES} bytes"),
+                        None,
+                    );
+                    let _ =
+                        writeln!(writer, "{}", resp.dump()).and_then(|_| writer.flush());
+                    break; // framing is gone; drop the connection
+                }
+                Ok(LineRead::Line) => {
+                    let (stop, write_ok) = self.serve_buffered_line(&buf, &mut writer);
+                    buf.clear();
+                    if stop {
+                        // the shutdown must proceed even when the ack
+                        // write failed — a fire-and-forget client may
+                        // close before reading it
                         self.begin_shutdown();
                         break;
                     }
-                    if self.shutdown.load(Ordering::Acquire) {
+                    if !write_ok || self.shutdown.load(Ordering::Acquire) {
                         break;
                     }
                 }
@@ -220,6 +455,7 @@ impl Server {
                 self.workers(),
                 self.opts.queue_cap,
                 self.queue.pending_len(),
+                self.persist_info(),
             ),
             Request::Shutdown => {
                 *stop = true;
@@ -229,12 +465,38 @@ impl Server {
         }
     }
 
+    /// Resolve a spec server-side.  Matrix specs go through a per-name
+    /// memo: the `.mtx` is read and parsed once (outside the memo lock),
+    /// and every repeat request — the case the cache exists for — is an
+    /// `Arc` clone, never a graph copy.  The lock is only ever held for
+    /// a map lookup/insert.  The memo is byte-bounded
+    /// (MATRIX_MEMO_MAX_BYTES): graphs past the budget are served but
+    /// not pinned, so memo memory can never grow with the directory.
+    fn resolve_spec(&self, spec: &proto::GraphSpec) -> Result<Arc<Graph>, String> {
+        if let proto::GraphSpec::Matrix { name } = spec {
+            if let Some(g) = self.matrix_memo.lock().unwrap().get(name) {
+                return Ok(g.clone());
+            }
+            let g = Arc::new(spec.resolve_with(self.opts.matrix_dir.as_deref())?);
+            let mut memo = self.matrix_memo.lock().unwrap();
+            let resident: usize = memo.values().map(|v| graph_bytes(v)).sum();
+            if resident + graph_bytes(&g) <= MATRIX_MEMO_MAX_BYTES {
+                // a concurrent first request may have raced us here; keep
+                // whichever Arc landed first so handlers share one graph
+                return Ok(memo.entry(name.clone()).or_insert(g).clone());
+            }
+            Ok(g)
+        } else {
+            spec.resolve().map(Arc::new)
+        }
+    }
+
     fn serve_optimize(&self, graph: proto::GraphSpec, mut opts: crate::coordinator::OptOptions) -> Json {
         ServiceMetrics::bump(&self.metrics.requests);
         // the pool owns parallelism; per-job partitioner threads are a
         // server policy, never a client knob (results are invariant)
         opts.threads = self.opts.partition_threads;
-        let g = match graph.resolve() {
+        let g = match self.resolve_spec(&graph) {
             Ok(g) => g,
             Err(e) => {
                 ServiceMetrics::bump(&self.metrics.errors);
@@ -246,7 +508,7 @@ impl Server {
             ServiceMetrics::bump(&self.metrics.served_hit);
             return proto::optimize_response(fp, "hit", &entry, None, None);
         }
-        match self.queue.submit(fp, g, opts, &self.cache) {
+        match self.queue.submit(fp, &g, opts, &self.cache) {
             Submit::Hit(entry) => {
                 // the job finished between the probe above and the
                 // enqueue — still a cache hit from the client's view

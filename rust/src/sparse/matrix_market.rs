@@ -33,6 +33,17 @@ impl From<std::io::Error> for MmError {
 }
 
 pub fn read_matrix_market<R: Read>(r: R) -> Result<Coo, MmError> {
+    read_matrix_market_checked(r, |_, _, _| Ok(()))
+}
+
+/// Same, with a size hook: `check(nrows, ncols, nnz)` runs right after
+/// the size line and before any entry is read, so a caller with a size
+/// bound (the serving layer's matrix specs) rejects oversize inputs in
+/// O(header) instead of after parsing a multi-GB body.
+pub fn read_matrix_market_checked<R: Read>(
+    r: R,
+    check: impl FnOnce(usize, usize, usize) -> Result<(), String>,
+) -> Result<Coo, MmError> {
     let mut lines = BufReader::new(r).lines();
     let header = lines
         .next()
@@ -70,6 +81,7 @@ pub fn read_matrix_market<R: Read>(r: R) -> Result<Coo, MmError> {
         return Err(MmError::Parse("size line needs 3 numbers".into()));
     }
     let (nrows, ncols, nnz) = (dims[0], dims[1], dims[2]);
+    check(nrows, ncols, nnz).map_err(MmError::Parse)?;
 
     let mut coo = Coo::new(nrows, ncols);
     let mut read = 0usize;
@@ -113,6 +125,30 @@ pub fn read_matrix_market_file(path: &str) -> Result<Coo, MmError> {
     read_matrix_market(std::fs::File::open(path)?)
 }
 
+/// Resolve `<dir>/<name>.mtx` — the server-side loader behind
+/// `{"matrix":"cant"}` specs (`service::proto`).  The name charset is
+/// restricted to `[A-Za-z0-9._-]` minus `..`, so a request can never
+/// traverse out of the configured matrix directory.  `check` sees the
+/// declared `(nrows, ncols, nnz)` before the body is read (see
+/// [`read_matrix_market_checked`]).
+pub fn read_named(
+    dir: &std::path::Path,
+    name: &str,
+    check: impl FnOnce(usize, usize, usize) -> Result<(), String>,
+) -> Result<Coo, MmError> {
+    let safe = !name.is_empty()
+        && !name.contains("..")
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'));
+    if !safe {
+        return Err(MmError::Parse(format!(
+            "invalid matrix name '{name}' (allowed: letters, digits, '-', '_', '.')"
+        )));
+    }
+    read_matrix_market_checked(std::fs::File::open(dir.join(format!("{name}.mtx")))?, check)
+}
+
 pub fn write_matrix_market<W: Write>(w: &mut W, coo: &Coo) -> std::io::Result<()> {
     writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
     writeln!(w, "{} {} {}", coo.nrows, coo.ncols, coo.nnz())?;
@@ -152,6 +188,32 @@ mod tests {
         assert_eq!(a.rows, b.rows);
         assert_eq!(a.cols, b.cols);
         assert_eq!(a.vals, b.vals);
+    }
+
+    #[test]
+    fn read_named_resolves_and_rejects_traversal() {
+        let dir = std::env::temp_dir().join(format!("epgraph-mm-named-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("ok.mtx"),
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 3.0\n",
+        )
+        .unwrap();
+        let ok = |_, _, _| Ok(());
+        let m = read_named(&dir, "ok", ok).unwrap();
+        assert_eq!((m.nrows, m.ncols, m.nnz()), (2, 2, 1));
+        assert!(matches!(read_named(&dir, "missing", ok), Err(MmError::Io(_))));
+        for bad in ["", "..", "../ok", "a/b", "a\\b", "ok.mtx/../../etc/passwd"] {
+            assert!(
+                matches!(read_named(&dir, bad, ok), Err(MmError::Parse(_))),
+                "name '{bad}' must be rejected"
+            );
+        }
+        // the size hook fires before the body is read
+        let err = read_named(&dir, "ok", |r, c, z| Err(format!("too big: {r}x{c}/{z}")))
+            .unwrap_err();
+        assert!(err.to_string().contains("too big: 2x2/1"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

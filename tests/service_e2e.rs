@@ -13,7 +13,12 @@
 //!   * the `stats` counters are consistent with the request mix
 //!     (requests = hit + miss + joined + rejected + errors, one
 //!     optimizer run per distinct workload);
-//!   * shutdown drains cleanly and `run()` returns.
+//!   * shutdown drains cleanly and `run()` returns;
+//!   * with `--snapshot`, a restart warm-loads the cache and the full
+//!     workload mix replays with ZERO misses and byte-identical
+//!     responses (the PR 5 persistence contract);
+//!   * `{"matrix":…}` specs resolve server-side from `--matrix-dir`
+//!     and share cache entries with their inline form.
 
 use std::sync::Arc;
 
@@ -183,6 +188,156 @@ fn health_and_malformed_requests_do_not_disturb_serving() {
 
     roundtrip(&mut client, &proto::simple_request("shutdown").dump());
     handle.join().expect("server thread");
+}
+
+/// The restart warm-start contract (ISSUE 5 acceptance): after a clean
+/// shutdown and a restart on the same `--snapshot` path, a repeat of the
+/// workload mix reports ZERO misses for previously-served fingerprints
+/// and every response is bit-identical to the pre-restart run.
+#[test]
+fn snapshot_restart_serves_warm_hits_bit_identically() {
+    let snap = std::env::temp_dir()
+        .join(format!("epgraph-e2e-snap-{}.bin", std::process::id()));
+    std::fs::remove_file(&snap).ok();
+    let opts_for = |snap: &std::path::Path| ServeOpts {
+        port: 0,
+        threads: 2,
+        snapshot: Some(snap.to_path_buf()),
+        ..Default::default()
+    };
+    let workloads: Vec<(GraphSpec, OptOptions)> = vec![
+        (
+            GraphSpec::Gen { name: "cfd_mesh".into(), args: vec![14, 14, 3] },
+            OptOptions { k: 8, seed: 5, ..Default::default() },
+        ),
+        (
+            GraphSpec::Gen { name: "cfd_mesh".into(), args: vec![12, 16, 4] },
+            OptOptions { k: 4, seed: 6, ..Default::default() },
+        ),
+    ];
+    let lines: Vec<String> = workloads
+        .iter()
+        .map(|(spec, opts)| proto::optimize_request(spec, opts).dump())
+        .collect();
+
+    // ---- run 1: cold start, serve each workload twice, shut down
+    let (server, addr, handle) = start_server(opts_for(&snap));
+    assert_eq!(
+        server.warm_report().map(|w| w.loaded),
+        Some(0),
+        "no snapshot yet — cold start"
+    );
+    let mut client = connect(addr);
+    let mut hit_dumps = Vec::new();
+    for line in &lines {
+        let first = roundtrip(&mut client, line);
+        assert_eq!(first.get("cached").and_then(Json::as_str), Some("miss"));
+        let second = roundtrip(&mut client, line);
+        assert_eq!(second.get("cached").and_then(Json::as_str), Some("hit"));
+        hit_dumps.push(second.dump());
+    }
+    roundtrip(&mut client, &proto::simple_request("shutdown").dump());
+    handle.join().expect("server thread"); // final snapshot written here
+    assert!(snap.exists(), "shutdown must leave a snapshot behind");
+
+    // ---- run 2: warm start from the snapshot, repeat the full mix
+    let (server, addr, handle) = start_server(opts_for(&snap));
+    let warm = server.warm_report().expect("persistence configured");
+    assert_eq!(warm.loaded, workloads.len() as u64, "{warm:?}");
+    assert_eq!(warm.skipped_corrupt, 0);
+    let mut client = connect(addr);
+    for (line, want) in lines.iter().zip(&hit_dumps).cycle().take(2 * lines.len()) {
+        let resp = roundtrip(&mut client, line);
+        assert_eq!(
+            resp.get("cached").and_then(Json::as_str),
+            Some("hit"),
+            "previously-served fingerprint must hit after restart: {resp:?}"
+        );
+        assert_eq!(
+            &resp.dump(),
+            want,
+            "warm response must be bit-identical to the pre-restart hit"
+        );
+    }
+    let stats = roundtrip(&mut client, &proto::simple_request("stats").dump());
+    assert_eq!(get_u64(&stats, "served_miss"), 0, "zero misses after warm start: {stats:?}");
+    assert_eq!(get_u64(&stats, "served_hit"), 2 * lines.len() as u64);
+    let persist = stats.get("persist").expect("persist stats present");
+    assert_eq!(get_u64(persist, "warm_loaded"), workloads.len() as u64);
+    let cache = stats.get("cache").expect("cache stats");
+    assert_eq!(get_u64(cache, "insertions"), 0, "warm loads are not live insertions");
+    roundtrip(&mut client, &proto::simple_request("shutdown").dump());
+    handle.join().expect("server thread");
+    std::fs::remove_file(&snap).ok();
+}
+
+/// `{"matrix":"name"}` specs resolve from the daemon's matrix directory:
+/// the client ships a name, the server loads `<dir>/<name>.mtx`, and the
+/// fingerprint is computed post-resolution so the matrix form and its
+/// expanded edge list share one cache entry.
+#[test]
+fn matrix_specs_resolve_server_side_and_share_the_cache_entry() {
+    let dir = std::env::temp_dir().join(format!("epgraph-e2e-mtx-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // an 8x8 band matrix: enough nonzeros per row/col to clear the
+    // default reuse threshold in the affinity graph
+    let mut mtx = String::from("%%MatrixMarket matrix coordinate real general\n");
+    let mut entries = Vec::new();
+    for i in 0..8i64 {
+        for j in 0..8i64 {
+            if (i - j).abs() <= 2 {
+                entries.push(format!("{} {} {}\n", i + 1, j + 1, 1.0 + (i * 8 + j) as f64));
+            }
+        }
+    }
+    mtx.push_str(&format!("8 8 {}\n", entries.len()));
+    mtx.push_str(&entries.concat());
+    std::fs::write(dir.join("band.mtx"), &mtx).unwrap();
+
+    let (_server, addr, handle) = start_server(ServeOpts {
+        port: 0,
+        threads: 2,
+        matrix_dir: Some(dir.clone()),
+        ..Default::default()
+    });
+    let mut client = connect(addr);
+    let opts = OptOptions { k: 4, seed: 3, ..Default::default() };
+    let spec = GraphSpec::Matrix { name: "band".into() };
+    let line = proto::optimize_request(&spec, &opts).dump();
+
+    let r1 = roundtrip(&mut client, &line);
+    assert_eq!(r1.get("cached").and_then(Json::as_str), Some("miss"), "{r1:?}");
+    let r2 = roundtrip(&mut client, &line);
+    assert_eq!(r2.get("cached").and_then(Json::as_str), Some("hit"));
+
+    // served schedule is bit-identical to resolving the same .mtx
+    // client-side and optimizing directly
+    let coo = epgraph::sparse::matrix_market::read_matrix_market(mtx.as_bytes()).unwrap();
+    let g = coo.affinity_graph();
+    let direct = optimize_graph(&g, &opts);
+    assert_bit_identical(&r1, &direct);
+    assert_bit_identical(&r2, &direct);
+
+    // the equivalent inline spec lands on the SAME cache entry
+    let inline = GraphSpec::Inline { n: g.n, edges: g.edges.clone() };
+    let r3 = roundtrip(&mut client, &proto::optimize_request(&inline, &opts).dump());
+    assert_eq!(r3.get("cached").and_then(Json::as_str), Some("hit"));
+    assert_eq!(
+        r1.get("fingerprint").and_then(Json::as_str),
+        r3.get("fingerprint").and_then(Json::as_str),
+        "content-addressing must see through the matrix form"
+    );
+
+    // unknown names fail cleanly and serving continues
+    let bad = GraphSpec::Matrix { name: "nope".into() };
+    let err = roundtrip(&mut client, &proto::optimize_request(&bad, &opts).dump());
+    assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false));
+    let again = roundtrip(&mut client, &line);
+    assert_eq!(again.get("cached").and_then(Json::as_str), Some("hit"));
+
+    roundtrip(&mut client, &proto::simple_request("shutdown").dump());
+    handle.join().expect("server thread");
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
