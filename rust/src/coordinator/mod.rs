@@ -16,7 +16,7 @@ pub mod splitting;
 pub use adaptive::{AdaptiveController, Choice};
 pub use cg::{run_cg, CgReport, CgRunConfig};
 pub use optimizer::{
-    optimize_graph, optimize_graph_with_breakdown, AsyncOptimizer, OptBreakdown, OptOptions,
-    OptimizedSchedule,
+    optimize_graph, optimize_graph_checked, optimize_graph_with_breakdown, AsyncOptimizer,
+    Cancelled, OptBreakdown, OptOptions, OptimizedSchedule,
 };
 pub use splitting::{auto_splits, run_with_splitting, run_with_splitting_at, SplitReport};

@@ -95,6 +95,12 @@ pub fn optimize_graph(g: &Graph, opts: &OptOptions) -> OptimizedSchedule {
     optimize_graph_with_breakdown(g, opts).0
 }
 
+/// The pipeline was cancelled at a stage boundary (the request's
+/// deadline expired).  Carries no partial schedule: a cancelled run
+/// produced nothing a caller may use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Cancelled;
+
 /// `optimize_graph` plus its per-stage cost breakdown — the
 /// cache-reusable entry point of the serving layer.  Deterministic in
 /// `(g, opts)` up to `opts.threads` (results are bit-identical for every
@@ -104,8 +110,28 @@ pub fn optimize_graph_with_breakdown(
     g: &Graph,
     opts: &OptOptions,
 ) -> (OptimizedSchedule, OptBreakdown) {
+    optimize_graph_checked(g, opts, &|| false).expect("never-cancel run cannot be cancelled")
+}
+
+/// `optimize_graph_with_breakdown` with cooperative cancellation.  The
+/// `cancel` closure is polled at every `OptBreakdown` stage boundary
+/// (entry, after the reuse check, after special-pattern detection, after
+/// partitioning, after relayout); once it returns true the run stops
+/// with `Err(Cancelled)` instead of burning the remaining stages.  The
+/// serving layer passes a deadline check here so an expired request
+/// releases its worker at the next boundary.  Cancellation never changes
+/// the result of a completed run — a run that returns `Ok` is
+/// bit-identical to an unchecked one.
+pub fn optimize_graph_checked(
+    g: &Graph,
+    opts: &OptOptions,
+    cancel: &dyn Fn() -> bool,
+) -> Result<(OptimizedSchedule, OptBreakdown), Cancelled> {
     let t0 = Instant::now();
     let mut bd = OptBreakdown::default();
+    if cancel() {
+        return Err(Cancelled);
+    }
 
     // 1. reuse check: little sharing → keep the original schedule
     let t = Instant::now();
@@ -126,7 +152,10 @@ pub fn optimize_graph_with_breakdown(
             used_special: None,
             skipped_low_reuse: true,
         };
-        return (sched, bd);
+        return Ok((sched, bd));
+    }
+    if cancel() {
+        return Err(Cancelled);
     }
 
     // 2. special-pattern shortcut: preset schedules, no partitioner run
@@ -134,6 +163,9 @@ pub fn optimize_graph_with_breakdown(
         let t = Instant::now();
         let detected = special::detect(g);
         bd.special_detect = t.elapsed();
+        if cancel() {
+            return Err(Cancelled);
+        }
         if let Some(pat) = detected {
             let t = Instant::now();
             let mut partition = special::preset_partition(g, pat, opts.k);
@@ -157,7 +189,7 @@ pub fn optimize_graph_with_breakdown(
                 used_special: Some(pat),
                 skipped_low_reuse: false,
             };
-            return (sched, bd);
+            return Ok((sched, bd));
         }
     }
 
@@ -181,9 +213,15 @@ pub fn optimize_graph_with_breakdown(
         ep::rebalance_to_cap(g, &mut partition, cap);
     }
     bd.partition = t.elapsed();
+    if cancel() {
+        return Err(Cancelled);
+    }
     let t = Instant::now();
     let layout = cpack::cpack_graph(g, &partition);
     bd.layout = t.elapsed();
+    if cancel() {
+        return Err(Cancelled);
+    }
     let t = Instant::now();
     let quality = quality::vertex_cut_cost(g, &partition);
     bd.quality = t.elapsed();
@@ -197,7 +235,7 @@ pub fn optimize_graph_with_breakdown(
         used_special: None,
         skipped_low_reuse: false,
     };
-    (sched, bd)
+    Ok((sched, bd))
 }
 
 /// Asynchronous optimization: the pipeline runs on its own CPU thread;
@@ -304,6 +342,35 @@ mod tests {
         assert_eq!(again.partition.assign, sched.partition.assign);
         assert_eq!(again.layout.new_of_old, sched.layout.new_of_old);
         assert_eq!(again.quality, sched.quality);
+    }
+
+    #[test]
+    fn checked_run_matches_unchecked_and_cancels_at_entry() {
+        let g = gen::cfd_mesh(20, 20, 1);
+        let opts = OptOptions { k: 8, ..Default::default() };
+        // cancel=false is bit-identical to the plain entry point
+        let (a, _) = optimize_graph_checked(&g, &opts, &|| false).unwrap();
+        let b = optimize_graph(&g, &opts);
+        assert_eq!(a.partition.assign, b.partition.assign);
+        assert_eq!(a.layout.new_of_old, b.layout.new_of_old);
+        assert_eq!(a.quality, b.quality);
+        // an already-cancelled run stops before doing any work
+        assert_eq!(optimize_graph_checked(&g, &opts, &|| true).unwrap_err(), Cancelled);
+    }
+
+    #[test]
+    fn cancellation_fires_at_a_later_stage_boundary() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let g = gen::cfd_mesh(20, 20, 1);
+        let opts = OptOptions { k: 8, ..Default::default() };
+        // let the first two boundary checks pass, then cancel: the run
+        // must stop mid-pipeline instead of completing
+        let polls = AtomicUsize::new(0);
+        let r = optimize_graph_checked(&g, &opts, &|| {
+            polls.fetch_add(1, Ordering::Relaxed) >= 2
+        });
+        assert_eq!(r.unwrap_err(), Cancelled);
+        assert!(polls.load(Ordering::Relaxed) >= 3);
     }
 
     #[test]

@@ -7,10 +7,13 @@
 //!   epgraph bench     <fig4|fig6|table2|fig10|fig11|fig12|table3|fig13|fig14|fig15|ablation|scaling|all>
 //!   epgraph artifacts [--outdir DIR] [--configs t0,s1,m1]
 //!   epgraph serve     [--port N] [--threads N] [--queue-cap N] [--cache-mb N] [--shards N]
-//!                     [--snapshot PATH] [--snapshot-every N] [--matrix-dir DIR]
+//!                     [--snapshot PATH] [--snapshot-every N] [--snapshot-keep K]
+//!                     [--snapshot-interval SECS] [--no-degrade] [--chaos SPEC]
+//!                     [--matrix-dir DIR]
 //!   epgraph client    [--addr HOST:PORT] [--op optimize|stats|health|shutdown]
 //!                     [--gen SPEC | --matrix NAME]
 //!                     [--k N] [--seed S] [--repeat N] [--concurrency N] [--verify]
+//!                     [--deadline-ms N] [--max-retries N] [--retry-budget-ms N]
 //!   epgraph info
 
 use std::collections::HashMap;
@@ -94,8 +97,8 @@ fn dispatch(args: &[String]) -> Result<()> {
                  epgraph bench <fig4|fig6|table2|fig10|fig11|fig12|table3|fig13|fig14|fig15|ablation|scaling|headline|all>\n  \
                  epgraph bench-compare <baseline.json> <current.json> [--tol 0.25]\n  \
                  epgraph artifacts [--outdir DIR] [--configs t0,s1,m1]\n  \
-                 epgraph serve [--port 7878] [--threads 0] [--partition-threads 1] [--queue-cap 64] [--cache-mb 64] [--shards 8]\n                [--snapshot cache.snap] [--snapshot-every 64] [--matrix-dir DIR]\n  \
-                 epgraph client [--addr 127.0.0.1:7878] [--op optimize|stats|health|shutdown] [--gen cfd_mesh:24,24,1 | --matrix NAME]\n                 [--k N] [--seed S] [--method M] [--repeat 1] [--concurrency 1] [--verify]\n  \
+                 epgraph serve [--port 7878] [--threads 0] [--partition-threads 1] [--queue-cap 64] [--cache-mb 64] [--shards 8]\n                [--snapshot cache.snap] [--snapshot-every 64] [--snapshot-keep 3] [--snapshot-interval 0]\n                [--no-degrade] [--chaos seed=7,worker_panic=0.1,...] [--matrix-dir DIR]\n  \
+                 epgraph client [--addr 127.0.0.1:7878] [--op optimize|stats|health|shutdown] [--gen cfd_mesh:24,24,1 | --matrix NAME]\n                 [--k N] [--seed S] [--method M] [--repeat 1] [--concurrency 1] [--verify]\n                 [--deadline-ms N] [--max-retries 8] [--retry-budget-ms 30000]\n  \
                  epgraph info"
             );
             Ok(())
@@ -316,9 +319,16 @@ fn cmd_bench_compare(pos: &[String], flags: &HashMap<String, String>) -> Result<
 /// Start the schedule-serving daemon (service::server).  Blocks until a
 /// client sends `{"op":"shutdown"}`; exits 0 on a clean drain.  With
 /// `--snapshot PATH` the schedule cache is warm-loaded at startup and
-/// snapshotted periodically and at shutdown; `--matrix-dir DIR` enables
-/// server-side `{"matrix":"name"}` specs (`<DIR>/<name>.mtx`).
+/// snapshotted periodically and at shutdown (rotated generations, see
+/// `--snapshot-keep` / `--snapshot-interval`); `--matrix-dir DIR`
+/// enables server-side `{"matrix":"name"}` specs (`<DIR>/<name>.mtx`).
+/// `--chaos SPEC` (or the EPGRAPH_CHAOS env var) arms deterministic
+/// fault injection; `--no-degrade` disables the fallback pipeline.
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let chaos = flags
+        .get("chaos")
+        .cloned()
+        .or_else(|| std::env::var("EPGRAPH_CHAOS").ok().filter(|s| !s.is_empty()));
     let opts = epgraph::service::ServeOpts {
         port: get_usize(flags, "port", 7878) as u16,
         threads: get_usize(flags, "threads", 0),
@@ -328,6 +338,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         shards: get_usize(flags, "shards", 8),
         snapshot: flags.get("snapshot").map(std::path::PathBuf::from),
         snapshot_every: get_usize(flags, "snapshot-every", 64) as u64,
+        snapshot_keep: get_usize(flags, "snapshot-keep", 3).max(1),
+        snapshot_interval_secs: get_usize(flags, "snapshot-interval", 0) as u64,
+        degrade: !flags.contains_key("no-degrade"),
+        chaos,
         matrix_dir: flags.get("matrix-dir").map(std::path::PathBuf::from),
     };
     let server = epgraph::service::Server::bind(opts.clone())?;
@@ -408,10 +422,17 @@ fn cmd_client(flags: &HashMap<String, String>) -> Result<()> {
     let repeat = get_usize(flags, "repeat", 1).max(1);
     let concurrency = get_usize(flags, "concurrency", 1).clamp(1, repeat);
     let verify = flags.contains_key("verify");
+    let deadline_ms =
+        flags.get("deadline-ms").map(|v| v.parse::<u64>().map_err(|_| anyhow!("bad --deadline-ms"))).transpose()?;
+    let retry_policy = epgraph::service::RetryPolicy {
+        max_retries: get_usize(flags, "max-retries", 8) as u32,
+        budget: std::time::Duration::from_millis(get_usize(flags, "retry-budget-ms", 30_000) as u64),
+        ..Default::default()
+    };
 
     // one request line shared by every connection; the expected schedule
     // (for --verify) comes from the same resolution path the server uses
-    let line = proto::optimize_request(&spec, &opts).dump();
+    let line = proto::optimize_request_with_deadline(&spec, &opts, deadline_ms).dump();
     let expected = if verify {
         anyhow::ensure!(
             !matches!(spec, proto::GraphSpec::Matrix { .. }),
@@ -427,6 +448,7 @@ fn cmd_client(flags: &HashMap<String, String>) -> Result<()> {
     let hits = AtomicU64::new(0);
     let joins = AtomicU64::new(0);
     let misses = AtomicU64::new(0);
+    let degraded = AtomicU64::new(0);
     let retries = AtomicU64::new(0);
     let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(repeat));
     let t0 = std::time::Instant::now();
@@ -435,48 +457,50 @@ fn cmd_client(flags: &HashMap<String, String>) -> Result<()> {
     let results: Vec<Result<()>> = std::thread::scope(|s| {
         let handles: Vec<_> = ranges
             .iter()
-            .map(|&(lo, hi)| {
+            .enumerate()
+            .map(|(ti, &(lo, hi))| {
                 let (line, addr) = (&line, &addr);
-                let (hits, joins, misses, retries) = (&hits, &joins, &misses, &retries);
+                let (hits, joins, misses, degraded, retries) =
+                    (&hits, &joins, &misses, &degraded, &retries);
                 let (latencies, expected) = (&latencies, &expected);
                 s.spawn(move || -> Result<()> {
                     let mut client = epgraph::service::Client::connect(addr.as_str())?;
+                    // per-thread jitter seed: reproducible runs, but
+                    // concurrent threads never sleep in lockstep
+                    let mut backoff = epgraph::service::Backoff::new(
+                        epgraph::service::RetryPolicy {
+                            seed: retry_policy.seed ^ (ti as u64).wrapping_mul(0x9E3779B9),
+                            ..retry_policy
+                        },
+                    );
                     for _ in lo..hi {
-                        let resp = loop {
-                            let t = std::time::Instant::now();
-                            let resp = client.roundtrip_line(line)?;
-                            let ok = resp.get("ok").and_then(|v| v.as_bool()) == Some(true);
-                            if ok {
-                                latencies
-                                    .lock()
-                                    .unwrap()
-                                    .push(t.elapsed().as_secs_f64() * 1e3);
-                                break resp;
-                            }
-                            // backpressure: honor the retry-after hint
-                            let Some(ms) =
-                                resp.get("retry_after_ms").and_then(|v| v.as_u64())
-                            else {
-                                anyhow::bail!(
-                                    "request failed: {}",
-                                    resp.get("error")
-                                        .and_then(|v| v.as_str())
-                                        .unwrap_or("unknown error")
-                                );
-                            };
-                            retries.fetch_add(1, Ordering::Relaxed);
-                            anyhow::ensure!(
-                                retries.load(Ordering::Relaxed) < 10_000,
-                                "giving up after excessive backpressure retries"
-                            );
-                            std::thread::sleep(std::time::Duration::from_millis(ms.max(1)));
-                        };
+                        let t = std::time::Instant::now();
+                        let resp = client.request_with_retry(line, &mut backoff)?;
+                        let ok = resp.get("ok").and_then(|v| v.as_bool()) == Some(true);
+                        anyhow::ensure!(
+                            ok,
+                            "request failed{}: {}",
+                            if resp.get("retry_after_ms").is_some() {
+                                " (retries exhausted)"
+                            } else {
+                                ""
+                            },
+                            resp.get("error")
+                                .and_then(|v| v.as_str())
+                                .unwrap_or("unknown error")
+                        );
+                        latencies.lock().unwrap().push(t.elapsed().as_secs_f64() * 1e3);
+                        let served_degraded =
+                            resp.get("cached").and_then(|v| v.as_str()) == Some("degraded");
                         match resp.get("cached").and_then(|v| v.as_str()) {
                             Some("hit") => hits.fetch_add(1, Ordering::Relaxed),
                             Some("joined") => joins.fetch_add(1, Ordering::Relaxed),
+                            Some("degraded") => degraded.fetch_add(1, Ordering::Relaxed),
                             _ => misses.fetch_add(1, Ordering::Relaxed),
                         };
-                        if let Some(exp) = expected {
+                        // degraded schedules are deliberately NOT the full
+                        // pipeline's product — --verify checks full runs only
+                        if let Some(exp) = expected.as_ref().filter(|_| !served_degraded) {
                             let assign = resp
                                 .get("assign")
                                 .and_then(|v| v.as_arr())
@@ -501,6 +525,7 @@ fn cmd_client(flags: &HashMap<String, String>) -> Result<()> {
                             );
                         }
                     }
+                    retries.fetch_add(u64::from(backoff.attempts()), Ordering::Relaxed);
                     Ok(())
                 })
             })
@@ -519,11 +544,12 @@ fn cmd_client(flags: &HashMap<String, String>) -> Result<()> {
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pct = |p: f64| lat[((p * lat.len() as f64) as usize).min(lat.len() - 1)];
     println!(
-        "client: {} ok (hit {}, joined {}, miss {}), backpressure retries {}, wall {:.3}s",
+        "client: {} ok (hit {}, joined {}, miss {}, degraded {}), backpressure retries {}, wall {:.3}s",
         lat.len(),
         hits.load(Ordering::Relaxed),
         joins.load(Ordering::Relaxed),
         misses.load(Ordering::Relaxed),
+        degraded.load(Ordering::Relaxed),
         retries.load(Ordering::Relaxed),
         wall.as_secs_f64()
     );
@@ -536,7 +562,14 @@ fn cmd_client(flags: &HashMap<String, String>) -> Result<()> {
         ranges.len()
     );
     if verify {
-        println!("verify: every response bit-identical to direct optimize_graph");
+        println!(
+            "verify: every full response bit-identical to direct optimize_graph{}",
+            if degraded.load(Ordering::Relaxed) > 0 {
+                " (degraded responses excluded by design)"
+            } else {
+                ""
+            }
+        );
     }
     Ok(())
 }

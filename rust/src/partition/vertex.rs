@@ -1528,42 +1528,48 @@ pub fn partition_kway_rb(g: &WGraph, k: usize, opts: &VpOpts) -> Vec<u32> {
     let threads = par::resolve_threads(opts.threads);
     let ids: Vec<u32> = (0..g.n as u32).collect();
     let out: Vec<AtomicU32> = (0..g.n).map(|_| AtomicU32::new(0)).collect();
-    recurse(g, &ids, k, 0, opts, derive_seed(opts.seed, 0x5B15EC7), threads, &out);
+    let ctx = RbCtx { opts, out: &out };
+    recurse(g, &ids, k, 0, derive_seed(opts.seed, 0x5B15EC7), threads, &ctx);
     out.into_iter().map(|a| a.into_inner()).collect()
 }
 
-#[allow(clippy::too_many_arguments)]
+/// Split-invariant context shared by every `recurse` frame: the tuning
+/// knobs and the global label array both sides write into.
+struct RbCtx<'a> {
+    opts: &'a VpOpts,
+    out: &'a [AtomicU32],
+}
+
 fn recurse(
     g: &WGraph,
     global_ids: &[u32],
     k: usize,
     label_base: u32,
-    opts: &VpOpts,
     seed: u64,
     threads: usize,
-    out: &[AtomicU32],
+    ctx: &RbCtx<'_>,
 ) {
     if k == 1 {
         for &gid in global_ids {
-            out[gid as usize].store(label_base, Ordering::Relaxed);
+            ctx.out[gid as usize].store(label_base, Ordering::Relaxed);
         }
         return;
     }
     let k_left = k / 2 + (k % 2); // ceil
     let frac_left = k_left as f64 / k as f64;
-    let side = bisect_with(g, frac_left, opts, derive_seed(seed, 0xB5), threads);
+    let side = bisect_with(g, frac_left, ctx.opts, derive_seed(seed, 0xB5), threads);
     let (sub0, ids0) = extract_side(g, &side, 0, global_ids);
     let (sub1, ids1) = extract_side(g, &side, 1, global_ids);
     let s0 = derive_seed(seed, 1);
     let s1 = derive_seed(seed, 2);
     let run0 = |t: usize| {
         if sub0.n > 0 {
-            recurse(&sub0, &ids0, k_left, label_base, opts, s0, t, out);
+            recurse(&sub0, &ids0, k_left, label_base, s0, t, ctx);
         }
     };
     let run1 = |t: usize| {
         if sub1.n > 0 {
-            recurse(&sub1, &ids1, k - k_left, label_base + k_left as u32, opts, s1, t, out);
+            recurse(&sub1, &ids1, k - k_left, label_base + k_left as u32, s1, t, ctx);
         }
     };
     if threads > 1 && sub0.n.min(sub1.n) >= RB_PAR_MIN {

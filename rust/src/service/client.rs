@@ -3,13 +3,109 @@
 //! in) is implemented.  The `epgraph client` CLI, the e2e suite, and
 //! the service bench all drive the daemon through this type, so a
 //! protocol change can never leave one of those surfaces behind.
+//!
+//! ## Retry discipline
+//!
+//! [`Client::request_with_retry`] is the principled replacement for
+//! ad-hoc retry loops: it retries ONLY responses that carry a
+//! `retry_after_ms` hint (the server's "transient, come back" marker),
+//! waits at least the hinted time with jittered exponential backoff on
+//! top, and stops on a cap or budget.  Terminal failures — shutdown,
+//! deadline expiry, bad requests — carry no hint and are returned
+//! immediately: hammering a server that said "stop" is how retry storms
+//! start.  The jitter comes from a caller-seeded [`Pcg32`], so a test
+//! (or a fleet of CLI threads seeded per-thread) gets reproducible
+//! schedules while real concurrent clients still decorrelate.
 
 use std::io::{BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
 use crate::util::json::{Json, JsonLines};
+use crate::util::rng::Pcg32;
+
+/// Knobs for [`Backoff`].  The defaults suit an interactive CLI: give
+/// up within ~30 s, never sleep longer than 2 s at a stretch.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (total attempts = this + 1).
+    pub max_retries: u32,
+    /// Total sleep budget across all retries; exceeding it stops.
+    pub budget: Duration,
+    /// First-retry base delay (doubles each attempt before jitter).
+    pub base: Duration,
+    /// Per-sleep ceiling after jitter.
+    pub cap: Duration,
+    /// Jitter seed — fix it for a reproducible schedule.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 8,
+            budget: Duration::from_secs(30),
+            base: Duration::from_millis(25),
+            cap: Duration::from_secs(2),
+            seed: 0xEB0FF,
+        }
+    }
+}
+
+/// Stateful backoff schedule: each `next_delay` doubles the base and
+/// jitters it into `[0.5, 1.0]×` (decorrelating concurrent clients
+/// while keeping every delay within 2× of its neighbours), floors the
+/// result at the server's `retry_after_ms` hint (the server knows its
+/// queue; sleeping less just burns a rejection), and caps it.  Returns
+/// `None` once the retry count or the sleep budget is exhausted.
+pub struct Backoff {
+    policy: RetryPolicy,
+    rng: Pcg32,
+    attempts: u32,
+    slept: Duration,
+}
+
+impl Backoff {
+    pub fn new(policy: RetryPolicy) -> Backoff {
+        Backoff { rng: Pcg32::new(policy.seed), policy, attempts: 0, slept: Duration::ZERO }
+    }
+
+    /// Retries consumed so far.
+    pub fn attempts(&self) -> u32 {
+        self.attempts
+    }
+
+    /// The next sleep, or `None` to give up.  Deterministic in
+    /// `(policy.seed, call sequence)`.
+    pub fn next_delay(&mut self, hint_ms: Option<u64>) -> Option<Duration> {
+        if self.attempts >= self.policy.max_retries || self.slept >= self.policy.budget {
+            return None;
+        }
+        let exp = self.policy.base.as_secs_f64() * f64::from(1u32 << self.attempts.min(20));
+        let jittered = exp * (0.5 + 0.5 * self.rng.gen_f64());
+        let mut delay = Duration::from_secs_f64(jittered);
+        if let Some(h) = hint_ms {
+            delay = delay.max(Duration::from_millis(h));
+        }
+        delay = delay.min(self.policy.cap);
+        // never oversleep the budget: clamp the final sleep to what's left
+        delay = delay.min(self.policy.budget.saturating_sub(self.slept));
+        self.attempts += 1;
+        self.slept += delay;
+        Some(delay)
+    }
+}
+
+/// A response's disposition from the retry loop's point of view.
+fn retry_hint(resp: &Json) -> Option<u64> {
+    // only failures are retryable, and only when the server said so
+    match resp.get("ok") {
+        Some(Json::Bool(false)) => resp.get("retry_after_ms").and_then(Json::as_u64),
+        _ => None,
+    }
+}
 
 pub struct Client {
     lines: JsonLines<BufReader<TcpStream>>,
@@ -38,5 +134,106 @@ impl Client {
             .next_value()
             .map_err(|e| anyhow!("recv: {e}"))?
             .ok_or_else(|| anyhow!("server closed the connection"))
+    }
+
+    /// `roundtrip_line` with the module-doc retry discipline: re-send
+    /// while the server answers with a `retry_after_ms` hint and the
+    /// backoff allows, sleeping between attempts.  Returns the first
+    /// non-retryable response — success, terminal failure, or the last
+    /// hinted rejection once the backoff gives up (the caller can tell:
+    /// it still carries the hint).
+    pub fn request_with_retry(&mut self, line: &str, backoff: &mut Backoff) -> Result<Json> {
+        loop {
+            let resp = self.roundtrip_line(line)?;
+            let Some(hint) = retry_hint(&resp) else { return Ok(resp) };
+            let Some(delay) = backoff.next_delay(Some(hint)) else { return Ok(resp) };
+            std::thread::sleep(delay);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(seed: u64) -> RetryPolicy {
+        RetryPolicy { seed, ..Default::default() }
+    }
+
+    #[test]
+    fn backoff_is_deterministic_under_a_fixed_seed() {
+        // the satellite contract: a chaos test that fixes the seed gets
+        // the exact same retry schedule on every run
+        let delays = |seed| -> Vec<Duration> {
+            let mut b = Backoff::new(policy(seed));
+            std::iter::from_fn(|| b.next_delay(None)).collect()
+        };
+        assert_eq!(delays(7), delays(7), "same seed, same schedule");
+        assert_ne!(delays(7), delays(8), "different seeds decorrelate");
+    }
+
+    #[test]
+    fn backoff_grows_jittered_and_capped() {
+        let mut b = Backoff::new(RetryPolicy {
+            max_retries: 12,
+            budget: Duration::from_secs(3600),
+            ..policy(42)
+        });
+        let mut prev_ceiling = Duration::ZERO;
+        for i in 0..12u32 {
+            let d = b.next_delay(None).unwrap();
+            let base = Duration::from_millis(25) * (1 << i);
+            let lo = (base / 2).min(Duration::from_secs(2));
+            let hi = base.min(Duration::from_secs(2));
+            assert!(d >= lo && d <= hi, "attempt {i}: {d:?} outside [{lo:?}, {hi:?}]");
+            // the jittered envelope is monotone even if samples wiggle
+            assert!(hi >= prev_ceiling);
+            prev_ceiling = hi;
+        }
+        assert_eq!(b.next_delay(None), None, "retry cap terminates the loop");
+        assert_eq!(b.attempts(), 12);
+    }
+
+    #[test]
+    fn server_hint_floors_the_delay() {
+        let mut b = Backoff::new(policy(1));
+        let d = b.next_delay(Some(500)).unwrap();
+        assert!(d >= Duration::from_millis(500), "{d:?} ignored the server's hint");
+        // but the cap still wins over an absurd hint
+        let d = b.next_delay(Some(60_000)).unwrap();
+        assert_eq!(d, Duration::from_secs(2));
+    }
+
+    #[test]
+    fn sleep_budget_terminates_even_under_generous_retry_caps() {
+        let mut b = Backoff::new(RetryPolicy {
+            max_retries: u32::MAX,
+            budget: Duration::from_millis(100),
+            ..policy(3)
+        });
+        let mut total = Duration::ZERO;
+        let mut n = 0;
+        while let Some(d) = b.next_delay(Some(40)) {
+            total += d;
+            n += 1;
+            assert!(n < 100, "budget failed to terminate the loop");
+        }
+        assert!(total <= Duration::from_millis(100), "slept {total:?} past the budget");
+        assert!(n >= 2, "budget should allow at least a couple of 40 ms sleeps");
+    }
+
+    #[test]
+    fn only_hinted_failures_are_retryable() {
+        let parse = |s: &str| Json::parse(s).unwrap();
+        assert_eq!(retry_hint(&parse(r#"{"ok":true,"cached":"hit"}"#)), None);
+        assert_eq!(
+            retry_hint(&parse(r#"{"ok":false,"error":"queue full","retry_after_ms":50}"#)),
+            Some(50)
+        );
+        // terminal failures: shutdown / deadline omit the hint entirely
+        assert_eq!(retry_hint(&parse(r#"{"ok":false,"error":"shutting down"}"#)), None);
+        assert_eq!(retry_hint(&parse(r#"{"ok":false,"error":"deadline"}"#)), None);
+        // a hint on a SUCCESS response must not trigger retries
+        assert_eq!(retry_hint(&parse(r#"{"ok":true,"retry_after_ms":50}"#)), None);
     }
 }

@@ -1,0 +1,238 @@
+//! The graceful-degradation fallback pipeline.
+//!
+//! When a request's deadline cannot fit a full multilevel optimization
+//! run, or the queue is saturated, the server answers with a schedule
+//! from THIS pipeline instead of rejecting: single-level greedy graph
+//! growing (GGGP-style BFS seeding over the task graph — no coarsening
+//! hierarchy) followed by exactly one boundary-refinement pass.  The
+//! GraphCage observation motivating it: a degraded-but-cache-aware
+//! schedule still beats the naive identity schedule, so "something
+//! locality-aware now" beats both "nothing" and "the full answer too
+//! late".
+//!
+//! Contract with the rest of the service:
+//! * deterministic in `(graph, opts)` — same inputs, same fallback;
+//! * always valid (every task assigned a block < k, layout a true
+//!   permutation) — only *quality* is sacrificed;
+//! * NEVER cached: the fingerprint must keep meaning "the full
+//!   pipeline's answer for these inputs", so a later uncontended
+//!   request recomputes and caches the real schedule.
+//!
+//! The low-reuse skip and the physical `block_cap` are honored — those
+//! are semantic contracts of the options, not quality knobs.
+
+use std::time::Instant;
+
+use crate::coordinator::{OptBreakdown, OptOptions, OptimizedSchedule};
+use crate::graph::{stats, Graph};
+use crate::partition::vertex::{self, VpOpts, WGraph};
+use crate::partition::{ep, quality, EdgePartition};
+use crate::sparse::{cpack, Perm};
+
+use super::cache::CachedSchedule;
+
+/// Single-level greedy graph growing: BFS-grow block 0 from the first
+/// unassigned task until it reaches the target load, then block 1, and
+/// so on — deterministic (index-order seeds and frontier) and O(m + aux
+/// edges), no hierarchy.  Always assigns every vertex; the last block
+/// absorbs any remainder.
+fn greedy_growing(tg: &WGraph, k: usize) -> Vec<u32> {
+    let n = tg.n;
+    let mut part = vec![u32::MAX; n];
+    if n == 0 {
+        return part;
+    }
+    let total = tg.total_vwgt();
+    // ceil split so early blocks don't starve the last one
+    let target = (total + k as i64 - 1) / k as i64;
+    let mut block: u32 = 0;
+    let mut load: i64 = 0;
+    let mut queue = std::collections::VecDeque::new();
+    let mut next_seed = 0usize;
+    loop {
+        let v = match queue.pop_front() {
+            Some(v) => v,
+            None => {
+                // frontier exhausted: seed from the next unassigned task
+                while next_seed < n && part[next_seed] != u32::MAX {
+                    next_seed += 1;
+                }
+                if next_seed == n {
+                    break;
+                }
+                next_seed as u32
+            }
+        };
+        if part[v as usize] != u32::MAX {
+            continue;
+        }
+        part[v as usize] = block;
+        load += tg.vwgt[v as usize];
+        if load >= target && (block as usize) < k - 1 {
+            block += 1;
+            load = 0;
+            queue.clear(); // next block grows from a fresh seed
+        } else {
+            for (w, _) in tg.neighbors(v) {
+                if part[w as usize] == u32::MAX {
+                    queue.push_back(w);
+                }
+            }
+        }
+    }
+    part
+}
+
+/// Produce a fallback schedule: greedy growing + one balance sweep + one
+/// FM boundary-refinement pass + the usual cpack relayout.  Shape and
+/// provenance match the full pipeline's product, so the response
+/// renderer needs no special casing beyond the `"degraded"` tag.
+pub fn degraded_schedule(g: &Graph, opts: &OptOptions) -> CachedSchedule {
+    let t0 = Instant::now();
+    let mut bd = OptBreakdown::default();
+    let k = opts.k.max(1);
+
+    // honor the low-reuse skip — same semantic gate as the full pipeline
+    let t = Instant::now();
+    let enough_reuse = stats::has_enough_reuse(g, opts.reuse_threshold);
+    bd.reuse_check = t.elapsed();
+    if !enough_reuse || g.m() == 0 {
+        let partition = crate::partition::default_sched::default_partition(g.m(), k);
+        let t = Instant::now();
+        let quality = quality::vertex_cut_cost(g, &partition);
+        bd.quality = t.elapsed();
+        bd.total = t0.elapsed();
+        let sched = OptimizedSchedule {
+            layout: Perm::identity(g.n),
+            balance: quality::balance_factor(&partition),
+            partition,
+            quality,
+            partition_time: bd.total,
+            used_special: None,
+            skipped_low_reuse: !enough_reuse,
+        };
+        return CachedSchedule::new(sched, bd);
+    }
+
+    let t = Instant::now();
+    let tg = ep::task_graph(g, ep::ChainOrder::Index, opts.seed);
+    let mut part = greedy_growing(&tg, k);
+    // one balance sweep (greedy growing can leave the tail block light)
+    // and exactly one sequential FM pass over the boundary — the whole
+    // point is a hard bound on work, not best quality
+    vertex::kway_balance(&tg, &mut part, k, 0.015, 1);
+    vertex::kway_refine(
+        &tg,
+        &mut part,
+        k,
+        &VpOpts { seed: opts.seed, threads: 1, fm_passes: 1, ..Default::default() },
+    );
+    // task i IS edge i under the Index chain, so this is the edge partition
+    let mut partition = EdgePartition::new(k, part);
+    if let Some(cap) = opts.block_cap {
+        ep::rebalance_to_cap(g, &mut partition, cap);
+    }
+    bd.partition = t.elapsed();
+
+    let t = Instant::now();
+    let layout = cpack::cpack_graph(g, &partition);
+    bd.layout = t.elapsed();
+    let t = Instant::now();
+    let quality = quality::vertex_cut_cost(g, &partition);
+    bd.quality = t.elapsed();
+    bd.total = t0.elapsed();
+    let sched = OptimizedSchedule {
+        layout,
+        balance: quality::balance_factor(&partition),
+        partition,
+        quality,
+        partition_time: bd.total,
+        used_special: None,
+        skipped_low_reuse: false,
+    };
+    CachedSchedule::new(sched, bd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::optimize_graph;
+    use crate::graph::gen;
+
+    fn opts(k: usize, seed: u64) -> OptOptions {
+        OptOptions { k, seed, ..Default::default() }
+    }
+
+    #[test]
+    fn fallback_is_valid_and_deterministic() {
+        let g = gen::cfd_mesh(24, 24, 3);
+        let o = opts(8, 3);
+        let a = degraded_schedule(&g, &o);
+        let b = degraded_schedule(&g, &o);
+        let s = &a.schedule;
+        assert_eq!(s.partition.assign.len(), g.m());
+        assert!(s.partition.assign.iter().all(|&b| (b as usize) < 8));
+        assert!(s.layout.is_valid());
+        assert!(!s.skipped_low_reuse);
+        assert_eq!(s.partition.assign, b.schedule.partition.assign, "must be deterministic");
+        assert_eq!(s.layout.new_of_old, b.schedule.layout.new_of_old);
+        assert_eq!(s.quality, b.schedule.quality);
+    }
+
+    #[test]
+    fn fallback_beats_the_identity_schedule() {
+        // the degradation bound: worse than the full pipeline is fine,
+        // worse than doing nothing is not
+        let g = gen::cfd_mesh(24, 24, 5);
+        let o = opts(8, 5);
+        let degraded = degraded_schedule(&g, &o);
+        let naive = crate::partition::default_sched::default_partition(g.m(), 8);
+        assert!(
+            degraded.schedule.quality <= quality::vertex_cut_cost(&g, &naive),
+            "fallback must not lose to the identity schedule"
+        );
+        // and the full pipeline is at least as good as the fallback
+        let full = optimize_graph(&g, &o);
+        assert!(full.quality <= degraded.schedule.quality);
+    }
+
+    #[test]
+    fn fallback_honors_low_reuse_skip_and_empty_graphs() {
+        // star graph: avg degree below threshold → identity schedule
+        let g = gen::complete_bipartite(4000, 1);
+        let o = OptOptions { k: 8, reuse_threshold: 2.1, ..Default::default() };
+        let e = degraded_schedule(&g, &o);
+        assert!(e.schedule.skipped_low_reuse);
+        assert_eq!(e.schedule.layout.new_of_old[7], 7, "identity layout");
+        // empty graph: degenerate but well-formed
+        let empty = Graph::from_edges(0, vec![]);
+        let e = degraded_schedule(&empty, &opts(4, 1));
+        assert_eq!(e.schedule.partition.assign.len(), 0);
+    }
+
+    #[test]
+    fn fallback_respects_block_cap() {
+        let g = gen::cfd_mesh(20, 20, 2);
+        let cap = g.m() / 4; // force redistribution
+        let o = OptOptions { k: 8, block_cap: Some(cap), ..Default::default() };
+        let e = degraded_schedule(&g, &o);
+        let loads = e.schedule.partition.loads();
+        assert!(loads.iter().all(|&l| l <= cap), "loads {loads:?} exceed cap {cap}");
+    }
+
+    #[test]
+    fn greedy_growing_covers_every_task() {
+        let g = gen::power_law(3000, 3, 7);
+        let tg = ep::task_graph(&g, ep::ChainOrder::Index, 7);
+        for k in [1, 2, 8, 13] {
+            let part = greedy_growing(&tg, k);
+            assert!(part.iter().all(|&b| (b as usize) < k), "k={k}");
+            // all k blocks non-empty on a graph with plenty of tasks
+            let mut seen = vec![false; k];
+            for &b in &part {
+                seen[b as usize] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "k={k}: some block is empty");
+        }
+    }
+}

@@ -1,0 +1,325 @@
+//! Deterministic fault injection for the serving stack (`--chaos` /
+//! `EPGRAPH_CHAOS`).
+//!
+//! Robustness paths — snapshot-write failures, torn writes, slow
+//! clients, worker panics, optimizer stalls — are exactly the paths
+//! that never fire under a healthy test run.  This module makes them
+//! fire *on demand and reproducibly*: every injection site draws from a
+//! seeded counter-hash sequence, so the same `FaultPlan` produces the
+//! same fault schedule on every run (per site, independent of thread
+//! interleaving at the other sites).
+//!
+//! Wiring: the server parses a spec like
+//! `seed=7,snapshot_fail=0.5,worker_panic=0.3,read_delay=0.2` into a
+//! [`FaultPlan`] and hands an `Arc<FaultInjector>` to the queue and the
+//! persistence layer.  Everywhere else the injector travels as
+//! `Option<&FaultInjector>` — `None` (the production default) makes
+//! every hook a single branch on a constant, so the happy path pays
+//! nothing measurable (the service bench gates this).
+//!
+//! The decision function is `mix64(seed ^ site_tag ^ draw_index)`
+//! compared against `p · 2⁶⁴` — a per-site Bernoulli sequence with no
+//! shared state between sites.  Injected counts per site surface in the
+//! `stats` response under `"chaos"`, which is what the CI chaos-smoke
+//! greps to prove the faults actually fired.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+use super::fingerprint::mix64;
+
+/// The injection sites threaded through the stack.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// `persist::save_rotated` fails outright (simulated full disk).
+    SnapshotFail,
+    /// `persist::save_rotated` writes a truncated generation (torn
+    /// write / crash mid-flush) — the loader must skip the tail and the
+    /// rotation must fall back to an older generation.
+    SnapshotTorn,
+    /// Handler sleeps after framing a request line (slow client /
+    /// congested loopback).
+    ReadDelay,
+    /// Worker panics instead of optimizing (the singleflight queue must
+    /// fail that one job, not hang or die).
+    WorkerPanic,
+    /// Worker sleeps before optimizing (stalled optimizer — exercises
+    /// queue backpressure and deadline expiry).
+    OptimizeSlow,
+}
+
+const SITES: usize = 5;
+
+impl FaultSite {
+    fn index(self) -> usize {
+        match self {
+            FaultSite::SnapshotFail => 0,
+            FaultSite::SnapshotTorn => 1,
+            FaultSite::ReadDelay => 2,
+            FaultSite::WorkerPanic => 3,
+            FaultSite::OptimizeSlow => 4,
+        }
+    }
+
+    fn tag(self) -> u64 {
+        // arbitrary fixed site tags: each site gets an independent
+        // deterministic sequence from one seed
+        [0x5AFE_F001, 0x70A2_F002, 0x2EAD_F003, 0xAA1C_F004, 0x510E_F005][self.index()]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::SnapshotFail => "snapshot_fail",
+            FaultSite::SnapshotTorn => "snapshot_torn",
+            FaultSite::ReadDelay => "read_delay",
+            FaultSite::WorkerPanic => "worker_panic",
+            FaultSite::OptimizeSlow => "optimize_slow",
+        }
+    }
+}
+
+/// Parsed `--chaos` spec: per-site probabilities plus delay magnitudes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub snapshot_fail: f64,
+    pub snapshot_torn: f64,
+    pub read_delay: f64,
+    pub read_delay_ms: u64,
+    pub worker_panic: f64,
+    pub optimize_slow: f64,
+    pub optimize_slow_ms: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0xC4A05,
+            snapshot_fail: 0.0,
+            snapshot_torn: 0.0,
+            read_delay: 0.0,
+            read_delay_ms: 10,
+            worker_panic: 0.0,
+            optimize_slow: 0.0,
+            optimize_slow_ms: 50,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse `key=value,key=value,…`.  Keys: `seed`, the five site
+    /// probabilities by name, and `read_delay_ms` / `optimize_slow_ms`.
+    /// Unknown keys and out-of-range probabilities are errors — a typo'd
+    /// chaos spec silently injecting nothing would defeat the point.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("chaos spec entry '{part}' is not key=value"))?;
+            let prob = || -> Result<f64, String> {
+                let p: f64 =
+                    val.parse().map_err(|_| format!("chaos {key}: bad number '{val}'"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("chaos {key}: probability {p} outside [0,1]"));
+                }
+                Ok(p)
+            };
+            let int = || -> Result<u64, String> {
+                val.parse().map_err(|_| format!("chaos {key}: bad integer '{val}'"))
+            };
+            match key.trim() {
+                "seed" => plan.seed = int()?,
+                "snapshot_fail" => plan.snapshot_fail = prob()?,
+                "snapshot_torn" => plan.snapshot_torn = prob()?,
+                "read_delay" => plan.read_delay = prob()?,
+                "read_delay_ms" => plan.read_delay_ms = int()?,
+                "worker_panic" => plan.worker_panic = prob()?,
+                "optimize_slow" => plan.optimize_slow = prob()?,
+                "optimize_slow_ms" => plan.optimize_slow_ms = int()?,
+                other => return Err(format!("unknown chaos key '{other}'")),
+            }
+        }
+        Ok(plan)
+    }
+
+    fn probability(&self, site: FaultSite) -> f64 {
+        match site {
+            FaultSite::SnapshotFail => self.snapshot_fail,
+            FaultSite::SnapshotTorn => self.snapshot_torn,
+            FaultSite::ReadDelay => self.read_delay,
+            FaultSite::WorkerPanic => self.worker_panic,
+            FaultSite::OptimizeSlow => self.optimize_slow,
+        }
+    }
+}
+
+/// Threshold so that `mix64(x) < threshold` fires with probability `p`.
+/// The `as u64` cast saturates, so `p = 1.0` maps to u64::MAX (fires on
+/// all but one hash value in 2⁶⁴ — indistinguishable from always).
+fn threshold(p: f64) -> u64 {
+    (p * (u64::MAX as f64)) as u64
+}
+
+/// The live injector: one per server, shared by queue + persistence +
+/// handlers.  Each site keeps its own draw counter, so the decision
+/// sequence at a site depends only on (seed, site, how many times that
+/// site was reached) — never on scheduling at other sites.
+pub struct FaultInjector {
+    plan: FaultPlan,
+    thresholds: [u64; SITES],
+    draws: [AtomicU64; SITES],
+    injected: [AtomicU64; SITES],
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        let thresholds = std::array::from_fn(|i| {
+            let site = [
+                FaultSite::SnapshotFail,
+                FaultSite::SnapshotTorn,
+                FaultSite::ReadDelay,
+                FaultSite::WorkerPanic,
+                FaultSite::OptimizeSlow,
+            ][i];
+            threshold(plan.probability(site))
+        });
+        FaultInjector {
+            plan,
+            thresholds,
+            draws: std::array::from_fn(|_| AtomicU64::new(0)),
+            injected: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// One Bernoulli draw at `site` — deterministic per-site sequence.
+    pub fn should(&self, site: FaultSite) -> bool {
+        let i = site.index();
+        let t = self.thresholds[i];
+        if t == 0 {
+            return false; // disabled site: no draw, no counter churn
+        }
+        let n = self.draws[i].fetch_add(1, Ordering::Relaxed);
+        let fire = mix64(self.plan.seed ^ site.tag() ^ n) < t;
+        if fire {
+            self.injected[i].fetch_add(1, Ordering::Relaxed);
+        }
+        fire
+    }
+
+    /// Draw at a delay site; `Some(duration)` when the delay fires.
+    pub fn delay(&self, site: FaultSite) -> Option<Duration> {
+        if !self.should(site) {
+            return None;
+        }
+        let ms = match site {
+            FaultSite::ReadDelay => self.plan.read_delay_ms,
+            FaultSite::OptimizeSlow => self.plan.optimize_slow_ms,
+            _ => 0,
+        };
+        Some(Duration::from_millis(ms))
+    }
+
+    pub fn injected(&self, site: FaultSite) -> u64 {
+        self.injected[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// Per-site injected counts for the `stats` response — the CI
+    /// chaos-smoke greps these to prove faults actually fired.
+    pub fn stats_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("seed".to_string(), Json::Str(self.plan.seed.to_string()));
+        for site in [
+            FaultSite::SnapshotFail,
+            FaultSite::SnapshotTorn,
+            FaultSite::ReadDelay,
+            FaultSite::WorkerPanic,
+            FaultSite::OptimizeSlow,
+        ] {
+            m.insert(site.name().to_string(), Json::Num(self.injected(site) as f64));
+        }
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_full_spec_and_rejects_garbage() {
+        let p = FaultPlan::parse(
+            "seed=7, snapshot_fail=0.5,snapshot_torn=0.25,read_delay=0.1,read_delay_ms=20,\
+             worker_panic=0.3,optimize_slow=1,optimize_slow_ms=5",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.snapshot_fail, 0.5);
+        assert_eq!(p.read_delay_ms, 20);
+        assert_eq!(p.optimize_slow, 1.0);
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
+        for bad in ["nope=1", "snapshot_fail=2", "snapshot_fail=-0.1", "worker_panic", "seed=x"] {
+            assert!(FaultPlan::parse(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn sequences_are_deterministic_per_seed_and_site() {
+        let plan = FaultPlan { worker_panic: 0.3, snapshot_fail: 0.7, ..Default::default() };
+        let a = FaultInjector::new(plan.clone());
+        let b = FaultInjector::new(plan.clone());
+        let seq = |f: &FaultInjector, s| (0..256).map(|_| f.should(s)).collect::<Vec<_>>();
+        assert_eq!(seq(&a, FaultSite::WorkerPanic), seq(&b, FaultSite::WorkerPanic));
+        assert_eq!(seq(&a, FaultSite::SnapshotFail), seq(&b, FaultSite::SnapshotFail));
+        // a different seed gives a different schedule
+        let c = FaultInjector::new(FaultPlan { seed: 999, ..plan });
+        assert_ne!(seq(&a, FaultSite::WorkerPanic), seq(&c, FaultSite::WorkerPanic));
+    }
+
+    #[test]
+    fn rates_roughly_match_probabilities() {
+        let f = FaultInjector::new(FaultPlan {
+            worker_panic: 0.3,
+            read_delay: 1.0,
+            ..Default::default()
+        });
+        let n = 4000;
+        let fired = (0..n).filter(|_| f.should(FaultSite::WorkerPanic)).count();
+        let rate = fired as f64 / n as f64;
+        assert!((rate - 0.3).abs() < 0.05, "rate {rate} far from 0.3");
+        assert_eq!(f.injected(FaultSite::WorkerPanic), fired as u64);
+        // p=1 always fires; p=0 never draws
+        assert!((0..64).all(|_| f.should(FaultSite::ReadDelay)));
+        assert!((0..64).all(|_| !f.should(FaultSite::SnapshotFail)));
+        assert_eq!(f.injected(FaultSite::SnapshotFail), 0);
+    }
+
+    #[test]
+    fn delay_returns_the_configured_magnitude() {
+        let f = FaultInjector::new(FaultPlan {
+            read_delay: 1.0,
+            read_delay_ms: 7,
+            optimize_slow: 0.0,
+            ..Default::default()
+        });
+        assert_eq!(f.delay(FaultSite::ReadDelay), Some(Duration::from_millis(7)));
+        assert_eq!(f.delay(FaultSite::OptimizeSlow), None);
+    }
+
+    #[test]
+    fn stats_json_reports_per_site_counts() {
+        let f = FaultInjector::new(FaultPlan { worker_panic: 1.0, ..Default::default() });
+        f.should(FaultSite::WorkerPanic);
+        f.should(FaultSite::WorkerPanic);
+        let j = f.stats_json();
+        assert_eq!(j.get("worker_panic").and_then(Json::as_u64), Some(2));
+        assert_eq!(j.get("snapshot_fail").and_then(Json::as_u64), Some(0));
+    }
+}

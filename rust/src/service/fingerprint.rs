@@ -58,8 +58,9 @@ const FNV_OFFSET_B: u64 = 0x6C62_272E_07BB_0142;
 
 /// SplitMix64 finalizer (same constants as the partitioner's seed
 /// stretcher) — avalanches the weak low-bit diffusion of raw FNV.
+/// Also the decision hash for `service::faults` Bernoulli draws.
 #[inline]
-fn mix64(mut x: u64) -> u64 {
+pub(crate) fn mix64(mut x: u64) -> u64 {
     x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
     x ^ (x >> 31)

@@ -88,9 +88,12 @@ impl LatencyHisto {
 }
 
 /// Service-level request accounting.  The identity
-/// `requests == served_hit + served_miss + served_joined + rejected + errors`
+/// `requests == served_hit + served_miss + served_joined + served_degraded
+///              + rejected + errors`
 /// holds at any quiescent point (each optimize request ends in exactly
 /// one outcome); the e2e suite asserts it against a live server.
+/// `deadline_expired` is informational — every expiry also lands in
+/// `errors`, so it is a subset, not another identity term.
 ///
 /// Cache-side accounting (insertions, evictions, admission rejections)
 /// lives in `cache::CacheStats`, and persistence accounting (warm
@@ -113,16 +116,24 @@ pub struct ServiceMetrics {
     pub served_miss: AtomicU64,
     /// deduped onto an already-in-flight identical job (singleflight)
     pub served_joined: AtomicU64,
+    /// served a fast fallback schedule under pressure (never cached)
+    pub served_degraded: AtomicU64,
     /// rejected with retry-after (queue full / shutting down)
     pub rejected: AtomicU64,
     /// well-formed optimize requests that failed (bad graph, failed job)
     pub errors: AtomicU64,
+    /// requests whose deadline expired (subset of `errors`)
+    pub deadline_expired: AtomicU64,
     /// lines that never parsed into a request (not counted in `requests`)
     pub bad_requests: AtomicU64,
     /// time a job spent queued before a worker picked it up
     pub queue_wait: LatencyHisto,
-    /// optimizer wall time per computed job
+    /// optimizer wall time per computed job (completed full runs only —
+    /// this mean drives the server's "can the deadline fit a full run"
+    /// degrade decision, so cancelled/panicked runs must not dilute it)
     pub optimize: LatencyHisto,
+    /// fallback-pipeline wall time per degraded response
+    pub degraded: LatencyHisto,
 }
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -131,12 +142,15 @@ pub struct MetricsSnapshot {
     pub served_hit: u64,
     pub served_miss: u64,
     pub served_joined: u64,
+    pub served_degraded: u64,
     pub rejected: u64,
     pub errors: u64,
+    pub deadline_expired: u64,
     pub bad_requests: u64,
     pub hit_rate: f64,
     pub queue_wait: LatencySnapshot,
     pub optimize: LatencySnapshot,
+    pub degraded: LatencySnapshot,
 }
 
 impl ServiceMetrics {
@@ -158,14 +172,17 @@ impl ServiceMetrics {
             served_hit: hit,
             served_miss: self.served_miss.load(Ordering::Relaxed),
             served_joined: joined,
+            served_degraded: self.served_degraded.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
             bad_requests: self.bad_requests.load(Ordering::Relaxed),
             // a join reused an in-flight computation, so it counts as a
             // cache-effectiveness win alongside plain hits
             hit_rate: if requests == 0 { 0.0 } else { (hit + joined) as f64 / requests as f64 },
             queue_wait: self.queue_wait.snapshot(),
             optimize: self.optimize.snapshot(),
+            degraded: self.degraded.snapshot(),
         }
     }
 }
@@ -229,8 +246,38 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(
             s.requests,
-            s.served_hit + s.served_miss + s.served_joined + s.rejected + s.errors
+            s.served_hit
+                + s.served_miss
+                + s.served_joined
+                + s.served_degraded
+                + s.rejected
+                + s.errors
         );
         assert!((s.hit_rate - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degraded_and_deadline_counters_snapshot() {
+        let m = ServiceMetrics::new();
+        ServiceMetrics::bump(&m.requests);
+        ServiceMetrics::bump(&m.served_degraded);
+        m.degraded.record(Duration::from_millis(3));
+        ServiceMetrics::bump(&m.requests);
+        ServiceMetrics::bump(&m.errors);
+        ServiceMetrics::bump(&m.deadline_expired);
+        let s = m.snapshot();
+        assert_eq!(s.served_degraded, 1);
+        assert_eq!(s.degraded.count, 1);
+        assert_eq!(s.deadline_expired, 1);
+        assert!(s.deadline_expired <= s.errors, "expiry is a subset of errors");
+        assert_eq!(
+            s.requests,
+            s.served_hit
+                + s.served_miss
+                + s.served_joined
+                + s.served_degraded
+                + s.rejected
+                + s.errors
+        );
     }
 }

@@ -26,14 +26,25 @@
 //! * [`server`] — the loopback TCP daemon tying it together; the
 //!   `epgraph serve` / `epgraph client` subcommands front it.
 //! * [`client`] — the blocking protocol client shared by the CLI, the
-//!   e2e suite, and the bench (one implementation of the framing).
+//!   e2e suite, and the bench (one implementation of the framing), with
+//!   the jittered-backoff retry discipline built in.
+//! * [`faults`] — deterministic, seeded fault injection (`--chaos`):
+//!   snapshot write failures, torn writes, stalled reads, worker
+//!   panics, optimizer slowdowns.  Off by default; every hook is a
+//!   `None` check on the serving path.
+//! * [`degraded`] — the graceful-degradation fallback pipeline served
+//!   when a deadline cannot fit a full run or the queue saturates.
 //!
 //! Served schedules are bit-identical to a direct
 //! `coordinator::optimize_graph` call with the same options — the e2e
 //! suite (`tests/service_e2e.rs`) and the CI serve-smoke assert it.
+//! (Degraded responses are the one deliberate exception: tagged
+//! `"degraded":true` and never cached.)
 
 pub mod cache;
 pub mod client;
+pub mod degraded;
+pub mod faults;
 pub mod fingerprint;
 pub mod metrics;
 pub mod persist;
@@ -42,10 +53,11 @@ pub mod queue;
 pub mod server;
 
 pub use cache::{Admission, CacheStats, CachedSchedule, ScheduleCache};
-pub use client::Client;
+pub use client::{Backoff, Client, RetryPolicy};
+pub use faults::{FaultInjector, FaultPlan, FaultSite};
 pub use fingerprint::{fingerprint, Fingerprint};
 pub use metrics::{MetricsSnapshot, ServiceMetrics};
 pub use persist::{LoadReport, SaveReport};
 pub use proto::GraphSpec;
-pub use queue::{JobQueue, Submit};
+pub use queue::{JobError, JobQueue, Submit};
 pub use server::{ServeOpts, Server};

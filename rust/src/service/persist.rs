@@ -41,7 +41,7 @@
 //!   identity survives the restart.
 
 use std::io::Write;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -51,6 +51,7 @@ use crate::partition::EdgePartition;
 use crate::sparse::Perm;
 
 use super::cache::{CachedSchedule, ScheduleCache};
+use super::faults::{FaultInjector, FaultSite};
 use super::fingerprint::{Fingerprint, Hasher};
 
 const MAGIC: &[u8; 8] = b"EPGSNAP1";
@@ -302,6 +303,29 @@ fn checksum(payload: &[u8]) -> u64 {
 /// stops at MAX_SNAPSHOT_BYTES dropping only the cold tail, so `load`'s
 /// whole-file size guard can never reject what `save` produced.
 pub fn save(cache: &ScheduleCache, path: &Path) -> std::io::Result<SaveReport> {
+    save_with_faults(cache, path, None)
+}
+
+/// `save` with chaos hooks: an injected `SnapshotFail` errors before
+/// touching the filesystem (simulated full disk), and an injected
+/// `SnapshotTorn` writes a snapshot whose tail record is deliberately
+/// truncated (crash mid-flush) — it still lands atomically, so what the
+/// loader's per-record robustness and the rotation fallback do with it
+/// is exactly what they would do with a real torn write.
+pub fn save_with_faults(
+    cache: &ScheduleCache,
+    path: &Path,
+    faults: Option<&FaultInjector>,
+) -> std::io::Result<SaveReport> {
+    if let Some(f) = faults {
+        if f.should(FaultSite::SnapshotFail) {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                "injected snapshot write failure (chaos)",
+            ));
+        }
+    }
+    let torn = faults.is_some_and(|f| f.should(FaultSite::SnapshotTorn));
     let entries = cache.export();
     let tmp = tmp_path(path);
     let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
@@ -309,8 +333,18 @@ pub fn save(cache: &ScheduleCache, path: &Path) -> std::io::Result<SaveReport> {
     w.write_all(&VERSION.to_le_bytes())?;
     let mut written = (MAGIC.len() + 4) as u64;
     let mut report = SaveReport::default();
+    // a torn write keeps the first half of the records intact and cuts
+    // the next one mid-payload
+    let torn_after = if torn { entries.len() / 2 } else { usize::MAX };
     for (fp, e) in entries.iter().rev() {
         let payload = encode_record(*fp, e);
+        if report.entries == torn_after {
+            w.write_all(&(payload.len() as u32).to_le_bytes())?;
+            w.write_all(&checksum(&payload).to_le_bytes())?;
+            w.write_all(&payload[..payload.len() / 2])?;
+            report.skipped = entries.len() - report.entries;
+            break;
+        }
         let record_len = 4 + 8 + payload.len() as u64;
         if written + record_len > MAX_SNAPSHOT_BYTES {
             report.skipped = entries.len() - report.entries;
@@ -428,6 +462,127 @@ pub fn load(cache: &ScheduleCache, path: &Path) -> std::io::Result<LoadReport> {
         cache.probe(*fp);
     }
     Ok(report)
+}
+
+// ------------------------------------------------------------- rotation
+//
+// `save_rotated` writes numbered generations `<path>.N` and promotes the
+// newest one by swapping a symlink at `<path>` (atomic rename).  A crash
+// or injected fault at ANY point leaves at least one fully-written older
+// generation on disk, and `load_rotated` falls back to it — the "a flush
+// during a crash can never leave zero valid snapshots" contract that a
+// single overwrite-in-place file cannot give once writes themselves are
+// allowed to fail halfway.
+
+/// Numbered generations of `path`, sorted oldest→newest.
+fn generations(path: &Path) -> std::io::Result<Vec<(u64, PathBuf)>> {
+    let parent = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    let Some(stem) = path.file_name().map(|n| n.to_string_lossy().into_owned()) else {
+        return Ok(Vec::new());
+    };
+    let prefix = format!("{stem}.");
+    let dir = match std::fs::read_dir(&parent) {
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        other => other?,
+    };
+    let mut gens = Vec::new();
+    for entry in dir {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if let Some(suffix) = name.strip_prefix(&prefix) {
+            if let Ok(n) = suffix.parse::<u64>() {
+                gens.push((n, parent.join(&name)));
+            }
+        }
+    }
+    gens.sort_unstable_by_key(|&(n, _)| n);
+    Ok(gens)
+}
+
+/// Point `path` at `gen_file_name` (a sibling file).  On unix this is a
+/// relative symlink swapped in by rename — atomic, and `path` stays a
+/// valid handle for external tooling (`test -s`, manual inspection)
+/// whether it was previously a symlink, a legacy regular snapshot, or
+/// absent.  Elsewhere, fall back to an atomic copy.
+fn promote(path: &Path, gen_file_name: &str) -> std::io::Result<()> {
+    #[cfg(unix)]
+    {
+        let mut tmp_name = path.file_name().unwrap_or_default().to_os_string();
+        tmp_name.push(".lnk.tmp");
+        let tmp = path.with_file_name(tmp_name);
+        match std::fs::remove_file(&tmp) {
+            Err(e) if e.kind() != std::io::ErrorKind::NotFound => return Err(e),
+            _ => {}
+        }
+        std::os::unix::fs::symlink(gen_file_name, &tmp)?;
+        std::fs::rename(&tmp, path)
+    }
+    #[cfg(not(unix))]
+    {
+        let tmp = tmp_path(path);
+        std::fs::copy(path.with_file_name(gen_file_name), &tmp)?;
+        std::fs::rename(&tmp, path)
+    }
+}
+
+/// Snapshot into a fresh generation `<path>.N`, promote `<path>` to it,
+/// and prune to the newest `keep` generations.  The generation itself is
+/// written with `save`'s tmp+fsync+rename discipline, so every numbered
+/// file on disk is always a complete rename target (possibly with a torn
+/// tail under chaos — which the loader skips per record).  Pruning runs
+/// last: a failure anywhere earlier leaves strictly more history, never
+/// less.
+pub fn save_rotated(
+    cache: &ScheduleCache,
+    path: &Path,
+    keep: usize,
+    faults: Option<&FaultInjector>,
+) -> std::io::Result<SaveReport> {
+    let gens = generations(path)?;
+    let next = gens.last().map_or(1, |&(n, _)| n + 1);
+    let stem = path.file_name().unwrap_or_default().to_string_lossy().into_owned();
+    let gen_name = format!("{stem}.{next}");
+    let gen_path = path.with_file_name(&gen_name);
+    let report = save_with_faults(cache, &gen_path, faults)?;
+    promote(path, &gen_name)?;
+    // prune: keep the newest `keep` generations (the new one included)
+    let keep = keep.max(1);
+    let total = gens.len() + 1;
+    for (_, old) in gens.into_iter().take(total.saturating_sub(keep)) {
+        std::fs::remove_file(&old).ok(); // best-effort: stale history only
+    }
+    Ok(report)
+}
+
+/// Warm-load the newest generation that loads CLEANLY (no corrupt
+/// records, right version, sane size); generations that don't are still
+/// harvested for their intact prefix before falling back to the next
+/// older one, and the counters accumulate across everything examined.
+/// With no numbered generations the plain `load(path)` path covers
+/// legacy single-file snapshots, fresh starts, and dangling symlinks
+/// alike.
+pub fn load_rotated(cache: &ScheduleCache, path: &Path) -> std::io::Result<LoadReport> {
+    let gens = generations(path)?;
+    if gens.is_empty() {
+        return load(cache, path);
+    }
+    let mut acc = LoadReport::default();
+    for (_, gen_path) in gens.iter().rev() {
+        let r = load(cache, gen_path)?;
+        acc.loaded += r.loaded;
+        acc.skipped_corrupt += r.skipped_corrupt;
+        acc.skipped_budget += r.skipped_budget;
+        acc.version_mismatch |= r.version_mismatch;
+        acc.oversize_file |= r.oversize_file;
+        let clean = r.skipped_corrupt == 0 && !r.version_mismatch && !r.oversize_file;
+        if clean {
+            break;
+        }
+    }
+    Ok(acc)
 }
 
 #[cfg(test)]
@@ -677,6 +832,156 @@ mod tests {
         assert_eq!(report.skipped_corrupt, 1, "insane length must stop the scan");
         assert_eq!(report.loaded, 0);
         std::fs::remove_file(&path).ok();
+    }
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("epgraph-rot-{tag}-{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn rotation_writes_generations_promotes_and_prunes() {
+        let dir = tmp_dir("gens");
+        let path = dir.join("cache.snap");
+        let src = ScheduleCache::new(1 << 22, 1);
+        let entries = varied_entries();
+        for (fp, e) in &entries {
+            src.insert(*fp, e.clone());
+        }
+        for _ in 0..4 {
+            save_rotated(&src, &path, 2, None).unwrap();
+        }
+        // keep=2 → only the two newest generations remain
+        let gens = generations(&path).unwrap();
+        let nums: Vec<u64> = gens.iter().map(|&(n, _)| n).collect();
+        assert_eq!(nums, vec![3, 4], "prune keeps the newest two");
+        #[cfg(unix)]
+        {
+            let target = std::fs::read_link(&path).expect("promoted path is a symlink");
+            assert_eq!(target, std::path::Path::new("cache.snap.4"));
+        }
+        // the promoted path itself warm-loads (external tooling contract)
+        let via_link = ScheduleCache::new(1 << 22, 1);
+        let r = load(&via_link, &path).unwrap();
+        assert_eq!(r.loaded, entries.len() as u64);
+        // and load_rotated finds everything from the newest generation
+        let dst = ScheduleCache::new(1 << 22, 1);
+        let report = load_rotated(&dst, &path).unwrap();
+        assert_eq!(report.loaded, entries.len() as u64);
+        assert_eq!(report.skipped_corrupt, 0);
+        for (fp, e) in &entries {
+            assert_entry_bit_identical(&dst.probe(*fp).unwrap(), e);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_newest_generation_falls_back_to_older() {
+        let dir = tmp_dir("fallback");
+        let path = dir.join("cache.snap");
+        let entries = varied_entries();
+        let src = ScheduleCache::new(1 << 22, 1);
+        for (fp, e) in &entries {
+            src.insert(*fp, e.clone());
+        }
+        save_rotated(&src, &path, 3, None).unwrap(); // gen 1: everything
+        save_rotated(&src, &path, 3, None).unwrap(); // gen 2: everything
+        // wreck generation 2's version field — a clean-looking file the
+        // loader must reject wholesale
+        let gen2 = dir.join("cache.snap.2");
+        let mut data = std::fs::read(&gen2).unwrap();
+        data[MAGIC.len()] = 0xFE;
+        std::fs::write(&gen2, &data).unwrap();
+        let dst = ScheduleCache::new(1 << 22, 1);
+        let report = load_rotated(&dst, &path).unwrap();
+        assert!(report.version_mismatch, "the bad generation was examined");
+        assert_eq!(report.loaded, entries.len() as u64, "older generation fills in");
+        assert_eq!(dst.stats().entries, entries.len());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rotated_handles_legacy_plain_files_and_fresh_starts() {
+        let dir = tmp_dir("legacy");
+        let path = dir.join("cache.snap");
+        // fresh start: no generations, no plain file
+        let empty = ScheduleCache::new(1 << 20, 1);
+        assert_eq!(load_rotated(&empty, &path).unwrap(), LoadReport::default());
+        // legacy single-file snapshot from a pre-rotation build
+        let entries = varied_entries();
+        let src = ScheduleCache::new(1 << 22, 1);
+        for (fp, e) in &entries {
+            src.insert(*fp, e.clone());
+        }
+        save(&src, &path).unwrap();
+        let dst = ScheduleCache::new(1 << 22, 1);
+        let report = load_rotated(&dst, &path).unwrap();
+        assert_eq!(report.loaded, entries.len() as u64);
+        // and the next rotated save promotes cleanly over the legacy file
+        save_rotated(&src, &path, 2, None).unwrap();
+        let dst2 = ScheduleCache::new(1 << 22, 1);
+        assert_eq!(load_rotated(&dst2, &path).unwrap().loaded, entries.len() as u64);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn injected_snapshot_failure_surfaces_as_an_error() {
+        use crate::service::faults::{FaultInjector, FaultPlan};
+        let dir = tmp_dir("chaosfail");
+        let path = dir.join("cache.snap");
+        let src = ScheduleCache::new(1 << 22, 1);
+        let entries = varied_entries();
+        for (fp, e) in &entries {
+            src.insert(*fp, e.clone());
+        }
+        let inj = FaultInjector::new(FaultPlan::parse("snapshot_fail=1.0").unwrap());
+        let err = save_with_faults(&src, &path, Some(&inj)).unwrap_err();
+        assert!(err.to_string().contains("chaos"), "{err}");
+        assert!(!path.exists(), "a failed save must not touch the target");
+        // rotation propagates the failure but never harms older history
+        save_rotated(&src, &path, 2, None).unwrap();
+        save_rotated(&src, &path, 2, Some(&inj)).unwrap_err();
+        let dst = ScheduleCache::new(1 << 22, 1);
+        let report = load_rotated(&dst, &path).unwrap();
+        assert_eq!(report.loaded, entries.len() as u64, "gen 1 still loads fully");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_snapshot_keeps_the_intact_prefix() {
+        use crate::service::faults::{FaultInjector, FaultPlan};
+        let dir = tmp_dir("torn");
+        let path = dir.join("cache.snap");
+        let src = ScheduleCache::new(1 << 22, 1);
+        let entries = varied_entries();
+        for (fp, e) in &entries {
+            src.insert(*fp, e.clone());
+        }
+        let inj = FaultInjector::new(FaultPlan::parse("snapshot_torn=1.0").unwrap());
+        let report = save_with_faults(&src, &path, Some(&inj)).unwrap();
+        let torn_at = entries.len() / 2;
+        assert_eq!(report.entries as usize, torn_at, "writes stop at the tear");
+        // the loader harvests the intact prefix and flags one corrupt tail
+        let dst = ScheduleCache::new(1 << 22, 1);
+        let r = load(&dst, &path).unwrap();
+        assert_eq!(r.loaded as usize, torn_at);
+        assert_eq!(r.skipped_corrupt, 1);
+        assert!(!r.version_mismatch);
+        // under rotation a torn newest generation falls back and the full
+        // set survives via the older clean one
+        let dir2 = tmp_dir("torn-rot");
+        let path2 = dir2.join("cache.snap");
+        save_rotated(&src, &path2, 3, None).unwrap();
+        let inj2 = FaultInjector::new(FaultPlan::parse("snapshot_torn=1.0").unwrap());
+        save_rotated(&src, &path2, 3, Some(&inj2)).unwrap();
+        let dst2 = ScheduleCache::new(1 << 22, 1);
+        let r2 = load_rotated(&dst2, &path2).unwrap();
+        assert_eq!(dst2.stats().entries, entries.len(), "older gen fills the gap");
+        assert!(r2.skipped_corrupt >= 1, "the tear was observed: {r2:?}");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&dir2).ok();
     }
 
     #[test]

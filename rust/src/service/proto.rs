@@ -11,6 +11,15 @@
 //! {"op":"shutdown"}                               → ack, then the server drains and exits
 //! ```
 //!
+//! An optimize request may carry a top-level `"deadline_ms"` (relative
+//! milliseconds): the server fails the request with
+//! `{"ok":false,"error":"deadline"}` — no retry hint, the bound has
+//! passed — rather than deliver a schedule after the deadline.  When a
+//! full optimizer run cannot fit the remaining budget (or the queue is
+//! saturated), the server may instead answer with a fast fallback
+//! schedule flagged `"degraded":true` / `"cached":"degraded"`; degraded
+//! schedules are valid but lower quality and are never cached.
+//!
 //! A graph spec is inline CSR content —
 //! `{"n":4,"edges":[0,1,1,2,2,3]}` with a FLAT `[u0,v0,u1,v1,…]` pair
 //! array in edge-id order — or a named deterministic generator,
@@ -32,8 +41,11 @@
 //! owns parallelism, and results are thread-count-invariant anyway.
 //!
 //! Responses always carry `"ok"`; failures are
-//! `{"ok":false,"error":"…"}` plus `"retry_after_ms"` when the queue
-//! pushed back and the client should retry.
+//! `{"ok":false,"error":"…"}` plus `"retry_after_ms"` when the
+//! condition is transient (queue pushed back, optimizer hiccup) and the
+//! client should retry.  Failures WITHOUT the hint — shutdown, expired
+//! deadlines, malformed requests — are terminal: a well-behaved client
+//! (`Client::request_with_retry`) stops retrying immediately.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -263,7 +275,7 @@ impl GraphSpec {
 /// A decoded request line.
 #[derive(Clone, Debug)]
 pub enum Request {
-    Optimize { graph: GraphSpec, opts: OptOptions },
+    Optimize { graph: GraphSpec, opts: OptOptions, deadline_ms: Option<u64> },
     Stats,
     Health,
     Shutdown,
@@ -276,7 +288,13 @@ pub fn parse_request(j: &Json) -> Result<Request, String> {
             let graph =
                 GraphSpec::from_json(j.get("graph").ok_or("optimize needs a 'graph'")?)?;
             let opts = opts_from_json(j.get("opts"))?;
-            Ok(Request::Optimize { graph, opts })
+            let deadline_ms = match j.get("deadline_ms") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(
+                    v.as_u64().ok_or("deadline_ms must be a non-negative integer")?,
+                ),
+            };
+            Ok(Request::Optimize { graph, opts, deadline_ms })
         }
         "stats" => Ok(Request::Stats),
         "health" => Ok(Request::Health),
@@ -350,10 +368,22 @@ pub fn opts_to_json(opts: &OptOptions) -> Json {
 
 /// Build one optimize request line (client side).
 pub fn optimize_request(graph: &GraphSpec, opts: &OptOptions) -> Json {
+    optimize_request_with_deadline(graph, opts, None)
+}
+
+/// `optimize_request` plus an optional relative deadline.
+pub fn optimize_request_with_deadline(
+    graph: &GraphSpec,
+    opts: &OptOptions,
+    deadline_ms: Option<u64>,
+) -> Json {
     let mut m = BTreeMap::new();
     m.insert("op".to_string(), Json::Str("optimize".to_string()));
     m.insert("graph".to_string(), graph.to_json());
     m.insert("opts".to_string(), opts_to_json(opts));
+    if let Some(ms) = deadline_ms {
+        m.insert("deadline_ms".to_string(), Json::Num(ms as f64));
+    }
     Json::Obj(m)
 }
 
@@ -382,9 +412,12 @@ pub fn error_response(msg: &str, retry_after_ms: Option<u64>) -> Json {
     obj(fields)
 }
 
-/// The schedule response.  `cached` is `"hit"`, `"miss"` or `"joined"`;
+/// The schedule response.  `cached` is `"hit"`, `"miss"`, `"joined"` or
+/// `"degraded"` (the convenience bool `"degraded"` is derived from it);
 /// `assign`/`layout` carry the full arrays so clients can verify
-/// bit-identity against a direct `optimize_graph` run.
+/// bit-identity against a direct `optimize_graph` run — except degraded
+/// responses, which are fallback schedules and by design NOT identical
+/// to a full run.
 pub fn optimize_response(
     fp: Fingerprint,
     cached: &str,
@@ -397,6 +430,7 @@ pub fn optimize_response(
         ("ok", Json::Bool(true)),
         ("fingerprint", Json::Str(fp.to_hex())),
         ("cached", Json::Str(cached.to_string())),
+        ("degraded", Json::Bool(cached == "degraded")),
         ("k", num(s.partition.k as f64)),
         ("quality", num(s.quality as f64)),
         ("balance", num(s.balance)),
@@ -440,18 +474,29 @@ pub struct PersistInfo {
     pub last_snapshot_entries: u64,
 }
 
+/// Everything the `stats` response renders, bundled so the signature
+/// stays flat as the response grows (this also keeps the function under
+/// clippy's argument limit, which CI now enforces).
+pub struct StatsView<'a> {
+    pub metrics: &'a MetricsSnapshot,
+    pub cache: &'a CacheStats,
+    pub uptime_ms: f64,
+    pub workers: usize,
+    pub queue_cap: usize,
+    pub queue_pending: usize,
+    pub persist: Option<PersistInfo>,
+    /// Per-site injected-fault counters (`faults::FaultInjector::
+    /// stats_json`); None when the daemon runs without `--chaos`.
+    pub chaos: Option<Json>,
+}
+
 /// The `stats` response: service counters + raw cache counters +
-/// latency summaries + pool shape + persistence counters.
-pub fn stats_response(
-    m: &MetricsSnapshot,
-    c: &CacheStats,
-    uptime_ms: f64,
-    workers: usize,
-    queue_cap: usize,
-    queue_pending: usize,
-    persist: Option<PersistInfo>,
-) -> Json {
-    let persist_json = match persist {
+/// latency summaries + pool shape + persistence counters + chaos
+/// injection counters.
+pub fn stats_response(v: StatsView<'_>) -> Json {
+    let m = v.metrics;
+    let c = v.cache;
+    let persist_json = match v.persist {
         None => Json::Null,
         Some(p) => obj(vec![
             ("warm_loaded", num(p.warm.loaded as f64)),
@@ -469,8 +514,10 @@ pub fn stats_response(
         ("served_hit", num(m.served_hit as f64)),
         ("served_miss", num(m.served_miss as f64)),
         ("served_joined", num(m.served_joined as f64)),
+        ("served_degraded", num(m.served_degraded as f64)),
         ("rejected", num(m.rejected as f64)),
         ("errors", num(m.errors as f64)),
+        ("deadline_expired", num(m.deadline_expired as f64)),
         ("bad_requests", num(m.bad_requests as f64)),
         ("hit_rate", num(m.hit_rate)),
         (
@@ -489,12 +536,14 @@ pub fn stats_response(
             ]),
         ),
         ("persist", persist_json),
+        ("chaos", v.chaos.unwrap_or(Json::Null)),
         ("queue_wait_ms", latency_json(&m.queue_wait)),
         ("optimize_ms", latency_json(&m.optimize)),
-        ("uptime_ms", num(uptime_ms)),
-        ("workers", num(workers as f64)),
-        ("queue_cap", num(queue_cap as f64)),
-        ("queue_pending", num(queue_pending as f64)),
+        ("degraded_ms", latency_json(&m.degraded)),
+        ("uptime_ms", num(v.uptime_ms)),
+        ("workers", num(v.workers as f64)),
+        ("queue_cap", num(v.queue_cap as f64)),
+        ("queue_pending", num(v.queue_pending as f64)),
     ])
 }
 
@@ -522,13 +571,36 @@ mod tests {
         let line = optimize_request(&spec, &opts).dump();
         let parsed = parse_request(&Json::parse(&line).unwrap()).unwrap();
         match parsed {
-            Request::Optimize { graph, opts: o } => {
+            Request::Optimize { graph, opts: o, deadline_ms } => {
                 assert_eq!(graph, spec);
                 assert_eq!(o.k, 4);
                 assert_eq!(o.seed, 7);
                 assert_eq!(o.method.name(), "ep");
+                assert_eq!(deadline_ms, None);
             }
             _ => panic!("wrong request kind"),
+        }
+    }
+
+    #[test]
+    fn deadline_rides_the_wire_and_rejects_garbage() {
+        let spec = GraphSpec::Gen { name: "path".into(), args: vec![4] };
+        let line =
+            optimize_request_with_deadline(&spec, &OptOptions::default(), Some(250)).dump();
+        match parse_request(&Json::parse(&line).unwrap()).unwrap() {
+            Request::Optimize { deadline_ms, .. } => assert_eq!(deadline_ms, Some(250)),
+            _ => panic!("wrong request kind"),
+        }
+        // null is "no deadline"; fractional/negative values are malformed
+        let parse = |text: &str| parse_request(&Json::parse(text).unwrap());
+        let ok = r#"{"op":"optimize","graph":{"gen":"path","args":[4]},"deadline_ms":null}"#;
+        assert!(matches!(parse(ok).unwrap(), Request::Optimize { deadline_ms: None, .. }));
+        for bad in [
+            r#"{"op":"optimize","graph":{"gen":"path","args":[4]},"deadline_ms":1.5}"#,
+            r#"{"op":"optimize","graph":{"gen":"path","args":[4]},"deadline_ms":-3}"#,
+            r#"{"op":"optimize","graph":{"gen":"path","args":[4]},"deadline_ms":"soon"}"#,
+        ] {
+            assert!(parse(bad).is_err(), "should reject: {bad}");
         }
     }
 
@@ -550,7 +622,9 @@ mod tests {
         let a = r#"{"op":"optimize","graph":{"n":3,"edges":[0,1,1,2]},"opts":{"k":4,"seed":9}}"#;
         let b = r#"{"opts":{"seed":9,"k":4},"graph":{"edges":[0,1,1,2],"n":3},"op":"optimize"}"#;
         let fp = |text: &str| match parse_request(&Json::parse(text).unwrap()).unwrap() {
-            Request::Optimize { graph, opts } => fingerprint(&graph.resolve().unwrap(), &opts),
+            Request::Optimize { graph, opts, .. } => {
+                fingerprint(&graph.resolve().unwrap(), &opts)
+            }
             _ => panic!("wrong kind"),
         };
         assert_eq!(fp(a), fp(b), "insertion order leaked into the fingerprint");
@@ -678,5 +752,22 @@ mod tests {
         assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
         assert_eq!(j.get("retry_after_ms").unwrap().as_u64(), Some(150));
         assert!(error_response("x", None).get("retry_after_ms").is_none());
+    }
+
+    #[test]
+    fn optimize_response_flags_degraded_responses() {
+        use crate::coordinator::optimize_graph_with_breakdown;
+        let g = GraphSpec::Gen { name: "path".into(), args: vec![16] }.resolve().unwrap();
+        let opts = OptOptions { k: 2, ..Default::default() };
+        let (sched, bd) = optimize_graph_with_breakdown(&g, &opts);
+        let entry = CachedSchedule::new(sched, bd);
+        let fp = fingerprint(&g, &opts);
+        for tag in ["hit", "miss", "joined"] {
+            let j = optimize_response(fp, tag, &entry, None, None);
+            assert_eq!(j.get("degraded").unwrap().as_bool(), Some(false), "{tag}");
+        }
+        let j = optimize_response(fp, "degraded", &entry, None, Some(1.5));
+        assert_eq!(j.get("degraded").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("cached").unwrap().as_str(), Some("degraded"));
     }
 }

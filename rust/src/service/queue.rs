@@ -12,6 +12,14 @@
 //! that can neither join nor enqueue is rejected immediately with a
 //! retry-after hint instead of blocking the handler — the client owns
 //! the retry policy, the server never builds unbounded backlog.
+//! Shutdown rejections carry NO hint: they are terminal for this
+//! server, and a hint would send clients into a retry spin against it.
+//!
+//! Deadlines: each job carries the (relaxable) deadline of its waiters.
+//! A worker drops an expired job at dequeue and passes a deadline check
+//! into `optimize_graph_checked` so an expiry mid-run stops the
+//! pipeline at the next stage boundary — expired requests release their
+//! worker instead of burning it.
 //!
 //! The close-the-race protocol with the cache: workers insert the
 //! finished schedule into the cache BEFORE removing the job from the
@@ -26,12 +34,35 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{optimize_graph_with_breakdown, OptOptions};
+use crate::coordinator::{optimize_graph_checked, Cancelled, OptOptions};
 use crate::graph::Graph;
 
 use super::cache::{CachedSchedule, ScheduleCache};
+use super::faults::{FaultInjector, FaultSite};
 use super::fingerprint::Fingerprint;
 use super::metrics::ServiceMetrics;
+
+/// Why a job produced no schedule.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobError {
+    /// The request's deadline expired (at dequeue, or at an optimizer
+    /// stage boundary via the cancellation token).  Non-retryable: the
+    /// client asked for a bound and the bound has passed.
+    Deadline,
+    /// The optimizer failed (panic).  Transient — retryable.
+    Failed(String),
+}
+
+/// A job's effective deadline.  Starts as the first submitter's bound
+/// and can only RELAX as waiters join: a single no-deadline waiter makes
+/// the job unlimited (someone is owed a full answer), otherwise the
+/// latest bound wins.  Tightening on join would let a latecomer cancel
+/// work an earlier waiter still needs.
+#[derive(Clone, Copy, Debug)]
+enum Deadline {
+    Unlimited,
+    At(Instant),
+}
 
 /// One in-flight optimization; shared by the worker and every waiter.
 pub struct Job {
@@ -39,13 +70,14 @@ pub struct Job {
     graph: Arc<Graph>,
     opts: OptOptions,
     enqueued: Instant,
+    deadline: Mutex<Deadline>,
     state: Mutex<JobState>,
     done: Condvar,
 }
 
 #[derive(Default)]
 struct JobState {
-    result: Option<Result<Arc<CachedSchedule>, String>>,
+    result: Option<Result<Arc<CachedSchedule>, JobError>>,
     queue_wait: Duration,
     run_time: Duration,
 }
@@ -53,12 +85,29 @@ struct JobState {
 impl Job {
     /// Block until the worker finishes; returns the shared result plus
     /// (queue wait, optimize time) for the response.
-    pub fn wait(&self) -> (Result<Arc<CachedSchedule>, String>, Duration, Duration) {
+    pub fn wait(&self) -> (Result<Arc<CachedSchedule>, JobError>, Duration, Duration) {
         let mut st = self.state.lock().unwrap();
         while st.result.is_none() {
             st = self.done.wait(st).unwrap();
         }
         (st.result.clone().unwrap(), st.queue_wait, st.run_time)
+    }
+
+    /// True once the job's (relaxed) deadline has passed.  Polled by the
+    /// worker at dequeue and at every optimizer stage boundary.
+    pub fn deadline_expired(&self) -> bool {
+        match *self.deadline.lock().unwrap() {
+            Deadline::Unlimited => false,
+            Deadline::At(t) => Instant::now() >= t,
+        }
+    }
+
+    fn relax_deadline(&self, incoming: Option<Instant>) {
+        let mut d = self.deadline.lock().unwrap();
+        *d = match (*d, incoming) {
+            (Deadline::Unlimited, _) | (_, None) => Deadline::Unlimited,
+            (Deadline::At(a), Some(b)) => Deadline::At(a.max(b)),
+        };
     }
 }
 
@@ -70,8 +119,11 @@ pub enum Submit {
     New(Arc<Job>),
     /// Deduped onto an identical in-flight job.
     Joined(Arc<Job>),
-    /// Queue full (or shutting down): retry after the hinted delay.
-    Rejected { retry_after_ms: u64, reason: String },
+    /// Could not serve.  `retry_after_ms: Some(_)` marks a transient
+    /// condition (queue full) the client should retry after the hinted
+    /// delay; `None` marks a terminal one (shutdown) where retrying the
+    /// same server is pointless.
+    Rejected { retry_after_ms: Option<u64>, reason: String },
 }
 
 struct QueueInner {
@@ -86,10 +138,17 @@ pub struct JobQueue {
     inner: Mutex<QueueInner>,
     work: Condvar,
     capacity: usize,
+    /// chaos hooks (worker panic / optimizer slowdown); None in
+    /// production, so the hot path pays one branch per job
+    faults: Option<Arc<FaultInjector>>,
 }
 
 impl JobQueue {
     pub fn new(capacity: usize) -> Self {
+        Self::with_faults(capacity, None)
+    }
+
+    pub fn with_faults(capacity: usize, faults: Option<Arc<FaultInjector>>) -> Self {
         JobQueue {
             inner: Mutex::new(QueueInner {
                 pending: VecDeque::new(),
@@ -98,6 +157,7 @@ impl JobQueue {
             }),
             work: Condvar::new(),
             capacity: capacity.max(1),
+            faults,
         }
     }
 
@@ -105,22 +165,28 @@ impl JobQueue {
     /// close the probe/enqueue race (see module doc).  The graph rides
     /// in an `Arc` end to end (the server's resolver already produces
     /// one): no outcome — hit, join, rejection, or fresh enqueue — ever
-    /// copies the edge list.
+    /// copies the edge list.  `deadline` is the request's absolute
+    /// expiry (None = unbounded); joining an in-flight job RELAXES that
+    /// job's deadline (see `Deadline`).
     pub fn submit(
         &self,
         fp: Fingerprint,
         graph: &Arc<Graph>,
         opts: OptOptions,
         cache: &ScheduleCache,
+        deadline: Option<Instant>,
     ) -> Submit {
         let mut inner = self.inner.lock().unwrap();
         if inner.shutdown {
+            // no hint: shutdown is terminal for this server, a client
+            // retrying "after 0ms" would only busy-spin against it
             return Submit::Rejected {
-                retry_after_ms: 0,
+                retry_after_ms: None,
                 reason: "server is shutting down".into(),
             };
         }
         if let Some(job) = inner.inflight.get(&fp) {
+            job.relax_deadline(deadline);
             return Submit::Joined(job.clone());
         }
         if let Some(entry) = cache.probe(fp) {
@@ -130,13 +196,20 @@ impl JobQueue {
             // retry hint scales with the backlog: clients back off harder
             // the deeper the queue, without the server tracking any state
             let retry_after_ms = (50 * (inner.pending.len() as u64 + 1)).min(1_000);
-            return Submit::Rejected { retry_after_ms, reason: "queue full".into() };
+            return Submit::Rejected {
+                retry_after_ms: Some(retry_after_ms),
+                reason: "queue full".into(),
+            };
         }
         let job = Arc::new(Job {
             fp,
             graph: graph.clone(),
             opts,
             enqueued: Instant::now(),
+            deadline: Mutex::new(match deadline {
+                Some(t) => Deadline::At(t),
+                None => Deadline::Unlimited,
+            }),
             state: Mutex::new(JobState::default()),
             done: Condvar::new(),
         });
@@ -175,7 +248,7 @@ impl JobQueue {
     fn finish(
         &self,
         job: &Arc<Job>,
-        result: Result<Arc<CachedSchedule>, String>,
+        result: Result<Arc<CachedSchedule>, JobError>,
         queue_wait: Duration,
         run_time: Duration,
         cache: &ScheduleCache,
@@ -209,20 +282,44 @@ impl JobQueue {
     /// One worker: pop → optimize → publish, until shutdown.  Run it on
     /// a dedicated thread; a pool is N threads running this same loop.
     /// A panicking optimizer run fails that one job (every waiter gets
-    /// the error) instead of hanging the queue.
+    /// the error) instead of hanging the queue.  A job whose deadline
+    /// expired while queued is failed at dequeue without touching the
+    /// optimizer, and an expiry mid-run stops at the next stage boundary
+    /// (`optimize_graph_checked`).
     pub fn run_worker(&self, cache: &ScheduleCache, metrics: &ServiceMetrics) {
         while let Some(job) = self.pop() {
             let queue_wait = job.enqueued.elapsed();
             metrics.queue_wait.record(queue_wait);
+            if job.deadline_expired() {
+                ServiceMetrics::bump(&metrics.deadline_expired);
+                self.finish(&job, Err(JobError::Deadline), queue_wait, Duration::ZERO, cache);
+                continue;
+            }
             let t0 = Instant::now();
             let outcome = catch_unwind(AssertUnwindSafe(|| {
-                optimize_graph_with_breakdown(&job.graph, &job.opts)
+                if let Some(f) = &self.faults {
+                    if let Some(d) = f.delay(FaultSite::OptimizeSlow) {
+                        std::thread::sleep(d);
+                    }
+                    if f.should(FaultSite::WorkerPanic) {
+                        panic!("injected worker panic (chaos)");
+                    }
+                }
+                optimize_graph_checked(&job.graph, &job.opts, &|| job.deadline_expired())
             }));
             let run_time = t0.elapsed();
-            metrics.optimize.record(run_time);
             let result = match outcome {
-                Ok((sched, bd)) => Ok(Arc::new(CachedSchedule::new(sched, bd))),
-                Err(_) => Err("optimizer panicked".to_string()),
+                Ok(Ok((sched, bd))) => {
+                    // only completed full runs feed the optimize
+                    // histogram — its mean drives the degrade decision
+                    metrics.optimize.record(run_time);
+                    Ok(Arc::new(CachedSchedule::new(sched, bd)))
+                }
+                Ok(Err(Cancelled)) => {
+                    ServiceMetrics::bump(&metrics.deadline_expired);
+                    Err(JobError::Deadline)
+                }
+                Err(_) => Err(JobError::Failed("optimizer panicked".to_string())),
             };
             self.finish(&job, result, queue_wait, run_time, cache);
         }
@@ -248,19 +345,19 @@ mod tests {
         let cache = ScheduleCache::new(1 << 20, 2);
         for seed in [1, 2] {
             let (fp, g, o) = workload(seed);
-            assert!(matches!(q.submit(fp, &g, o, &cache), Submit::New(_)));
+            assert!(matches!(q.submit(fp, &g, o, &cache, None), Submit::New(_)));
         }
         let (fp, g, o) = workload(3);
-        match q.submit(fp, &g, o, &cache) {
+        match q.submit(fp, &g, o, &cache, None) {
             Submit::Rejected { retry_after_ms, reason } => {
-                assert!(retry_after_ms > 0);
+                assert!(retry_after_ms.unwrap() > 0, "queue-full must carry a retry hint");
                 assert_eq!(reason, "queue full");
             }
             _ => panic!("expected rejection at capacity"),
         }
         // identical fingerprints still join — dedup needs no capacity
         let (fp, g, o) = workload(1);
-        assert!(matches!(q.submit(fp, &g, o, &cache), Submit::Joined(_)));
+        assert!(matches!(q.submit(fp, &g, o, &cache, None), Submit::Joined(_)));
         assert_eq!(q.pending_len(), 2);
     }
 
@@ -274,7 +371,7 @@ mod tests {
         let mut jobs = Vec::new();
         let mut news = 0;
         for _ in 0..8 {
-            match q.submit(fp, &g, o.clone(), &cache) {
+            match q.submit(fp, &g, o.clone(), &cache, None) {
                 Submit::New(j) => {
                     news += 1;
                     jobs.push(j);
@@ -301,7 +398,7 @@ mod tests {
         }
         // the result landed in the cache before the job left the
         // in-flight map, so a follow-up submit is a Hit
-        match q.submit(fp, &g, o, &cache) {
+        match q.submit(fp, &g, o, &cache, None) {
             Submit::Hit(entry) => assert!(Arc::ptr_eq(&entry, &first)),
             _ => panic!("expected a cache hit after completion"),
         }
@@ -318,7 +415,7 @@ mod tests {
         let mut jobs = Vec::new();
         for seed in 10..14 {
             let (fp, g, o) = workload(seed);
-            match q.submit(fp, &g, o, &cache) {
+            match q.submit(fp, &g, o, &cache, None) {
                 Submit::New(j) => jobs.push(j),
                 _ => panic!("fresh workloads must enqueue"),
             }
@@ -334,11 +431,85 @@ mod tests {
             assert!(r.is_ok());
         }
         worker.join().unwrap();
-        // and post-shutdown submits are rejected
+        // and post-shutdown submits are rejected WITHOUT a retry hint —
+        // "retry after 0ms" would make well-behaved clients busy-spin
+        // against a dying server
         let (fp, g, o) = workload(99);
         assert!(matches!(
-            q.submit(fp, &g, o, &cache),
-            Submit::Rejected { retry_after_ms: 0, .. }
+            q.submit(fp, &g, o, &cache, None),
+            Submit::Rejected { retry_after_ms: None, .. }
         ));
+    }
+
+    #[test]
+    fn expired_deadline_never_reaches_the_optimizer() {
+        let q = Arc::new(JobQueue::new(8));
+        let cache = Arc::new(ScheduleCache::new(1 << 22, 2));
+        let metrics = Arc::new(ServiceMetrics::new());
+        let (fp, g, o) = workload(21);
+        // enqueue with an already-elapsed (1ns) deadline, no worker yet
+        let deadline = Instant::now() + Duration::from_nanos(1);
+        let job = match q.submit(fp, &g, o, &cache, Some(deadline)) {
+            Submit::New(j) => j,
+            _ => panic!("fresh workload must enqueue"),
+        };
+        std::thread::sleep(Duration::from_millis(2));
+        let (qq, cc, mm) = (q.clone(), cache.clone(), metrics.clone());
+        let worker = std::thread::spawn(move || qq.run_worker(&cc, &mm));
+        let (result, _, _) = job.wait();
+        assert_eq!(result.unwrap_err(), JobError::Deadline);
+        // failed at dequeue: the optimizer histogram never saw a run and
+        // nothing was cached
+        assert_eq!(metrics.optimize.snapshot().count, 0);
+        assert_eq!(metrics.deadline_expired.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert!(cache.probe(fp).is_none());
+        q.shutdown();
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn joining_without_a_deadline_unbounds_the_job() {
+        let q = JobQueue::new(8);
+        let cache = ScheduleCache::new(1 << 20, 2);
+        let (fp, g, o) = workload(22);
+        let job = match q.submit(fp, &g, o.clone(), &cache, Some(Instant::now())) {
+            Submit::New(j) => j,
+            _ => panic!("fresh workload must enqueue"),
+        };
+        assert!(job.deadline_expired(), "tight deadline starts expired");
+        // a second waiter with no deadline is owed a full answer: the
+        // shared job must relax to unlimited
+        match q.submit(fp, &g, o, &cache, None) {
+            Submit::Joined(j) => assert!(Arc::ptr_eq(&j, &job)),
+            _ => panic!("identical workload must join"),
+        }
+        assert!(!job.deadline_expired());
+    }
+
+    #[test]
+    fn injected_worker_panic_fails_the_job_not_the_queue() {
+        use crate::service::faults::{FaultInjector, FaultPlan};
+        // panic on every job — the queue must keep serving follow-ups
+        let faults = Arc::new(FaultInjector::new(FaultPlan {
+            worker_panic: 1.0,
+            ..Default::default()
+        }));
+        let q = Arc::new(JobQueue::with_faults(8, Some(faults)));
+        let cache = Arc::new(ScheduleCache::new(1 << 22, 2));
+        let metrics = Arc::new(ServiceMetrics::new());
+        let (qq, cc, mm) = (q.clone(), cache.clone(), metrics.clone());
+        let worker = std::thread::spawn(move || qq.run_worker(&cc, &mm));
+        for seed in 30..33 {
+            let (fp, g, o) = workload(seed);
+            let job = match q.submit(fp, &g, o, &cache, None) {
+                Submit::New(j) => j,
+                _ => panic!("fresh workload must enqueue"),
+            };
+            let (result, _, _) = job.wait();
+            assert_eq!(result.unwrap_err(), JobError::Failed("optimizer panicked".into()));
+            assert!(cache.probe(fp).is_none(), "failed jobs must not be cached");
+        }
+        q.shutdown();
+        worker.join().unwrap();
     }
 }

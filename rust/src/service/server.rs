@@ -26,6 +26,15 @@
 //! `partition_threads` (default 1) — with many concurrent jobs the pool
 //! IS the parallelism; cranking per-job threads as well would thrash.
 //! Results are unaffected either way (thread-count invariance).
+//!
+//! Overload policy: requests may carry a `deadline_ms`; expired work is
+//! dropped at every stage (pre-enqueue, at dequeue, between optimizer
+//! stages) and answered with a hint-less `"deadline"` error.  When the
+//! queue saturates or a deadline cannot fit a full run, the server
+//! degrades (`degraded.rs`) instead of rejecting — unless
+//! `--no-degrade`.  A `--chaos` spec arms `faults.rs` hooks at the
+//! snapshot writer, the connection reader, and the worker loop; with
+//! chaos off every hook is a `None` check on the serving path.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -33,7 +42,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -42,11 +51,13 @@ use crate::util::json::Json;
 use crate::util::par;
 
 use super::cache::ScheduleCache;
-use super::fingerprint::fingerprint;
+use super::degraded;
+use super::faults::{FaultInjector, FaultPlan, FaultSite};
+use super::fingerprint::{fingerprint, Fingerprint};
 use super::metrics::{ServiceMetrics, Uptime};
 use super::persist::{self, LoadReport};
-use super::proto::{self, PersistInfo, Request};
-use super::queue::{JobQueue, Submit};
+use super::proto::{self, PersistInfo, Request, StatsView};
+use super::queue::{JobError, JobQueue, Submit};
 
 /// How often a blocked handler read re-checks the shutdown flag.
 const READ_TICK: Duration = Duration::from_millis(250);
@@ -141,6 +152,19 @@ pub struct ServeOpts {
     /// since the last write (checked on a 250 ms tick).  0 disables the
     /// periodic flush (shutdown still snapshots).
     pub snapshot_every: u64,
+    /// Rotated snapshot generations to keep on disk (min 1).
+    pub snapshot_keep: usize,
+    /// Wall-clock flush trigger: also snapshot whenever this many
+    /// seconds passed since the last write, even with fewer than
+    /// `snapshot_every` new insertions (a trickle of expensive
+    /// schedules should not sit exposed for hours).  0 disables it.
+    pub snapshot_interval_secs: u64,
+    /// Serve a fast fallback schedule instead of rejecting when the
+    /// queue is saturated or a deadline cannot fit a full run.
+    pub degrade: bool,
+    /// Fault-injection spec (`faults::FaultPlan::parse` syntax).  None
+    /// = chaos off and every hook compiles down to a no-op check.
+    pub chaos: Option<String>,
     /// Directory of `<name>.mtx` files backing `{"matrix":…}` specs.
     /// None = matrix specs are rejected.
     pub matrix_dir: Option<PathBuf>,
@@ -157,6 +181,10 @@ impl Default for ServeOpts {
             shards: 8,
             snapshot: None,
             snapshot_every: 64,
+            snapshot_keep: 3,
+            snapshot_interval_secs: 0,
+            degrade: true,
+            chaos: None,
             matrix_dir: None,
         }
     }
@@ -171,6 +199,9 @@ struct Persistence {
     /// `cache.insertion_count()` at the last snapshot — the periodic
     /// flusher compares against it on every tick.
     flushed_insertions: AtomicU64,
+    /// Wall-clock time of the last successful snapshot, for the
+    /// `snapshot_interval_secs` trigger.
+    last_flush: Mutex<Instant>,
     /// Remaining flusher ticks to skip after a failed save (only the
     /// flusher thread touches it; see SNAPSHOT_FAILURE_BACKOFF_TICKS).
     backoff_ticks: AtomicU64,
@@ -189,6 +220,8 @@ pub struct Server {
     /// Byte-bounded (MATRIX_MEMO_MAX_BYTES); content is pinned at
     /// first load (edit the file → restart the daemon).
     matrix_memo: Mutex<HashMap<String, Arc<Graph>>>,
+    /// Chaos injector (present iff `--chaos` / EPGRAPH_CHAOS is set).
+    faults: Option<Arc<FaultInjector>>,
     opts: ServeOpts,
 }
 
@@ -200,11 +233,19 @@ impl Server {
     pub fn bind(opts: ServeOpts) -> Result<Server> {
         let addr = SocketAddr::from(([127, 0, 0, 1], opts.port));
         let listener = TcpListener::bind(addr).map_err(|e| anyhow!("bind {addr}: {e}"))?;
+        let faults = match &opts.chaos {
+            None => None,
+            Some(spec) => {
+                let plan = FaultPlan::parse(spec).map_err(|e| anyhow!("--chaos: {e}"))?;
+                eprintln!("epgraph serve: CHAOS MODE — injecting faults ({spec})");
+                Some(Arc::new(FaultInjector::new(plan)))
+            }
+        };
         let cache = ScheduleCache::new(opts.cache_bytes, opts.shards);
         let persistence = match &opts.snapshot {
             None => None,
             Some(path) => {
-                let warm = persist::load(&cache, path)
+                let warm = persist::load_rotated(&cache, path)
                     .map_err(|e| anyhow!("warm-loading snapshot {path:?}: {e}"))?;
                 Some(Persistence {
                     path: path.clone(),
@@ -212,19 +253,21 @@ impl Server {
                     snapshots_written: AtomicU64::new(0),
                     last_snapshot_entries: AtomicU64::new(0),
                     flushed_insertions: AtomicU64::new(0),
+                    last_flush: Mutex::new(Instant::now()),
                     backoff_ticks: AtomicU64::new(0),
                 })
             }
         };
         Ok(Server {
             listener,
-            queue: JobQueue::new(opts.queue_cap),
+            queue: JobQueue::with_faults(opts.queue_cap, faults.clone()),
             cache,
             metrics: ServiceMetrics::new(),
             uptime: Uptime::new(),
             shutdown: AtomicBool::new(false),
             persistence,
             matrix_memo: Mutex::new(HashMap::new()),
+            faults,
             opts,
         })
     }
@@ -283,12 +326,16 @@ impl Server {
     }
 
     /// Periodic flusher: on a shutdown-aware tick, snapshot once
-    /// `snapshot_every` insertions accumulated since the last write.
+    /// `snapshot_every` insertions accumulated since the last write, OR
+    /// once `snapshot_interval_secs` of wall clock passed with at least
+    /// one new insertion (a low-churn server must not leave its few
+    /// expensive schedules exposed until the insertion trigger fires).
     fn flush_loop(&self) {
         let every = self.opts.snapshot_every;
+        let interval = self.opts.snapshot_interval_secs;
         while !self.shutdown.load(Ordering::Acquire) {
             std::thread::sleep(READ_TICK);
-            if every == 0 {
+            if every == 0 && interval == 0 {
                 continue; // periodic flush disabled; shutdown still saves
             }
             let p = self.persistence.as_ref().expect("flush_loop requires persistence");
@@ -301,7 +348,11 @@ impl Server {
                 .cache
                 .insertion_count()
                 .saturating_sub(p.flushed_insertions.load(Ordering::Relaxed));
-            if since >= every {
+            let count_due = every > 0 && since >= every;
+            let clock_due = interval > 0
+                && since > 0
+                && p.last_flush.lock().unwrap().elapsed() >= Duration::from_secs(interval);
+            if count_due || clock_due {
                 self.snapshot_now();
             }
         }
@@ -312,11 +363,18 @@ impl Server {
     fn snapshot_now(&self) {
         let Some(p) = &self.persistence else { return };
         let insertions = self.cache.insertion_count();
-        match persist::save(&self.cache, &p.path) {
+        let result = persist::save_rotated(
+            &self.cache,
+            &p.path,
+            self.opts.snapshot_keep,
+            self.faults.as_deref(),
+        );
+        match result {
             Ok(report) => {
                 p.snapshots_written.fetch_add(1, Ordering::Relaxed);
                 p.last_snapshot_entries.store(report.entries as u64, Ordering::Relaxed);
                 p.flushed_insertions.store(insertions, Ordering::Relaxed);
+                *p.last_flush.lock().unwrap() = Instant::now();
                 p.backoff_ticks.store(0, Ordering::Relaxed);
             }
             Err(e) => {
@@ -400,6 +458,15 @@ impl Server {
                     break; // framing is gone; drop the connection
                 }
                 Ok(LineRead::Line) => {
+                    // chaos: stall between framing a request and serving
+                    // it — models a slow/foreground-GC'd client socket
+                    // and shakes out ordering assumptions (deadlines must
+                    // burn down during the stall, shutdown must still
+                    // interrupt the handler)
+                    if let Some(d) = self.faults.as_ref().and_then(|f| f.delay(FaultSite::ReadDelay))
+                    {
+                        std::thread::sleep(d);
+                    }
                     let (stop, write_ok) = self.serve_buffered_line(&buf, &mut writer);
                     buf.clear();
                     if stop {
@@ -448,20 +515,23 @@ impl Server {
         };
         match req {
             Request::Health => proto::health_response(self.uptime.elapsed_ms()),
-            Request::Stats => proto::stats_response(
-                &self.metrics.snapshot(),
-                &self.cache.stats(),
-                self.uptime.elapsed_ms(),
-                self.workers(),
-                self.opts.queue_cap,
-                self.queue.pending_len(),
-                self.persist_info(),
-            ),
+            Request::Stats => proto::stats_response(StatsView {
+                metrics: &self.metrics.snapshot(),
+                cache: &self.cache.stats(),
+                uptime_ms: self.uptime.elapsed_ms(),
+                workers: self.workers(),
+                queue_cap: self.opts.queue_cap,
+                queue_pending: self.queue.pending_len(),
+                persist: self.persist_info(),
+                chaos: self.faults.as_ref().map(|f| f.stats_json()),
+            }),
             Request::Shutdown => {
                 *stop = true;
                 proto::shutdown_response()
             }
-            Request::Optimize { graph, opts } => self.serve_optimize(graph, opts),
+            Request::Optimize { graph, opts, deadline_ms } => {
+                self.serve_optimize(graph, opts, deadline_ms)
+            }
         }
     }
 
@@ -491,7 +561,34 @@ impl Server {
         }
     }
 
-    fn serve_optimize(&self, graph: proto::GraphSpec, mut opts: crate::coordinator::OptOptions) -> Json {
+    /// One expired-deadline response.  No retry hint: retrying an
+    /// already-blown deadline is pure waste — the client should widen
+    /// the deadline or drop the request, not hammer the queue.
+    fn deadline_error(&self) -> Json {
+        ServiceMetrics::bump(&self.metrics.errors);
+        ServiceMetrics::bump(&self.metrics.deadline_expired);
+        proto::error_response("deadline", None)
+    }
+
+    /// Serve the fast fallback schedule.  The result is rendered like
+    /// any other schedule but tagged `"cached":"degraded"` and — by
+    /// contract — never inserted into the cache: the fingerprint must
+    /// keep meaning "the full pipeline's answer" (degraded.rs).
+    fn serve_degraded(&self, fp: Fingerprint, g: &Graph, opts: &crate::coordinator::OptOptions) -> Json {
+        let t = Instant::now();
+        let entry = degraded::degraded_schedule(g, opts);
+        let run_ms = t.elapsed().as_secs_f64() * 1e3;
+        self.metrics.degraded.record(t.elapsed());
+        ServiceMetrics::bump(&self.metrics.served_degraded);
+        proto::optimize_response(fp, "degraded", &entry, None, Some(run_ms))
+    }
+
+    fn serve_optimize(
+        &self,
+        graph: proto::GraphSpec,
+        mut opts: crate::coordinator::OptOptions,
+        deadline_ms: Option<u64>,
+    ) -> Json {
         ServiceMetrics::bump(&self.metrics.requests);
         // the pool owns parallelism; per-job partitioner threads are a
         // server policy, never a client knob (results are invariant)
@@ -503,12 +600,30 @@ impl Server {
                 return proto::error_response(&format!("bad graph: {e}"), None);
             }
         };
+        let deadline = deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
         let fp = fingerprint(&g, &opts);
         if let Some(entry) = self.cache.get(fp) {
+            // a hit is near-free, so it is served even at deadline_ms=0;
+            // everything past this point needs optimizer time
             ServiceMetrics::bump(&self.metrics.served_hit);
             return proto::optimize_response(fp, "hit", &entry, None, None);
         }
-        match self.queue.submit(fp, &g, opts, &self.cache) {
+        if let Some(d) = deadline {
+            let remaining = d.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return self.deadline_error();
+            }
+            // degrade up front when the remaining budget cannot fit a
+            // full run by the observed mean — queueing a job we expect
+            // to cancel would waste both the slot and the wait
+            if self.opts.degrade {
+                let mean_ms = self.metrics.optimize.snapshot().mean_ms;
+                if mean_ms > 0.0 && (remaining.as_secs_f64() * 1e3) < mean_ms {
+                    return self.serve_degraded(fp, &g, &opts);
+                }
+            }
+        }
+        match self.queue.submit(fp, &g, opts.clone(), &self.cache, deadline) {
             Submit::Hit(entry) => {
                 // the job finished between the probe above and the
                 // enqueue — still a cache hit from the client's view
@@ -516,8 +631,15 @@ impl Server {
                 proto::optimize_response(fp, "hit", &entry, None, None)
             }
             Submit::Rejected { retry_after_ms, reason } => {
+                // a transient rejection (queue full) degrades instead
+                // when enabled — the client gets a usable schedule NOW
+                // rather than a retry hint.  Terminal rejections
+                // (shutdown, hint-less) always pass through.
+                if retry_after_ms.is_some() && self.opts.degrade {
+                    return self.serve_degraded(fp, &g, &opts);
+                }
                 ServiceMetrics::bump(&self.metrics.rejected);
-                proto::error_response(&reason, Some(retry_after_ms))
+                proto::error_response(&reason, retry_after_ms)
             }
             outcome @ (Submit::New(_) | Submit::Joined(_)) => {
                 let (job, cached) = match &outcome {
@@ -541,9 +663,15 @@ impl Server {
                             Some(run_time.as_secs_f64() * 1e3),
                         )
                     }
-                    Err(e) => {
+                    // the worker counted the job's expiry once; each
+                    // waiter only adds its own `errors` entry
+                    Err(JobError::Deadline) => {
                         ServiceMetrics::bump(&self.metrics.errors);
-                        proto::error_response(&format!("optimization failed: {e}"), None)
+                        proto::error_response("deadline", None)
+                    }
+                    Err(JobError::Failed(e)) => {
+                        ServiceMetrics::bump(&self.metrics.errors);
+                        proto::error_response(&format!("optimization failed: {e}"), Some(25))
                     }
                 }
             }
@@ -570,5 +698,26 @@ mod tests {
         assert!(o.queue_cap >= 1);
         assert!(o.cache_bytes >= 1 << 20);
         assert!(o.shards >= 1);
+        assert!(o.snapshot_keep >= 1);
+        assert!(o.degrade, "degradation is on by default");
+        assert!(o.chaos.is_none(), "chaos is strictly opt-in");
+    }
+
+    #[test]
+    fn bad_chaos_spec_fails_bind_loudly() {
+        let err = Server::bind(ServeOpts {
+            port: 0,
+            chaos: Some("worker_panic=2.0".to_string()),
+            ..Default::default()
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("chaos"), "{err}");
+        let err = Server::bind(ServeOpts {
+            port: 0,
+            chaos: Some("unknown_knob=0.1".to_string()),
+            ..Default::default()
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("chaos"), "{err}");
     }
 }

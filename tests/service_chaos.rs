@@ -1,0 +1,293 @@
+//! Chaos soak and deadline-semantics tests for `epgraph serve` (PR 6).
+//!
+//! A real `Server` runs on 127.0.0.1:0 with the `faults` hooks armed —
+//! snapshot write failures, torn snapshots, worker panics, stalled
+//! connection reads — while concurrent clients hammer it through the
+//! retry-discipline client.  The contracts under test:
+//!
+//!   * availability: the daemon keeps answering through injected faults
+//!     (a panicked worker fails ONE job, never the pool);
+//!   * integrity: every non-degraded success is bit-identical to a
+//!     direct `optimize_graph` run — chaos may slow or fail requests,
+//!     never corrupt them;
+//!   * accounting: `requests == served_hit + served_miss + served_joined
+//!     + served_degraded + rejected + errors` holds exactly after the
+//!     storm, and the `chaos` stats block reports what was injected;
+//!   * recovery: a chaos-free restart on the same (possibly torn,
+//!     possibly missing) snapshot path comes up clean and serves
+//!     bit-identically — the rotated-generation fallback contract;
+//!   * deadlines: an already-expired deadline is rejected before the
+//!     optimizer ever sees it; a too-tight deadline gets the degraded
+//!     fallback, which is deterministic and never cached.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use epgraph::coordinator::{optimize_graph, OptOptions};
+use epgraph::service::{proto, Backoff, Client, GraphSpec, RetryPolicy, ServeOpts, Server};
+use epgraph::util::json::Json;
+
+fn connect(addr: std::net::SocketAddr) -> Client {
+    Client::connect(addr).expect("connect")
+}
+
+fn roundtrip(client: &mut Client, line: &str) -> Json {
+    client.roundtrip_line(line).expect("roundtrip")
+}
+
+fn start_server(opts: ServeOpts) -> (Arc<Server>, std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let server = Arc::new(Server::bind(opts).expect("bind loopback"));
+    let addr = server.local_addr();
+    let handle = {
+        let server = server.clone();
+        std::thread::spawn(move || server.run().expect("server run"))
+    };
+    (server, addr, handle)
+}
+
+fn get_u64(j: &Json, key: &str) -> u64 {
+    j.get(key).and_then(Json::as_u64).unwrap_or_else(|| panic!("stats field {key}: {j:?}"))
+}
+
+fn assert_bit_identical(resp: &Json, expected: &epgraph::coordinator::OptimizedSchedule) {
+    let assign = resp.get("assign").and_then(Json::as_arr).expect("assign array");
+    assert_eq!(assign.len(), expected.partition.assign.len());
+    for (got, &want) in assign.iter().zip(&expected.partition.assign) {
+        assert_eq!(got.as_u64(), Some(want as u64), "assign diverged under chaos");
+    }
+    let layout = resp.get("layout").and_then(Json::as_arr).expect("layout array");
+    for (got, &want) in layout.iter().zip(&expected.layout.new_of_old) {
+        assert_eq!(got.as_u64(), Some(want as u64), "layout diverged under chaos");
+    }
+    assert_eq!(get_u64(resp, "quality"), expected.quality);
+}
+
+/// The capstone soak: concurrent clients vs every fault site at once.
+#[test]
+fn chaos_soak_stays_available_consistent_and_accountable() {
+    let dir = std::env::temp_dir().join(format!("epgraph-chaos-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let snap = dir.join("cache.snap");
+    let chaos =
+        "seed=7,snapshot_fail=0.3,snapshot_torn=0.3,worker_panic=0.3,read_delay=0.2,read_delay_ms=5";
+    let (_server, addr, handle) = start_server(ServeOpts {
+        port: 0,
+        threads: 2,
+        queue_cap: 8,
+        snapshot: Some(snap.clone()),
+        snapshot_every: 1,
+        snapshot_keep: 2,
+        chaos: Some(chaos.to_string()),
+        ..Default::default()
+    });
+
+    let workloads: Vec<(GraphSpec, OptOptions)> = vec![
+        (
+            GraphSpec::Gen { name: "cfd_mesh".into(), args: vec![16, 16, 1] },
+            OptOptions { k: 8, seed: 7, ..Default::default() },
+        ),
+        (
+            GraphSpec::Gen { name: "cfd_mesh".into(), args: vec![16, 16, 2] },
+            OptOptions { k: 4, seed: 9, ..Default::default() },
+        ),
+        (
+            GraphSpec::Gen { name: "cfd_mesh".into(), args: vec![12, 18, 3] },
+            OptOptions { k: 6, seed: 11, ..Default::default() },
+        ),
+    ];
+    let expected: Vec<_> = workloads
+        .iter()
+        .map(|(spec, opts)| optimize_graph(&spec.resolve().unwrap(), opts))
+        .collect();
+    let lines: Vec<String> = workloads
+        .iter()
+        .map(|(spec, opts)| proto::optimize_request(spec, opts).dump())
+        .collect();
+
+    const CLIENTS: usize = 8;
+    const PER_CLIENT: usize = 6;
+    let ok_count = AtomicU64::new(0);
+    let failed_count = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let (lines, expected, ok_count, failed_count) =
+                (&lines, &expected, &ok_count, &failed_count);
+            s.spawn(move || {
+                let mut client = connect(addr);
+                for r in 0..PER_CLIENT {
+                    let w = (c + r) % lines.len();
+                    // fresh per-request backoff, deterministically seeded
+                    // per (thread, request) so runs are reproducible
+                    let mut backoff = Backoff::new(RetryPolicy {
+                        seed: (c * 100 + r) as u64,
+                        base: Duration::from_millis(5),
+                        ..Default::default()
+                    });
+                    let resp = client
+                        .request_with_retry(&lines[w], &mut backoff)
+                        .expect("connection survives chaos");
+                    if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+                        ok_count.fetch_add(1, Ordering::Relaxed);
+                        // chaos must never corrupt a served schedule
+                        if resp.get("cached").and_then(Json::as_str) != Some("degraded") {
+                            assert_bit_identical(&resp, &expected[w]);
+                        }
+                    } else {
+                        // retries exhausted against repeated injected
+                        // panics — legal, but must be a clean error
+                        failed_count.fetch_add(1, Ordering::Relaxed);
+                        assert!(
+                            resp.get("error").and_then(Json::as_str).is_some(),
+                            "failure without an error field: {resp:?}"
+                        );
+                    }
+                }
+            });
+        }
+    });
+    let ok = ok_count.load(Ordering::Relaxed);
+    let failed = failed_count.load(Ordering::Relaxed);
+    assert_eq!(ok + failed, (CLIENTS * PER_CLIENT) as u64);
+    // availability: with p(panic)=0.3 and 8 retries, losing most of the
+    // mix means the pool died — the thing this harness exists to catch
+    assert!(ok >= (CLIENTS * PER_CLIENT / 2) as u64, "only {ok} requests succeeded");
+
+    // accounting: the identity must reconcile EXACTLY, chaos or not
+    let mut client = connect(addr);
+    let stats = roundtrip(&mut client, &proto::simple_request("stats").dump());
+    assert_eq!(
+        get_u64(&stats, "served_hit")
+            + get_u64(&stats, "served_miss")
+            + get_u64(&stats, "served_joined")
+            + get_u64(&stats, "served_degraded")
+            + get_u64(&stats, "rejected")
+            + get_u64(&stats, "errors"),
+        get_u64(&stats, "requests"),
+        "chaos broke the accounting identity: {stats:?}"
+    );
+    let chaos_stats = stats.get("chaos").expect("chaos block in stats");
+    assert!(
+        !matches!(chaos_stats, Json::Null),
+        "chaos stats must be present when injection is armed"
+    );
+    // the storm was long enough that at least one site actually fired
+    let injected_total: u64 = ["snapshot_fail", "snapshot_torn", "read_delay", "worker_panic"]
+        .iter()
+        .map(|k| get_u64(chaos_stats, k))
+        .sum();
+    assert!(injected_total > 0, "chaos armed but nothing injected: {chaos_stats:?}");
+
+    // clean shutdown THROUGH chaos (final snapshot may be injected-torn
+    // or injected-failed — both must leave run() returning Ok)
+    roundtrip(&mut client, &proto::simple_request("shutdown").dump());
+    handle.join().expect("server thread");
+
+    // ---- recovery: chaos OFF, same snapshot path (whatever survived)
+    let (_server, addr, handle) = start_server(ServeOpts {
+        port: 0,
+        threads: 2,
+        snapshot: Some(snap.clone()),
+        ..Default::default()
+    });
+    let mut client = connect(addr);
+    for (line, exp) in lines.iter().zip(&expected) {
+        let resp = roundtrip(&mut client, line);
+        assert_eq!(
+            resp.get("ok").and_then(Json::as_bool),
+            Some(true),
+            "chaos-free restart must serve: {resp:?}"
+        );
+        // warm hit or fresh miss, the answer is the same bits
+        assert_bit_identical(&resp, exp);
+    }
+    roundtrip(&mut client, &proto::simple_request("shutdown").dump());
+    handle.join().expect("server thread");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn expired_deadlines_are_rejected_before_the_optimizer() {
+    let (_server, addr, handle) =
+        start_server(ServeOpts { port: 0, threads: 1, ..Default::default() });
+    let mut client = connect(addr);
+
+    let spec = GraphSpec::Gen { name: "cfd_mesh".into(), args: vec![14, 14, 1] };
+    let opts = OptOptions { k: 4, seed: 2, ..Default::default() };
+    let line = proto::optimize_request_with_deadline(&spec, &opts, Some(0)).dump();
+    let resp = roundtrip(&mut client, &line);
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(resp.get("error").and_then(Json::as_str), Some("deadline"));
+    assert!(
+        resp.get("retry_after_ms").is_none(),
+        "deadline errors are terminal — no retry hint: {resp:?}"
+    );
+
+    let stats = roundtrip(&mut client, &proto::simple_request("stats").dump());
+    assert_eq!(get_u64(&stats, "errors"), 1);
+    assert_eq!(get_u64(&stats, "deadline_expired"), 1);
+    assert_eq!(
+        get_u64(stats.get("optimize_ms").expect("optimize_ms"), "count"),
+        0,
+        "the optimizer must never see an already-expired request"
+    );
+    // but the SAME workload without a deadline computes normally…
+    let resp = roundtrip(&mut client, &proto::optimize_request(&spec, &opts).dump());
+    assert_eq!(resp.get("cached").and_then(Json::as_str), Some("miss"));
+    // …and once cached, even a zero deadline is served (hits are free)
+    let resp = roundtrip(&mut client, &line);
+    assert_eq!(resp.get("cached").and_then(Json::as_str), Some("hit"), "{resp:?}");
+
+    roundtrip(&mut client, &proto::simple_request("shutdown").dump());
+    handle.join().expect("server thread");
+}
+
+#[test]
+fn tight_deadlines_get_the_degraded_fallback_which_is_never_cached() {
+    let (_server, addr, handle) =
+        start_server(ServeOpts { port: 0, threads: 1, ..Default::default() });
+    let mut client = connect(addr);
+
+    // establish an optimize-time observation with a full run: the
+    // degrade decision compares deadlines against this mean
+    let warm_spec = GraphSpec::Gen { name: "cfd_mesh".into(), args: vec![64, 64, 1] };
+    let warm_opts = OptOptions { k: 16, seed: 3, ..Default::default() };
+    let resp =
+        roundtrip(&mut client, &proto::optimize_request(&warm_spec, &warm_opts).dump());
+    assert_eq!(resp.get("cached").and_then(Json::as_str), Some("miss"));
+
+    // a NEW fingerprint with a deadline far below the observed mean
+    let spec = GraphSpec::Gen { name: "cfd_mesh".into(), args: vec![64, 64, 2] };
+    let opts = OptOptions { k: 16, seed: 4, ..Default::default() };
+    let line = proto::optimize_request_with_deadline(&spec, &opts, Some(5)).dump();
+    let resp = roundtrip(&mut client, &line);
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+    assert_eq!(resp.get("cached").and_then(Json::as_str), Some("degraded"));
+    assert_eq!(resp.get("degraded").and_then(Json::as_bool), Some(true));
+
+    // the fallback is deterministic: same bits as calling the degraded
+    // pipeline directly
+    let g = spec.resolve().unwrap();
+    let direct = epgraph::service::degraded::degraded_schedule(&g, &opts);
+    assert_bit_identical(&resp, &direct.schedule);
+
+    let stats = roundtrip(&mut client, &proto::simple_request("stats").dump());
+    assert_eq!(get_u64(&stats, "served_degraded"), 1, "{stats:?}");
+    assert_eq!(get_u64(stats.get("degraded_ms").expect("degraded_ms"), "count"), 1);
+
+    // degraded answers are never cached: the same workload without a
+    // deadline is a MISS that runs the full pipeline…
+    let resp = roundtrip(&mut client, &proto::optimize_request(&spec, &opts).dump());
+    assert_eq!(
+        resp.get("cached").and_then(Json::as_str),
+        Some("miss"),
+        "a degraded response must not poison the cache: {resp:?}"
+    );
+    assert_eq!(resp.get("degraded").and_then(Json::as_bool), Some(false));
+    // …bit-identical to the direct full run, like any other miss
+    assert_bit_identical(&resp, &optimize_graph(&g, &opts));
+
+    roundtrip(&mut client, &proto::simple_request("shutdown").dump());
+    handle.join().expect("server thread");
+}

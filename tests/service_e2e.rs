@@ -180,6 +180,7 @@ fn health_and_malformed_requests_do_not_disturb_serving() {
         get_u64(&stats, "served_hit")
             + get_u64(&stats, "served_miss")
             + get_u64(&stats, "served_joined")
+            + get_u64(&stats, "served_degraded")
             + get_u64(&stats, "rejected")
             + get_u64(&stats, "errors"),
         get_u64(&stats, "requests"),
