@@ -1,27 +1,55 @@
 //! Serving-layer benchmarks: cache hit-path latency over real loopback
-//! TCP, singleflight fan-in, and the raw cache/fingerprint costs.
+//! TCP, the raw cache/fingerprint costs, and the PR 7 headline — the
+//! event-driven reactor's pipelined hit-path throughput at ≥1k open
+//! connections against an in-bench thread-per-connection baseline.
 //!
 //!     cargo bench --offline --bench service
 //!
-//! Set EPGRAPH_BENCH_SMOKE=1 for a fast CI-sized run.  Results are
-//! printed (not written to BENCH_partition.json — the serving numbers
-//! are latency distributions, not the ratio metrics the regression gate
-//! consumes; PERF.md records representative figures).
+//! Set EPGRAPH_BENCH_SMOKE=1 for a fast CI-sized run (1024 connections;
+//! the full run opens 10k and wants `ulimit -n` ≥ 32768).  Latency rows
+//! are printed; the throughput comparison is also written to
+//! BENCH_service.json for the CI regression gate (`serve_pipelined_speedup`
+//! is the gated ratio — wall-clock rps is machine-dependent and is not).
+//!
+//! The baseline server is deliberately the pre-PR-7 shape: one blocking
+//! 128KiB-stack thread per accepted connection, sharing the exact same
+//! per-request hit path as the reactor (decode -> resolve -> fingerprint
+//! -> cache.get -> encode), so the measured gap is the architecture —
+//! pipelining plus micro-batched writes — not a different code path.
 //!
 //! criterion is unavailable offline; this uses the in-repo harness
 //! (epgraph::util::benchkit).
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use epgraph::coordinator::{optimize_graph_with_breakdown, OptOptions};
 use epgraph::service::{
-    fingerprint, proto, CachedSchedule, Client, GraphSpec, ScheduleCache, ServeOpts, Server,
+    fingerprint, proto, CachedSchedule, Client, GraphSpec, PipelinedClient, ScheduleCache,
+    ServeOpts, Server,
 };
-use epgraph::util::benchkit::bench;
+use epgraph::util::benchkit::{bench, JsonReport};
+use epgraph::util::json::Json;
+
+/// Client-side driver threads for the throughput phases.  All N
+/// connections stay open on the server for the whole phase; the drivers
+/// cycle through their share issuing bursts, so the server always holds
+/// N live sockets while ~DRIVERS of them carry traffic at any instant.
+const DRIVERS: usize = 8;
+
+/// Give up on a throughput phase below this many connections — the
+/// "at ≥1k connections" headline would be meaningless.
+const MIN_CONNS: usize = 64;
 
 fn main() {
     let smoke = std::env::var("EPGRAPH_BENCH_SMOKE").is_ok();
     let iters = if smoke { 200 } else { 2000 };
+    let want_conns = if smoke { 1024 } else { 10_000 };
+    let reqs_per_conn = if smoke { 16 } else { 32 };
+    let depth = 32;
 
     let spec = GraphSpec::Gen { name: "cfd_mesh".into(), args: vec![24, 24, 1] };
     let opts = OptOptions { k: 8, seed: 7, ..Default::default() };
@@ -39,12 +67,12 @@ fn main() {
 
     let (sched, bd) = optimize_graph_with_breakdown(&g, &opts);
     let entry = Arc::new(CachedSchedule::new(sched, bd));
-    let cache = ScheduleCache::new(64 << 20, 8);
+    let cache = Arc::new(ScheduleCache::new(64 << 20, 8));
     let fp = fingerprint(&g, &opts);
     cache.insert(fp, entry);
     println!("{}", bench("cache get (hit, in-process)", 10, iters, || cache.get(fp)).row());
 
-    // --- end-to-end hit path over loopback TCP -------------------------
+    // --- end-to-end hit path over loopback TCP (reactor) ---------------
     let server = Arc::new(
         Server::bind(ServeOpts { port: 0, threads: 2, ..Default::default() })
             .expect("bind loopback"),
@@ -73,8 +101,230 @@ fn main() {
         .row()
     );
 
+    // --- throughput: pipelined reactor vs thread-per-connection --------
+    println!("\n## hit-path throughput at scale (target {want_conns} conns)\n");
+
+    // Baseline first, against its own throwaway server, so its threads
+    // are gone before the reactor phase opens its connection flood.
+    let (base_addr, base_stop) = spawn_baseline_server(cache.clone());
+    let (blocking_rps, blocking_conns) =
+        blocking_throughput(base_addr, &line, want_conns, reqs_per_conn);
+    base_stop.store(true, Ordering::Release);
+    let _ = TcpStream::connect(base_addr); // unblock the accept loop
+    println!(
+        "thread-per-conn baseline: {blocking_conns} conns x {reqs_per_conn} req, depth 1  \
+         -> {blocking_rps:.0} req/s"
+    );
+
+    let (pipelined_rps, pipelined_conns) =
+        pipelined_throughput(addr, &line, want_conns, reqs_per_conn, depth);
+    let speedup = pipelined_rps / blocking_rps;
+    println!(
+        "pipelined reactor:        {pipelined_conns} conns x {reqs_per_conn} req, depth {depth} \
+         -> {pipelined_rps:.0} req/s"
+    );
+    println!("serve_pipelined_speedup: {speedup:.2}x");
+
     let stats = client.roundtrip_line(&proto::simple_request("stats").dump()).expect("stats");
     println!("\nstats after run: {}", stats.dump());
     client.roundtrip_line(&proto::simple_request("shutdown").dump()).expect("shutdown");
     run.join().expect("server thread");
+
+    let mut report = JsonReport::new();
+    report
+        .str("bench", "service")
+        .str("mode", if smoke { "smoke" } else { "full" })
+        .str("workload", "cfd_mesh:24,24,1 k=8")
+        .int("conns_blocking", blocking_conns as u64)
+        .int("conns_pipelined", pipelined_conns as u64)
+        .int("requests_per_conn", reqs_per_conn as u64)
+        .int("pipeline_depth", depth as u64)
+        .num("serve_blocking_rps", blocking_rps)
+        .num("serve_pipelined_rps", pipelined_rps)
+        .num("serve_pipelined_speedup", speedup);
+    report.write("BENCH_service.json").expect("write BENCH_service.json");
+    println!("\nwrote BENCH_service.json");
+}
+
+/// The pre-reactor server shape: blocking accept loop, one 128KiB-stack
+/// handler thread per connection, strict request->response lockstep.
+/// Serves only the warmed hit path — identical per-request work to the
+/// reactor (decode, resolve, fingerprint, cache.get, encode).
+fn spawn_baseline_server(cache: Arc<ScheduleCache>) -> (SocketAddr, Arc<AtomicBool>) {
+    let listener = TcpListener::bind(("127.0.0.1", 0)).expect("bind baseline");
+    let addr = listener.local_addr().expect("baseline addr");
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            if stop2.load(Ordering::Acquire) {
+                break;
+            }
+            let Ok(stream) = conn else { continue };
+            let cache = cache.clone();
+            let spawned = std::thread::Builder::new()
+                .name("bench-baseline-conn".into())
+                .stack_size(128 << 10)
+                .spawn(move || baseline_conn(stream, &cache));
+            if spawned.is_err() {
+                // Thread exhaustion: drop the connection; the client's
+                // connect-or-roundtrip failure triggers its fallback.
+                continue;
+            }
+        }
+    });
+    (addr, stop)
+}
+
+fn baseline_conn(stream: TcpStream, cache: &ScheduleCache) {
+    stream.set_nodelay(true).ok();
+    let Ok(mut writer) = stream.try_clone() else { return };
+    let reader = BufReader::new(stream);
+    for raw in reader.lines() {
+        let Ok(raw) = raw else { return };
+        let resp = baseline_reply(&raw, cache);
+        if writer.write_all(resp.dump().as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
+            return;
+        }
+    }
+}
+
+fn baseline_reply(raw: &str, cache: &ScheduleCache) -> Json {
+    let parsed = match Json::parse(raw) {
+        Ok(j) => j,
+        Err(e) => return proto::error_response(&format!("bad json: {e}"), None),
+    };
+    let id = proto::request_id(&parsed);
+    let req = match proto::decode_request(&parsed) {
+        Ok(r) => r,
+        Err(e) => return proto::Reply::Error { msg: e, retry_after_ms: None }.encode(id.as_ref()),
+    };
+    let proto::Op::Optimize { graph, opts, .. } = req.op else {
+        return proto::Reply::Error {
+            msg: "baseline serves optimize only".into(),
+            retry_after_ms: None,
+        }
+        .encode(id.as_ref());
+    };
+    let g = match graph.resolve() {
+        Ok(g) => g,
+        Err(e) => return proto::Reply::Error { msg: e, retry_after_ms: None }.encode(id.as_ref()),
+    };
+    let fp = fingerprint(&g, &opts);
+    match cache.get(fp) {
+        Some(entry) => proto::Reply::Schedule {
+            fp,
+            cached: "hit",
+            entry: &entry,
+            queue_ms: None,
+            optimize_ms: None,
+        }
+        .encode(id.as_ref()),
+        None => proto::Reply::Error { msg: "baseline cache cold".into(), retry_after_ms: None }
+            .encode(id.as_ref()),
+    }
+}
+
+/// Open up to `want` blocking clients, then drive `reqs` lockstep
+/// roundtrips on each from DRIVERS threads.  Returns (req/s, conns).
+fn blocking_throughput(addr: SocketAddr, line: &str, want: usize, reqs: usize) -> (f64, usize) {
+    let mut clients = Vec::with_capacity(want);
+    for _ in 0..want {
+        match Client::connect(addr) {
+            Ok(c) => clients.push(c),
+            Err(e) => {
+                eprintln!("baseline connect fallback at {} conns: {e}", clients.len());
+                break;
+            }
+        }
+    }
+    let conns = clients.len();
+    assert!(conns >= MIN_CONNS, "only {conns} baseline connections — raise ulimit -n");
+
+    let done = AtomicU64::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for chunk in chunks(clients, DRIVERS) {
+            let done = &done;
+            s.spawn(move || {
+                let mut chunk = chunk;
+                for client in chunk.iter_mut() {
+                    for _ in 0..reqs {
+                        let resp = client.roundtrip_line(line).expect("baseline roundtrip");
+                        assert_eq!(resp.get("cached").and_then(|v| v.as_str()), Some("hit"));
+                        done.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let total = done.load(Ordering::Relaxed);
+    assert_eq!(total as usize, conns * reqs, "baseline lost responses");
+    (total as f64 / secs.max(1e-9), conns)
+}
+
+/// Open up to `want` pipelined clients against the reactor, then drive
+/// a `depth`-deep sliding window of `reqs` requests on each from
+/// DRIVERS threads.  Returns (req/s, conns).
+fn pipelined_throughput(
+    addr: SocketAddr,
+    line: &str,
+    want: usize,
+    reqs: usize,
+    depth: usize,
+) -> (f64, usize) {
+    let req = Json::parse(line).expect("request json");
+    let mut clients = Vec::with_capacity(want);
+    for _ in 0..want {
+        match PipelinedClient::connect(addr) {
+            Ok(c) => clients.push(c),
+            Err(e) => {
+                eprintln!("reactor connect fallback at {} conns: {e}", clients.len());
+                break;
+            }
+        }
+    }
+    let conns = clients.len();
+    assert!(conns >= MIN_CONNS, "only {conns} reactor connections — raise ulimit -n");
+
+    let done = AtomicU64::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for chunk in chunks(clients, DRIVERS) {
+            let (done, req) = (&done, &req);
+            s.spawn(move || {
+                let mut chunk = chunk;
+                for client in chunk.iter_mut() {
+                    let mut sent = 0usize;
+                    let mut got = 0usize;
+                    while got < reqs {
+                        while sent < reqs && client.in_flight() < depth {
+                            client.submit(req).expect("submit");
+                            sent += 1;
+                        }
+                        let (_ticket, resp) = client.recv().expect("pipelined recv");
+                        assert_eq!(resp.get("cached").and_then(|v| v.as_str()), Some("hit"));
+                        got += 1;
+                        done.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let total = done.load(Ordering::Relaxed);
+    assert_eq!(total as usize, conns * reqs, "reactor lost responses");
+    (total as f64 / secs.max(1e-9), conns)
+}
+
+/// Split `items` into at most `n` contiguous chunks of near-equal size.
+fn chunks<T>(mut items: Vec<T>, n: usize) -> Vec<Vec<T>> {
+    let per = items.len().div_ceil(n).max(1);
+    let mut out = Vec::new();
+    while !items.is_empty() {
+        let take = per.min(items.len());
+        out.push(items.drain(..take).collect());
+    }
+    out
 }

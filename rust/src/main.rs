@@ -13,7 +13,8 @@
 //!   epgraph client    [--addr HOST:PORT] [--op optimize|stats|health|shutdown]
 //!                     [--gen SPEC | --matrix NAME]
 //!                     [--k N] [--seed S] [--repeat N] [--concurrency N] [--verify]
-//!                     [--deadline-ms N] [--max-retries N] [--retry-budget-ms N]
+//!                     [--pipeline N] [--deadline-ms N] [--max-retries N]
+//!                     [--retry-budget-ms N]
 //!   epgraph info
 
 use std::collections::HashMap;
@@ -98,7 +99,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                  epgraph bench-compare <baseline.json> <current.json> [--tol 0.25]\n  \
                  epgraph artifacts [--outdir DIR] [--configs t0,s1,m1]\n  \
                  epgraph serve [--port 7878] [--threads 0] [--partition-threads 1] [--queue-cap 64] [--cache-mb 64] [--shards 8]\n                [--snapshot cache.snap] [--snapshot-every 64] [--snapshot-keep 3] [--snapshot-interval 0]\n                [--no-degrade] [--chaos seed=7,worker_panic=0.1,...] [--matrix-dir DIR]\n  \
-                 epgraph client [--addr 127.0.0.1:7878] [--op optimize|stats|health|shutdown] [--gen cfd_mesh:24,24,1 | --matrix NAME]\n                 [--k N] [--seed S] [--method M] [--repeat 1] [--concurrency 1] [--verify]\n                 [--deadline-ms N] [--max-retries 8] [--retry-budget-ms 30000]\n  \
+                 epgraph client [--addr 127.0.0.1:7878] [--op optimize|stats|health|shutdown] [--gen cfd_mesh:24,24,1 | --matrix NAME]\n                 [--k N] [--seed S] [--method M] [--repeat 1] [--concurrency 1] [--verify] [--pipeline N]\n                 [--deadline-ms N] [--max-retries 8] [--retry-budget-ms 30000]\n  \
                  epgraph info"
             );
             Ok(())
@@ -422,13 +423,25 @@ fn cmd_client(flags: &HashMap<String, String>) -> Result<()> {
     let repeat = get_usize(flags, "repeat", 1).max(1);
     let concurrency = get_usize(flags, "concurrency", 1).clamp(1, repeat);
     let verify = flags.contains_key("verify");
+    let pipeline = get_usize(flags, "pipeline", 0);
     let deadline_ms =
         flags.get("deadline-ms").map(|v| v.parse::<u64>().map_err(|_| anyhow!("bad --deadline-ms"))).transpose()?;
-    let retry_policy = epgraph::service::RetryPolicy {
-        max_retries: get_usize(flags, "max-retries", 8) as u32,
-        budget: std::time::Duration::from_millis(get_usize(flags, "retry-budget-ms", 30_000) as u64),
-        ..Default::default()
-    };
+    let retry_policy = epgraph::service::RetryPolicy::builder()
+        .max_retries(get_usize(flags, "max-retries", 8) as u32)
+        .budget(std::time::Duration::from_millis(get_usize(flags, "retry-budget-ms", 30_000) as u64))
+        .build();
+
+    if pipeline > 0 {
+        anyhow::ensure!(
+            !verify,
+            "--verify compares one blocking response at a time — drop --pipeline to verify"
+        );
+        anyhow::ensure!(
+            concurrency <= 1,
+            "--pipeline multiplexes one connection; it does not combine with --concurrency"
+        );
+        return run_pipelined(&addr, &spec, &opts, deadline_ms, repeat, pipeline);
+    }
 
     // one request line shared by every connection; the expected schedule
     // (for --verify) comes from the same resolution path the server uses
@@ -571,6 +584,56 @@ fn cmd_client(flags: &HashMap<String, String>) -> Result<()> {
             }
         );
     }
+    Ok(())
+}
+
+/// The `--pipeline N` client path: one connection, a sliding window of
+/// N id-stamped requests in flight, responses consumed in whatever
+/// order the server completes them (`PipelinedClient::recv` refuses
+/// responses that do not pair with an outstanding ticket, so finishing
+/// at all proves every response was id-matched).
+fn run_pipelined(
+    addr: &str,
+    spec: &epgraph::service::proto::GraphSpec,
+    opts: &epgraph::coordinator::OptOptions,
+    deadline_ms: Option<u64>,
+    repeat: usize,
+    depth: usize,
+) -> Result<()> {
+    use epgraph::service::proto;
+
+    let req = proto::optimize_request_with_deadline(spec, opts, deadline_ms);
+    let mut client = epgraph::service::PipelinedClient::connect(addr)?;
+    let (mut hits, mut joins, mut misses, mut degraded) = (0u64, 0u64, 0u64, 0u64);
+    let mut sent = 0usize;
+    let mut done = 0usize;
+    let t0 = std::time::Instant::now();
+    while done < repeat {
+        while sent < repeat && client.in_flight() < depth {
+            client.submit(&req)?;
+            sent += 1;
+        }
+        let (_ticket, resp) = client.recv()?;
+        anyhow::ensure!(
+            resp.get("ok").and_then(|v| v.as_bool()) == Some(true),
+            "request failed: {}",
+            resp.get("error").and_then(|v| v.as_str()).unwrap_or("unknown error")
+        );
+        match resp.get("cached").and_then(|v| v.as_str()) {
+            Some("hit") => hits += 1,
+            Some("joined") => joins += 1,
+            Some("degraded") => degraded += 1,
+            _ => misses += 1,
+        }
+        done += 1;
+    }
+    let wall = t0.elapsed();
+    println!(
+        "client: {done} ok (hit {hits}, joined {joins}, miss {misses}, degraded {degraded}), \
+         pipeline depth {depth}, all responses id-matched, wall {:.3}s ({:.0} req/s)",
+        wall.as_secs_f64(),
+        done as f64 / wall.as_secs_f64().max(1e-9)
+    );
     Ok(())
 }
 

@@ -930,6 +930,11 @@ pub fn partition_kway(g: &WGraph, k: usize, opts: &VpOpts) -> Vec<u32> {
     part
 }
 
+/// The coarsening ladder: each rung pairs a finer graph with the cmap
+/// projecting its vertices onto the next-coarser level; the second
+/// element is the coarsest graph the chain bottomed out at.
+type CoarsenLadder = (Vec<(WGraph, Vec<u32>)>, WGraph);
+
 /// Coarsen `g` down to ~`target` vertices.  Returns the chain of
 /// (finer graph, cmap) pairs plus the coarsest graph.  All scratch
 /// lives in `ws`; per level only the output graph + cmap allocate.
@@ -940,7 +945,7 @@ fn coarsen_chain(
     seed: u64,
     threads: usize,
     ws: &mut VpWorkspace,
-) -> (Vec<(WGraph, Vec<u32>)>, WGraph) {
+) -> CoarsenLadder {
     let mut levels: Vec<(WGraph, Vec<u32>)> = Vec::new();
     let mut cur = g.clone();
     let mut level = 0u64;

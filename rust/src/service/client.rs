@@ -1,8 +1,18 @@
-//! Minimal blocking client for the JSON-lines protocol — the one place
-//! the wire framing (connect, one request line out, one response line
-//! in) is implemented.  The `epgraph client` CLI, the e2e suite, and
-//! the service bench all drive the daemon through this type, so a
-//! protocol change can never leave one of those surfaces behind.
+//! Client surfaces for the JSON-lines protocol — the one place the
+//! wire framing is implemented.  Two shapes, one wire:
+//!
+//!   * [`Client`] — blocking one-shot: one request line out, block for
+//!     its response.  The simplest thing that can verify a server, and
+//!     exactly what `--verify`, the retry loop, and most tests want.
+//!   * [`PipelinedClient`] — protocol-2 pipelining: `submit` stamps
+//!     each request with a client-chosen numeric `"id"` and buffers it,
+//!     `recv` returns `(Ticket, response)` pairs in whatever order the
+//!     server completes them.  Keeping N requests in flight is how the
+//!     hit path reaches syscall-batched throughput (see PERF.md).
+//!
+//! The `epgraph client` CLI, the e2e suite, and the service bench all
+//! drive the daemon through these types, so a protocol change can
+//! never leave one of those surfaces behind.
 //!
 //! ## Retry discipline
 //!
@@ -17,6 +27,7 @@
 //! (or a fleet of CLI threads seeded per-thread) gets reproducible
 //! schedules while real concurrent clients still decorrelate.
 
+use std::collections::HashSet;
 use std::io::{BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
@@ -25,6 +36,11 @@ use anyhow::{anyhow, Result};
 
 use crate::util::json::{Json, JsonLines};
 use crate::util::rng::Pcg32;
+
+/// Opportunistic-flush threshold for the pipelined write buffer: a
+/// burst of submits coalesces into few large writes without letting the
+/// buffer grow unboundedly between `recv` calls.
+const PIPELINE_FLUSH_BYTES: usize = 32 << 10;
 
 /// Knobs for [`Backoff`].  The defaults suit an interactive CLI: give
 /// up within ~30 s, never sleep longer than 2 s at a stretch.
@@ -51,6 +67,59 @@ impl Default for RetryPolicy {
             cap: Duration::from_secs(2),
             seed: 0xEB0FF,
         }
+    }
+}
+
+impl RetryPolicy {
+    /// Start from the defaults and override the knobs you care about.
+    /// The builder is the supported construction path: adding a policy
+    /// knob later does not break `RetryPolicy::builder().seed(s).build()`
+    /// call sites the way it breaks struct literals.
+    pub fn builder() -> RetryPolicyBuilder {
+        RetryPolicyBuilder { policy: RetryPolicy::default() }
+    }
+}
+
+/// Builder for [`RetryPolicy`] — see [`RetryPolicy::builder`].
+#[derive(Clone, Debug)]
+pub struct RetryPolicyBuilder {
+    policy: RetryPolicy,
+}
+
+impl RetryPolicyBuilder {
+    /// Retries after the first attempt (total attempts = this + 1).
+    pub fn max_retries(mut self, n: u32) -> Self {
+        self.policy.max_retries = n;
+        self
+    }
+
+    /// Total sleep budget across all retries.
+    pub fn budget(mut self, d: Duration) -> Self {
+        self.policy.budget = d;
+        self
+    }
+
+    /// First-retry base delay (doubles each attempt before jitter).
+    pub fn base(mut self, d: Duration) -> Self {
+        self.policy.base = d;
+        self
+    }
+
+    /// Per-sleep ceiling after jitter.
+    pub fn cap(mut self, d: Duration) -> Self {
+        self.policy.cap = d;
+        self
+    }
+
+    /// Jitter seed — fix it for a reproducible schedule; derive it
+    /// per-thread for decorrelated concurrent clients.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.policy.seed = s;
+        self
+    }
+
+    pub fn build(self) -> RetryPolicy {
+        self.policy
     }
 }
 
@@ -152,6 +221,111 @@ impl Client {
     }
 }
 
+/// Handle to one in-flight pipelined request: compare it against the
+/// ticket `recv` hands back to correlate responses submitted out of
+/// order.  The inner value is the `"id"` stamped on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Ticket(u64);
+
+impl Ticket {
+    /// The numeric protocol-2 `"id"` this ticket rides under.
+    pub fn id(self) -> u64 {
+        self.0
+    }
+}
+
+/// Pipelined protocol-2 client: many requests in flight on one
+/// connection.  `submit` never reads and `recv` never blocks on the
+/// write side, so a caller can keep a fixed depth of requests
+/// outstanding — the shape that turns per-request round-trip latency
+/// into line-rate throughput on the server's hit path.
+///
+/// Ids are client-assigned sequence numbers; the server echoes them
+/// verbatim and answers in completion order, so responses may arrive in
+/// any order relative to submission.  Responses without a known id
+/// (a non-pipelined server, or a crossed wire) are an error — silently
+/// mis-pairing results would be far worse.
+pub struct PipelinedClient {
+    lines: JsonLines<BufReader<TcpStream>>,
+    writer: TcpStream,
+    outbuf: String,
+    next_id: u64,
+    inflight: HashSet<u64>,
+}
+
+impl PipelinedClient {
+    pub fn connect<A: ToSocketAddrs + std::fmt::Display>(addr: A) -> Result<PipelinedClient> {
+        let writer = TcpStream::connect(&addr).map_err(|e| anyhow!("connect {addr}: {e}"))?;
+        writer.set_nodelay(true).ok();
+        let reader =
+            BufReader::new(writer.try_clone().map_err(|e| anyhow!("clone stream: {e}"))?);
+        Ok(PipelinedClient {
+            lines: JsonLines::new(reader),
+            writer,
+            outbuf: String::new(),
+            next_id: 0,
+            inflight: HashSet::new(),
+        })
+    }
+
+    /// Stamp the request with a fresh `"id"`, buffer it, and return its
+    /// ticket.  The line goes out on the next `flush`/`recv` (or
+    /// immediately once the buffer passes PIPELINE_FLUSH_BYTES).  Any
+    /// `"id"` already on the request is replaced — ticket bookkeeping
+    /// only works when this client owns the id space.
+    pub fn submit(&mut self, req: &Json) -> Result<Ticket> {
+        let mut req = req.clone();
+        let Json::Obj(m) = &mut req else {
+            return Err(anyhow!("pipelined request must be a JSON object"));
+        };
+        let id = self.next_id;
+        self.next_id += 1;
+        m.insert("id".to_string(), Json::Num(id as f64));
+        self.outbuf.push_str(&req.dump());
+        self.outbuf.push('\n');
+        self.inflight.insert(id);
+        if self.outbuf.len() >= PIPELINE_FLUSH_BYTES {
+            self.flush()?;
+        }
+        Ok(Ticket(id))
+    }
+
+    /// Push every buffered request line to the socket.
+    pub fn flush(&mut self) -> Result<()> {
+        if !self.outbuf.is_empty() {
+            self.writer.write_all(self.outbuf.as_bytes()).map_err(|e| anyhow!("send: {e}"))?;
+            self.writer.flush().map_err(|e| anyhow!("send: {e}"))?;
+            self.outbuf.clear();
+        }
+        Ok(())
+    }
+
+    /// Block for the next response (flushing buffered submits first —
+    /// waiting for an answer to a request still in our buffer would
+    /// deadlock).  Returns the ticket it answers plus the response.
+    pub fn recv(&mut self) -> Result<(Ticket, Json)> {
+        self.flush()?;
+        let resp = self
+            .lines
+            .next_value()
+            .map_err(|e| anyhow!("recv: {e}"))?
+            .ok_or_else(|| anyhow!("server closed with {} requests in flight", self.inflight.len()))?;
+        let id = resp
+            .get("id")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("response carries no pipelined id: {}", resp.dump()))?;
+        if !self.inflight.remove(&id) {
+            return Err(anyhow!("response for unknown or already-answered ticket {id}"));
+        }
+        Ok((Ticket(id), resp))
+    }
+
+    /// Requests submitted but not yet answered.
+    pub fn in_flight(&self) -> usize {
+        self.inflight.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -220,6 +394,73 @@ mod tests {
         }
         assert!(total <= Duration::from_millis(100), "slept {total:?} past the budget");
         assert!(n >= 2, "budget should allow at least a couple of 40 ms sleeps");
+    }
+
+    #[test]
+    fn builder_overrides_only_what_it_is_told() {
+        let p = RetryPolicy::builder()
+            .max_retries(3)
+            .seed(99)
+            .cap(Duration::from_millis(123))
+            .build();
+        assert_eq!(p.max_retries, 3);
+        assert_eq!(p.seed, 99);
+        assert_eq!(p.cap, Duration::from_millis(123));
+        // untouched knobs keep their defaults
+        let d = RetryPolicy::default();
+        assert_eq!(p.budget, d.budget);
+        assert_eq!(p.base, d.base);
+        // and a builder-made policy drives Backoff exactly like a
+        // hand-rolled one with the same knobs
+        let mut a = Backoff::new(p);
+        let mut b = Backoff::new(RetryPolicy { max_retries: 3, seed: 99, cap: Duration::from_millis(123), ..d });
+        for _ in 0..4 {
+            assert_eq!(a.next_delay(None), b.next_delay(None));
+        }
+    }
+
+    /// Out-of-order pipelining against a scripted peer: three submits,
+    /// responses come back newest-first, and every recv still pairs the
+    /// right ticket with the right body.
+    #[test]
+    fn pipelined_client_matches_out_of_order_responses() {
+        use std::io::{BufRead, BufReader as StdBufReader};
+        use std::net::TcpListener;
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let peer = std::thread::spawn(move || {
+            let (sock, _) = listener.accept().unwrap();
+            let mut lines = StdBufReader::new(sock.try_clone().unwrap()).lines();
+            let mut ids = Vec::new();
+            for _ in 0..3 {
+                let line = lines.next().unwrap().unwrap();
+                let req = Json::parse(&line).unwrap();
+                ids.push(req.get("id").and_then(Json::as_u64).expect("submit stamps an id"));
+            }
+            let mut sock = sock;
+            for id in ids.iter().rev() {
+                writeln!(sock, "{{\"id\":{id},\"ok\":true,\"echo\":{id}}}").unwrap();
+            }
+        });
+
+        let mut c = PipelinedClient::connect(addr).unwrap();
+        let req = Json::parse(r#"{"op":"health"}"#).unwrap();
+        let t0 = c.submit(&req).unwrap();
+        let t1 = c.submit(&req).unwrap();
+        let t2 = c.submit(&req).unwrap();
+        assert_eq!(c.in_flight(), 3);
+        assert_ne!(t0, t1);
+
+        let (first, body) = c.recv().unwrap();
+        assert_eq!(first, t2, "peer answered newest-first");
+        assert_eq!(body.get("echo").and_then(Json::as_u64), Some(t2.id()));
+        let (second, _) = c.recv().unwrap();
+        let (third, _) = c.recv().unwrap();
+        assert_eq!((second, third), (t1, t0));
+        assert_eq!(c.in_flight(), 0);
+        assert!(c.recv().is_err(), "peer hung up; recv must fail, not hang forever");
+        peer.join().unwrap();
     }
 
     #[test]

@@ -126,6 +126,19 @@ pub struct ServiceMetrics {
     pub deadline_expired: AtomicU64,
     /// lines that never parsed into a request (not counted in `requests`)
     pub bad_requests: AtomicU64,
+    /// connections currently registered with the reactor (gauge)
+    pub connections: AtomicU64,
+    /// connections accepted over the server's lifetime
+    pub connections_total: AtomicU64,
+    /// response lines appended to connection write buffers
+    pub responses: AtomicU64,
+    /// successful `write(2)` calls the reactor issued; with micro-
+    /// batching `responses / write_syscalls` is the mean flush batch
+    /// size — the pipelining win the bench headline measures
+    pub write_syscalls: AtomicU64,
+    /// completions whose connection had already gone away (the work
+    /// still ran and was cached; only the response had no recipient)
+    pub dropped_responses: AtomicU64,
     /// time a job spent queued before a worker picked it up
     pub queue_wait: LatencyHisto,
     /// optimizer wall time per computed job (completed full runs only —
@@ -147,6 +160,11 @@ pub struct MetricsSnapshot {
     pub errors: u64,
     pub deadline_expired: u64,
     pub bad_requests: u64,
+    pub connections: u64,
+    pub connections_total: u64,
+    pub responses: u64,
+    pub write_syscalls: u64,
+    pub dropped_responses: u64,
     pub hit_rate: f64,
     pub queue_wait: LatencySnapshot,
     pub optimize: LatencySnapshot,
@@ -163,6 +181,18 @@ impl ServiceMetrics {
         counter.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Decrement a gauge (e.g. `connections` when a connection closes).
+    #[inline]
+    pub fn drop_gauge(counter: &AtomicU64) {
+        counter.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Add `n` to a counter (e.g. batched write-syscall accounting).
+    #[inline]
+    pub fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let requests = self.requests.load(Ordering::Relaxed);
         let hit = self.served_hit.load(Ordering::Relaxed);
@@ -177,6 +207,11 @@ impl ServiceMetrics {
             errors: self.errors.load(Ordering::Relaxed),
             deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
             bad_requests: self.bad_requests.load(Ordering::Relaxed),
+            connections: self.connections.load(Ordering::Relaxed),
+            connections_total: self.connections_total.load(Ordering::Relaxed),
+            responses: self.responses.load(Ordering::Relaxed),
+            write_syscalls: self.write_syscalls.load(Ordering::Relaxed),
+            dropped_responses: self.dropped_responses.load(Ordering::Relaxed),
             // a join reused an in-flight computation, so it counts as a
             // cache-effectiveness win alongside plain hits
             hit_rate: if requests == 0 { 0.0 } else { (hit + joined) as f64 / requests as f64 },

@@ -24,10 +24,16 @@
 //! * [`proto`] — the JSON-lines request/response protocol (std-only,
 //!   over `util::json`).
 //! * [`server`] — the loopback TCP daemon tying it together; the
-//!   `epgraph serve` / `epgraph client` subcommands front it.
-//! * [`client`] — the blocking protocol client shared by the CLI, the
-//!   e2e suite, and the bench (one implementation of the framing), with
-//!   the jittered-backoff retry discipline built in.
+//!   `epgraph serve` / `epgraph client` subcommands front it.  One
+//!   event-driven reactor (over `util::poll`) owns every connection
+//!   and speaks pipelined protocol 2: many in-flight requests per
+//!   connection, responses in completion order, cache-hit bursts
+//!   flushed as one syscall wave per poll iteration.
+//! * [`client`] — the protocol clients shared by the CLI, the e2e
+//!   suite, and the bench (one implementation of the framing): a
+//!   blocking one-shot [`Client`] with the jittered-backoff retry
+//!   discipline built in, and a [`PipelinedClient`] that keeps a
+//!   window of id-stamped requests in flight.
 //! * [`faults`] — deterministic, seeded fault injection (`--chaos`):
 //!   snapshot write failures, torn writes, stalled reads, worker
 //!   panics, optimizer slowdowns.  Off by default; every hook is a
@@ -53,11 +59,11 @@ pub mod queue;
 pub mod server;
 
 pub use cache::{Admission, CacheStats, CachedSchedule, ScheduleCache};
-pub use client::{Backoff, Client, RetryPolicy};
+pub use client::{Backoff, Client, PipelinedClient, RetryPolicy, RetryPolicyBuilder, Ticket};
 pub use faults::{FaultInjector, FaultPlan, FaultSite};
 pub use fingerprint::{fingerprint, Fingerprint};
 pub use metrics::{MetricsSnapshot, ServiceMetrics};
 pub use persist::{LoadReport, SaveReport};
 pub use proto::GraphSpec;
-pub use queue::{JobError, JobQueue, Submit};
+pub use queue::{Completion, JobError, JobOutcome, JobQueue, Submit};
 pub use server::{ServeOpts, Server};

@@ -1,4 +1,4 @@
-//! The `epgraph serve` wire protocol: JSON-lines over TCP.
+//! The `epgraph serve` wire protocol: JSON-lines over TCP (protocol 2).
 //!
 //! Every request and response is exactly one JSON object on one
 //! newline-terminated line (decode with `util::json::JsonLines`).
@@ -10,6 +10,25 @@
 //! {"op":"health"}                                 → liveness probe
 //! {"op":"shutdown"}                               → ack, then the server drains and exits
 //! ```
+//!
+//! **Pipelining (protocol 2).**  Any request may carry an optional
+//! `"id"` — a string (≤ 256 bytes) or a non-negative integer — which
+//! the server echoes VERBATIM as `"id"` in the matching response.  A
+//! client that tags its requests may keep many in flight on one
+//! connection; responses are delivered in *completion* order (a cache
+//! hit overtakes an optimizer run submitted before it), and the echoed
+//! id is the only correlation key.  Ids are opaque to the server: it
+//! never inspects, deduplicates, or orders by them — sending two
+//! requests with the same id gets two responses with that id.  V1
+//! clients simply omit `"id"` and send one request at a time; their
+//! responses are byte-identical to protocol 1 (no `id` key is ever
+//! added to an un-id'd exchange).  `health`/`stats` responses advertise
+//! the capability as `"proto": 2`.
+//!
+//! The typed boundary: [`decode_request`] turns a parsed line into a
+//! [`Request`] (the id plus an [`Op`]), and [`Reply::encode`] renders
+//! every response kind — all field plucking and field layout live in
+//! this module, handlers never touch raw JSON keys.
 //!
 //! An optimize request may carry a top-level `"deadline_ms"` (relative
 //! milliseconds): the server fails the request with
@@ -65,6 +84,14 @@ use super::persist::LoadReport;
 /// service, but a malformed request must fail cleanly, not OOM.
 pub const MAX_VERTICES: usize = 1 << 26;
 pub const MAX_EDGES: usize = 1 << 26;
+
+/// Wire protocol version advertised in `health`/`stats` responses.
+/// Version 2 added the optional request `"id"` echo and pipelining.
+pub const PROTO_VERSION: u64 = 2;
+
+/// Upper bound on a string request id — the id is echoed verbatim, so
+/// it must not become an amplification vector.
+pub const MAX_ID_BYTES: usize = 256;
 
 /// A request's graph, before resolution.
 #[derive(Clone, Debug, PartialEq)]
@@ -272,18 +299,56 @@ impl GraphSpec {
     }
 }
 
-/// A decoded request line.
+/// The operation a request line asks for.
 #[derive(Clone, Debug)]
-pub enum Request {
+pub enum Op {
     Optimize { graph: GraphSpec, opts: OptOptions, deadline_ms: Option<u64> },
     Stats,
     Health,
     Shutdown,
 }
 
-pub fn parse_request(j: &Json) -> Result<Request, String> {
+/// A fully decoded request line: the optional correlation id (echoed
+/// verbatim in the reply) plus the operation.  This is the single
+/// decode boundary — nothing outside this module plucks request fields
+/// out of raw JSON.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Client-chosen correlation id (`None` for v1 clients).  Validated
+    /// by [`decode_request`]: a string (≤ [`MAX_ID_BYTES`]) or a
+    /// non-negative integer; `null` means absent.
+    pub id: Option<Json>,
+    pub op: Op,
+}
+
+fn valid_id(v: &Json) -> Result<Json, String> {
+    match v {
+        Json::Str(s) if s.len() <= MAX_ID_BYTES => Ok(v.clone()),
+        Json::Str(_) => Err(format!("id string exceeds {MAX_ID_BYTES} bytes")),
+        Json::Num(_) if v.as_u64().is_some() => Ok(v.clone()),
+        _ => Err("id must be a string or a non-negative integer".into()),
+    }
+}
+
+/// Best-effort id extraction for error paths: when a request fails to
+/// decode, the server still echoes the id *if* the line carried a valid
+/// one, so a pipelined client can correlate the error.  Invalid ids are
+/// dropped (an un-echoable id cannot be trusted as a key).
+pub fn request_id(j: &Json) -> Option<Json> {
+    match j.get("id") {
+        None | Some(Json::Null) => None,
+        Some(v) => valid_id(v).ok(),
+    }
+}
+
+/// Decode one request line (the single decode boundary).
+pub fn decode_request(j: &Json) -> Result<Request, String> {
+    let id = match j.get("id") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(valid_id(v)?),
+    };
     let op = j.get("op").and_then(Json::as_str).ok_or("request needs a string 'op'")?;
-    match op {
+    let op = match op {
         "optimize" => {
             let graph =
                 GraphSpec::from_json(j.get("graph").ok_or("optimize needs a 'graph'")?)?;
@@ -294,13 +359,14 @@ pub fn parse_request(j: &Json) -> Result<Request, String> {
                     v.as_u64().ok_or("deadline_ms must be a non-negative integer")?,
                 ),
             };
-            Ok(Request::Optimize { graph, opts, deadline_ms })
+            Op::Optimize { graph, opts, deadline_ms }
         }
-        "stats" => Ok(Request::Stats),
-        "health" => Ok(Request::Health),
-        "shutdown" => Ok(Request::Shutdown),
-        other => Err(format!("unknown op '{other}'")),
-    }
+        "stats" => Op::Stats,
+        "health" => Op::Health,
+        "shutdown" => Op::Shutdown,
+        other => return Err(format!("unknown op '{other}'")),
+    };
+    Ok(Request { id, op })
 }
 
 /// Build `OptOptions` from the wire form: defaults plus overrides.
@@ -510,6 +576,7 @@ pub fn stats_response(v: StatsView<'_>) -> Json {
     };
     obj(vec![
         ("ok", Json::Bool(true)),
+        ("proto", num(PROTO_VERSION as f64)),
         ("requests", num(m.requests as f64)),
         ("served_hit", num(m.served_hit as f64)),
         ("served_miss", num(m.served_miss as f64)),
@@ -535,6 +602,16 @@ pub fn stats_response(v: StatsView<'_>) -> Json {
                 ("rejected_cheap", num(c.rejected_cheap as f64)),
             ]),
         ),
+        (
+            "reactor",
+            obj(vec![
+                ("connections", num(m.connections as f64)),
+                ("connections_total", num(m.connections_total as f64)),
+                ("responses", num(m.responses as f64)),
+                ("write_syscalls", num(m.write_syscalls as f64)),
+                ("dropped_responses", num(m.dropped_responses as f64)),
+            ]),
+        ),
         ("persist", persist_json),
         ("chaos", v.chaos.unwrap_or(Json::Null)),
         ("queue_wait_ms", latency_json(&m.queue_wait)),
@@ -550,6 +627,7 @@ pub fn stats_response(v: StatsView<'_>) -> Json {
 pub fn health_response(uptime_ms: f64) -> Json {
     obj(vec![
         ("ok", Json::Bool(true)),
+        ("proto", num(PROTO_VERSION as f64)),
         ("status", Json::Str("serving".to_string())),
         ("uptime_ms", num(uptime_ms)),
     ])
@@ -557,6 +635,45 @@ pub fn health_response(uptime_ms: f64) -> Json {
 
 pub fn shutdown_response() -> Json {
     obj(vec![("ok", Json::Bool(true)), ("status", Json::Str("shutting-down".to_string()))])
+}
+
+/// Every response kind the server can produce — the single encode
+/// boundary.  [`Reply::encode`] renders the body (via the per-kind
+/// builders above, which double as the documented v1 forms) and stamps
+/// the echoed `"id"` — when, and only when, the request carried one, so
+/// v1 exchanges stay byte-identical to protocol 1.
+pub enum Reply<'a> {
+    /// A schedule: `cached` is `"hit"`, `"miss"`, `"joined"` or
+    /// `"degraded"` (see [`optimize_response`]).
+    Schedule {
+        fp: Fingerprint,
+        cached: &'a str,
+        entry: &'a CachedSchedule,
+        queue_ms: Option<f64>,
+        optimize_ms: Option<f64>,
+    },
+    Stats(StatsView<'a>),
+    Health { uptime_ms: f64 },
+    ShuttingDown,
+    Error { msg: String, retry_after_ms: Option<u64> },
+}
+
+impl Reply<'_> {
+    pub fn encode(self, id: Option<&Json>) -> Json {
+        let mut j = match self {
+            Reply::Schedule { fp, cached, entry, queue_ms, optimize_ms } => {
+                optimize_response(fp, cached, entry, queue_ms, optimize_ms)
+            }
+            Reply::Stats(view) => stats_response(view),
+            Reply::Health { uptime_ms } => health_response(uptime_ms),
+            Reply::ShuttingDown => shutdown_response(),
+            Reply::Error { msg, retry_after_ms } => error_response(&msg, retry_after_ms),
+        };
+        if let (Some(id), Json::Obj(m)) = (id, &mut j) {
+            m.insert("id".to_string(), id.clone());
+        }
+        j
+    }
 }
 
 #[cfg(test)]
@@ -569,9 +686,10 @@ mod tests {
         let spec = GraphSpec::Gen { name: "cfd_mesh".into(), args: vec![8, 8, 1] };
         let opts = OptOptions { k: 4, seed: 7, ..Default::default() };
         let line = optimize_request(&spec, &opts).dump();
-        let parsed = parse_request(&Json::parse(&line).unwrap()).unwrap();
-        match parsed {
-            Request::Optimize { graph, opts: o, deadline_ms } => {
+        let parsed = decode_request(&Json::parse(&line).unwrap()).unwrap();
+        assert!(parsed.id.is_none(), "client builders emit v1 (un-id'd) requests");
+        match parsed.op {
+            Op::Optimize { graph, opts: o, deadline_ms } => {
                 assert_eq!(graph, spec);
                 assert_eq!(o.k, 4);
                 assert_eq!(o.seed, 7);
@@ -587,14 +705,14 @@ mod tests {
         let spec = GraphSpec::Gen { name: "path".into(), args: vec![4] };
         let line =
             optimize_request_with_deadline(&spec, &OptOptions::default(), Some(250)).dump();
-        match parse_request(&Json::parse(&line).unwrap()).unwrap() {
-            Request::Optimize { deadline_ms, .. } => assert_eq!(deadline_ms, Some(250)),
+        match decode_request(&Json::parse(&line).unwrap()).unwrap().op {
+            Op::Optimize { deadline_ms, .. } => assert_eq!(deadline_ms, Some(250)),
             _ => panic!("wrong request kind"),
         }
         // null is "no deadline"; fractional/negative values are malformed
-        let parse = |text: &str| parse_request(&Json::parse(text).unwrap());
+        let parse = |text: &str| decode_request(&Json::parse(text).unwrap());
         let ok = r#"{"op":"optimize","graph":{"gen":"path","args":[4]},"deadline_ms":null}"#;
-        assert!(matches!(parse(ok).unwrap(), Request::Optimize { deadline_ms: None, .. }));
+        assert!(matches!(parse(ok).unwrap().op, Op::Optimize { deadline_ms: None, .. }));
         for bad in [
             r#"{"op":"optimize","graph":{"gen":"path","args":[4]},"deadline_ms":1.5}"#,
             r#"{"op":"optimize","graph":{"gen":"path","args":[4]},"deadline_ms":-3}"#,
@@ -602,6 +720,55 @@ mod tests {
         ] {
             assert!(parse(bad).is_err(), "should reject: {bad}");
         }
+    }
+
+    #[test]
+    fn request_ids_validate_and_echo_verbatim() {
+        let parse = |text: &str| decode_request(&Json::parse(text).unwrap());
+        // string and non-negative integer ids are accepted verbatim
+        let r = parse(r#"{"op":"health","id":"req-7"}"#).unwrap();
+        assert_eq!(r.id, Some(Json::Str("req-7".into())));
+        let r = parse(r#"{"op":"health","id":42}"#).unwrap();
+        assert_eq!(r.id.as_ref().and_then(Json::as_u64), Some(42));
+        // null means absent (v1)
+        assert!(parse(r#"{"op":"health","id":null}"#).unwrap().id.is_none());
+        assert!(parse(r#"{"op":"health"}"#).unwrap().id.is_none());
+        // composite, fractional, negative, and oversized ids are malformed
+        for bad in [
+            r#"{"op":"health","id":[1]}"#,
+            r#"{"op":"health","id":{"a":1}}"#,
+            r#"{"op":"health","id":true}"#,
+            r#"{"op":"health","id":1.5}"#,
+            r#"{"op":"health","id":-2}"#,
+        ] {
+            assert!(parse(bad).is_err(), "should reject: {bad}");
+        }
+        let huge = format!(r#"{{"op":"health","id":"{}"}}"#, "x".repeat(MAX_ID_BYTES + 1));
+        assert!(parse(&huge).is_err(), "oversized id string must be rejected");
+        // lenient extraction for error paths: valid id recovered, junk dropped
+        let j = Json::parse(r#"{"op":"frobnicate","id":"e1"}"#).unwrap();
+        assert_eq!(request_id(&j), Some(Json::Str("e1".into())));
+        let j = Json::parse(r#"{"op":"frobnicate","id":[1]}"#).unwrap();
+        assert_eq!(request_id(&j), None);
+    }
+
+    #[test]
+    fn encode_stamps_the_id_only_when_present() {
+        // un-id'd encode is byte-identical to the v1 builder output
+        let v1 = error_response("deadline", None).dump();
+        let v2 = Reply::Error { msg: "deadline".into(), retry_after_ms: None }
+            .encode(None)
+            .dump();
+        assert_eq!(v1, v2, "encode(None) must stay bit-identical to v1");
+        assert!(!v2.contains("\"id\""));
+        // with an id, the reply carries it verbatim — string or number
+        let id = Json::Str("abc".into());
+        let j = Reply::Error { msg: "deadline".into(), retry_after_ms: None }.encode(Some(&id));
+        assert_eq!(j.get("id"), Some(&id));
+        let id = Json::Num(9.0);
+        let j = Reply::Health { uptime_ms: 1.0 }.encode(Some(&id));
+        assert_eq!(j.get("id").and_then(Json::as_u64), Some(9));
+        assert_eq!(j.get("proto").and_then(Json::as_u64), Some(PROTO_VERSION));
     }
 
     #[test]
@@ -621,8 +788,8 @@ mod tests {
     fn wire_key_order_does_not_change_the_fingerprint() {
         let a = r#"{"op":"optimize","graph":{"n":3,"edges":[0,1,1,2]},"opts":{"k":4,"seed":9}}"#;
         let b = r#"{"opts":{"seed":9,"k":4},"graph":{"edges":[0,1,1,2],"n":3},"op":"optimize"}"#;
-        let fp = |text: &str| match parse_request(&Json::parse(text).unwrap()).unwrap() {
-            Request::Optimize { graph, opts, .. } => {
+        let fp = |text: &str| match decode_request(&Json::parse(text).unwrap()).unwrap().op {
+            Op::Optimize { graph, opts, .. } => {
                 fingerprint(&graph.resolve().unwrap(), &opts)
             }
             _ => panic!("wrong kind"),
@@ -642,8 +809,8 @@ mod tests {
             r#"{"op":"frobnicate"}"#,
         ] {
             let j = Json::parse(bad).unwrap();
-            let r = parse_request(&j).and_then(|r| match r {
-                Request::Optimize { graph, .. } => graph.resolve().map(|_| ()),
+            let r = decode_request(&j).and_then(|r| match r.op {
+                Op::Optimize { graph, .. } => graph.resolve().map(|_| ()),
                 _ => Ok(()),
             });
             assert!(r.is_err(), "should reject: {bad}");
@@ -670,15 +837,15 @@ mod tests {
         let spec = GraphSpec::Gen { name: "path".into(), args: vec![4] };
         let opts = OptOptions { seed: u64::MAX, ..Default::default() };
         let line = optimize_request(&spec, &opts).dump();
-        match parse_request(&Json::parse(&line).unwrap()).unwrap() {
-            Request::Optimize { opts: parsed, .. } => assert_eq!(parsed.seed, u64::MAX),
+        match decode_request(&Json::parse(&line).unwrap()).unwrap().op {
+            Op::Optimize { opts: parsed, .. } => assert_eq!(parsed.seed, u64::MAX),
             _ => panic!("wrong request kind"),
         }
         // numeric seeds in the f64-safe range still work (hand-written)
         let j = Json::parse(r#"{"op":"optimize","graph":{"gen":"path","args":[4]},"opts":{"seed":9}}"#)
             .unwrap();
-        match parse_request(&j).unwrap() {
-            Request::Optimize { opts: parsed, .. } => assert_eq!(parsed.seed, 9),
+        match decode_request(&j).unwrap().op {
+            Op::Optimize { opts: parsed, .. } => assert_eq!(parsed.seed, 9),
             _ => panic!("wrong request kind"),
         }
     }
@@ -688,8 +855,8 @@ mod tests {
         let spec = GraphSpec::Matrix { name: "cant".into() };
         let opts = OptOptions::default();
         let line = optimize_request(&spec, &opts).dump();
-        match parse_request(&Json::parse(&line).unwrap()).unwrap() {
-            Request::Optimize { graph, .. } => assert_eq!(graph, spec),
+        match decode_request(&Json::parse(&line).unwrap()).unwrap().op {
+            Op::Optimize { graph, .. } => assert_eq!(graph, spec),
             _ => panic!("wrong request kind"),
         }
         // without a server-side matrix dir the spec cannot resolve

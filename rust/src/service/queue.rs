@@ -36,11 +36,16 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::{optimize_graph_checked, Cancelled, OptOptions};
 use crate::graph::Graph;
+use crate::util::poll::ReadyQueue;
 
 use super::cache::{CachedSchedule, ScheduleCache};
 use super::faults::{FaultInjector, FaultSite};
 use super::fingerprint::Fingerprint;
 use super::metrics::ServiceMetrics;
+
+/// What a finished job resolved to — the shared schedule or the error
+/// every waiter receives.
+pub type JobOutcome = Result<Arc<CachedSchedule>, JobError>;
 
 /// Why a job produced no schedule.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -75,22 +80,63 @@ pub struct Job {
     done: Condvar,
 }
 
+/// A finished job's result, delivered to a [`ReadyQueue`] a reactor
+/// drains instead of parking a thread per waiter.  `tag` is whatever the
+/// watcher registered — the reactor uses it to route the completion back
+/// to the connection/request that is waiting on it.
+pub struct Completion {
+    pub tag: u64,
+    pub result: JobOutcome,
+    pub queue_wait: Duration,
+    pub run_time: Duration,
+}
+
+/// A non-blocking waiter: when the job finishes, a [`Completion`] tagged
+/// `tag` is pushed to `sink`.
+struct Watcher {
+    sink: Arc<ReadyQueue<Completion>>,
+    tag: u64,
+}
+
 #[derive(Default)]
 struct JobState {
-    result: Option<Result<Arc<CachedSchedule>, JobError>>,
+    result: Option<JobOutcome>,
     queue_wait: Duration,
     run_time: Duration,
+    watchers: Vec<Watcher>,
 }
 
 impl Job {
     /// Block until the worker finishes; returns the shared result plus
     /// (queue wait, optimize time) for the response.
-    pub fn wait(&self) -> (Result<Arc<CachedSchedule>, JobError>, Duration, Duration) {
+    pub fn wait(&self) -> (JobOutcome, Duration, Duration) {
         let mut st = self.state.lock().unwrap();
         while st.result.is_none() {
             st = self.done.wait(st).unwrap();
         }
         (st.result.clone().unwrap(), st.queue_wait, st.run_time)
+    }
+
+    /// Non-blocking waiter registration: when the job finishes, push a
+    /// [`Completion`] tagged `tag` onto `sink`.  If the job already
+    /// finished, the completion is pushed immediately — the check and the
+    /// registration happen under the same state lock that `finish` takes,
+    /// so a completion can neither be lost nor delivered twice.
+    pub fn watch(&self, sink: &Arc<ReadyQueue<Completion>>, tag: u64) {
+        let mut st = self.state.lock().unwrap();
+        match &st.result {
+            Some(result) => {
+                let done = Completion {
+                    tag,
+                    result: result.clone(),
+                    queue_wait: st.queue_wait,
+                    run_time: st.run_time,
+                };
+                drop(st);
+                sink.push(done);
+            }
+            None => st.watchers.push(Watcher { sink: sink.clone(), tag }),
+        }
     }
 
     /// True once the job's (relaxed) deadline has passed.  Polled by the
@@ -248,7 +294,7 @@ impl JobQueue {
     fn finish(
         &self,
         job: &Arc<Job>,
-        result: Result<Arc<CachedSchedule>, JobError>,
+        result: JobOutcome,
         queue_wait: Duration,
         run_time: Duration,
         cache: &ScheduleCache,
@@ -261,11 +307,20 @@ impl JobQueue {
             inner.inflight.remove(&job.fp);
         }
         let mut st = job.state.lock().unwrap();
-        st.result = Some(result);
+        st.result = Some(result.clone());
         st.queue_wait = queue_wait;
         st.run_time = run_time;
+        let watchers = std::mem::take(&mut st.watchers);
         drop(st);
         job.done.notify_all();
+        for w in watchers {
+            w.sink.push(Completion {
+                tag: w.tag,
+                result: result.clone(),
+                queue_wait,
+                run_time,
+            });
+        }
     }
 
     /// Begin shutdown: no new submits, backlog drains, workers exit.
@@ -484,6 +539,40 @@ mod tests {
             _ => panic!("identical workload must join"),
         }
         assert!(!job.deadline_expired());
+    }
+
+    #[test]
+    fn watch_delivers_completions_before_and_after_finish() {
+        let q = Arc::new(JobQueue::new(8));
+        let cache = Arc::new(ScheduleCache::new(1 << 22, 2));
+        let metrics = Arc::new(ServiceMetrics::new());
+        let sink: Arc<ReadyQueue<Completion>> = Arc::new(ReadyQueue::new());
+        let (fp, g, o) = workload(40);
+        let job = match q.submit(fp, &g, o.clone(), &cache, None) {
+            Submit::New(j) => j,
+            _ => panic!("fresh workload must enqueue"),
+        };
+        // registered BEFORE the worker runs: completion arrives on finish
+        job.watch(&sink, 7);
+        let (qq, cc, mm) = (q.clone(), cache.clone(), metrics.clone());
+        let worker = std::thread::spawn(move || qq.run_worker(&cc, &mm));
+        assert!(sink.wait_timeout(Duration::from_secs(60)), "watcher must be woken");
+        let mut got = Vec::new();
+        sink.drain_into(&mut got);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].tag, 7);
+        let first = got[0].result.clone().expect("job should succeed");
+        // registered AFTER the job finished: completion pushed immediately,
+        // sharing the same Arc'd result
+        job.watch(&sink, 8);
+        got.clear();
+        sink.drain_into(&mut got);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].tag, 8);
+        assert!(Arc::ptr_eq(&got[0].result.clone().unwrap(), &first));
+        assert!(got[0].run_time > Duration::ZERO);
+        q.shutdown();
+        worker.join().unwrap();
     }
 
     #[test]

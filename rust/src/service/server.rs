@@ -1,7 +1,7 @@
 //! The serving daemon: a loopback `TcpListener` speaking the JSON-lines
-//! protocol, one handler thread per connection, a worker pool running
-//! the optimizer, all wired through the schedule cache and singleflight
-//! queue.
+//! protocol, one event-driven reactor owning every connection, a worker
+//! pool running the optimizer, all wired through the schedule cache and
+//! singleflight queue.
 //!
 //! Threading model (everything inside one `std::thread::scope`, the same
 //! structured-concurrency idiom as `util::par`):
@@ -10,17 +10,39 @@
 //!     `JobQueue::run_worker` — they are the only threads that run the
 //!     optimizer, so a flood of connections can never oversubscribe the
 //!     partitioner;
-//!   * the acceptor turns each connection into a handler thread;
-//!   * handlers parse one request line at a time, probe the cache,
-//!     submit misses to the queue, block on the job, and write one
-//!     response line.  Reads carry a short timeout so every handler
-//!     notices shutdown within ~250 ms even under an idle client.
+//!   * ONE reactor thread (`util::poll` primitives over nonblocking
+//!     sockets) accepts connections, owns every connection's read/write
+//!     buffer, frames and decodes request lines, serves cache hits
+//!     inline, and hands misses to the worker pool via non-blocking
+//!     `Job::watch` completions — no thread is ever parked per
+//!     connection or per request, which is what makes ≥10k concurrent
+//!     connections a memory problem (a few KB each) instead of a thread
+//!     problem (a stack each).
 //!
-//! Shutdown: the `shutdown` op acks, raises the flag, and nudges the
-//! acceptor with a self-connection.  The queue then drains its backlog
-//! (in-flight requests still answer), workers exit, handlers drop their
-//! connections, and `run()` returns — a clean exit the CI smoke asserts
-//! via the process exit code.
+//! The reactor is itself a scheduling policy for heterogeneous work:
+//! cheap cache hits are answered on the spot, CPU-heavy misses go to
+//! the pool, and each poll iteration flushes every connection's buffered
+//! responses in one write sweep — a burst of pipelined hits drains as
+//! one syscall wave per connection (micro-batching), not one write per
+//! response.  Requests may carry a protocol-2 `"id"` and pipeline many
+//! ops per connection; responses go out in completion order and a slow
+//! client's unread responses accumulate in its outbound buffer (never
+//! blocking the loop) until a high watermark pauses further reads from
+//! that connection — per-connection backpressure, not head-of-line
+//! blocking for everyone else.
+//!
+//! Idle strategy: readiness is discovered by attempting nonblocking
+//! I/O, so a sweep that makes no progress parks the reactor on the
+//! completion queue with an exponential backoff (`IdleBackoff`,
+//! 200 µs → 5 ms).  Worker completions wake it instantly; fresh socket
+//! activity is picked up within the backoff ceiling.
+//!
+//! Shutdown: the `shutdown` op buffers its ack, then the reactor stops
+//! accepting and reading, drains the job queue (in-flight requests
+//! still answer), flushes every buffered response, and `run()` returns
+//! — a clean exit the CI smoke asserts via the process exit code.
+//! Clients that never read their final responses are given a bounded
+//! grace (`DRAIN_FLUSH_GRACE`), not a veto.
 //!
 //! Request-path parallelism policy: the per-job partitioner runs with
 //! `partition_threads` (default 1) — with many concurrent jobs the pool
@@ -33,11 +55,11 @@
 //! queue saturates or a deadline cannot fit a full run, the server
 //! degrades (`degraded.rs`) instead of rejecting — unless
 //! `--no-degrade`.  A `--chaos` spec arms `faults.rs` hooks at the
-//! snapshot writer, the connection reader, and the worker loop; with
+//! snapshot writer, the request framer, and the worker loop; with
 //! chaos off every hook is a `None` check on the serving path.
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -49,6 +71,7 @@ use anyhow::{anyhow, Result};
 use crate::graph::Graph;
 use crate::util::json::Json;
 use crate::util::par;
+use crate::util::poll::{self, IdleBackoff, ReadyQueue, Slab, Token};
 
 use super::cache::ScheduleCache;
 use super::degraded;
@@ -56,11 +79,11 @@ use super::faults::{FaultInjector, FaultPlan, FaultSite};
 use super::fingerprint::{fingerprint, Fingerprint};
 use super::metrics::{ServiceMetrics, Uptime};
 use super::persist::{self, LoadReport};
-use super::proto::{self, PersistInfo, Request, StatsView};
-use super::queue::{JobError, JobQueue, Submit};
+use super::proto::{self, Op, PersistInfo, StatsView};
+use super::queue::{Completion, JobError, JobQueue, Submit};
 
-/// How often a blocked handler read re-checks the shutdown flag.
-const READ_TICK: Duration = Duration::from_millis(250);
+/// Cadence of the persistence flusher's trigger checks.
+const FLUSH_TICK: Duration = Duration::from_millis(250);
 
 /// Hard cap on one request line.  Sized above the worst protocol-legal
 /// request — an inline spec at MAX_EDGES is 2·2²⁶ endpoint numbers of
@@ -69,6 +92,33 @@ const READ_TICK: Duration = Duration::from_millis(250);
 /// per-connection buffer until the OOM killer takes the daemon (and the
 /// unflushed cache) down.
 const MAX_LINE_BYTES: usize = 2 << 30;
+
+/// Reactor read scratch: one kernel read per call fills at most this.
+const READ_CHUNK_BYTES: usize = 64 << 10;
+
+/// Per-connection read budget per poll iteration — one firehose client
+/// cannot starve the sweep for everyone else.
+const READ_BUDGET_PER_SWEEP: usize = 256 << 10;
+
+/// Outbound-buffer high watermark: past it the reactor stops reading
+/// (and therefore stops dispatching) from that connection until the
+/// client drains its responses.  Bounds per-connection memory under a
+/// submit-everything-read-nothing client.
+const OUTBUF_HIGH_WATERMARK: usize = 4 << 20;
+
+/// Compact a partially-flushed outbound buffer once the sent prefix
+/// passes this (avoids memmoving a few bytes every sweep, but also
+/// keeps a slow client from pinning an already-sent multi-MB prefix).
+const OUTBUF_COMPACT_BYTES: usize = 256 << 10;
+
+/// Idle backoff range for a sweep that made no progress (see module
+/// doc): completions still wake the reactor instantly.
+const IDLE_BACKOFF_MIN: Duration = Duration::from_micros(200);
+const IDLE_BACKOFF_MAX: Duration = Duration::from_millis(5);
+
+/// During the shutdown drain, how long clients that never read their
+/// buffered responses can delay the exit once all jobs completed.
+const DRAIN_FLUSH_GRACE: Duration = Duration::from_secs(2);
 
 /// After a failed snapshot write, skip this many flusher ticks before
 /// retrying (~30 s at the 250 ms tick).  Bounds the cost of a full
@@ -89,45 +139,176 @@ fn graph_bytes(g: &Graph) -> usize {
     g.m() * (8 + 8) + g.n * 4 + 64
 }
 
-enum LineRead {
-    /// A complete newline-terminated line landed in the buffer.
-    Line,
-    /// Clean EOF (a final unterminated line may still be buffered).
-    Eof,
-    /// The line exceeded MAX_LINE_BYTES — framing is unrecoverable.
-    TooLong,
+/// One reactor-owned connection: nonblocking stream plus its framing
+/// and outbound state.  All buffering lives here — the poll loop never
+/// blocks on this socket in either direction.
+struct Conn {
+    stream: TcpStream,
+    conn_id: u64,
+    /// Raw bytes read but not yet framed into lines.
+    inbuf: Vec<u8>,
+    /// Encoded responses not yet accepted by the kernel; `outpos` marks
+    /// the already-written prefix (partial-write handling).
+    outbuf: Vec<u8>,
+    outpos: usize,
+    /// Requests handed to the worker pool whose completions have not
+    /// come back yet — an EOF'd connection lives until this hits zero.
+    outstanding: usize,
+    eof: bool,
+    dead: bool,
+    /// Framing is unrecoverable (over-long line): answer, flush, close.
+    close_after_flush: bool,
 }
 
-/// Bounded line framing over `fill_buf`/`consume`.  Unlike
-/// `read_until`, this returns control (with everything so far kept in
-/// `buf`) on every read timeout, and enforces the line cap *while*
-/// accumulating — `read_until` only returns at the delimiter, so a
-/// newline-less flood could grow the buffer without bound.
-fn read_line_bounded(
-    reader: &mut BufReader<TcpStream>,
-    buf: &mut Vec<u8>,
-) -> std::io::Result<LineRead> {
-    loop {
-        let available = reader.fill_buf()?;
-        if available.is_empty() {
-            return Ok(LineRead::Eof);
+impl Conn {
+    fn new(stream: TcpStream, conn_id: u64) -> Conn {
+        let _ = stream.set_nonblocking(true);
+        let _ = stream.set_nodelay(true);
+        Conn {
+            stream,
+            conn_id,
+            inbuf: Vec::new(),
+            outbuf: Vec::new(),
+            outpos: 0,
+            outstanding: 0,
+            eof: false,
+            dead: false,
+            close_after_flush: false,
         }
-        match available.iter().position(|&b| b == b'\n') {
-            Some(pos) => {
-                buf.extend_from_slice(&available[..=pos]);
-                reader.consume(pos + 1);
-                return Ok(LineRead::Line);
-            }
-            None => {
-                let n = available.len();
-                buf.extend_from_slice(available);
-                reader.consume(n);
-                if buf.len() > MAX_LINE_BYTES {
-                    return Ok(LineRead::TooLong);
+    }
+
+    /// Bytes buffered for this client but not yet written.
+    fn pending_out(&self) -> usize {
+        self.outbuf.len() - self.outpos
+    }
+
+    /// Append one encoded response line to the outbound buffer.  The
+    /// write sweep flushes it — possibly together with many others, as
+    /// one syscall wave (micro-batching).
+    fn push_response(&mut self, resp: &Json) {
+        self.outbuf.extend_from_slice(resp.dump().as_bytes());
+        self.outbuf.push(b'\n');
+    }
+
+    /// Pull whatever the socket has (up to the per-sweep budget) into
+    /// `inbuf`.  Returns true if any bytes arrived.
+    fn try_read(&mut self, scratch: &mut [u8]) -> bool {
+        let mut budget = READ_BUDGET_PER_SWEEP;
+        let mut progressed = false;
+        while budget > 0 {
+            let want = scratch.len().min(budget);
+            match self.stream.read(&mut scratch[..want]) {
+                Ok(0) => {
+                    self.eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.inbuf.extend_from_slice(&scratch[..n]);
+                    budget -= n;
+                    progressed = true;
+                }
+                Err(ref e) if poll::would_block(e) => break,
+                Err(ref e) if poll::interrupted(e) => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
                 }
             }
         }
+        progressed
     }
+
+    /// Frame complete lines out of `inbuf` (and, at EOF, the final
+    /// unterminated line — a client that closes right after its last
+    /// request is still answered).  Returns `(lines, too_long)`;
+    /// `too_long` means the unterminated remainder exceeds
+    /// MAX_LINE_BYTES and framing is unrecoverable.
+    fn take_lines(&mut self) -> (Vec<String>, bool) {
+        let mut lines = Vec::new();
+        let mut start = 0usize;
+        while let Some(rel) = self.inbuf[start..].iter().position(|&b| b == b'\n') {
+            let end = start + rel;
+            let text = String::from_utf8_lossy(&self.inbuf[start..end]);
+            let text = text.trim();
+            if !text.is_empty() {
+                lines.push(text.to_string());
+            }
+            start = end + 1;
+        }
+        if start > 0 {
+            self.inbuf.drain(..start);
+        }
+        if self.inbuf.len() > MAX_LINE_BYTES {
+            return (lines, true);
+        }
+        if self.eof && !self.inbuf.is_empty() {
+            let text = String::from_utf8_lossy(&self.inbuf).trim().to_string();
+            self.inbuf.clear();
+            if !text.is_empty() {
+                lines.push(text);
+            }
+        }
+        (lines, false)
+    }
+
+    /// Push buffered responses at the kernel until it pushes back
+    /// (`WouldBlock`) or the buffer empties.  NEVER blocks — a full
+    /// socket buffer just leaves the remainder for the next sweep
+    /// (partial-write handling; see the slow-reader unit test).
+    /// Returns the number of successful write syscalls.
+    fn try_write(&mut self) -> u64 {
+        let mut syscalls = 0u64;
+        while self.outpos < self.outbuf.len() {
+            match self.stream.write(&self.outbuf[self.outpos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.outpos += n;
+                    syscalls += 1;
+                }
+                Err(ref e) if poll::would_block(e) => break,
+                Err(ref e) if poll::interrupted(e) => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        if self.outpos == self.outbuf.len() {
+            self.outbuf.clear();
+            self.outpos = 0;
+        } else if self.outpos >= OUTBUF_COMPACT_BYTES {
+            self.outbuf.drain(..self.outpos);
+            self.outpos = 0;
+        }
+        syscalls
+    }
+}
+
+/// A request parked in the worker pool, waiting for its `Completion`.
+struct PendingReq {
+    conn_id: u64,
+    id: Option<Json>,
+    fp: Fingerprint,
+    /// `"miss"` or `"joined"` — fixed at submit time.
+    kind: &'static str,
+}
+
+/// What dispatching one request line produced.
+enum Dispatch {
+    /// Answered synchronously — append to the connection's outbuf.
+    Reply(Json),
+    /// Handed to the worker pool; the response arrives as a completion.
+    Async,
+}
+
+/// Reactor-side routing state a dispatch may need to park a request.
+struct RouteCtx<'a> {
+    conn_id: u64,
+    next_tag: &'a mut u64,
+    pending: &'a mut HashMap<u64, PendingReq>,
 }
 
 #[derive(Clone, Debug)]
@@ -214,6 +395,9 @@ pub struct Server {
     metrics: ServiceMetrics,
     uptime: Uptime,
     shutdown: AtomicBool,
+    /// Worker → reactor channel: finished jobs land here as tagged
+    /// completions (`Job::watch`), and an idle reactor parks on it.
+    completions: Arc<ReadyQueue<Completion>>,
     persistence: Option<Persistence>,
     /// Resolved matrix graphs, keyed by name — a repeat `{"matrix":…}`
     /// request must not re-read and re-parse the `.mtx` on the hit path.
@@ -265,6 +449,7 @@ impl Server {
             metrics: ServiceMetrics::new(),
             uptime: Uptime::new(),
             shutdown: AtomicBool::new(false),
+            completions: Arc::new(ReadyQueue::new()),
             persistence,
             matrix_memo: Mutex::new(HashMap::new()),
             faults,
@@ -300,29 +485,253 @@ impl Server {
             if self.persistence.is_some() {
                 s.spawn(|| self.flush_loop());
             }
-            loop {
-                match self.listener.accept() {
-                    Ok((stream, _peer)) => {
-                        if self.shutdown.load(Ordering::Acquire) {
-                            break; // the nudge connection, or a straggler
-                        }
-                        s.spawn(move || self.handle_conn(stream));
-                    }
-                    Err(_) if self.shutdown.load(Ordering::Acquire) => break,
-                    Err(_) => {
-                        // transient accept failure (e.g. EMFILE under
-                        // load) — back off briefly instead of spinning
-                        std::thread::sleep(Duration::from_millis(10));
-                    }
-                }
-            }
-            // no new requests can arrive; drain the backlog and stop
+            self.reactor();
+            // idempotent — the reactor initiates the drain itself, but an
+            // abnormal reactor exit must still release the workers
             self.queue.shutdown();
         });
         // workers have drained and published every finished job — the
         // final snapshot sees the complete cache
         self.snapshot_now();
         Ok(())
+    }
+
+    /// The event loop (see module doc).  One iteration = accept burst →
+    /// route completions → read+dispatch sweep → write sweep → reap →
+    /// idle backoff.  Exits once a shutdown drain completes.
+    fn reactor(&self) {
+        if let Err(e) = self.listener.set_nonblocking(true) {
+            eprintln!("epgraph serve: cannot switch listener to nonblocking: {e}");
+            return;
+        }
+        let mut conns: Slab<Conn> = Slab::new();
+        let mut conn_index: HashMap<u64, Token> = HashMap::new();
+        let mut pending: HashMap<u64, PendingReq> = HashMap::new();
+        let mut next_conn_id: u64 = 0;
+        let mut next_tag: u64 = 0;
+        let mut scratch = vec![0u8; READ_CHUNK_BYTES];
+        let mut tokens: Vec<Token> = Vec::new();
+        let mut completed: Vec<Completion> = Vec::new();
+        let mut backoff = IdleBackoff::new(IDLE_BACKOFF_MIN, IDLE_BACKOFF_MAX);
+        let mut draining = false;
+        let mut flush_grace: Option<Instant> = None;
+
+        loop {
+            let mut progressed = false;
+
+            // -- accept burst: take everything the backlog has
+            if !draining {
+                loop {
+                    match self.listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let tok = conns.insert(Conn::new(stream, next_conn_id));
+                            conn_index.insert(next_conn_id, tok);
+                            next_conn_id += 1;
+                            ServiceMetrics::bump(&self.metrics.connections_total);
+                            ServiceMetrics::bump(&self.metrics.connections);
+                            progressed = true;
+                        }
+                        Err(ref e) if poll::would_block(e) => break,
+                        // transient failure (e.g. EMFILE under load) —
+                        // the backoff below doubles as the retry delay
+                        Err(_) => break,
+                    }
+                }
+            }
+
+            // -- route worker completions back to their connections
+            completed.clear();
+            self.completions.drain_into(&mut completed);
+            if !completed.is_empty() {
+                progressed = true;
+            }
+            for done in completed.drain(..) {
+                let Some(req) = pending.remove(&done.tag) else { continue };
+                let resp = self.completion_response(&req, &done);
+                match conn_index.get(&req.conn_id).and_then(|&tok| conns.get_mut(tok)) {
+                    Some(conn) => {
+                        conn.push_response(&resp);
+                        conn.outstanding -= 1;
+                        ServiceMetrics::bump(&self.metrics.responses);
+                    }
+                    // the connection died first; the work still ran (and
+                    // cached) but the response has no recipient
+                    None => ServiceMetrics::bump(&self.metrics.dropped_responses),
+                }
+            }
+
+            // -- read + dispatch sweep
+            let mut stop = false;
+            if !draining {
+                conns.tokens_into(&mut tokens);
+                'conns: for &tok in &tokens {
+                    let (lines, too_long, conn_id) = {
+                        let conn = conns.get_mut(tok).expect("token from live snapshot");
+                        if conn.dead || conn.eof || conn.close_after_flush {
+                            continue;
+                        }
+                        // backpressure: a client that won't read its
+                        // responses stops being read from until it drains
+                        if conn.pending_out() > OUTBUF_HIGH_WATERMARK {
+                            continue;
+                        }
+                        if conn.try_read(&mut scratch) {
+                            progressed = true;
+                        }
+                        let (lines, too_long) = conn.take_lines();
+                        (lines, too_long, conn.conn_id)
+                    };
+                    for text in lines {
+                        // chaos: stall between framing a request and
+                        // serving it — models a slow/foreground-GC'd
+                        // client socket (deadlines must burn down during
+                        // the stall)
+                        if let Some(d) =
+                            self.faults.as_ref().and_then(|f| f.delay(FaultSite::ReadDelay))
+                        {
+                            std::thread::sleep(d);
+                        }
+                        let mut ctx = RouteCtx {
+                            conn_id,
+                            next_tag: &mut next_tag,
+                            pending: &mut pending,
+                        };
+                        match self.dispatch_line(&text, &mut ctx, &mut stop) {
+                            Dispatch::Reply(resp) => {
+                                let conn =
+                                    conns.get_mut(tok).expect("token from live snapshot");
+                                conn.push_response(&resp);
+                                ServiceMetrics::bump(&self.metrics.responses);
+                            }
+                            Dispatch::Async => {
+                                let conn =
+                                    conns.get_mut(tok).expect("token from live snapshot");
+                                conn.outstanding += 1;
+                            }
+                        }
+                        progressed = true;
+                        if stop {
+                            // the ack is buffered; later lines (and other
+                            // connections' unread bytes) are past the
+                            // drain point by definition
+                            break 'conns;
+                        }
+                    }
+                    if too_long {
+                        ServiceMetrics::bump(&self.metrics.bad_requests);
+                        let conn = conns.get_mut(tok).expect("token from live snapshot");
+                        conn.push_response(&proto::error_response(
+                            &format!("request line exceeds {MAX_LINE_BYTES} bytes"),
+                            None,
+                        ));
+                        ServiceMetrics::bump(&self.metrics.responses);
+                        conn.inbuf.clear();
+                        conn.close_after_flush = true;
+                    }
+                }
+            }
+            if stop {
+                self.shutdown.store(true, Ordering::Release);
+                self.queue.shutdown();
+                draining = true;
+            }
+
+            // -- write sweep: one flush wave per iteration (micro-batching:
+            //    every response buffered this iteration rides one syscall
+            //    per connection unless the kernel pushes back)
+            conns.tokens_into(&mut tokens);
+            for &tok in &tokens {
+                let conn = conns.get_mut(tok).expect("token from live snapshot");
+                if conn.dead || conn.pending_out() == 0 {
+                    continue;
+                }
+                let syscalls = conn.try_write();
+                if syscalls > 0 {
+                    progressed = true;
+                    ServiceMetrics::add(&self.metrics.write_syscalls, syscalls);
+                }
+            }
+
+            // -- reap: dead, or finished (EOF/flagged) with everything
+            //    flushed and no completion still owed
+            for &tok in &tokens {
+                let close = {
+                    let conn = conns.get(tok).expect("token from live snapshot");
+                    let flushed = conn.pending_out() == 0;
+                    conn.dead
+                        || (conn.close_after_flush && flushed)
+                        || (conn.eof && flushed && conn.outstanding == 0)
+                };
+                if close {
+                    let conn = conns.remove(tok).expect("token from live snapshot");
+                    conn_index.remove(&conn.conn_id);
+                    ServiceMetrics::drop_gauge(&self.metrics.connections);
+                }
+            }
+
+            // -- drain exit: all parked requests answered and flushed
+            if draining && pending.is_empty() {
+                conns.tokens_into(&mut tokens);
+                let unflushed = tokens.iter().any(|&tok| {
+                    let conn = conns.get(tok).expect("token from live snapshot");
+                    !conn.dead && conn.pending_out() > 0
+                });
+                if !unflushed {
+                    break;
+                }
+                match flush_grace {
+                    None => flush_grace = Some(Instant::now()),
+                    Some(t0) if t0.elapsed() >= DRAIN_FLUSH_GRACE => break,
+                    Some(_) => {}
+                }
+            }
+
+            // -- idle strategy: park on the completion queue so workers
+            //    wake us instantly; socket activity is found within the
+            //    backoff ceiling
+            if progressed {
+                backoff.reset();
+            } else {
+                self.completions.wait_timeout(backoff.next());
+            }
+        }
+    }
+
+    /// Render one routed completion (counts the outcome here so every
+    /// response is counted exactly once, on the thread that emits it).
+    fn completion_response(&self, req: &PendingReq, done: &Completion) -> Json {
+        match &done.result {
+            Ok(entry) => {
+                ServiceMetrics::bump(if req.kind == "miss" {
+                    &self.metrics.served_miss
+                } else {
+                    &self.metrics.served_joined
+                });
+                proto::Reply::Schedule {
+                    fp: req.fp,
+                    cached: req.kind,
+                    entry,
+                    queue_ms: Some(done.queue_wait.as_secs_f64() * 1e3),
+                    optimize_ms: Some(done.run_time.as_secs_f64() * 1e3),
+                }
+                .encode(req.id.as_ref())
+            }
+            // the worker counted the job's expiry once; each waiter only
+            // adds its own `errors` entry
+            Err(JobError::Deadline) => {
+                ServiceMetrics::bump(&self.metrics.errors);
+                proto::Reply::Error { msg: "deadline".into(), retry_after_ms: None }
+                    .encode(req.id.as_ref())
+            }
+            Err(JobError::Failed(e)) => {
+                ServiceMetrics::bump(&self.metrics.errors);
+                proto::Reply::Error {
+                    msg: format!("optimization failed: {e}"),
+                    retry_after_ms: Some(25),
+                }
+                .encode(req.id.as_ref())
+            }
+        }
     }
 
     /// Periodic flusher: on a shutdown-aware tick, snapshot once
@@ -334,7 +743,7 @@ impl Server {
         let every = self.opts.snapshot_every;
         let interval = self.opts.snapshot_interval_secs;
         while !self.shutdown.load(Ordering::Acquire) {
-            std::thread::sleep(READ_TICK);
+            std::thread::sleep(FLUSH_TICK);
             if every == 0 && interval == 0 {
                 continue; // periodic flush disabled; shutdown still saves
             }
@@ -399,138 +808,61 @@ impl Server {
         })
     }
 
-    /// Decode and serve one buffered request line (shared by the
-    /// newline-terminated and EOF-final paths of `handle_conn`).
-    /// Returns `(stop, write_ok)`.
-    fn serve_buffered_line(&self, buf: &[u8], writer: &mut TcpStream) -> (bool, bool) {
-        let mut stop = false;
-        let mut write_ok = true;
-        let text = String::from_utf8_lossy(buf);
-        let text = text.trim();
-        if !text.is_empty() {
-            let resp = self.dispatch_line(text, &mut stop);
-            write_ok =
-                writeln!(writer, "{}", resp.dump()).and_then(|_| writer.flush()).is_ok();
-        }
-        (stop, write_ok)
-    }
-
-    /// Raise the shutdown flag and unblock the acceptor.
-    fn begin_shutdown(&self) {
-        self.shutdown.store(true, Ordering::Release);
-        // self-connect so the blocking accept() wakes and sees the flag
-        let _ = TcpStream::connect(self.local_addr());
-    }
-
-    fn handle_conn(&self, stream: TcpStream) {
-        let _ = stream.set_read_timeout(Some(READ_TICK));
-        let _ = stream.set_nodelay(true);
-        let Ok(read_half) = stream.try_clone() else { return };
-        let mut reader = BufReader::new(read_half);
-        let mut writer = stream;
-        // raw byte framing: `read_line_bounded` accumulates into `buf`
-        // across timeout ticks with no loss.  (`read_line` would
-        // discard the whole partial read whenever a timeout split a
-        // multi-byte UTF-8 character — its internal guard truncates on
-        // invalid UTF-8 even for transient errors.)  Decoding happens
-        // once per complete line.
-        let mut buf: Vec<u8> = Vec::new();
-        loop {
-            match read_line_bounded(&mut reader, &mut buf) {
-                Ok(LineRead::Eof) => {
-                    // client closed.  A timeout tick may have buffered a
-                    // final unterminated request before the close; serve
-                    // it (and honor a shutdown) instead of dropping it.
-                    let (stop, _) = self.serve_buffered_line(&buf, &mut writer);
-                    if stop {
-                        self.begin_shutdown();
-                    }
-                    break;
-                }
-                Ok(LineRead::TooLong) => {
-                    ServiceMetrics::bump(&self.metrics.bad_requests);
-                    let resp = proto::error_response(
-                        &format!("request line exceeds {MAX_LINE_BYTES} bytes"),
-                        None,
-                    );
-                    let _ =
-                        writeln!(writer, "{}", resp.dump()).and_then(|_| writer.flush());
-                    break; // framing is gone; drop the connection
-                }
-                Ok(LineRead::Line) => {
-                    // chaos: stall between framing a request and serving
-                    // it — models a slow/foreground-GC'd client socket
-                    // and shakes out ordering assumptions (deadlines must
-                    // burn down during the stall, shutdown must still
-                    // interrupt the handler)
-                    if let Some(d) = self.faults.as_ref().and_then(|f| f.delay(FaultSite::ReadDelay))
-                    {
-                        std::thread::sleep(d);
-                    }
-                    let (stop, write_ok) = self.serve_buffered_line(&buf, &mut writer);
-                    buf.clear();
-                    if stop {
-                        // the shutdown must proceed even when the ack
-                        // write failed — a fire-and-forget client may
-                        // close before reading it
-                        self.begin_shutdown();
-                        break;
-                    }
-                    if !write_ok || self.shutdown.load(Ordering::Acquire) {
-                        break;
-                    }
-                }
-                Err(e)
-                    if matches!(
-                        e.kind(),
-                        std::io::ErrorKind::WouldBlock
-                            | std::io::ErrorKind::TimedOut
-                            | std::io::ErrorKind::Interrupted
-                    ) =>
-                {
-                    if self.shutdown.load(Ordering::Acquire) {
-                        break;
-                    }
-                }
-                Err(_) => break,
-            }
-        }
-    }
-
-    /// One request line → one response value.  `stop` is set when the
-    /// connection asked for shutdown (the caller acks first, then
-    /// raises the flag, so the client always sees the ack).
-    fn dispatch_line(&self, text: &str, stop: &mut bool) -> Json {
-        let parsed = Json::parse(text)
-            .map_err(|e| e.to_string())
-            .and_then(|j| proto::parse_request(&j));
-        let req = match parsed {
-            Ok(r) => r,
+    /// One request line → one dispatch outcome.  `stop` is set when the
+    /// line asked for shutdown (the caller buffers the ack first, then
+    /// starts the drain, so the client always sees the ack).
+    fn dispatch_line(&self, text: &str, ctx: &mut RouteCtx<'_>, stop: &mut bool) -> Dispatch {
+        let line = match Json::parse(text) {
+            Ok(j) => j,
             Err(e) => {
                 // never became a request — tracked apart from `errors` so
                 // the optimize-mix identity stays exact (metrics.rs)
                 ServiceMetrics::bump(&self.metrics.bad_requests);
-                return proto::error_response(&format!("bad request: {e}"), None);
+                return Dispatch::Reply(proto::error_response(&format!("bad request: {e}"), None));
             }
         };
-        match req {
-            Request::Health => proto::health_response(self.uptime.elapsed_ms()),
-            Request::Stats => proto::stats_response(StatsView {
-                metrics: &self.metrics.snapshot(),
-                cache: &self.cache.stats(),
-                uptime_ms: self.uptime.elapsed_ms(),
-                workers: self.workers(),
-                queue_cap: self.opts.queue_cap,
-                queue_pending: self.queue.pending_len(),
-                persist: self.persist_info(),
-                chaos: self.faults.as_ref().map(|f| f.stats_json()),
-            }),
-            Request::Shutdown => {
-                *stop = true;
-                proto::shutdown_response()
+        let req = match proto::decode_request(&line) {
+            Ok(r) => r,
+            Err(e) => {
+                ServiceMetrics::bump(&self.metrics.bad_requests);
+                // still echo the id when the line carried a valid one, so
+                // pipelined clients can correlate the failure
+                let id = proto::request_id(&line);
+                return Dispatch::Reply(
+                    proto::Reply::Error {
+                        msg: format!("bad request: {e}"),
+                        retry_after_ms: None,
+                    }
+                    .encode(id.as_ref()),
+                );
             }
-            Request::Optimize { graph, opts, deadline_ms } => {
-                self.serve_optimize(graph, opts, deadline_ms)
+        };
+        let id = req.id;
+        match req.op {
+            Op::Health => Dispatch::Reply(
+                proto::Reply::Health { uptime_ms: self.uptime.elapsed_ms() }.encode(id.as_ref()),
+            ),
+            Op::Stats => {
+                let snapshot = self.metrics.snapshot();
+                let cache_stats = self.cache.stats();
+                let view = StatsView {
+                    metrics: &snapshot,
+                    cache: &cache_stats,
+                    uptime_ms: self.uptime.elapsed_ms(),
+                    workers: self.workers(),
+                    queue_cap: self.opts.queue_cap,
+                    queue_pending: self.queue.pending_len(),
+                    persist: self.persist_info(),
+                    chaos: self.faults.as_ref().map(|f| f.stats_json()),
+                };
+                Dispatch::Reply(proto::Reply::Stats(view).encode(id.as_ref()))
+            }
+            Op::Shutdown => {
+                *stop = true;
+                Dispatch::Reply(proto::Reply::ShuttingDown.encode(id.as_ref()))
+            }
+            Op::Optimize { graph, opts, deadline_ms } => {
+                self.serve_optimize(graph, opts, deadline_ms, id, ctx)
             }
         }
     }
@@ -552,7 +884,7 @@ impl Server {
             let resident: usize = memo.values().map(|v| graph_bytes(v)).sum();
             if resident + graph_bytes(&g) <= MATRIX_MEMO_MAX_BYTES {
                 // a concurrent first request may have raced us here; keep
-                // whichever Arc landed first so handlers share one graph
+                // whichever Arc landed first so requests share one graph
                 return Ok(memo.entry(name.clone()).or_insert(g).clone());
             }
             Ok(g)
@@ -564,31 +896,50 @@ impl Server {
     /// One expired-deadline response.  No retry hint: retrying an
     /// already-blown deadline is pure waste — the client should widen
     /// the deadline or drop the request, not hammer the queue.
-    fn deadline_error(&self) -> Json {
+    fn deadline_error(&self, id: Option<&Json>) -> Json {
         ServiceMetrics::bump(&self.metrics.errors);
         ServiceMetrics::bump(&self.metrics.deadline_expired);
-        proto::error_response("deadline", None)
+        proto::Reply::Error { msg: "deadline".into(), retry_after_ms: None }.encode(id)
     }
 
     /// Serve the fast fallback schedule.  The result is rendered like
     /// any other schedule but tagged `"cached":"degraded"` and — by
     /// contract — never inserted into the cache: the fingerprint must
     /// keep meaning "the full pipeline's answer" (degraded.rs).
-    fn serve_degraded(&self, fp: Fingerprint, g: &Graph, opts: &crate::coordinator::OptOptions) -> Json {
+    fn serve_degraded(
+        &self,
+        fp: Fingerprint,
+        g: &Graph,
+        opts: &crate::coordinator::OptOptions,
+        id: Option<&Json>,
+    ) -> Json {
         let t = Instant::now();
         let entry = degraded::degraded_schedule(g, opts);
         let run_ms = t.elapsed().as_secs_f64() * 1e3;
         self.metrics.degraded.record(t.elapsed());
         ServiceMetrics::bump(&self.metrics.served_degraded);
-        proto::optimize_response(fp, "degraded", &entry, None, Some(run_ms))
+        proto::Reply::Schedule {
+            fp,
+            cached: "degraded",
+            entry: &entry,
+            queue_ms: None,
+            optimize_ms: Some(run_ms),
+        }
+        .encode(id)
     }
 
+    /// The optimize path.  Hits (and everything answerable without a
+    /// worker: expired deadlines, degraded fallbacks, rejections) reply
+    /// inline on the reactor; misses and joins park as a tagged
+    /// [`PendingReq`] and answer when their completion routes back.
     fn serve_optimize(
         &self,
         graph: proto::GraphSpec,
         mut opts: crate::coordinator::OptOptions,
         deadline_ms: Option<u64>,
-    ) -> Json {
+        id: Option<Json>,
+        ctx: &mut RouteCtx<'_>,
+    ) -> Dispatch {
         ServiceMetrics::bump(&self.metrics.requests);
         // the pool owns parallelism; per-job partitioner threads are a
         // server policy, never a client knob (results are invariant)
@@ -597,7 +948,10 @@ impl Server {
             Ok(g) => g,
             Err(e) => {
                 ServiceMetrics::bump(&self.metrics.errors);
-                return proto::error_response(&format!("bad graph: {e}"), None);
+                return Dispatch::Reply(
+                    proto::Reply::Error { msg: format!("bad graph: {e}"), retry_after_ms: None }
+                        .encode(id.as_ref()),
+                );
             }
         };
         let deadline = deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
@@ -606,12 +960,21 @@ impl Server {
             // a hit is near-free, so it is served even at deadline_ms=0;
             // everything past this point needs optimizer time
             ServiceMetrics::bump(&self.metrics.served_hit);
-            return proto::optimize_response(fp, "hit", &entry, None, None);
+            return Dispatch::Reply(
+                proto::Reply::Schedule {
+                    fp,
+                    cached: "hit",
+                    entry: &entry,
+                    queue_ms: None,
+                    optimize_ms: None,
+                }
+                .encode(id.as_ref()),
+            );
         }
         if let Some(d) = deadline {
             let remaining = d.saturating_duration_since(Instant::now());
             if remaining.is_zero() {
-                return self.deadline_error();
+                return Dispatch::Reply(self.deadline_error(id.as_ref()));
             }
             // degrade up front when the remaining budget cannot fit a
             // full run by the observed mean — queueing a job we expect
@@ -619,7 +982,7 @@ impl Server {
             if self.opts.degrade {
                 let mean_ms = self.metrics.optimize.snapshot().mean_ms;
                 if mean_ms > 0.0 && (remaining.as_secs_f64() * 1e3) < mean_ms {
-                    return self.serve_degraded(fp, &g, &opts);
+                    return Dispatch::Reply(self.serve_degraded(fp, &g, &opts, id.as_ref()));
                 }
             }
         }
@@ -628,7 +991,16 @@ impl Server {
                 // the job finished between the probe above and the
                 // enqueue — still a cache hit from the client's view
                 ServiceMetrics::bump(&self.metrics.served_hit);
-                proto::optimize_response(fp, "hit", &entry, None, None)
+                Dispatch::Reply(
+                    proto::Reply::Schedule {
+                        fp,
+                        cached: "hit",
+                        entry: &entry,
+                        queue_ms: None,
+                        optimize_ms: None,
+                    }
+                    .encode(id.as_ref()),
+                )
             }
             Submit::Rejected { retry_after_ms, reason } => {
                 // a transient rejection (queue full) degrades instead
@@ -636,44 +1008,27 @@ impl Server {
                 // rather than a retry hint.  Terminal rejections
                 // (shutdown, hint-less) always pass through.
                 if retry_after_ms.is_some() && self.opts.degrade {
-                    return self.serve_degraded(fp, &g, &opts);
+                    return Dispatch::Reply(self.serve_degraded(fp, &g, &opts, id.as_ref()));
                 }
                 ServiceMetrics::bump(&self.metrics.rejected);
-                proto::error_response(&reason, retry_after_ms)
+                Dispatch::Reply(
+                    proto::Reply::Error { msg: reason, retry_after_ms }.encode(id.as_ref()),
+                )
             }
             outcome @ (Submit::New(_) | Submit::Joined(_)) => {
-                let (job, cached) = match &outcome {
+                let (job, kind) = match &outcome {
                     Submit::New(j) => (j, "miss"),
                     Submit::Joined(j) => (j, "joined"),
                     _ => unreachable!(),
                 };
-                let (result, queue_wait, run_time) = job.wait();
-                match result {
-                    Ok(entry) => {
-                        ServiceMetrics::bump(if cached == "miss" {
-                            &self.metrics.served_miss
-                        } else {
-                            &self.metrics.served_joined
-                        });
-                        proto::optimize_response(
-                            fp,
-                            cached,
-                            &entry,
-                            Some(queue_wait.as_secs_f64() * 1e3),
-                            Some(run_time.as_secs_f64() * 1e3),
-                        )
-                    }
-                    // the worker counted the job's expiry once; each
-                    // waiter only adds its own `errors` entry
-                    Err(JobError::Deadline) => {
-                        ServiceMetrics::bump(&self.metrics.errors);
-                        proto::error_response("deadline", None)
-                    }
-                    Err(JobError::Failed(e)) => {
-                        ServiceMetrics::bump(&self.metrics.errors);
-                        proto::error_response(&format!("optimization failed: {e}"), Some(25))
-                    }
-                }
+                let tag = *ctx.next_tag;
+                *ctx.next_tag += 1;
+                ctx.pending.insert(tag, PendingReq { conn_id: ctx.conn_id, id, fp, kind });
+                // watch AFTER parking the PendingReq: an already-finished
+                // job pushes its completion immediately, and the routing
+                // pass must find the entry
+                job.watch(&self.completions, tag);
+                Dispatch::Async
             }
         }
     }
@@ -719,5 +1074,95 @@ mod tests {
         })
         .unwrap_err();
         assert!(err.to_string().contains("chaos"), "{err}");
+    }
+
+    /// Local socket pair for Conn tests: a connected (server-side Conn,
+    /// client stream) over loopback.
+    fn conn_pair() -> (Conn, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        (Conn::new(server_side, 0), client)
+    }
+
+    #[test]
+    fn take_lines_frames_and_keeps_partials() {
+        let (mut conn, _client) = conn_pair();
+        conn.inbuf.extend_from_slice(b"{\"op\":\"health\"}\n  \n{\"op\":\"stats\"}\n{\"op\":");
+        let (lines, too_long) = conn.take_lines();
+        assert!(!too_long);
+        assert_eq!(lines, vec!["{\"op\":\"health\"}".to_string(), "{\"op\":\"stats\"}".to_string()]);
+        assert_eq!(conn.inbuf, b"{\"op\":", "partial line must stay buffered");
+        // more bytes complete the line
+        conn.inbuf.extend_from_slice(b"\"health\"}\n");
+        let (lines, _) = conn.take_lines();
+        assert_eq!(lines, vec!["{\"op\":\"health\"}".to_string()]);
+        assert!(conn.inbuf.is_empty());
+        // at EOF the final unterminated line is still served
+        conn.inbuf.extend_from_slice(b"{\"op\":\"shutdown\"}");
+        conn.eof = true;
+        let (lines, _) = conn.take_lines();
+        assert_eq!(lines, vec!["{\"op\":\"shutdown\"}".to_string()]);
+        assert!(conn.inbuf.is_empty());
+    }
+
+    /// The slow-client hazard the reactor exists to fix: a connection
+    /// that reads one byte per tick must never block the poll loop —
+    /// `try_write` pushes what the kernel takes, keeps the rest
+    /// buffered, and finishes the transfer across sweeps.
+    #[test]
+    fn partial_writes_buffer_and_drain_without_blocking() {
+        let (mut conn, mut client) = conn_pair();
+        // a payload far past any kernel socket buffering, so the first
+        // sweep MUST hit WouldBlock with bytes left over
+        let total: usize = 32 << 20;
+        conn.outbuf = vec![b'x'; total];
+        let t0 = Instant::now();
+        let sys = conn.try_write();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "try_write must return without blocking on a full socket"
+        );
+        assert!(sys >= 1, "some prefix must have been accepted");
+        assert!(conn.pending_out() > 0, "32 MiB cannot fit kernel buffers in one sweep");
+        assert!(!conn.dead);
+
+        // the client drains one byte per "tick" for a while — each tick
+        // the reactor's write sweep runs again and must stay nonblocking
+        let mut got = 0usize;
+        let mut one = [0u8; 1];
+        for _ in 0..64 {
+            client.read_exact(&mut one).unwrap();
+            got += 1;
+            let t = Instant::now();
+            conn.try_write();
+            assert!(t.elapsed() < Duration::from_secs(5));
+        }
+        // then the client recovers and drains the rest in big reads
+        let mut chunk = vec![0u8; 1 << 20];
+        while got < total {
+            conn.try_write();
+            match client.read(&mut chunk) {
+                Ok(0) => break,
+                Ok(n) => got += n,
+                Err(e) => panic!("client read failed: {e}"),
+            }
+        }
+        assert_eq!(got, total, "every buffered byte must eventually arrive");
+        // a final sweep observes the empty buffer and resets state
+        conn.try_write();
+        assert_eq!(conn.pending_out(), 0);
+        assert!(!conn.dead);
+    }
+
+    #[test]
+    fn backpressure_watermark_pauses_reads_not_the_loop() {
+        let (mut conn, client) = conn_pair();
+        // below the watermark reads proceed; above it the sweep skips
+        // this connection (the reactor checks pending_out first)
+        conn.outbuf = vec![b'y'; OUTBUF_HIGH_WATERMARK + 1];
+        assert!(conn.pending_out() > OUTBUF_HIGH_WATERMARK);
+        drop(client);
     }
 }

@@ -187,6 +187,9 @@ const GATED_METRICS: &[(&str, bool)] = &[
     ("cut_ratio_new_over_ref", false),
     ("kway_refine_speedup", true),
     ("kway_cut_ratio_new_over_ref", false),
+    // pipelined hit-path throughput over the in-run thread-per-connection
+    // baseline (benches/service.rs) — the PR 7 reactor headline
+    ("serve_pipelined_speedup", true),
 ];
 
 /// Compare a freshly produced bench baseline (`current`, JSON text)

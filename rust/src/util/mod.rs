@@ -5,5 +5,6 @@
 pub mod benchkit;
 pub mod json;
 pub mod par;
+pub mod poll;
 pub mod prop;
 pub mod rng;

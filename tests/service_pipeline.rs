@@ -1,0 +1,313 @@
+//! Protocol-2 pipelining e2e: id echo, completion-order delivery,
+//! micro-batched mixed outcomes, and strict v1 back-compat against a
+//! real reactor on 127.0.0.1:0.
+//!
+//! The contracts under test (ISSUE 7):
+//!
+//!   * v1 (un-id'd, one-at-a-time) exchanges are BYTE-identical to the
+//!     pre-reactor protocol: no `"id"`, no `"proto"` key ever appears in
+//!     an optimize response, and the key set is pinned exactly;
+//!   * N pipelined requests on one connection come back as N responses,
+//!     each carrying the right id (`PipelinedClient::recv` refuses
+//!     unknown ids, so completing at all is the proof), regardless of
+//!     completion order;
+//!   * cache hits overtake in-flight optimizer runs (completion-order
+//!     delivery — the whole point of pipelining);
+//!   * a mixed hit/miss/joined/deadline/degraded burst on ONE connection
+//!     reconciles exactly against the stats identity
+//!     `requests == hit + miss + joined + degraded + rejected + errors`;
+//!   * shutdown drains in-flight pipelined requests before the server
+//!     exits.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use epgraph::coordinator::OptOptions;
+use epgraph::service::{proto, Client, GraphSpec, PipelinedClient, ServeOpts, Server};
+use epgraph::util::json::Json;
+
+fn start_server(opts: ServeOpts) -> (Arc<Server>, std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let server = Arc::new(Server::bind(opts).expect("bind loopback"));
+    let addr = server.local_addr();
+    let handle = {
+        let server = server.clone();
+        std::thread::spawn(move || server.run().expect("server run"))
+    };
+    (server, addr, handle)
+}
+
+fn get_u64(j: &Json, key: &str) -> u64 {
+    j.get(key).and_then(Json::as_u64).unwrap_or_else(|| panic!("field {key}: {j:?}"))
+}
+
+fn gen_spec(r: u64, c: u64, s: u64) -> GraphSpec {
+    GraphSpec::Gen { name: "cfd_mesh".into(), args: vec![r, c, s] }
+}
+
+/// Raw v1 exchange: write the line, read exactly one response line.
+fn raw_roundtrip(reader: &mut BufReader<TcpStream>, writer: &mut TcpStream, line: &str) -> String {
+    writeln!(writer, "{line}").expect("send");
+    writer.flush().expect("flush");
+    let mut resp = String::new();
+    reader.read_line(&mut resp).expect("recv");
+    assert!(resp.ends_with('\n'), "server closed mid-line: {resp:?}");
+    resp.trim_end().to_string()
+}
+
+#[test]
+fn v1_exchanges_stay_bit_identical_and_unstamped() {
+    let (_server, addr, handle) =
+        start_server(ServeOpts { port: 0, threads: 2, ..Default::default() });
+    let mut writer = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(writer.try_clone().unwrap());
+
+    let line = proto::optimize_request(
+        &gen_spec(12, 12, 1),
+        &OptOptions { k: 4, seed: 3, ..Default::default() },
+    )
+    .dump();
+    let miss = raw_roundtrip(&mut reader, &mut writer, &line);
+    let hit1 = raw_roundtrip(&mut reader, &mut writer, &line);
+    let hit2 = raw_roundtrip(&mut reader, &mut writer, &line);
+
+    // byte-identity: an un-id'd request never grows new keys, and a
+    // repeated hit is byte-for-byte reproducible
+    assert_eq!(hit1, hit2, "v1 hit responses must be byte-identical");
+    for resp in [&miss, &hit1] {
+        assert!(!resp.contains("\"id\""), "v1 response grew an id: {resp}");
+        assert!(!resp.contains("\"proto\""), "v1 optimize response grew proto: {resp}");
+    }
+    // the exact v1 optimize key set, pinned (BTreeMap dump = sorted)
+    let parsed = Json::parse(&hit1).unwrap();
+    let Json::Obj(m) = &parsed else { panic!("not an object") };
+    let keys: Vec<&str> = m.keys().map(String::as_str).collect();
+    assert_eq!(
+        keys,
+        vec![
+            "assign",
+            "balance",
+            "cached",
+            "degraded",
+            "fingerprint",
+            "k",
+            "layout",
+            "ok",
+            "optimize_ms",
+            "partition_ms",
+            "quality",
+            "queue_ms",
+            "skipped_low_reuse",
+            "used_special",
+        ],
+        "v1 optimize response key set changed"
+    );
+    assert_eq!(parsed.get("cached").and_then(Json::as_str), Some("hit"));
+
+    // health and stats DO advertise the new protocol revision
+    let health = raw_roundtrip(&mut reader, &mut writer, &proto::simple_request("health").dump());
+    let health = Json::parse(&health).unwrap();
+    assert_eq!(get_u64(&health, "proto"), proto::PROTO_VERSION);
+    assert!(health.get("id").is_none());
+    let stats = raw_roundtrip(&mut reader, &mut writer, &proto::simple_request("stats").dump());
+    let stats = Json::parse(&stats).unwrap();
+    assert_eq!(get_u64(&stats, "proto"), proto::PROTO_VERSION);
+
+    raw_roundtrip(&mut reader, &mut writer, &proto::simple_request("shutdown").dump());
+    handle.join().expect("server thread");
+}
+
+#[test]
+fn interleaved_pipelined_requests_come_back_id_matched() {
+    let (_server, addr, handle) =
+        start_server(ServeOpts { port: 0, threads: 4, ..Default::default() });
+
+    // two workloads interleaved, 16 requests in flight at once
+    let reqs: Vec<Json> = (0..16)
+        .map(|i| {
+            let spec = if i % 2 == 0 { gen_spec(10, 10, 2) } else { gen_spec(10, 12, 2) };
+            proto::optimize_request(&spec, &OptOptions { k: 4, seed: 5, ..Default::default() })
+        })
+        .collect();
+    let mut client = PipelinedClient::connect(addr).unwrap();
+    let tickets: Vec<_> = reqs.iter().map(|r| client.submit(r).unwrap()).collect();
+    assert_eq!(client.in_flight(), 16);
+
+    let mut seen = Vec::new();
+    let (mut hits, mut misses, mut joins) = (0u64, 0u64, 0u64);
+    for _ in 0..16 {
+        // recv() errors on an unknown/duplicate id, so 16 clean recvs
+        // prove 16 id-matched responses
+        let (ticket, resp) = client.recv().unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+        match resp.get("cached").and_then(Json::as_str) {
+            Some("hit") => hits += 1,
+            Some("miss") => misses += 1,
+            Some("joined") => joins += 1,
+            other => panic!("unexpected cached tag {other:?}"),
+        }
+        seen.push(ticket);
+    }
+    assert_eq!(client.in_flight(), 0);
+    let mut expected = tickets.clone();
+    let mut got = seen.clone();
+    expected.sort_by_key(|t| t.id());
+    got.sort_by_key(|t| t.id());
+    assert_eq!(got, expected, "every submitted ticket answered exactly once");
+    // singleflight still collapses the duplicates: one run per workload
+    assert_eq!(misses, 2, "one optimizer run per distinct workload");
+    assert_eq!(hits + joins, 14);
+
+    // ids are opaque: two raw requests sharing an id get two responses,
+    // both echoing it verbatim
+    let mut writer = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(writer.try_clone().unwrap());
+    let dup = r#"{"op":"health","id":"dup"}"#;
+    writeln!(writer, "{dup}\n{dup}").unwrap();
+    writer.flush().unwrap();
+    for _ in 0..2 {
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("id").and_then(Json::as_str), Some("dup"));
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+    }
+
+    let mut c = Client::connect(addr).unwrap();
+    c.roundtrip_line(&proto::simple_request("shutdown").dump()).unwrap();
+    handle.join().expect("server thread");
+}
+
+#[test]
+fn hits_overtake_misses_and_the_mix_reconciles_on_one_connection() {
+    let (_server, addr, handle) =
+        start_server(ServeOpts { port: 0, threads: 2, ..Default::default() });
+    let opts = OptOptions { k: 4, seed: 11, ..Default::default() };
+    let warm_spec = gen_spec(16, 16, 3);
+
+    // phase 1 (blocking): warm the cache and the optimize-mean estimate
+    let mut warm = Client::connect(addr).unwrap();
+    let first = warm.request(&proto::optimize_request(&warm_spec, &opts)).unwrap();
+    assert_eq!(first.get("cached").and_then(Json::as_str), Some("miss"));
+
+    // phase 2 (pipelined, one connection): a fresh miss followed by
+    // three hits of the warm workload — the hits answer inline on the
+    // reactor while the miss is still in the worker pool, so ALL three
+    // hits must arrive before the miss (completion order ≠ submit order)
+    let mut client = PipelinedClient::connect(addr).unwrap();
+    let miss_t = client.submit(&proto::optimize_request(&gen_spec(16, 18, 3), &opts)).unwrap();
+    let hit_reqs = proto::optimize_request(&warm_spec, &opts);
+    let hit_ts = [
+        client.submit(&hit_reqs).unwrap(),
+        client.submit(&hit_reqs).unwrap(),
+        client.submit(&hit_reqs).unwrap(),
+    ];
+    let mut order = Vec::new();
+    for _ in 0..4 {
+        let (t, resp) = client.recv().unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+        order.push((t, resp.get("cached").and_then(Json::as_str).unwrap().to_string()));
+    }
+    let miss_pos = order.iter().position(|(t, _)| *t == miss_t).unwrap();
+    assert_eq!(miss_pos, 3, "the in-flight miss must be overtaken by the hits: {order:?}");
+    for t in hit_ts {
+        let (_, tag) = order.iter().find(|(ot, _)| *ot == t).unwrap();
+        assert_eq!(tag, "hit");
+    }
+
+    // phase 3: deadline and degraded outcomes on the SAME connection.
+    // deadline_ms=0 on an uncached workload fails fast ("deadline");
+    // deadline_ms=2 degrades (the observed optimize mean is far larger
+    // in a debug build, so a full run can never fit)
+    let t_dead = client
+        .submit(&proto::optimize_request_with_deadline(&gen_spec(16, 20, 3), &opts, Some(0)))
+        .unwrap();
+    let (t, resp) = client.recv().unwrap();
+    assert_eq!(t, t_dead);
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(resp.get("error").and_then(Json::as_str), Some("deadline"));
+    assert!(resp.get("retry_after_ms").is_none(), "expired deadlines are terminal");
+
+    let t_deg = client
+        .submit(&proto::optimize_request_with_deadline(&gen_spec(16, 22, 3), &opts, Some(2)))
+        .unwrap();
+    let (t, resp) = client.recv().unwrap();
+    assert_eq!(t, t_deg);
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+    assert_eq!(resp.get("cached").and_then(Json::as_str), Some("degraded"));
+    assert_eq!(resp.get("degraded").and_then(Json::as_bool), Some(true));
+
+    // a hit is served even at deadline 0 (near-free, no optimizer time)
+    let t_hit0 = client
+        .submit(&proto::optimize_request_with_deadline(&warm_spec, &opts, Some(0)))
+        .unwrap();
+    let (t, resp) = client.recv().unwrap();
+    assert_eq!(t, t_hit0);
+    assert_eq!(resp.get("cached").and_then(Json::as_str), Some("hit"));
+
+    // phase 4: stats on the same pipelined connection — id-stamped, and
+    // the optimize-mix identity must reconcile exactly
+    let t_stats = client.submit(&proto::simple_request("stats")).unwrap();
+    let (t, stats) = client.recv().unwrap();
+    assert_eq!(t, t_stats);
+    assert_eq!(get_u64(&stats, "proto"), proto::PROTO_VERSION);
+    let requests = get_u64(&stats, "requests");
+    assert_eq!(requests, 8, "1 warm + 4 pipelined + deadline + degraded + hit@0");
+    assert_eq!(
+        requests,
+        get_u64(&stats, "served_hit")
+            + get_u64(&stats, "served_miss")
+            + get_u64(&stats, "served_joined")
+            + get_u64(&stats, "served_degraded")
+            + get_u64(&stats, "rejected")
+            + get_u64(&stats, "errors"),
+        "optimize mix identity broke: {stats:?}"
+    );
+    assert_eq!(get_u64(&stats, "served_miss"), 2);
+    assert_eq!(get_u64(&stats, "served_degraded"), 1);
+    assert_eq!(get_u64(&stats, "errors"), 1);
+    assert_eq!(get_u64(&stats, "deadline_expired"), 1);
+    // reactor accounting: every response line was counted, and the two
+    // connections of this test were seen
+    let reactor = stats.get("reactor").expect("reactor stats");
+    assert!(get_u64(reactor, "responses") >= requests);
+    assert!(get_u64(reactor, "connections_total") >= 2);
+    assert!(get_u64(reactor, "write_syscalls") >= 1);
+    assert_eq!(get_u64(reactor, "dropped_responses"), 0);
+
+    let mut c = Client::connect(addr).unwrap();
+    c.roundtrip_line(&proto::simple_request("shutdown").dump()).unwrap();
+    handle.join().expect("server thread");
+}
+
+/// Shutdown must drain: requests already in flight when the shutdown
+/// arrives on the SAME connection still get their responses, then the
+/// ack'd server exits.
+#[test]
+fn shutdown_drains_inflight_pipelined_requests() {
+    let (_server, addr, handle) =
+        start_server(ServeOpts { port: 0, threads: 2, ..Default::default() });
+    let opts = OptOptions { k: 2, seed: 13, ..Default::default() };
+
+    let mut client = PipelinedClient::connect(addr).unwrap();
+    let work: Vec<_> = (0..3)
+        .map(|i| client.submit(&proto::optimize_request(&gen_spec(8 + i, 10, 4), &opts)).unwrap())
+        .collect();
+    let t_shutdown = client.submit(&proto::simple_request("shutdown")).unwrap();
+
+    let mut answered = Vec::new();
+    for _ in 0..4 {
+        let (t, resp) = client.recv().unwrap();
+        if t == t_shutdown {
+            assert_eq!(resp.get("status").and_then(Json::as_str), Some("shutting-down"));
+        } else {
+            assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+            assert_eq!(resp.get("cached").and_then(Json::as_str), Some("miss"));
+        }
+        answered.push(t);
+    }
+    for t in work {
+        assert!(answered.contains(&t), "in-flight request dropped by the drain");
+    }
+    handle.join().expect("server exits after the drain");
+}
