@@ -1,7 +1,10 @@
 //! Serving-layer benchmarks: cache hit-path latency over real loopback
-//! TCP, the raw cache/fingerprint costs, and the PR 7 headline — the
+//! TCP, the raw cache/fingerprint costs, the PR 7 headline — the
 //! event-driven reactor's pipelined hit-path throughput at ≥1k open
-//! connections against an in-bench thread-per-connection baseline.
+//! connections against an in-bench thread-per-connection baseline —
+//! and the PR 8 fleet hit path: owned-hit vs forwarded-hit latency in
+//! a two-node consistent-hash fleet (`forwarded_hit_overhead` is the
+//! gated ratio).
 //!
 //!     cargo bench --offline --bench service
 //!
@@ -27,11 +30,12 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use epgraph::coordinator::{optimize_graph_with_breakdown, OptOptions};
+use epgraph::graph::Graph;
 use epgraph::service::{
-    fingerprint, proto, CachedSchedule, Client, GraphSpec, PipelinedClient, ScheduleCache,
-    ServeOpts, Server,
+    fingerprint, proto, CachedSchedule, Client, GraphSpec, HashRing, PipelinedClient,
+    ScheduleCache, ServeOpts, Server,
 };
-use epgraph::util::benchkit::{bench, JsonReport};
+use epgraph::util::benchkit::{bench, JsonReport, Stats};
 use epgraph::util::json::Json;
 
 /// Client-side driver threads for the throughput phases.  All N
@@ -130,6 +134,16 @@ fn main() {
     client.roundtrip_line(&proto::simple_request("shutdown").dump()).expect("shutdown");
     run.join().expect("server thread");
 
+    // --- fleet: owned hit vs forwarded hit -----------------------------
+    println!("\n## fleet hit path (2-node consistent-hash fleet)\n");
+    let fleet_iters = if smoke { 100 } else { 500 };
+    let (owned_stats, forwarded_stats) = fleet_hit_phase(&spec, &g, fleet_iters);
+    println!("{}", owned_stats.row());
+    println!("{}", forwarded_stats.row());
+    let overhead =
+        forwarded_stats.median.as_secs_f64() / owned_stats.median.as_secs_f64().max(1e-9);
+    println!("forwarded_hit_overhead: {overhead:.2}x (median over median)");
+
     let mut report = JsonReport::new();
     report
         .str("bench", "service")
@@ -141,7 +155,10 @@ fn main() {
         .int("pipeline_depth", depth as u64)
         .num("serve_blocking_rps", blocking_rps)
         .num("serve_pipelined_rps", pipelined_rps)
-        .num("serve_pipelined_speedup", speedup);
+        .num("serve_pipelined_speedup", speedup)
+        .num("fleet_owned_hit_ms", owned_stats.median.as_secs_f64() * 1e3)
+        .num("fleet_forwarded_hit_ms", forwarded_stats.median.as_secs_f64() * 1e3)
+        .num("forwarded_hit_overhead", overhead);
     report.write("BENCH_service.json").expect("write BENCH_service.json");
     println!("\nwrote BENCH_service.json");
 }
@@ -316,6 +333,84 @@ fn pipelined_throughput(
     let total = done.load(Ordering::Relaxed);
     assert_eq!(total as usize, conns * reqs, "reactor lost responses");
     (total as f64 / secs.max(1e-9), conns)
+}
+
+/// Stand up a two-node fleet on pre-reserved ports, prime the owner's
+/// cache with one optimizer run, then measure the warmed hit path two
+/// ways: client -> owner directly ("owned"), and client -> the other
+/// node, which relays to the owner over its peer link ("forwarded").
+/// The forwarding node never caches relayed results, so every one of
+/// its requests takes the full forward hop.  Returns (owned, forwarded).
+fn fleet_hit_phase(spec: &GraphSpec, g: &Graph, iters: usize) -> (Stats, Stats) {
+    // Reserve both ports while holding both listeners so they cannot
+    // collide, then release them for the servers to claim.
+    let la = TcpListener::bind(("127.0.0.1", 0)).expect("reserve port a");
+    let lb = TcpListener::bind(("127.0.0.1", 0)).expect("reserve port b");
+    let (pa, pb) = (
+        la.local_addr().expect("addr a").port(),
+        lb.local_addr().expect("addr b").port(),
+    );
+    drop((la, lb));
+    let peers = vec![format!("127.0.0.1:{pa}"), format!("127.0.0.1:{pb}")];
+    let ring = HashRing::new(&peers).expect("fleet ring");
+
+    // Pick a seed whose fingerprint node A owns, so the owned/forwarded
+    // roles below are deterministic.
+    let mut seed = 7u64;
+    let fleet_opts = loop {
+        let o = OptOptions { k: 8, seed, ..Default::default() };
+        if ring.owner(fingerprint(g, &o)) == peers[0] {
+            break o;
+        }
+        seed += 1;
+    };
+
+    let spawn_member = |port: u16| {
+        let server = Arc::new(
+            Server::bind(ServeOpts { port, threads: 2, peers: peers.clone(), ..Default::default() })
+                .expect("bind fleet member"),
+        );
+        let run = {
+            let server = server.clone();
+            std::thread::spawn(move || server.run().expect("fleet member run"))
+        };
+        (server, run)
+    };
+    let (node_a, run_a) = spawn_member(pa);
+    let (node_b, run_b) = spawn_member(pb);
+
+    let line = proto::optimize_request(spec, &fleet_opts).dump();
+    let mut ca = Client::connect(node_a.local_addr()).expect("connect node A");
+    let mut cb = Client::connect(node_b.local_addr()).expect("connect node B");
+    let first = ca.roundtrip_line(&line).expect("prime owner");
+    assert_eq!(
+        first.get("cached").and_then(|v| v.as_str()),
+        Some("miss"),
+        "fleet prime must be a miss"
+    );
+    let via_b = cb.roundtrip_line(&line).expect("first forwarded request");
+    assert_eq!(
+        via_b.get("cached").and_then(|v| v.as_str()),
+        Some("hit"),
+        "peer must relay the owner's cache hit"
+    );
+
+    let owned = bench("fleet owned hit (client -> owner)", 10, iters, || {
+        ca.roundtrip_line(&line).expect("owned hit")
+    });
+    let forwarded = bench("fleet forwarded hit (client -> peer -> owner)", 10, iters, || {
+        cb.roundtrip_line(&line).expect("forwarded hit")
+    });
+
+    let stats_b = cb.roundtrip_line(&proto::simple_request("stats").dump()).expect("stats B");
+    let relayed = stats_b.get("forwarded").and_then(|v| v.as_u64()).unwrap_or(0);
+    assert!(relayed > 0, "node B must have forwarded requests: {}", stats_b.dump());
+
+    ca.roundtrip_line(&proto::simple_request("shutdown").dump()).expect("shutdown A");
+    cb.roundtrip_line(&proto::simple_request("shutdown").dump()).expect("shutdown B");
+    run_a.join().expect("node A thread");
+    run_b.join().expect("node B thread");
+    (owned, forwarded)
 }
 
 /// Split `items` into at most `n` contiguous chunks of near-equal size.

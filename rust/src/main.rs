@@ -9,8 +9,9 @@
 //!   epgraph serve     [--port N] [--threads N] [--queue-cap N] [--cache-mb N] [--shards N]
 //!                     [--snapshot PATH] [--snapshot-every N] [--snapshot-keep K]
 //!                     [--snapshot-interval SECS] [--no-degrade] [--chaos SPEC]
-//!                     [--matrix-dir DIR]
-//!   epgraph client    [--addr HOST:PORT] [--op optimize|stats|health|shutdown]
+//!                     [--matrix-dir DIR] [--peers HOST:PORT,HOST:PORT,...]
+//!   epgraph client    [--addr HOST:PORT | --cluster HOST:PORT,...]
+//!                     [--op optimize|stats|health|shutdown]
 //!                     [--gen SPEC | --matrix NAME]
 //!                     [--k N] [--seed S] [--repeat N] [--concurrency N] [--verify]
 //!                     [--pipeline N] [--deadline-ms N] [--max-retries N]
@@ -98,8 +99,8 @@ fn dispatch(args: &[String]) -> Result<()> {
                  epgraph bench <fig4|fig6|table2|fig10|fig11|fig12|table3|fig13|fig14|fig15|ablation|scaling|headline|all>\n  \
                  epgraph bench-compare <baseline.json> <current.json> [--tol 0.25]\n  \
                  epgraph artifacts [--outdir DIR] [--configs t0,s1,m1]\n  \
-                 epgraph serve [--port 7878] [--threads 0] [--partition-threads 1] [--queue-cap 64] [--cache-mb 64] [--shards 8]\n                [--snapshot cache.snap] [--snapshot-every 64] [--snapshot-keep 3] [--snapshot-interval 0]\n                [--no-degrade] [--chaos seed=7,worker_panic=0.1,...] [--matrix-dir DIR]\n  \
-                 epgraph client [--addr 127.0.0.1:7878] [--op optimize|stats|health|shutdown] [--gen cfd_mesh:24,24,1 | --matrix NAME]\n                 [--k N] [--seed S] [--method M] [--repeat 1] [--concurrency 1] [--verify] [--pipeline N]\n                 [--deadline-ms N] [--max-retries 8] [--retry-budget-ms 30000]\n  \
+                 epgraph serve [--port 7878] [--threads 0] [--partition-threads 1] [--queue-cap 64] [--cache-mb 64] [--shards 8]\n                [--snapshot cache.snap] [--snapshot-every 64] [--snapshot-keep 3] [--snapshot-interval 0]\n                [--no-degrade] [--chaos seed=7,worker_panic=0.1,...] [--matrix-dir DIR]\n                [--peers 127.0.0.1:7878,127.0.0.1:7879,...]\n  \
+                 epgraph client [--addr 127.0.0.1:7878 | --cluster 127.0.0.1:7878,...] [--op optimize|stats|health|shutdown]\n                 [--gen cfd_mesh:24,24,1 | --matrix NAME]\n                 [--k N] [--seed S] [--method M] [--repeat 1] [--concurrency 1] [--verify] [--pipeline N]\n                 [--deadline-ms N] [--max-retries 8] [--retry-budget-ms 30000]\n  \
                  epgraph info"
             );
             Ok(())
@@ -325,11 +326,19 @@ fn cmd_bench_compare(pos: &[String], flags: &HashMap<String, String>) -> Result<
 /// enables server-side `{"matrix":"name"}` specs (`<DIR>/<name>.mtx`).
 /// `--chaos SPEC` (or the EPGRAPH_CHAOS env var) arms deterministic
 /// fault injection; `--no-degrade` disables the fallback pipeline.
+/// `--peers` joins a sharded fleet: the comma list (which must include
+/// this daemon's own `127.0.0.1:<port>`) defines a consistent-hash
+/// ring, and requests whose fingerprint another member owns are
+/// forwarded there instead of recomputed.
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let chaos = flags
         .get("chaos")
         .cloned()
         .or_else(|| std::env::var("EPGRAPH_CHAOS").ok().filter(|s| !s.is_empty()));
+    let peers: Vec<String> = flags
+        .get("peers")
+        .map(|s| s.split(',').map(|a| a.trim().to_string()).filter(|a| !a.is_empty()).collect())
+        .unwrap_or_default();
     let opts = epgraph::service::ServeOpts {
         port: get_usize(flags, "port", 7878) as u16,
         threads: get_usize(flags, "threads", 0),
@@ -344,6 +353,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         degrade: !flags.contains_key("no-degrade"),
         chaos,
         matrix_dir: flags.get("matrix-dir").map(std::path::PathBuf::from),
+        peers,
     };
     let server = epgraph::service::Server::bind(opts.clone())?;
     println!(
@@ -373,6 +383,15 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(dir) = &opts.matrix_dir {
         println!("epgraph serve: matrix specs resolve from {dir:?}");
     }
+    if !opts.peers.is_empty() {
+        let ring = epgraph::service::HashRing::new(&opts.peers).map_err(|e| anyhow!("{e}"))?;
+        println!(
+            "epgraph serve: fleet member 127.0.0.1:{} of {} peers (ring generation {:016x})",
+            opts.port,
+            ring.len(),
+            ring.generation()
+        );
+    }
     server.run()?;
     println!("epgraph serve: clean shutdown");
     Ok(())
@@ -381,16 +400,61 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
 /// Drive a running `epgraph serve`: fire optimize requests (optionally
 /// concurrent and repeated, with verification against a direct
 /// `optimize_graph` run), or hit the stats/health/shutdown endpoints.
+/// `--cluster HOST:PORT,...` hashes the workload client-side with the
+/// same ring the fleet uses and talks straight to the owner (skipping
+/// the server-side forwarding hop); stats/health/shutdown fan out to
+/// every listed node.
 fn cmd_client(flags: &HashMap<String, String>) -> Result<()> {
     use epgraph::coordinator::{optimize_graph, OptOptions};
     use epgraph::service::proto;
     use std::sync::atomic::{AtomicU64, Ordering};
     use std::sync::Mutex;
 
+    let cluster = flags
+        .get("cluster")
+        .map(|s| -> Result<epgraph::service::Cluster> {
+            anyhow::ensure!(
+                !flags.contains_key("addr"),
+                "--addr and --cluster are mutually exclusive"
+            );
+            let addrs: Vec<String> = s
+                .split(',')
+                .map(|a| a.trim().to_string())
+                .filter(|a| !a.is_empty())
+                .collect();
+            epgraph::service::Cluster::new(&addrs)
+        })
+        .transpose()?;
     let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7878".to_string());
     let op = flags.get("op").map(String::as_str).unwrap_or("optimize");
 
     if matches!(op, "stats" | "health" | "shutdown") {
+        if let Some(cluster) = &cluster {
+            // fan out: these endpoints are per-node, not per-key.  A
+            // node that refuses the connection is reported but does not
+            // abort the sweep (shutdown of a half-dead fleet must work).
+            let mut failures = 0usize;
+            for node in cluster.addrs() {
+                match epgraph::service::Client::connect(node.as_str())
+                    .and_then(|mut c| c.request(&proto::simple_request(op)))
+                {
+                    Ok(resp) => {
+                        println!("{node} {}", resp.dump());
+                        if resp.get("ok").and_then(epgraph::util::json::Json::as_bool)
+                            != Some(true)
+                        {
+                            failures += 1;
+                        }
+                    }
+                    Err(e) => {
+                        println!("{node} unreachable: {e:#}");
+                        failures += 1;
+                    }
+                }
+            }
+            anyhow::ensure!(failures == 0, "{failures} fleet node(s) failed '{op}'");
+            return Ok(());
+        }
         let mut client = epgraph::service::Client::connect(addr.as_str())?;
         let resp = client.request(&proto::simple_request(op))?;
         println!("{}", resp.dump());
@@ -430,6 +494,30 @@ fn cmd_client(flags: &HashMap<String, String>) -> Result<()> {
         .max_retries(get_usize(flags, "max-retries", 8) as u32)
         .budget(std::time::Duration::from_millis(get_usize(flags, "retry-budget-ms", 30_000) as u64))
         .build();
+
+    // --cluster: hash the workload with the fleet's own ring and talk
+    // to the owner directly.  Routing is an optimization, not a
+    // correctness requirement — if the owner is down, connect_for
+    // probes the remaining nodes and server-side re-home covers it.
+    let addr = if let Some(cluster) = &cluster {
+        anyhow::ensure!(
+            !matches!(spec, proto::GraphSpec::Matrix { .. }),
+            "--cluster hashes the workload client-side, but matrix specs resolve on the \
+             server — use a --gen workload"
+        );
+        let g = spec.resolve().map_err(|e| anyhow!("--gen: {e}"))?;
+        let fp = epgraph::service::fingerprint(&g, &opts);
+        let (probe, routed) = cluster.connect_for(fp)?;
+        drop(probe);
+        println!(
+            "cluster: owner {} for fingerprint {} (routed to {routed})",
+            cluster.owner(fp),
+            fp.to_hex()
+        );
+        routed
+    } else {
+        addr
+    };
 
     if pipeline > 0 {
         anyhow::ensure!(

@@ -419,8 +419,7 @@ fn random_matching(g: &WGraph, seed: u64, ws: &mut VpWorkspace) -> (Vec<u32>, us
     rng.shuffle(&mut ws.order[..n]);
     reset(&mut ws.mate, n, u32::MAX);
     let mut nbrs: Vec<u32> = Vec::new();
-    for i in 0..n {
-        let v = ws.order[i];
+    for &v in &ws.order[..n] {
         if ws.mate[v as usize] != u32::MAX {
             continue;
         }
@@ -472,8 +471,8 @@ fn contract(g: &WGraph, cmap: &[u32], nc: usize, threads: usize, ws: &mut VpWork
     // group fine vertices by coarse id (counting sort; stable => members
     // of each coarse vertex are in ascending fine order)
     reset(&mut ws.mptr, nc + 1, 0);
-    for v in 0..n {
-        ws.mptr[cmap[v] as usize + 1] += 1;
+    for &c in &cmap[..n] {
+        ws.mptr[c as usize + 1] += 1;
     }
     for c in 0..nc {
         ws.mptr[c + 1] += ws.mptr[c];
@@ -1330,9 +1329,10 @@ fn kway_refine_ws(
             }
         }
         // roll back past the best prefix, in reverse, with the same
-        // incremental conn updates — the arena stays exact
-        for i in (best_prefix..ws.kmoves.len()).rev() {
-            let (v, orig) = ws.kmoves[i];
+        // incremental conn updates — the arena stays exact (kmoves is
+        // dead after this; the next pass starts from a clear())
+        while ws.kmoves.len() > best_prefix {
+            let (v, orig) = ws.kmoves.pop().unwrap();
             let vi = v as usize;
             let cur = part[vi];
             part[vi] = orig;
@@ -1990,8 +1990,8 @@ mod tests {
         let part = partition_kway(&g, 6, &VpOpts::default());
         assert!(part.iter().all(|&p| p < 6));
         let mut loads = [0i64; 6];
-        for v in 0..g.n {
-            loads[part[v] as usize] += 1;
+        for &p in &part {
+            loads[p as usize] += 1;
         }
         for l in loads {
             assert!((8..=12).contains(&l), "load {l}");
@@ -2009,8 +2009,8 @@ mod tests {
         );
         let part = partition_kway(&g, 3, &VpOpts::default());
         let mut loads = [0i64; 3];
-        for v in 0..30 {
-            loads[part[v] as usize] += 1;
+        for &p in &part {
+            loads[p as usize] += 1;
         }
         for l in loads {
             assert!((8..=12).contains(&l), "loads {loads:?}");
@@ -2110,8 +2110,8 @@ mod tests {
         let g = WGraph::from_edges(32, vec![1; 32], &edges);
         let part = partition_kway(&g, 4, &VpOpts::default());
         let mut loads = [0i64; 4];
-        for v in 0..32 {
-            loads[part[v] as usize] += 1;
+        for &p in &part {
+            loads[p as usize] += 1;
         }
         assert_eq!(loads, [8, 8, 8, 8], "perfect split exists: {loads:?}");
         assert_eq!(g.edge_cut(&part), 0);

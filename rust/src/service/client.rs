@@ -37,6 +37,9 @@ use anyhow::{anyhow, Result};
 use crate::util::json::{Json, JsonLines};
 use crate::util::rng::Pcg32;
 
+use super::fingerprint::Fingerprint;
+use super::ring::HashRing;
+
 /// Opportunistic-flush threshold for the pipelined write buffer: a
 /// burst of submits coalesces into few large writes without letting the
 /// buffer grow unboundedly between `recv` calls.
@@ -218,6 +221,62 @@ impl Client {
             let Some(delay) = backoff.next_delay(Some(hint)) else { return Ok(resp) };
             std::thread::sleep(delay);
         }
+    }
+}
+
+/// Client-side fleet routing (`client --cluster host1,host2,...`):
+/// build the same [`HashRing`] every daemon builds and talk straight to
+/// a fingerprint's owner, skipping the server-side proxy hop.  The
+/// determinism contract of `ring.rs` is what makes this legal — client
+/// and daemons agree on every owner by construction.  Routing is an
+/// optimization, never a correctness requirement: any live node serves
+/// any request (forwarding or fallback server-side), so `connect_for`
+/// falls back through the rest of the fleet when the owner is down.
+pub struct Cluster {
+    ring: HashRing,
+}
+
+impl Cluster {
+    pub fn new(addrs: &[String]) -> Result<Cluster> {
+        Ok(Cluster { ring: HashRing::new(addrs).map_err(|e| anyhow!("cluster: {e}"))? })
+    }
+
+    /// Member addresses in the ring's canonical (sorted) order.
+    pub fn addrs(&self) -> &[String] {
+        self.ring.peers()
+    }
+
+    /// The node that owns `fp` — where its schedule is computed and
+    /// kept resident.
+    pub fn owner(&self, fp: Fingerprint) -> &str {
+        self.ring.owner(fp)
+    }
+
+    /// Connection order for `fp`: the owner first, then every other
+    /// node as fallback (deterministic, canonical order).
+    pub fn route(&self, fp: Fingerprint) -> Vec<&str> {
+        let owner = self.ring.owner_index(fp);
+        let peers = self.ring.peers();
+        let mut order = Vec::with_capacity(peers.len());
+        order.push(peers[owner].as_str());
+        order.extend(
+            peers.iter().enumerate().filter(|&(i, _)| i != owner).map(|(_, p)| p.as_str()),
+        );
+        order
+    }
+
+    /// Connect to the owner of `fp`, falling back through the rest of
+    /// the fleet.  Returns the client plus the address it actually
+    /// reached; errors only when every node refuses the connection.
+    pub fn connect_for(&self, fp: Fingerprint) -> Result<(Client, String)> {
+        let mut last_err = None;
+        for addr in self.route(fp) {
+            match Client::connect(addr) {
+                Ok(c) => return Ok((c, addr.to_string())),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.unwrap_or_else(|| anyhow!("cluster has no nodes")))
     }
 }
 
@@ -461,6 +520,30 @@ mod tests {
         assert_eq!(c.in_flight(), 0);
         assert!(c.recv().is_err(), "peer hung up; recv must fail, not hang forever");
         peer.join().unwrap();
+    }
+
+    #[test]
+    fn cluster_routes_owner_first_and_covers_every_node() {
+        // low ports: nothing listens there in CI, so connect_for's
+        // failure path is deterministic
+        let addrs: Vec<String> = (1..=3).map(|p| format!("127.0.0.1:{p}")).collect();
+        let cluster = Cluster::new(&addrs).unwrap();
+        let ring = HashRing::new(&addrs).unwrap();
+        for i in 0..64u64 {
+            let fp = Fingerprint(i.wrapping_mul(0x9E37_79B9_7F4A_7C15), !i);
+            // the client agrees with the fleet on every owner
+            assert_eq!(cluster.owner(fp), ring.owner(fp));
+            let route = cluster.route(fp);
+            assert_eq!(route[0], ring.owner(fp), "owner must come first");
+            let mut seen: Vec<&str> = route.clone();
+            seen.sort_unstable();
+            let mut want: Vec<&str> = addrs.iter().map(String::as_str).collect();
+            want.sort_unstable();
+            assert_eq!(seen, want, "fallback order must cover every node once");
+        }
+        // connecting when nobody listens fails with the last error, not
+        // a hang or a panic
+        assert!(cluster.connect_for(Fingerprint(1, 2)).is_err());
     }
 
     #[test]

@@ -89,9 +89,16 @@ impl LatencyHisto {
 
 /// Service-level request accounting.  The identity
 /// `requests == served_hit + served_miss + served_joined + served_degraded
-///              + rejected + errors`
+///              + rejected + errors + forwarded`
 /// holds at any quiescent point (each optimize request ends in exactly
 /// one outcome); the e2e suite asserts it against a live server.
+/// `forwarded` is the fleet outcome: the request was proxied to its
+/// ring owner and the owner's response relayed verbatim — this daemon
+/// never classified it hit/miss itself (the owner did, under its own
+/// counters).  `proxied_in` and `owner_down_fallback` are annotations
+/// like `deadline_expired`: a proxied-in request still ends in a normal
+/// served_* outcome, and a fallback-computed one lands in
+/// hit/miss/joined locally — neither is another identity term.
 /// `deadline_expired` is informational — every expiry also lands in
 /// `errors`, so it is a subset, not another identity term.
 ///
@@ -126,6 +133,15 @@ pub struct ServiceMetrics {
     pub deadline_expired: AtomicU64,
     /// lines that never parsed into a request (not counted in `requests`)
     pub bad_requests: AtomicU64,
+    /// fleet: proxied to the ring owner, owner's response relayed
+    /// (terminal outcome — see the identity above)
+    pub forwarded: AtomicU64,
+    /// fleet: requests that arrived via a peer's proxy (`"fwd":true`);
+    /// annotation — each also ends in a normal served_* outcome here
+    pub proxied_in: AtomicU64,
+    /// fleet: owner unreachable, computed locally instead (annotation —
+    /// the request still lands in hit/miss/joined)
+    pub owner_down_fallback: AtomicU64,
     /// connections currently registered with the reactor (gauge)
     pub connections: AtomicU64,
     /// connections accepted over the server's lifetime
@@ -160,6 +176,9 @@ pub struct MetricsSnapshot {
     pub errors: u64,
     pub deadline_expired: u64,
     pub bad_requests: u64,
+    pub forwarded: u64,
+    pub proxied_in: u64,
+    pub owner_down_fallback: u64,
     pub connections: u64,
     pub connections_total: u64,
     pub responses: u64,
@@ -207,6 +226,9 @@ impl ServiceMetrics {
             errors: self.errors.load(Ordering::Relaxed),
             deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
             bad_requests: self.bad_requests.load(Ordering::Relaxed),
+            forwarded: self.forwarded.load(Ordering::Relaxed),
+            proxied_in: self.proxied_in.load(Ordering::Relaxed),
+            owner_down_fallback: self.owner_down_fallback.load(Ordering::Relaxed),
             connections: self.connections.load(Ordering::Relaxed),
             connections_total: self.connections_total.load(Ordering::Relaxed),
             responses: self.responses.load(Ordering::Relaxed),
@@ -287,8 +309,38 @@ mod tests {
                 + s.served_degraded
                 + s.rejected
                 + s.errors
+                + s.forwarded
         );
         assert!((s.hit_rate - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fleet_counters_keep_the_identity() {
+        let m = ServiceMetrics::new();
+        // three requests: one forwarded to its owner, one proxied in
+        // (served as a local miss), one fallback-computed (miss again)
+        for _ in 0..3 {
+            ServiceMetrics::bump(&m.requests);
+        }
+        ServiceMetrics::bump(&m.forwarded);
+        ServiceMetrics::bump(&m.proxied_in);
+        ServiceMetrics::bump(&m.served_miss);
+        ServiceMetrics::bump(&m.owner_down_fallback);
+        ServiceMetrics::bump(&m.served_miss);
+        let s = m.snapshot();
+        assert_eq!(s.forwarded, 1);
+        assert_eq!(s.proxied_in, 1);
+        assert_eq!(s.owner_down_fallback, 1);
+        assert_eq!(
+            s.requests,
+            s.served_hit
+                + s.served_miss
+                + s.served_joined
+                + s.served_degraded
+                + s.rejected
+                + s.errors
+                + s.forwarded
+        );
     }
 
     #[test]
@@ -313,6 +365,7 @@ mod tests {
                 + s.served_degraded
                 + s.rejected
                 + s.errors
+                + s.forwarded
         );
     }
 }

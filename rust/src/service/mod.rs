@@ -40,6 +40,13 @@
 //!   `None` check on the serving path.
 //! * [`degraded`] — the graceful-degradation fallback pipeline served
 //!   when a deadline cannot fit a full run or the queue saturates.
+//! * [`ring`] — the consistent-hash ring deciding which fleet member
+//!   owns each fingerprint: deterministic across processes, balanced
+//!   via virtual nodes, minimal remap on membership change.
+//! * [`peer`] — pooled pipelined peer links for fleet forwarding: a
+//!   daemon relays requests it doesn't own to the ring owner instead
+//!   of recomputing, and recomputes locally only when the owner is
+//!   down.
 //!
 //! Served schedules are bit-identical to a direct
 //! `coordinator::optimize_graph` call with the same options — the e2e
@@ -53,17 +60,23 @@ pub mod degraded;
 pub mod faults;
 pub mod fingerprint;
 pub mod metrics;
+pub mod peer;
 pub mod persist;
 pub mod proto;
 pub mod queue;
+pub mod ring;
 pub mod server;
 
 pub use cache::{Admission, CacheStats, CachedSchedule, ScheduleCache};
-pub use client::{Backoff, Client, PipelinedClient, RetryPolicy, RetryPolicyBuilder, Ticket};
+pub use client::{
+    Backoff, Client, Cluster, PipelinedClient, RetryPolicy, RetryPolicyBuilder, Ticket,
+};
 pub use faults::{FaultInjector, FaultPlan, FaultSite};
 pub use fingerprint::{fingerprint, Fingerprint};
 pub use metrics::{MetricsSnapshot, ServiceMetrics};
+pub use peer::{PeerEvent, PeerLink, PeerSink};
 pub use persist::{LoadReport, SaveReport};
-pub use proto::GraphSpec;
+pub use proto::{FleetView, GraphSpec};
 pub use queue::{Completion, JobError, JobOutcome, JobQueue, Submit};
+pub use ring::HashRing;
 pub use server::{ServeOpts, Server};

@@ -1,0 +1,423 @@
+//! Pooled pipelined peer connections for fleet forwarding.
+//!
+//! A fleet daemon that receives a request it doesn't own relays it to
+//! the ring owner instead of recomputing.  Each peer gets one
+//! [`PeerLink`]: a single pooled TCP connection speaking the same
+//! protocol-2 pipelining every client gets — relayed requests are
+//! stamped with numeric ids (the origin reactor's tags), many ride in
+//! flight at once, and the owner's responses come back in completion
+//! order.  One socket per peer pair multiplexes ALL proxied traffic;
+//! forwarding never opens per-request connections.
+//!
+//! Threading: the origin's reactor must never block on a peer, so each
+//! link runs a writer thread (drains a channel of relay lines, owns
+//! connection establishment) and a reader thread per live connection
+//! (decodes responses, hands them back as [`PeerEvent`]s through the
+//! same ready-queue the reactor already parks on — a relayed completion
+//! wakes the reactor exactly like a local one).
+//!
+//! Failure model: transport-level failure (connect refused, broken
+//! pipe, poisoned framing) fails every in-flight relay on that link
+//! with [`PeerEvent::Failed`] — the server then recomputes those
+//! requests locally (`owner_down_fallback`) — and puts the link in a
+//! short cooldown so a dead peer costs one failed connect per
+//! [`COOLDOWN`], not one per request.  Protocol-level failures (the
+//! owner answering `ok:false`, e.g. queue-full with a retry hint) are
+//! NOT failures here: the owner's verdict is relayed to the client
+//! verbatim, preserving end-to-end backpressure semantics.
+
+use std::collections::HashSet;
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::util::json::{Json, JsonLines};
+
+/// How long a link stays down after a transport failure before the next
+/// relay attempt retries the connection.
+pub const COOLDOWN: Duration = Duration::from_millis(250);
+/// Connect timeout for a relay connection (loopback/LAN peers — a peer
+/// that can't accept in this budget is down for routing purposes).
+const CONNECT_TIMEOUT: Duration = Duration::from_millis(1_000);
+/// Writer-channel depth: bounds memory if a peer stalls mid-burst.  At
+/// capacity the send fails fast and the server falls back to local
+/// compute — the same answer a down peer gets.
+const CHANNEL_DEPTH: usize = 1024;
+/// Writer wake interval, so `stop()` is honored promptly even when idle.
+const IDLE_TICK: Duration = Duration::from_millis(50);
+
+/// What a link hands back to the reactor.
+#[derive(Debug)]
+pub enum PeerEvent {
+    /// The owner answered relay `tag`; `resp` is its verbatim response
+    /// (already parsed, relay id still attached).
+    Reply { tag: u64, resp: Json },
+    /// Transport-level failure: relay `tag` will never be answered —
+    /// recompute locally.
+    Failed { tag: u64 },
+}
+
+/// The sink a link delivers [`PeerEvent`]s through — the server wraps
+/// its reactor ready-queue in one of these.
+pub type PeerSink = Arc<dyn Fn(PeerEvent) + Send + Sync>;
+
+struct Shared {
+    addr: String,
+    sink: PeerSink,
+    /// Relay tags written but not yet answered on the live connection.
+    inflight: Mutex<HashSet<u64>>,
+    /// Cooldown gate: no connection attempts before this instant.
+    down_until: Mutex<Option<Instant>>,
+    stop: AtomicBool,
+}
+
+impl Shared {
+    /// Fail every in-flight relay (transport death) exactly once each —
+    /// removal under the lock makes writer/reader teardown races safe.
+    fn fail_all_inflight(&self) {
+        let drained: Vec<u64> = {
+            let mut inflight = self.inflight.lock().unwrap();
+            inflight.drain().collect()
+        };
+        for tag in drained {
+            (self.sink)(PeerEvent::Failed { tag });
+        }
+    }
+
+    fn mark_down(&self) {
+        *self.down_until.lock().unwrap() = Some(Instant::now() + COOLDOWN);
+    }
+
+    fn in_cooldown(&self) -> bool {
+        match *self.down_until.lock().unwrap() {
+            Some(t) => Instant::now() < t,
+            None => false,
+        }
+    }
+}
+
+/// One pooled pipelined connection to one peer.
+pub struct PeerLink {
+    shared: Arc<Shared>,
+    tx: SyncSender<(u64, String)>,
+    writer: Mutex<Option<JoinHandle<()>>>,
+    /// Live stream handle for `stop()` to shut down, unblocking the
+    /// reader mid-`read`.
+    stream: Arc<Mutex<Option<TcpStream>>>,
+}
+
+impl PeerLink {
+    /// Spawn the link's writer thread.  No connection is opened until
+    /// the first relay (a fleet whose peers boot in any order must not
+    /// fail at bind).
+    pub fn spawn(addr: String, sink: PeerSink) -> PeerLink {
+        let shared = Arc::new(Shared {
+            addr: addr.clone(),
+            sink,
+            inflight: Mutex::new(HashSet::new()),
+            down_until: Mutex::new(None),
+            stop: AtomicBool::new(false),
+        });
+        let (tx, rx) = mpsc::sync_channel(CHANNEL_DEPTH);
+        let stream: Arc<Mutex<Option<TcpStream>>> = Arc::new(Mutex::new(None));
+        let writer = {
+            let shared = shared.clone();
+            let stream = stream.clone();
+            std::thread::Builder::new()
+                .name(format!("epgraph-peer-{addr}"))
+                .spawn(move || writer_loop(&shared, &rx, &stream))
+                .expect("spawn peer writer thread")
+        };
+        PeerLink { shared, tx, writer: Mutex::new(Some(writer)), stream }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.shared.addr
+    }
+
+    /// True when a relay attempt is worth making (not in post-failure
+    /// cooldown).  The server's routing fast path: a down owner means
+    /// immediate local fallback instead of a doomed enqueue.
+    pub fn healthy(&self) -> bool {
+        !self.shared.in_cooldown()
+    }
+
+    /// Hand a relay line to the writer.  `Err(())` means the link can't
+    /// take it (cooldown, full channel, or stopped) and the caller must
+    /// fall back to local compute NOW — on success the outcome arrives
+    /// later as a [`PeerEvent`] for `tag`.
+    pub fn send(&self, tag: u64, line: String) -> Result<(), ()> {
+        if self.shared.in_cooldown() || self.shared.stop.load(Ordering::Relaxed) {
+            return Err(());
+        }
+        self.tx.try_send((tag, line)).map_err(|_| ())
+    }
+
+    /// Stop the link: no new relays, sockets shut down, threads joined.
+    /// In-flight relays fail (the server is draining anyway).
+    pub fn stop(&self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        if let Some(s) = self.stream.lock().unwrap().as_ref() {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        if let Some(h) = self.writer.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        self.shared.fail_all_inflight();
+    }
+}
+
+impl Drop for PeerLink {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn resolve(addr: &str) -> Option<SocketAddr> {
+    addr.to_socket_addrs().ok()?.next()
+}
+
+/// Writer side: drain the channel, own the connection, register tags
+/// in-flight BEFORE writing (so the reader can never see an unknown
+/// reply from a write that raced teardown).
+fn writer_loop(
+    shared: &Arc<Shared>,
+    rx: &Receiver<(u64, String)>,
+    stream_slot: &Arc<Mutex<Option<TcpStream>>>,
+) {
+    let mut reader: Option<JoinHandle<()>> = None;
+    loop {
+        let (tag, line) = match rx.recv_timeout(IDLE_TICK) {
+            Ok(msg) => msg,
+            Err(RecvTimeoutError::Timeout) => {
+                if shared.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        };
+        if shared.stop.load(Ordering::Relaxed) {
+            (shared.sink)(PeerEvent::Failed { tag });
+            break;
+        }
+        // a send() can race the cooldown transition; honor it here too
+        if shared.in_cooldown() {
+            (shared.sink)(PeerEvent::Failed { tag });
+            continue;
+        }
+        // lazily (re)connect
+        if stream_slot.lock().unwrap().is_none() {
+            match connect(shared) {
+                Some(stream) => {
+                    if let Some(h) = reader.take() {
+                        let _ = h.join(); // previous connection's reader
+                    }
+                    let rs = stream.try_clone().ok();
+                    *stream_slot.lock().unwrap() = Some(stream);
+                    match rs {
+                        Some(rs) => {
+                            let shared = shared.clone();
+                            let slot = stream_slot.clone();
+                            reader = std::thread::Builder::new()
+                                .name(format!("epgraph-peer-rd-{}", shared.addr))
+                                .spawn(move || reader_loop(&shared, rs, &slot))
+                                .ok();
+                        }
+                        None => {
+                            // can't read replies → this connection is useless
+                            *stream_slot.lock().unwrap() = None;
+                            shared.mark_down();
+                            (shared.sink)(PeerEvent::Failed { tag });
+                            continue;
+                        }
+                    }
+                }
+                None => {
+                    shared.mark_down();
+                    (shared.sink)(PeerEvent::Failed { tag });
+                    continue;
+                }
+            }
+        }
+        shared.inflight.lock().unwrap().insert(tag);
+        let ok = {
+            let mut slot = stream_slot.lock().unwrap();
+            match slot.as_mut() {
+                Some(s) => {
+                    let mut buf = line.into_bytes();
+                    buf.push(b'\n');
+                    s.write_all(&buf).and_then(|_| s.flush()).is_ok()
+                }
+                None => false, // reader tore it down between checks
+            }
+        };
+        if !ok {
+            *stream_slot.lock().unwrap() = None;
+            shared.mark_down();
+            shared.fail_all_inflight(); // includes `tag`, registered above
+        }
+    }
+    // shutdown: unblock and collect the reader
+    if let Some(s) = stream_slot.lock().unwrap().take() {
+        let _ = s.shutdown(std::net::Shutdown::Both);
+    }
+    if let Some(h) = reader.take() {
+        let _ = h.join();
+    }
+    shared.fail_all_inflight();
+}
+
+fn connect(shared: &Shared) -> Option<TcpStream> {
+    let sockaddr = resolve(&shared.addr)?;
+    let stream = TcpStream::connect_timeout(&sockaddr, CONNECT_TIMEOUT).ok()?;
+    stream.set_nodelay(true).ok();
+    Some(stream)
+}
+
+/// Reader side: decode the owner's responses, pair them with in-flight
+/// tags, deliver as events.  Any framing damage or EOF is a transport
+/// death: drain in-flight as failed, drop the connection, cooldown.
+fn reader_loop(
+    shared: &Arc<Shared>,
+    stream: TcpStream,
+    stream_slot: &Arc<Mutex<Option<TcpStream>>>,
+) {
+    let mut lines = JsonLines::new(BufReader::new(stream));
+    loop {
+        match lines.next_value() {
+            Ok(Some(resp)) => {
+                let Some(tag) = resp.get("id").and_then(Json::as_u64) else {
+                    break; // un-id'd reply on a relay link: framing is broken
+                };
+                if shared.inflight.lock().unwrap().remove(&tag) {
+                    (shared.sink)(PeerEvent::Reply { tag, resp });
+                }
+                // unknown tag: already failed during a teardown race — drop
+            }
+            Ok(None) | Err(_) => break, // EOF / transport error
+        }
+    }
+    *stream_slot.lock().unwrap() = None;
+    if !shared.stop.load(Ordering::Relaxed) {
+        shared.mark_down();
+    }
+    shared.fail_all_inflight();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, Write};
+    use std::net::TcpListener;
+    use std::sync::mpsc::channel;
+
+    fn collector() -> (PeerSink, Receiver<PeerEvent>) {
+        let (tx, rx) = channel();
+        let sink: PeerSink = Arc::new(move |ev| {
+            let _ = tx.send(ev);
+        });
+        (sink, rx)
+    }
+
+    #[test]
+    fn relays_roundtrip_and_multiplex_one_connection() {
+        // an echo "owner": answers each line with {"id":<id>,"ok":true}
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut out = stream.try_clone().unwrap();
+            let reader = std::io::BufReader::new(stream);
+            let mut served = 0;
+            for line in reader.lines() {
+                let line = match line {
+                    Ok(l) => l,
+                    Err(_) => break,
+                };
+                let id = Json::parse(&line).unwrap().get("id").unwrap().as_u64().unwrap();
+                out.write_all(format!("{{\"id\":{id},\"ok\":true}}\n").as_bytes()).unwrap();
+                served += 1;
+                if served == 3 {
+                    break;
+                }
+            }
+            served
+        });
+        let (sink, rx) = collector();
+        let link = PeerLink::spawn(addr.to_string(), sink);
+        for tag in [11u64, 12, 13] {
+            link.send(tag, format!("{{\"id\":{tag},\"op\":\"health\"}}")).unwrap();
+        }
+        let mut got = HashSet::new();
+        for _ in 0..3 {
+            match rx.recv_timeout(Duration::from_secs(30)).unwrap() {
+                PeerEvent::Reply { tag, resp } => {
+                    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+                    got.insert(tag);
+                }
+                PeerEvent::Failed { tag } => panic!("relay {tag} failed"),
+            }
+        }
+        assert_eq!(got, HashSet::from([11, 12, 13]));
+        assert_eq!(server.join().unwrap(), 3, "one connection served all relays");
+        link.stop();
+    }
+
+    #[test]
+    fn dead_peer_fails_fast_and_cooldown_gates_retries() {
+        // nobody listening on this port (bind+drop reserves then frees it)
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let (sink, rx) = collector();
+        let link = PeerLink::spawn(addr, sink);
+        assert!(link.healthy(), "a never-tried link is presumed up");
+        link.send(1, "{\"id\":1}".to_string()).unwrap();
+        match rx.recv_timeout(Duration::from_secs(30)).unwrap() {
+            PeerEvent::Failed { tag } => assert_eq!(tag, 1),
+            PeerEvent::Reply { .. } => panic!("nobody was listening"),
+        }
+        // the failed connect put the link in cooldown: sends now fail
+        // immediately without touching the network
+        assert!(!link.healthy());
+        assert!(link.send(2, "{\"id\":2}".to_string()).is_err());
+        link.stop();
+    }
+
+    #[test]
+    fn connection_death_fails_all_inflight() {
+        // an owner that reads one line then slams the connection
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = std::io::BufReader::new(stream);
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            // drop → RST/EOF with relays still unanswered
+        });
+        let (sink, rx) = collector();
+        let link = PeerLink::spawn(addr.to_string(), sink);
+        for tag in [21u64, 22] {
+            link.send(tag, format!("{{\"id\":{tag}}}")).unwrap();
+        }
+        let mut failed = HashSet::new();
+        for _ in 0..2 {
+            match rx.recv_timeout(Duration::from_secs(30)).unwrap() {
+                PeerEvent::Failed { tag } => {
+                    failed.insert(tag);
+                }
+                PeerEvent::Reply { tag, .. } => panic!("relay {tag} cannot have been served"),
+            }
+        }
+        assert_eq!(failed, HashSet::from([21, 22]), "every in-flight relay must fail");
+        server.join().unwrap();
+        link.stop();
+    }
+}

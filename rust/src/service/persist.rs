@@ -317,6 +317,23 @@ pub fn save_with_faults(
     path: &Path,
     faults: Option<&FaultInjector>,
 ) -> std::io::Result<SaveReport> {
+    save_with_faults_filtered(cache, path, faults, None)
+}
+
+/// `save_with_faults` restricted to the entries a predicate claims.
+/// This is the per-shard snapshot of a fleet daemon: it persists only
+/// the fingerprints it OWNS on the ring, so a restart re-homes cleanly —
+/// foreign entries computed during an owner-down fallback are transient
+/// by design and deliberately not persisted (the recovered owner is
+/// their durable home).  Filtered-out entries are not part of the
+/// snapshot at all; `SaveReport::skipped` keeps counting only entries
+/// dropped by the byte cap.
+pub fn save_with_faults_filtered(
+    cache: &ScheduleCache,
+    path: &Path,
+    faults: Option<&FaultInjector>,
+    owned: Option<&dyn Fn(Fingerprint) -> bool>,
+) -> std::io::Result<SaveReport> {
     if let Some(f) = faults {
         if f.should(FaultSite::SnapshotFail) {
             return Err(std::io::Error::new(
@@ -326,7 +343,10 @@ pub fn save_with_faults(
         }
     }
     let torn = faults.is_some_and(|f| f.should(FaultSite::SnapshotTorn));
-    let entries = cache.export();
+    let mut entries = cache.export();
+    if let Some(owned) = owned {
+        entries.retain(|(fp, _)| owned(*fp));
+    }
     let tmp = tmp_path(path);
     let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
     w.write_all(MAGIC)?;
@@ -541,12 +561,25 @@ pub fn save_rotated(
     keep: usize,
     faults: Option<&FaultInjector>,
 ) -> std::io::Result<SaveReport> {
+    save_rotated_filtered(cache, path, keep, faults, None)
+}
+
+/// `save_rotated` restricted to the entries a predicate claims — the
+/// rotated flavor of [`save_with_faults_filtered`] (per-shard fleet
+/// snapshots).
+pub fn save_rotated_filtered(
+    cache: &ScheduleCache,
+    path: &Path,
+    keep: usize,
+    faults: Option<&FaultInjector>,
+    owned: Option<&dyn Fn(Fingerprint) -> bool>,
+) -> std::io::Result<SaveReport> {
     let gens = generations(path)?;
     let next = gens.last().map_or(1, |&(n, _)| n + 1);
     let stem = path.file_name().unwrap_or_default().to_string_lossy().into_owned();
     let gen_name = format!("{stem}.{next}");
     let gen_path = path.with_file_name(&gen_name);
-    let report = save_with_faults(cache, &gen_path, faults)?;
+    let report = save_with_faults_filtered(cache, &gen_path, faults, owned)?;
     promote(path, &gen_name)?;
     // prune: keep the newest `keep` generations (the new one included)
     let keep = keep.max(1);
@@ -674,6 +707,42 @@ mod tests {
         assert_eq!((saved2.entries, saved2.bytes), (saved.entries, saved.bytes));
         std::fs::remove_file(&path).ok();
         std::fs::remove_file(&path2).ok();
+    }
+
+    #[test]
+    fn filtered_save_persists_only_owned_fingerprints() {
+        // the per-shard snapshot contract: a fleet daemon saves only
+        // what it owns on the ring; everything else (fallback-computed
+        // foreign entries) stays transient
+        let path = tmp_file("filtered");
+        let src = ScheduleCache::new(1 << 22, 4);
+        let entries = varied_entries();
+        for (fp, e) in &entries {
+            src.insert(*fp, e.clone());
+        }
+        let owned_set: Vec<Fingerprint> =
+            entries.iter().step_by(2).map(|(fp, _)| *fp).collect();
+        let owned = |fp: Fingerprint| owned_set.contains(&fp);
+        let report =
+            save_rotated_filtered(&src, &path, 2, None, Some(&owned)).unwrap();
+        assert_eq!(report.entries, owned_set.len());
+        assert_eq!(report.skipped, 0, "filtered entries are not 'skipped'");
+        let dst = ScheduleCache::new(1 << 22, 4);
+        let loaded = load_rotated(&dst, &path).unwrap();
+        assert_eq!(loaded.loaded, owned_set.len() as u64);
+        for (fp, e) in &entries {
+            match dst.probe(*fp) {
+                Some(got) => {
+                    assert!(owned(*fp), "only owned fingerprints may persist");
+                    assert_entry_bit_identical(&got, e);
+                }
+                None => assert!(!owned(*fp), "owned fingerprint lost by the filter"),
+            }
+        }
+        for (_, gen_path) in generations(&path).unwrap() {
+            std::fs::remove_file(gen_path).ok();
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -65,6 +65,18 @@
 //! client should retry.  Failures WITHOUT the hint — shutdown, expired
 //! deadlines, malformed requests — are terminal: a well-behaved client
 //! (`Client::request_with_retry`) stops retrying immediately.
+//!
+//! **Fleet forwarding.**  In a sharded fleet a daemon that receives an
+//! optimize request it does not own proxies it to the ring owner as the
+//! same request line plus `"fwd":true` and a numeric relay id.  The
+//! `fwd` marker tells the owner "serve this locally, never re-forward"
+//! — it is what makes a one-hop routing mistake cost one hop instead of
+//! a loop — and the owner bumps `proxied_in` for it.  The marker is
+//! accepted (and ignored) on a single-node daemon, so a fleet client
+//! talking to a singleton is not an error.  Fleet daemons add a
+//! `"fleet"` object to their stats (ring membership, generation, and
+//! the forwarding counters) plus a top-level `"forwarded"` counter that
+//! joins the accounting identity.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -318,6 +330,10 @@ pub struct Request {
     /// by [`decode_request`]: a string (≤ [`MAX_ID_BYTES`]) or a
     /// non-negative integer; `null` means absent.
     pub id: Option<Json>,
+    /// Fleet relay marker: this request was proxied by a peer on the
+    /// sender's behalf — serve it locally, never re-forward (loop
+    /// prevention).  Absent/false for every ordinary client request.
+    pub fwd: bool,
     pub op: Op,
 }
 
@@ -347,6 +363,10 @@ pub fn decode_request(j: &Json) -> Result<Request, String> {
         None | Some(Json::Null) => None,
         Some(v) => Some(valid_id(v)?),
     };
+    let fwd = match j.get("fwd") {
+        None | Some(Json::Null) => false,
+        Some(v) => v.as_bool().ok_or("fwd must be a bool")?,
+    };
     let op = j.get("op").and_then(Json::as_str).ok_or("request needs a string 'op'")?;
     let op = match op {
         "optimize" => {
@@ -366,7 +386,7 @@ pub fn decode_request(j: &Json) -> Result<Request, String> {
         "shutdown" => Op::Shutdown,
         other => return Err(format!("unknown op '{other}'")),
     };
-    Ok(Request { id, op })
+    Ok(Request { id, fwd, op })
 }
 
 /// Build `OptOptions` from the wire form: defaults plus overrides.
@@ -459,6 +479,41 @@ pub fn simple_request(op: &str) -> Json {
     Json::Obj(m)
 }
 
+/// Build the relay line a fleet daemon sends to a fingerprint's ring
+/// owner: the optimize request re-encoded from its decoded form, plus
+/// the `"fwd":true` marker and the numeric relay `id` (the origin
+/// reactor's tag for the waiting client request).  Re-encoding is
+/// sound because fingerprints are computed AFTER spec resolution — the
+/// owner resolves the identical spec to the identical graph, so both
+/// sides land on the same cache key.
+pub fn forward_request(
+    graph: &GraphSpec,
+    opts: &OptOptions,
+    deadline_ms: Option<u64>,
+    relay_id: u64,
+) -> Json {
+    let mut j = optimize_request_with_deadline(graph, opts, deadline_ms);
+    if let Json::Obj(m) = &mut j {
+        m.insert("fwd".to_string(), Json::Bool(true));
+        m.insert("id".to_string(), Json::Num(relay_id as f64));
+    }
+    j
+}
+
+/// Re-stamp a relayed response for the origin's own client: drop the
+/// relay id and restore the id the client sent (if any), leaving every
+/// other byte of the owner's response untouched — relayed schedules
+/// stay bit-identical to locally served ones.
+pub fn restamp_relayed(mut resp: Json, client_id: Option<&Json>) -> Json {
+    if let Json::Obj(m) = &mut resp {
+        m.remove("id");
+        if let Some(id) = client_id {
+            m.insert("id".to_string(), id.clone());
+        }
+    }
+    resp
+}
+
 // ---------------------------------------------------------------- responses
 
 fn obj(fields: Vec<(&str, Json)>) -> Json {
@@ -540,6 +595,22 @@ pub struct PersistInfo {
     pub last_snapshot_entries: u64,
 }
 
+/// Fleet membership and routing counters for the stats response
+/// (`None` on a single-node daemon).
+#[derive(Clone, Debug, Default)]
+pub struct FleetView {
+    /// This daemon's own address in the peer list.
+    pub self_addr: String,
+    /// Fleet size (this daemon included).
+    pub peers: usize,
+    /// Ring membership hash (`ring::HashRing::generation`) — equal
+    /// across every daemon built from the same peer set; rendered as
+    /// hex so the full 64 bits survive JSON's f64 numbers.
+    pub ring_gen: u64,
+    /// Peers whose forward link is currently down (cooldown).
+    pub peers_down: usize,
+}
+
 /// Everything the `stats` response renders, bundled so the signature
 /// stays flat as the response grows (this also keeps the function under
 /// clippy's argument limit, which CI now enforces).
@@ -554,6 +625,8 @@ pub struct StatsView<'a> {
     /// Per-site injected-fault counters (`faults::FaultInjector::
     /// stats_json`); None when the daemon runs without `--chaos`.
     pub chaos: Option<Json>,
+    /// Ring membership + routing counters; None without `--peers`.
+    pub fleet: Option<FleetView>,
 }
 
 /// The `stats` response: service counters + raw cache counters +
@@ -562,6 +635,18 @@ pub struct StatsView<'a> {
 pub fn stats_response(v: StatsView<'_>) -> Json {
     let m = v.metrics;
     let c = v.cache;
+    let fleet_json = match &v.fleet {
+        None => Json::Null,
+        Some(f) => obj(vec![
+            ("self", Json::Str(f.self_addr.clone())),
+            ("peers", num(f.peers as f64)),
+            ("ring_gen", Json::Str(format!("{:016x}", f.ring_gen))),
+            ("peers_down", num(f.peers_down as f64)),
+            ("forwarded", num(m.forwarded as f64)),
+            ("proxied_in", num(m.proxied_in as f64)),
+            ("owner_down_fallback", num(m.owner_down_fallback as f64)),
+        ]),
+    };
     let persist_json = match v.persist {
         None => Json::Null,
         Some(p) => obj(vec![
@@ -586,6 +671,9 @@ pub fn stats_response(v: StatsView<'_>) -> Json {
         ("errors", num(m.errors as f64)),
         ("deadline_expired", num(m.deadline_expired as f64)),
         ("bad_requests", num(m.bad_requests as f64)),
+        // identity term even on a single node (where it stays 0), so
+        // fleet and singleton stats audit with one formula
+        ("forwarded", num(m.forwarded as f64)),
         ("hit_rate", num(m.hit_rate)),
         (
             "cache",
@@ -614,6 +702,7 @@ pub fn stats_response(v: StatsView<'_>) -> Json {
         ),
         ("persist", persist_json),
         ("chaos", v.chaos.unwrap_or(Json::Null)),
+        ("fleet", fleet_json),
         ("queue_wait_ms", latency_json(&m.queue_wait)),
         ("optimize_ms", latency_json(&m.optimize)),
         ("degraded_ms", latency_json(&m.degraded)),
@@ -911,6 +1000,98 @@ mod tests {
         );
         assert!(GraphSpec::parse_cli(":1,2").is_err());
         assert!(GraphSpec::parse_cli("cfd_mesh:x").is_err());
+    }
+
+    #[test]
+    fn fwd_marker_parses_and_defaults_off() {
+        let parse = |text: &str| decode_request(&Json::parse(text).unwrap());
+        let plain = r#"{"op":"optimize","graph":{"gen":"path","args":[4]}}"#;
+        assert!(!parse(plain).unwrap().fwd, "fwd defaults to false");
+        let relayed = r#"{"op":"optimize","graph":{"gen":"path","args":[4]},"fwd":true,"id":7}"#;
+        let r = parse(relayed).unwrap();
+        assert!(r.fwd);
+        assert_eq!(r.id.as_ref().and_then(Json::as_u64), Some(7));
+        assert!(!parse(r#"{"op":"health","fwd":null}"#).unwrap().fwd, "null means absent");
+        assert!(parse(r#"{"op":"health","fwd":1}"#).is_err(), "non-bool fwd is malformed");
+    }
+
+    #[test]
+    fn forward_request_roundtrips_to_the_same_workload() {
+        let spec = GraphSpec::Gen { name: "cfd_mesh".into(), args: vec![8, 8, 1] };
+        let opts = OptOptions { k: 4, seed: 7, ..Default::default() };
+        let line = forward_request(&spec, &opts, Some(500), 42).dump();
+        let r = decode_request(&Json::parse(&line).unwrap()).unwrap();
+        assert!(r.fwd, "relay lines carry the marker");
+        assert_eq!(r.id.as_ref().and_then(Json::as_u64), Some(42));
+        match r.op {
+            Op::Optimize { graph, opts: o, deadline_ms } => {
+                // the owner must land on the origin's cache key
+                assert_eq!(
+                    fingerprint(&graph.resolve().unwrap(), &o),
+                    fingerprint(&spec.resolve().unwrap(), &opts),
+                    "relay re-encoding changed the fingerprint"
+                );
+                assert_eq!(deadline_ms, Some(500));
+            }
+            _ => panic!("wrong request kind"),
+        }
+    }
+
+    #[test]
+    fn restamp_relayed_swaps_only_the_id() {
+        let owner_resp =
+            Json::parse(r#"{"ok":true,"cached":"hit","id":42,"quality":9}"#).unwrap();
+        // client sent an id: the relay id is replaced by it
+        let client_id = Json::Str("c-1".into());
+        let restamped = restamp_relayed(owner_resp.clone(), Some(&client_id));
+        assert_eq!(restamped.get("id"), Some(&client_id));
+        assert_eq!(restamped.get("quality").and_then(Json::as_u64), Some(9));
+        // v1 client (no id): the relay id is stripped, nothing added
+        let bare = restamp_relayed(owner_resp, None);
+        assert!(bare.get("id").is_none());
+        assert_eq!(
+            bare.dump(),
+            r#"{"cached":"hit","ok":true,"quality":9}"#,
+            "only the id may change"
+        );
+    }
+
+    #[test]
+    fn stats_render_fleet_section_and_forwarded_identity_term() {
+        use crate::service::cache::CacheStats;
+        use crate::service::metrics::MetricsSnapshot;
+        let m = MetricsSnapshot { requests: 5, forwarded: 2, proxied_in: 1, ..Default::default() };
+        let c = CacheStats::default();
+        let view = |fleet| StatsView {
+            metrics: &m,
+            cache: &c,
+            uptime_ms: 1.0,
+            workers: 1,
+            queue_cap: 4,
+            queue_pending: 0,
+            persist: None,
+            chaos: None,
+            fleet,
+        };
+        // single node: forwarded is present (0-compatible) and fleet is null
+        let solo = stats_response(view(None));
+        assert_eq!(solo.get("forwarded").and_then(Json::as_u64), Some(2));
+        assert_eq!(solo.get("fleet"), Some(&Json::Null));
+        // fleet: membership + counters under one key, ring_gen in hex
+        let fleet = stats_response(view(Some(FleetView {
+            self_addr: "127.0.0.1:7901".into(),
+            peers: 3,
+            ring_gen: 0xABCD,
+            peers_down: 1,
+        })));
+        let f = fleet.get("fleet").expect("fleet object");
+        assert_eq!(f.get("self").and_then(Json::as_str), Some("127.0.0.1:7901"));
+        assert_eq!(f.get("peers").and_then(Json::as_u64), Some(3));
+        assert_eq!(f.get("ring_gen").and_then(Json::as_str), Some("000000000000abcd"));
+        assert_eq!(f.get("peers_down").and_then(Json::as_u64), Some(1));
+        assert_eq!(f.get("forwarded").and_then(Json::as_u64), Some(2));
+        assert_eq!(f.get("proxied_in").and_then(Json::as_u64), Some(1));
+        assert_eq!(f.get("owner_down_fallback").and_then(Json::as_u64), Some(0));
     }
 
     #[test]

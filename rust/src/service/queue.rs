@@ -36,7 +36,6 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::{optimize_graph_checked, Cancelled, OptOptions};
 use crate::graph::Graph;
-use crate::util::poll::ReadyQueue;
 
 use super::cache::{CachedSchedule, ScheduleCache};
 use super::faults::{FaultInjector, FaultSite};
@@ -80,10 +79,10 @@ pub struct Job {
     done: Condvar,
 }
 
-/// A finished job's result, delivered to a [`ReadyQueue`] a reactor
-/// drains instead of parking a thread per waiter.  `tag` is whatever the
-/// watcher registered — the reactor uses it to route the completion back
-/// to the connection/request that is waiting on it.
+/// A finished job's result, handed to the watcher's sink closure so a
+/// reactor can enqueue it instead of parking a thread per waiter.  `tag`
+/// is whatever the watcher registered — the reactor uses it to route the
+/// completion back to the connection/request that is waiting on it.
 pub struct Completion {
     pub tag: u64,
     pub result: JobOutcome,
@@ -92,9 +91,12 @@ pub struct Completion {
 }
 
 /// A non-blocking waiter: when the job finishes, a [`Completion`] tagged
-/// `tag` is pushed to `sink`.
+/// `tag` is handed to `sink`.  The sink is a closure (not a concrete
+/// queue type) so a reactor multiplexing several event sources — local
+/// job completions, peer relay replies — can wrap them all into one
+/// ready-queue of its own event type.
 struct Watcher {
-    sink: Arc<ReadyQueue<Completion>>,
+    sink: Box<dyn Fn(Completion) + Send>,
     tag: u64,
 }
 
@@ -117,12 +119,15 @@ impl Job {
         (st.result.clone().unwrap(), st.queue_wait, st.run_time)
     }
 
-    /// Non-blocking waiter registration: when the job finishes, push a
-    /// [`Completion`] tagged `tag` onto `sink`.  If the job already
-    /// finished, the completion is pushed immediately — the check and the
-    /// registration happen under the same state lock that `finish` takes,
-    /// so a completion can neither be lost nor delivered twice.
-    pub fn watch(&self, sink: &Arc<ReadyQueue<Completion>>, tag: u64) {
+    /// Non-blocking waiter registration: when the job finishes, hand a
+    /// [`Completion`] tagged `tag` to `sink`.  If the job already
+    /// finished, the completion is delivered immediately — the check and
+    /// the registration happen under the same state lock that `finish`
+    /// takes, so a completion can neither be lost nor delivered twice.
+    pub fn watch<F>(&self, tag: u64, sink: F)
+    where
+        F: Fn(Completion) + Send + 'static,
+    {
         let mut st = self.state.lock().unwrap();
         match &st.result {
             Some(result) => {
@@ -133,9 +138,9 @@ impl Job {
                     run_time: st.run_time,
                 };
                 drop(st);
-                sink.push(done);
+                sink(done);
             }
-            None => st.watchers.push(Watcher { sink: sink.clone(), tag }),
+            None => st.watchers.push(Watcher { sink: Box::new(sink), tag }),
         }
     }
 
@@ -314,7 +319,7 @@ impl JobQueue {
         drop(st);
         job.done.notify_all();
         for w in watchers {
-            w.sink.push(Completion {
+            (w.sink)(Completion {
                 tag: w.tag,
                 result: result.clone(),
                 queue_wait,
@@ -386,6 +391,7 @@ mod tests {
     use super::*;
     use crate::graph::gen;
     use crate::service::fingerprint::fingerprint;
+    use crate::util::poll::ReadyQueue;
 
     fn workload(seed: u64) -> (Fingerprint, Arc<Graph>, OptOptions) {
         let g = gen::cfd_mesh(12, 12, seed);
@@ -552,8 +558,12 @@ mod tests {
             Submit::New(j) => j,
             _ => panic!("fresh workload must enqueue"),
         };
+        let watcher = || {
+            let s = sink.clone();
+            move |c: Completion| s.push(c)
+        };
         // registered BEFORE the worker runs: completion arrives on finish
-        job.watch(&sink, 7);
+        job.watch(7, watcher());
         let (qq, cc, mm) = (q.clone(), cache.clone(), metrics.clone());
         let worker = std::thread::spawn(move || qq.run_worker(&cc, &mm));
         assert!(sink.wait_timeout(Duration::from_secs(60)), "watcher must be woken");
@@ -564,7 +574,7 @@ mod tests {
         let first = got[0].result.clone().expect("job should succeed");
         // registered AFTER the job finished: completion pushed immediately,
         // sharing the same Arc'd result
-        job.watch(&sink, 8);
+        job.watch(8, watcher());
         got.clear();
         sink.drain_into(&mut got);
         assert_eq!(got.len(), 1);

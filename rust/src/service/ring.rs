@@ -1,0 +1,255 @@
+//! Consistent-hash ring: which fleet member owns a fingerprint.
+//!
+//! A sharded serving fleet needs every daemon (and every `--cluster`
+//! client) to agree on a single owner per schedule fingerprint, so each
+//! schedule is computed and kept resident on exactly one node — the
+//! paper's placement thesis lifted one level up: don't recompute
+//! everywhere, route to where the product already lives.
+//!
+//! The ring is the classic consistent-hashing construction: every peer
+//! contributes `vnodes` points on a 64-bit circle (hashes of
+//! `(addr, vnode_index)` through the service [`Hasher`]); a fingerprint
+//! is owned by the peer whose point is the first one at or clockwise
+//! after the fingerprint's own ring key.  Virtual nodes smooth the
+//! per-peer load (coefficient of variation ~ `1/sqrt(vnodes)`), and the
+//! construction gives the minimal-remap property every later
+//! rebalance/gossip step builds on: adding or removing one peer moves
+//! only the keys adjacent to that peer's points — about `1/N` of the
+//! space — and every moved key moves to/from exactly that peer.
+//!
+//! Determinism contract: the ring is a pure function of the peer SET.
+//! Peers are deduplicated and sorted before hashing, so every process —
+//! daemons bootstrapped with differently-ordered `--peers` lists,
+//! clients in `--cluster` mode — builds bit-identical rings and agrees
+//! on every owner.  [`HashRing::generation`] hashes the membership so
+//! fleet stats can assert that agreement end to end.
+
+use super::fingerprint::{Fingerprint, Hasher};
+
+/// Virtual nodes per peer.  128 keeps the max/min per-peer load ratio
+/// comfortably under 2 for small fleets (see the balance property test)
+/// at a few KiB of ring per peer.
+pub const DEFAULT_VNODES: usize = 128;
+
+/// Domain tags keep ring-point hashes and generation hashes in distinct
+/// hash families from each other and from schedule fingerprints.
+const POINT_DOMAIN: &str = "epgraph-ring-point-v1";
+const GEN_DOMAIN: &str = "epgraph-ring-gen-v1";
+
+/// The fleet's consistent-hash ring.  Immutable after construction —
+/// membership is static per process lifetime (PR 8); a later
+/// rebalance step swaps in a whole new ring and bumps the generation.
+#[derive(Clone, Debug)]
+pub struct HashRing {
+    /// Deduplicated, lexicographically sorted peer addresses.  The sort
+    /// is the determinism contract: owner indices are positions in THIS
+    /// order, independent of how the peer list arrived.
+    peers: Vec<String>,
+    /// `(ring point, peer index)` sorted by point (ties broken by peer
+    /// index, so even a point collision resolves identically everywhere).
+    points: Vec<(u64, u32)>,
+    generation: u64,
+}
+
+impl HashRing {
+    /// Build a ring over `peers` with [`DEFAULT_VNODES`] virtual nodes.
+    pub fn new(peers: &[String]) -> Result<HashRing, String> {
+        HashRing::with_vnodes(peers, DEFAULT_VNODES)
+    }
+
+    /// Build a ring with an explicit virtual-node count (tests).
+    pub fn with_vnodes(peers: &[String], vnodes: usize) -> Result<HashRing, String> {
+        let mut sorted: Vec<String> =
+            peers.iter().map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect();
+        sorted.sort();
+        sorted.dedup();
+        if sorted.is_empty() {
+            return Err("ring needs at least one peer".to_string());
+        }
+        let vnodes = vnodes.max(1);
+        let mut points = Vec::with_capacity(sorted.len() * vnodes);
+        for (idx, addr) in sorted.iter().enumerate() {
+            for v in 0..vnodes {
+                let mut h = Hasher::new();
+                h.write_str(POINT_DOMAIN);
+                h.write_str(addr);
+                h.write_u64(v as u64);
+                points.push((h.finish().0, idx as u32));
+            }
+        }
+        points.sort_unstable();
+        let mut h = Hasher::new();
+        h.write_str(GEN_DOMAIN);
+        h.write_u64(vnodes as u64);
+        for addr in &sorted {
+            h.write_str(addr);
+        }
+        Ok(HashRing { peers: sorted, points, generation: h.finish().0 })
+    }
+
+    /// The ring position of a fingerprint.  Both 128-bit lanes feed the
+    /// key (re-hashed under the ring's own domain), so ring placement
+    /// can never alias the cache key space.
+    fn key(fp: Fingerprint) -> u64 {
+        let mut h = Hasher::new();
+        h.write_str(POINT_DOMAIN);
+        h.write_u64(fp.0);
+        h.write_u64(fp.1);
+        h.finish().0
+    }
+
+    /// Index (into [`HashRing::peers`]) of the peer owning `fp`.
+    pub fn owner_index(&self, fp: Fingerprint) -> usize {
+        let k = Self::key(fp);
+        // first point at or clockwise after k, wrapping at the top
+        let i = self.points.partition_point(|&(p, _)| p < k);
+        let (_, idx) = self.points[if i == self.points.len() { 0 } else { i }];
+        idx as usize
+    }
+
+    /// Address of the peer owning `fp`.
+    pub fn owner(&self, fp: Fingerprint) -> &str {
+        &self.peers[self.owner_index(fp)]
+    }
+
+    /// Peer addresses in canonical (sorted) order.
+    pub fn peers(&self) -> &[String] {
+        &self.peers
+    }
+
+    /// Position of `addr` in canonical order, if it is a member.
+    pub fn index_of(&self, addr: &str) -> Option<usize> {
+        self.peers.iter().position(|p| p == addr)
+    }
+
+    pub fn len(&self) -> usize {
+        self.peers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.peers.is_empty()
+    }
+
+    /// Membership hash: equal on every process that built the ring from
+    /// the same peer set, different whenever membership (or the vnode
+    /// count) changes.  Surfaced in fleet stats as `ring_gen`.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::fingerprint::mix64;
+
+    fn addrs(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("127.0.0.1:{}", 7900 + i)).collect()
+    }
+
+    /// Synthetic but well-mixed fingerprints (SplitMix64 stream).
+    fn fps(n: usize) -> Vec<Fingerprint> {
+        (0..n as u64).map(|i| Fingerprint(mix64(i), mix64(i ^ 0xDEAD_BEEF))).collect()
+    }
+
+    #[test]
+    fn balance_max_over_min_load_is_bounded() {
+        // property: with V=128 vnodes the per-peer key share has CV
+        // ~ 1/sqrt(128) ≈ 9%, so across 10 peers the heaviest/lightest
+        // ratio stays well under 2 — the bound the fleet sizes for
+        let peers = addrs(10);
+        let ring = HashRing::new(&peers).unwrap();
+        let mut load = vec![0u64; peers.len()];
+        for fp in fps(100_000) {
+            load[ring.owner_index(fp)] += 1;
+        }
+        let max = *load.iter().max().unwrap();
+        let min = *load.iter().min().unwrap();
+        assert!(min > 0, "every peer must own some keys: {load:?}");
+        let ratio = max as f64 / min as f64;
+        assert!(ratio < 2.0, "load ratio {ratio:.3} out of bounds: {load:?}");
+    }
+
+    #[test]
+    fn remap_on_join_is_minimal_and_targeted() {
+        // property: adding one peer to N moves ~1/(N+1) of keys, and
+        // every moved key moves TO the new peer (exact, not statistical)
+        let old = HashRing::new(&addrs(9)).unwrap();
+        let mut grown = addrs(9);
+        grown.push("127.0.0.1:7999".to_string());
+        let new = HashRing::new(&grown).unwrap();
+        let keys = fps(50_000);
+        let mut moved = 0usize;
+        for fp in &keys {
+            let (a, b) = (old.owner(*fp), new.owner(*fp));
+            if a != b {
+                moved += 1;
+                assert_eq!(b, "127.0.0.1:7999", "a moved key must land on the joiner");
+            }
+        }
+        let frac = moved as f64 / keys.len() as f64;
+        let ideal = 1.0 / 10.0;
+        assert!(frac > ideal * 0.5 && frac < ideal * 2.0, "moved fraction {frac:.4}");
+    }
+
+    #[test]
+    fn remap_on_leave_is_minimal_and_targeted() {
+        // property: removing one peer re-homes only that peer's keys
+        let peers = addrs(8);
+        let full = HashRing::new(&peers).unwrap();
+        let departed = peers[3].clone();
+        let rest: Vec<String> = peers.iter().filter(|p| **p != departed).cloned().collect();
+        let shrunk = HashRing::new(&rest).unwrap();
+        let keys = fps(50_000);
+        let mut moved = 0usize;
+        for fp in &keys {
+            let (a, b) = (full.owner(*fp), shrunk.owner(*fp));
+            if a != b {
+                moved += 1;
+                assert_eq!(a, departed, "only the leaver's keys may move");
+            }
+            assert_ne!(b, departed, "the leaver owns nothing afterwards");
+        }
+        let frac = moved as f64 / keys.len() as f64;
+        let ideal = 1.0 / 8.0;
+        assert!(frac > ideal * 0.5 && frac < ideal * 2.0, "moved fraction {frac:.4}");
+    }
+
+    #[test]
+    fn ring_is_independent_of_peer_list_order() {
+        // determinism across processes: a daemon and a --cluster client
+        // that received the same membership in different orders (with
+        // duplicates and stray whitespace) agree on every owner
+        let a = addrs(5);
+        let mut b: Vec<String> = a.iter().rev().cloned().collect();
+        b.push(format!("  {}  ", a[2])); // duplicate with whitespace
+        b.push(String::new()); // empty entry (trailing comma in a CLI list)
+        let ra = HashRing::new(&a).unwrap();
+        let rb = HashRing::new(&b).unwrap();
+        assert_eq!(ra.peers(), rb.peers());
+        assert_eq!(ra.generation(), rb.generation());
+        for fp in fps(10_000) {
+            assert_eq!(ra.owner(fp), rb.owner(fp));
+        }
+    }
+
+    #[test]
+    fn generation_tracks_membership() {
+        let r5 = HashRing::new(&addrs(5)).unwrap();
+        let r6 = HashRing::new(&addrs(6)).unwrap();
+        assert_ne!(r5.generation(), r6.generation());
+        // and the vnode count is part of the identity too
+        let r5v = HashRing::with_vnodes(&addrs(5), 64).unwrap();
+        assert_ne!(r5.generation(), r5v.generation());
+    }
+
+    #[test]
+    fn single_peer_owns_everything_and_empty_is_an_error() {
+        let one = HashRing::new(&addrs(1)).unwrap();
+        for fp in fps(1_000) {
+            assert_eq!(one.owner_index(fp), 0);
+        }
+        assert!(HashRing::new(&[]).is_err());
+        assert!(HashRing::new(&[String::new()]).is_err());
+    }
+}

@@ -57,6 +57,21 @@
 //! `--no-degrade`.  A `--chaos` spec arms `faults.rs` hooks at the
 //! snapshot writer, the request framer, and the worker loop; with
 //! chaos off every hook is a `None` check on the serving path.
+//!
+//! Fleet mode (`--peers host:port,...`): N daemons share a consistent-
+//! hash ring (`ring.rs`) keyed by the content fingerprint, so each
+//! schedule has exactly one owner.  A daemon receiving a request it
+//! doesn't own relays it to the owner over that peer's pooled pipelined
+//! link (`peer.rs`) — the relay parks as a `Pending::Forward` and the
+//! owner's reply is restamped with the client's `id` and passed through
+//! byte-identical otherwise.  Relayed requests carry `"fwd":true` and
+//! are ALWAYS served locally by the receiver (no re-forwarding — an
+//! ownership disagreement must degrade to one extra compute, never a
+//! ping-pong loop).  If the owner is down (link cooldown, send failure,
+//! or death mid-flight) the origin recomputes locally and tags it
+//! `owner_down_fallback`; determinism makes the answer bit-identical
+//! either way.  Snapshots are per-shard: a fleet daemon persists only
+//! fingerprints it owns, so restarts re-home cleanly.
 
 use std::collections::HashMap;
 use std::io::{Read, Write};
@@ -78,9 +93,11 @@ use super::degraded;
 use super::faults::{FaultInjector, FaultPlan, FaultSite};
 use super::fingerprint::{fingerprint, Fingerprint};
 use super::metrics::{ServiceMetrics, Uptime};
+use super::peer::{PeerEvent, PeerLink, PeerSink};
 use super::persist::{self, LoadReport};
-use super::proto::{self, Op, PersistInfo, StatsView};
+use super::proto::{self, FleetView, Op, PersistInfo, StatsView};
 use super::queue::{Completion, JobError, JobQueue, Submit};
+use super::ring::HashRing;
 
 /// Cadence of the persistence flusher's trigger checks.
 const FLUSH_TICK: Duration = Duration::from_millis(250);
@@ -296,11 +313,40 @@ struct PendingReq {
     kind: &'static str,
 }
 
+/// A request relayed to its ring owner, waiting for the peer's reply.
+/// Carries the resolved graph and options so a peer death mid-flight
+/// can recompute locally without re-parsing anything.
+struct ForwardReq {
+    conn_id: u64,
+    id: Option<Json>,
+    fp: Fingerprint,
+    graph: Arc<Graph>,
+    opts: crate::coordinator::OptOptions,
+    deadline: Option<Instant>,
+}
+
+/// What a parked reactor tag is waiting on.
+enum Pending {
+    /// A local job in the worker pool.
+    Job(PendingReq),
+    /// A relay to the ring owner over a peer link.
+    Forward(ForwardReq),
+}
+
+/// Everything that can wake the parked reactor: local job completions
+/// and peer relay outcomes share one ready-queue, so either arrives
+/// with zero added latency over the other.
+enum Event {
+    Done(Completion),
+    Peer(PeerEvent),
+}
+
 /// What dispatching one request line produced.
 enum Dispatch {
     /// Answered synchronously — append to the connection's outbuf.
     Reply(Json),
-    /// Handed to the worker pool; the response arrives as a completion.
+    /// Handed to the worker pool (or relayed to a peer); the response
+    /// arrives later as an [`Event`].
     Async,
 }
 
@@ -308,7 +354,7 @@ enum Dispatch {
 struct RouteCtx<'a> {
     conn_id: u64,
     next_tag: &'a mut u64,
-    pending: &'a mut HashMap<u64, PendingReq>,
+    pending: &'a mut HashMap<u64, Pending>,
 }
 
 #[derive(Clone, Debug)]
@@ -349,6 +395,12 @@ pub struct ServeOpts {
     /// Directory of `<name>.mtx` files backing `{"matrix":…}` specs.
     /// None = matrix specs are rejected.
     pub matrix_dir: Option<PathBuf>,
+    /// Fleet membership: every daemon's `host:port`, INCLUDING this
+    /// one's own loopback address (`127.0.0.1:<port>`).  Order, case of
+    /// duplicates, and whitespace don't matter — the ring canonicalizes.
+    /// Empty = single-node mode (no ring, no links, unfiltered
+    /// snapshots).
+    pub peers: Vec<String>,
 }
 
 impl Default for ServeOpts {
@@ -367,7 +419,30 @@ impl Default for ServeOpts {
             degrade: true,
             chaos: None,
             matrix_dir: None,
+            peers: Vec::new(),
         }
+    }
+}
+
+/// Fleet wiring of one daemon (present iff `--peers` is set).
+struct Fleet {
+    ring: HashRing,
+    /// This daemon's index in the ring's canonical peer order.
+    self_idx: usize,
+    /// One pooled link per ring slot, parallel to `ring.peers()`;
+    /// `None` exactly at `self_idx`.
+    links: Vec<Option<PeerLink>>,
+}
+
+impl Fleet {
+    fn self_addr(&self) -> &str {
+        &self.ring.peers()[self.self_idx]
+    }
+
+    /// Links currently in post-failure cooldown (stats only — a "down"
+    /// peer here is one a relay just failed against, not a health probe).
+    fn peers_down(&self) -> usize {
+        self.links.iter().flatten().filter(|l| !l.healthy()).count()
     }
 }
 
@@ -395,9 +470,12 @@ pub struct Server {
     metrics: ServiceMetrics,
     uptime: Uptime,
     shutdown: AtomicBool,
-    /// Worker → reactor channel: finished jobs land here as tagged
-    /// completions (`Job::watch`), and an idle reactor parks on it.
-    completions: Arc<ReadyQueue<Completion>>,
+    /// Worker/peer → reactor channel: finished local jobs land here as
+    /// `Event::Done` (`Job::watch`), peer relay outcomes as
+    /// `Event::Peer`, and an idle reactor parks on it.
+    events: Arc<ReadyQueue<Event>>,
+    /// Fleet wiring (ring + peer links); None in single-node mode.
+    fleet: Option<Fleet>,
     persistence: Option<Persistence>,
     /// Resolved matrix graphs, keyed by name — a repeat `{"matrix":…}`
     /// request must not re-read and re-parse the `.mtx` on the hit path.
@@ -425,6 +503,36 @@ impl Server {
                 Some(Arc::new(FaultInjector::new(plan)))
             }
         };
+        let events: Arc<ReadyQueue<Event>> = Arc::new(ReadyQueue::new());
+        let fleet = if opts.peers.is_empty() {
+            None
+        } else {
+            if opts.port == 0 {
+                return Err(anyhow!(
+                    "--peers requires an explicit --port: the ring is keyed by address \
+                     and an OS-assigned port can't appear in anyone's peer list"
+                ));
+            }
+            let ring = HashRing::new(&opts.peers).map_err(|e| anyhow!("--peers: {e}"))?;
+            let self_addr = format!("127.0.0.1:{}", opts.port);
+            let self_idx = ring.index_of(&self_addr).ok_or_else(|| {
+                anyhow!("--peers list must include this daemon's own address ({self_addr})")
+            })?;
+            let links = ring
+                .peers()
+                .iter()
+                .enumerate()
+                .map(|(i, addr)| {
+                    if i == self_idx {
+                        return None;
+                    }
+                    let ev = events.clone();
+                    let sink: PeerSink = Arc::new(move |pe| ev.push(Event::Peer(pe)));
+                    Some(PeerLink::spawn(addr.clone(), sink))
+                })
+                .collect();
+            Some(Fleet { ring, self_idx, links })
+        };
         let cache = ScheduleCache::new(opts.cache_bytes, opts.shards);
         let persistence = match &opts.snapshot {
             None => None,
@@ -449,7 +557,8 @@ impl Server {
             metrics: ServiceMetrics::new(),
             uptime: Uptime::new(),
             shutdown: AtomicBool::new(false),
-            completions: Arc::new(ReadyQueue::new()),
+            events,
+            fleet,
             persistence,
             matrix_memo: Mutex::new(HashMap::new()),
             faults,
@@ -493,6 +602,11 @@ impl Server {
         // workers have drained and published every finished job — the
         // final snapshot sees the complete cache
         self.snapshot_now();
+        if let Some(fleet) = &self.fleet {
+            for link in fleet.links.iter().flatten() {
+                link.stop();
+            }
+        }
         Ok(())
     }
 
@@ -506,12 +620,12 @@ impl Server {
         }
         let mut conns: Slab<Conn> = Slab::new();
         let mut conn_index: HashMap<u64, Token> = HashMap::new();
-        let mut pending: HashMap<u64, PendingReq> = HashMap::new();
+        let mut pending: HashMap<u64, Pending> = HashMap::new();
         let mut next_conn_id: u64 = 0;
         let mut next_tag: u64 = 0;
         let mut scratch = vec![0u8; READ_CHUNK_BYTES];
         let mut tokens: Vec<Token> = Vec::new();
-        let mut completed: Vec<Completion> = Vec::new();
+        let mut completed: Vec<Event> = Vec::new();
         let mut backoff = IdleBackoff::new(IDLE_BACKOFF_MIN, IDLE_BACKOFF_MAX);
         let mut draining = false;
         let mut flush_grace: Option<Instant> = None;
@@ -539,16 +653,59 @@ impl Server {
                 }
             }
 
-            // -- route worker completions back to their connections
+            // -- route worker completions and peer relay outcomes back
+            //    to their connections
             completed.clear();
-            self.completions.drain_into(&mut completed);
+            self.events.drain_into(&mut completed);
             if !completed.is_empty() {
                 progressed = true;
             }
-            for done in completed.drain(..) {
-                let Some(req) = pending.remove(&done.tag) else { continue };
-                let resp = self.completion_response(&req, &done);
-                match conn_index.get(&req.conn_id).and_then(|&tok| conns.get_mut(tok)) {
+            for ev in completed.drain(..) {
+                let (conn_id, resp) = match ev {
+                    Event::Done(done) => {
+                        let Some(Pending::Job(req)) = pending.remove(&done.tag) else {
+                            continue;
+                        };
+                        (req.conn_id, self.completion_response(&req, &done))
+                    }
+                    Event::Peer(PeerEvent::Reply { tag, resp }) => {
+                        let Some(Pending::Forward(fwd)) = pending.remove(&tag) else {
+                            continue;
+                        };
+                        // terminal outcome at the origin: the owner's
+                        // response relays byte-identical except the id
+                        ServiceMetrics::bump(&self.metrics.forwarded);
+                        (fwd.conn_id, proto::restamp_relayed(resp, fwd.id.as_ref()))
+                    }
+                    Event::Peer(PeerEvent::Failed { tag }) => {
+                        let Some(Pending::Forward(fwd)) = pending.remove(&tag) else {
+                            continue;
+                        };
+                        // owner died mid-flight: recompute locally so
+                        // the client still gets its (identical) answer
+                        ServiceMetrics::bump(&self.metrics.owner_down_fallback);
+                        let mut ctx = RouteCtx {
+                            conn_id: fwd.conn_id,
+                            next_tag: &mut next_tag,
+                            pending: &mut pending,
+                        };
+                        match self.serve_local(
+                            fwd.fp,
+                            &fwd.graph,
+                            fwd.opts,
+                            fwd.deadline,
+                            fwd.id,
+                            &mut ctx,
+                        ) {
+                            Dispatch::Reply(resp) => (fwd.conn_id, resp),
+                            // re-parked as a local job under a new tag;
+                            // the connection's outstanding count carries
+                            // over unchanged
+                            Dispatch::Async => continue,
+                        }
+                    }
+                };
+                match conn_index.get(&conn_id).and_then(|&tok| conns.get_mut(tok)) {
                     Some(conn) => {
                         conn.push_response(&resp);
                         conn.outstanding -= 1;
@@ -686,13 +843,13 @@ impl Server {
                 }
             }
 
-            // -- idle strategy: park on the completion queue so workers
-            //    wake us instantly; socket activity is found within the
-            //    backoff ceiling
+            // -- idle strategy: park on the event queue so workers and
+            //    peer links wake us instantly; socket activity is found
+            //    within the backoff ceiling
             if progressed {
                 backoff.reset();
             } else {
-                self.completions.wait_timeout(backoff.next());
+                self.events.wait_timeout(backoff.next());
             }
         }
     }
@@ -769,14 +926,22 @@ impl Server {
 
     /// Write one snapshot (best effort: a full disk must not take the
     /// serving path down — the failure is logged and counters stay put).
+    /// In fleet mode the snapshot is per-shard: only fingerprints this
+    /// daemon owns on the ring are persisted, so a restart re-homes
+    /// cleanly and two daemons never both claim the same entry.
     fn snapshot_now(&self) {
         let Some(p) = &self.persistence else { return };
         let insertions = self.cache.insertion_count();
-        let result = persist::save_rotated(
+        let owned = self
+            .fleet
+            .as_ref()
+            .map(|f| move |fp: Fingerprint| f.ring.owner_index(fp) == f.self_idx);
+        let result = persist::save_rotated_filtered(
             &self.cache,
             &p.path,
             self.opts.snapshot_keep,
             self.faults.as_deref(),
+            owned.as_ref().map(|f| f as &dyn Fn(Fingerprint) -> bool),
         );
         match result {
             Ok(report) => {
@@ -838,6 +1003,7 @@ impl Server {
             }
         };
         let id = req.id;
+        let fwd = req.fwd;
         match req.op {
             Op::Health => Dispatch::Reply(
                 proto::Reply::Health { uptime_ms: self.uptime.elapsed_ms() }.encode(id.as_ref()),
@@ -854,6 +1020,12 @@ impl Server {
                     queue_pending: self.queue.pending_len(),
                     persist: self.persist_info(),
                     chaos: self.faults.as_ref().map(|f| f.stats_json()),
+                    fleet: self.fleet.as_ref().map(|f| FleetView {
+                        self_addr: f.self_addr().to_string(),
+                        peers: f.ring.len(),
+                        ring_gen: f.ring.generation(),
+                        peers_down: f.peers_down(),
+                    }),
                 };
                 Dispatch::Reply(proto::Reply::Stats(view).encode(id.as_ref()))
             }
@@ -862,7 +1034,7 @@ impl Server {
                 Dispatch::Reply(proto::Reply::ShuttingDown.encode(id.as_ref()))
             }
             Op::Optimize { graph, opts, deadline_ms } => {
-                self.serve_optimize(graph, opts, deadline_ms, id, ctx)
+                self.serve_optimize(graph, opts, deadline_ms, fwd, id, ctx)
             }
         }
     }
@@ -931,12 +1103,15 @@ impl Server {
     /// The optimize path.  Hits (and everything answerable without a
     /// worker: expired deadlines, degraded fallbacks, rejections) reply
     /// inline on the reactor; misses and joins park as a tagged
-    /// [`PendingReq`] and answer when their completion routes back.
+    /// [`Pending::Job`] and answer when their completion routes back;
+    /// in fleet mode, requests owned by a peer park as
+    /// [`Pending::Forward`] and relay over that peer's link.
     fn serve_optimize(
         &self,
         graph: proto::GraphSpec,
         mut opts: crate::coordinator::OptOptions,
         deadline_ms: Option<u64>,
+        fwd: bool,
         id: Option<Json>,
         ctx: &mut RouteCtx<'_>,
     ) -> Dispatch {
@@ -956,6 +1131,108 @@ impl Server {
         };
         let deadline = deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
         let fp = fingerprint(&g, &opts);
+        if fwd {
+            // relayed to us by a peer: serve locally, NEVER re-forward —
+            // an ownership disagreement (e.g. mismatched peer lists)
+            // must cost one extra compute, not a ping-pong loop
+            ServiceMetrics::bump(&self.metrics.proxied_in);
+            return self.serve_local(fp, &g, opts, deadline, id, ctx);
+        }
+        if let Some(fleet) = &self.fleet {
+            let owner = fleet.ring.owner_index(fp);
+            if owner != fleet.self_idx {
+                if let Some(d) = self.try_forward(fleet, owner, &graph, g.clone(), &opts, deadline, fp, &id, ctx)
+                {
+                    return d;
+                }
+                // owner unreachable: recompute locally so the request
+                // still answers (determinism keeps it bit-identical)
+                ServiceMetrics::bump(&self.metrics.owner_down_fallback);
+            }
+        }
+        self.serve_local(fp, &g, opts, deadline, id, ctx)
+    }
+
+    /// Try to relay a request we don't own to its ring owner.  Returns
+    /// `None` when the link is down or won't take the relay — the caller
+    /// falls back to local compute.  A local cache hit (e.g. an entry
+    /// computed during an earlier fallback window) short-circuits the
+    /// hop entirely: determinism makes any resident copy bit-identical
+    /// to the owner's.
+    #[allow(clippy::too_many_arguments)]
+    fn try_forward(
+        &self,
+        fleet: &Fleet,
+        owner: usize,
+        spec: &proto::GraphSpec,
+        g: Arc<Graph>,
+        opts: &crate::coordinator::OptOptions,
+        deadline: Option<Instant>,
+        fp: Fingerprint,
+        id: &Option<Json>,
+        ctx: &mut RouteCtx<'_>,
+    ) -> Option<Dispatch> {
+        if let Some(entry) = self.cache.get(fp) {
+            ServiceMetrics::bump(&self.metrics.served_hit);
+            return Some(Dispatch::Reply(
+                proto::Reply::Schedule {
+                    fp,
+                    cached: "hit",
+                    entry: &entry,
+                    queue_ms: None,
+                    optimize_ms: None,
+                }
+                .encode(id.as_ref()),
+            ));
+        }
+        let link = fleet.links[owner].as_ref().expect("non-self ring slots have links");
+        if !link.healthy() {
+            return None;
+        }
+        // relay the REMAINING deadline budget; an already-expired one is
+        // answered here rather than shipped across the wire to die there
+        let remaining_ms = match deadline {
+            None => None,
+            Some(d) => {
+                let r = d.saturating_duration_since(Instant::now());
+                if r.is_zero() {
+                    return Some(Dispatch::Reply(self.deadline_error(id.as_ref())));
+                }
+                Some(r.as_millis() as u64)
+            }
+        };
+        let tag = *ctx.next_tag;
+        *ctx.next_tag += 1;
+        let line = proto::forward_request(spec, opts, remaining_ms, tag).dump();
+        if link.send(tag, line).is_err() {
+            return None; // cooldown race or full channel: fall back
+        }
+        ctx.pending.insert(
+            tag,
+            Pending::Forward(ForwardReq {
+                conn_id: ctx.conn_id,
+                id: id.clone(),
+                fp,
+                graph: g,
+                opts: opts.clone(),
+                deadline,
+            }),
+        );
+        Some(Dispatch::Async)
+    }
+
+    /// The local serving tail: cache probe → deadline/degrade policy →
+    /// worker-pool submit.  Every request ends here on exactly one node
+    /// (the owner, a fallback origin, or a single-node server).
+    fn serve_local(
+        &self,
+        fp: Fingerprint,
+        g: &Arc<Graph>,
+        opts: crate::coordinator::OptOptions,
+        deadline: Option<Instant>,
+        id: Option<Json>,
+        ctx: &mut RouteCtx<'_>,
+    ) -> Dispatch {
         if let Some(entry) = self.cache.get(fp) {
             // a hit is near-free, so it is served even at deadline_ms=0;
             // everything past this point needs optimizer time
@@ -982,11 +1259,11 @@ impl Server {
             if self.opts.degrade {
                 let mean_ms = self.metrics.optimize.snapshot().mean_ms;
                 if mean_ms > 0.0 && (remaining.as_secs_f64() * 1e3) < mean_ms {
-                    return Dispatch::Reply(self.serve_degraded(fp, &g, &opts, id.as_ref()));
+                    return Dispatch::Reply(self.serve_degraded(fp, g, &opts, id.as_ref()));
                 }
             }
         }
-        match self.queue.submit(fp, &g, opts.clone(), &self.cache, deadline) {
+        match self.queue.submit(fp, g, opts.clone(), &self.cache, deadline) {
             Submit::Hit(entry) => {
                 // the job finished between the probe above and the
                 // enqueue — still a cache hit from the client's view
@@ -1008,7 +1285,7 @@ impl Server {
                 // rather than a retry hint.  Terminal rejections
                 // (shutdown, hint-less) always pass through.
                 if retry_after_ms.is_some() && self.opts.degrade {
-                    return Dispatch::Reply(self.serve_degraded(fp, &g, &opts, id.as_ref()));
+                    return Dispatch::Reply(self.serve_degraded(fp, g, &opts, id.as_ref()));
                 }
                 ServiceMetrics::bump(&self.metrics.rejected);
                 Dispatch::Reply(
@@ -1023,11 +1300,15 @@ impl Server {
                 };
                 let tag = *ctx.next_tag;
                 *ctx.next_tag += 1;
-                ctx.pending.insert(tag, PendingReq { conn_id: ctx.conn_id, id, fp, kind });
+                ctx.pending.insert(
+                    tag,
+                    Pending::Job(PendingReq { conn_id: ctx.conn_id, id, fp, kind }),
+                );
                 // watch AFTER parking the PendingReq: an already-finished
                 // job pushes its completion immediately, and the routing
                 // pass must find the entry
-                job.watch(&self.completions, tag);
+                let ev = self.events.clone();
+                job.watch(tag, move |c| ev.push(Event::Done(c)));
                 Dispatch::Async
             }
         }
@@ -1056,6 +1337,34 @@ mod tests {
         assert!(o.snapshot_keep >= 1);
         assert!(o.degrade, "degradation is on by default");
         assert!(o.chaos.is_none(), "chaos is strictly opt-in");
+    }
+
+    #[test]
+    fn fleet_bind_requires_an_explicit_port() {
+        // the ring is keyed by address; an OS-assigned port can't appear
+        // in anyone's peer list, so fleet mode refuses port 0
+        let err = Server::bind(ServeOpts {
+            port: 0,
+            peers: vec!["127.0.0.1:7991".to_string(), "127.0.0.1:7992".to_string()],
+            ..Default::default()
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("--port"), "{err}");
+    }
+
+    #[test]
+    fn fleet_bind_rejects_a_peer_list_without_self() {
+        let port = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let err = Server::bind(ServeOpts {
+            port,
+            peers: vec!["127.0.0.1:1".to_string(), "127.0.0.1:2".to_string()],
+            ..Default::default()
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("own address"), "{err}");
     }
 
     #[test]

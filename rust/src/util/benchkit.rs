@@ -190,6 +190,10 @@ const GATED_METRICS: &[(&str, bool)] = &[
     // pipelined hit-path throughput over the in-run thread-per-connection
     // baseline (benches/service.rs) — the PR 7 reactor headline
     ("serve_pipelined_speedup", true),
+    // forwarded-hit latency over owned-hit latency in a two-node fleet
+    // (benches/service.rs) — a ratio of in-run measurements, so stable
+    // across runner hardware; gated as a ceiling (lower is better)
+    ("forwarded_hit_overhead", false),
 ];
 
 /// Compare a freshly produced bench baseline (`current`, JSON text)
@@ -318,6 +322,21 @@ mod tests {
         let cur = baseline_json(3.0, 1.30);
         let err = compare_baselines(&base, &cur, 0.25).unwrap_err();
         assert!(err.contains("cut_ratio_new_over_ref"), "{err}");
+    }
+
+    #[test]
+    fn forwarded_hit_overhead_gates_as_a_ceiling() {
+        let report = |overhead: f64| {
+            let mut r = JsonReport::new();
+            r.str("mode", "smoke").num("forwarded_hit_overhead", overhead);
+            r.render()
+        };
+        // shrinking overhead (cheaper forwarding) always passes
+        let lines = compare_baselines(&report(8.0), &report(2.0), 0.25).expect("improvement ok");
+        assert!(lines.iter().any(|l| l.contains("forwarded_hit_overhead") && l.ends_with("ok")));
+        // growing past the ceiling fails
+        let err = compare_baselines(&report(8.0), &report(11.0), 0.25).unwrap_err();
+        assert!(err.contains("forwarded_hit_overhead"), "{err}");
     }
 
     #[test]

@@ -277,8 +277,8 @@ mod tests {
         let hits = Mutex::new(vec![0u8; 1000]);
         for_ranges(4, 1000, 4, |lo, hi, _w| {
             let mut h = hits.lock().unwrap();
-            for i in lo..hi {
-                h[i] += 1;
+            for c in &mut h[lo..hi] {
+                *c += 1;
             }
         });
         assert!(hits.into_inner().unwrap().iter().all(|&c| c == 1));

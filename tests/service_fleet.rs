@@ -1,0 +1,340 @@
+//! End-to-end tests for the sharded serving fleet (PR 8).
+//!
+//! Three real `Server`s on 127.0.0.1 joined by `--peers`, driven over
+//! real TCP — the same path the CI fleet-smoke exercises through the
+//! CLI.  The core contract under test:
+//!
+//!   * every response is BIT-IDENTICAL to a direct
+//!     `coordinator::optimize_graph` run, no matter which fleet member
+//!     the client talks to (owned hits, forwarded hits, and fallback
+//!     recomputes all included);
+//!   * each fingerprint is computed on exactly one owner — `served_miss`
+//!     summed across the fleet equals the number of distinct workloads;
+//!   * misrouted requests forward to the ring owner (`forwarded` at the
+//!     origin, `proxied_in` at the owner, and the two sums agree);
+//!   * the per-node accounting identity extends with the `forwarded`
+//!     term: requests = hit + miss + joined + degraded + rejected +
+//!     errors + forwarded;
+//!   * killing a node re-homes its keys: requests through a survivor
+//!     succeed via local recompute (`owner_down_fallback` rises) and
+//!     stay bit-identical;
+//!   * per-shard snapshots persist only owned fingerprints, so a warm
+//!     restart loads exactly this member's shard.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+
+use epgraph::coordinator::{optimize_graph, OptOptions};
+use epgraph::service::{
+    fingerprint, proto, Client, Cluster, GraphSpec, HashRing, ServeOpts, Server,
+};
+use epgraph::util::json::Json;
+
+/// Reserve `n` distinct loopback ports: hold all listeners at once (so
+/// they cannot collide), then release them for the servers to claim.
+fn reserve_ports(n: usize) -> Vec<u16> {
+    let listeners: Vec<TcpListener> = (0..n)
+        .map(|_| TcpListener::bind(("127.0.0.1", 0)).expect("reserve port"))
+        .collect();
+    listeners.iter().map(|l| l.local_addr().expect("port").port()).collect()
+}
+
+fn start_member(
+    port: u16,
+    peers: &[String],
+    tweak: impl FnOnce(&mut ServeOpts),
+) -> (Arc<Server>, std::thread::JoinHandle<()>) {
+    let mut opts = ServeOpts { port, threads: 2, peers: peers.to_vec(), ..Default::default() };
+    tweak(&mut opts);
+    let server = Arc::new(Server::bind(opts).expect("bind fleet member"));
+    let handle = {
+        let server = server.clone();
+        std::thread::spawn(move || server.run().expect("fleet member run"))
+    };
+    (server, handle)
+}
+
+fn roundtrip(client: &mut Client, line: &str) -> Json {
+    client.roundtrip_line(line).expect("roundtrip")
+}
+
+fn get_u64(j: &Json, key: &str) -> u64 {
+    j.get(key).and_then(Json::as_u64).unwrap_or_else(|| panic!("stats field {key}: {j:?}"))
+}
+
+fn cached_tag(resp: &Json) -> &str {
+    resp.get("cached").and_then(Json::as_str).unwrap_or_else(|| panic!("no cached tag: {resp:?}"))
+}
+
+/// Assert a served optimize response matches the direct pipeline run.
+fn assert_bit_identical(resp: &Json, expected: &epgraph::coordinator::OptimizedSchedule) {
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "failed: {resp:?}");
+    let assign = resp.get("assign").and_then(Json::as_arr).expect("assign array");
+    assert_eq!(assign.len(), expected.partition.assign.len());
+    for (got, &want) in assign.iter().zip(&expected.partition.assign) {
+        assert_eq!(got.as_u64(), Some(want as u64), "assign diverged");
+    }
+    let layout = resp.get("layout").and_then(Json::as_arr).expect("layout array");
+    assert_eq!(layout.len(), expected.layout.new_of_old.len());
+    for (got, &want) in layout.iter().zip(&expected.layout.new_of_old) {
+        assert_eq!(got.as_u64(), Some(want as u64), "layout diverged");
+    }
+    assert_eq!(get_u64(resp, "quality"), expected.quality);
+}
+
+/// The extended per-node accounting identity (proto docs): every request
+/// terminates in exactly one of the served/rejected/error/forwarded bins.
+fn assert_identity(stats: &Json) {
+    assert_eq!(
+        get_u64(stats, "served_hit")
+            + get_u64(stats, "served_miss")
+            + get_u64(stats, "served_joined")
+            + get_u64(stats, "served_degraded")
+            + get_u64(stats, "rejected")
+            + get_u64(stats, "errors")
+            + get_u64(stats, "forwarded"),
+        get_u64(stats, "requests"),
+        "fleet accounting identity broke: {stats:?}"
+    );
+}
+
+fn fleet_workloads(depth: usize, count: usize) -> Vec<(GraphSpec, OptOptions)> {
+    (0..count)
+        .map(|i| {
+            (
+                GraphSpec::Gen { name: "cfd_mesh".into(), args: vec![10, 10, depth] },
+                OptOptions { k: 4, seed: 100 + i as u64, ..Default::default() },
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn fleet_forwards_misroutes_and_every_response_matches_direct() {
+    let ports = reserve_ports(3);
+    let peers: Vec<String> = ports.iter().map(|p| format!("127.0.0.1:{p}")).collect();
+    let members: Vec<_> = ports.iter().map(|&p| start_member(p, &peers, |_| {})).collect();
+    let mut clients: Vec<Client> =
+        peers.iter().map(|a| Client::connect(a.as_str()).expect("connect member")).collect();
+
+    // 12 distinct workloads; the client-side Cluster and the servers
+    // must agree on ownership because both build the same ring
+    let workloads = fleet_workloads(1, 12);
+    let expected: Vec<_> = workloads
+        .iter()
+        .map(|(spec, opts)| optimize_graph(&spec.resolve().unwrap(), opts))
+        .collect();
+    let lines: Vec<String> =
+        workloads.iter().map(|(spec, opts)| proto::optimize_request(spec, opts).dump()).collect();
+    let cluster = Cluster::new(&peers).expect("cluster");
+    let owners: Vec<usize> = workloads
+        .iter()
+        .map(|(spec, opts)| {
+            let fp = fingerprint(&spec.resolve().unwrap(), opts);
+            peers.iter().position(|a| a == cluster.owner(fp)).expect("owner in peer list")
+        })
+        .collect();
+
+    // phase A — route like a `--cluster` client: straight to the owner.
+    // First request is the one optimizer run; the repeat is a local hit
+    // whose dump is the reference bytes for the forwarded phases.
+    let mut hit_dumps = Vec::new();
+    for (w, line) in lines.iter().enumerate() {
+        let first = roundtrip(&mut clients[owners[w]], line);
+        assert_eq!(cached_tag(&first), "miss", "{first:?}");
+        assert_bit_identical(&first, &expected[w]);
+        let again = roundtrip(&mut clients[owners[w]], line);
+        assert_eq!(cached_tag(&again), "hit");
+        assert_bit_identical(&again, &expected[w]);
+        hit_dumps.push(again.dump());
+    }
+
+    // phase B — deliberate misroute: a non-owner must forward to the
+    // owner and relay its cache hit byte-for-byte
+    for (w, line) in lines.iter().enumerate() {
+        let via = (owners[w] + 1) % peers.len();
+        let resp = roundtrip(&mut clients[via], line);
+        assert_eq!(cached_tag(&resp), "hit", "owner already cached this: {resp:?}");
+        assert_eq!(resp.dump(), hit_dumps[w], "forwarded hit must relay the owner's bytes");
+    }
+
+    // phase C — the full mix through every node: same bytes everywhere
+    for (w, line) in lines.iter().enumerate() {
+        for client in clients.iter_mut() {
+            let resp = roundtrip(client, line);
+            assert_eq!(resp.dump(), hit_dumps[w]);
+        }
+    }
+
+    // fleet-level accounting
+    let stats: Vec<Json> = clients
+        .iter_mut()
+        .map(|c| roundtrip(c, &proto::simple_request("stats").dump()))
+        .collect();
+    let sum = |key: &str| stats.iter().map(|s| get_u64(s, key)).sum::<u64>();
+    for s in &stats {
+        assert_identity(s);
+        let fleet = s.get("fleet").expect("fleet stats object");
+        assert_eq!(get_u64(fleet, "peers"), peers.len() as u64);
+        assert_eq!(get_u64(fleet, "peers_down"), 0);
+        assert_eq!(get_u64(fleet, "owner_down_fallback"), 0);
+        assert_eq!(
+            fleet.get("ring_gen").and_then(Json::as_str),
+            stats[0].get("fleet").unwrap().get("ring_gen").and_then(Json::as_str),
+            "every member must agree on the ring generation"
+        );
+    }
+    // one optimizer run per distinct workload, fleet-wide
+    assert_eq!(sum("served_miss"), workloads.len() as u64, "{stats:?}");
+    // phase B misroutes (12) + phase C non-owner sends (24)
+    assert_eq!(sum("forwarded"), 3 * workloads.len() as u64);
+    // every successful relay was proxied in exactly once
+    let proxied: u64 = stats
+        .iter()
+        .map(|s| get_u64(s.get("fleet").expect("fleet"), "proxied_in"))
+        .sum();
+    assert_eq!(proxied, sum("forwarded"));
+
+    for (i, (_, handle)) in members.into_iter().enumerate() {
+        roundtrip(&mut clients[i], &proto::simple_request("shutdown").dump());
+        handle.join().expect("member thread");
+    }
+}
+
+#[test]
+fn killing_the_owner_rehomes_its_keys_via_local_fallback() {
+    let ports = reserve_ports(3);
+    let peers: Vec<String> = ports.iter().map(|p| format!("127.0.0.1:{p}")).collect();
+    let ring = HashRing::new(&peers).expect("ring");
+
+    // a workload node 0 owns, so killing node 0 is killing the owner
+    let spec = GraphSpec::Gen { name: "cfd_mesh".into(), args: vec![10, 10, 1] };
+    let g = spec.resolve().unwrap();
+    let mut seed = 1u64;
+    let opts = loop {
+        let o = OptOptions { k: 4, seed, ..Default::default() };
+        if ring.owner(fingerprint(&g, &o)) == peers[0] {
+            break o;
+        }
+        seed += 1;
+    };
+    let expected = optimize_graph(&g, &opts);
+    let line = proto::optimize_request(&spec, &opts).dump();
+
+    let members: Vec<_> = ports.iter().map(|&p| start_member(p, &peers, |_| {})).collect();
+    let mut c0 = Client::connect(peers[0].as_str()).expect("connect owner");
+    let mut c1 = Client::connect(peers[1].as_str()).expect("connect survivor");
+
+    // prime through the survivor: it forwards, the owner computes
+    let first = roundtrip(&mut c1, &line);
+    assert_eq!(cached_tag(&first), "miss", "{first:?}");
+    assert_bit_identical(&first, &expected);
+    let s1 = roundtrip(&mut c1, &proto::simple_request("stats").dump());
+    assert_eq!(get_u64(&s1, "forwarded"), 1);
+
+    // kill the owner (clean shutdown is the polite murder — the peer
+    // link sees the socket close either way)
+    roundtrip(&mut c0, &proto::simple_request("shutdown").dump());
+    let mut members = members.into_iter();
+    members.next().unwrap().1.join().expect("owner thread");
+
+    // re-home: the survivor recomputes locally instead of forwarding.
+    // The origin never cached the forwarded result, so this is a miss —
+    // computed here, bit-identical, and cached for the repeat.
+    let rehomed = roundtrip(&mut c1, &line);
+    assert_eq!(cached_tag(&rehomed), "miss", "{rehomed:?}");
+    assert_bit_identical(&rehomed, &expected);
+    let repeat = roundtrip(&mut c1, &line);
+    assert_eq!(cached_tag(&repeat), "hit");
+    assert_bit_identical(&repeat, &expected);
+
+    let s1 = roundtrip(&mut c1, &proto::simple_request("stats").dump());
+    assert_identity(&s1);
+    let fleet = s1.get("fleet").expect("fleet stats");
+    assert!(
+        get_u64(fleet, "owner_down_fallback") >= 1,
+        "fallback must be accounted: {s1:?}"
+    );
+    assert_eq!(get_u64(&s1, "forwarded"), 1, "the dead-owner request must not count as forwarded");
+
+    for (i, (_, handle)) in members.enumerate() {
+        let mut c = Client::connect(peers[i + 1].as_str()).expect("connect for shutdown");
+        roundtrip(&mut c, &proto::simple_request("shutdown").dump());
+        handle.join().expect("member thread");
+    }
+}
+
+#[test]
+fn per_shard_snapshots_persist_exactly_the_owned_fingerprints() {
+    let dir = std::env::temp_dir().join(format!("epgraph-fleet-snap-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ports = reserve_ports(3);
+    let peers: Vec<String> = ports.iter().map(|p| format!("127.0.0.1:{p}")).collect();
+    let ring = HashRing::new(&peers).expect("ring");
+
+    let workloads = fleet_workloads(2, 6);
+    let fps: Vec<_> = workloads
+        .iter()
+        .map(|(spec, opts)| fingerprint(&spec.resolve().unwrap(), opts))
+        .collect();
+    let owners: Vec<usize> = fps.iter().map(|&fp| ring.owner_index(fp)).collect();
+    let snap = |i: usize| dir.join(format!("member{i}.snap"));
+
+    let members: Vec<_> = ports
+        .iter()
+        .enumerate()
+        .map(|(i, &p)| start_member(p, &peers, |o| o.snapshot = Some(snap(i))))
+        .collect();
+    let mut clients: Vec<Client> =
+        peers.iter().map(|a| Client::connect(a.as_str()).expect("connect member")).collect();
+
+    // every workload lands on its owner once, and is also misrouted
+    // once — the misroute's relay result must NOT enter the origin's
+    // snapshot (origin never caches forwarded results)
+    for (w, (spec, opts)) in workloads.iter().enumerate() {
+        let line = proto::optimize_request(spec, opts).dump();
+        assert_eq!(cached_tag(&roundtrip(&mut clients[owners[w]], &line)), "miss");
+        let via = (owners[w] + 1) % peers.len();
+        assert_eq!(cached_tag(&roundtrip(&mut clients[via], &line)), "hit");
+    }
+    for (i, (_, handle)) in members.into_iter().enumerate() {
+        roundtrip(&mut clients[i], &proto::simple_request("shutdown").dump());
+        handle.join().expect("member thread"); // final snapshot written here
+    }
+
+    // restart each member's snapshot standalone: the warm load must be
+    // exactly the fingerprints that member owned — nothing foreign
+    for i in 0..peers.len() {
+        let owned = owners.iter().filter(|&&o| o == i).count() as u64;
+        let server = Arc::new(
+            Server::bind(ServeOpts {
+                port: 0,
+                threads: 1,
+                snapshot: Some(snap(i)),
+                ..Default::default()
+            })
+            .expect("bind restarted member"),
+        );
+        let warm = server.warm_report().expect("persistence configured");
+        assert_eq!(warm.loaded, owned, "member {i} must reload exactly its shard");
+        assert_eq!(warm.skipped_corrupt, 0);
+        let addr = server.local_addr();
+        let handle = std::thread::spawn(move || server.run().expect("restarted run"));
+        let mut client = Client::connect(addr).expect("connect restarted");
+        let stats = roundtrip(&mut client, &proto::simple_request("stats").dump());
+        let cache = stats.get("cache").expect("cache stats");
+        assert_eq!(get_u64(cache, "entries"), owned, "no foreign entries in the shard");
+        // an owned fingerprint serves as a warm hit, bit-identically
+        if let Some(w) = owners.iter().position(|&o| o == i) {
+            let (spec, opts) = &workloads[w];
+            let resp = roundtrip(&mut client, &proto::optimize_request(spec, opts).dump());
+            assert_eq!(cached_tag(&resp), "hit", "{resp:?}");
+            assert_bit_identical(&resp, &optimize_graph(&spec.resolve().unwrap(), opts));
+        }
+        roundtrip(&mut client, &proto::simple_request("shutdown").dump());
+        handle.join().expect("restarted thread");
+    }
+    // sanity: the six workloads really were spread over the ring
+    assert_eq!(owners.len(), 6);
+    std::fs::remove_dir_all(&dir).ok();
+}
