@@ -15,6 +15,8 @@
 //! criterion is unavailable offline; this uses the in-repo harness
 //! (epgraph::util::benchkit) with warmup + multi-iteration stats.
 
+use epgraph::coordinator::{optimize_delta, optimize_graph, OptOptions};
+use epgraph::graph::delta::{apply_delta, EdgeDelta};
 use epgraph::graph::gen as ggen;
 use epgraph::experiments as exp;
 use epgraph::partition::vertex::{self, VpOpts};
@@ -167,12 +169,92 @@ fn kway_refine_headline(seed: u64, r: &mut JsonReport) {
         .num("kway_cut_ratio_new_over_ref", cut_new as f64 / (cut_ref.max(1)) as f64);
 }
 
+/// PR 9 headline: incremental re-partitioning of a dynamic graph.  A
+/// deterministic ≤1% edge delta (every 200th edge out, the same count
+/// of fresh edges in) against an already-optimized power-law base;
+/// `optimize_delta` warm-starts from the base's partition and must land
+/// within 5% of a cold full re-optimization's cut (hard in-bench
+/// assert) at a fraction of its wall clock (`delta_refine_speedup`,
+/// benchkit-gated against the committed floor).
+fn delta_headline(seed: u64, r: &mut JsonReport) {
+    let smoke = std::env::var("EPGRAPH_BENCH_SMOKE").is_ok();
+    // power_law(n, 3): m ≈ 3n, so even smoke mode clears 100k edges
+    let n = if smoke { 60_000 } else { 350_000 };
+    let k = 64usize;
+    println!("\n## incremental re-partition headline ({}, k={k})\n", if smoke { "smoke" } else { "full" });
+    let g = ggen::power_law(n, 3, seed ^ 0xD317);
+    let nn = g.n as u64;
+    let step = 200; // 1/200 removed + 1/200 added = 1% of m mutated
+    let delta = EdgeDelta {
+        remove_edges: (0..g.m() / step).map(|i| g.edges[i * step]).collect(),
+        add_edges: (0..g.m() / step)
+            .map(|i| {
+                let u = ((i as u64 * 7919 + 13) % nn) as u32;
+                let v = ((i as u64 * 104_729 + 71) % nn) as u32;
+                if u == v {
+                    (u, (v + 1) % nn as u32)
+                } else {
+                    (u, v)
+                }
+            })
+            .collect(),
+    };
+    println!(
+        "power_law({n}, 3): n={} m={}, delta {} mutations ({:.2}% of m)",
+        g.n,
+        g.m(),
+        delta.len(),
+        delta.len() as f64 / g.m() as f64 * 100.0
+    );
+
+    let opts = OptOptions { k, seed, threads: 1, ..Default::default() };
+    let base = optimize_graph(&g, &opts);
+    let (post, new_of_old) = apply_delta(&g, &delta).expect("delta applies to the base");
+
+    let reps = headline_reps(smoke);
+    let (full, t_full) = timed_min(reps, || optimize_graph(&post, &opts));
+    let (inc, t_inc) = timed_min(reps, || optimize_delta(&base, &post, &new_of_old, &opts).0);
+    // determinism across thread counts — the serving layer's
+    // bit-identical-schedule contract rests on this
+    let mt = OptOptions { threads: 0, ..opts.clone() };
+    let (inc_mt, _) = optimize_delta(&base, &post, &new_of_old, &mt);
+    assert_eq!(
+        inc.partition.assign, inc_mt.partition.assign,
+        "thread count must not change the refined partition"
+    );
+
+    let speedup = t_full.as_secs_f64() / t_inc.as_secs_f64().max(1e-9);
+    let ratio = inc.quality as f64 / full.quality.max(1) as f64;
+    println!("  full re-optimize:    {:>10.3}s  cut={}", t_full.as_secs_f64(), full.quality);
+    println!(
+        "  delta refine:        {:>10.3}s  cut={}  speedup={speedup:.2}x  cut_ratio={ratio:.4}",
+        t_inc.as_secs_f64(),
+        inc.quality
+    );
+    assert!(
+        ratio <= 1.05,
+        "delta cut {} exceeds full re-optimization cut {} by more than 5%",
+        inc.quality,
+        full.quality
+    );
+
+    r.int("delta_mutations", delta.len() as u64)
+        .num("delta_pct_of_m", delta.len() as f64 / g.m() as f64 * 100.0)
+        .num("delta_full_secs", t_full.as_secs_f64())
+        .num("delta_refine_secs", t_inc.as_secs_f64())
+        .num("delta_refine_speedup", speedup)
+        .int("delta_full_cut", full.quality)
+        .int("delta_cut", inc.quality)
+        .num("delta_cut_ratio", ratio);
+}
+
 fn main() {
     let seed = 42;
 
     let mut report = JsonReport::new();
     perf_headline(seed, &mut report);
     kway_refine_headline(seed, &mut report);
+    delta_headline(seed, &mut report);
     match report.write("BENCH_partition.json") {
         Ok(()) => println!("\n  baseline written to BENCH_partition.json\n"),
         Err(e) => println!("\n  WARNING: could not write BENCH_partition.json: {e}\n"),

@@ -70,7 +70,7 @@ fn main() {
     println!("{}", bench("fingerprint (graph+opts)", 10, iters, || fingerprint(&g, &opts)).row());
 
     let (sched, bd) = optimize_graph_with_breakdown(&g, &opts);
-    let entry = Arc::new(CachedSchedule::new(sched, bd));
+    let entry = Arc::new(CachedSchedule::new(sched, bd, Arc::new(g.clone())));
     let cache = Arc::new(ScheduleCache::new(64 << 20, 8));
     let fp = fingerprint(&g, &opts);
     cache.insert(fp, entry);

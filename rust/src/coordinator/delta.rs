@@ -1,0 +1,232 @@
+//! Delta optimization: the §4.1 pipeline with the partitioner stage
+//! replaced by warm-start refinement (`partition::incremental`) when a
+//! cached base schedule can seed it (PR 9).
+//!
+//! `optimize_delta_checked` mirrors `optimize_graph_checked` stage for
+//! stage — same reuse check, same special-pattern shortcut, same
+//! layout/quality accounting, cancellation polled at the same
+//! boundaries — so a completed delta run yields a full-fledged
+//! `OptimizedSchedule` the serving layer caches under the post-delta
+//! graph's own content fingerprint, indistinguishable in shape from a
+//! cold run.  Only the partition stage differs: when the base schedule
+//! is a genuine EP partition with the requested block count, the cached
+//! assignment seeds `incremental::refine_from`; otherwise (preset
+//! pattern, low-reuse identity schedule, baseline method, k mismatch)
+//! the stage falls back to the full partitioner, because those bases
+//! carry nothing worth refining.
+//!
+//! The refined schedule is NOT defined to be bit-identical to a cold
+//! run on the same graph — warm-start and cold-start may settle in
+//! different local optima of comparable cut.  What IS guaranteed:
+//! same base + same delta ⇒ bit-identical result for any thread count
+//! (the cache layer's singleflight then makes the *served* bytes for
+//! one fingerprint identical regardless of which path computed them).
+
+use std::time::Instant;
+
+use crate::graph::{stats, Graph};
+use crate::partition::{ep, incremental, quality, Method};
+use crate::sparse::cpack;
+
+use super::optimizer::{Cancelled, OptBreakdown, OptOptions, OptimizedSchedule};
+
+/// Can `base` seed warm-start refinement for a request with `opts`?
+/// Public so the serving layer can report which path a reply took.
+pub fn refinable(base: &OptimizedSchedule, opts: &OptOptions) -> bool {
+    opts.method == Method::Ep
+        && !base.skipped_low_reuse
+        && base.used_special.is_none()
+        && base.partition.k == opts.k
+}
+
+/// `optimize_graph` for a delta request: refine `base` onto `post` (the
+/// post-delta graph) instead of partitioning from scratch.
+/// `new_of_old_edge` is the edge-id map from `graph::delta::apply_delta`.
+pub fn optimize_delta(
+    base: &OptimizedSchedule,
+    post: &Graph,
+    new_of_old_edge: &[u32],
+    opts: &OptOptions,
+) -> (OptimizedSchedule, OptBreakdown) {
+    optimize_delta_checked(base, post, new_of_old_edge, opts, &|| false)
+        .expect("never-cancel run cannot be cancelled")
+}
+
+/// `optimize_delta` with cooperative cancellation at the same stage
+/// boundaries as `optimize_graph_checked`.
+pub fn optimize_delta_checked(
+    base: &OptimizedSchedule,
+    post: &Graph,
+    new_of_old_edge: &[u32],
+    opts: &OptOptions,
+    cancel: &dyn Fn() -> bool,
+) -> Result<(OptimizedSchedule, OptBreakdown), Cancelled> {
+    let t0 = Instant::now();
+    let mut bd = OptBreakdown::default();
+    if cancel() {
+        return Err(Cancelled);
+    }
+
+    // 1./2. reuse check and special-pattern shortcut behave exactly as
+    // in a cold run — if either fires on the post-delta graph, the
+    // result must match what an inline request would have produced, so
+    // delegate the whole remainder to the cold pipeline (its own entry
+    // cancel check is a no-op we already passed).
+    let t = Instant::now();
+    let enough_reuse = stats::has_enough_reuse(post, opts.reuse_threshold);
+    bd.reuse_check = t.elapsed();
+    if cancel() {
+        return Err(Cancelled);
+    }
+    let special_hit = if opts.use_special_patterns {
+        let t = Instant::now();
+        let detected = crate::partition::special::detect(post);
+        bd.special_detect = t.elapsed();
+        detected.is_some()
+    } else {
+        false
+    };
+    if cancel() {
+        return Err(Cancelled);
+    }
+    if !enough_reuse || special_hit || !refinable(base, opts) {
+        // shortcut fired or the base can't seed refinement — run the
+        // cold pipeline (it redoes the two cheap checks; their cost is
+        // noise next to the partition stage it decides about)
+        return super::optimizer::optimize_graph_checked(post, opts, cancel);
+    }
+
+    // 3. warm-start partition stage: seed from the base, boundary-FM
+    let t = Instant::now();
+    let ep_opts = ep::EpOpts {
+        vp: crate::partition::vertex::VpOpts {
+            seed: opts.seed,
+            threads: opts.threads,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut partition = incremental::refine_from(&base.partition, new_of_old_edge, post, &ep_opts);
+    if let Some(cap) = opts.block_cap {
+        ep::rebalance_to_cap(post, &mut partition, cap);
+    }
+    bd.partition = t.elapsed();
+    if cancel() {
+        return Err(Cancelled);
+    }
+    let t = Instant::now();
+    let layout = cpack::cpack_graph(post, &partition);
+    bd.layout = t.elapsed();
+    if cancel() {
+        return Err(Cancelled);
+    }
+    let t = Instant::now();
+    let quality = quality::vertex_cut_cost(post, &partition);
+    bd.quality = t.elapsed();
+    bd.total = t0.elapsed();
+    let sched = OptimizedSchedule {
+        layout,
+        balance: quality::balance_factor(&partition),
+        partition,
+        quality,
+        partition_time: bd.total,
+        used_special: None,
+        skipped_low_reuse: false,
+    };
+    Ok((sched, bd))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::optimizer::optimize_graph;
+    use crate::graph::delta::{apply_delta, EdgeDelta};
+    use crate::graph::gen;
+
+    fn setup(k: usize) -> (Graph, OptimizedSchedule, OptOptions) {
+        let g = gen::cfd_mesh(30, 30, 1);
+        let opts = OptOptions { k, ..Default::default() };
+        let base = optimize_graph(&g, &opts);
+        (g, base, opts)
+    }
+
+    fn delta(g: &Graph) -> EdgeDelta {
+        EdgeDelta {
+            add_edges: vec![(0, 7), (11, 200)],
+            remove_edges: vec![g.edges[1], g.edges[g.m() / 2]],
+        }
+    }
+
+    #[test]
+    fn delta_run_produces_a_full_schedule() {
+        let (g, base, opts) = setup(8);
+        let (post, map) = apply_delta(&g, &delta(&g)).unwrap();
+        let (sched, bd) = optimize_delta(&base, &post, &map, &opts);
+        assert_eq!(sched.partition.assign.len(), post.m());
+        assert!(sched.layout.is_valid());
+        assert!(!sched.skipped_low_reuse);
+        assert!(sched.used_special.is_none());
+        assert_eq!(bd.total, sched.partition_time);
+        // quality within sight of a cold run on the same graph
+        let cold = optimize_graph(&post, &opts);
+        assert!(
+            (sched.quality as f64) <= (cold.quality as f64) * 1.25 + 4.0,
+            "delta quality {} vs cold {}",
+            sched.quality,
+            cold.quality
+        );
+    }
+
+    #[test]
+    fn delta_run_is_deterministic_across_threads() {
+        let (g, base, opts) = setup(6);
+        let (post, map) = apply_delta(&g, &delta(&g)).unwrap();
+        let o1 = OptOptions { threads: 1, ..opts.clone() };
+        let om = OptOptions { threads: 0, ..opts.clone() };
+        let (a, _) = optimize_delta(&base, &post, &map, &o1);
+        let (b, _) = optimize_delta(&base, &post, &map, &om);
+        assert_eq!(a.partition.assign, b.partition.assign);
+        assert_eq!(a.layout.new_of_old, b.layout.new_of_old);
+        assert_eq!(a.quality, b.quality);
+    }
+
+    #[test]
+    fn unrefinable_base_falls_back_to_cold_pipeline() {
+        let (g, base, opts) = setup(8);
+        let (post, map) = apply_delta(&g, &delta(&g)).unwrap();
+        // k mismatch: the cached 8-way assignment can't seed a 4-way run
+        let opts4 = OptOptions { k: 4, ..opts.clone() };
+        assert!(!refinable(&base, &opts4));
+        let (warm, _) = optimize_delta(&base, &post, &map, &opts4);
+        let cold = optimize_graph(&post, &opts4);
+        assert_eq!(warm.partition.assign, cold.partition.assign);
+        assert_eq!(warm.quality, cold.quality);
+    }
+
+    #[test]
+    fn shortcut_stages_match_inline_requests() {
+        // a post graph that trips the special-pattern shortcut must
+        // produce exactly what an inline request would
+        let g = gen::grid_mesh(20, 20);
+        let opts = OptOptions { k: 4, ..Default::default() };
+        let base = optimize_graph(&g, &opts);
+        // removing and re-adding the same edge keeps the grid a grid
+        let e = g.edges[5];
+        let d = EdgeDelta { add_edges: vec![e], remove_edges: vec![e] };
+        let (post, map) = apply_delta(&g, &d).unwrap();
+        let (warm, _) = optimize_delta(&base, &post, &map, &opts);
+        let cold = optimize_graph(&post, &opts);
+        assert_eq!(warm.used_special, cold.used_special);
+        assert_eq!(warm.partition.assign, cold.partition.assign);
+    }
+
+    #[test]
+    fn cancellation_respects_stage_boundaries() {
+        let (g, base, opts) = setup(8);
+        let (post, map) = apply_delta(&g, &delta(&g)).unwrap();
+        assert_eq!(
+            optimize_delta_checked(&base, &post, &map, &opts, &|| true).unwrap_err(),
+            Cancelled
+        );
+    }
+}

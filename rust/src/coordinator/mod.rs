@@ -7,14 +7,18 @@
 //! * `cg` — the end-to-end conjugate-gradient driver wiring PJRT
 //!   execution, the optimizer, and the GPU simulator together.
 //! * `splitting` — §4.2 kernel splitting for single-launch kernels.
+//! * `delta` — the pipeline with a warm-start partition stage for
+//!   dynamic-graph (edge-delta) requests (PR 9).
 
 pub mod adaptive;
 pub mod cg;
+pub mod delta;
 pub mod optimizer;
 pub mod splitting;
 
 pub use adaptive::{AdaptiveController, Choice};
 pub use cg::{run_cg, CgReport, CgRunConfig};
+pub use delta::{optimize_delta, optimize_delta_checked};
 pub use optimizer::{
     optimize_graph, optimize_graph_checked, optimize_graph_with_breakdown, AsyncOptimizer,
     Cancelled, OptBreakdown, OptOptions, OptimizedSchedule,

@@ -1,0 +1,204 @@
+//! Edge deltas: the canonical mutation semantics for dynamic graphs.
+//!
+//! The serving layer's `{"base": <fingerprint>, "delta": {...}}` request
+//! (PR 9) resolves a cached base graph and applies an edge delta to it;
+//! the resulting graph is fingerprinted and cached like any inline
+//! request.  For that sharing to be bit-exact — a delta-derived cache
+//! entry and the equivalent inline full-graph request MUST collide on
+//! one fingerprint — the delta application itself has to be canonical.
+//! This module is that single definition; every layer (server, client,
+//! tests, benches) applies deltas through it.
+//!
+//! ## Semantics
+//!
+//! * The vertex set is fixed: `n` never changes, and every endpoint in
+//!   the delta must be `< n`.  (Data objects are the address space; a
+//!   workload that grows it is a new base, not a delta.)
+//! * `remove_edges` go first.  Each `(u, v)` pair deletes exactly one
+//!   edge of the base: the lowest-id not-yet-removed edge stored as
+//!   `(u, v)`, else the lowest-id not-yet-removed edge stored as
+//!   `(v, u)`.  Orientation-exact-first makes removal deterministic on
+//!   multigraphs; a pair that matches nothing is an error (the caller's
+//!   view of the base has diverged — failing loudly beats silently
+//!   serving a schedule for a different graph).
+//! * Surviving edges are compacted, KEEPING their relative edge-id
+//!   order — edge ids are schedule slots, so order is semantic
+//!   (`service::fingerprint` hashes it).
+//! * `add_edges` are appended after the survivors, in request order.
+//!
+//! The returned `new_of_old` map (old edge id → new edge id, or
+//! [`REMOVED`] for deleted edges) is what lets the incremental
+//! re-partitioner (`partition::incremental`) carry the cached block
+//! assignment over to the surviving tasks.
+
+use super::csr::Graph;
+
+/// `new_of_old[e] == REMOVED` marks a base edge deleted by the delta.
+pub const REMOVED: u32 = u32::MAX;
+
+/// An edge delta: additions and removals over a base graph's fixed
+/// vertex set.  Plain data — built by the protocol layer, the CLI, and
+/// tests alike.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct EdgeDelta {
+    pub add_edges: Vec<(u32, u32)>,
+    pub remove_edges: Vec<(u32, u32)>,
+}
+
+impl EdgeDelta {
+    pub fn is_empty(&self) -> bool {
+        self.add_edges.is_empty() && self.remove_edges.is_empty()
+    }
+
+    /// Total number of edge mutations — the serving layer bounds this.
+    pub fn len(&self) -> usize {
+        self.add_edges.len() + self.remove_edges.len()
+    }
+}
+
+/// Apply `delta` to `base` under the module-doc semantics.  Returns the
+/// post-delta graph plus the `new_of_old` edge-id map.  Errors (with a
+/// human-readable reason) on an endpoint out of range or a removal that
+/// matches no remaining edge; an error leaves no partial product.
+pub fn apply_delta(base: &Graph, delta: &EdgeDelta) -> Result<(Graph, Vec<u32>), String> {
+    let n = base.n as u32;
+    for &(u, v) in delta.add_edges.iter().chain(&delta.remove_edges) {
+        if u >= n || v >= n {
+            return Err(format!("delta endpoint ({u}, {v}) out of range for n={n}"));
+        }
+    }
+    let mut removed = vec![false; base.m()];
+    for &(u, v) in &delta.remove_edges {
+        // lowest-id live edge stored exactly (u, v); else stored (v, u).
+        // incident(u) covers both orientations (it lists every edge
+        // touching u), so one O(deg u) scan finds both candidates.
+        let mut exact = REMOVED;
+        let mut swapped = REMOVED;
+        for &(e, other) in base.incident(u) {
+            if other != v || removed[e as usize] {
+                continue;
+            }
+            if base.edges[e as usize] == (u, v) {
+                if e < exact {
+                    exact = e;
+                }
+            } else if e < swapped {
+                swapped = e;
+            }
+        }
+        let hit = if exact != REMOVED { exact } else { swapped };
+        if hit == REMOVED {
+            return Err(format!("remove ({u}, {v}) matches no remaining edge"));
+        }
+        removed[hit as usize] = true;
+    }
+    let survivors = base.m() - delta.remove_edges.len();
+    let mut edges = Vec::with_capacity(survivors + delta.add_edges.len());
+    let mut new_of_old = vec![REMOVED; base.m()];
+    for (e, &pair) in base.edges.iter().enumerate() {
+        if !removed[e] {
+            new_of_old[e] = edges.len() as u32;
+            edges.push(pair);
+        }
+    }
+    edges.extend_from_slice(&delta.add_edges);
+    Ok((Graph::from_edges(base.n, edges), new_of_old))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> Graph {
+        // multigraph with a duplicate pair and a self-loop
+        Graph::from_edges(5, vec![(0, 1), (1, 2), (2, 1), (1, 2), (3, 3), (3, 4)])
+    }
+
+    #[test]
+    fn add_appends_in_request_order_and_survivors_keep_order() {
+        let g = base();
+        let d = EdgeDelta { add_edges: vec![(4, 0), (0, 2)], remove_edges: vec![] };
+        let (post, map) = apply_delta(&g, &d).unwrap();
+        assert_eq!(post.n, g.n);
+        assert_eq!(&post.edges[..g.m()], &g.edges[..]);
+        assert_eq!(&post.edges[g.m()..], &[(4, 0), (0, 2)]);
+        assert_eq!(map, (0..g.m() as u32).collect::<Vec<_>>());
+        post.validate().unwrap();
+    }
+
+    #[test]
+    fn remove_prefers_exact_orientation_then_lowest_id() {
+        let g = base();
+        // (1, 2) must take edge 1 (stored exactly), not edge 2 (stored
+        // (2, 1)) even though both touch the pair
+        let d = EdgeDelta { add_edges: vec![], remove_edges: vec![(1, 2)] };
+        let (post, map) = apply_delta(&g, &d).unwrap();
+        assert_eq!(map[1], REMOVED);
+        assert_eq!(post.edges, vec![(0, 1), (2, 1), (1, 2), (3, 3), (3, 4)]);
+        // swapped orientation falls back to the stored-(1,2) duplicates
+        // in id order: first (2,1) request eats edge 2
+        let d = EdgeDelta { add_edges: vec![], remove_edges: vec![(2, 1), (2, 1)] };
+        let (post, map) = apply_delta(&g, &d).unwrap();
+        assert_eq!((map[1], map[2]), (REMOVED, REMOVED));
+        assert_eq!(post.edges, vec![(0, 1), (1, 2), (3, 3), (3, 4)]);
+    }
+
+    #[test]
+    fn removing_duplicates_one_at_a_time() {
+        let g = base();
+        // three parallel (1,2)-ish edges: 1, 2, 3; three removals drain
+        // them all, a fourth errors
+        let d = EdgeDelta {
+            add_edges: vec![],
+            remove_edges: vec![(1, 2), (1, 2), (1, 2)],
+        };
+        let (post, _) = apply_delta(&g, &d).unwrap();
+        assert_eq!(post.edges, vec![(0, 1), (3, 3), (3, 4)]);
+        let d = EdgeDelta {
+            add_edges: vec![],
+            remove_edges: vec![(1, 2), (1, 2), (1, 2), (1, 2)],
+        };
+        assert!(apply_delta(&g, &d).is_err());
+    }
+
+    #[test]
+    fn self_loop_removal_and_emptied_adjacency() {
+        let g = base();
+        // empty vertex 3's adjacency entirely
+        let d = EdgeDelta { add_edges: vec![], remove_edges: vec![(3, 3), (3, 4)] };
+        let (post, map) = apply_delta(&g, &d).unwrap();
+        assert_eq!(post.incident(3), &[]);
+        assert_eq!((map[4], map[5]), (REMOVED, REMOVED));
+        assert_eq!(post.m(), 4);
+        post.validate().unwrap();
+    }
+
+    #[test]
+    fn out_of_range_and_unmatched_are_errors() {
+        let g = base();
+        let d = EdgeDelta { add_edges: vec![(0, 5)], remove_edges: vec![] };
+        assert!(apply_delta(&g, &d).unwrap_err().contains("out of range"));
+        let d = EdgeDelta { add_edges: vec![], remove_edges: vec![(0, 4)] };
+        assert!(apply_delta(&g, &d).unwrap_err().contains("matches no remaining edge"));
+    }
+
+    #[test]
+    fn delta_equals_inline_construction() {
+        // the sharing contract: apply_delta's product is bit-identical
+        // (n, edges, order) to building the post graph inline
+        let g = base();
+        let d = EdgeDelta { add_edges: vec![(0, 4)], remove_edges: vec![(1, 2), (3, 3)] };
+        let (post, _) = apply_delta(&g, &d).unwrap();
+        let inline = Graph::from_edges(5, vec![(0, 1), (2, 1), (1, 2), (3, 4), (0, 4)]);
+        assert_eq!(post.n, inline.n);
+        assert_eq!(post.edges, inline.edges);
+    }
+
+    #[test]
+    fn empty_delta_is_identity() {
+        let g = base();
+        let (post, map) = apply_delta(&g, &EdgeDelta::default()).unwrap();
+        assert_eq!(post.edges, g.edges);
+        assert_eq!(map, (0..g.m() as u32).collect::<Vec<_>>());
+    }
+}

@@ -4,9 +4,13 @@
 //! vertices = data objects, edges = tasks.  `gen` synthesizes the
 //! structural families the paper evaluates on; `stats` computes the
 //! degree-distribution analyses of Fig 4/5 and the reuse go/no-go check.
+//! `delta` defines the canonical edge-delta semantics dynamic-graph
+//! requests are resolved through.
 
 pub mod csr;
+pub mod delta;
 pub mod gen;
 pub mod stats;
 
 pub use csr::{EdgeId, Graph, VertexId};
+pub use delta::EdgeDelta;

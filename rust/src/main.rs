@@ -13,6 +13,7 @@
 //!   epgraph client    [--addr HOST:PORT | --cluster HOST:PORT,...]
 //!                     [--op optimize|stats|health|shutdown]
 //!                     [--gen SPEC | --matrix NAME]
+//!                     [--base FINGERPRINT --delta-add u:v,... --delta-remove u:v,...]
 //!                     [--k N] [--seed S] [--repeat N] [--concurrency N] [--verify]
 //!                     [--pipeline N] [--deadline-ms N] [--max-retries N]
 //!                     [--retry-budget-ms N]
@@ -63,6 +64,25 @@ fn get_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> usiz
     flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// Parse a `--delta-add`/`--delta-remove` edge list: comma-separated
+/// `u:v` pairs (`"3:17,4:9"`).  Absent flag means an empty side.
+fn parse_edge_pairs(spec: Option<&str>) -> Result<Vec<(u32, u32)>> {
+    let Some(spec) = spec else { return Ok(Vec::new()) };
+    spec.split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            let (u, v) = s
+                .split_once(':')
+                .ok_or_else(|| anyhow!("edge '{s}' is not of the form u:v"))?;
+            Ok((
+                u.trim().parse().map_err(|_| anyhow!("bad endpoint in '{s}'"))?,
+                v.trim().parse().map_err(|_| anyhow!("bad endpoint in '{s}'"))?,
+            ))
+        })
+        .collect()
+}
+
 fn load_matrix(spec: &str, seed: u64) -> Result<Coo> {
     if spec.ends_with(".mtx") {
         return matrix_market::read_matrix_market_file(spec).map_err(|e| anyhow!("{e}"));
@@ -100,7 +120,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                  epgraph bench-compare <baseline.json> <current.json> [--tol 0.25]\n  \
                  epgraph artifacts [--outdir DIR] [--configs t0,s1,m1]\n  \
                  epgraph serve [--port 7878] [--threads 0] [--partition-threads 1] [--queue-cap 64] [--cache-mb 64] [--shards 8]\n                [--snapshot cache.snap] [--snapshot-every 64] [--snapshot-keep 3] [--snapshot-interval 0]\n                [--no-degrade] [--chaos seed=7,worker_panic=0.1,...] [--matrix-dir DIR]\n                [--peers 127.0.0.1:7878,127.0.0.1:7879,...]\n  \
-                 epgraph client [--addr 127.0.0.1:7878 | --cluster 127.0.0.1:7878,...] [--op optimize|stats|health|shutdown]\n                 [--gen cfd_mesh:24,24,1 | --matrix NAME]\n                 [--k N] [--seed S] [--method M] [--repeat 1] [--concurrency 1] [--verify] [--pipeline N]\n                 [--deadline-ms N] [--max-retries 8] [--retry-budget-ms 30000]\n  \
+                 epgraph client [--addr 127.0.0.1:7878 | --cluster 127.0.0.1:7878,...] [--op optimize|stats|health|shutdown]\n                 [--gen cfd_mesh:24,24,1 | --matrix NAME]\n                 [--base FINGERPRINT --delta-add u:v,u:v,... --delta-remove u:v,...]\n                 [--k N] [--seed S] [--method M] [--repeat 1] [--concurrency 1] [--verify] [--pipeline N]\n                 [--deadline-ms N] [--max-retries 8] [--retry-budget-ms 30000]\n  \
                  epgraph info"
             );
             Ok(())
@@ -399,7 +419,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
 
 /// Drive a running `epgraph serve`: fire optimize requests (optionally
 /// concurrent and repeated, with verification against a direct
-/// `optimize_graph` run), or hit the stats/health/shutdown endpoints.
+/// `optimize_graph` run), send delta requests against an already-served
+/// schedule (`--base <fingerprint> --delta-add/--delta-remove`, raw
+/// JSON responses printed for scripting), or hit the
+/// stats/health/shutdown endpoints.
 /// `--cluster HOST:PORT,...` hashes the workload client-side with the
 /// same ring the fleet uses and talks straight to the owner (skipping
 /// the server-side forwarding hop); stats/health/shutdown fan out to
@@ -466,16 +489,6 @@ fn cmd_client(flags: &HashMap<String, String>) -> Result<()> {
     }
     anyhow::ensure!(op == "optimize", "unknown --op '{op}'");
 
-    let spec = if let Some(name) = flags.get("matrix") {
-        anyhow::ensure!(
-            !flags.contains_key("gen"),
-            "--matrix and --gen are mutually exclusive"
-        );
-        proto::GraphSpec::Matrix { name: name.clone() }
-    } else {
-        let spec_str = flags.get("gen").map(String::as_str).unwrap_or("cfd_mesh:24,24,1");
-        proto::GraphSpec::parse_cli(spec_str).map_err(|e| anyhow!("--gen: {e}"))?
-    };
     let mut opts = OptOptions { k: get_usize(flags, "k", 8), ..Default::default() };
     if let Some(s) = flags.get("seed") {
         opts.seed = s.parse().map_err(|_| anyhow!("bad --seed"))?;
@@ -494,6 +507,59 @@ fn cmd_client(flags: &HashMap<String, String>) -> Result<()> {
         .max_retries(get_usize(flags, "max-retries", 8) as u32)
         .budget(std::time::Duration::from_millis(get_usize(flags, "retry-budget-ms", 30_000) as u64))
         .build();
+
+    // --base: a delta request against an already-served schedule.  The
+    // raw JSON responses are printed one per line — the CI delta-smoke
+    // greps them for the served fingerprint (to chain the next delta on
+    // it) and for schedule identity with the equivalent inline request.
+    if flags.contains_key("base")
+        || flags.contains_key("delta-add")
+        || flags.contains_key("delta-remove")
+    {
+        let base_hex = flags
+            .get("base")
+            .ok_or_else(|| anyhow!("--delta-add/--delta-remove need --base <fingerprint>"))?;
+        let base = epgraph::service::Fingerprint::from_hex(base_hex).ok_or_else(|| {
+            anyhow!("--base must be the 32-hex-digit fingerprint of a served schedule")
+        })?;
+        for bad in ["gen", "matrix", "verify", "pipeline", "cluster"] {
+            anyhow::ensure!(
+                !flags.contains_key(bad),
+                "--base and --{bad} are mutually exclusive — a delta names its graph by base \
+                 fingerprint, and fleets route deltas server-side (chains live with the base's \
+                 owner, so point --addr at any member)"
+            );
+        }
+        let delta = epgraph::graph::EdgeDelta {
+            add_edges: parse_edge_pairs(flags.get("delta-add").map(String::as_str))?,
+            remove_edges: parse_edge_pairs(flags.get("delta-remove").map(String::as_str))?,
+        };
+        anyhow::ensure!(!delta.is_empty(), "--base needs --delta-add and/or --delta-remove");
+        let line = proto::delta_request(base, &delta, &opts, deadline_ms).dump();
+        let mut client = epgraph::service::Client::connect(addr.as_str())?;
+        let mut backoff = epgraph::service::Backoff::new(retry_policy);
+        for _ in 0..repeat {
+            let resp = client.request_with_retry(&line, &mut backoff)?;
+            println!("{}", resp.dump());
+            anyhow::ensure!(
+                resp.get("ok").and_then(|v| v.as_bool()) == Some(true),
+                "delta request failed: {}",
+                resp.get("error").and_then(|v| v.as_str()).unwrap_or("unknown error")
+            );
+        }
+        return Ok(());
+    }
+
+    let spec = if let Some(name) = flags.get("matrix") {
+        anyhow::ensure!(
+            !flags.contains_key("gen"),
+            "--matrix and --gen are mutually exclusive"
+        );
+        proto::GraphSpec::Matrix { name: name.clone() }
+    } else {
+        let spec_str = flags.get("gen").map(String::as_str).unwrap_or("cfd_mesh:24,24,1");
+        proto::GraphSpec::parse_cli(spec_str).map_err(|e| anyhow!("--gen: {e}"))?
+    };
 
     // --cluster: hash the workload with the fleet's own ring and talk
     // to the owner directly.  Routing is an optimization, not a

@@ -8,12 +8,14 @@
 //! * `default_sched` — the GPU's default contiguous schedule.
 //! * `special` — preset schedules for special graph shapes (§4.1).
 //! * `quality` — vertex-cut cost and balance metrics (Definition 2).
+//! * `incremental` — warm-start refinement after an edge delta (PR 9).
 //! * `reference` — the retained pre-optimization (seed) pipeline, the
 //!   fixed baseline for perf/parity tests and benches (PERF.md).
 
 pub mod default_sched;
 pub mod ep;
 pub mod hypergraph;
+pub mod incremental;
 pub mod powergraph;
 pub mod quality;
 pub mod reference;

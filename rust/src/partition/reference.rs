@@ -70,7 +70,7 @@ pub fn from_edges_naive(n: usize, vwgt: Vec<i64>, edges: &[(u32, u32, i64)]) -> 
         }
         new_xadj[v + 1] = new_adjncy.len() as u32;
     }
-    WGraph { n, vwgt, xadj: new_xadj, adjncy: new_adjncy, adjwgt: new_adjwgt }
+    WGraph::from_parts(n, vwgt, new_xadj, new_adjncy, new_adjwgt)
 }
 
 /// Seed `ep::task_graph`: edge-tuple construction + naive WGraph build.

@@ -39,6 +39,11 @@ pub struct WGraph {
     pub xadj: Vec<u32>,
     pub adjncy: Vec<u32>,
     pub adjwgt: Vec<i64>,
+    /// Cached weighted degree per vertex (sum of its incident `adjwgt`).
+    /// Lets uncoarsening seed an interior vertex's connectivity row in
+    /// O(1) — its whole neighborhood weight sits in one block — which is
+    /// what makes projected level entry O(boundary) (see `project_conn`).
+    pub wdeg: Vec<i64>,
 }
 
 impl WGraph {
@@ -73,7 +78,7 @@ impl WGraph {
             adjwgt[cursor[v as usize] as usize] = w;
             cursor[v as usize] += 1;
         }
-        let mut g = WGraph { n, vwgt, xadj, adjncy, adjwgt };
+        let mut g = WGraph { n, vwgt, xadj, adjncy, adjwgt, wdeg: Vec::new() };
         g.merge_fused();
         g
     }
@@ -90,9 +95,34 @@ impl WGraph {
     ) -> Self {
         assert_eq!(vwgt.len(), n);
         assert_eq!(xadj.len(), n + 1);
-        let mut g = WGraph { n, vwgt, xadj, adjncy, adjwgt };
+        let mut g = WGraph { n, vwgt, xadj, adjncy, adjwgt, wdeg: Vec::new() };
         g.merge_fused();
         g
+    }
+
+    /// Assemble from already-merged CSR arrays (no duplicate neighbor
+    /// entries, no self-loops), deriving the cached weighted degrees.
+    /// The construction path for contraction and subgraph extraction.
+    pub fn from_parts(
+        n: usize,
+        vwgt: Vec<i64>,
+        xadj: Vec<u32>,
+        adjncy: Vec<u32>,
+        adjwgt: Vec<i64>,
+    ) -> Self {
+        let mut g = WGraph { n, vwgt, xadj, adjncy, adjwgt, wdeg: Vec::new() };
+        g.rebuild_wdeg();
+        g
+    }
+
+    /// Recompute `wdeg` from the (merged) adjacency.
+    fn rebuild_wdeg(&mut self) {
+        let mut wdeg = std::mem::take(&mut self.wdeg);
+        wdeg.clear();
+        wdeg.extend((0..self.n).map(|v| {
+            self.adjwgt[self.xadj[v] as usize..self.xadj[v + 1] as usize].iter().sum::<i64>()
+        }));
+        self.wdeg = wdeg;
     }
 
     /// Merge duplicate entries in each adjacency list in place, dropping
@@ -130,6 +160,7 @@ impl WGraph {
         self.adjncy.truncate(w);
         self.adjwgt.truncate(w);
         self.xadj = new_xadj;
+        self.rebuild_wdeg();
     }
 
     #[inline]
@@ -232,6 +263,12 @@ pub struct VpOpts {
     /// Worker threads for the parallel phases: 0 = one per core,
     /// 1 = sequential.  Results are identical for every value.
     pub threads: usize,
+    /// Project the k-way connectivity arena through the cmap on
+    /// uncoarsening (O(boundary) level entry) instead of rebuilding it
+    /// per level (O(n + m)).  Results are bit-identical either way
+    /// (pinned by `projected_conn_matches_rebuild`); the switch exists
+    /// for that pin and for ablation.
+    pub project_conn: bool,
 }
 
 impl Default for VpOpts {
@@ -244,6 +281,7 @@ impl Default for VpOpts {
             init_tries: 4,
             matching: Matching::HeavyEdge,
             threads: 0,
+            project_conn: true,
         }
     }
 }
@@ -598,7 +636,7 @@ fn contract(g: &WGraph, cmap: &[u32], nc: usize, threads: usize, ws: &mut VpWork
         ws.pos = pos;
     }
 
-    WGraph { n: nc, vwgt, xadj: cxadj, adjncy, adjwgt }
+    WGraph::from_parts(nc, vwgt, cxadj, adjncy, adjwgt)
 }
 
 // ------------------------------------------------------------ gain buckets
@@ -908,12 +946,23 @@ pub fn partition_kway(g: &WGraph, k: usize, opts: &VpOpts) -> Vec<u32> {
             let part_ref = &part;
             par::fill_indexed(threads, &mut fine, |v| part_ref[cmap[v] as usize]);
         }
+        // Level entry: the coarse arena was maintained exactly through
+        // the refine pass that just ran, so it can be PROJECTED through
+        // the cmap — interior coarse vertices (the vast majority) seed
+        // their fine rows in O(1) each, only boundary-parent vertices
+        // pay the full build probe.  `part` still holds the coarse
+        // labels here; `fine` the projected ones.
+        if opts.project_conn && ws.conn_valid && ws.conn_sig == (cur.n, cur.adjncy.len(), k) {
+            project_conn(&finer, &cmap, &part, &fine, k, threads, &mut ws);
+            ws.conn_sig = (finer.n, finer.adjncy.len(), k);
+        } else {
+            // rebuild path: the projected partition lives on a different
+            // graph — the pooled arena is stale (the signature check
+            // would catch this too, since level sizes differ; the
+            // explicit call is the contract, not an optimization)
+            ws.invalidate_conn();
+        }
         part = fine;
-        // the projected partition lives on a different graph — the
-        // pooled arena is stale (the signature check would catch this
-        // too, since level sizes differ; the explicit call is the
-        // contract, not an optimization)
-        ws.invalidate_conn();
         kway_refine_ws(&finer, &mut part, k, opts, threads, &mut loads, &mut ws);
         cur = finer;
     }
@@ -1092,6 +1141,125 @@ fn build_conn(g: &WGraph, part: &[u32], k: usize, threads: usize, ws: &mut VpWor
             let mut rest_b: &mut [u32] = &mut ws.conn_blk;
             let mut rest_w: &mut [i64] = &mut ws.conn_wgt;
             let mut rest_l: &mut [u32] = &mut ws.conn_len;
+            let mut off = 0usize;
+            for &(lo, hi) in &ranges {
+                let end = conn_ptr[hi] as usize;
+                let (cb, tb) = std::mem::take(&mut rest_b).split_at_mut(end - off);
+                let (cw, tw) = std::mem::take(&mut rest_w).split_at_mut(end - off);
+                let (cl, tl) = std::mem::take(&mut rest_l).split_at_mut(hi - lo);
+                rest_b = tb;
+                rest_w = tw;
+                rest_l = tl;
+                off = end;
+                let fill = &fill;
+                s.spawn(move || fill(cb, cw, cl, lo, hi));
+            }
+        });
+    }
+}
+
+/// Project the maintained coarse connectivity arena onto the next finer
+/// level.  A coarse vertex whose conn row holds a single block — its
+/// own — is INTERIOR: every fine vertex it contains has its entire
+/// neighborhood inside that block, so the fine row is exactly
+/// `[(block, wdeg)]` and costs O(1) to emit (cached `finer.wdeg`).
+/// Only fine vertices under a BOUNDARY coarse parent run `build_conn`'s
+/// probe loop, making level entry O(boundary) instead of O(n + m).
+/// Soundness: a fine vertex with a cross-block neighbor implies a
+/// cross-block coarse edge at its parent, so the parent's row shows a
+/// foreign block — interior classification can never hide a boundary
+/// vertex.  Rows are written with `build_conn`'s exact layout and
+/// contents (capacity min(deg, k), first-seen block order, i64 sums),
+/// so downstream refinement is bit-identical to the rebuild path.
+/// Stale arena cells beyond each row's length are never read (every
+/// consumer bounds reads by `conn_len`), so unlike a rebuild the fill
+/// skips the O(arena) zeroing too.
+fn project_conn(
+    finer: &WGraph,
+    cmap: &[u32],
+    coarse_part: &[u32],
+    fine_part: &[u32],
+    k: usize,
+    threads: usize,
+    ws: &mut VpWorkspace,
+) {
+    // classify coarse vertices off the maintained arena — exact, because
+    // conn_shift_one eagerly drops zero-weight entries
+    let nc = coarse_part.len();
+    let mut boundary = vec![false; nc];
+    for c in 0..nc {
+        let off = ws.conn_ptr[c] as usize;
+        let l = ws.conn_len[c] as usize;
+        boundary[c] = !(l == 0 || (l == 1 && ws.conn_blk[off] == coarse_part[c]));
+    }
+    // fine CSR offsets, same capacity rule as build_conn
+    let n = finer.n;
+    reset(&mut ws.conn_ptr, n + 1, 0);
+    for v in 0..n {
+        let deg = ((finer.xadj[v + 1] - finer.xadj[v]) as usize).min(k) as u32;
+        ws.conn_ptr[v + 1] = ws.conn_ptr[v] + deg;
+    }
+    let total = ws.conn_ptr[n] as usize;
+    if ws.conn_blk.len() < total {
+        ws.conn_blk.resize(total, 0);
+        ws.conn_wgt.resize(total, 0);
+    }
+    if ws.conn_len.len() < n {
+        ws.conn_len.resize(n, 0);
+    }
+
+    let conn_ptr = &ws.conn_ptr;
+    let boundary = &boundary;
+    let fill = |blk: &mut [u32], wgt: &mut [i64], len: &mut [u32], lo: usize, hi: usize| {
+        let base = conn_ptr[lo] as usize;
+        for v in lo..hi {
+            let off = conn_ptr[v] as usize - base;
+            if !boundary[cmap[v] as usize] {
+                // interior parent: the whole neighborhood shares one block
+                if finer.xadj[v + 1] > finer.xadj[v] {
+                    blk[off] = fine_part[v];
+                    wgt[off] = finer.wdeg[v];
+                    len[v - lo] = 1;
+                } else {
+                    len[v - lo] = 0;
+                }
+                continue;
+            }
+            // boundary parent: build_conn's exact probe loop
+            let mut l = 0usize;
+            for (u, w) in finer.neighbors(v as u32) {
+                let b = fine_part[u as usize];
+                let mut i = 0;
+                while i < l && blk[off + i] != b {
+                    i += 1;
+                }
+                if i < l {
+                    wgt[off + i] += w;
+                } else {
+                    blk[off + l] = b;
+                    wgt[off + l] = w;
+                    l += 1;
+                }
+            }
+            len[v - lo] = l as u32;
+        }
+    };
+    let t = par::resolve_threads(threads);
+    if t <= 1 || n < par::PAR_MIN_LEN {
+        fill(
+            &mut ws.conn_blk[..total],
+            &mut ws.conn_wgt[..total],
+            &mut ws.conn_len[..n],
+            0,
+            n,
+        );
+    } else {
+        // disjoint-slice split at the same boundaries as build_conn
+        let ranges = par::chunk_ranges(n, t);
+        std::thread::scope(|s| {
+            let mut rest_b: &mut [u32] = &mut ws.conn_blk[..total];
+            let mut rest_w: &mut [i64] = &mut ws.conn_wgt[..total];
+            let mut rest_l: &mut [u32] = &mut ws.conn_len[..n];
             let mut off = 0usize;
             for &(lo, hi) in &ranges {
                 let end = conn_ptr[hi] as usize;
@@ -1518,6 +1686,26 @@ pub fn kway_balance(g: &WGraph, part: &mut [u32], k: usize, eps: f64, threads: u
     kway_balance_ws(g, part, k, eps, threads, &mut loads, &mut ws);
 }
 
+/// Balance → refine → balance on a seeded k-way partition, sharing one
+/// pooled workspace across the three calls (the arena built by the
+/// first is maintained through the rest) — the finest-level tail of
+/// `partition_kway`, exposed as the polish step for warm-start
+/// partitions (`partition::incremental::refine_from`).  Deterministic
+/// for every thread count, like its components.
+pub fn kway_polish(g: &WGraph, part: &mut [u32], k: usize, opts: &VpOpts) {
+    assert_eq!(part.len(), g.n);
+    if k <= 1 || g.n == 0 {
+        return;
+    }
+    let threads = par::resolve_threads(opts.threads);
+    let mut ws = VpWorkspace::new();
+    ws.reserve_kway(g, k);
+    let mut loads = g.block_weights(part, k, threads);
+    kway_balance_ws(g, part, k, opts.eps, threads, &mut loads, &mut ws);
+    kway_refine_ws(g, part, k, opts, threads, &mut loads, &mut ws);
+    kway_balance_ws(g, part, k, opts.eps, threads, &mut loads, &mut ws);
+}
+
 // ------------------------------------------------------ recursive bisection
 
 /// Subgraphs below this size aren't worth a second thread.
@@ -1630,7 +1818,7 @@ fn extract_side(g: &WGraph, side: &[u32], s: u32, global_ids: &[u32]) -> (WGraph
             }
         }
     }
-    (WGraph { n: ns, vwgt, xadj, adjncy, adjwgt }, ids)
+    (WGraph::from_parts(ns, vwgt, xadj, adjncy, adjwgt), ids)
 }
 
 /// Multilevel 2-way partition. Returns side (0/1) per vertex; side 0
@@ -2017,6 +2205,47 @@ mod tests {
         }
         // a path into 3 chunks cuts exactly 2 unit edges when optimal
         assert!(g.edge_cut(&part) <= 4);
+    }
+
+    #[test]
+    fn wdeg_matches_adjacency() {
+        let g = two_cliques(8);
+        for v in 0..g.n {
+            let s: i64 = g.neighbors(v as u32).map(|(_, w)| w).sum();
+            assert_eq!(g.wdeg[v], s);
+        }
+    }
+
+    /// Pin for the O(boundary) level entry: projecting the connectivity
+    /// arena through the cmap must be bit-identical to rebuilding it
+    /// per level, across shapes, k values, and thread counts.
+    #[test]
+    fn projected_conn_matches_rebuild() {
+        let mut state = 0x9A55_1234u64;
+        for &(n, k, mult) in &[(600usize, 4usize, 3usize), (1500, 8, 4), (900, 5, 6)] {
+            let mut edges = Vec::new();
+            for i in 0..n * mult {
+                state = state.wrapping_add(0x9E3779B97F4A7C15);
+                let h = mix64(state);
+                let u = (h % n as u64) as u32;
+                let v = ((h >> 32) % n as u64) as u32;
+                edges.push((u, v, 1 + (i % 3) as i64));
+            }
+            let g = WGraph::from_edges(n, vec![1; n], &edges);
+            let baseline = partition_kway(
+                &g,
+                k,
+                &VpOpts { seed: 9, threads: 1, project_conn: false, ..Default::default() },
+            );
+            for threads in [1, 0] {
+                let projected = partition_kway(
+                    &g,
+                    k,
+                    &VpOpts { seed: 9, threads, ..Default::default() },
+                );
+                assert_eq!(projected, baseline, "n={n} k={k} threads={threads}");
+            }
+        }
     }
 
     #[test]

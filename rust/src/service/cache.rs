@@ -48,6 +48,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::{OptBreakdown, OptimizedSchedule};
+use crate::graph::Graph;
 
 use super::fingerprint::Fingerprint;
 
@@ -56,7 +57,12 @@ use super::fingerprint::Fingerprint;
 pub struct CachedSchedule {
     pub schedule: OptimizedSchedule,
     pub breakdown: OptBreakdown,
-    /// Approximate resident size (assignment + layout arrays + headers).
+    /// The exact graph the schedule was computed for — retained (PR 9)
+    /// so a delta request can name this entry as its base and apply an
+    /// edge delta to the resident CSR without resending the graph.
+    pub graph: Arc<Graph>,
+    /// Approximate resident size (assignment + layout arrays + retained
+    /// graph + headers).
     pub bytes: usize,
     /// Recompute cost in nanoseconds (`breakdown.total`) — the currency
     /// of the admission policy: entries are worth keeping in proportion
@@ -65,14 +71,18 @@ pub struct CachedSchedule {
 }
 
 impl CachedSchedule {
-    pub fn new(schedule: OptimizedSchedule, breakdown: OptBreakdown) -> Self {
+    pub fn new(schedule: OptimizedSchedule, breakdown: OptBreakdown, graph: Arc<Graph>) -> Self {
         let bytes = std::mem::size_of::<OptimizedSchedule>()
             + schedule.partition.assign.len() * std::mem::size_of::<u32>()
             + (schedule.layout.new_of_old.len() + schedule.layout.old_of_new.len())
                 * std::mem::size_of::<u32>()
+            // retained CSR: edge pairs + incidence lists (~2 u32+u8 per
+            // endpoint) + vertex offsets — close enough for budgeting
+            + graph.m() * (8 + 16)
+            + graph.n * std::mem::size_of::<usize>()
             + 64; // map/slab entry overhead
         let cost_ns = breakdown.total.as_nanos().min(u64::MAX as u128) as u64;
-        CachedSchedule { schedule, breakdown, bytes, cost_ns }
+        CachedSchedule { schedule, breakdown, graph, bytes, cost_ns }
     }
 }
 
@@ -479,7 +489,7 @@ mod tests {
         let g = gen::path(50);
         let opts = OptOptions { k: 4, seed, use_special_patterns: false, ..Default::default() };
         let (sched, bd) = optimize_graph_with_breakdown(&g, &opts);
-        (fingerprint(&g, &opts), Arc::new(CachedSchedule::new(sched, bd)))
+        (fingerprint(&g, &opts), Arc::new(CachedSchedule::new(sched, bd, Arc::new(g))))
     }
 
     /// Same entry with a crafted recompute cost (admission tests).

@@ -21,6 +21,7 @@
 //! The low-reuse skip and the physical `block_cap` are honored — those
 //! are semantic contracts of the options, not quality knobs.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::{OptBreakdown, OptOptions, OptimizedSchedule};
@@ -87,7 +88,7 @@ fn greedy_growing(tg: &WGraph, k: usize) -> Vec<u32> {
 /// FM boundary-refinement pass + the usual cpack relayout.  Shape and
 /// provenance match the full pipeline's product, so the response
 /// renderer needs no special casing beyond the `"degraded"` tag.
-pub fn degraded_schedule(g: &Graph, opts: &OptOptions) -> CachedSchedule {
+pub fn degraded_schedule(g: &Arc<Graph>, opts: &OptOptions) -> CachedSchedule {
     let t0 = Instant::now();
     let mut bd = OptBreakdown::default();
     let k = opts.k.max(1);
@@ -111,7 +112,7 @@ pub fn degraded_schedule(g: &Graph, opts: &OptOptions) -> CachedSchedule {
             used_special: None,
             skipped_low_reuse: !enough_reuse,
         };
-        return CachedSchedule::new(sched, bd);
+        return CachedSchedule::new(sched, bd, g.clone());
     }
 
     let t = Instant::now();
@@ -150,7 +151,7 @@ pub fn degraded_schedule(g: &Graph, opts: &OptOptions) -> CachedSchedule {
         used_special: None,
         skipped_low_reuse: false,
     };
-    CachedSchedule::new(sched, bd)
+    CachedSchedule::new(sched, bd, g.clone())
 }
 
 #[cfg(test)]
@@ -165,7 +166,7 @@ mod tests {
 
     #[test]
     fn fallback_is_valid_and_deterministic() {
-        let g = gen::cfd_mesh(24, 24, 3);
+        let g = Arc::new(gen::cfd_mesh(24, 24, 3));
         let o = opts(8, 3);
         let a = degraded_schedule(&g, &o);
         let b = degraded_schedule(&g, &o);
@@ -183,7 +184,7 @@ mod tests {
     fn fallback_beats_the_identity_schedule() {
         // the degradation bound: worse than the full pipeline is fine,
         // worse than doing nothing is not
-        let g = gen::cfd_mesh(24, 24, 5);
+        let g = Arc::new(gen::cfd_mesh(24, 24, 5));
         let o = opts(8, 5);
         let degraded = degraded_schedule(&g, &o);
         let naive = crate::partition::default_sched::default_partition(g.m(), 8);
@@ -199,20 +200,20 @@ mod tests {
     #[test]
     fn fallback_honors_low_reuse_skip_and_empty_graphs() {
         // star graph: avg degree below threshold → identity schedule
-        let g = gen::complete_bipartite(4000, 1);
+        let g = Arc::new(gen::complete_bipartite(4000, 1));
         let o = OptOptions { k: 8, reuse_threshold: 2.1, ..Default::default() };
         let e = degraded_schedule(&g, &o);
         assert!(e.schedule.skipped_low_reuse);
         assert_eq!(e.schedule.layout.new_of_old[7], 7, "identity layout");
         // empty graph: degenerate but well-formed
-        let empty = Graph::from_edges(0, vec![]);
+        let empty = Arc::new(Graph::from_edges(0, vec![]));
         let e = degraded_schedule(&empty, &opts(4, 1));
         assert_eq!(e.schedule.partition.assign.len(), 0);
     }
 
     #[test]
     fn fallback_respects_block_cap() {
-        let g = gen::cfd_mesh(20, 20, 2);
+        let g = Arc::new(gen::cfd_mesh(20, 20, 2));
         let cap = g.m() / 4; // force redistribution
         let o = OptOptions { k: 8, block_cap: Some(cap), ..Default::default() };
         let e = degraded_schedule(&g, &o);

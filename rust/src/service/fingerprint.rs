@@ -36,6 +36,19 @@ impl Fingerprint {
     pub fn to_hex(&self) -> String {
         format!("{:016x}{:016x}", self.0, self.1)
     }
+
+    /// Parse the wire form back into the two lanes.  Strict inverse of
+    /// [`to_hex`](Self::to_hex): exactly 32 hex chars (either case),
+    /// anything else is `None` — delta requests name their base this way
+    /// and a malformed base must read as "unknown", never panic.
+    pub fn from_hex(s: &str) -> Option<Fingerprint> {
+        if s.len() != 32 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+            return None;
+        }
+        let a = u64::from_str_radix(&s[..16], 16).ok()?;
+        let b = u64::from_str_radix(&s[16..], 16).ok()?;
+        Some(Fingerprint(a, b))
+    }
 }
 
 impl fmt::Debug for Fingerprint {
@@ -224,5 +237,16 @@ mod tests {
         let fp = fingerprint(&g, &opts());
         assert_ne!(fp.0, fp.1);
         assert_eq!(fp.to_hex().len(), 32);
+    }
+
+    #[test]
+    fn hex_roundtrips_and_rejects_garbage() {
+        let g = gen::path(64);
+        let fp = fingerprint(&g, &opts());
+        assert_eq!(Fingerprint::from_hex(&fp.to_hex()), Some(fp));
+        assert_eq!(Fingerprint::from_hex(&fp.to_hex().to_uppercase()), Some(fp));
+        for bad in ["", "abc", &fp.to_hex()[1..], &format!("{}0", fp.to_hex()), "zz000000000000000000000000000000"] {
+            assert_eq!(Fingerprint::from_hex(bad), None, "accepted {bad:?}");
+        }
     }
 }

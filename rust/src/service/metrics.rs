@@ -89,9 +89,14 @@ impl LatencyHisto {
 
 /// Service-level request accounting.  The identity
 /// `requests == served_hit + served_miss + served_joined + served_degraded
-///              + rejected + errors + forwarded`
+///              + served_delta + rejected + errors + forwarded`
 /// holds at any quiescent point (each optimize request ends in exactly
 /// one outcome); the e2e suite asserts it against a live server.
+/// `served_delta` is a delta request's fresh-compute outcome: the base
+/// schedule seeded warm-start refinement and the result was cached under
+/// the post-delta graph's own fingerprint.  A delta request that finds
+/// that fingerprint already cached (or joins an in-flight job for it)
+/// lands in hit/joined like any other request.
 /// `forwarded` is the fleet outcome: the request was proxied to its
 /// ring owner and the owner's response relayed verbatim — this daemon
 /// never classified it hit/miss itself (the owner did, under its own
@@ -108,11 +113,11 @@ impl LatencyHisto {
 /// `stats` response.  Warm-loaded entries deliberately bypass the
 /// insertion counter, so `cache.insertions` keeps meaning "computed
 /// schedules admitted live".  The secondary identity
-/// `cache.insertions == served_miss` therefore survives a snapshot
-/// restart, but it only holds while the admission policy admits every
-/// computed schedule — each RejectedCheap/RejectedOversize outcome
-/// leaves `insertions` one short of `served_miss` (the e2e suites
-/// assert the identity on workloads with zero rejections).
+/// `cache.insertions == served_miss + served_delta` therefore survives
+/// a snapshot restart, but it only holds while the admission policy
+/// admits every computed schedule — each RejectedCheap/RejectedOversize
+/// outcome leaves `insertions` one short (the e2e suites assert the
+/// identity on workloads with zero rejections).
 #[derive(Default)]
 pub struct ServiceMetrics {
     /// optimize requests received
@@ -125,6 +130,10 @@ pub struct ServiceMetrics {
     pub served_joined: AtomicU64,
     /// served a fast fallback schedule under pressure (never cached)
     pub served_degraded: AtomicU64,
+    /// delta request computed fresh via warm-start refinement and cached
+    /// under the post-delta fingerprint (the dynamic-graph sibling of
+    /// `served_miss`)
+    pub served_delta: AtomicU64,
     /// rejected with retry-after (queue full / shutting down)
     pub rejected: AtomicU64,
     /// well-formed optimize requests that failed (bad graph, failed job)
@@ -163,6 +172,10 @@ pub struct ServiceMetrics {
     pub optimize: LatencyHisto,
     /// fallback-pipeline wall time per degraded response
     pub degraded: LatencyHisto,
+    /// warm-start refinement wall time per delta job — kept out of
+    /// `optimize` so the much-cheaper delta runs don't drag down the
+    /// mean the degrade decision compares deadlines against
+    pub delta: LatencyHisto,
 }
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -172,6 +185,7 @@ pub struct MetricsSnapshot {
     pub served_miss: u64,
     pub served_joined: u64,
     pub served_degraded: u64,
+    pub served_delta: u64,
     pub rejected: u64,
     pub errors: u64,
     pub deadline_expired: u64,
@@ -188,6 +202,7 @@ pub struct MetricsSnapshot {
     pub queue_wait: LatencySnapshot,
     pub optimize: LatencySnapshot,
     pub degraded: LatencySnapshot,
+    pub delta: LatencySnapshot,
 }
 
 impl ServiceMetrics {
@@ -222,6 +237,7 @@ impl ServiceMetrics {
             served_miss: self.served_miss.load(Ordering::Relaxed),
             served_joined: joined,
             served_degraded: self.served_degraded.load(Ordering::Relaxed),
+            served_delta: self.served_delta.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
@@ -240,6 +256,7 @@ impl ServiceMetrics {
             queue_wait: self.queue_wait.snapshot(),
             optimize: self.optimize.snapshot(),
             degraded: self.degraded.snapshot(),
+            delta: self.delta.snapshot(),
         }
     }
 }
@@ -307,6 +324,7 @@ mod tests {
                 + s.served_miss
                 + s.served_joined
                 + s.served_degraded
+                + s.served_delta
                 + s.rejected
                 + s.errors
                 + s.forwarded
@@ -337,6 +355,36 @@ mod tests {
                 + s.served_miss
                 + s.served_joined
                 + s.served_degraded
+                + s.served_delta
+                + s.rejected
+                + s.errors
+                + s.forwarded
+        );
+    }
+
+    #[test]
+    fn delta_counters_keep_the_identity() {
+        let m = ServiceMetrics::new();
+        // three delta requests: one fresh warm-start compute, one cache
+        // hit on the child fingerprint, one unknown base (an error)
+        for _ in 0..3 {
+            ServiceMetrics::bump(&m.requests);
+        }
+        ServiceMetrics::bump(&m.served_delta);
+        m.delta.record(Duration::from_millis(2));
+        ServiceMetrics::bump(&m.served_hit);
+        ServiceMetrics::bump(&m.errors);
+        let s = m.snapshot();
+        assert_eq!(s.served_delta, 1);
+        assert_eq!(s.delta.count, 1);
+        assert_eq!(s.optimize.count, 0, "delta runs must not dilute the optimize histo");
+        assert_eq!(
+            s.requests,
+            s.served_hit
+                + s.served_miss
+                + s.served_joined
+                + s.served_degraded
+                + s.served_delta
                 + s.rejected
                 + s.errors
                 + s.forwarded
@@ -363,6 +411,7 @@ mod tests {
                 + s.served_miss
                 + s.served_joined
                 + s.served_degraded
+                + s.served_delta
                 + s.rejected
                 + s.errors
                 + s.forwarded

@@ -53,6 +53,14 @@
 //! suite (`tests/service_e2e.rs`) and the CI serve-smoke assert it.
 //! (Degraded responses are the one deliberate exception: tagged
 //! `"degraded":true` and never cached.)
+//!
+//! Dynamic graphs (PR 9): the optimize op's delta form
+//! (`{"base":"<fingerprint>","delta":{…}}`) mutates the graph behind an
+//! already-served schedule and is answered by the incremental
+//! re-partitioner (`partition::incremental` via `coordinator::delta`)
+//! warm-started from the cached base — cached under the post-delta
+//! content fingerprint, bit-for-bit shared with the equivalent inline
+//! request (`tests/service_delta.rs` pins it).
 
 pub mod cache;
 pub mod client;
@@ -77,6 +85,6 @@ pub use metrics::{MetricsSnapshot, ServiceMetrics};
 pub use peer::{PeerEvent, PeerLink, PeerSink};
 pub use persist::{LoadReport, SaveReport};
 pub use proto::{FleetView, GraphSpec};
-pub use queue::{Completion, JobError, JobOutcome, JobQueue, Submit};
+pub use queue::{Completion, DeltaSeed, JobError, JobOutcome, JobQueue, Submit};
 pub use ring::HashRing;
 pub use server::{ServeOpts, Server};

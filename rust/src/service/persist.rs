@@ -6,7 +6,7 @@
 //! to amortize.  This module writes the resident entries to a single
 //! snapshot file and loads them back on startup.
 //!
-//! ## Format (version 1)
+//! ## Format (version 2)
 //!
 //! ```text
 //! header:  magic "EPGSNAP1" (8 bytes) · format version u32 LE
@@ -17,9 +17,14 @@
 //! The checksum is the first lane of the service fingerprint hasher run
 //! over the payload.  Every scalar is fixed-width little-endian; arrays
 //! are length-prefixed.  The payload carries the fingerprint and the
-//! complete `CachedSchedule` (schedule, layout, breakdown, bytes, cost),
-//! so a warm hit is bit-identical to the pre-restart hit — including
-//! the reported `partition_ms` and admission cost.
+//! complete `CachedSchedule` (schedule, layout, breakdown, bytes, cost,
+//! and — since version 2 — the graph CSR the schedule was computed
+//! for), so a warm hit is bit-identical to the pre-restart hit —
+//! including the reported `partition_ms` and admission cost — and a
+//! restarted daemon can serve DELTA requests against warm-loaded bases
+//! (the delta path applies edge edits to the retained CSR).  Version-1
+//! snapshots carry no graph and are skipped wholesale as a version
+//! mismatch: a cold start, exactly like any other format bump.
 //!
 //! ## Robustness contract
 //!
@@ -46,6 +51,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::coordinator::{OptBreakdown, OptimizedSchedule};
+use crate::graph::Graph;
 use crate::partition::special::Pattern;
 use crate::partition::EdgePartition;
 use crate::sparse::Perm;
@@ -55,7 +61,8 @@ use super::faults::{FaultInjector, FaultSite};
 use super::fingerprint::{Fingerprint, Hasher};
 
 const MAGIC: &[u8; 8] = b"EPGSNAP1";
-const VERSION: u32 = 1;
+/// Bumped to 2 when records gained the retained graph CSR (PR 9).
+const VERSION: u32 = 2;
 /// Per-record sanity bound: no legitimate schedule record approaches
 /// this (a 2^26-edge assignment is ~256 MiB); anything larger is a
 /// corrupt length prefix, and trusting it would let one flipped bit
@@ -222,6 +229,15 @@ fn encode_record(fp: Fingerprint, e: &CachedSchedule) -> Vec<u8> {
     }
     w.u64v(e.bytes as u64);
     w.u64v(e.cost_ns);
+    // v2: the retained CSR, so warm-loaded entries can seed delta
+    // requests — n, then the edge pairs in edge-id order
+    let g = &e.graph;
+    w.u64v(g.n as u64);
+    w.u64v(g.m() as u64);
+    for &(u, v) in &g.edges {
+        w.u32v(u);
+        w.u32v(v);
+    }
     w.buf
 }
 
@@ -271,6 +287,27 @@ fn decode_record(payload: &[u8]) -> Option<(Fingerprint, CachedSchedule)> {
     };
     let bytes = r.u64v()? as usize;
     let cost_ns = r.u64v()?;
+    // v2 tail: the retained CSR.  Validate before building the graph —
+    // `Graph::from_edges` panics on out-of-range endpoints, and the
+    // loader's contract is "never panic on hostile input".
+    let n = r.u64v()? as u64;
+    if n > u32::MAX as u64 {
+        return None;
+    }
+    let n = n as usize;
+    let m = r.u64v()? as usize;
+    if m != assign.len() {
+        return None; // the schedule must cover exactly the graph's edges
+    }
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        let u = r.u32v()?;
+        let v = r.u32v()?;
+        if u as usize >= n || v as usize >= n {
+            return None;
+        }
+        edges.push((u, v));
+    }
     if !r.done() {
         return None; // trailing bytes: framing drift, don't trust it
     }
@@ -283,7 +320,8 @@ fn decode_record(payload: &[u8]) -> Option<(Fingerprint, CachedSchedule)> {
         used_special,
         skipped_low_reuse,
     };
-    Some((fp, CachedSchedule { schedule, breakdown, bytes, cost_ns }))
+    let graph = Arc::new(Graph::from_edges(n, edges));
+    Some((fp, CachedSchedule { schedule, breakdown, graph, bytes, cost_ns }))
 }
 
 fn checksum(payload: &[u8]) -> u64 {
@@ -647,8 +685,9 @@ mod tests {
         workloads
             .into_iter()
             .map(|(g, o)| {
+                let g = Arc::new(g);
                 let (sched, bd) = optimize_graph_with_breakdown(&g, &o);
-                (fingerprint(&g, &o), Arc::new(CachedSchedule::new(sched, bd)))
+                (fingerprint(&g, &o), Arc::new(CachedSchedule::new(sched, bd, g.clone())))
             })
             .collect()
     }
@@ -671,6 +710,10 @@ mod tests {
         assert_eq!(a.breakdown.total, b.breakdown.total);
         assert_eq!(a.bytes, b.bytes);
         assert_eq!(a.cost_ns, b.cost_ns);
+        // v2: the retained CSR survives the roundtrip exactly (delta
+        // requests against warm-loaded bases depend on it)
+        assert_eq!(a.graph.n, b.graph.n);
+        assert_eq!(a.graph.edges, b.graph.edges);
     }
 
     #[test]
@@ -762,6 +805,23 @@ mod tests {
         assert_eq!(order, want, "LRU→MRU replay must reconstruct recency");
         assert_eq!(*order.last().unwrap(), entries[0].0, "promoted entry stays MRU");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn record_codec_validates_the_retained_graph() {
+        let (fp, e) = varied_entries().remove(0);
+        let payload = encode_record(fp, &e);
+        let (got_fp, got) = decode_record(&payload).expect("valid record decodes");
+        assert_eq!(got_fp, fp);
+        assert_entry_bit_identical(&got, &e);
+        // truncated CSR tail: framing is broken, the record is refused
+        assert!(decode_record(&payload[..payload.len() - 4]).is_none());
+        // an out-of-range endpoint must be refused, not panic inside
+        // Graph::from_edges (the last 4 bytes are the last edge's v)
+        let mut bad = payload.clone();
+        let at = bad.len() - 4;
+        bad[at..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_record(&bad).is_none());
     }
 
     #[test]

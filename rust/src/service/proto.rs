@@ -6,6 +6,7 @@
 //!
 //! ```text
 //! {"op":"optimize","graph":<spec>,"opts":{...}}   → schedule response
+//! {"op":"optimize","base":"<fp>","delta":{...}}   → schedule response (delta form)
 //! {"op":"stats"}                                  → counter snapshot
 //! {"op":"health"}                                 → liveness probe
 //! {"op":"shutdown"}                               → ack, then the server drains and exits
@@ -52,6 +53,24 @@
 //! so a generator/matrix spec and its expanded edge list are the *same*
 //! cache entry — content-addressing happens after resolution.
 //!
+//! **Delta requests (dynamic graphs).**  The optimize op's second form
+//! replaces `"graph"` with `"base"` — the 32-hex-digit fingerprint of a
+//! schedule this daemon already holds — plus a `"delta"` object of edge
+//! mutations over that base's graph:
+//! `{"add_edges":[u0,v0,…],"remove_edges":[u0,v0,…]}`, both flat pair
+//! arrays like `graph.edges` (either may be absent).  The server applies
+//! the delta to the base's retained CSR under the canonical
+//! `graph::delta` semantics, fingerprints the POST-delta content, and
+//! serves/caches under that child fingerprint — so a delta-derived entry
+//! and the equivalent inline full-graph request are one cache entry,
+//! bit for bit, and a served child fingerprint can be the `"base"` of
+//! the next delta (chains).  `"base"` and `"graph"` are mutually
+//! exclusive; `opts` apply to the child as to any request (the base is
+//! only a graph source — its own opts are not inherited).  A base the
+//! daemon does not hold fails with `{"ok":false,"error":"unknown_base"}`
+//! and NO retry hint: retrying cannot help, the client must re-send the
+//! full graph.
+//!
 //! `opts` keys (all optional, defaults = `OptOptions::default()`):
 //! `k`, `seed`, `reuse_threshold`, `method`, `use_special_patterns`,
 //! `block_cap`.  `seed` is a decimal STRING on the wire (JSON numbers
@@ -82,6 +101,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::coordinator::OptOptions;
+use crate::graph::delta::EdgeDelta;
 use crate::graph::{gen, Graph};
 use crate::partition::Method;
 use crate::sparse::matrix_market;
@@ -315,6 +335,16 @@ impl GraphSpec {
 #[derive(Clone, Debug)]
 pub enum Op {
     Optimize { graph: GraphSpec, opts: OptOptions, deadline_ms: Option<u64> },
+    /// The optimize op's delta form: mutate the graph of an
+    /// already-served schedule (addressed by its fingerprint) instead of
+    /// shipping the full edge list.  Served and cached under the
+    /// POST-delta content fingerprint — see the module doc.
+    OptimizeDelta {
+        base: Fingerprint,
+        delta: EdgeDelta,
+        opts: OptOptions,
+        deadline_ms: Option<u64>,
+    },
     Stats,
     Health,
     Shutdown,
@@ -370,8 +400,6 @@ pub fn decode_request(j: &Json) -> Result<Request, String> {
     let op = j.get("op").and_then(Json::as_str).ok_or("request needs a string 'op'")?;
     let op = match op {
         "optimize" => {
-            let graph =
-                GraphSpec::from_json(j.get("graph").ok_or("optimize needs a 'graph'")?)?;
             let opts = opts_from_json(j.get("opts"))?;
             let deadline_ms = match j.get("deadline_ms") {
                 None | Some(Json::Null) => None,
@@ -379,7 +407,27 @@ pub fn decode_request(j: &Json) -> Result<Request, String> {
                     v.as_u64().ok_or("deadline_ms must be a non-negative integer")?,
                 ),
             };
-            Op::Optimize { graph, opts, deadline_ms }
+            match j.get("base") {
+                None | Some(Json::Null) => {
+                    let graph = GraphSpec::from_json(
+                        j.get("graph").ok_or("optimize needs a 'graph' (or 'base' + 'delta')")?,
+                    )?;
+                    Op::Optimize { graph, opts, deadline_ms }
+                }
+                Some(v) => {
+                    if j.get("graph").is_some() {
+                        return Err("'base' and 'graph' are mutually exclusive".into());
+                    }
+                    let hex =
+                        v.as_str().ok_or("base must be a 32-hex-digit fingerprint string")?;
+                    let base = Fingerprint::from_hex(hex)
+                        .ok_or_else(|| format!("malformed base fingerprint '{hex}'"))?;
+                    let delta = delta_from_json(
+                        j.get("delta").ok_or("a 'base' request needs a 'delta' object")?,
+                    )?;
+                    Op::OptimizeDelta { base, delta, opts, deadline_ms }
+                }
+            }
         }
         "stats" => Op::Stats,
         "health" => Op::Health,
@@ -452,6 +500,80 @@ pub fn opts_to_json(opts: &OptOptions) -> Json {
     Json::Obj(m)
 }
 
+/// Decode the `"delta"` object: flat `[u0,v0,…]` pair arrays under
+/// `add_edges` / `remove_edges` (either may be absent or null).  Only
+/// shape is validated here — endpoint-vs-n bounds and removal matching
+/// need the base graph, which `graph::delta::apply_delta` checks.
+pub fn delta_from_json(j: &Json) -> Result<EdgeDelta, String> {
+    if !matches!(j, Json::Obj(_)) {
+        return Err("'delta' must be an object".into());
+    }
+    let pairs = |key: &str| -> Result<Vec<(u32, u32)>, String> {
+        let flat = match j.get(key) {
+            None | Some(Json::Null) => return Ok(Vec::new()),
+            Some(v) => v.as_arr().ok_or_else(|| format!("delta.{key} must be an array"))?,
+        };
+        if flat.len() % 2 != 0 {
+            return Err(format!(
+                "delta.{key} must hold an even number of endpoints (flat pairs)"
+            ));
+        }
+        let mut out = Vec::with_capacity(flat.len() / 2);
+        for pair in flat.chunks_exact(2) {
+            let u = pair[0].as_u64().ok_or_else(|| format!("delta.{key} entries must be integers"))?;
+            let v = pair[1].as_u64().ok_or_else(|| format!("delta.{key} entries must be integers"))?;
+            if u > u32::MAX as u64 || v > u32::MAX as u64 {
+                return Err(format!("delta.{key} endpoint out of range: ({u},{v})"));
+            }
+            out.push((u as u32, v as u32));
+        }
+        Ok(out)
+    };
+    let delta = EdgeDelta { add_edges: pairs("add_edges")?, remove_edges: pairs("remove_edges")? };
+    if delta.len() > MAX_EDGES {
+        return Err(format!("delta too large for the service (≤ {MAX_EDGES} mutations)"));
+    }
+    Ok(delta)
+}
+
+pub fn delta_to_json(delta: &EdgeDelta) -> Json {
+    let flat = |pairs: &[(u32, u32)]| {
+        let mut out = Vec::with_capacity(pairs.len() * 2);
+        for &(u, v) in pairs {
+            out.push(Json::Num(u as f64));
+            out.push(Json::Num(v as f64));
+        }
+        Json::Arr(out)
+    };
+    let mut m = BTreeMap::new();
+    if !delta.add_edges.is_empty() {
+        m.insert("add_edges".to_string(), flat(&delta.add_edges));
+    }
+    if !delta.remove_edges.is_empty() {
+        m.insert("remove_edges".to_string(), flat(&delta.remove_edges));
+    }
+    Json::Obj(m)
+}
+
+/// Build one delta request line (client side): mutate the graph behind
+/// an already-served fingerprint instead of re-sending the edge list.
+pub fn delta_request(
+    base: Fingerprint,
+    delta: &EdgeDelta,
+    opts: &OptOptions,
+    deadline_ms: Option<u64>,
+) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("op".to_string(), Json::Str("optimize".to_string()));
+    m.insert("base".to_string(), Json::Str(base.to_hex()));
+    m.insert("delta".to_string(), delta_to_json(delta));
+    m.insert("opts".to_string(), opts_to_json(opts));
+    if let Some(ms) = deadline_ms {
+        m.insert("deadline_ms".to_string(), Json::Num(ms as f64));
+    }
+    Json::Obj(m)
+}
+
 /// Build one optimize request line (client side).
 pub fn optimize_request(graph: &GraphSpec, opts: &OptOptions) -> Json {
     optimize_request_with_deadline(graph, opts, None)
@@ -500,6 +622,25 @@ pub fn forward_request(
     j
 }
 
+/// The relay line for a delta request: a fleet daemon that does not hold
+/// `base` forwards the delta to the peer that does (the owner of the
+/// chain's root base), same `fwd`/relay-id discipline as
+/// [`forward_request`].
+pub fn forward_delta_request(
+    base: Fingerprint,
+    delta: &EdgeDelta,
+    opts: &OptOptions,
+    deadline_ms: Option<u64>,
+    relay_id: u64,
+) -> Json {
+    let mut j = delta_request(base, delta, opts, deadline_ms);
+    if let Json::Obj(m) = &mut j {
+        m.insert("fwd".to_string(), Json::Bool(true));
+        m.insert("id".to_string(), Json::Num(relay_id as f64));
+    }
+    j
+}
+
 /// Re-stamp a relayed response for the origin's own client: drop the
 /// relay id and restore the id the client sent (if any), leaving every
 /// other byte of the owner's response untouched — relayed schedules
@@ -533,8 +674,10 @@ pub fn error_response(msg: &str, retry_after_ms: Option<u64>) -> Json {
     obj(fields)
 }
 
-/// The schedule response.  `cached` is `"hit"`, `"miss"`, `"joined"` or
-/// `"degraded"` (the convenience bool `"degraded"` is derived from it);
+/// The schedule response.  `cached` is `"hit"`, `"miss"`, `"joined"`,
+/// `"delta"` (a miss computed by the incremental re-partitioner from a
+/// cached base) or `"degraded"` (the convenience bool `"degraded"` is
+/// derived from it);
 /// `assign`/`layout` carry the full arrays so clients can verify
 /// bit-identity against a direct `optimize_graph` run — except degraded
 /// responses, which are fallback schedules and by design NOT identical
@@ -667,6 +810,7 @@ pub fn stats_response(v: StatsView<'_>) -> Json {
         ("served_miss", num(m.served_miss as f64)),
         ("served_joined", num(m.served_joined as f64)),
         ("served_degraded", num(m.served_degraded as f64)),
+        ("served_delta", num(m.served_delta as f64)),
         ("rejected", num(m.rejected as f64)),
         ("errors", num(m.errors as f64)),
         ("deadline_expired", num(m.deadline_expired as f64)),
@@ -705,6 +849,7 @@ pub fn stats_response(v: StatsView<'_>) -> Json {
         ("fleet", fleet_json),
         ("queue_wait_ms", latency_json(&m.queue_wait)),
         ("optimize_ms", latency_json(&m.optimize)),
+        ("delta_ms", latency_json(&m.delta)),
         ("degraded_ms", latency_json(&m.degraded)),
         ("uptime_ms", num(v.uptime_ms)),
         ("workers", num(v.workers as f64)),
@@ -732,8 +877,8 @@ pub fn shutdown_response() -> Json {
 /// the echoed `"id"` — when, and only when, the request carried one, so
 /// v1 exchanges stay byte-identical to protocol 1.
 pub enum Reply<'a> {
-    /// A schedule: `cached` is `"hit"`, `"miss"`, `"joined"` or
-    /// `"degraded"` (see [`optimize_response`]).
+    /// A schedule: `cached` is `"hit"`, `"miss"`, `"joined"`, `"delta"`
+    /// or `"degraded"` (see [`optimize_response`]).
     Schedule {
         fp: Fingerprint,
         cached: &'a str,
@@ -1105,17 +1250,122 @@ mod tests {
     #[test]
     fn optimize_response_flags_degraded_responses() {
         use crate::coordinator::optimize_graph_with_breakdown;
-        let g = GraphSpec::Gen { name: "path".into(), args: vec![16] }.resolve().unwrap();
+        use std::sync::Arc;
+        let g = Arc::new(
+            GraphSpec::Gen { name: "path".into(), args: vec![16] }.resolve().unwrap(),
+        );
         let opts = OptOptions { k: 2, ..Default::default() };
         let (sched, bd) = optimize_graph_with_breakdown(&g, &opts);
-        let entry = CachedSchedule::new(sched, bd);
+        let entry = CachedSchedule::new(sched, bd, g.clone());
         let fp = fingerprint(&g, &opts);
-        for tag in ["hit", "miss", "joined"] {
+        for tag in ["hit", "miss", "joined", "delta"] {
             let j = optimize_response(fp, tag, &entry, None, None);
             assert_eq!(j.get("degraded").unwrap().as_bool(), Some(false), "{tag}");
         }
         let j = optimize_response(fp, "degraded", &entry, None, Some(1.5));
         assert_eq!(j.get("degraded").unwrap().as_bool(), Some(true));
         assert_eq!(j.get("cached").unwrap().as_str(), Some("degraded"));
+    }
+
+    #[test]
+    fn delta_request_roundtrips() {
+        let base = Fingerprint(0x0123_4567_89ab_cdef, 0xfedc_ba98_7654_3210);
+        let delta = EdgeDelta {
+            add_edges: vec![(0, 4), (2, 3)],
+            remove_edges: vec![(1, 2)],
+        };
+        let opts = OptOptions { k: 4, seed: 7, ..Default::default() };
+        let line = delta_request(base, &delta, &opts, Some(250)).dump();
+        let r = decode_request(&Json::parse(&line).unwrap()).unwrap();
+        assert!(!r.fwd);
+        match r.op {
+            Op::OptimizeDelta { base: b, delta: d, opts: o, deadline_ms } => {
+                assert_eq!(b, base);
+                assert_eq!(d, delta);
+                assert_eq!((o.k, o.seed), (4, 7));
+                assert_eq!(deadline_ms, Some(250));
+            }
+            _ => panic!("wrong request kind"),
+        }
+        // empty sides are omitted on the wire yet decode to empty vecs
+        let line = delta_request(base, &EdgeDelta::default(), &opts, None).dump();
+        match decode_request(&Json::parse(&line).unwrap()).unwrap().op {
+            Op::OptimizeDelta { delta: d, .. } => assert!(d.is_empty()),
+            _ => panic!("wrong request kind"),
+        }
+    }
+
+    #[test]
+    fn delta_request_shape_is_validated() {
+        let parse = |text: &str| decode_request(&Json::parse(text).unwrap());
+        let fp_hex = "00112233445566778899aabbccddeeff";
+        // base + graph together is malformed
+        let both = format!(
+            r#"{{"op":"optimize","base":"{fp_hex}","graph":{{"gen":"path","args":[4]}},"delta":{{}}}}"#
+        );
+        assert!(parse(&both).unwrap_err().contains("mutually exclusive"));
+        for bad in [
+            // base without delta
+            format!(r#"{{"op":"optimize","base":"{fp_hex}"}}"#),
+            // malformed fingerprints
+            r#"{"op":"optimize","base":"xyz","delta":{}}"#.to_string(),
+            r#"{"op":"optimize","base":42,"delta":{}}"#.to_string(),
+            format!(r#"{{"op":"optimize","base":"{fp_hex}0","delta":{{}}}}"#),
+            // odd pair array / non-integer entries / wrong container
+            format!(r#"{{"op":"optimize","base":"{fp_hex}","delta":{{"add_edges":[1]}}}}"#),
+            format!(r#"{{"op":"optimize","base":"{fp_hex}","delta":{{"add_edges":[1,"x"]}}}}"#),
+            format!(r#"{{"op":"optimize","base":"{fp_hex}","delta":{{"remove_edges":7}}}}"#),
+            format!(r#"{{"op":"optimize","base":"{fp_hex}","delta":[1,2]}}"#),
+        ] {
+            assert!(parse(&bad).is_err(), "should reject: {bad}");
+        }
+        // null sides and a null base (→ plain optimize path) stay valid
+        let ok = format!(
+            r#"{{"op":"optimize","base":"{fp_hex}","delta":{{"add_edges":null}}}}"#
+        );
+        assert!(matches!(parse(&ok).unwrap().op, Op::OptimizeDelta { .. }));
+        let plain = r#"{"op":"optimize","base":null,"graph":{"gen":"path","args":[4]}}"#;
+        assert!(matches!(parse(plain).unwrap().op, Op::Optimize { .. }));
+    }
+
+    #[test]
+    fn forward_delta_request_carries_the_relay_markers() {
+        let base = Fingerprint(7, 9);
+        let delta = EdgeDelta { add_edges: vec![(1, 2)], remove_edges: vec![] };
+        let opts = OptOptions { k: 2, ..Default::default() };
+        let line = forward_delta_request(base, &delta, &opts, Some(500), 42).dump();
+        let r = decode_request(&Json::parse(&line).unwrap()).unwrap();
+        assert!(r.fwd, "relay lines carry the marker");
+        assert_eq!(r.id.as_ref().and_then(Json::as_u64), Some(42));
+        match r.op {
+            Op::OptimizeDelta { base: b, delta: d, deadline_ms, .. } => {
+                assert_eq!(b, base);
+                assert_eq!(d, delta);
+                assert_eq!(deadline_ms, Some(500));
+            }
+            _ => panic!("wrong request kind"),
+        }
+    }
+
+    #[test]
+    fn stats_render_delta_counters() {
+        use crate::service::cache::CacheStats;
+        use crate::service::metrics::MetricsSnapshot;
+        let m = MetricsSnapshot { requests: 3, served_delta: 2, ..Default::default() };
+        let c = CacheStats::default();
+        let j = stats_response(StatsView {
+            metrics: &m,
+            cache: &c,
+            uptime_ms: 1.0,
+            workers: 1,
+            queue_cap: 4,
+            queue_pending: 0,
+            persist: None,
+            chaos: None,
+            fleet: None,
+        });
+        assert_eq!(j.get("served_delta").and_then(Json::as_u64), Some(2));
+        let d = j.get("delta_ms").expect("delta_ms latency summary");
+        assert_eq!(d.get("count").and_then(Json::as_u64), Some(0));
     }
 }

@@ -34,7 +34,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{optimize_graph_checked, Cancelled, OptOptions};
+use crate::coordinator::{optimize_delta_checked, optimize_graph_checked, Cancelled, OptOptions};
 use crate::graph::Graph;
 
 use super::cache::{CachedSchedule, ScheduleCache};
@@ -68,11 +68,25 @@ enum Deadline {
     At(Instant),
 }
 
+/// Warm-start seed for a delta job (PR 9): the cached base schedule and
+/// the edge-id map `graph::delta::apply_delta` produced.  A seeded job's
+/// worker runs `optimize_delta_checked` instead of the cold pipeline;
+/// everything else — singleflight under the POST-delta fingerprint,
+/// deadlines, caching — is identical, which is exactly what makes a
+/// delta-derived entry and an equivalent inline request share one cache
+/// entry bit for bit.
+pub struct DeltaSeed {
+    pub base: Arc<CachedSchedule>,
+    pub new_of_old_edge: Arc<Vec<u32>>,
+}
+
 /// One in-flight optimization; shared by the worker and every waiter.
 pub struct Job {
     pub fp: Fingerprint,
     graph: Arc<Graph>,
     opts: OptOptions,
+    /// `Some` makes this a warm-start delta job (see [`DeltaSeed`]).
+    seed: Option<DeltaSeed>,
     enqueued: Instant,
     deadline: Mutex<Deadline>,
     state: Mutex<JobState>,
@@ -227,6 +241,24 @@ impl JobQueue {
         cache: &ScheduleCache,
         deadline: Option<Instant>,
     ) -> Submit {
+        self.submit_seeded(fp, graph, opts, cache, deadline, None)
+    }
+
+    /// `submit` with an optional warm-start seed: `graph` is the
+    /// POST-delta graph and `fp` its own content fingerprint, so a
+    /// seeded job and an inline request for the same graph dedup onto
+    /// one in-flight computation and one cache entry.  Whichever path
+    /// enqueues first decides how the entry is computed; every waiter
+    /// shares its bytes either way.
+    pub fn submit_seeded(
+        &self,
+        fp: Fingerprint,
+        graph: &Arc<Graph>,
+        opts: OptOptions,
+        cache: &ScheduleCache,
+        deadline: Option<Instant>,
+        seed: Option<DeltaSeed>,
+    ) -> Submit {
         let mut inner = self.inner.lock().unwrap();
         if inner.shutdown {
             // no hint: shutdown is terminal for this server, a client
@@ -256,6 +288,7 @@ impl JobQueue {
             fp,
             graph: graph.clone(),
             opts,
+            seed,
             enqueued: Instant::now(),
             deadline: Mutex::new(match deadline {
                 Some(t) => Deadline::At(t),
@@ -365,15 +398,31 @@ impl JobQueue {
                         panic!("injected worker panic (chaos)");
                     }
                 }
-                optimize_graph_checked(&job.graph, &job.opts, &|| job.deadline_expired())
+                match &job.seed {
+                    Some(seed) => optimize_delta_checked(
+                        &seed.base.schedule,
+                        &job.graph,
+                        &seed.new_of_old_edge,
+                        &job.opts,
+                        &|| job.deadline_expired(),
+                    ),
+                    None => {
+                        optimize_graph_checked(&job.graph, &job.opts, &|| job.deadline_expired())
+                    }
+                }
             }));
             let run_time = t0.elapsed();
             let result = match outcome {
                 Ok(Ok((sched, bd))) => {
-                    // only completed full runs feed the optimize
-                    // histogram — its mean drives the degrade decision
-                    metrics.optimize.record(run_time);
-                    Ok(Arc::new(CachedSchedule::new(sched, bd)))
+                    // only completed runs feed the histograms; warm-start
+                    // delta runs go to their own histogram so the much
+                    // cheaper refinement doesn't drag down the optimize
+                    // mean the degrade decision compares deadlines against
+                    match job.seed {
+                        Some(_) => metrics.delta.record(run_time),
+                        None => metrics.optimize.record(run_time),
+                    }
+                    Ok(Arc::new(CachedSchedule::new(sched, bd, job.graph.clone())))
                 }
                 Ok(Err(Cancelled)) => {
                     ServiceMetrics::bump(&metrics.deadline_expired);
@@ -581,6 +630,48 @@ mod tests {
         assert_eq!(got[0].tag, 8);
         assert!(Arc::ptr_eq(&got[0].result.clone().unwrap(), &first));
         assert!(got[0].run_time > Duration::ZERO);
+        q.shutdown();
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn seeded_jobs_share_the_singleflight_with_inline_requests() {
+        use crate::graph::delta::{apply_delta, EdgeDelta};
+        let q = Arc::new(JobQueue::new(8));
+        let cache = Arc::new(ScheduleCache::new(1 << 22, 2));
+        let metrics = Arc::new(ServiceMetrics::new());
+        // compute a base entry the seed can point at
+        let (base_fp, base_g, o) = workload(50);
+        let base_job = match q.submit(base_fp, &base_g, o.clone(), &cache, None) {
+            Submit::New(j) => j,
+            _ => panic!("fresh workload must enqueue"),
+        };
+        let (qq, cc, mm) = (q.clone(), cache.clone(), metrics.clone());
+        let worker = std::thread::spawn(move || qq.run_worker(&cc, &mm));
+        let base = base_job.wait().0.expect("base run should succeed");
+        assert!(Arc::ptr_eq(&base.graph, &base_g), "entry must retain its CSR");
+        // apply a delta and submit the seeded job under the CHILD fp
+        let d = EdgeDelta { add_edges: vec![(0, 5)], remove_edges: vec![base_g.edges[0]] };
+        let (post, map) = apply_delta(&base_g, &d).unwrap();
+        let post = Arc::new(post);
+        let child_fp = fingerprint(&post, &o);
+        let seed = DeltaSeed { base: base.clone(), new_of_old_edge: Arc::new(map) };
+        let job = match q.submit_seeded(child_fp, &post, o.clone(), &cache, None, Some(seed)) {
+            Submit::New(j) => j,
+            _ => panic!("fresh child fingerprint must enqueue"),
+        };
+        // an inline request for the same post-delta graph joins that job
+        assert!(matches!(q.submit(child_fp, &post, o.clone(), &cache, None), Submit::Joined(_)));
+        let entry = job.wait().0.expect("delta run should succeed");
+        assert_eq!(entry.schedule.partition.assign.len(), post.m());
+        // a later inline request is a plain cache hit on the same Arc
+        match q.submit(child_fp, &post, o, &cache, None) {
+            Submit::Hit(e) => assert!(Arc::ptr_eq(&e, &entry)),
+            _ => panic!("expected a cache hit after the delta run"),
+        }
+        // run accounting: one cold run, one delta run, separate histograms
+        assert_eq!(metrics.optimize.snapshot().count, 1);
+        assert_eq!(metrics.delta.snapshot().count, 1);
         q.shutdown();
         worker.join().unwrap();
     }

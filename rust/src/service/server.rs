@@ -72,6 +72,15 @@
 //! `owner_down_fallback`; determinism makes the answer bit-identical
 //! either way.  Snapshots are per-shard: a fleet daemon persists only
 //! fingerprints it owns, so restarts re-home cleanly.
+//!
+//! Delta requests (`{"base":…,"delta":…}`, PR 9) resolve the base's
+//! cached entry, apply the edge delta to its retained graph, and serve
+//! under the POST-delta fingerprint with the base's partition as a warm
+//! seed for the incremental re-partitioner.  In fleet mode a delta
+//! routes to the peer holding its BASE (ring owner of the base
+//! fingerprint, or a learned chain home — a chain's children live with
+//! the root's owner, not at their own fingerprints' ring slots).  An
+//! unresolvable base answers the terminal `unknown_base`.
 
 use std::collections::HashMap;
 use std::io::{Read, Write};
@@ -83,6 +92,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::graph::delta::{apply_delta, EdgeDelta};
 use crate::graph::Graph;
 use crate::util::json::Json;
 use crate::util::par;
@@ -96,7 +106,7 @@ use super::metrics::{ServiceMetrics, Uptime};
 use super::peer::{PeerEvent, PeerLink, PeerSink};
 use super::persist::{self, LoadReport};
 use super::proto::{self, FleetView, Op, PersistInfo, StatsView};
-use super::queue::{Completion, JobError, JobQueue, Submit};
+use super::queue::{Completion, DeltaSeed, JobError, JobQueue, Submit};
 use super::ring::HashRing;
 
 /// Cadence of the persistence flusher's trigger checks.
@@ -143,6 +153,12 @@ const DRAIN_FLUSH_GRACE: Duration = Duration::from_secs(2);
 /// while still guaranteeing an eventual retry even on a low-churn
 /// server that never accumulates `snapshot_every` new insertions again.
 const SNAPSHOT_FAILURE_BACKOFF_TICKS: u64 = 120;
+
+/// Entry bound on the learned chain-home map (fingerprint → peer index
+/// for delta chains rooted at a peer).  Past it the map is cleared —
+/// a stale or lost homing only costs one `unknown_base` round trip, so
+/// clear-on-full beats growing without bound.
+const CHAIN_HOMES_MAX: usize = 65536;
 
 /// Byte budget for the resolved-matrix memo.  Graphs that fit are
 /// pinned for the process lifetime (repeat requests skip the disk);
@@ -309,7 +325,7 @@ struct PendingReq {
     conn_id: u64,
     id: Option<Json>,
     fp: Fingerprint,
-    /// `"miss"` or `"joined"` — fixed at submit time.
+    /// `"miss"`, `"delta"` or `"joined"` — fixed at submit time.
     kind: &'static str,
 }
 
@@ -325,12 +341,29 @@ struct ForwardReq {
     deadline: Option<Instant>,
 }
 
+/// A delta request relayed to the peer believed to hold its base.
+/// Unlike [`ForwardReq`] there is no local-recompute fallback — without
+/// the base's graph this daemon cannot apply the delta, so a dead peer
+/// answers `unknown_base` (terminal; the client re-sends the full
+/// graph).
+struct ForwardDeltaReq {
+    conn_id: u64,
+    id: Option<Json>,
+    /// The base fingerprint the relay resolved.
+    base: Fingerprint,
+    /// Ring index the relay went to — a successful reply teaches the
+    /// chain-home map that this peer holds the chain.
+    target: usize,
+}
+
 /// What a parked reactor tag is waiting on.
 enum Pending {
     /// A local job in the worker pool.
     Job(PendingReq),
     /// A relay to the ring owner over a peer link.
     Forward(ForwardReq),
+    /// A delta relay to the peer holding the base.
+    ForwardDelta(ForwardDeltaReq),
 }
 
 /// Everything that can wake the parked reactor: local job completions
@@ -432,6 +465,15 @@ struct Fleet {
     /// One pooled link per ring slot, parallel to `ring.peers()`;
     /// `None` exactly at `self_idx`.
     links: Vec<Option<PeerLink>>,
+    /// Learned routing for delta chains: fingerprint → ring index of the
+    /// peer that served it.  A chain lives wherever its ROOT base lives
+    /// (the owner of the root fingerprint), so the ring alone cannot
+    /// route a delta whose base is a mid-chain child — its own
+    /// fingerprint generally hashes to a different owner.  Relay replies
+    /// teach this map both the base and the served child fingerprint.
+    /// Bounded (CHAIN_HOMES_MAX, clear-on-full); a miss here only costs
+    /// falling back to the ring owner of the base.
+    chain_homes: Mutex<HashMap<Fingerprint, usize>>,
 }
 
 impl Fleet {
@@ -531,7 +573,7 @@ impl Server {
                     Some(PeerLink::spawn(addr.clone(), sink))
                 })
                 .collect();
-            Some(Fleet { ring, self_idx, links })
+            Some(Fleet { ring, self_idx, links, chain_homes: Mutex::new(HashMap::new()) })
         };
         let cache = ScheduleCache::new(opts.cache_bytes, opts.shards);
         let persistence = match &opts.snapshot {
@@ -668,42 +710,63 @@ impl Server {
                         };
                         (req.conn_id, self.completion_response(&req, &done))
                     }
-                    Event::Peer(PeerEvent::Reply { tag, resp }) => {
-                        let Some(Pending::Forward(fwd)) = pending.remove(&tag) else {
-                            continue;
-                        };
-                        // terminal outcome at the origin: the owner's
-                        // response relays byte-identical except the id
-                        ServiceMetrics::bump(&self.metrics.forwarded);
-                        (fwd.conn_id, proto::restamp_relayed(resp, fwd.id.as_ref()))
-                    }
-                    Event::Peer(PeerEvent::Failed { tag }) => {
-                        let Some(Pending::Forward(fwd)) = pending.remove(&tag) else {
-                            continue;
-                        };
-                        // owner died mid-flight: recompute locally so
-                        // the client still gets its (identical) answer
-                        ServiceMetrics::bump(&self.metrics.owner_down_fallback);
-                        let mut ctx = RouteCtx {
-                            conn_id: fwd.conn_id,
-                            next_tag: &mut next_tag,
-                            pending: &mut pending,
-                        };
-                        match self.serve_local(
-                            fwd.fp,
-                            &fwd.graph,
-                            fwd.opts,
-                            fwd.deadline,
-                            fwd.id,
-                            &mut ctx,
-                        ) {
-                            Dispatch::Reply(resp) => (fwd.conn_id, resp),
-                            // re-parked as a local job under a new tag;
-                            // the connection's outstanding count carries
-                            // over unchanged
-                            Dispatch::Async => continue,
+                    Event::Peer(PeerEvent::Reply { tag, resp }) => match pending.remove(&tag) {
+                        Some(Pending::Forward(fwd)) => {
+                            // terminal outcome at the origin: the owner's
+                            // response relays byte-identical except the id
+                            ServiceMetrics::bump(&self.metrics.forwarded);
+                            (fwd.conn_id, proto::restamp_relayed(resp, fwd.id.as_ref()))
                         }
-                    }
+                        Some(Pending::ForwardDelta(fwd)) => {
+                            ServiceMetrics::bump(&self.metrics.forwarded);
+                            self.learn_chain_home(&fwd, &resp);
+                            (fwd.conn_id, proto::restamp_relayed(resp, fwd.id.as_ref()))
+                        }
+                        _ => continue,
+                    },
+                    Event::Peer(PeerEvent::Failed { tag }) => match pending.remove(&tag) {
+                        Some(Pending::Forward(fwd)) => {
+                            // owner died mid-flight: recompute locally so
+                            // the client still gets its (identical) answer
+                            ServiceMetrics::bump(&self.metrics.owner_down_fallback);
+                            let mut ctx = RouteCtx {
+                                conn_id: fwd.conn_id,
+                                next_tag: &mut next_tag,
+                                pending: &mut pending,
+                            };
+                            match self.serve_local(
+                                fwd.fp,
+                                &fwd.graph,
+                                fwd.opts,
+                                fwd.deadline,
+                                fwd.id,
+                                &mut ctx,
+                                None,
+                            ) {
+                                Dispatch::Reply(resp) => (fwd.conn_id, resp),
+                                // re-parked as a local job under a new tag;
+                                // the connection's outstanding count carries
+                                // over unchanged
+                                Dispatch::Async => continue,
+                            }
+                        }
+                        Some(Pending::ForwardDelta(fwd)) => {
+                            // no local fallback possible: the base's graph
+                            // lives on the dead peer.  unknown_base is
+                            // terminal — the client re-sends the full graph.
+                            ServiceMetrics::bump(&self.metrics.owner_down_fallback);
+                            ServiceMetrics::bump(&self.metrics.errors);
+                            (
+                                fwd.conn_id,
+                                proto::Reply::Error {
+                                    msg: "unknown_base".into(),
+                                    retry_after_ms: None,
+                                }
+                                .encode(fwd.id.as_ref()),
+                            )
+                        }
+                        _ => continue,
+                    },
                 };
                 match conn_index.get(&conn_id).and_then(|&tok| conns.get_mut(tok)) {
                     Some(conn) => {
@@ -859,10 +922,10 @@ impl Server {
     fn completion_response(&self, req: &PendingReq, done: &Completion) -> Json {
         match &done.result {
             Ok(entry) => {
-                ServiceMetrics::bump(if req.kind == "miss" {
-                    &self.metrics.served_miss
-                } else {
-                    &self.metrics.served_joined
+                ServiceMetrics::bump(match req.kind {
+                    "miss" => &self.metrics.served_miss,
+                    "delta" => &self.metrics.served_delta,
+                    _ => &self.metrics.served_joined,
                 });
                 proto::Reply::Schedule {
                     fp: req.fp,
@@ -1036,6 +1099,9 @@ impl Server {
             Op::Optimize { graph, opts, deadline_ms } => {
                 self.serve_optimize(graph, opts, deadline_ms, fwd, id, ctx)
             }
+            Op::OptimizeDelta { base, delta, opts, deadline_ms } => {
+                self.serve_delta(base, delta, opts, deadline_ms, fwd, id, ctx)
+            }
         }
     }
 
@@ -1081,7 +1147,7 @@ impl Server {
     fn serve_degraded(
         &self,
         fp: Fingerprint,
-        g: &Graph,
+        g: &Arc<Graph>,
         opts: &crate::coordinator::OptOptions,
         id: Option<&Json>,
     ) -> Json {
@@ -1136,7 +1202,7 @@ impl Server {
             // an ownership disagreement (e.g. mismatched peer lists)
             // must cost one extra compute, not a ping-pong loop
             ServiceMetrics::bump(&self.metrics.proxied_in);
-            return self.serve_local(fp, &g, opts, deadline, id, ctx);
+            return self.serve_local(fp, &g, opts, deadline, id, ctx, None);
         }
         if let Some(fleet) = &self.fleet {
             let owner = fleet.ring.owner_index(fp);
@@ -1150,7 +1216,164 @@ impl Server {
                 ServiceMetrics::bump(&self.metrics.owner_down_fallback);
             }
         }
-        self.serve_local(fp, &g, opts, deadline, id, ctx)
+        self.serve_local(fp, &g, opts, deadline, id, ctx, None)
+    }
+
+    /// The delta path: resolve the base's cached entry, apply the edge
+    /// delta to its retained graph, and serve under the POST-delta
+    /// content fingerprint — seeding the worker with the base's
+    /// partition so the optimizer refines instead of recomputing.  A
+    /// base this daemon does not hold either forwards to the peer that
+    /// does (fleet mode — chains live with their root base's owner) or
+    /// fails with the terminal `unknown_base`.
+    #[allow(clippy::too_many_arguments)]
+    fn serve_delta(
+        &self,
+        base: Fingerprint,
+        delta: EdgeDelta,
+        mut opts: crate::coordinator::OptOptions,
+        deadline_ms: Option<u64>,
+        fwd: bool,
+        id: Option<Json>,
+        ctx: &mut RouteCtx<'_>,
+    ) -> Dispatch {
+        ServiceMetrics::bump(&self.metrics.requests);
+        if fwd {
+            // relayed here by a peer that believes we hold the base;
+            // served (or refused) locally, never re-forwarded
+            ServiceMetrics::bump(&self.metrics.proxied_in);
+        }
+        opts.threads = self.opts.partition_threads;
+        let deadline = deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+        // probe, not get: a delta is not a request FOR the base, so the
+        // base lookup must not move the hit/miss counters
+        let Some(base_entry) = self.cache.probe(base) else {
+            if !fwd {
+                if let Some(fleet) = &self.fleet {
+                    if let Some(d) =
+                        self.try_forward_delta(fleet, base, &delta, &opts, deadline, &id, ctx)
+                    {
+                        return d;
+                    }
+                }
+            }
+            // terminal — no retry hint: retrying cannot materialize the
+            // base, the client must re-send the full graph
+            ServiceMetrics::bump(&self.metrics.errors);
+            return Dispatch::Reply(
+                proto::Reply::Error { msg: "unknown_base".into(), retry_after_ms: None }
+                    .encode(id.as_ref()),
+            );
+        };
+        let (post, new_of_old) = match apply_delta(&base_entry.graph, &delta) {
+            Ok(x) => x,
+            Err(e) => {
+                ServiceMetrics::bump(&self.metrics.errors);
+                return Dispatch::Reply(
+                    proto::Reply::Error { msg: format!("bad delta: {e}"), retry_after_ms: None }
+                        .encode(id.as_ref()),
+                );
+            }
+        };
+        // n is fixed by the delta semantics; only m can grow past bounds
+        if post.m() > proto::MAX_EDGES {
+            ServiceMetrics::bump(&self.metrics.errors);
+            return Dispatch::Reply(
+                proto::Reply::Error {
+                    msg: format!("graph too large for the service (m ≤ {})", proto::MAX_EDGES),
+                    retry_after_ms: None,
+                }
+                .encode(id.as_ref()),
+            );
+        }
+        let g = Arc::new(post);
+        // the CHILD fingerprint: pure content addressing of the
+        // post-delta graph, so this entry is bit-for-bit the one an
+        // equivalent inline request lands on
+        let fp = fingerprint(&g, &opts);
+        let seed = DeltaSeed { base: base_entry, new_of_old_edge: Arc::new(new_of_old) };
+        self.serve_local(fp, &g, opts, deadline, id, ctx, Some(seed))
+    }
+
+    /// Relay a delta whose base this daemon does not hold to the peer
+    /// that should: the learned chain home if one is recorded, else the
+    /// ring owner of the BASE fingerprint (a chain's entries all live
+    /// with the owner of its root).  Returns `None` when the target is
+    /// this daemon or unreachable — the caller answers `unknown_base`.
+    fn try_forward_delta(
+        &self,
+        fleet: &Fleet,
+        base: Fingerprint,
+        delta: &EdgeDelta,
+        opts: &crate::coordinator::OptOptions,
+        deadline: Option<Instant>,
+        id: &Option<Json>,
+        ctx: &mut RouteCtx<'_>,
+    ) -> Option<Dispatch> {
+        let target = fleet
+            .chain_homes
+            .lock()
+            .unwrap()
+            .get(&base)
+            .copied()
+            .unwrap_or_else(|| fleet.ring.owner_index(base));
+        if target == fleet.self_idx {
+            return None;
+        }
+        let link = fleet.links[target].as_ref().expect("non-self ring slots have links");
+        if !link.healthy() {
+            return None;
+        }
+        let remaining_ms = match deadline {
+            None => None,
+            Some(d) => {
+                let r = d.saturating_duration_since(Instant::now());
+                if r.is_zero() {
+                    return Some(Dispatch::Reply(self.deadline_error(id.as_ref())));
+                }
+                Some(r.as_millis() as u64)
+            }
+        };
+        let tag = *ctx.next_tag;
+        *ctx.next_tag += 1;
+        let line = proto::forward_delta_request(base, delta, opts, remaining_ms, tag).dump();
+        if link.send(tag, line).is_err() {
+            return None;
+        }
+        ctx.pending.insert(
+            tag,
+            Pending::ForwardDelta(ForwardDeltaReq {
+                conn_id: ctx.conn_id,
+                id: id.clone(),
+                base,
+                target,
+            }),
+        );
+        Some(Dispatch::Async)
+    }
+
+    /// A successful delta relay teaches the chain-home map: the base
+    /// lives at `target`, and so does the child the reply just served
+    /// (its fingerprint rides the reply) — the NEXT delta in the chain
+    /// will name that child as its base, and the ring alone would route
+    /// it to the wrong owner.
+    fn learn_chain_home(&self, fwd: &ForwardDeltaReq, resp: &Json) {
+        let Some(fleet) = &self.fleet else { return };
+        if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+            return;
+        }
+        let child = resp
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .and_then(Fingerprint::from_hex);
+        let mut homes = fleet.chain_homes.lock().unwrap();
+        if homes.len() + 2 > CHAIN_HOMES_MAX {
+            homes.clear();
+        }
+        homes.insert(fwd.base, fwd.target);
+        if let Some(c) = child {
+            homes.insert(c, fwd.target);
+        }
     }
 
     /// Try to relay a request we don't own to its ring owner.  Returns
@@ -1223,7 +1446,12 @@ impl Server {
 
     /// The local serving tail: cache probe → deadline/degrade policy →
     /// worker-pool submit.  Every request ends here on exactly one node
-    /// (the owner, a fallback origin, or a single-node server).
+    /// (the owner, a fallback origin, or a single-node server).  `seed`
+    /// (delta requests only) rides into the worker pool so a fresh run
+    /// refines the base's partition instead of starting cold; it changes
+    /// HOW a miss computes, never WHAT the cache stores — the entry
+    /// under `fp` is shared with inline requests either way.
+    #[allow(clippy::too_many_arguments)]
     fn serve_local(
         &self,
         fp: Fingerprint,
@@ -1232,6 +1460,7 @@ impl Server {
         deadline: Option<Instant>,
         id: Option<Json>,
         ctx: &mut RouteCtx<'_>,
+        seed: Option<DeltaSeed>,
     ) -> Dispatch {
         if let Some(entry) = self.cache.get(fp) {
             // a hit is near-free, so it is served even at deadline_ms=0;
@@ -1263,7 +1492,8 @@ impl Server {
                 }
             }
         }
-        match self.queue.submit(fp, g, opts.clone(), &self.cache, deadline) {
+        let miss_kind = if seed.is_some() { "delta" } else { "miss" };
+        match self.queue.submit_seeded(fp, g, opts.clone(), &self.cache, deadline, seed) {
             Submit::Hit(entry) => {
                 // the job finished between the probe above and the
                 // enqueue — still a cache hit from the client's view
@@ -1294,7 +1524,7 @@ impl Server {
             }
             outcome @ (Submit::New(_) | Submit::Joined(_)) => {
                 let (job, kind) = match &outcome {
-                    Submit::New(j) => (j, "miss"),
+                    Submit::New(j) => (j, miss_kind),
                     Submit::Joined(j) => (j, "joined"),
                     _ => unreachable!(),
                 };

@@ -194,6 +194,11 @@ const GATED_METRICS: &[(&str, bool)] = &[
     // (benches/service.rs) — a ratio of in-run measurements, so stable
     // across runner hardware; gated as a ceiling (lower is better)
     ("forwarded_hit_overhead", false),
+    // incremental re-partitioning on a ≤1% edge delta vs a cold full
+    // re-optimization (benches/partition.rs, PR 9): wall-clock speedup
+    // floor and cut-quality ceiling of the warm-started refinement
+    ("delta_refine_speedup", true),
+    ("delta_cut_ratio", false),
 ];
 
 /// Compare a freshly produced bench baseline (`current`, JSON text)

@@ -1,0 +1,367 @@
+//! End-to-end tests for delta requests (PR 9, dynamic graphs).
+//!
+//! A real `Server` on 127.0.0.1:0, driven over real TCP with the
+//! JSON-lines protocol — the same path `epgraph client --base
+//! --delta-add/--delta-remove` and the CI delta-smoke exercise.  The
+//! core contract under test:
+//!
+//!   * a delta request (`{"base":<fp>,"delta":{…}}`) and the equivalent
+//!     inline full-graph request are content-addressed to the SAME
+//!     fingerprint and share ONE cache entry bit-for-bit — exactly one
+//!     optimizer-class run between them;
+//!   * deltas chain: base → child → grandchild, every link replayable
+//!     from cache, and the chain's fingerprints match client-side
+//!     `apply_delta` + `fingerprint`;
+//!   * an unresolvable base answers the terminal `unknown_base` (no
+//!     retry hint — retrying cannot materialize the base) and serving
+//!     continues;
+//!   * a delta may empty a vertex's adjacency (n is fixed; the isolated
+//!     vertex still gets an assignment);
+//!   * after a snapshot restart the whole chain replays warm: zero
+//!     misses, zero delta runs, byte-identical responses (cache entries
+//!     retain their graphs across persistence, so children still
+//!     resolve their bases).
+
+use std::sync::Arc;
+
+use epgraph::coordinator::OptOptions;
+use epgraph::graph::delta::{apply_delta, EdgeDelta};
+use epgraph::graph::Graph;
+use epgraph::service::{fingerprint, proto, Client, GraphSpec, ServeOpts, Server};
+use epgraph::util::json::Json;
+
+fn connect(addr: std::net::SocketAddr) -> Client {
+    Client::connect(addr).expect("connect")
+}
+
+fn roundtrip(client: &mut Client, line: &str) -> Json {
+    client.roundtrip_line(line).expect("roundtrip")
+}
+
+fn start_server(opts: ServeOpts) -> (Arc<Server>, std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let server = Arc::new(Server::bind(opts).expect("bind loopback"));
+    let addr = server.local_addr();
+    let handle = {
+        let server = server.clone();
+        std::thread::spawn(move || server.run().expect("server run"))
+    };
+    (server, addr, handle)
+}
+
+fn get_u64(j: &Json, key: &str) -> u64 {
+    j.get(key).and_then(Json::as_u64).unwrap_or_else(|| panic!("stats field {key}: {j:?}"))
+}
+
+fn cached_tag(resp: &Json) -> &str {
+    resp.get("cached").and_then(Json::as_str).unwrap_or_else(|| panic!("no cached tag: {resp:?}"))
+}
+
+fn fp_hex(resp: &Json) -> String {
+    resp.get("fingerprint")
+        .and_then(Json::as_str)
+        .unwrap_or_else(|| panic!("no fingerprint: {resp:?}"))
+        .to_string()
+}
+
+/// The PR 9 accounting identity: every request terminates in exactly
+/// one of the served/rejected/error/forwarded bins, `served_delta`
+/// included.
+fn assert_identity(stats: &Json) {
+    assert_eq!(
+        get_u64(stats, "served_hit")
+            + get_u64(stats, "served_miss")
+            + get_u64(stats, "served_joined")
+            + get_u64(stats, "served_degraded")
+            + get_u64(stats, "served_delta")
+            + get_u64(stats, "rejected")
+            + get_u64(stats, "errors")
+            + get_u64(stats, "forwarded"),
+        get_u64(stats, "requests"),
+        "delta accounting identity broke: {stats:?}"
+    );
+}
+
+fn base_workload() -> (Graph, OptOptions, String) {
+    let spec = GraphSpec::Gen { name: "cfd_mesh".into(), args: vec![16, 16, 1] };
+    let opts = OptOptions { k: 8, seed: 7, ..Default::default() };
+    let g = spec.resolve().expect("resolve base");
+    let line = proto::optimize_request(&spec, &opts).dump();
+    (g, opts, line)
+}
+
+/// A small deterministic delta against `g`: drop two existing edges,
+/// add two fresh ones.  ≪1% of a cfd_mesh:16,16,1 edge set.
+fn small_delta(g: &Graph, salt: usize) -> EdgeDelta {
+    let m = g.edges.len();
+    let n = g.n as u32;
+    EdgeDelta {
+        add_edges: vec![(salt as u32 % n, n - 1 - (salt as u32 % 7)), (1 + salt as u32 % 3, n / 2)],
+        remove_edges: vec![g.edges[salt % m], g.edges[(salt + m / 2) % m]],
+    }
+}
+
+fn delta_line(base_hex: &str, delta: &EdgeDelta, opts: &OptOptions) -> String {
+    let base = epgraph::service::Fingerprint::from_hex(base_hex).expect("base hex");
+    proto::delta_request(base, delta, opts, None).dump()
+}
+
+#[test]
+fn delta_and_inline_requests_share_one_bit_identical_entry() {
+    let (_server, addr, handle) =
+        start_server(ServeOpts { port: 0, threads: 2, ..Default::default() });
+    let mut client = connect(addr);
+    let (g, opts, base_line) = base_workload();
+
+    // seed the base: the one full optimizer run
+    let base_resp = roundtrip(&mut client, &base_line);
+    assert_eq!(cached_tag(&base_resp), "miss", "{base_resp:?}");
+    let base_hex = fp_hex(&base_resp);
+    assert_eq!(base_hex, fingerprint(&g, &opts).to_hex(), "base fingerprint mismatch");
+
+    // the delta request: served by the incremental path, tagged "delta"
+    let delta = small_delta(&g, 0);
+    let d_resp = roundtrip(&mut client, &delta_line(&base_hex, &delta, &opts));
+    assert_eq!(cached_tag(&d_resp), "delta", "{d_resp:?}");
+
+    // the child is content-addressed: its fingerprint is the POST-delta
+    // graph's, computed client-side from the same delta semantics
+    let (post, _) = apply_delta(&g, &delta).expect("apply delta");
+    let child_hex = fingerprint(&post, &opts).to_hex();
+    assert_eq!(fp_hex(&d_resp), child_hex, "delta entry must live at the post-delta fingerprint");
+
+    // the equivalent inline full-graph request lands on the SAME entry:
+    // a hit, same fingerprint, same schedule bytes
+    let inline = GraphSpec::Inline { n: post.n, edges: post.edges.clone() };
+    let inline_resp = roundtrip(&mut client, &proto::optimize_request(&inline, &opts).dump());
+    assert_eq!(cached_tag(&inline_resp), "hit", "{inline_resp:?}");
+    assert_eq!(fp_hex(&inline_resp), child_hex);
+
+    // bit-for-bit: a repeat of the delta request is now a cache hit on
+    // that shared entry, and its bytes equal the inline hit's bytes
+    let d_again = roundtrip(&mut client, &delta_line(&base_hex, &delta, &opts));
+    assert_eq!(cached_tag(&d_again), "hit", "{d_again:?}");
+    assert_eq!(
+        d_again.dump(),
+        inline_resp.dump(),
+        "delta-derived and inline requests must serve one shared entry bit-for-bit"
+    );
+    // and the computing delta response carried the same schedule
+    for key in ["assign", "layout", "quality", "k", "fingerprint"] {
+        assert_eq!(
+            d_resp.get(key).map(Json::dump),
+            inline_resp.get(key).map(Json::dump),
+            "delta response diverged from the shared entry at {key}"
+        );
+    }
+
+    // exactly one optimizer-class run for the child, one for the base
+    let stats = roundtrip(&mut client, &proto::simple_request("stats").dump());
+    assert_identity(&stats);
+    assert_eq!(get_u64(&stats, "served_miss"), 1, "{stats:?}");
+    assert_eq!(get_u64(&stats, "served_delta"), 1, "{stats:?}");
+    assert_eq!(get_u64(&stats, "served_hit"), 2);
+    assert_eq!(get_u64(&stats, "errors"), 0);
+    let cache = stats.get("cache").expect("cache stats");
+    assert_eq!(get_u64(cache, "insertions"), 2, "base + child, nothing else");
+    // delta runs are accounted in their own histogram, not optimize_ms
+    assert_eq!(get_u64(stats.get("optimize_ms").expect("optimize_ms"), "count"), 1);
+    assert_eq!(get_u64(stats.get("delta_ms").expect("delta_ms"), "count"), 1);
+
+    roundtrip(&mut client, &proto::simple_request("shutdown").dump());
+    handle.join().expect("server thread");
+}
+
+#[test]
+fn delta_chains_base_child_grandchild_and_replay_from_cache() {
+    let (_server, addr, handle) =
+        start_server(ServeOpts { port: 0, threads: 2, ..Default::default() });
+    let mut client = connect(addr);
+    let (g, opts, base_line) = base_workload();
+
+    let base_resp = roundtrip(&mut client, &base_line);
+    assert_eq!(cached_tag(&base_resp), "miss");
+    let base_hex = fp_hex(&base_resp);
+
+    // base --d1--> child --d2--> grandchild, mirrored client-side
+    let d1 = small_delta(&g, 1);
+    let (post1, _) = apply_delta(&g, &d1).expect("apply d1");
+    let d2 = small_delta(&post1, 2);
+    let (post2, _) = apply_delta(&post1, &d2).expect("apply d2");
+
+    let child_resp = roundtrip(&mut client, &delta_line(&base_hex, &d1, &opts));
+    assert_eq!(cached_tag(&child_resp), "delta", "{child_resp:?}");
+    let child_hex = fp_hex(&child_resp);
+    assert_eq!(child_hex, fingerprint(&post1, &opts).to_hex());
+
+    // the grandchild names the CHILD as its base — chains compose
+    let grand_resp = roundtrip(&mut client, &delta_line(&child_hex, &d2, &opts));
+    assert_eq!(cached_tag(&grand_resp), "delta", "{grand_resp:?}");
+    let grand_hex = fp_hex(&grand_resp);
+    assert_eq!(grand_hex, fingerprint(&post2, &opts).to_hex());
+    assert_ne!(grand_hex, child_hex);
+    assert_ne!(child_hex, base_hex);
+
+    // every link replays from cache — no recomputation anywhere
+    for (line, want_hex) in [
+        (base_line.clone(), base_hex.clone()),
+        (delta_line(&base_hex, &d1, &opts), child_hex.clone()),
+        (delta_line(&child_hex, &d2, &opts), grand_hex.clone()),
+    ] {
+        let resp = roundtrip(&mut client, &line);
+        assert_eq!(cached_tag(&resp), "hit", "replay must hit: {resp:?}");
+        assert_eq!(fp_hex(&resp), want_hex);
+    }
+
+    let stats = roundtrip(&mut client, &proto::simple_request("stats").dump());
+    assert_identity(&stats);
+    assert_eq!(get_u64(&stats, "served_miss"), 1);
+    assert_eq!(get_u64(&stats, "served_delta"), 2, "one incremental run per chain link");
+    let cache = stats.get("cache").expect("cache stats");
+    assert_eq!(get_u64(cache, "insertions"), 3, "base + child + grandchild");
+
+    roundtrip(&mut client, &proto::simple_request("shutdown").dump());
+    handle.join().expect("server thread");
+}
+
+#[test]
+fn unknown_base_and_bad_deltas_fail_terminally_without_disturbing_serving() {
+    let (_server, addr, handle) =
+        start_server(ServeOpts { port: 0, threads: 1, ..Default::default() });
+    let mut client = connect(addr);
+    let (g, opts, base_line) = base_workload();
+
+    // a base nobody ever served: terminal unknown_base, NO retry hint
+    let ghost = "deadbeefdeadbeefdeadbeefdeadbeef";
+    let delta = small_delta(&g, 3);
+    let err = roundtrip(&mut client, &delta_line(ghost, &delta, &opts));
+    assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false), "{err:?}");
+    assert_eq!(err.get("error").and_then(Json::as_str), Some("unknown_base"));
+    assert!(
+        err.get("retry_after_ms").is_none(),
+        "unknown_base is terminal — retrying cannot materialize the base: {err:?}"
+    );
+
+    // seed the base, then send a delta removing an edge that is not in
+    // the base graph: a bad delta, also terminal
+    let base_resp = roundtrip(&mut client, &base_line);
+    assert_eq!(cached_tag(&base_resp), "miss");
+    let base_hex = fp_hex(&base_resp);
+    let bogus = EdgeDelta { add_edges: vec![], remove_edges: vec![(0, (g.n - 1) as u32)] };
+    let err = roundtrip(&mut client, &delta_line(&base_hex, &bogus, &opts));
+    assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false), "{err:?}");
+    let msg = err.get("error").and_then(Json::as_str).unwrap_or_default();
+    assert!(msg.starts_with("bad delta:"), "unexpected error: {msg}");
+    assert!(err.get("retry_after_ms").is_none());
+
+    // serving continues on the same connection: a good delta still works
+    let good = roundtrip(&mut client, &delta_line(&base_hex, &delta, &opts));
+    assert_eq!(cached_tag(&good), "delta", "{good:?}");
+
+    let stats = roundtrip(&mut client, &proto::simple_request("stats").dump());
+    assert_identity(&stats);
+    assert_eq!(get_u64(&stats, "errors"), 2, "{stats:?}");
+    assert_eq!(get_u64(&stats, "served_delta"), 1);
+
+    roundtrip(&mut client, &proto::simple_request("shutdown").dump());
+    handle.join().expect("server thread");
+}
+
+#[test]
+fn a_delta_can_empty_a_vertex_adjacency() {
+    let (_server, addr, handle) =
+        start_server(ServeOpts { port: 0, threads: 1, ..Default::default() });
+    let mut client = connect(addr);
+    let (g, opts, base_line) = base_workload();
+
+    let base_resp = roundtrip(&mut client, &base_line);
+    assert_eq!(cached_tag(&base_resp), "miss");
+    let base_hex = fp_hex(&base_resp);
+
+    // strip EVERY edge incident to one vertex — n is fixed, so the
+    // post-delta graph carries a genuinely isolated vertex
+    let v = (g.n / 2) as u32;
+    let incident: Vec<(u32, u32)> =
+        g.edges.iter().copied().filter(|&(a, b)| a == v || b == v).collect();
+    assert!(!incident.is_empty(), "test vertex must start with neighbors");
+    let delta = EdgeDelta { add_edges: vec![], remove_edges: incident };
+
+    let resp = roundtrip(&mut client, &delta_line(&base_hex, &delta, &opts));
+    assert_eq!(cached_tag(&resp), "delta", "{resp:?}");
+    let (post, _) = apply_delta(&g, &delta).expect("apply isolation delta");
+    assert_eq!(fp_hex(&resp), fingerprint(&post, &opts).to_hex());
+    assert_eq!(post.degree(v), 0, "vertex must be isolated");
+    // the isolated vertex still gets an assignment: n entries, all valid
+    let assign = resp.get("assign").and_then(Json::as_arr).expect("assign");
+    assert_eq!(assign.len(), g.n, "n is fixed under deltas");
+    for a in assign {
+        assert!(a.as_u64().map(|p| (p as usize) < opts.k).unwrap_or(false), "bad part id");
+    }
+
+    roundtrip(&mut client, &proto::simple_request("shutdown").dump());
+    handle.join().expect("server thread");
+}
+
+/// The persistence contract extends to chains: cache entries retain
+/// their graphs through snapshot v2, so after a restart every link —
+/// including the deltas, whose bases must re-resolve from the warm
+/// cache — replays as a hit with byte-identical responses.
+#[test]
+fn snapshot_restart_replays_the_delta_chain_warm() {
+    let snap = std::env::temp_dir().join(format!("epgraph-delta-snap-{}.bin", std::process::id()));
+    std::fs::remove_file(&snap).ok();
+    let opts_for = |snap: &std::path::Path| ServeOpts {
+        port: 0,
+        threads: 2,
+        snapshot: Some(snap.to_path_buf()),
+        ..Default::default()
+    };
+    let (g, opts, base_line) = base_workload();
+    let d1 = small_delta(&g, 4);
+    let (post1, _) = apply_delta(&g, &d1).expect("apply d1");
+    let d2 = small_delta(&post1, 5);
+
+    // ---- run 1: build the chain, capture the warmed hit bytes
+    let (server, addr, handle) = start_server(opts_for(&snap));
+    assert_eq!(server.warm_report().map(|w| w.loaded), Some(0), "cold start");
+    let mut client = connect(addr);
+    let base_hex = fp_hex(&roundtrip(&mut client, &base_line));
+    let child_hex = fp_hex(&roundtrip(&mut client, &delta_line(&base_hex, &d1, &opts)));
+    let _grand_hex = fp_hex(&roundtrip(&mut client, &delta_line(&child_hex, &d2, &opts)));
+    let lines = vec![
+        base_line.clone(),
+        delta_line(&base_hex, &d1, &opts),
+        delta_line(&child_hex, &d2, &opts),
+    ];
+    let hit_dumps: Vec<String> = lines
+        .iter()
+        .map(|l| {
+            let resp = roundtrip(&mut client, l);
+            assert_eq!(cached_tag(&resp), "hit", "{resp:?}");
+            resp.dump()
+        })
+        .collect();
+    roundtrip(&mut client, &proto::simple_request("shutdown").dump());
+    handle.join().expect("server thread"); // final snapshot written here
+    assert!(snap.exists(), "shutdown must leave a snapshot behind");
+
+    // ---- run 2: warm start; the whole chain replays with zero misses
+    let (server, addr, handle) = start_server(opts_for(&snap));
+    let warm = server.warm_report().expect("persistence configured");
+    assert_eq!(warm.loaded, 3, "base + child + grandchild: {warm:?}");
+    assert_eq!(warm.skipped_corrupt, 0);
+    let mut client = connect(addr);
+    for (line, want) in lines.iter().zip(&hit_dumps) {
+        let resp = roundtrip(&mut client, line);
+        assert_eq!(cached_tag(&resp), "hit", "warm chain must replay as hits: {resp:?}");
+        assert_eq!(&resp.dump(), want, "warm response must be byte-identical");
+    }
+    let stats = roundtrip(&mut client, &proto::simple_request("stats").dump());
+    assert_identity(&stats);
+    assert_eq!(get_u64(&stats, "served_miss"), 0, "{stats:?}");
+    assert_eq!(get_u64(&stats, "served_delta"), 0, "no incremental runs after warm start");
+    assert_eq!(get_u64(&stats, "served_hit"), lines.len() as u64);
+
+    roundtrip(&mut client, &proto::simple_request("shutdown").dump());
+    handle.join().expect("server thread");
+    std::fs::remove_file(&snap).ok();
+}

@@ -19,12 +19,17 @@
 //!     succeed via local recompute (`owner_down_fallback` rises) and
 //!     stay bit-identical;
 //!   * per-shard snapshots persist only owned fingerprints, so a warm
-//!     restart loads exactly this member's shard.
+//!     restart loads exactly this member's shard;
+//!   * delta requests (PR 9) route to the member holding their BASE —
+//!     the ring owner of the base fingerprint, or a learned chain home
+//!     for chained deltas, whose entries live with the root's owner
+//!     rather than at their own fingerprints' ring slots.
 
 use std::net::TcpListener;
 use std::sync::Arc;
 
 use epgraph::coordinator::{optimize_graph, OptOptions};
+use epgraph::graph::delta::{apply_delta, EdgeDelta};
 use epgraph::service::{
     fingerprint, proto, Client, Cluster, GraphSpec, HashRing, ServeOpts, Server,
 };
@@ -90,6 +95,7 @@ fn assert_identity(stats: &Json) {
             + get_u64(stats, "served_miss")
             + get_u64(stats, "served_joined")
             + get_u64(stats, "served_degraded")
+            + get_u64(stats, "served_delta")
             + get_u64(stats, "rejected")
             + get_u64(stats, "errors")
             + get_u64(stats, "forwarded"),
@@ -337,4 +343,123 @@ fn per_shard_snapshots_persist_exactly_the_owned_fingerprints() {
     // sanity: the six workloads really were spread over the ring
     assert_eq!(owners.len(), 6);
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Delta requests follow their BASE, not their own fingerprint's ring
+/// slot.  A delta sent to a non-owner forwards to the ring owner of the
+/// base; a successful relay teaches the origin the chain's home, so the
+/// NEXT link (whose base is the child, which the ring would route
+/// elsewhere) still reaches the member actually holding the chain.  A
+/// member with neither the base nor a learned home answers the terminal
+/// `unknown_base` — relays never re-forward.
+#[test]
+fn deltas_forward_to_the_base_owner_and_chains_follow_the_root() {
+    let ports = reserve_ports(3);
+    let peers: Vec<String> = ports.iter().map(|p| format!("127.0.0.1:{p}")).collect();
+    let ring = HashRing::new(&peers).expect("ring");
+
+    let spec = GraphSpec::Gen { name: "cfd_mesh".into(), args: vec![10, 10, 1] };
+    let g = spec.resolve().unwrap();
+    // d1's post-delta graph is seed-independent, so we can search for a
+    // seed where node 0 owns the BASE but the ring would send the
+    // CHILD's fingerprint to node 1 — the chain-home learning is then
+    // load-bearing, not an accident of ring placement.
+    let d1 = EdgeDelta {
+        add_edges: vec![(0, (g.n - 1) as u32)],
+        remove_edges: vec![g.edges[0], g.edges[g.edges.len() / 2]],
+    };
+    let (post1, _) = apply_delta(&g, &d1).expect("apply d1");
+    let mut seed = 1u64;
+    let (opts, base_fp, child_fp) = loop {
+        let o = OptOptions { k: 4, seed, ..Default::default() };
+        let (b, c) = (fingerprint(&g, &o), fingerprint(&post1, &o));
+        if ring.owner_index(b) == 0 && ring.owner_index(c) == 1 {
+            break (o, b, c);
+        }
+        seed += 1;
+    };
+    let d2 = EdgeDelta {
+        add_edges: vec![(1, (g.n - 2) as u32)],
+        remove_edges: vec![post1.edges[1]],
+    };
+    let (post2, _) = apply_delta(&post1, &d2).expect("apply d2");
+    let grand_fp = fingerprint(&post2, &opts);
+
+    let members: Vec<_> = ports.iter().map(|&p| start_member(p, &peers, |_| {})).collect();
+    let mut clients: Vec<Client> =
+        peers.iter().map(|a| Client::connect(a.as_str()).expect("connect member")).collect();
+
+    // prime the base at its owner
+    let first = roundtrip(&mut clients[0], &proto::optimize_request(&spec, &opts).dump());
+    assert_eq!(cached_tag(&first), "miss", "{first:?}");
+
+    // link 1 through a NON-owner: node 1 holds nothing, forwards to the
+    // ring owner of the base, and relays the incremental run's reply
+    let l1 = proto::delta_request(base_fp, &d1, &opts, None).dump();
+    let c1_resp = roundtrip(&mut clients[1], &l1);
+    assert_eq!(cached_tag(&c1_resp), "delta", "relayed incremental run: {c1_resp:?}");
+    assert_eq!(
+        c1_resp.get("fingerprint").and_then(Json::as_str),
+        Some(child_fp.to_hex().as_str()),
+        "chain entries are content-addressed"
+    );
+
+    // link 2 names the CHILD as base.  The ring would route the child's
+    // fingerprint to node 1 itself (by construction above) — only the
+    // chain home node 1 learned from the link-1 relay finds the owner.
+    let l2 = proto::delta_request(child_fp, &d2, &opts, None).dump();
+    let c2_resp = roundtrip(&mut clients[1], &l2);
+    assert_eq!(cached_tag(&c2_resp), "delta", "chain must follow the root: {c2_resp:?}");
+    assert_eq!(
+        c2_resp.get("fingerprint").and_then(Json::as_str),
+        Some(grand_fp.to_hex().as_str())
+    );
+
+    // replay through node 1: forwarded again, served from the owner's
+    // cache — and byte-identical to a hit taken directly at the owner
+    let replay = roundtrip(&mut clients[1], &l2);
+    assert_eq!(cached_tag(&replay), "hit", "{replay:?}");
+    let direct = roundtrip(&mut clients[0], &l2);
+    assert_eq!(cached_tag(&direct), "hit");
+    assert_eq!(replay.dump(), direct.dump(), "relayed hit must be the owner's bytes");
+
+    // node 2 never relayed for this chain: no learned home, and the
+    // ring sends the child's fingerprint to node 1, which holds nothing
+    // and must NOT re-forward — terminal unknown_base, no retry hint
+    let err = roundtrip(&mut clients[2], &l2);
+    assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false), "{err:?}");
+    assert_eq!(err.get("error").and_then(Json::as_str), Some("unknown_base"));
+    assert!(err.get("retry_after_ms").is_none(), "terminal: {err:?}");
+
+    // per-node accounting
+    let stats: Vec<Json> = clients
+        .iter_mut()
+        .map(|c| roundtrip(c, &proto::simple_request("stats").dump()))
+        .collect();
+    for s in &stats {
+        assert_identity(s);
+    }
+    // owner: its own 2 requests (miss + direct hit) plus 3 relayed-in
+    // (d1, d2, replay) — two incremental runs, never a full recompute
+    assert_eq!(get_u64(&stats[0], "served_miss"), 1);
+    assert_eq!(get_u64(&stats[0], "served_delta"), 2);
+    assert_eq!(get_u64(stats[0].get("fleet").expect("fleet"), "proxied_in"), 3);
+    // node 1: three relays out for the chain, one dead-end relay in
+    assert_eq!(get_u64(&stats[1], "forwarded"), 3);
+    assert_eq!(get_u64(&stats[1], "errors"), 1, "the un-resolvable relay: {:?}", stats[1]);
+    assert_eq!(get_u64(stats[1].get("fleet").expect("fleet"), "proxied_in"), 1);
+    // node 2: its one request left over the peer link
+    assert_eq!(get_u64(&stats[2], "forwarded"), 1);
+    for s in &stats {
+        assert_eq!(
+            get_u64(s.get("fleet").expect("fleet"), "owner_down_fallback"),
+            0,
+            "no member may fall back to a local recompute of a delta"
+        );
+    }
+
+    for (i, (_, handle)) in members.into_iter().enumerate() {
+        roundtrip(&mut clients[i], &proto::simple_request("shutdown").dump());
+        handle.join().expect("member thread");
+    }
 }
