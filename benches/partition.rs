@@ -19,7 +19,7 @@ use epgraph::coordinator::{optimize_delta, optimize_graph, OptOptions};
 use epgraph::graph::delta::{apply_delta, EdgeDelta};
 use epgraph::graph::gen as ggen;
 use epgraph::experiments as exp;
-use epgraph::partition::vertex::{self, VpOpts};
+use epgraph::partition::vertex::{self, Mode, VpOpts};
 use epgraph::partition::{ep, hypergraph, quality, reference, Method};
 use epgraph::sparse::gen;
 use epgraph::util::benchkit::{bench, time_once, JsonReport};
@@ -248,6 +248,67 @@ fn delta_headline(seed: u64, r: &mut JsonReport) {
         .num("delta_cut_ratio", ratio);
 }
 
+/// PR 10 headline: the data-parallel engines (`Mode::Lp` —
+/// label-propagation coarsening + conflict-free parallel boundary
+/// refinement) vs the FM quality reference on the same cold k=64
+/// partition, both on all cores.  FM stays the serving default; LP buys
+/// miss latency (`lp_speedup`, benchkit-gated against the committed
+/// floor) at a bounded quality cost (`lp_cut_ratio` ≤ 1.15, hard
+/// in-bench assert AND a lower-is-better gate).
+fn lp_headline(seed: u64, r: &mut JsonReport) {
+    let smoke = std::env::var("EPGRAPH_BENCH_SMOKE").is_ok();
+    // power_law(n, 3): m ≈ 3n, so full mode crosses 1M edges
+    let n = if smoke { 60_000 } else { 350_000 };
+    let k = 64usize;
+    println!("\n## data-parallel LP headline ({}, k={k})\n", if smoke { "smoke" } else { "full" });
+    let g = ggen::power_law(n, 3, seed ^ 0x1B9A);
+    println!("power_law({n}, 3): n={} m={} k={k}", g.n, g.m());
+
+    let fm = ep::EpOpts {
+        vp: VpOpts { seed, threads: 0, ..Default::default() },
+        ..Default::default()
+    };
+    let lp = {
+        let mut o = fm.clone();
+        o.vp.mode = Mode::Lp;
+        o
+    };
+
+    let reps = headline_reps(smoke);
+    let (p_fm, t_fm) = timed_min(reps, || ep::partition_edges(&g, k, &fm));
+    let (p_lp, t_lp) = timed_min(reps, || ep::partition_edges(&g, k, &lp));
+    // the serving contract extends to LP: one cache entry per
+    // fingerprint regardless of the worker pool size
+    let lp_1t = {
+        let mut o = lp.clone();
+        o.vp.threads = 1;
+        o
+    };
+    let p_lp_1t = ep::partition_edges(&g, k, &lp_1t);
+    assert_eq!(p_lp.assign, p_lp_1t.assign, "thread count must not change the LP partition");
+
+    let cut_fm = quality::vertex_cut_cost_par(&g, &p_fm, 0);
+    let cut_lp = quality::vertex_cut_cost_par(&g, &p_lp, 0);
+    let speedup = t_fm.as_secs_f64() / t_lp.as_secs_f64().max(1e-9);
+    let ratio = cut_lp as f64 / cut_fm.max(1) as f64;
+    println!("  fm (quality reference): {:>10.3}s  cut={cut_fm}", t_fm.as_secs_f64());
+    println!(
+        "  lp (data-parallel):     {:>10.3}s  cut={cut_lp}  speedup={speedup:.2}x  cut_ratio={ratio:.4}",
+        t_lp.as_secs_f64()
+    );
+    assert!(
+        ratio <= 1.15,
+        "LP cut {cut_lp} exceeds the FM reference cut {cut_fm} by more than 15%"
+    );
+
+    r.num("lp_fm_secs", t_fm.as_secs_f64())
+        .num("lp_secs", t_lp.as_secs_f64())
+        .num("lp_speedup", speedup)
+        .int("lp_fm_cut", cut_fm)
+        .int("lp_cut", cut_lp)
+        .num("lp_cut_ratio", ratio);
+}
+
 fn main() {
     let seed = 42;
 
@@ -255,6 +316,7 @@ fn main() {
     perf_headline(seed, &mut report);
     kway_refine_headline(seed, &mut report);
     delta_headline(seed, &mut report);
+    lp_headline(seed, &mut report);
     match report.write("BENCH_partition.json") {
         Ok(()) => println!("\n  baseline written to BENCH_partition.json\n"),
         Err(e) => println!("\n  WARNING: could not write BENCH_partition.json: {e}\n"),

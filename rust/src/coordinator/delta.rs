@@ -102,6 +102,7 @@ pub fn optimize_delta_checked(
         vp: crate::partition::vertex::VpOpts {
             seed: opts.seed,
             threads: opts.threads,
+            mode: opts.mode,
             ..Default::default()
         },
         ..Default::default()

@@ -32,6 +32,11 @@ pub struct OptOptions {
     /// hard per-block task cap = thread-block size (a block of N threads
     /// runs at most N tasks); None = no physical cap
     pub block_cap: Option<usize>,
+    /// partitioner engine family (PR 10): `Mode::Fm` is the quality
+    /// reference and serving default; `Mode::Lp` is the data-parallel
+    /// fast-miss path.  Changes the output, so it is part of the
+    /// schedule-cache fingerprint.
+    pub mode: crate::partition::Mode,
     /// worker threads for the partitioner's parallel phases (0 = one per
     /// core, 1 = sequential).  The optimization pipeline already runs on
     /// its own CPU thread (paper §4.2); this lets the partitioner fan
@@ -48,6 +53,7 @@ impl Default for OptOptions {
             method: Method::Ep,
             use_special_patterns: true,
             block_cap: None,
+            mode: crate::partition::Mode::Fm,
             threads: 0,
         }
     }
@@ -201,6 +207,7 @@ pub fn optimize_graph_checked(
                 vp: crate::partition::vertex::VpOpts {
                     seed: opts.seed,
                     threads: opts.threads,
+                    mode: opts.mode,
                     ..Default::default()
                 },
                 ..Default::default()

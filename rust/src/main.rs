@@ -14,7 +14,7 @@
 //!                     [--op optimize|stats|health|shutdown]
 //!                     [--gen SPEC | --matrix NAME]
 //!                     [--base FINGERPRINT --delta-add u:v,... --delta-remove u:v,...]
-//!                     [--k N] [--seed S] [--repeat N] [--concurrency N] [--verify]
+//!                     [--k N] [--seed S] [--mode fm|lp] [--repeat N] [--concurrency N] [--verify]
 //!                     [--pipeline N] [--deadline-ms N] [--max-retries N]
 //!                     [--retry-budget-ms N]
 //!   epgraph info
@@ -120,7 +120,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                  epgraph bench-compare <baseline.json> <current.json> [--tol 0.25]\n  \
                  epgraph artifacts [--outdir DIR] [--configs t0,s1,m1]\n  \
                  epgraph serve [--port 7878] [--threads 0] [--partition-threads 1] [--queue-cap 64] [--cache-mb 64] [--shards 8]\n                [--snapshot cache.snap] [--snapshot-every 64] [--snapshot-keep 3] [--snapshot-interval 0]\n                [--no-degrade] [--chaos seed=7,worker_panic=0.1,...] [--matrix-dir DIR]\n                [--peers 127.0.0.1:7878,127.0.0.1:7879,...]\n  \
-                 epgraph client [--addr 127.0.0.1:7878 | --cluster 127.0.0.1:7878,...] [--op optimize|stats|health|shutdown]\n                 [--gen cfd_mesh:24,24,1 | --matrix NAME]\n                 [--base FINGERPRINT --delta-add u:v,u:v,... --delta-remove u:v,...]\n                 [--k N] [--seed S] [--method M] [--repeat 1] [--concurrency 1] [--verify] [--pipeline N]\n                 [--deadline-ms N] [--max-retries 8] [--retry-budget-ms 30000]\n  \
+                 epgraph client [--addr 127.0.0.1:7878 | --cluster 127.0.0.1:7878,...] [--op optimize|stats|health|shutdown]\n                 [--gen cfd_mesh:24,24,1 | --matrix NAME]\n                 [--base FINGERPRINT --delta-add u:v,u:v,... --delta-remove u:v,...]\n                 [--k N] [--seed S] [--method M] [--mode fm|lp] [--repeat 1] [--concurrency 1] [--verify] [--pipeline N]\n                 [--deadline-ms N] [--max-retries 8] [--retry-budget-ms 30000]\n  \
                  epgraph info"
             );
             Ok(())
@@ -496,6 +496,10 @@ fn cmd_client(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(m) = flags.get("method") {
         opts.method = epgraph::partition::Method::from_name(m)
             .ok_or_else(|| anyhow!("unknown method {m}"))?;
+    }
+    if let Some(m) = flags.get("mode") {
+        opts.mode = epgraph::partition::Mode::from_name(m)
+            .ok_or_else(|| anyhow!("unknown mode {m} (expected fm|lp)"))?;
     }
     let repeat = get_usize(flags, "repeat", 1).max(1);
     let concurrency = get_usize(flags, "concurrency", 1).clamp(1, repeat);

@@ -182,8 +182,14 @@ pub fn partition_edges(g: &Graph, k: usize, opts: &EpOpts) -> EdgePartition {
     }
     let tg = task_graph(g, opts.chain, opts.vp.seed);
     // fast k-way only pays off on large graphs; below the threshold the
-    // recursive-bisection path is both cheap and higher quality
-    let part = if opts.fast_kway && tg.n >= FAST_KWAY_MIN_TASKS {
+    // recursive-bisection path is both cheap and higher quality.
+    // `Mode::Lp` always takes the single-chain path: its engines live
+    // behind the Coarsener/Refiner seams of `partition_kway`, and a
+    // mode request must exercise them at every size (CI smokes and
+    // property tests run far below the fast-kway threshold).
+    let single_chain = (opts.fast_kway && tg.n >= FAST_KWAY_MIN_TASKS)
+        || opts.vp.mode == vertex::Mode::Lp;
+    let part = if single_chain {
         vertex::partition_kway(&tg, k, &opts.vp)
     } else {
         vertex::partition_kway_rb(&tg, k, &opts.vp)

@@ -9,8 +9,11 @@
 //! over to the surviving tasks through the delta's edge-id map, give
 //! each new task the block of its first already-assigned neighbor task
 //! (falling back to the lightest block), and hand the seeded partition
-//! to `vertex::kway_polish` (balance → boundary FM → balance on one
-//! pooled workspace).  Only connectivity touched by the delta differs
+//! to `vertex::kway_polish` (balance → boundary refine → balance on one
+//! pooled workspace; the refine step dispatches on `VpOpts::mode`, so a
+//! delta against a `Mode::Lp` cache entry polishes with the same
+//! data-parallel engine that built it).  Only connectivity touched by
+//! the delta differs
 //! from the converged base, so the climb terminates after local
 //! repairs — a small fraction of full re-optimization's cost at nearly
 //! its quality (`delta_refine_speedup` / `delta_cut_ratio` in

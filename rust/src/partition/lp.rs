@@ -1,0 +1,469 @@
+//! Data-parallel engines for `Mode::Lp` (PR 10): label-propagation
+//! coarsening and conflict-free parallel boundary refinement, after
+//! "GPU-Accelerated Algorithms for Process Mapping" (arxiv 2510.12196).
+//!
+//! Both engines are built from data-parallel primitives only — per-round
+//! proposal sweeps that are pure functions of the FROZEN previous-round
+//! state, followed by a deterministic commit — which is what makes this
+//! mode (a) a much faster cold-miss path than the serial FM hill-climb
+//! on huge graphs and (b) expressible through the HLO/runtime backend
+//! later (ROADMAP direction 5).
+//!
+//! Determinism contract (same as the FM pipeline, PERF.md): every
+//! parallel sweep computes each output cell as a pure function of
+//! (frozen input, seed, index), so chunking never changes a result and
+//! a fixed seed yields bit-identical partitions for every thread count.
+//! Ties are broken by a `mix64` hash of (round seed, vertex, candidate)
+//! — deterministic, but uncorrelated enough that neighboring vertices
+//! don't all resolve ties the same way (which would oscillate).
+//!
+//! **Coarsening** (`lp_cluster`): a few Jacobi label-propagation rounds.
+//! Labels start as singletons; each round every vertex proposes the
+//! adjacent label with the largest total edge weight to it, subject to
+//! a size constraint against the frozen previous-round cluster weights
+//! (so one popular label can't swallow the graph), and all proposals
+//! commit at once.  Heavy clone-edge pairs (ep.rs `ORIG_EDGE_WEIGHT`)
+//! score astronomically, so they merge in round one — the "never cut an
+//! original edge" property is preserved structurally, as in HEM.
+//! Surviving labels are densely renumbered in ascending label order and
+//! the shared `contract` builds the coarse graph.
+//!
+//! **Refinement** (`parallel_boundary_refine`): rounds of
+//! propose → resolve conflicts → commit.  Gains are computed against the
+//! frozen pre-batch partition; a proposer commits only if it is the
+//! (gain, hash, id)-maximum among its proposing neighbors, so the
+//! committed batch is an independent set of movers — no committed move's
+//! gain can be invalidated by another move in the same batch, and the
+//! cut decreases by exactly the sum of committed gains.  Commits apply
+//! in ascending vertex id with a live balance-cap re-check, so the
+//! balance epsilon holds exactly.  Only strictly-positive gains move,
+//! which both guarantees monotone convergence and structurally refuses
+//! to split contracted heavy pairs (their eviction gain is a huge
+//! negative).
+
+use crate::util::par;
+
+use super::vertex::{derive_seed, mix64, VpOpts, WGraph};
+
+/// Label-propagation rounds per coarsening level.  LP converges
+/// geometrically for clustering purposes; three frozen-state rounds
+/// shrink a level as far as it is going to shrink (further rounds
+/// mostly shuffle labels inside clusters).
+const LP_ROUNDS: usize = 3;
+
+/// Cluster the graph by size-constrained Jacobi label propagation and
+/// return `(cmap, nc)` in the same shape the matching engines produce —
+/// ready for the shared `contract`.  `target` is the coarse vertex
+/// count the chain is driving toward; clusters are capped near the
+/// average weight a `target`-cluster coarsening implies (never below
+/// two max-weight vertices, so merging is always possible).
+/// Deterministic and thread-count-invariant.
+pub fn lp_cluster(g: &WGraph, seed: u64, threads: usize, target: usize) -> (Vec<u32>, usize) {
+    let n = g.n;
+    if n == 0 {
+        return (Vec::new(), 0);
+    }
+    let total_w: i64 = g.vwgt.iter().sum();
+    let max_vw = g.vwgt.iter().copied().max().unwrap_or(1).max(1);
+    let max_cw = (total_w / target.max(1) as i64 + 1).max(2 * max_vw);
+
+    let mut label: Vec<u32> = (0..n as u32).collect();
+    let mut cluster_w: Vec<i64> = g.vwgt.clone();
+
+    for round in 0..LP_ROUNDS {
+        let rseed = derive_seed(seed, round as u64 + 1);
+        // Jacobi sweep: every proposal reads only the frozen labels and
+        // cluster weights of the previous round, so the sweep is a pure
+        // per-vertex function — chunking is irrelevant to the result.
+        let prev = &label;
+        let prev_w = &cluster_w;
+        let t = par::resolve_threads(threads).max(1);
+        let ranges = par::chunk_ranges(n, t);
+        let next_chunks: Vec<Vec<u32>> = par::run_tasks_with(
+            threads,
+            ranges.len(),
+            Vec::new,
+            |buf: &mut Vec<(u32, i64)>, wi| {
+                let (lo, hi) = ranges[wi];
+                let mut out = Vec::with_capacity(hi - lo);
+                for v in lo..hi {
+                    out.push(choose_label(g, v, prev, prev_w, max_cw, rseed, buf));
+                }
+                out
+            },
+        );
+        let mut changed = 0usize;
+        let mut i = 0usize;
+        for chunk in next_chunks {
+            for l in chunk {
+                if label[i] != l {
+                    label[i] = l;
+                    changed += 1;
+                }
+                i += 1;
+            }
+        }
+        if changed == 0 {
+            break; // converged early — later rounds are identity
+        }
+        // exact cluster weights for the next round's size constraint
+        for w in cluster_w.iter_mut() {
+            *w = 0;
+        }
+        for (&l, &w) in label.iter().zip(&g.vwgt) {
+            cluster_w[l as usize] += w;
+        }
+    }
+
+    // dense renumbering in ascending surviving-label order — a fixed
+    // rule, so the cmap (and everything downstream) is deterministic
+    let mut used = vec![false; n];
+    for &l in &label {
+        used[l as usize] = true;
+    }
+    let mut newid = vec![0u32; n];
+    let mut nc = 0u32;
+    for (&u, id) in used.iter().zip(newid.iter_mut()) {
+        if u {
+            *id = nc;
+            nc += 1;
+        }
+    }
+    let cmap: Vec<u32> = label.iter().map(|&l| newid[l as usize]).collect();
+    (cmap, nc as usize)
+}
+
+/// One vertex's label proposal: the adjacent label with the largest
+/// total edge weight to `v`, among labels whose frozen cluster weight
+/// still has room for `v` (staying put is always admissible).  Ties on
+/// weight break by a per-(vertex, label) hash, then by the smaller
+/// label.  `buf` is per-worker scratch — gather the (label, weight)
+/// incidence, sort by label, scan the runs: O(deg log deg), no
+/// n-sized scratch per worker.
+fn choose_label(
+    g: &WGraph,
+    v: usize,
+    prev: &[u32],
+    prev_w: &[i64],
+    max_cw: i64,
+    rseed: u64,
+    buf: &mut Vec<(u32, i64)>,
+) -> u32 {
+    let own = prev[v];
+    buf.clear();
+    for (u, w) in g.neighbors(v as u32) {
+        buf.push((prev[u as usize], w));
+    }
+    if buf.is_empty() {
+        return own; // isolated vertex: nothing to join
+    }
+    buf.sort_unstable_by_key(|&(l, _)| l);
+    let mut best_l = own;
+    let mut best_sum = i64::MIN;
+    let mut best_key = 0u64;
+    let mut i = 0usize;
+    while i < buf.len() {
+        let l = buf[i].0;
+        let mut sum = 0i64;
+        while i < buf.len() && buf[i].0 == l {
+            sum += buf[i].1;
+            i += 1;
+        }
+        if l != own && prev_w[l as usize] + g.vwgt[v] > max_cw {
+            continue; // full cluster (as of the frozen round) — skip
+        }
+        let key = mix64(rseed ^ ((v as u64) << 32) ^ l as u64);
+        if sum > best_sum
+            || (sum == best_sum && (key > best_key || (key == best_key && l < best_l)))
+        {
+            best_sum = sum;
+            best_key = key;
+            best_l = l;
+        }
+    }
+    best_l
+}
+
+/// Conflict-free parallel boundary refinement — the `Mode::Lp` arm of
+/// the `Refiner` seam.  `opts.fm_passes` rounds of propose → resolve →
+/// commit (see module doc); `loads` carries the block weights in and
+/// out exactly like the FM refiner.  The balance cap mirrors
+/// `kway_refine_ws` (`(total/k)·(1+eps) + max vwgt`), checked against
+/// frozen loads at proposal time and re-checked live at commit, so the
+/// partition never leaves the feasible region.  Deterministic and
+/// thread-count-invariant.
+pub fn parallel_boundary_refine(
+    g: &WGraph,
+    part: &mut [u32],
+    k: usize,
+    opts: &VpOpts,
+    threads: usize,
+    loads: &mut [i64],
+) {
+    let n = g.n;
+    if n == 0 || k <= 1 || opts.fm_passes == 0 {
+        return;
+    }
+    let total: i64 = loads.iter().sum();
+    let max_vw = g.vwgt.iter().copied().max().unwrap_or(0);
+    let cap = ((total as f64 / k as f64) * (1.0 + opts.eps)) as i64 + max_vw;
+    let seed = derive_seed(opts.seed, 0x1BF0);
+
+    // dense proposal mirrors, reused across rounds and reset sparsely
+    // through the proposer list (i64::MIN = "not proposing")
+    let mut prop_gain = vec![i64::MIN; n];
+
+    for round in 0..opts.fm_passes {
+        let rseed = derive_seed(seed, round as u64 + 1);
+        // 1. propose: per-vertex best positive-gain move against the
+        // FROZEN partition and loads — a pure parallel sweep.  Scratch
+        // is a per-worker dense k-array with a stamp (vertex ids
+        // strictly increase within a chunk, so stale stamps never
+        // alias); proposals come back per chunk, in vertex order.
+        let t = par::resolve_threads(threads).max(1);
+        let ranges = par::chunk_ranges(n, t);
+        let part_ref: &[u32] = part;
+        let loads_ref: &[i64] = loads;
+        let chunks: Vec<Vec<(u32, u32, i64)>> = par::run_tasks_with(
+            threads,
+            ranges.len(),
+            || (vec![0i64; k], vec![u32::MAX; k]),
+            |scratch, wi| {
+                let (bw, stamp) = scratch;
+                let (lo, hi) = ranges[wi];
+                let mut out = Vec::new();
+                for v in lo..hi {
+                    let from = part_ref[v] as usize;
+                    let vw = g.vwgt[v];
+                    let mut own = 0i64;
+                    let mut best: Option<(i64, usize)> = None;
+                    for (u, w) in g.neighbors(v as u32) {
+                        let b = part_ref[u as usize] as usize;
+                        if stamp[b] != v as u32 {
+                            stamp[b] = v as u32;
+                            bw[b] = 0;
+                        }
+                        bw[b] += w;
+                        if b == from {
+                            own = bw[b];
+                        } else if loads_ref[b] + vw <= cap {
+                            let wb = bw[b];
+                            if best.is_none_or(|(bbw, bb)| wb > bbw || (wb == bbw && b < bb)) {
+                                best = Some((wb, b));
+                            }
+                        }
+                    }
+                    if let Some((wext, to)) = best {
+                        let gain = wext - own;
+                        // strictly positive gains only: monotone cut
+                        // decrease, and a contracted heavy pair (gain
+                        // ≈ −2^40) can never be split
+                        if gain > 0 {
+                            out.push((v as u32, to as u32, gain));
+                        }
+                    }
+                }
+                out
+            },
+        );
+        let proposers: Vec<(u32, u32, i64)> = chunks.into_iter().flatten().collect();
+        if proposers.is_empty() {
+            break;
+        }
+        for &(v, _, gain) in &proposers {
+            prop_gain[v as usize] = gain;
+        }
+
+        // 2. resolve conflicts: a proposer commits only if it is the
+        // strict (gain, hash, id)-maximum among its proposing neighbors
+        // — a pure parallel sweep over the frozen proposal arrays.  The
+        // triple is unique per vertex, so of two adjacent proposers
+        // exactly one defers; winners form an independent set of movers
+        // and every committed gain stays exact.
+        let mut win = vec![false; proposers.len()];
+        {
+            let pg: &[i64] = &prop_gain;
+            let props: &[(u32, u32, i64)] = &proposers;
+            par::fill_indexed(threads, &mut win, |i| {
+                let (v, _, gain) = props[i];
+                let key = mix64(rseed ^ 0xA11CE ^ v as u64);
+                for (u, _) in g.neighbors(v) {
+                    let ug = pg[u as usize];
+                    if ug == i64::MIN {
+                        continue;
+                    }
+                    let ukey = mix64(rseed ^ 0xA11CE ^ u as u64);
+                    if (ug, ukey, u) > (gain, key, v) {
+                        return false;
+                    }
+                }
+                true
+            });
+        }
+
+        // 3. commit in ascending vertex id (the proposer list is built
+        // chunk-by-chunk in vertex order) with a live cap re-check:
+        // several winners may target one block, and the frozen-loads
+        // admission above can't see each other — the re-check keeps the
+        // balance cap exact without any ordering ambiguity.
+        let mut moved = 0usize;
+        for (i, &(v, to, _)) in proposers.iter().enumerate() {
+            if !win[i] {
+                continue;
+            }
+            let vi = v as usize;
+            let vw = g.vwgt[vi];
+            if loads[to as usize] + vw > cap {
+                continue;
+            }
+            let from = part[vi] as usize;
+            part[vi] = to;
+            loads[from] -= vw;
+            loads[to as usize] += vw;
+            moved += 1;
+        }
+        for &(v, _, _) in &proposers {
+            prop_gain[v as usize] = i64::MIN;
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::vertex::Mode;
+
+    /// Ring of `n` unit-weight vertices, unit edge weights.
+    fn ring(n: usize) -> WGraph {
+        let edges: Vec<(u32, u32, i64)> =
+            (0..n as u32).map(|v| (v, (v + 1) % n as u32, 1)).collect();
+        WGraph::from_edges(n, vec![1; n], &edges)
+    }
+
+    /// Deterministic scale-free-ish graph: each vertex attaches to a
+    /// hashed earlier vertex, plus a ring for connectivity.
+    fn tangle(n: usize, seed: u64) -> WGraph {
+        let mut edges: Vec<(u32, u32, i64)> =
+            (0..n as u32).map(|v| (v, (v + 1) % n as u32, 1)).collect();
+        for v in 1..n as u64 {
+            let u = mix64(seed ^ v) % v;
+            edges.push((u as u32, v as u32, 1 + (mix64(v ^ 0xE) % 3) as i64));
+        }
+        WGraph::from_edges(n, vec![1; n], &edges)
+    }
+
+    #[test]
+    fn lp_cluster_produces_a_dense_valid_cmap() {
+        let g = tangle(2000, 7);
+        let (cmap, nc) = lp_cluster(&g, 0x5EED, 1, 100);
+        assert_eq!(cmap.len(), g.n);
+        assert!(nc >= 1 && nc < g.n, "must actually merge: nc={nc}");
+        let mut seen = vec![false; nc];
+        for &c in &cmap {
+            assert!((c as usize) < nc);
+            seen[c as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "coarse ids must be dense");
+    }
+
+    #[test]
+    fn lp_cluster_is_deterministic_and_thread_invariant() {
+        // big enough that the parallel sweep actually chunks
+        let g = tangle(10_000, 3);
+        let (c1, n1) = lp_cluster(&g, 0xABCD, 1, 256);
+        for threads in [0, 2, 5] {
+            let (ct, nt) = lp_cluster(&g, 0xABCD, threads, 256);
+            assert_eq!((&c1, n1), (&ct, nt), "threads={threads} changed the clustering");
+        }
+        // and a different seed is allowed to differ (no accidental
+        // seed-independence hiding a bug)
+        let (c2, _) = lp_cluster(&g, 0xABCE, 1, 256);
+        assert!(c1 != c2 || c1.iter().all(|&c| c == c1[0]), "seed should matter");
+    }
+
+    #[test]
+    fn lp_cluster_respects_the_size_constraint_loosely() {
+        // the constraint is checked against frozen weights, so a round
+        // can overshoot — but never by more than one round's joiners;
+        // on a ring the clusters must stay near the cap, not collapse
+        // into one giant cluster
+        let g = ring(4096);
+        let target = 64;
+        let (cmap, nc) = lp_cluster(&g, 1, 1, target);
+        assert!(nc >= target / 4, "collapsed to {nc} clusters (target {target})");
+        let mut w = vec![0i64; nc];
+        for (v, &c) in cmap.iter().enumerate() {
+            w[c as usize] += g.vwgt[v];
+        }
+        let max_cw = (g.n as i64 / target as i64 + 1).max(2);
+        let worst = w.iter().copied().max().unwrap();
+        assert!(
+            worst <= max_cw * (LP_ROUNDS as i64 + 1),
+            "cluster weight {worst} far beyond cap {max_cw}"
+        );
+    }
+
+    #[test]
+    fn refine_improves_cut_and_keeps_balance() {
+        let g = tangle(3000, 11);
+        let k = 8usize;
+        // deliberately bad but balanced start: striped assignment
+        let mut part: Vec<u32> = (0..g.n).map(|v| (v % k) as u32).collect();
+        let opts = VpOpts { mode: Mode::Lp, seed: 42, threads: 1, ..Default::default() };
+        let mut loads = g.block_weights(&part, k, 1);
+        let cut0 = g.edge_cut_par(&part, 1);
+        parallel_boundary_refine(&g, &mut part, k, &opts, 1, &mut loads);
+        let cut1 = g.edge_cut_par(&part, 1);
+        assert!(cut1 < cut0, "refinement must improve a striped start: {cut0} -> {cut1}");
+        // carried loads stayed exact
+        assert_eq!(loads, g.block_weights(&part, k, 1), "loads drifted");
+        // balance cap honored
+        let total: i64 = loads.iter().sum();
+        let max_vw = g.vwgt.iter().copied().max().unwrap();
+        let cap = ((total as f64 / k as f64) * (1.0 + opts.eps)) as i64 + max_vw;
+        assert!(loads.iter().all(|&l| l <= cap), "cap {cap} violated: {loads:?}");
+    }
+
+    #[test]
+    fn refine_is_thread_invariant() {
+        let g = tangle(12_000, 5);
+        let k = 16usize;
+        let start: Vec<u32> = (0..g.n).map(|v| (v % k) as u32).collect();
+        let refine = |threads: usize| {
+            let mut part = start.clone();
+            let opts =
+                VpOpts { mode: Mode::Lp, seed: 9, threads, ..Default::default() };
+            let mut loads = g.block_weights(&part, k, 1);
+            parallel_boundary_refine(&g, &mut part, k, &opts, par::resolve_threads(threads), &mut loads);
+            part
+        };
+        let p1 = refine(1);
+        for threads in [0, 2, 7] {
+            assert_eq!(p1, refine(threads), "threads={threads} changed the refinement");
+        }
+    }
+
+    #[test]
+    fn refine_never_moves_without_positive_gain() {
+        // an already-locally-optimal partition (two cliques, clean
+        // split) must be a fixed point
+        let mut edges = Vec::new();
+        for a in 0..10u32 {
+            for b in (a + 1)..10 {
+                edges.push((a, b, 5i64));
+                edges.push((a + 10, b + 10, 5));
+            }
+        }
+        edges.push((0, 10, 1)); // one weak bridge
+        let g = WGraph::from_edges(20, vec![1; 20], &edges);
+        let mut part: Vec<u32> = (0..20).map(|v| u32::from(v >= 10)).collect();
+        let before = part.clone();
+        let opts = VpOpts { mode: Mode::Lp, seed: 3, threads: 1, ..Default::default() };
+        let mut loads = g.block_weights(&part, 2, 1);
+        parallel_boundary_refine(&g, &mut part, 2, &opts, 1, &mut loads);
+        assert_eq!(part, before, "a local optimum must be a fixed point");
+    }
+}

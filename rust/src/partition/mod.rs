@@ -9,6 +9,8 @@
 //! * `special` — preset schedules for special graph shapes (§4.1).
 //! * `quality` — vertex-cut cost and balance metrics (Definition 2).
 //! * `incremental` — warm-start refinement after an edge delta (PR 9).
+//! * `lp` — data-parallel engines for `Mode::Lp`: label-propagation
+//!   coarsening + conflict-free parallel boundary refinement (PR 10).
 //! * `reference` — the retained pre-optimization (seed) pipeline, the
 //!   fixed baseline for perf/parity tests and benches (PERF.md).
 
@@ -16,6 +18,7 @@ pub mod default_sched;
 pub mod ep;
 pub mod hypergraph;
 pub mod incremental;
+pub mod lp;
 pub mod powergraph;
 pub mod quality;
 pub mod reference;
@@ -23,6 +26,7 @@ pub mod special;
 pub mod vertex;
 
 pub use quality::{balance_factor, vertex_cut_cost, vertex_cut_cost_par, EdgePartition};
+pub use vertex::Mode;
 
 /// Which partitioning method to use — the CLI / bench-facing selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -248,6 +248,63 @@ pub enum Matching {
     Random,
 }
 
+/// Engine family for the multilevel pipeline — the serving-facing
+/// selector (PR 10).  `Fm` is the CPU-shaped quality reference
+/// (matching coarsening + gain-bucket FM refinement, the serving
+/// default); `Lp` is the data-parallel miss-latency mode
+/// (label-propagation coarsening + conflict-free parallel boundary
+/// refinement, see `partition::lp`).  Both are deterministic and
+/// thread-count-invariant; they produce different partitions, so the
+/// mode is part of the schedule-cache fingerprint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Fm,
+    Lp,
+}
+
+impl Mode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Fm => "fm",
+            Mode::Lp => "lp",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Mode> {
+        match s {
+            "fm" => Some(Mode::Fm),
+            "lp" => Some(Mode::Lp),
+            _ => None,
+        }
+    }
+}
+
+/// Coarsening stage of the pipeline (enum-dispatched — no trait objects
+/// on the hot path).  Derived from `VpOpts` by [`VpOpts::coarsener`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Coarsener {
+    HeavyEdgeMatching,
+    RandomMatching,
+    LabelProp,
+}
+
+/// Initial-partition stage.  GGGP-seeded recursive bisection is the
+/// only engine today (both modes run it on the tiny coarsest graph,
+/// where quality matters and cost is negligible); the seam exists so a
+/// data-parallel initial partitioner can slot in without touching the
+/// driver.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitialPartitioner {
+    Gggp,
+}
+
+/// Per-level refinement stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Refiner {
+    GainBucketFm,
+    ParallelBoundary,
+}
+
 #[derive(Clone, Debug)]
 pub struct VpOpts {
     /// Allowed imbalance: side weight ≤ target * (1 + eps) + max vwgt.
@@ -260,6 +317,10 @@ pub struct VpOpts {
     /// Greedy-graph-growing restarts for the initial bisection.
     pub init_tries: usize,
     pub matching: Matching,
+    /// Engine family: `Fm` (default, the quality reference) or `Lp`
+    /// (data-parallel label propagation — a much faster cold-miss path
+    /// at a bounded cut-quality cost, gated in benches/partition.rs).
+    pub mode: Mode,
     /// Worker threads for the parallel phases: 0 = one per core,
     /// 1 = sequential.  Results are identical for every value.
     pub threads: usize,
@@ -280,8 +341,37 @@ impl Default for VpOpts {
             fm_passes: 3,
             init_tries: 4,
             matching: Matching::HeavyEdge,
+            mode: Mode::Fm,
             threads: 0,
             project_conn: true,
+        }
+    }
+}
+
+impl VpOpts {
+    /// Coarsening engine implied by the mode: `Fm` keeps the matching
+    /// ladder (`matching` picks the variant, exactly as before the
+    /// seams existed), `Lp` uses size-constrained label propagation.
+    pub fn coarsener(&self) -> Coarsener {
+        match self.mode {
+            Mode::Lp => Coarsener::LabelProp,
+            Mode::Fm => match self.matching {
+                Matching::HeavyEdge => Coarsener::HeavyEdgeMatching,
+                Matching::Random => Coarsener::RandomMatching,
+            },
+        }
+    }
+
+    /// Initial-partition engine (one implementation today, both modes).
+    pub fn initial_partitioner(&self) -> InitialPartitioner {
+        InitialPartitioner::Gggp
+    }
+
+    /// Per-level refinement engine implied by the mode.
+    pub fn refiner(&self) -> Refiner {
+        match self.mode {
+            Mode::Fm => Refiner::GainBucketFm,
+            Mode::Lp => Refiner::ParallelBoundary,
         }
     }
 }
@@ -291,14 +381,14 @@ impl Default for VpOpts {
 /// SplitMix64 finalizer — stretches one seed into independent per-phase
 /// streams so parallel work never shares RNG state.
 #[inline]
-fn mix64(mut x: u64) -> u64 {
+pub(crate) fn mix64(mut x: u64) -> u64 {
     x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
     x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
     x ^ (x >> 31)
 }
 
 #[inline]
-fn derive_seed(seed: u64, salt: u64) -> u64 {
+pub(crate) fn derive_seed(seed: u64, salt: u64) -> u64 {
     mix64(seed ^ salt.wrapping_mul(0x9E3779B97F4A7C15))
 }
 
@@ -910,13 +1000,20 @@ impl KwayBuckets {
 
 // ------------------------------------------------------------ k-way driver
 
-/// k-way balanced partition — the production path.
+/// k-way balanced partition — the production path, structured as three
+/// explicit pipeline stages behind the `Coarsener` / `InitialPartitioner`
+/// / `Refiner` seams on `VpOpts` (enum-dispatched; `Mode::Fm` runs the
+/// exact pre-seam code path, pinned bit-identical by the parity tests):
 ///
-/// Scheme: coarsen the graph ONCE by repeated handshake heavy-edge
-/// matching to O(k) vertices, run recursive bisection on that small
-/// coarse graph, then project back level by level with greedy k-way
-/// boundary refinement.  Compared to plain recursive bisection (which
-/// re-coarsens every subgraph at every split) this does one chain.
+///   1. coarsen the graph ONCE down to O(k) vertices
+///      (`coarsen_chain`, dispatching on `opts.coarsener()`),
+///   2. initial k-way partition on that small coarse graph
+///      (`initial_partition`),
+///   3. project back level by level with boundary refinement
+///      (`refine_level`, dispatching on `opts.refiner()`).
+///
+/// Compared to plain recursive bisection (which re-coarsens every
+/// subgraph at every split) this does one chain.
 pub fn partition_kway(g: &WGraph, k: usize, opts: &VpOpts) -> Vec<u32> {
     assert!(k >= 1);
     if k == 1 || g.n == 0 {
@@ -928,17 +1025,18 @@ pub fn partition_kway(g: &WGraph, k: usize, opts: &VpOpts) -> Vec<u32> {
     // size the refinement arenas for the finest level up front: the
     // uncoarsening chain then reuses capacity instead of growing per level
     ws.reserve_kway(g, k);
+    // --- stage 1: coarsening (Coarsener seam) ---
     let (mut levels, cur) =
         coarsen_chain(g, coarse_target, opts, derive_seed(opts.seed, 0xC0A55E), threads, &mut ws);
-    // --- initial k-way partition: recursive bisection on the coarse graph ---
-    let mut part = partition_kway_rb(&cur, k, opts);
+    // --- stage 2: initial k-way partition (InitialPartitioner seam) ---
+    let mut part = initial_partition(&cur, k, opts);
     // Block weights are computed exactly once, here, and carried
     // incrementally through every refine/balance move below.  Projection
     // preserves them (a coarse vertex's weight is the sum of its fine
     // vertices'), so no level ever rescans the partition for loads.
     let mut loads = cur.block_weights(&part, k, threads);
-    kway_refine_ws(&cur, &mut part, k, opts, threads, &mut loads, &mut ws);
-    // --- uncoarsen with k-way refinement ---
+    refine_level(&cur, &mut part, k, opts, threads, &mut loads, &mut ws);
+    // --- stage 3: uncoarsen with per-level refinement (Refiner seam) ---
     let mut cur = cur;
     while let Some((finer, cmap)) = levels.pop() {
         let mut fine = vec![0u32; finer.n];
@@ -951,7 +1049,9 @@ pub fn partition_kway(g: &WGraph, k: usize, opts: &VpOpts) -> Vec<u32> {
         // the cmap — interior coarse vertices (the vast majority) seed
         // their fine rows in O(1) each, only boundary-parent vertices
         // pay the full build probe.  `part` still holds the coarse
-        // labels here; `fine` the projected ones.
+        // labels here; `fine` the projected ones.  (The parallel
+        // boundary refiner never maintains the arena, so in `Mode::Lp`
+        // `conn_valid` is always false here and the rebuild arm runs.)
         if opts.project_conn && ws.conn_valid && ws.conn_sig == (cur.n, cur.adjncy.len(), k) {
             project_conn(&finer, &cmap, &part, &fine, k, threads, &mut ws);
             ws.conn_sig = (finer.n, finer.adjncy.len(), k);
@@ -963,19 +1063,56 @@ pub fn partition_kway(g: &WGraph, k: usize, opts: &VpOpts) -> Vec<u32> {
             ws.invalidate_conn();
         }
         part = fine;
-        kway_refine_ws(&finer, &mut part, k, opts, threads, &mut loads, &mut ws);
+        refine_level(&finer, &mut part, k, opts, threads, &mut loads, &mut ws);
         cur = finer;
     }
     // --- final strict balance (coarse-level moves can strand imbalance),
     // then one more refine pass to recover quality lost to evictions.
-    // The finest-level arena built by the last refine is maintained
+    // The finest-level arena built by the last FM refine is maintained
     // exactly through every move, so this whole sequence reuses it —
     // level entry work here is O(boundary), not 3 × O(n + m) rebuilds.
     kway_balance_ws(&cur, &mut part, k, opts.eps, threads, &mut loads, &mut ws);
     let recover = VpOpts { fm_passes: 1, ..opts.clone() };
-    kway_refine_ws(&cur, &mut part, k, &recover, threads, &mut loads, &mut ws);
+    refine_level(&cur, &mut part, k, &recover, threads, &mut loads, &mut ws);
     kway_balance_ws(&cur, &mut part, k, opts.eps, threads, &mut loads, &mut ws);
     part
+}
+
+/// Stage 2 of `partition_kway`: the initial k-way partition of the
+/// coarsest graph.  GGGP-seeded recursive bisection for every engine
+/// today — the coarse graph is O(k) vertices, so the serial FM ladder
+/// inside it is negligible even in `Mode::Lp`, and its quality anchors
+/// the whole uncoarsening.
+fn initial_partition(cur: &WGraph, k: usize, opts: &VpOpts) -> Vec<u32> {
+    match opts.initial_partitioner() {
+        InitialPartitioner::Gggp => partition_kway_rb(cur, k, opts),
+    }
+}
+
+/// Stage 3 dispatch of `partition_kway` (also the refine step of
+/// `kway_polish`): one per-level refinement pass over `part`.
+/// `Refiner::GainBucketFm` is the pre-seam serial hill-climb, verbatim;
+/// `Refiner::ParallelBoundary` is the data-parallel conflict-free
+/// engine (`partition::lp`), which computes gains against the frozen
+/// pre-batch partition and therefore never maintains the connectivity
+/// arena — it must be invalidated around the call.
+fn refine_level(
+    g: &WGraph,
+    part: &mut [u32],
+    k: usize,
+    opts: &VpOpts,
+    threads: usize,
+    loads: &mut [i64],
+    ws: &mut VpWorkspace,
+) {
+    match opts.refiner() {
+        Refiner::GainBucketFm => kway_refine_ws(g, part, k, opts, threads, loads, ws),
+        Refiner::ParallelBoundary => {
+            ws.invalidate_conn();
+            super::lp::parallel_boundary_refine(g, part, k, opts, threads, loads);
+            ws.invalidate_conn();
+        }
+    }
 }
 
 /// The coarsening ladder: each rung pairs a finer graph with the cmap
@@ -999,13 +1136,19 @@ fn coarsen_chain(
     let mut level = 0u64;
     while cur.n > target {
         let lseed = derive_seed(seed, level + 1);
-        let (cmap, nc) = match opts.matching {
-            Matching::HeavyEdge => heavy_edge_matching(&cur, lseed, threads, ws),
-            Matching::Random => random_matching(&cur, lseed, ws),
+        let (cmap, nc) = match opts.coarsener() {
+            Coarsener::HeavyEdgeMatching => heavy_edge_matching(&cur, lseed, threads, ws),
+            Coarsener::RandomMatching => random_matching(&cur, lseed, ws),
+            // size-constrained label propagation: clusters are capped
+            // near the average weight a `target`-vertex coarse graph
+            // implies, so one LP level can shrink far beyond the 2× a
+            // matching allows without collapsing into a handful of
+            // giant clusters
+            Coarsener::LabelProp => super::lp::lp_cluster(&cur, lseed, threads, target),
         };
         let coarse = contract(&cur, &cmap, nc, threads, ws);
         if coarse.n as f64 > cur.n as f64 * 0.95 {
-            break; // matching stalled (e.g. star graphs) — stop coarsening
+            break; // clustering stalled (e.g. star graphs) — stop coarsening
         }
         levels.push((cur, cmap));
         cur = coarse;
@@ -1690,8 +1833,10 @@ pub fn kway_balance(g: &WGraph, part: &mut [u32], k: usize, eps: f64, threads: u
 /// pooled workspace across the three calls (the arena built by the
 /// first is maintained through the rest) — the finest-level tail of
 /// `partition_kway`, exposed as the polish step for warm-start
-/// partitions (`partition::incremental::refine_from`).  Deterministic
-/// for every thread count, like its components.
+/// partitions (`partition::incremental::refine_from`).  The refine step
+/// dispatches on `opts.refiner()`, so a delta against an `Mode::Lp`
+/// cache entry is polished by the same data-parallel engine that built
+/// it.  Deterministic for every thread count, like its components.
 pub fn kway_polish(g: &WGraph, part: &mut [u32], k: usize, opts: &VpOpts) {
     assert_eq!(part.len(), g.n);
     if k <= 1 || g.n == 0 {
@@ -1702,7 +1847,7 @@ pub fn kway_polish(g: &WGraph, part: &mut [u32], k: usize, opts: &VpOpts) {
     ws.reserve_kway(g, k);
     let mut loads = g.block_weights(part, k, threads);
     kway_balance_ws(g, part, k, opts.eps, threads, &mut loads, &mut ws);
-    kway_refine_ws(g, part, k, opts, threads, &mut loads, &mut ws);
+    refine_level(g, part, k, opts, threads, &mut loads, &mut ws);
     kway_balance_ws(g, part, k, opts.eps, threads, &mut loads, &mut ws);
 }
 
@@ -2245,6 +2390,112 @@ mod tests {
                 );
                 assert_eq!(projected, baseline, "n={n} k={k} threads={threads}");
             }
+        }
+    }
+
+    #[test]
+    fn seams_dispatch_by_mode() {
+        let fm = VpOpts::default();
+        assert_eq!(fm.coarsener(), Coarsener::HeavyEdgeMatching);
+        assert_eq!(fm.initial_partitioner(), InitialPartitioner::Gggp);
+        assert_eq!(fm.refiner(), Refiner::GainBucketFm);
+        let rnd = VpOpts { matching: Matching::Random, ..Default::default() };
+        assert_eq!(rnd.coarsener(), Coarsener::RandomMatching);
+        let lp = VpOpts { mode: Mode::Lp, ..Default::default() };
+        assert_eq!(lp.coarsener(), Coarsener::LabelProp);
+        assert_eq!(lp.initial_partitioner(), InitialPartitioner::Gggp);
+        assert_eq!(lp.refiner(), Refiner::ParallelBoundary);
+        // Lp owns the whole coarsening seam, matching flag or not
+        let both = VpOpts { mode: Mode::Lp, matching: Matching::Random, ..Default::default() };
+        assert_eq!(both.coarsener(), Coarsener::LabelProp);
+        for m in [Mode::Fm, Mode::Lp] {
+            assert_eq!(Mode::from_name(m.name()), Some(m));
+        }
+        assert_eq!(Mode::from_name("nope"), None);
+    }
+
+    /// Seam-composition pin: the `Mode::Fm` driver must be EXACTLY the
+    /// three staged seams wired in sequence — if `partition_kway` ever
+    /// grows logic between the stages that the seams can't express, this
+    /// drifts and the pluggable-pipeline contract is broken.
+    #[test]
+    fn fm_driver_equals_its_composed_stages() {
+        let (n, k, mult) = (1500usize, 8usize, 4usize);
+        let mut state = 0x5EA1_7E57u64;
+        let mut edges = Vec::new();
+        for i in 0..n * mult {
+            state = state.wrapping_add(0x9E3779B97F4A7C15);
+            let h = mix64(state);
+            let u = (h % n as u64) as u32;
+            let v = ((h >> 32) % n as u64) as u32;
+            edges.push((u, v, 1 + (i % 3) as i64));
+        }
+        let g = WGraph::from_edges(n, vec![1; n], &edges);
+        let opts = VpOpts { seed: 7, threads: 1, ..Default::default() };
+        let want = partition_kway(&g, k, &opts);
+
+        // compose the stages by hand, exactly as the driver wires them
+        let threads = par::resolve_threads(opts.threads);
+        let coarse_target = (opts.coarsen_to.max(8) * k / 2).max(128);
+        let mut ws = VpWorkspace::new();
+        ws.reserve_kway(&g, k);
+        let (mut levels, cur) =
+            coarsen_chain(&g, coarse_target, &opts, derive_seed(opts.seed, 0xC0A55E), threads, &mut ws);
+        let mut part = initial_partition(&cur, k, &opts);
+        let mut loads = cur.block_weights(&part, k, threads);
+        refine_level(&cur, &mut part, k, &opts, threads, &mut loads, &mut ws);
+        let mut cur = cur;
+        while let Some((finer, cmap)) = levels.pop() {
+            let mut fine = vec![0u32; finer.n];
+            {
+                let part_ref = &part;
+                par::fill_indexed(threads, &mut fine, |v| part_ref[cmap[v] as usize]);
+            }
+            if opts.project_conn && ws.conn_valid && ws.conn_sig == (cur.n, cur.adjncy.len(), k) {
+                project_conn(&finer, &cmap, &part, &fine, k, threads, &mut ws);
+                ws.conn_sig = (finer.n, finer.adjncy.len(), k);
+            } else {
+                ws.invalidate_conn();
+            }
+            part = fine;
+            refine_level(&finer, &mut part, k, &opts, threads, &mut loads, &mut ws);
+            cur = finer;
+        }
+        kway_balance_ws(&cur, &mut part, k, opts.eps, threads, &mut loads, &mut ws);
+        let recover = VpOpts { fm_passes: 1, ..opts.clone() };
+        refine_level(&cur, &mut part, k, &recover, threads, &mut loads, &mut ws);
+        kway_balance_ws(&cur, &mut part, k, opts.eps, threads, &mut loads, &mut ws);
+
+        assert_eq!(part, want, "stage composition drifted from the driver");
+    }
+
+    #[test]
+    fn lp_mode_driver_is_valid_balanced_and_thread_invariant() {
+        let n = 2000usize;
+        let mut state = 0xB0A7_1D3Au64;
+        let mut edges = Vec::new();
+        for i in 0..n * 4 {
+            state = state.wrapping_add(0x9E3779B97F4A7C15);
+            let h = mix64(state);
+            let u = (h % n as u64) as u32;
+            let v = ((h >> 32) % n as u64) as u32;
+            edges.push((u, v, 1 + (i % 5) as i64));
+        }
+        let g = WGraph::from_edges(n, vec![1; n], &edges);
+        let k = 4;
+        let opts = VpOpts { seed: 3, threads: 1, mode: Mode::Lp, ..Default::default() };
+        let p1 = partition_kway(&g, k, &opts);
+        assert!(p1.iter().all(|&b| b < k as u32));
+        // the final kway_balance_ws pass guarantees the epsilon cap
+        let loads = g.block_weights(&p1, k, 1);
+        let total: i64 = loads.iter().sum();
+        let cap = ((total as f64 / k as f64) * (1.0 + opts.eps)).ceil() as i64;
+        for (b, &l) in loads.iter().enumerate() {
+            assert!(l <= cap, "block {b} load {l} > cap {cap}");
+        }
+        for threads in [0, 2] {
+            let pt = partition_kway(&g, k, &VpOpts { threads, ..opts.clone() });
+            assert_eq!(pt, p1, "Mode::Lp not thread-count-invariant at threads={threads}");
         }
     }
 

@@ -39,6 +39,16 @@
 //! cache full of heavyweight schedules from yesterday's traffic would
 //! reject today's cheaper workload forever and pin the hit rate at 0.
 //!
+//! Delta-aware admission (PR 10): an entry that delta requests name as
+//! their base is worth more than its own recompute cost — losing it
+//! costs a full cold partition for EVERY follow-up delta in the chain,
+//! not just one.  `note_delta_base` records each such use: the entry is
+//! promoted to MRU, its age resets, and a chain counter doubles its
+//! effective cost per recorded use (capped).  The boost is not a pin:
+//! rejection-contest aging halves effective cost as usual, so once the
+//! children go cold the base decays and loses contests like any other
+//! stale entry.
+//!
 //! Counters (hits/misses/insertions/evictions/rejections/bytes) are
 //! cache-global atomics, snapshotted loosely by `stats()` — they are
 //! monitoring data, not synchronization.
@@ -122,6 +132,11 @@ pub struct CacheStats {
 
 const NIL: usize = usize::MAX;
 
+/// Cap on the delta-chain boost exponent: 2^16 × is plenty to defend a
+/// hot base, and keeps `log2(effective cost ratio)` — the number of
+/// rejection contests a shifted workload needs to win — bounded.
+const CHAIN_BOOST_CAP: u32 = 16;
+
 struct Entry {
     fp: Fingerprint,
     val: Arc<CachedSchedule>,
@@ -130,12 +145,17 @@ struct Entry {
     /// Rejection-contest wins since the last hit; halves the entry's
     /// effective cost in admission comparisons (see module doc).
     age: u32,
+    /// Times this entry has been named as a delta base (PR 10); each
+    /// doubles the effective cost, capped at [`CHAIN_BOOST_CAP`].
+    chain: u32,
 }
 
 impl Entry {
-    /// Admission-comparison cost: the recompute cost decayed by age.
+    /// Admission-comparison cost: the recompute cost, boosted by
+    /// delta-chain heat and decayed by age.
     fn effective_cost(&self) -> u64 {
-        self.val.cost_ns >> self.age.min(63)
+        let boosted = self.val.cost_ns.saturating_mul(1u64 << self.chain.min(CHAIN_BOOST_CAP));
+        boosted >> self.age.min(63)
     }
 }
 
@@ -194,6 +214,18 @@ impl Shard {
         let e = self.slots[slot].as_mut().unwrap();
         e.age = 0; // a hit is proof of value: full cost restored
         Some(e.val.clone())
+    }
+
+    /// Record that `fp` was named as the base of a delta request:
+    /// promote to MRU, reset the age, and bump the chain boost (module
+    /// doc, "Delta-aware admission").  Unknown keys are a no-op.
+    fn note_delta_base(&mut self, fp: Fingerprint) {
+        let Some(&slot) = self.map.get(&fp) else { return };
+        self.unlink(slot);
+        self.push_front(slot);
+        let e = self.slots[slot].as_mut().unwrap();
+        e.age = 0;
+        e.chain = e.chain.saturating_add(1).min(CHAIN_BOOST_CAP);
     }
 
     /// Remove the LRU entry; returns false when the shard is empty.
@@ -294,15 +326,14 @@ impl Shard {
                 return (Admission::RejectedCheap, 0);
             }
         }
+        let entry = Entry { fp, val: val.clone(), prev: NIL, next: NIL, age: 0, chain: 0 };
         let slot = match self.free.pop() {
             Some(s) => {
-                self.slots[s] =
-                    Some(Entry { fp, val: val.clone(), prev: NIL, next: NIL, age: 0 });
+                self.slots[s] = Some(entry);
                 s
             }
             None => {
-                self.slots
-                    .push(Some(Entry { fp, val: val.clone(), prev: NIL, next: NIL, age: 0 }));
+                self.slots.push(Some(entry));
                 self.slots.len() - 1
             }
         };
@@ -389,6 +420,12 @@ impl ScheduleCache {
 
     pub fn insert(&self, fp: Fingerprint, val: Arc<CachedSchedule>) -> Admission {
         self.insert_counted(fp, val, &self.insertions, true)
+    }
+
+    /// A delta request just used `fp` as its base: boost the entry's
+    /// admission standing while its children are hot (module doc).
+    pub fn note_delta_base(&self, fp: Fingerprint) {
+        self.shards[self.shard_of(fp)].lock().unwrap().note_delta_base(fp);
     }
 
     /// Warm-load path (`service::persist`): never evicts — snapshot
@@ -630,6 +667,36 @@ mod tests {
         assert_eq!(attempts, 21, "aging must decay one halving per rejection");
         assert!(cache.probe(new_fp).is_some(), "newcomer resident after the shift");
         assert_eq!(cache.stats().rejected_cheap, 20);
+    }
+
+    #[test]
+    fn a_delta_base_with_hot_children_survives_pressure() {
+        // single shard, budget fits exactly 2 equally-sized entries
+        let (_, probe) = entry_for(0);
+        let cache = ScheduleCache::new(probe.bytes * 2, 1);
+        let (base_fp, base) = entry_with_cost(1, 1_000_000);
+        let (cold_fp, cold) = entry_with_cost(2, 1_000_000);
+        assert_eq!(cache.insert(base_fp, base), Admission::Inserted);
+        assert_eq!(cache.insert(cold_fp, cold), Admission::Inserted);
+        // a delta request names `base`: its children are hot, so losing
+        // it would cost a cold partition per follow-up delta
+        cache.note_delta_base(base_fp);
+        cache.note_delta_base(Fingerprint(0xDEAD, 0xBEEF)); // unknown: no-op
+        // equal-cost pressure evicts the equally-priced cold twin
+        let (n1_fp, n1) = entry_with_cost(3, 1_000_000);
+        assert_eq!(cache.insert(n1_fp, n1), Admission::Inserted);
+        assert!(cache.probe(cold_fp).is_none(), "cold twin is the victim");
+        // `base` is now the LRU entry, yet the chain boost makes it WIN
+        // an equal-cost contest a cold entry would tie-lose
+        let (n2_fp, n2) = entry_with_cost(4, 1_000_000);
+        assert_eq!(cache.insert(n2_fp, n2.clone()), Admission::RejectedCheap);
+        assert!(cache.probe(base_fp).is_some(), "hot delta base defends its slot");
+        // the probe promoted the base back to MRU; the retry's victim is
+        // the cold n1, which ties and loses — the boost never turned
+        // into a cache-wide pin
+        assert_eq!(cache.insert(n2_fp, n2), Admission::Inserted);
+        assert!(cache.probe(base_fp).is_some());
+        assert!(cache.probe(n1_fp).is_none());
     }
 
     #[test]

@@ -168,6 +168,13 @@ pub fn fingerprint(g: &Graph, opts: &OptOptions) -> Fingerprint {
         }
         None => h.write_bool(false),
     }
+    // `mode` (PR 10) is hashed only when it deviates from the historical
+    // default, so every pre-mode fingerprint (snapshots, baselines, warm
+    // exports) keeps its value under Fm.
+    if opts.mode != crate::partition::Mode::Fm {
+        h.write_str("mode");
+        h.write_str(opts.mode.name());
+    }
     h.finish()
 }
 
@@ -203,6 +210,7 @@ mod tests {
             OptOptions { method: Method::PgGreedy, ..opts() },
             OptOptions { use_special_patterns: false, ..opts() },
             OptOptions { block_cap: Some(256), ..opts() },
+            OptOptions { mode: crate::partition::Mode::Lp, ..opts() },
         ];
         for (i, v) in variants.iter().enumerate() {
             assert_ne!(base, fingerprint(&g, v), "variant {i} collided");

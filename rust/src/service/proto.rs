@@ -73,7 +73,8 @@
 //!
 //! `opts` keys (all optional, defaults = `OptOptions::default()`):
 //! `k`, `seed`, `reuse_threshold`, `method`, `use_special_patterns`,
-//! `block_cap`.  `seed` is a decimal STRING on the wire (JSON numbers
+//! `block_cap`, `mode` (`"fm"` | `"lp"`, the partitioner engine family).
+//! `seed` is a decimal STRING on the wire (JSON numbers
 //! only carry 53 integer bits; numbers are still accepted in the safe
 //! range).  A `threads` key is accepted and ignored — the worker pool
 //! owns parallelism, and results are thread-count-invariant anyway.
@@ -103,7 +104,7 @@ use std::path::Path;
 use crate::coordinator::OptOptions;
 use crate::graph::delta::EdgeDelta;
 use crate::graph::{gen, Graph};
-use crate::partition::Method;
+use crate::partition::{Method, Mode};
 use crate::sparse::matrix_market;
 use crate::util::json::Json;
 
@@ -482,6 +483,10 @@ pub fn opts_from_json(j: Option<&Json>) -> Result<OptOptions, String> {
             _ => Some(v.as_u64().ok_or("opts.block_cap must be an integer or null")? as usize),
         };
     }
+    if let Some(v) = j.get("mode") {
+        let name = v.as_str().ok_or("opts.mode must be a string")?;
+        opts.mode = Mode::from_name(name).ok_or_else(|| format!("unknown mode '{name}'"))?;
+    }
     // 'threads' intentionally ignored — see module doc
     Ok(opts)
 }
@@ -497,6 +502,7 @@ pub fn opts_to_json(opts: &OptOptions) -> Json {
     if let Some(cap) = opts.block_cap {
         m.insert("block_cap".to_string(), Json::Num(cap as f64));
     }
+    m.insert("mode".to_string(), Json::Str(opts.mode.name().to_string()));
     Json::Obj(m)
 }
 
@@ -932,6 +938,26 @@ mod tests {
             }
             _ => panic!("wrong request kind"),
         }
+    }
+
+    #[test]
+    fn mode_rides_the_wire_and_rejects_garbage() {
+        let spec = GraphSpec::Gen { name: "path".into(), args: vec![4] };
+        let opts = OptOptions { mode: Mode::Lp, ..Default::default() };
+        let line = optimize_request(&spec, &opts).dump();
+        match decode_request(&Json::parse(&line).unwrap()).unwrap().op {
+            Op::Optimize { opts: o, .. } => assert_eq!(o.mode, Mode::Lp),
+            _ => panic!("wrong request kind"),
+        }
+        // absent → the historical default (fm); unknown names are malformed
+        let parse = |text: &str| decode_request(&Json::parse(text).unwrap());
+        let ok = r#"{"op":"optimize","graph":{"gen":"path","args":[4]}}"#;
+        match parse(ok).unwrap().op {
+            Op::Optimize { opts: o, .. } => assert_eq!(o.mode, Mode::Fm),
+            _ => panic!("wrong request kind"),
+        }
+        let bad = r#"{"op":"optimize","graph":{"gen":"path","args":[4]},"opts":{"mode":"turbo"}}"#;
+        assert!(parse(bad).is_err(), "unknown mode must be rejected");
     }
 
     #[test]

@@ -1286,6 +1286,9 @@ impl Server {
                 .encode(id.as_ref()),
             );
         }
+        // the delta applied cleanly, so the base really is serving a hot
+        // chain: boost its admission standing (cache module doc)
+        self.cache.note_delta_base(base);
         let g = Arc::new(post);
         // the CHILD fingerprint: pure content addressing of the
         // post-delta graph, so this entry is bit-for-bit the one an

@@ -199,6 +199,11 @@ const GATED_METRICS: &[(&str, bool)] = &[
     // floor and cut-quality ceiling of the warm-started refinement
     ("delta_refine_speedup", true),
     ("delta_cut_ratio", false),
+    // data-parallel LP engines vs the FM quality reference on a cold
+    // k=64 partition (benches/partition.rs, PR 10): wall-clock speedup
+    // floor of Mode::Lp and a ceiling on its cut relative to FM
+    ("lp_speedup", true),
+    ("lp_cut_ratio", false),
 ];
 
 /// Compare a freshly produced bench baseline (`current`, JSON text)
@@ -342,6 +347,25 @@ mod tests {
         // growing past the ceiling fails
         let err = compare_baselines(&report(8.0), &report(11.0), 0.25).unwrap_err();
         assert!(err.contains("forwarded_hit_overhead"), "{err}");
+    }
+
+    #[test]
+    fn lp_gate_floors_speedup_and_ceilings_cut_ratio() {
+        let report = |speedup: f64, ratio: f64| {
+            let mut r = JsonReport::new();
+            r.str("mode", "smoke").num("lp_speedup", speedup).num("lp_cut_ratio", ratio);
+            r.render()
+        };
+        // faster AND no worse on quality passes
+        let lines = compare_baselines(&report(3.0, 1.15), &report(5.0, 1.02), 0.25)
+            .expect("improvement ok");
+        assert!(lines.iter().any(|l| l.contains("lp_speedup") && l.ends_with("ok")));
+        // the speedup is a floor: dropping far below it fails
+        let err = compare_baselines(&report(3.0, 1.15), &report(1.5, 1.10), 0.25).unwrap_err();
+        assert!(err.contains("lp_speedup"), "{err}");
+        // the cut ratio is a ceiling: a faster-but-much-worse LP fails
+        let err = compare_baselines(&report(3.0, 1.15), &report(9.0, 1.60), 0.25).unwrap_err();
+        assert!(err.contains("lp_cut_ratio"), "{err}");
     }
 
     #[test]

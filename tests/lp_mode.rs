@@ -1,0 +1,172 @@
+//! Mode::Lp property suite (PR 10, the data-parallel partitioner) and
+//! the Mode::Fm back-compat pins.
+//!
+//! The serving layer's cache contract extends to the new engines: one
+//! `(graph, options)` fingerprint maps to exactly one schedule, so
+//! `Mode::Lp` must be deterministic and thread-count-invariant through
+//! the full `ep::partition_edges` / `coordinator::optimize_graph`
+//! stack, and must respect the balance epsilon the FM path guarantees.
+//! On the FM side: `mode` defaults to `Fm` everywhere, so the pluggable
+//! pipeline must be INVISIBLE to existing callers — byte-identical
+//! output and unchanged fingerprints (tests/perf_parity.rs pins the
+//! quality and thread-invariance of the FM engines themselves).
+
+use epgraph::coordinator::{optimize_graph, OptOptions};
+use epgraph::graph::{gen as ggen, Graph};
+use epgraph::partition::ep::{self, EpOpts};
+use epgraph::partition::vertex::VpOpts;
+use epgraph::partition::{quality, Mode};
+use epgraph::service::fingerprint;
+use epgraph::util::prop::check;
+
+/// The same structural families the FM rewrite is validated on
+/// (tests/perf_parity.rs): power-law, unstructured mesh, banded FEM.
+fn family(which: usize, size: usize, seed: u64) -> Graph {
+    match which % 3 {
+        0 => ggen::power_law(64 + size * 24, 3, seed),
+        1 => {
+            let side = 6 + (size as f64).sqrt() as usize * 2;
+            ggen::cfd_mesh(side, side, seed)
+        }
+        _ => ggen::fem_banded(64 + size * 24, 8, 0.8, seed),
+    }
+}
+
+fn lp_opts(seed: u64, threads: usize) -> EpOpts {
+    EpOpts {
+        vp: VpOpts { seed, threads, mode: Mode::Lp, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn prop_lp_partitions_are_valid_and_balanced() {
+    check("lp-valid-partition", 36, |rng, g| {
+        let graph = family(rng.gen_range(3), g.size, rng.next_u64());
+        if graph.m() == 0 {
+            return Ok(());
+        }
+        let k = 2 + rng.gen_range(14);
+        let p = ep::partition_edges(&graph, k, &lp_opts(rng.next_u64(), 0));
+        if p.assign.len() != graph.m() {
+            return Err(format!("arity {} != {}", p.assign.len(), graph.m()));
+        }
+        if p.assign.iter().any(|&b| b as usize >= k) {
+            return Err("block label out of range".into());
+        }
+        // same epsilon bound as the FM suite: the final kway_balance
+        // pass is mode-independent, so LP inherits the guarantee (the
+        // additive slack absorbs integer effects on tiny blocks)
+        let bf = quality::balance_factor(&p);
+        let slack = 1.0 + 8.0 * (k * k) as f64 / graph.m().max(1) as f64;
+        if bf > 1.12 * slack {
+            return Err(format!("balance {bf} (k={k}, m={})", graph.m()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lp_is_deterministic_and_thread_count_invariant() {
+    // threads=1 (sequential) vs threads=0 (one worker per core) and a
+    // fixed odd count: every LP sweep is a pure function of the frozen
+    // previous round, so chunking must never leak into the result
+    check("lp-thread-invariance", 12, |rng, g| {
+        let graph = family(rng.gen_range(3), 4 + g.size, rng.next_u64());
+        if graph.m() == 0 {
+            return Ok(());
+        }
+        let k = 2 + rng.gen_range(14);
+        let seed = rng.next_u64();
+        let base = ep::partition_edges(&graph, k, &lp_opts(seed, 1));
+        let again = ep::partition_edges(&graph, k, &lp_opts(seed, 1));
+        if base.assign != again.assign {
+            return Err("same seed, same threads: partitions differ".into());
+        }
+        for threads in [0, 3] {
+            let p = ep::partition_edges(&graph, k, &lp_opts(seed, threads));
+            if p.assign != base.assign {
+                return Err(format!("threads={threads} changed the LP partition"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lp_is_thread_invariant_through_the_coordinator() {
+    // the serving layer hands every request the pool's thread count, so
+    // the invariance must hold at the optimize_graph level too — this is
+    // what makes `threads` safely non-fingerprinted for Mode::Lp
+    let g = ggen::power_law(9000, 3, 77);
+    let run = |threads: usize| {
+        let opts =
+            OptOptions { k: 16, seed: 0x1AB5EED, threads, mode: Mode::Lp, ..Default::default() };
+        optimize_graph(&g, &opts)
+    };
+    let seq = run(1);
+    for t in [0, 2] {
+        let p = run(t);
+        assert_eq!(seq.partition.assign, p.partition.assign, "threads={t} changed the schedule");
+        assert_eq!(seq.quality, p.quality);
+    }
+}
+
+#[test]
+fn explicit_fm_mode_is_byte_identical_to_the_default_path() {
+    // `mode: Mode::Fm` is the historical default — spelling it out must
+    // not perturb a single byte of output on any validated family
+    let cases: Vec<(&str, Graph, usize)> = vec![
+        ("power_law/4", ggen::power_law(3000, 3, 11), 4),
+        ("power_law/16", ggen::power_law(3000, 3, 12), 16),
+        ("cfd_mesh/16", ggen::cfd_mesh(36, 36, 14), 16),
+        ("fem_banded/4", ggen::fem_banded(2500, 10, 0.8, 15), 4),
+    ];
+    for (name, g, k) in &cases {
+        let default_opts = EpOpts {
+            vp: VpOpts { seed: 0xFEED, ..Default::default() },
+            ..Default::default()
+        };
+        let fm_opts = EpOpts {
+            vp: VpOpts { seed: 0xFEED, mode: Mode::Fm, ..Default::default() },
+            ..Default::default()
+        };
+        let a = ep::partition_edges(g, *k, &default_opts);
+        let b = ep::partition_edges(g, *k, &fm_opts);
+        assert_eq!(a.assign, b.assign, "{name}: explicit Mode::Fm diverged from the default");
+    }
+}
+
+#[test]
+fn mode_splits_the_fingerprint_space_but_fm_keeps_legacy_keys() {
+    let g = ggen::cfd_mesh(12, 12, 3);
+    let base = OptOptions { k: 8, seed: 42, ..Default::default() };
+    let fm = OptOptions { mode: Mode::Fm, ..base.clone() };
+    let lp = OptOptions { mode: Mode::Lp, ..base.clone() };
+    // explicit Fm hashes identically to the pre-mode default: every
+    // persisted snapshot and warm export keeps its cache key
+    assert_eq!(fingerprint(&g, &base), fingerprint(&g, &fm));
+    // Lp is its own entry — the schedules differ, so the keys must
+    assert_ne!(fingerprint(&g, &base), fingerprint(&g, &lp));
+}
+
+#[test]
+fn lp_cut_quality_stays_in_the_same_league_as_fm() {
+    // the armed bench gate enforces lp_cut_ratio ≤ 1.15 on the k=64
+    // headline; this is the small always-on sanity version (loose: tiny
+    // graphs are noisy, the point is catching a broken refiner that
+    // ships garbage cuts, not re-litigating the bench)
+    let g = ggen::power_law(6000, 3, 99);
+    let k = 16;
+    let fm = EpOpts {
+        vp: VpOpts { seed: 0xFEED, ..Default::default() },
+        ..Default::default()
+    };
+    let cut_fm = quality::vertex_cut_cost(&g, &ep::partition_edges(&g, k, &fm));
+    let cut_lp = quality::vertex_cut_cost(&g, &ep::partition_edges(&g, k, &lp_opts(0xFEED, 0)));
+    eprintln!("lp sanity: fm={cut_fm} lp={cut_lp}");
+    assert!(
+        cut_lp as f64 <= cut_fm as f64 * 1.5 + 64.0,
+        "LP cut {cut_lp} is out of the FM league ({cut_fm})"
+    );
+}

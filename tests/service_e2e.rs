@@ -191,6 +191,56 @@ fn health_and_malformed_requests_do_not_disturb_serving() {
     handle.join().expect("server thread");
 }
 
+/// PR 10: `"mode":"lp"` end to end.  The same graph served under the
+/// data-parallel engines must land on its OWN cache entry (mode is
+/// fingerprint-significant), miss once then hit, and the hit must be
+/// bit-identical to a direct `Mode::Lp` pipeline run — which also
+/// pins LP thread-count invariance across the server's worker pool.
+#[test]
+fn lp_mode_is_a_distinct_entry_and_hits_bit_identically() {
+    let (_server, addr, handle) =
+        start_server(ServeOpts { port: 0, threads: 2, ..Default::default() });
+    let mut client = connect(addr);
+
+    let spec = GraphSpec::Gen { name: "cfd_mesh".into(), args: vec![16, 16, 2] };
+    let fm = OptOptions { k: 8, seed: 11, ..Default::default() };
+    let lp = OptOptions { mode: epgraph::partition::Mode::Lp, ..fm.clone() };
+
+    let fm_resp = roundtrip(&mut client, &proto::optimize_request(&spec, &fm).dump());
+    assert_eq!(fm_resp.get("cached").and_then(Json::as_str), Some("miss"));
+    let lp_miss = roundtrip(&mut client, &proto::optimize_request(&spec, &lp).dump());
+    assert_eq!(
+        lp_miss.get("cached").and_then(Json::as_str),
+        Some("miss"),
+        "lp must not collide with the fm entry"
+    );
+    let fp = |j: &Json| j.get("fingerprint").and_then(Json::as_str).unwrap().to_string();
+    assert_ne!(fp(&fm_resp), fp(&lp_miss), "mode must be fingerprint-significant");
+
+    let lp_hit = roundtrip(&mut client, &proto::optimize_request(&spec, &lp).dump());
+    assert_eq!(lp_hit.get("cached").and_then(Json::as_str), Some("hit"));
+    assert_eq!(fp(&lp_hit), fp(&lp_miss));
+    let direct = optimize_graph(&spec.resolve().unwrap(), &lp);
+    assert_bit_identical(&lp_hit, &direct);
+
+    let stats = roundtrip(&mut client, &proto::simple_request("stats").dump());
+    assert_eq!(get_u64(&stats, "served_miss"), 2, "fm + lp are separate misses");
+    assert_eq!(get_u64(&stats, "served_hit"), 1);
+    assert_eq!(
+        get_u64(&stats, "served_hit")
+            + get_u64(&stats, "served_miss")
+            + get_u64(&stats, "served_joined")
+            + get_u64(&stats, "served_degraded")
+            + get_u64(&stats, "rejected")
+            + get_u64(&stats, "errors"),
+        get_u64(&stats, "requests"),
+        "stats identity broke: {stats:?}"
+    );
+
+    roundtrip(&mut client, &proto::simple_request("shutdown").dump());
+    handle.join().expect("server thread");
+}
+
 /// The restart warm-start contract (ISSUE 5 acceptance): after a clean
 /// shutdown and a restart on the same `--snapshot` path, a repeat of the
 /// workload mix reports ZERO misses for previously-served fingerprints
